@@ -1,0 +1,37 @@
+//! Shared helpers for the bench harnesses (criterion is not in the
+//! offline vendor set; every bench is a `harness = false` binary that
+//! regenerates one of the paper's tables/figures and prints the rows).
+
+use pissa::runtime::{Manifest, Runtime};
+use std::path::PathBuf;
+
+pub fn art_dir() -> PathBuf {
+    std::env::var("PISSA_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+pub fn results_dir() -> PathBuf {
+    let d = PathBuf::from("results");
+    std::fs::create_dir_all(&d).ok();
+    d
+}
+
+pub fn load() -> anyhow::Result<(Runtime, Manifest)> {
+    let dir = art_dir();
+    let manifest = Manifest::load(&dir)?;
+    let rt = Runtime::cpu(&dir)?;
+    Ok((rt, manifest))
+}
+
+/// Quick-mode guard: `cargo bench` runs everything at reduced scale by
+/// default; set PISSA_BENCH_FULL=1 for the full protocol.
+pub fn full_mode() -> bool {
+    std::env::var("PISSA_BENCH_FULL").map(|v| v == "1").unwrap_or(false)
+}
+
+pub fn banner(id: &str, title: &str) {
+    println!("\n================================================================");
+    println!("  {id} — {title}");
+    println!("================================================================");
+}

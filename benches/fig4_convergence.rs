@@ -1,0 +1,83 @@
+//! FIGURES 4, 11, 12 — loss / grad-norm / eval-accuracy over training
+//! steps for LoRA vs PiSSA vs full-FT ("full data, more epochs").
+//! Paper: LLaMA-2-7B (+Mistral, Gemma in App. G) on MetaMathQA-395K,
+//! 3 epochs. Here: pre-trained bases on the synthetic corpus, multiple
+//! epochs over the analog dataset, eval every K steps.
+//!
+//! Expected shape: PiSSA's loss drops fastest in the first ~100 steps;
+//! its grad norm stays above LoRA's; accuracy dominates LoRA throughout.
+
+mod common;
+
+use pissa::adapter::init::Strategy;
+use pissa::coordinator::{self, RunConfig, TaskFamily};
+use pissa::metrics::write_labeled_csv;
+
+fn main() -> anyhow::Result<()> {
+    common::banner("Figures 4/11/12", "loss, grad norm & accuracy vs steps");
+    let (rt, manifest) = common::load()?;
+    let full = common::full_mode();
+    let config = if full { "small" } else { "tiny" };
+    let steps = if full { 400 } else { 150 };
+    let eval_every = steps / 5;
+    // model seeds stand in for LLaMA/Mistral/Gemma (Figs 4, 11, 12)
+    let models: &[(&str, u64)] =
+        if full { &[("llama-an", 42), ("mistral-an", 1337), ("gemma-an", 2024)] } else { &[("llama-an", 42)] };
+
+    for (mname, seed) in models {
+        println!("\n--- base model {mname} ---");
+        let (base, _) =
+            coordinator::pretrain(&rt, &manifest, config, if full { 300 } else { 150 }, 2e-3, *seed)?;
+        let mut rows = Vec::new();
+        for strategy in [Strategy::Lora, Strategy::Pissa, Strategy::FullFt] {
+            let run = RunConfig {
+                config: config.to_string(),
+                strategy,
+                rank: 4,
+                iters: 5,
+                steps,
+                peak_lr: if strategy == Strategy::FullFt { 5e-4 } else { 2e-3 },
+                corpus_size: 1024,
+                seed: *seed,
+                task: TaskFamily::Math,
+            };
+            let r = coordinator::finetune(&rt, &manifest, &base, &run)?;
+            // log curves
+            for m in r.history.iter().step_by((steps / 40).max(1)) {
+                rows.push((
+                    format!("{}/{}", strategy.name(), m.step),
+                    vec![m.loss as f64, m.grad_norm as f64],
+                ));
+            }
+            // periodic eval (re-using final state at checkpoints would need
+            // snapshots; we report final accuracy + loss curve, and
+            // checkpoint-accuracies in full mode via multiple runs)
+            let acc = coordinator::evaluate(&rt, &manifest, &run, &r.final_state, 32, 40)?;
+            let early = &r.history[steps / 10];
+            println!(
+                "{:8}: loss@10% {:.4}, final loss {:.4}, mean gnorm {:.4}, acc {:>6.2}%",
+                strategy.name(),
+                early.loss,
+                r.final_loss(10),
+                r.history.iter().map(|m| m.grad_norm as f64).sum::<f64>() / steps as f64,
+                acc
+            );
+            if eval_every > 0 && full {
+                // accuracy-vs-steps series: run shorter budgets
+                for frac in [1, 2, 3, 4] {
+                    let sub = RunConfig { steps: steps * frac / 5, ..run.clone() };
+                    let rr = coordinator::finetune(&rt, &manifest, &base, &sub)?;
+                    let a = coordinator::evaluate(&rt, &manifest, &sub, &rr.final_state, 32, 40)?;
+                    rows.push((format!("{}/acc@{}", strategy.name(), sub.steps), vec![a, 0.0]));
+                }
+            }
+        }
+        write_labeled_csv(
+            &common::results_dir().join(format!("fig4_curves_{mname}.csv")),
+            &["strategy_step", "loss", "grad_norm"],
+            &rows,
+        )?;
+        println!("wrote results/fig4_curves_{mname}.csv");
+    }
+    Ok(())
+}

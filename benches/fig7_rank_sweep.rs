@@ -1,0 +1,124 @@
+//! FIGURE 7 (+ Figs 14-16 / App. H) — the rank sweep: quantization-error
+//! reduction ratio (7a), final training loss (7b), and eval accuracy
+//! (7c/7d) for (Q)LoRA / (Q)PiSSA / LoftQ across ranks; full-FT as the
+//! horizontal reference line. Paper: ranks 1..128 on 4096-dim models;
+//! here: ranks 1..32 on the `small` config (same r/min(m,n) ratio grid).
+//!
+//! Expected shape: PiSSA < LoRA in loss at EVERY rank (gap largest at
+//! small rank); QPiSSA > LoftQ in error reduction at every rank; PiSSA's
+//! accuracy approaches/crosses full-FT as rank grows.
+
+mod common;
+
+use pissa::adapter::init::{loftq, qpissa, Strategy};
+use pissa::coordinator::{self, RunConfig, TaskFamily};
+use pissa::linalg::{matmul, nuclear_norm};
+use pissa::metrics::write_labeled_csv;
+use pissa::quant::qlora_error;
+use pissa::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    common::banner("Figure 7 (+14-16)", "rank sweep: error ratio, loss, accuracy");
+    let (rt, manifest) = common::load()?;
+    let full = common::full_mode();
+    let config = if full { "small" } else { "tiny" };
+    let cfg = manifest.config(config)?.clone();
+    let ranks: Vec<usize> = cfg.ranks.clone();
+    let steps = if full { 200 } else { 80 };
+
+    let (base, _) =
+        coordinator::pretrain(&rt, &manifest, config, if full { 300 } else { 150 }, 2e-3, 42)?;
+
+    // --- 7a: quantization-error reduction ratio vs rank (q_proj) --------
+    println!("\n(7a) error-reduction ratio vs rank (q_proj, T=1):");
+    let w = base.linears["base_q"].layer(0);
+    let baseline = qlora_error(&w);
+    let mut rng = Rng::new(5);
+    let mut rows_a = Vec::new();
+    for &r in &ranks {
+        let lq = loftq(&w, r, 1, &mut rng);
+        let e_lq = nuclear_norm(&w.sub(&lq.base.add(&matmul(&lq.a, &lq.b))));
+        let qp = qpissa(&w, r, 1, &mut rng);
+        let e_qp = nuclear_norm(&w.sub(&qp.base.add(&matmul(&qp.a, &qp.b))));
+        let (rl, rq) = ((1.0 - e_lq / baseline) * 100.0, (1.0 - e_qp / baseline) * 100.0);
+        println!("  r={r:<3}: qlora 0.0  loftq {rl:>6.1}  qpissa {rq:>6.1}  {}", if rq >= rl { "✓" } else { "✗" });
+        rows_a.push((format!("r{r}"), vec![0.0, rl, rq]));
+    }
+    write_labeled_csv(
+        &common::results_dir().join("fig7a_error_vs_rank.csv"),
+        &["rank", "qlora", "loftq", "qpissa"],
+        &rows_a,
+    )?;
+
+    // --- 7b/7c: final loss + accuracy vs rank ----------------------------
+    println!("\n(7b/7c) final loss and accuracy vs rank:");
+    // full-FT reference
+    let full_run = RunConfig {
+        config: config.to_string(),
+        strategy: Strategy::FullFt,
+        rank: 0,
+        iters: 1,
+        steps,
+        peak_lr: 5e-4,
+        corpus_size: 1024,
+        seed: 42,
+        task: TaskFamily::Math,
+    };
+    let full_r = coordinator::finetune(&rt, &manifest, &base, &full_run)?;
+    let full_acc = coordinator::evaluate(&rt, &manifest, &full_run, &full_r.final_state, 32, 40)?;
+    println!("  full-FT reference: loss {:.4}, acc {full_acc:.2}%", full_r.final_loss(8));
+
+    let mut rows_b = Vec::new();
+    let mut pissa_wins = 0;
+    for &r in &ranks {
+        let mut cells = Vec::new();
+        for strategy in [Strategy::Lora, Strategy::Pissa, Strategy::QPissa, Strategy::LoftQ] {
+            let run = RunConfig {
+                config: config.to_string(),
+                strategy,
+                rank: r,
+                iters: 1,
+                steps,
+                peak_lr: 2e-3,
+                corpus_size: 1024,
+                seed: 42,
+                task: TaskFamily::Math,
+            };
+            let res = coordinator::finetune(&rt, &manifest, &base, &run)?;
+            let acc = coordinator::evaluate(&rt, &manifest, &run, &res.final_state, 32, 40)?;
+            cells.push(res.final_loss(8) as f64);
+            cells.push(acc);
+        }
+        let (lora_loss, pissa_loss) = (cells[0], cells[2]);
+        if pissa_loss <= lora_loss {
+            pissa_wins += 1;
+        }
+        println!(
+            "  r={r:<3}: lora loss {lora_loss:.4}/acc {:5.1}%  pissa {pissa_loss:.4}/{:5.1}%  qpissa {:.4}/{:5.1}%  loftq {:.4}/{:5.1}%",
+            cells[1], cells[3], cells[4], cells[5], cells[6], cells[7]
+        );
+        rows_b.push((format!("r{r}"), cells));
+    }
+    println!(
+        "\nshape check: PiSSA loss ≤ LoRA loss at {pissa_wins}/{} ranks (paper: all)",
+        ranks.len()
+    );
+    rows_b.push(("full_ft".to_string(), vec![full_r.final_loss(8) as f64, full_acc, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0]));
+    write_labeled_csv(
+        &common::results_dir().join("fig7bc_rank_sweep.csv"),
+        &[
+            "rank",
+            "lora_loss",
+            "lora_acc",
+            "pissa_loss",
+            "pissa_acc",
+            "qpissa_loss",
+            "qpissa_acc",
+            "loftq_loss",
+            "loftq_acc",
+        ],
+        &rows_b,
+    )?;
+    println!("wrote results/fig7a_error_vs_rank.csv, results/fig7bc_rank_sweep.csv");
+    Ok(())
+}

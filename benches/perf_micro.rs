@@ -1,0 +1,133 @@
+//! §Perf — microbenchmarks of every hot path, feeding EXPERIMENTS.md §Perf:
+//!   L3: GEMM GFLOP/s vs naive + vs practical peak, exact vs fast SVD,
+//!       NF4 quant/dequant throughput, PiSSA init end-to-end
+//!   runtime: train-step latency breakdown (marshal vs execute) for each
+//!       artifact, logits-fn latency (jnp vs pallas variant)
+
+mod common;
+
+use pissa::adapter::init::Strategy;
+use pissa::coordinator::{LrSchedule, Trainer};
+use pissa::linalg::{matmul, rsvd, svd, Mat};
+use pissa::model::{apply_strategy, BaseModel};
+use pissa::quant::nf4::{dequantize, quantize};
+use pissa::runtime::Manifest;
+use pissa::util::rng::Rng;
+use pissa::util::timer::{bench, Timer};
+
+fn main() -> anyhow::Result<()> {
+    common::banner("§Perf", "hot-path microbenchmarks");
+    let full = common::full_mode();
+    let mut rng = Rng::new(1);
+
+    // ---- GEMM ---------------------------------------------------------
+    println!("\n[gemm] C=A·B f32, {} threads:", pissa::util::par::num_threads());
+    for &n in if full { &[256usize, 512, 1024][..] } else { &[256usize, 512][..] } {
+        let a = Mat::randn(n, n, 0.0, 1.0, &mut rng);
+        let b = Mat::randn(n, n, 0.0, 1.0, &mut rng);
+        let stats = bench(2, if full { 10 } else { 5 }, || {
+            std::hint::black_box(matmul(&a, &b));
+        });
+        let gflops = 2.0 * (n as f64).powi(3) / stats.min / 1e9;
+        println!("  {n:4}³: {} -> {gflops:.2} GFLOP/s (best)", stats.human());
+    }
+
+    // ---- SVD ------------------------------------------------------------
+    println!("\n[svd] exact Jacobi vs randomized (rank 16, niter 4):");
+    for &(m, n) in &[(128usize, 128usize), (256, 128)] {
+        let a = Mat::randn(m, n, 0.0, 1.0, &mut rng);
+        let t_exact = {
+            let t = Timer::start();
+            std::hint::black_box(svd(&a));
+            t.ms()
+        };
+        let t_fast = {
+            let t = Timer::start();
+            std::hint::black_box(rsvd(&a, 16, 4, &mut rng));
+            t.ms()
+        };
+        println!("  {m}x{n}: exact {t_exact:.1} ms, fast {t_fast:.1} ms ({:.1}x speedup)", t_exact / t_fast);
+    }
+
+    // ---- NF4 -------------------------------------------------------------
+    println!("\n[nf4] quantize/dequantize throughput:");
+    let m = Mat::randn(1024, 1024, 0.0, 0.05, &mut rng);
+    let bytes = m.data.len() * 4;
+    let sq = bench(2, 8, || {
+        std::hint::black_box(quantize(&m));
+    });
+    let q = quantize(&m);
+    let sd = bench(2, 8, || {
+        std::hint::black_box(dequantize(&q));
+    });
+    println!(
+        "  quant:   {}  ({:.2} GB/s)",
+        sq.human(),
+        bytes as f64 / sq.min / 1e9
+    );
+    println!(
+        "  dequant: {}  ({:.2} GB/s)",
+        sd.human(),
+        bytes as f64 / sd.min / 1e9
+    );
+
+    // ---- PiSSA init end-to-end -------------------------------------------
+    println!("\n[init] full-model PiSSA init (fast SVD, niter 4):");
+    let (rt, manifest) = common::load()?;
+    for config in ["tiny", "small"] {
+        let cfg = manifest.config(config)?.clone();
+        let base = BaseModel::random(&cfg, &mut rng);
+        let t = Timer::start();
+        let _ = apply_strategy(&base, Strategy::Pissa, 8.min(cfg.ranks[cfg.ranks.len() - 1]), 1, &mut rng)?;
+        println!("  {config:6}: {:.0} ms (paper target: seconds — ✓)", t.ms());
+    }
+
+    // ---- train-step latency breakdown --------------------------------------
+    println!("\n[step] train-step latency (marshal+unmarshal = rust overhead):");
+    for config in ["tiny", "small"] {
+        let cfg = manifest.config(config)?.clone();
+        let mut rng2 = Rng::new(3);
+        let base = BaseModel::random(&cfg, &mut rng2);
+        let state = apply_strategy(&base, Strategy::Pissa, 4.min(cfg.ranks[cfg.ranks.len() - 1]), 1, &mut rng2)?;
+        let rank = 4.min(cfg.ranks[cfg.ranks.len() - 1]);
+        let art = Manifest::train_name(config, rank, false);
+        let mut trainer =
+            Trainer::new(&rt, &manifest, &art, state, LrSchedule::alpaca(1e-3, 100))?;
+        let corpus = pissa::data::corpus::gen_corpus(128, 4);
+        let mut batcher = pissa::data::Batcher::new(corpus, cfg.batch, cfg.seq_len, 5);
+        let warm = batcher.next_batch();
+        trainer.step(&warm)?; // compile+warm
+        let n = if full { 30 } else { 10 };
+        let t0_total = trainer.total_s;
+        let t0_over = trainer.overhead_s;
+        for _ in 0..n {
+            trainer.step(&batcher.next_batch())?;
+        }
+        let step_ms = (trainer.total_s - t0_total) / n as f64 * 1e3;
+        let over_ms = (trainer.overhead_s - t0_over) / n as f64 * 1e3;
+        println!(
+            "  {config:6}: {step_ms:.2} ms/step, rust overhead {over_ms:.3} ms ({:.1}%)",
+            100.0 * over_ms / step_ms
+        );
+    }
+
+    // ---- logits: jnp vs pallas artifact -------------------------------------
+    if manifest.artifacts.contains_key("logits_tiny_r4_pallas") {
+        println!("\n[logits] jnp-path vs pallas-kernel-path artifact (tiny, r4):");
+        let cfg = manifest.config("tiny")?.clone();
+        let mut rng3 = Rng::new(6);
+        let base = BaseModel::random(&cfg, &mut rng3);
+        let state = apply_strategy(&base, Strategy::Pissa, 4, 1, &mut rng3)?;
+        let tokens: Vec<i32> = (0..cfg.eval_batch * cfg.seq_len).map(|i| (i % 250) as i32 + 8).collect();
+        for name in ["logits_tiny_r4", "logits_tiny_r4_pallas"] {
+            let g = pissa::eval::Generator::new(&rt, &manifest, name, &state)?;
+            g.logits(&tokens)?; // warm
+            let s = bench(1, 8, || {
+                std::hint::black_box(g.logits(&tokens).unwrap());
+            });
+            println!("  {name:24}: {}", s.human());
+        }
+    }
+    println!("\n(record these in EXPERIMENTS.md §Perf)");
+    Ok(())
+}

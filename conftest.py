@@ -1,0 +1,7 @@
+"""Make `python/` importable when pytest runs from the repo root
+(`pytest python/tests/` → `from compile import …`)."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "python"))

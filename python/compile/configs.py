@@ -1,0 +1,94 @@
+"""Model/artifact configurations shared by the AOT pipeline and tests.
+
+The rust side re-reads these numbers from artifacts/manifest.json — this
+file is the single source of truth for shapes. Keep token budget small:
+every (config, rank) pair lowers its own HLO artifact, and `make
+artifacts` must stay in the minutes range on CPU.
+"""
+
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab: int = 320  # 256 bytes + specials, rounded up for alignment
+    d_model: int = 64
+    n_layers: int = 2
+    n_heads: int = 2
+    d_ff: int = 128
+    seq_len: int = 64
+    batch: int = 8
+    # Which ranks get adapter train artifacts.
+    ranks: tuple = (4,)
+    # Lower the logits artifact with this batch (greedy decode batch).
+    eval_batch: int = 4
+
+    @property
+    def head_dim(self):
+        return self.d_model // self.n_heads
+
+    def param_count(self, rank=None):
+        """Trainable parameter count: dense linears if rank is None,
+        adapters of the given rank otherwise."""
+        d, f, l = self.d_model, self.d_ff, self.n_layers
+        if rank is None:
+            per_layer = 4 * d * d + 2 * d * f + f * d
+            return l * per_layer
+        per_layer = 4 * (d + d) * rank + 2 * (d + f) * rank + (f + d) * rank
+        return l * per_layer
+
+
+@dataclass(frozen=True)
+class EncoderConfig:
+    name: str
+    vocab: int = 320
+    d_model: int = 64
+    n_layers: int = 2
+    n_heads: int = 2
+    d_ff: int = 128
+    seq_len: int = 32
+    batch: int = 16
+    n_classes: int = 3  # >= max over NLU tasks; regression uses index 0
+    ranks: tuple = (8,)
+
+    @property
+    def head_dim(self):
+        return self.d_model // self.n_heads
+
+
+# The artifact matrix. `tiny` drives tests and quick examples, `small`
+# drives the experiment sweeps, `e2e` is the end-to-end driver's model
+# (~7M trainable dense params — the largest that trains a few hundred
+# steps in CPU-minutes).
+TINY = ModelConfig(name="tiny", ranks=(2, 4))
+SMALL = ModelConfig(
+    name="small",
+    d_model=128,
+    n_layers=4,
+    n_heads=4,
+    d_ff=256,
+    seq_len=96,
+    batch=8,
+    ranks=(1, 2, 4, 8, 16, 32),
+)
+E2E = ModelConfig(
+    name="e2e",
+    d_model=256,
+    n_layers=6,
+    n_heads=8,
+    d_ff=512,
+    seq_len=128,
+    batch=8,
+    ranks=(8,),
+)
+
+ENC_TINY = EncoderConfig(name="enc_tiny", ranks=(4,))
+ENC_SMALL = EncoderConfig(
+    name="enc_small", d_model=96, n_layers=3, n_heads=3, d_ff=192, seq_len=48, batch=16, ranks=(8,)
+)
+
+DECODERS = [TINY, SMALL, E2E]
+ENCODERS = [ENC_TINY, ENC_SMALL]
+
+BY_NAME = {c.name: c for c in DECODERS + ENCODERS}

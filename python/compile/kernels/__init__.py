@@ -1,0 +1,3 @@
+"""L1 Pallas kernels (interpret=True) + pure-jnp reference oracles."""
+
+from . import nf4, pissa_linear, ref, rsvd  # noqa: F401

@@ -1,0 +1,110 @@
+"""L1 Pallas kernels: blockwise-absmax NF4 quantize / dequantize.
+
+NF4 on TPU is a 16-entry VMEM table lookup plus a vector scale — there is
+no tensor-core analog to port from the CUDA implementation; the natural
+mapping is grid-tiled elementwise work where each program instance owns a
+contiguous run of quantization blocks (TILE values = TILE/64 blocks), so
+the absmax reduction never crosses a tile boundary.
+
+Layout notes:
+  * codes are produced as int32 (one per value). Bit-packing two codes per
+    byte is a storage-side concern handled by the rust `quant::nf4` module;
+    doing it inside the kernel would only save HBM bandwidth on the store
+    and cannot be expressed portably in interpret mode.
+  * the quantize kernel emits codes AND scales; dequantize consumes both.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import NF4_BLOCK, NF4_LEVELS
+
+# Values per program instance. 4096 values = 64 NF4 blocks per tile.
+TILE = 4096
+
+
+def _quant_kernel(x_ref, levels_ref, codes_ref, scales_ref):
+    x = x_ref[...]  # [TILE]
+    levels = levels_ref[...]  # [16] — the VMEM-resident LUT
+    blocks = x.reshape(TILE // NF4_BLOCK, NF4_BLOCK)
+    absmax = jnp.max(jnp.abs(blocks), axis=1)  # [TILE/64]
+    inv = jnp.where(absmax > 0, 1.0 / absmax, 0.0)
+    normed = blocks * inv[:, None]
+    # Nearest codebook entry: 16-wide broadcast compare.
+    dist = jnp.abs(normed[:, :, None] - levels[None, None, :])
+    codes_ref[...] = jnp.argmin(dist, axis=-1).astype(jnp.int32).reshape(TILE)
+    scales_ref[...] = absmax
+
+
+def _dequant_kernel(codes_ref, scales_ref, levels_ref, out_ref):
+    codes = codes_ref[...]
+    vals = levels_ref[...][codes].reshape(TILE // NF4_BLOCK, NF4_BLOCK)
+    out_ref[...] = (vals * scales_ref[...][:, None]).reshape(TILE)
+
+
+@jax.jit
+def nf4_quantize(flat):
+    """Quantize a flat f32 vector (len divisible by TILE) to NF4.
+
+    Returns (codes int32 [n], scales f32 [n/NF4_BLOCK]).
+    """
+    (n,) = flat.shape
+    assert n % TILE == 0, f"pad to a multiple of {TILE}"
+    grid = (n // TILE,)
+    return pl.pallas_call(
+        _quant_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE,), lambda i: (i,)),
+            pl.BlockSpec((16,), lambda i: (0,)),  # LUT broadcast
+        ],
+        out_specs=[
+            pl.BlockSpec((TILE,), lambda i: (i,)),
+            pl.BlockSpec((TILE // NF4_BLOCK,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((n // NF4_BLOCK,), jnp.float32),
+        ],
+        interpret=True,
+    )(flat, NF4_LEVELS)
+
+
+@jax.jit
+def nf4_dequantize(codes, scales):
+    """Inverse of nf4_quantize."""
+    (n,) = codes.shape
+    assert n % TILE == 0
+    grid = (n // TILE,)
+    return pl.pallas_call(
+        _dequant_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE,), lambda i: (i,)),
+            pl.BlockSpec((TILE // NF4_BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((16,), lambda i: (0,)),  # LUT broadcast
+        ],
+        out_specs=pl.BlockSpec((TILE,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(codes, scales, NF4_LEVELS)
+
+
+@functools.partial(jax.jit)
+def nf4_roundtrip(flat):
+    """deq(quant(x)) — the nf4(·) operator of the paper's Eq. 6/8."""
+    codes, scales = nf4_quantize(flat)
+    return nf4_dequantize(codes, scales)
+
+
+def pad_to_tile(flat):
+    """Zero-pad a flat array to the kernel's TILE multiple; returns
+    (padded, original_len)."""
+    n = flat.shape[0]
+    pad = (-n) % TILE
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    return flat, n

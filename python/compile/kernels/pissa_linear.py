@@ -1,0 +1,84 @@
+"""L1 Pallas kernel: fused adapter-form linear  y = x·W_base + (x·A)·B.
+
+This is the paper's compute hot-spot: every linear layer of a
+PiSSA/LoRA-adapted model evaluates Eq. 5. On GPU the reference
+implementations launch two thin GEMMs (x·A then ·B) on top of the dense
+x·W; on TPU the right shape is ONE kernel per output tile that keeps the
+`x` tile resident in VMEM and runs all three contractions back-to-back on
+the MXU, never materializing x·A in HBM.
+
+Tiling (see DESIGN.md §Hardware-Adaptation):
+  grid = (M/bm, N/bn); each program instance loads
+    x_tile  [bm, K]   (VMEM)
+    w_tile  [K, bn]   (VMEM)
+    a       [K, r]    (VMEM, broadcast across the n-grid)
+    b_tile  [r, bn]   (VMEM)
+  and computes  o = x_tile@w_tile + (x_tile@a)@b_tile  entirely in VMEM.
+  With bm = bn = 128 and r ≤ 128 this maps onto 128×128 MXU passes.
+  VMEM bytes = 4·(bm·K + K·bn + K·r + r·bn + bm·bn); for K = 4096,
+  bm = bn = r = 128 that is ≈ 4.5 MiB — comfortably under the 16 MiB/core
+  budget, so K does not need an inner grid axis until K > ~12k.
+
+interpret=True is mandatory here: the CPU PJRT client cannot execute
+Mosaic custom-calls, so the kernel body is traced to plain HLO (the same
+numerics, minus the explicit memory placement).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, w_ref, a_ref, b_ref, o_ref):
+    x = x_ref[...]
+    # Dense path: [bm, K] @ [K, bn] on the MXU.
+    dense = jnp.dot(x, w_ref[...], preferred_element_type=jnp.float32)
+    # Low-rank path: [bm, K] @ [K, r] @ [r, bn]; xa stays in registers/VMEM.
+    xa = jnp.dot(x, a_ref[...], preferred_element_type=jnp.float32)
+    o_ref[...] = dense + jnp.dot(xa, b_ref[...], preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n"))
+def pissa_linear(x, w_base, a, b, block_m=128, block_n=128):
+    """Fused y = x @ w_base + (x @ a) @ b.
+
+    x: [M, K], w_base: [K, N], a: [K, r], b: [r, N] -> y: [M, N].
+    M must divide by block_m and N by block_n (callers pad; the AOT model
+    always uses aligned shapes).
+    """
+    m, k = x.shape
+    k2, n = w_base.shape
+    assert k == k2, f"inner dim mismatch {k} vs {k2}"
+    r = a.shape[1]
+    assert a.shape == (k, r) and b.shape == (r, n)
+    bm = min(block_m, m)
+    bn = min(block_n, n)
+    assert m % bm == 0 and n % bn == 0, f"pad M={m}, N={n} to multiples of ({bm},{bn})"
+
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),  # x row-tile
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),  # w col-tile
+            pl.BlockSpec((k, r), lambda i, j: (0, 0)),  # a (broadcast)
+            pl.BlockSpec((r, bn), lambda i, j: (0, j)),  # b col-tile
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x, w_base, a, b)
+
+
+def vmem_bytes(k, r, block_m=128, block_n=128):
+    """Analytic VMEM footprint of one program instance (f32), used by the
+    §Perf roofline estimate in EXPERIMENTS.md."""
+    return 4 * (block_m * k + k * block_n + k * r + r * block_n + block_m * block_n)
+
+
+def mxu_flops(m, n, k, r):
+    """FLOPs per call: dense 2mnk + low-rank 2mkr + 2mrn."""
+    return 2 * m * n * k + 2 * m * k * r + 2 * m * r * n

@@ -1,0 +1,106 @@
+"""Pure-jnp oracles for the Pallas kernels (the CORE correctness signal).
+
+Every kernel in this package has a reference implementation here, written
+with plain jax.numpy so it is obviously correct. pytest compares kernel
+outputs against these under hypothesis-driven shape/rank sweeps, and the
+rust side compares its own NF4/SVD implementations against golden files
+generated from these functions.
+"""
+
+import jax.numpy as jnp
+
+# The 16 NF4 codebook levels (bitsandbytes' exact constants) — keep in
+# sync with rust/src/quant/nf4.rs::NF4_LEVELS.
+NF4_LEVELS = jnp.array(
+    [
+        -1.0,
+        -0.6961928009986877,
+        -0.5250730514526367,
+        -0.39491748809814453,
+        -0.28444138169288635,
+        -0.18477343022823334,
+        -0.09105003625154495,
+        0.0,
+        0.07958029955625534,
+        0.16093020141124725,
+        0.24611230194568634,
+        0.33791524171829224,
+        0.44070982933044434,
+        0.5626170039176941,
+        0.7229568362236023,
+        1.0,
+    ],
+    dtype=jnp.float32,
+)
+
+NF4_BLOCK = 64  # values per quantization block
+
+
+def pissa_linear_ref(x, w_base, a, b):
+    """Adapter-form linear: y = x @ w_base + (x @ a) @ b (paper Eq. 5)."""
+    return x @ w_base + (x @ a) @ b
+
+
+def nf4_quantize_ref(flat):
+    """Blockwise-absmax NF4 quantization of a flat f32 vector.
+
+    Returns (codes int32 [n], scales f32 [n / NF4_BLOCK]). Length must be a
+    multiple of NF4_BLOCK (callers pad).
+    """
+    n = flat.shape[0]
+    assert n % NF4_BLOCK == 0, "pad to a multiple of NF4_BLOCK"
+    blocks = flat.reshape(n // NF4_BLOCK, NF4_BLOCK)
+    scales = jnp.max(jnp.abs(blocks), axis=1)
+    inv = jnp.where(scales > 0, 1.0 / scales, 0.0)
+    normed = blocks * inv[:, None]
+    # nearest codebook level
+    dist = jnp.abs(normed[:, :, None] - NF4_LEVELS[None, None, :])
+    codes = jnp.argmin(dist, axis=-1).astype(jnp.int32)
+    return codes.reshape(n), scales
+
+
+def nf4_dequantize_ref(codes, scales):
+    """Inverse of nf4_quantize_ref."""
+    n = codes.shape[0]
+    vals = NF4_LEVELS[codes].reshape(n // NF4_BLOCK, NF4_BLOCK)
+    return (vals * scales[:, None]).reshape(n)
+
+
+def nf4_roundtrip_ref(flat):
+    codes, scales = nf4_quantize_ref(flat)
+    return nf4_dequantize_ref(codes, scales)
+
+
+def power_iter_ref(w, q):
+    """One Halko subspace half-step: Y = W @ Q (tall W, thin Q)."""
+    return w @ q
+
+
+def fast_svd_ref(w, rank, niter, key):
+    """Reference randomized SVD (Halko) used to validate rsvd kernels and
+    the rust implementation's singular values."""
+    import jax
+
+    m, n = w.shape
+    l = min(rank + 10, min(m, n))
+    omega = jax.random.normal(key, (n, l), dtype=w.dtype)
+    y = w @ omega
+    for _ in range(niter):
+        q, _ = jnp.linalg.qr(y)
+        z, _ = jnp.linalg.qr(w.T @ q)
+        y = w @ z
+    q, _ = jnp.linalg.qr(y)
+    b = q.T @ w
+    u_small, s, vt = jnp.linalg.svd(b, full_matrices=False)
+    u = q @ u_small
+    return u[:, :rank], s[:rank], vt[:rank, :]
+
+
+def pissa_init_ref(w, rank, niter, key):
+    """PiSSA init per Eq. 2-4: A = U sqrt(S), B = sqrt(S) Vt, res = W - AB."""
+    u, s, vt = fast_svd_ref(w, rank, niter, key)
+    root = jnp.sqrt(s)
+    a = u * root[None, :]
+    b = root[:, None] * vt
+    res = w - a @ b
+    return a, b, res

@@ -1,0 +1,373 @@
+"""L2: the JAX model — a llama-style decoder (and a bidirectional encoder
+for the NLU tasks) with every linear layer in adapter form
+
+    y = x @ W_base + (x @ A) @ B            (paper Eq. 5)
+
+where W_base is the frozen matrix (W for LoRA, W_res for PiSSA, their NF4
+round-trips for the Q-variants — the *rust* side decides what to put
+there) and (A, B) are the trainable adapter factors. The same code also
+lowers a full-fine-tuning variant where the dense linears are trainable
+and no adapter exists.
+
+Everything here is build-time only: `aot.py` lowers `train_step` /
+`logits_fn` / encoder variants to HLO text once, and the rust coordinator
+executes them through PJRT. The Pallas kernel path (`use_pallas=True`)
+lowers the adapter linears through kernels.pissa_linear so the interpret-
+mode kernel lands in the same HLO; the default path uses plain jnp ops
+(identical numerics, leaner HLO) — both are artifact variants and the
+tests assert they agree.
+
+Parameter layout (all stacked over layers, scan-friendly):
+  frozen:    embed [V,D], lm_head [D,V], attn_norm [L,D], mlp_norm [L,D],
+             final_norm [D], base_{q,k,v,o} [L,D,D],
+             base_{gate,up} [L,D,F], base_down [L,F,D]
+  adapters:  a_{q,k,v,o} [L,D,R],  b_{q,k,v,o} [L,R,D],
+             a_{gate,up} [L,D,R],  b_{gate,up} [L,R,F],
+             a_down      [L,F,R],  b_down      [L,R,D]
+  full-FT:   the seven base_* tensors move to the trainable set.
+
+AdamW (paper recipe: no weight decay, cosine schedule handled by rust,
+lr passed per step) with standard bias correction.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.pissa_linear import pissa_linear as _pallas_linear
+
+# Linear-layer types, in canonical order (paper's Q/K/V/O/Gate/Up/Down).
+LINEARS = ("q", "k", "v", "o", "gate", "up", "down")
+
+FROZEN_ALWAYS = ("embed", "lm_head", "attn_norm", "mlp_norm", "final_norm")
+
+
+def linear_shapes(cfg):
+    """(in_dim, out_dim) per linear type."""
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "q": (d, d),
+        "k": (d, d),
+        "v": (d, d),
+        "o": (d, d),
+        "gate": (d, f),
+        "up": (d, f),
+        "down": (f, d),
+    }
+
+
+def param_specs(cfg, rank, full_ft, encoder=False):
+    """Ordered (name, shape) lists: (frozen, trainable).
+
+    The order here IS the HLO argument order — rust/model/params.rs
+    mirrors it via manifest.json.
+    """
+    d, v, l = cfg.d_model, cfg.vocab, cfg.n_layers
+    shapes = linear_shapes(cfg)
+    head = ("lm_head", (d, v)) if not encoder else ("cls_base", (d, cfg.n_classes))
+    frozen = [
+        ("attn_norm", (l, d)),
+        ("mlp_norm", (l, d)),
+        ("final_norm", (d,)),
+    ]
+    trainable = []
+    if full_ft and not encoder:
+        # Full fine-tuning (and pre-training, which reuses this artifact)
+        # trains the embedding and output head too; norms stay frozen at 1
+        # to keep the trainable set purely matrix-shaped.
+        trainable.append(("embed", (v, d)))
+        trainable.append(head)
+    else:
+        frozen.insert(0, ("embed", (v, d)))
+        frozen.insert(1, head)
+    if encoder:
+        # Classification head is always trainable on NLU (paper App. I).
+        trainable.append(("cls_head", (d, cfg.n_classes)))
+    for name in LINEARS:
+        m, n = shapes[name]
+        if full_ft:
+            trainable.append((f"base_{name}", (l, m, n)))
+        else:
+            frozen.append((f"base_{name}", (l, m, n)))
+            trainable.append((f"a_{name}", (l, m, rank)))
+            trainable.append((f"b_{name}", (l, rank, n)))
+    return frozen, trainable
+
+
+# ---------------------------------------------------------------------------
+# building blocks
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, gain, eps=1e-6):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * gain
+
+
+def rope(x, positions):
+    """Rotary position embedding over the head dim (standard llama RoPE)."""
+    # x: [B, T, H, Hd]
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = 1.0 / (10000.0 ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    angles = positions[:, :, None].astype(jnp.float32) * freqs[None, None, :]  # [B,T,half]
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def adapter_linear(x, w, a, b, use_pallas=False):
+    """y = x·w + (x·a)·b over the last dim of x (rank path skipped when
+    a is None — full-FT)."""
+    if a is None:
+        return x @ w
+    if use_pallas:
+        lead = x.shape[:-1]
+        k = x.shape[-1]
+        x2 = x.reshape(-1, k)
+        m = x2.shape[0]
+        # Tile sizes must divide the operand dims: fall back to jnp when the
+        # flattened batch is not 8-aligned (never happens in AOT shapes).
+        if m % 8 == 0 and w.shape[1] % 8 == 0:
+            bm = min(128, m)
+            while m % bm:
+                bm //= 2
+            bn = min(128, w.shape[1])
+            while w.shape[1] % bn:
+                bn //= 2
+            y = _pallas_linear(x2, w, a, b, block_m=bm, block_n=bn)
+            return y.reshape(*lead, w.shape[1])
+    return x @ w + (x @ a) @ b
+
+
+def attention(x, layer, positions, causal, cfg, use_pallas):
+    """Multi-head attention with RoPE; adapter-form projections."""
+    b, t, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+
+    def proj(name):
+        return adapter_linear(
+            x, layer[f"base_{name}"], layer.get(f"a_{name}"), layer.get(f"b_{name}"), use_pallas
+        )
+
+    q = proj("q").reshape(b, t, h, hd)
+    k = proj("k").reshape(b, t, h, hd)
+    v = proj("v").reshape(b, t, h, hd)
+    q = rope(q, positions)
+    k = rope(k, positions)
+    scores = jnp.einsum("bthd,bshd->bhts", q, k) / jnp.sqrt(float(hd))
+    if causal:
+        mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+        scores = jnp.where(mask[None, None, :, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhts,bshd->bthd", probs, v).reshape(b, t, d)
+    return adapter_linear(
+        out, layer["base_o"], layer.get("a_o"), layer.get("b_o"), use_pallas
+    )
+
+
+def mlp(x, layer, use_pallas):
+    """SwiGLU MLP with adapter-form projections."""
+    gate = adapter_linear(x, layer["base_gate"], layer.get("a_gate"), layer.get("b_gate"), use_pallas)
+    up = adapter_linear(x, layer["base_up"], layer.get("a_up"), layer.get("b_up"), use_pallas)
+    act = jax.nn.silu(gate) * up
+    return adapter_linear(act, layer["base_down"], layer.get("a_down"), layer.get("b_down"), use_pallas)
+
+
+def forward(params, tokens, cfg, causal=True, use_pallas=False):
+    """Token ids [B, T] -> hidden states [B, T, D] after final norm."""
+    b, t = tokens.shape
+    x = params["embed"][tokens]
+    positions = jnp.broadcast_to(jnp.arange(t)[None, :], (b, t))
+
+    # Stack per-layer params for scan.
+    layer_keys = [k for k in params if k.startswith(("base_", "a_", "b_")) or k in ("attn_norm", "mlp_norm")]
+
+    def body(x, per_layer):
+        h = x + attention(
+            rms_norm(x, per_layer["attn_norm"][None, None, :]),
+            per_layer,
+            positions,
+            causal,
+            cfg,
+            use_pallas,
+        )
+        h2 = h + mlp(rms_norm(h, per_layer["mlp_norm"][None, None, :]), per_layer, use_pallas)
+        return h2, None
+
+    xs = {k: params[k] for k in layer_keys}
+    x, _ = jax.lax.scan(body, x, xs)
+    return rms_norm(x, params["final_norm"][None, None, :])
+
+
+def logits_fn(params, tokens, cfg, use_pallas=False):
+    """Causal LM logits [B, T, V]."""
+    h = forward(params, tokens, cfg, causal=True, use_pallas=use_pallas)
+    return h @ params["lm_head"]
+
+
+def lm_loss(params, tokens, loss_mask, cfg, use_pallas=False):
+    """Response-masked causal cross-entropy (Alpaca/QLoRA recipe: loss only
+    on response tokens — the mask is produced by the rust batcher)."""
+    logits = logits_fn(params, tokens, cfg, use_pallas=use_pallas)
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    mask = loss_mask[:, 1:]
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# encoder (NLU / GLUE-like)
+# ---------------------------------------------------------------------------
+
+
+def encoder_logits_fn(params, tokens, attn_mask, cfg, use_pallas=False):
+    """Bidirectional encoder -> masked-mean pool -> class logits [B, C].
+
+    cls_base is a frozen random head base; cls_head is the trainable
+    delta (head = cls_base + cls_head), so the trainable set stays uniform
+    across strategies.
+    """
+    h = forward(params, tokens, cfg, causal=False, use_pallas=use_pallas)
+    m = attn_mask[:, :, None]
+    pooled = jnp.sum(h * m, axis=1) / jnp.maximum(jnp.sum(m, axis=1), 1.0)
+    head = params["cls_base"] + params["cls_head"]
+    return pooled @ head
+
+
+def encoder_loss(params, tokens, attn_mask, labels, cfg, regression=False, use_pallas=False):
+    logits = encoder_logits_fn(params, tokens, attn_mask, cfg, use_pallas=use_pallas)
+    if regression:
+        pred = logits[:, 0]
+        return jnp.mean((pred - labels.astype(jnp.float32)) ** 2)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None].astype(jnp.int32), axis=-1))
+
+
+# ---------------------------------------------------------------------------
+# AdamW train step
+# ---------------------------------------------------------------------------
+
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+
+
+def adamw_update(grads, trainable, m, v, lr, step):
+    """One AdamW step (weight decay 0 per the paper's recipe)."""
+    b1t = ADAM_B1**step
+    b2t = ADAM_B2**step
+    new_t, new_m, new_v = {}, {}, {}
+    for key in trainable:
+        g = grads[key]
+        nm = ADAM_B1 * m[key] + (1 - ADAM_B1) * g
+        nv = ADAM_B2 * v[key] + (1 - ADAM_B2) * g * g
+        mhat = nm / (1 - b1t)
+        vhat = nv / (1 - b2t)
+        new_t[key] = trainable[key] - lr * mhat / (jnp.sqrt(vhat) + ADAM_EPS)
+        new_m[key] = nm
+        new_v[key] = nv
+    return new_t, new_m, new_v
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(g * g) for g in tree.values()))
+
+
+def make_train_step(cfg, rank, full_ft, encoder=False, regression=False, use_pallas=False):
+    """Return (fn, frozen_specs, trainable_specs) where fn has the flat
+    signature used for AOT lowering:
+
+      decoder: fn(tokens, loss_mask, lr, step, *frozen, *train, *m, *v)
+               -> (loss, grad_norm, *new_train, *new_m, *new_v)
+      encoder: fn(tokens, attn_mask, labels, lr, step, *frozen, *train, *m, *v)
+               -> (loss, grad_norm, *new_train, *new_m, *new_v)
+    """
+    frozen_specs, train_specs = param_specs(cfg, rank, full_ft, encoder=encoder)
+    fnames = [n for n, _ in frozen_specs]
+    tnames = [n for n, _ in train_specs]
+
+    def loss_of(trainable, frozen, batch):
+        params = {**frozen, **trainable}
+        if encoder:
+            tokens, attn_mask, labels = batch
+            return encoder_loss(params, tokens, attn_mask, labels, cfg, regression, use_pallas)
+        tokens, loss_mask = batch
+        return lm_loss(params, tokens, loss_mask, cfg, use_pallas)
+
+    def fn(*flat):
+        if encoder:
+            tokens, attn_mask, labels, lr, step = flat[:5]
+            batch = (tokens, attn_mask, labels)
+            rest = flat[5:]
+        else:
+            tokens, loss_mask, lr, step = flat[:4]
+            batch = (tokens, loss_mask)
+            rest = flat[4:]
+        nf, nt = len(fnames), len(tnames)
+        frozen = dict(zip(fnames, rest[:nf]))
+        trainable = dict(zip(tnames, rest[nf : nf + nt]))
+        m = dict(zip(tnames, rest[nf + nt : nf + 2 * nt]))
+        v = dict(zip(tnames, rest[nf + 2 * nt : nf + 3 * nt]))
+
+        loss, grads = jax.value_and_grad(loss_of)(trainable, frozen, batch)
+        gnorm = global_norm(grads)
+        new_t, new_m, new_v = adamw_update(grads, trainable, m, v, lr, step)
+        outs = [loss, gnorm]
+        outs += [new_t[k] for k in tnames]
+        outs += [new_m[k] for k in tnames]
+        outs += [new_v[k] for k in tnames]
+        return tuple(outs)
+
+    return fn, frozen_specs, train_specs
+
+
+def make_logits_fn(cfg, rank, full_ft, encoder=False, use_pallas=False):
+    """Flat-signature eval function for AOT lowering.
+
+    decoder: fn(tokens, *frozen, *train) -> (logits,)
+    encoder: fn(tokens, attn_mask, *frozen, *train) -> (logits,)
+    """
+    frozen_specs, train_specs = param_specs(cfg, rank, full_ft, encoder=encoder)
+    fnames = [n for n, _ in frozen_specs]
+    tnames = [n for n, _ in train_specs]
+
+    def fn(*flat):
+        if encoder:
+            tokens, attn_mask = flat[:2]
+            rest = flat[2:]
+        else:
+            tokens = flat[0]
+            rest = flat[1:]
+        params = dict(zip(fnames + tnames, rest))
+        if encoder:
+            return (encoder_logits_fn(params, tokens, attn_mask, cfg, use_pallas),)
+        return (logits_fn(params, tokens, cfg, use_pallas),)
+
+    return fn, frozen_specs, train_specs
+
+
+# ---------------------------------------------------------------------------
+# init (used by tests and by aot.py to produce example args)
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg, rank, full_ft, key, encoder=False):
+    """Random init of every tensor in spec order — used for tracing shapes
+    and for python-side tests. The *real* base weights come from rust
+    pre-training; adapters from rust PiSSA/LoRA init."""
+    frozen_specs, train_specs = param_specs(cfg, rank, full_ft, encoder=encoder)
+    out_f, out_t = {}, {}
+    for specs, out in ((frozen_specs, out_f), (train_specs, out_t)):
+        for name, shape in specs:
+            key, sub = jax.random.split(key)
+            if name.endswith("_norm"):
+                out[name] = jnp.ones(shape, jnp.float32)
+            elif name.startswith("b_") or name == "cls_head":
+                out[name] = jnp.zeros(shape, jnp.float32)
+            else:
+                out[name] = 0.02 * jax.random.normal(sub, shape, jnp.float32)
+    return out_f, out_t

@@ -1,0 +1,82 @@
+"""AOT pipeline consistency: the manifest must describe exactly the HLO
+we lower, because the rust runtime marshals literals by manifest order."""
+
+import json
+import os
+
+import jax.numpy as jnp
+import pytest
+
+from compile import aot
+from compile import configs as C
+from compile import model as M
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_lower_train_entry_consistent():
+    hlo, entry = aot.lower_train(C.TINY, 4, full_ft=False)
+    # arg count = 4 data + frozen + 3×trainable
+    expect = 4 + entry["n_frozen"] + 3 * entry["n_trainable"]
+    assert len(entry["args"]) == expect
+    assert entry["outputs"][0]["name"] == "loss"
+    assert entry["outputs"][1]["name"] == "grad_norm"
+    assert len(entry["outputs"]) == 2 + 3 * entry["n_trainable"]
+    assert "ENTRY" in hlo and "HloModule" in hlo  # real HLO text
+
+
+def test_lower_train_full_ft_has_no_adapter_args():
+    _, entry = aot.lower_train(C.TINY, 0, full_ft=True)
+    names = [a["name"] for a in entry["args"]]
+    assert not any(n.startswith(("a_", "b_")) for n in names)
+    assert any(n.startswith("base_") for n in names)
+
+
+def test_lower_logits_entry_consistent():
+    hlo, entry = aot.lower_logits(C.TINY, 4, full_ft=False)
+    assert entry["outputs"][0]["shape"] == [C.TINY.eval_batch, C.TINY.seq_len, C.TINY.vocab]
+    assert len(entry["args"]) == 1 + entry["n_frozen"] + entry["n_trainable"]
+
+
+def test_encoder_entries():
+    hlo, entry = aot.lower_train(C.ENC_TINY, 4, full_ft=False, encoder=True, regression=True)
+    assert entry["kind"] == "encoder_train"
+    assert entry["regression"] is True
+    names = [a["name"] for a in entry["args"]]
+    assert "labels" in names and "attn_mask" in names
+    assert "cls_head" in entry["trainable_names"]
+
+
+def test_manifest_arg_shapes_match_param_specs():
+    _, entry = aot.lower_train(C.TINY, 2, full_ft=False)
+    frozen, trainable = M.param_specs(C.TINY, 2, False)
+    by_name = {a["name"]: tuple(a["shape"]) for a in entry["args"]}
+    for n, s in frozen + trainable:
+        assert by_name[n] == tuple(s), f"{n}: manifest {by_name[n]} vs spec {s}"
+    for n, s in trainable:
+        assert by_name[f"m.{n}"] == tuple(s)
+        assert by_name[f"v.{n}"] == tuple(s)
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="artifacts not generated (run `make artifacts`)",
+)
+def test_emitted_manifest_files_exist():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        manifest = json.load(f)
+    assert manifest["artifacts"], "empty manifest"
+    for name, entry in manifest["artifacts"].items():
+        path = os.path.join(ART, entry["file"])
+        assert os.path.exists(path), f"missing artifact file {path}"
+        assert entry["args"], f"{name} has no args"
+
+
+def test_param_count_formula():
+    # sanity of the config helper used in reports
+    cfg = C.TINY
+    dense = cfg.param_count(None)
+    r4 = cfg.param_count(4)
+    assert dense > r4 > 0
+    d, f, l = cfg.d_model, cfg.d_ff, cfg.n_layers
+    assert dense == l * (4 * d * d + 2 * d * f + f * d)

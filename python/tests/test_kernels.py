@@ -1,0 +1,185 @@
+"""Kernel-vs-reference correctness: the CORE L1 signal.
+
+hypothesis sweeps shapes/ranks/scales; every kernel must match its pure-jnp
+oracle to float32 tolerance (NF4 codes must match EXACTLY — the quantizer
+is discrete).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import nf4 as knf4
+from compile.kernels import pissa_linear as kpl
+from compile.kernels import ref
+from compile.kernels import rsvd as krsvd
+
+settings.register_profile("ci", max_examples=20, deadline=None)
+settings.load_profile("ci")
+
+
+def rnd(key, shape, scale=1.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# pissa_linear
+# ---------------------------------------------------------------------------
+
+
+@given(
+    m=st.sampled_from([8, 64, 128, 256]),
+    k=st.sampled_from([16, 64, 96]),
+    n=st.sampled_from([8, 64, 128]),
+    r=st.sampled_from([1, 4, 16]),
+    seed=st.integers(0, 2**16),
+)
+def test_pissa_linear_matches_ref(m, k, n, r, seed):
+    x = rnd(seed, (m, k))
+    w = rnd(seed + 1, (k, n), 0.1)
+    a = rnd(seed + 2, (k, r), 0.1)
+    b = rnd(seed + 3, (r, n), 0.1)
+    got = kpl.pissa_linear(x, w, a, b)
+    want = ref.pissa_linear_ref(x, w, a, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_pissa_linear_zero_adapter_is_dense_matmul():
+    x = rnd(0, (64, 32))
+    w = rnd(1, (32, 64), 0.1)
+    a = jnp.zeros((32, 4))
+    b = jnp.zeros((4, 64))
+    got = kpl.pissa_linear(x, w, a, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(x @ w), rtol=1e-5, atol=1e-6)
+
+
+def test_pissa_linear_block_size_invariance():
+    x = rnd(2, (256, 64))
+    w = rnd(3, (64, 128), 0.1)
+    a = rnd(4, (64, 8), 0.1)
+    b = rnd(5, (8, 128), 0.1)
+    y1 = kpl.pissa_linear(x, w, a, b, block_m=128, block_n=128)
+    y2 = kpl.pissa_linear(x, w, a, b, block_m=64, block_n=32)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-5, atol=1e-6)
+
+
+def test_vmem_accounting_under_budget():
+    # The DESIGN.md §Hardware-Adaptation claim: K=4096, r=128 fits VMEM.
+    assert kpl.vmem_bytes(4096, 128) < 16 * 1024 * 1024
+
+
+# ---------------------------------------------------------------------------
+# nf4
+# ---------------------------------------------------------------------------
+
+
+@given(
+    ntiles=st.integers(1, 3),
+    scale=st.sampled_from([0.01, 0.05, 1.0, 10.0]),
+    seed=st.integers(0, 2**16),
+)
+def test_nf4_quantize_matches_ref(ntiles, scale, seed):
+    flat = rnd(seed, (ntiles * knf4.TILE,), scale)
+    codes, scales = knf4.nf4_quantize(flat)
+    codes_ref, scales_ref = ref.nf4_quantize_ref(flat)
+    assert bool(jnp.all(codes == codes_ref)), "codes must match exactly"
+    np.testing.assert_allclose(np.asarray(scales), np.asarray(scales_ref), rtol=0, atol=0)
+
+
+@given(seed=st.integers(0, 2**16))
+def test_nf4_roundtrip_matches_ref(seed):
+    flat = rnd(seed, (knf4.TILE,), 0.05)
+    got = knf4.nf4_roundtrip(flat)
+    want = ref.nf4_roundtrip_ref(flat)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=0, atol=0)
+
+
+def test_nf4_roundtrip_error_bound():
+    flat = rnd(7, (knf4.TILE,), 0.05)
+    rt = knf4.nf4_roundtrip(flat)
+    blocks = flat.reshape(-1, ref.NF4_BLOCK)
+    absmax = jnp.max(jnp.abs(blocks), axis=1)
+    # max gap between adjacent NF4 levels is ~0.1374 of absmax; half-gap bound
+    max_gap = float(jnp.max(jnp.diff(ref.NF4_LEVELS)))
+    err = jnp.abs(rt - flat).reshape(-1, ref.NF4_BLOCK)
+    bound = 0.5 * max_gap * absmax[:, None] + 1e-7
+    assert bool(jnp.all(err <= bound))
+
+
+def test_nf4_exact_on_codebook_points():
+    levels = np.asarray(ref.NF4_LEVELS)
+    flat = np.tile(levels, knf4.TILE // 16).astype(np.float32) * 0.25
+    rt = knf4.nf4_roundtrip(jnp.asarray(flat))
+    np.testing.assert_allclose(np.asarray(rt), flat, rtol=0, atol=1e-7)
+
+
+def test_nf4_zero_block():
+    flat = jnp.zeros((knf4.TILE,), jnp.float32)
+    rt = knf4.nf4_roundtrip(flat)
+    assert bool(jnp.all(rt == 0.0))
+
+
+def test_pad_to_tile():
+    flat = jnp.ones((100,), jnp.float32)
+    padded, n = knf4.pad_to_tile(flat)
+    assert n == 100 and padded.shape[0] % knf4.TILE == 0
+    assert bool(jnp.all(padded[100:] == 0))
+
+
+# ---------------------------------------------------------------------------
+# rsvd
+# ---------------------------------------------------------------------------
+
+
+@given(
+    m=st.sampled_from([128, 256]),
+    k=st.sampled_from([32, 64]),
+    l=st.sampled_from([4, 18]),
+    seed=st.integers(0, 2**16),
+)
+def test_tall_matmul_matches_ref(m, k, l, seed):
+    w = rnd(seed, (m, k))
+    q = rnd(seed + 1, (k, l))
+    got = krsvd.tall_matmul(w, q)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(w @ q), rtol=1e-4, atol=1e-4)
+
+
+@given(rank=st.sampled_from([2, 8]), niter=st.sampled_from([1, 4]), seed=st.integers(0, 1000))
+def test_fast_svd_matches_ref(rank, niter, seed):
+    w = rnd(seed, (128, 64), 0.1)
+    key = jax.random.PRNGKey(seed)
+    u1, s1, vt1 = krsvd.fast_svd(w, rank, niter, key)
+    u2, s2, vt2 = ref.fast_svd_ref(w, rank, niter, key)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-4, atol=1e-5)
+    # subspace agreement (up to sign): |u1ᵀu2| diag close to 1
+    d = jnp.abs(jnp.einsum("mi,mi->i", u1, u2))
+    np.testing.assert_allclose(np.asarray(d), np.ones(rank), atol=1e-3)
+
+
+def test_fast_svd_approaches_exact_svd():
+    w = rnd(11, (128, 64), 0.1)
+    s_exact = jnp.linalg.svd(w, compute_uv=False)
+    _, s_fast, _ = krsvd.fast_svd(w, 8, 8, jax.random.PRNGKey(0))
+    np.testing.assert_allclose(np.asarray(s_fast), np.asarray(s_exact[:8]), rtol=5e-3)
+
+
+def test_pissa_init_reconstructs_exactly():
+    # Eq. 5: A·B + W_res == W (the residual absorbs sketch error).
+    w = rnd(13, (128, 64), 0.1)
+    a, b, res = krsvd.pissa_init(w, 8, 2, jax.random.PRNGKey(1))
+    err = jnp.linalg.norm(a @ b + res - w) / jnp.linalg.norm(w)
+    assert float(err) < 1e-6
+
+
+def test_pissa_init_adapter_outweighs_residual():
+    # Principal components carry more Frobenius mass than the residual
+    # on a decaying-spectrum matrix.
+    key = jax.random.PRNGKey(2)
+    u, _ = jnp.linalg.qr(jax.random.normal(key, (96, 64)))
+    v, _ = jnp.linalg.qr(jax.random.normal(jax.random.PRNGKey(3), (64, 64)))
+    s = 1.0 / (1.0 + jnp.arange(64.0))
+    w = (u * s[None, :]) @ v.T
+    a, b, res = krsvd.pissa_init(w, 8, 4, jax.random.PRNGKey(4))
+    assert float(jnp.linalg.norm(a @ b)) > float(jnp.linalg.norm(res))

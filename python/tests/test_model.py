@@ -1,0 +1,228 @@
+"""L2 model invariants: shapes, adapter-freezing semantics, loss behavior,
+AdamW correctness, encoder path, pallas/jnp agreement."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import configs as C
+from compile import model as M
+
+CFG = C.TINY
+ENC = C.ENC_TINY
+
+
+def make_state(cfg, rank, full_ft, encoder=False, seed=0):
+    frozen, trainable = M.init_params(cfg, rank, full_ft, jax.random.PRNGKey(seed), encoder=encoder)
+    m = {k: jnp.zeros_like(v) for k, v in trainable.items()}
+    v = {k: jnp.zeros_like(t) for k, t in trainable.items()}
+    return frozen, trainable, m, v
+
+
+def flat_args(fn_specs, frozen, trainable, m, v, head):
+    _, fs, ts = fn_specs
+    return head + [frozen[n] for n, _ in fs] + [trainable[n] for n, _ in ts] + [m[n] for n, _ in ts] + [v[n] for n, _ in ts]
+
+
+def decoder_batch(cfg, seed=1):
+    tokens = jax.random.randint(jax.random.PRNGKey(seed), (cfg.batch, cfg.seq_len), 0, cfg.vocab)
+    mask = jnp.ones((cfg.batch, cfg.seq_len), jnp.float32)
+    return tokens, mask
+
+
+def test_param_specs_orders_are_stable():
+    f1, t1 = M.param_specs(CFG, 4, False)
+    f2, t2 = M.param_specs(CFG, 4, False)
+    assert f1 == f2 and t1 == t2
+    names = [n for n, _ in f1 + t1]
+    assert len(names) == len(set(names)), "duplicate param names"
+
+
+def test_full_ft_has_no_adapters():
+    f, t = M.param_specs(CFG, 4, True)
+    tnames = [n for n, _ in t]
+    # Full-FT trains embed + lm_head + the dense linears — no adapters.
+    assert not any(n.startswith(("a_", "b_")) for n in tnames)
+    assert "embed" in tnames and "lm_head" in tnames
+    assert sum(n.startswith("base_") for n in tnames) == len(M.LINEARS)
+    assert not any(n.startswith(("a_", "b_")) for n, _ in f)
+
+
+def test_logits_shape_and_finite():
+    frozen, trainable, _, _ = make_state(CFG, 4, False)
+    tokens, _ = decoder_batch(CFG)
+    logits = M.logits_fn({**frozen, **trainable}, tokens, CFG)
+    assert logits.shape == (CFG.batch, CFG.seq_len, CFG.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_adapter_zero_b_matches_base_only():
+    # LoRA init: B = 0 ⇒ logits identical to the frozen base model.
+    frozen, trainable, _, _ = make_state(CFG, 4, False)
+    tokens, _ = decoder_batch(CFG)
+    with_adapter = M.logits_fn({**frozen, **trainable}, tokens, CFG)
+    dense_params = dict(frozen)
+    zero_t = {k: jnp.zeros_like(v) if k.startswith("a_") else v for k, v in trainable.items()}
+    no_adapter = M.logits_fn({**dense_params, **zero_t}, tokens, CFG)
+    np.testing.assert_allclose(np.asarray(with_adapter), np.asarray(no_adapter), atol=1e-5)
+
+
+def test_loss_mask_controls_loss():
+    frozen, trainable, _, _ = make_state(CFG, 4, False)
+    params = {**frozen, **trainable}
+    tokens, mask = decoder_batch(CFG)
+    full = M.lm_loss(params, tokens, mask, CFG)
+    # Masking out everything except one position changes the loss.
+    mask2 = mask.at[:, : CFG.seq_len // 2].set(0.0)
+    half = M.lm_loss(params, tokens, mask2, CFG)
+    assert full.shape == () and half.shape == ()
+    assert abs(float(full) - float(half)) > 1e-9
+
+
+def test_train_step_only_updates_trainables_and_loss_decreases():
+    rank = 4
+    spec = M.make_train_step(CFG, rank, full_ft=False)
+    fn = jax.jit(spec[0])
+    frozen, trainable, m, v = make_state(CFG, rank, False)
+    tokens, mask = decoder_batch(CFG)
+    ts = spec[2]
+    nt = len(ts)
+    losses = []
+    state_t, state_m, state_v = trainable, m, v
+    for step in range(1, 9):
+        args = flat_args(spec, frozen, state_t, state_m, state_v,
+                         [tokens, mask, jnp.float32(5e-3), jnp.float32(step)])
+        out = fn(*args)
+        losses.append(float(out[0]))
+        vals = out[2:]
+        state_t = {n: vals[i] for i, (n, _) in enumerate(ts)}
+        state_m = {n: vals[nt + i] for i, (n, _) in enumerate(ts)}
+        state_v = {n: vals[2 * nt + i] for i, (n, _) in enumerate(ts)}
+    assert losses[-1] < losses[0], f"loss did not decrease: {losses}"
+    # grad flows into adapters: A and B must have moved.
+    assert float(jnp.linalg.norm(state_t["b_q"] - trainable["b_q"])) > 0
+
+
+def test_gradients_nonzero_for_adapters():
+    rank = 4
+    frozen, trainable, _, _ = make_state(CFG, rank, False)
+    tokens, mask = decoder_batch(CFG)
+
+    def loss_fn(t):
+        return M.lm_loss({**frozen, **t}, tokens, mask, CFG)
+
+    grads = jax.grad(loss_fn)(trainable)
+    # With B=0 at init, dL/dB = Aᵀ Xᵀ dL/dY ≠ 0 but dL/dA = Xᵀ dL/dY Bᵀ = 0
+    # (the paper's slow-LoRA-start argument!).
+    assert float(jnp.linalg.norm(grads["b_q"])) > 0
+    assert float(jnp.linalg.norm(grads["a_q"])) == pytest.approx(0.0, abs=1e-12)
+
+
+def test_pissa_style_init_has_nonzero_gradients_everywhere():
+    # Give B nonzero (PiSSA-style) values: now BOTH A and B receive grads.
+    rank = 4
+    frozen, trainable, _, _ = make_state(CFG, rank, False, seed=3)
+    trainable = dict(trainable)
+    key = jax.random.PRNGKey(9)
+    for k in list(trainable):
+        if k.startswith("b_"):
+            trainable[k] = 0.02 * jax.random.normal(key, trainable[k].shape)
+    tokens, mask = decoder_batch(CFG)
+
+    def loss_fn(t):
+        return M.lm_loss({**frozen, **t}, tokens, mask, CFG)
+
+    grads = jax.grad(loss_fn)(trainable)
+    assert float(jnp.linalg.norm(grads["a_q"])) > 0
+    assert float(jnp.linalg.norm(grads["b_q"])) > 0
+
+
+def test_adamw_matches_manual_single_param():
+    g = jnp.array([0.5, -1.0])
+    t = {"w": jnp.array([1.0, 2.0])}
+    m = {"w": jnp.zeros(2)}
+    v = {"w": jnp.zeros(2)}
+    new_t, new_m, new_v = M.adamw_update({"w": g}, t, m, v, lr=0.1, step=1.0)
+    mhat = (0.1 * g) / (1 - 0.9)
+    vhat = (0.001 * g * g) / (1 - 0.999)
+    want = t["w"] - 0.1 * mhat / (jnp.sqrt(vhat) + M.ADAM_EPS)
+    np.testing.assert_allclose(np.asarray(new_t["w"]), np.asarray(want), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(new_m["w"]), np.asarray(0.1 * g), rtol=1e-6)
+
+
+def test_encoder_shapes_and_loss():
+    frozen, trainable, _, _ = make_state(ENC, 4, False, encoder=True)
+    params = {**frozen, **trainable}
+    tokens = jax.random.randint(jax.random.PRNGKey(5), (ENC.batch, ENC.seq_len), 0, ENC.vocab)
+    amask = jnp.ones((ENC.batch, ENC.seq_len), jnp.float32)
+    logits = M.encoder_logits_fn(params, tokens, amask, ENC)
+    assert logits.shape == (ENC.batch, ENC.n_classes)
+    labels = jnp.zeros((ENC.batch,), jnp.int32)
+    l_cls = M.encoder_loss(params, tokens, amask, labels, ENC, regression=False)
+    l_reg = M.encoder_loss(params, tokens, amask, labels, ENC, regression=True)
+    assert jnp.isfinite(l_cls) and jnp.isfinite(l_reg)
+
+
+def test_encoder_train_step_decreases_loss():
+    spec = M.make_train_step(ENC, 4, full_ft=False, encoder=True)
+    fn = jax.jit(spec[0])
+    frozen, trainable, m, v = make_state(ENC, 4, False, encoder=True)
+    tokens = jax.random.randint(jax.random.PRNGKey(6), (ENC.batch, ENC.seq_len), 0, ENC.vocab)
+    amask = jnp.ones((ENC.batch, ENC.seq_len), jnp.float32)
+    labels = (tokens[:, 0] % ENC.n_classes).astype(jnp.int32)  # learnable signal
+    ts = spec[2]
+    nt = len(ts)
+    state = (trainable, m, v)
+    losses = []
+    for step in range(1, 13):
+        args = flat_args(spec, frozen, *state,
+                         head=[tokens, amask, labels, jnp.float32(2e-2), jnp.float32(step)])
+        out = fn(*args)
+        losses.append(float(out[0]))
+        vals = out[2:]
+        state = (
+            {n: vals[i] for i, (n, _) in enumerate(ts)},
+            {n: vals[nt + i] for i, (n, _) in enumerate(ts)},
+            {n: vals[2 * nt + i] for i, (n, _) in enumerate(ts)},
+        )
+    assert losses[-1] < losses[0], f"encoder loss did not decrease: {losses}"
+
+
+def test_pallas_and_jnp_paths_agree():
+    frozen, trainable, _, _ = make_state(CFG, 4, False, seed=8)
+    # PiSSA-style nonzero B so the rank path actually contributes.
+    key = jax.random.PRNGKey(10)
+    trainable = {
+        k: (0.02 * jax.random.normal(key, val.shape) if k.startswith("b_") else val)
+        for k, val in trainable.items()
+    }
+    params = {**frozen, **trainable}
+    tokens, _ = decoder_batch(CFG, seed=9)
+    y_jnp = M.logits_fn(params, tokens, CFG, use_pallas=False)
+    y_pal = M.logits_fn(params, tokens, CFG, use_pallas=True)
+    np.testing.assert_allclose(np.asarray(y_pal), np.asarray(y_jnp), rtol=2e-4, atol=2e-4)
+
+
+def test_rope_preserves_norm():
+    x = jax.random.normal(jax.random.PRNGKey(11), (2, 8, 2, 16))
+    pos = jnp.broadcast_to(jnp.arange(8)[None, :], (2, 8))
+    y = M.rope(x, pos)
+    np.testing.assert_allclose(
+        np.asarray(jnp.linalg.norm(y, axis=-1)),
+        np.asarray(jnp.linalg.norm(x, axis=-1)),
+        rtol=1e-5,
+    )
+
+
+def test_causal_masking():
+    # Changing a future token must not affect past logits.
+    frozen, trainable, _, _ = make_state(CFG, 4, False, seed=12)
+    params = {**frozen, **trainable}
+    tokens, _ = decoder_batch(CFG, seed=13)
+    logits1 = M.logits_fn(params, tokens, CFG)
+    tokens2 = tokens.at[:, -1].set((tokens[:, -1] + 1) % CFG.vocab)
+    logits2 = M.logits_fn(params, tokens2, CFG)
+    np.testing.assert_allclose(
+        np.asarray(logits1[:, :-1]), np.asarray(logits2[:, :-1]), atol=1e-5
+    )

@@ -1,0 +1,119 @@
+//! PiSSA → LoRA adapter conversion (Appendix C, Eq. 9–10).
+//!
+//! After training, the model weight is W + ΔW = W_res + A'B'. Sharing A'
+//! and B' directly would force users to re-run SVD on the base model; the
+//! paper instead shares the *equivalent LoRA adapter*
+//!     ΔW = A'B' − AB = [A' | A] · [B' ; −B]  (ΔA ∈ R^{m×2r}, ΔB ∈ R^{2r×n})
+//! which plugs into the *original* W without any decomposition.
+
+use super::init::AdapterInit;
+use crate::linalg::{matmul, Mat};
+
+/// A plain LoRA-style delta adapter: W_new = W_orig + ΔA·ΔB.
+#[derive(Clone, Debug)]
+pub struct LoraDelta {
+    pub da: Mat, // m × 2r
+    pub db: Mat, // 2r × n
+}
+
+impl LoraDelta {
+    /// Materialize ΔW = ΔA·ΔB.
+    pub fn delta(&self) -> Mat {
+        matmul(&self.da, &self.db)
+    }
+}
+
+/// Build the equivalent LoRA adapter from the *initial* PiSSA factors
+/// (A, B) and the *trained* factors (A', B'): ΔA = [A' | A], ΔB = [B'; −B].
+pub fn pissa_to_lora(init_a: &Mat, init_b: &Mat, trained_a: &Mat, trained_b: &Mat) -> LoraDelta {
+    assert_eq!(init_a.rows, trained_a.rows);
+    assert_eq!(init_b.cols, trained_b.cols);
+    assert_eq!(init_a.cols, init_b.rows);
+    assert_eq!(trained_a.cols, trained_b.rows);
+    let m = init_a.rows;
+    let n = init_b.cols;
+    let r0 = trained_a.cols;
+    let r1 = init_a.cols;
+
+    // ΔA = [A' | A]
+    let mut da = Mat::zeros(m, r0 + r1);
+    for i in 0..m {
+        da.row_mut(i)[..r0].copy_from_slice(trained_a.row(i));
+        da.row_mut(i)[r0..].copy_from_slice(init_a.row(i));
+    }
+    // ΔB = [B' ; −B]
+    let mut db = Mat::zeros(r0 + r1, n);
+    for k in 0..r0 {
+        db.row_mut(k).copy_from_slice(trained_b.row(k));
+    }
+    for k in 0..r1 {
+        for (dst, &src) in db.row_mut(r0 + k).iter_mut().zip(init_b.row(k)) {
+            *dst = -src;
+        }
+    }
+    LoraDelta { da, db }
+}
+
+/// Merge a trained adapter into a dense weight: W_merged = base + A'B'.
+/// (Deployment path: "integration of trainable matrices with the
+/// pre-trained weights upon deployment", paper §3.)
+pub fn merge(init: &AdapterInit) -> Mat {
+    init.effective()
+}
+
+/// Apply a converted LoRA delta to the original dense W.
+pub fn apply_delta(w_orig: &Mat, delta: &LoraDelta) -> Mat {
+    w_orig.add(&delta.delta())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adapter::init::pissa;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn conversion_is_exact() {
+        // Simulate training: perturb A and B, then check that
+        // W_orig + ΔA·ΔB == W_res + A'B' exactly (Eq. 9–10).
+        let mut rng = Rng::new(90);
+        let w = Mat::randn(24, 20, 0.0, 0.5, &mut rng);
+        let init = pissa(&w, 4, None, &mut rng);
+        let mut a_t = init.a.clone();
+        let mut b_t = init.b.clone();
+        // "train": random drift
+        for x in a_t.data.iter_mut() {
+            *x += 0.1 * rng.normal_f32(0.0, 1.0);
+        }
+        for x in b_t.data.iter_mut() {
+            *x += 0.1 * rng.normal_f32(0.0, 1.0);
+        }
+
+        let finetuned = init.base.add(&matmul(&a_t, &b_t)); // W_res + A'B'
+        let delta = pissa_to_lora(&init.a, &init.b, &a_t, &b_t);
+        let via_lora = apply_delta(&w, &delta); // W + ΔA·ΔB
+
+        let err = finetuned.sub(&via_lora).fro() / finetuned.fro();
+        assert!(err < 1e-5, "conversion err={err}");
+        // Shapes: ΔA is m×2r, ΔB is 2r×n.
+        assert_eq!(delta.da.cols, 8);
+        assert_eq!(delta.db.rows, 8);
+    }
+
+    #[test]
+    fn zero_training_gives_zero_delta() {
+        let mut rng = Rng::new(91);
+        let w = Mat::randn(16, 16, 0.0, 0.5, &mut rng);
+        let init = pissa(&w, 4, None, &mut rng);
+        let delta = pissa_to_lora(&init.a, &init.b, &init.a, &init.b);
+        assert!(delta.delta().fro() < 1e-5);
+    }
+
+    #[test]
+    fn merge_matches_effective() {
+        let mut rng = Rng::new(92);
+        let w = Mat::randn(12, 10, 0.0, 0.5, &mut rng);
+        let init = pissa(&w, 3, None, &mut rng);
+        assert_eq!(merge(&init).data, init.effective().data);
+    }
+}

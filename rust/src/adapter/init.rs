@@ -1,0 +1,350 @@
+//! Adapter initialization — the paper's contribution.
+//!
+//! Implements every initialization compared in the paper:
+//!   * **PiSSA** (Eq. 2–4): A = U[:, :r]·S[:r]^{1/2}, B = S[:r]^{1/2}·V[:, :r]ᵀ,
+//!     residual W_res = W − AB frozen.
+//!   * **LoRA** (Hu et al.): A ~ N(0, 1/√r)… actually Kaiming-uniform in the
+//!     reference impl; we use N(0, 0.02) per the paper's "Gaussian" wording,
+//!     B = 0, base = W frozen.
+//!   * **LoftQ** (Li et al., Eq. 14–15 + alternating): SVD of the
+//!     *quantization-error* matrix, T alternating iterations.
+//!   * **QPiSSA-T-iter** (Algorithm 1): alternate SVD of W − nf4(W_res).
+//!   * **Component ablation** (Appendix A): principal / medium / minor
+//!     singular-triplet windows.
+//!
+//! All of them produce the same `AdapterInit { base, a, b }` shape so the
+//! training stack is strategy-agnostic — exactly the paper's point that
+//! PiSSA is a drop-in replacement for LoRA.
+
+use crate::linalg::{matmul, rsvd, svd, Mat, Svd};
+use crate::quant::nf4::nf4_roundtrip;
+use crate::util::rng::Rng;
+
+/// Which initialization strategy to use (paper's comparison set).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Strategy {
+    /// Full fine-tuning (no adapter; the whole W is trainable).
+    FullFt,
+    /// LoRA: Gaussian A, zero B, frozen W.
+    Lora,
+    /// PiSSA: principal singular triplets in the adapter, residual frozen.
+    Pissa,
+    /// QLoRA: LoRA + NF4-quantized frozen base.
+    QLora,
+    /// QPiSSA: PiSSA + NF4-quantized frozen residual (T alternating iters).
+    QPissa,
+    /// LoftQ: adapter holds principal components of the quantization error.
+    LoftQ,
+}
+
+impl Strategy {
+    pub fn parse(s: &str) -> anyhow::Result<Strategy> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "full" | "full-ft" | "fullft" => Strategy::FullFt,
+            "lora" => Strategy::Lora,
+            "pissa" => Strategy::Pissa,
+            "qlora" => Strategy::QLora,
+            "qpissa" => Strategy::QPissa,
+            "loftq" => Strategy::LoftQ,
+            other => anyhow::bail!("unknown strategy '{other}'"),
+        })
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            Strategy::FullFt => "full-ft",
+            Strategy::Lora => "lora",
+            Strategy::Pissa => "pissa",
+            Strategy::QLora => "qlora",
+            Strategy::QPissa => "qpissa",
+            Strategy::LoftQ => "loftq",
+        }
+    }
+    /// Does this strategy NF4-quantize its frozen base?
+    pub fn quantized(&self) -> bool {
+        matches!(self, Strategy::QLora | Strategy::QPissa | Strategy::LoftQ)
+    }
+}
+
+/// Result of initializing one linear layer's adapter.
+#[derive(Clone, Debug)]
+pub struct AdapterInit {
+    /// Frozen base matrix (W, W_res, or its NF4 round trip for Q-strategies).
+    pub base: Mat,
+    /// Trainable A (m×r).
+    pub a: Mat,
+    /// Trainable B (r×n).
+    pub b: Mat,
+}
+
+impl AdapterInit {
+    /// Effective weight seen by the forward pass: base + A·B.
+    pub fn effective(&self) -> Mat {
+        self.base.add(&matmul(&self.a, &self.b))
+    }
+}
+
+/// Which SVD window to take triplets from (Appendix A ablation).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Window {
+    Principal,
+    Medium,
+    Minor,
+}
+
+/// Factor a rank-r window of an SVD into (A, B) per Eq. 2–3:
+/// A = U·S^{1/2}, B = S^{1/2}·Vᵀ over columns [lo, lo+r).
+fn window_factors(dec: &Svd, lo: usize, r: usize) -> (Mat, Mat) {
+    let hi = (lo + r).min(dec.s.len());
+    let sqrt_s: Vec<f32> = dec.s[lo..hi].iter().map(|&x| x.max(0.0).sqrt()).collect();
+    let mut a = dec.u.cols_range(lo, hi);
+    a.scale_cols(&sqrt_s);
+    let mut b = dec.vt.rows_range(lo, hi);
+    b.scale_rows(&sqrt_s);
+    (a, b)
+}
+
+/// PiSSA init (Eq. 2–4), with a choice of exact or fast (randomized) SVD.
+/// `niter = None` means exact Jacobi SVD (the paper's "∞"); `Some(t)` uses
+/// the Halko fast SVD with t subspace iterations (paper's Table 4 knob).
+pub fn pissa(w: &Mat, r: usize, niter: Option<usize>, rng: &mut Rng) -> AdapterInit {
+    let dec = match niter {
+        None => svd(w),
+        Some(t) => rsvd(w, r, t, rng),
+    };
+    let (a, b) = window_factors(&dec, 0, r);
+    // W_res = W − A·B (exact residual; for rsvd this absorbs the sketch
+    // error into the frozen part, keeping base + AB == W exactly).
+    let base = w.sub(&matmul(&a, &b));
+    AdapterInit { base, a, b }
+}
+
+/// Appendix-A ablation: adapter from the principal / medium / minor window.
+pub fn pissa_window(w: &Mat, r: usize, window: Window) -> AdapterInit {
+    let dec = svd(w);
+    let k = dec.s.len();
+    let lo = match window {
+        Window::Principal => 0,
+        Window::Medium => (k.saturating_sub(r)) / 2,
+        Window::Minor => k.saturating_sub(r),
+    };
+    let (a, b) = window_factors(&dec, lo, r);
+    let base = w.sub(&matmul(&a, &b));
+    AdapterInit { base, a, b }
+}
+
+/// LoRA init: A ~ N(0, 0.02), B = 0, frozen base = W. AB = 0 at start so
+/// the injection does not change the model output (paper §1).
+pub fn lora(w: &Mat, r: usize, rng: &mut Rng) -> AdapterInit {
+    let a = Mat::randn(w.rows, r, 0.0, 0.02, rng);
+    let b = Mat::zeros(r, w.cols);
+    AdapterInit { base: w.clone(), a, b }
+}
+
+/// QLoRA init: LoRA adapters over an NF4-quantized frozen base.
+pub fn qlora(w: &Mat, r: usize, rng: &mut Rng) -> AdapterInit {
+    let mut init = lora(w, r, rng);
+    init.base = nf4_roundtrip(&init.base);
+    init
+}
+
+/// QPiSSA-T-iters (Algorithm 1). T = 1 is plain PiSSA + quantize(W_res).
+/// T ≥ 2 alternates: A,B ← SVDr(W − nf4(W_res)); W_res ← W − AB.
+pub fn qpissa(w: &Mat, r: usize, iters: usize, rng: &mut Rng) -> AdapterInit {
+    assert!(iters >= 1);
+    let mut init = pissa(w, r, Some(4), rng);
+    let mut w_res = init.base.clone();
+    for _t in 1..iters {
+        let target = w.sub(&nf4_roundtrip(&w_res));
+        let dec = rsvd(&target, r, 4, rng);
+        let (a, b) = window_factors(&dec, 0, r);
+        w_res = w.sub(&matmul(&a, &b));
+        init.a = a;
+        init.b = b;
+    }
+    init.base = nf4_roundtrip(&w_res);
+    AdapterInit { base: init.base, a: init.a, b: init.b }
+}
+
+/// LoftQ-T-iters (Eq. 11, 14–15): adapter holds the principal components
+/// of the *quantization error*; A, B start from SVD of W − nf4(Q).
+pub fn loftq(w: &Mat, r: usize, iters: usize, rng: &mut Rng) -> AdapterInit {
+    assert!(iters >= 1);
+    // t = 1: Q = nf4(W), err = W − Q, (A,B) = SVD_r(err).
+    let mut q = nf4_roundtrip(w);
+    let mut a = Mat::zeros(w.rows, r);
+    let mut b = Mat::zeros(r, w.cols);
+    for _t in 0..iters {
+        let err = w.sub(&q);
+        let dec = rsvd(&err, r, 4, rng);
+        let (na, nb) = window_factors(&dec, 0, r);
+        a = na;
+        b = nb;
+        // Re-quantize the residual after removing the adapter part.
+        q = nf4_roundtrip(&w.sub(&matmul(&a, &b)));
+    }
+    AdapterInit { base: q, a, b }
+}
+
+/// Dispatch by strategy (FullFt returns the identity decomposition:
+/// base = 0, A·B = unused; callers treat FullFt specially).
+pub fn initialize(
+    strategy: Strategy,
+    w: &Mat,
+    r: usize,
+    iters: usize,
+    rng: &mut Rng,
+) -> AdapterInit {
+    match strategy {
+        Strategy::FullFt => AdapterInit {
+            base: Mat::zeros(w.rows, w.cols),
+            a: w.clone(),
+            b: Mat::eye(w.cols),
+        },
+        Strategy::Lora => lora(w, r, rng),
+        Strategy::Pissa => pissa(w, r, Some(4), rng),
+        Strategy::QLora => qlora(w, r, rng),
+        Strategy::QPissa => qpissa(w, r, iters, rng),
+        Strategy::LoftQ => loftq(w, r, iters, rng),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{qlora_error, strategy_error};
+
+    fn test_w(rng: &mut Rng) -> Mat {
+        // A matrix with a decaying spectrum, like pre-trained weights:
+        // random orthogonal-ish factors with power-law singular values.
+        let m = 48;
+        let n = 40;
+        let u = Mat::randn(m, n, 0.0, 1.0, rng);
+        let mut s: Vec<f32> = (0..n).map(|i| 1.0 / (1.0 + i as f32).powf(0.8)).collect();
+        s[0] = 3.0; // a dominant direction
+        let v = Mat::randn(n, n, 0.0, 1.0, rng);
+        let qu = crate::linalg::qr::orthonormalize(&u);
+        let qv = crate::linalg::qr::orthonormalize(&v);
+        let mut us = qu;
+        us.scale_cols(&s);
+        matmul(&us, &qv.t())
+    }
+
+    #[test]
+    fn pissa_preserves_w_exactly() {
+        // Eq. 5: base + AB == W at init, bit-for-bit up to fp rounding.
+        let mut rng = Rng::new(80);
+        let w = test_w(&mut rng);
+        for niter in [None, Some(2), Some(8)] {
+            let init = pissa(&w, 8, niter, &mut rng);
+            let err = init.effective().sub(&w).fro() / w.fro();
+            assert!(err < 1e-5, "niter={niter:?} err={err}");
+        }
+    }
+
+    #[test]
+    fn lora_starts_at_w() {
+        let mut rng = Rng::new(81);
+        let w = test_w(&mut rng);
+        let init = lora(&w, 8, &mut rng);
+        assert_eq!(init.effective().sub(&w).fro(), 0.0); // AB = 0 exactly
+        assert!(init.a.fro() > 0.0);
+        assert_eq!(init.b.fro(), 0.0);
+    }
+
+    #[test]
+    fn pissa_adapter_captures_principal_mass() {
+        let mut rng = Rng::new(82);
+        let w = test_w(&mut rng);
+        let init = pissa(&w, 8, None, &mut rng);
+        let ab = matmul(&init.a, &init.b);
+        // ‖AB‖F should carry the top-8 singular mass, more than the residual.
+        assert!(ab.fro() > init.base.fro(), "ab={} res={}", ab.fro(), init.base.fro());
+    }
+
+    #[test]
+    fn qpissa_reduces_error_vs_qlora() {
+        // The paper's headline quantization claim (Table 3).
+        let mut rng = Rng::new(83);
+        let w = test_w(&mut rng);
+        let baseline = qlora_error(&w);
+        let qp = qpissa(&w, 8, 1, &mut rng);
+        // base is already the nf4 roundtrip; measure ‖W − (base + AB)‖_*.
+        let err = crate::linalg::nuclear_norm(&w.sub(&qp.base.add(&matmul(&qp.a, &qp.b))));
+        assert!(err < baseline, "qpissa={err} qlora={baseline}");
+    }
+
+    #[test]
+    fn qpissa_more_iters_reduces_error() {
+        // Appendix E: T=5 beats T=1.
+        let mut rng = Rng::new(84);
+        let w = test_w(&mut rng);
+        let e1 = {
+            let i = qpissa(&w, 6, 1, &mut rng);
+            w.sub(&i.base.add(&matmul(&i.a, &i.b))).fro()
+        };
+        let e5 = {
+            let i = qpissa(&w, 6, 5, &mut rng);
+            w.sub(&i.base.add(&matmul(&i.a, &i.b))).fro()
+        };
+        assert!(e5 <= e1 * 1.01, "T=5 ({e5}) should beat T=1 ({e1})");
+    }
+
+    #[test]
+    fn loftq_reduces_error_but_less_than_qpissa() {
+        // Appendix F ordering: QLoRA > LoftQ > QPiSSA in error.
+        let mut rng = Rng::new(85);
+        let w = test_w(&mut rng);
+        let baseline = qlora_error(&w);
+        let lq = loftq(&w, 8, 5, &mut rng);
+        let e_loftq =
+            crate::linalg::nuclear_norm(&w.sub(&lq.base.add(&matmul(&lq.a, &lq.b))));
+        let qp = qpissa(&w, 8, 5, &mut rng);
+        let e_qpissa =
+            crate::linalg::nuclear_norm(&w.sub(&qp.base.add(&matmul(&qp.a, &qp.b))));
+        assert!(e_loftq < baseline, "loftq={e_loftq} qlora={baseline}");
+        assert!(e_qpissa < e_loftq * 1.05, "qpissa={e_qpissa} loftq={e_loftq}");
+    }
+
+    #[test]
+    fn windows_are_disjoint_quality() {
+        // Appendix A: principal window approximates W best.
+        let mut rng = Rng::new(86);
+        let w = test_w(&mut rng);
+        let pri = pissa_window(&w, 6, Window::Principal);
+        let med = pissa_window(&w, 6, Window::Medium);
+        let min = pissa_window(&w, 6, Window::Minor);
+        let frob = |i: &AdapterInit| matmul(&i.a, &i.b).fro();
+        assert!(frob(&pri) > frob(&med), "principal should carry most mass");
+        assert!(frob(&med) > frob(&min) * 0.999);
+        // all preserve W exactly
+        for i in [&pri, &med, &min] {
+            assert!(i.effective().sub(&w).fro() / w.fro() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn strategy_parse_roundtrip() {
+        for s in [
+            Strategy::FullFt,
+            Strategy::Lora,
+            Strategy::Pissa,
+            Strategy::QLora,
+            Strategy::QPissa,
+            Strategy::LoftQ,
+        ] {
+            assert_eq!(Strategy::parse(s.name()).unwrap(), s);
+        }
+        assert!(Strategy::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn strategy_error_helper_consistency() {
+        let mut rng = Rng::new(87);
+        let w = test_w(&mut rng);
+        let init = pissa(&w, 8, Some(4), &mut rng);
+        let ab = matmul(&init.a, &init.b);
+        let via_helper = strategy_error(&w, &init.base, &ab);
+        assert!(via_helper >= 0.0);
+        assert!(via_helper < qlora_error(&w), "PiSSA should beat QLoRA error");
+    }
+}

@@ -1,0 +1,11 @@
+//! The paper's contribution: adapter initialization (PiSSA Eq. 2–4, LoRA,
+//! QLoRA, QPiSSA Algorithm 1, LoftQ), the PiSSA→LoRA conversion of
+//! Appendix C, and adapter/optimizer checkpointing.
+
+pub mod convert;
+pub mod init;
+pub mod store;
+
+pub use convert::{apply_delta, pissa_to_lora, LoraDelta};
+pub use init::{initialize, lora, loftq, pissa, pissa_window, qlora, qpissa, AdapterInit, Strategy, Window};
+pub use store::Checkpoint;

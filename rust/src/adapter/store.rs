@@ -1,0 +1,172 @@
+//! Binary checkpoint format for adapters, full parameter sets, and
+//! optimizer state. No serde offline, so we use a simple self-describing
+//! little-endian container:
+//!
+//!   magic "PISSACKP" | version u32 | n_entries u32
+//!   per entry: name_len u32 | name bytes | rows u64 | cols u64 | f32 data
+//!
+//! The same container stores NF4 tensors (as an entry pair
+//! `<name>.codes` (u8 payload, rows=len, cols=0 sentinel) and
+//! `<name>.scales`).
+
+use crate::linalg::Mat;
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"PISSACKP";
+const VERSION: u32 = 1;
+
+/// A named collection of matrices (and raw byte blobs).
+#[derive(Default, Debug)]
+pub struct Checkpoint {
+    pub mats: BTreeMap<String, Mat>,
+    pub blobs: BTreeMap<String, Vec<u8>>,
+}
+
+impl Checkpoint {
+    pub fn new() -> Checkpoint {
+        Checkpoint::default()
+    }
+
+    pub fn put(&mut self, name: &str, m: Mat) {
+        self.mats.insert(name.to_string(), m);
+    }
+
+    pub fn put_blob(&mut self, name: &str, bytes: Vec<u8>) {
+        self.blobs.insert(name.to_string(), bytes);
+    }
+
+    pub fn get(&self, name: &str) -> anyhow::Result<&Mat> {
+        self.mats
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("checkpoint missing tensor '{name}'"))
+    }
+
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(MAGIC)?;
+        f.write_all(&VERSION.to_le_bytes())?;
+        let n = (self.mats.len() + self.blobs.len()) as u32;
+        f.write_all(&n.to_le_bytes())?;
+        for (name, m) in &self.mats {
+            write_entry_header(&mut f, name, m.rows as u64, m.cols as u64, 0)?;
+            // f32 payload
+            let bytes: Vec<u8> = m.data.iter().flat_map(|x| x.to_le_bytes()).collect();
+            f.write_all(&bytes)?;
+        }
+        for (name, b) in &self.blobs {
+            write_entry_header(&mut f, name, b.len() as u64, 0, 1)?;
+            f.write_all(b)?;
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<Checkpoint> {
+        let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        anyhow::ensure!(&magic == MAGIC, "not a pissa checkpoint: {path:?}");
+        let version = read_u32(&mut f)?;
+        anyhow::ensure!(version == VERSION, "unsupported checkpoint version {version}");
+        let n = read_u32(&mut f)?;
+        let mut ckp = Checkpoint::new();
+        for _ in 0..n {
+            let name_len = read_u32(&mut f)? as usize;
+            let mut name_bytes = vec![0u8; name_len];
+            f.read_exact(&mut name_bytes)?;
+            let name = String::from_utf8(name_bytes)?;
+            let rows = read_u64(&mut f)? as usize;
+            let cols = read_u64(&mut f)? as usize;
+            let kind = read_u32(&mut f)?;
+            match kind {
+                0 => {
+                    let mut buf = vec![0u8; rows * cols * 4];
+                    f.read_exact(&mut buf)?;
+                    let data: Vec<f32> = buf
+                        .chunks_exact(4)
+                        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                        .collect();
+                    ckp.mats.insert(name, Mat::from_vec(rows, cols, data));
+                }
+                1 => {
+                    let mut buf = vec![0u8; rows];
+                    f.read_exact(&mut buf)?;
+                    ckp.blobs.insert(name, buf);
+                }
+                k => anyhow::bail!("unknown entry kind {k}"),
+            }
+        }
+        Ok(ckp)
+    }
+}
+
+fn write_entry_header<W: Write>(
+    f: &mut W,
+    name: &str,
+    rows: u64,
+    cols: u64,
+    kind: u32,
+) -> anyhow::Result<()> {
+    f.write_all(&(name.len() as u32).to_le_bytes())?;
+    f.write_all(name.as_bytes())?;
+    f.write_all(&rows.to_le_bytes())?;
+    f.write_all(&cols.to_le_bytes())?;
+    f.write_all(&kind.to_le_bytes())?;
+    Ok(())
+}
+
+fn read_u32<R: Read>(f: &mut R) -> anyhow::Result<u32> {
+    let mut b = [0u8; 4];
+    f.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64<R: Read>(f: &mut R) -> anyhow::Result<u64> {
+    let mut b = [0u8; 8];
+    f.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn save_load_roundtrip() {
+        let mut rng = Rng::new(100);
+        let mut ckp = Checkpoint::new();
+        ckp.put("layer0.a", Mat::randn(8, 4, 0.0, 1.0, &mut rng));
+        ckp.put("layer0.b", Mat::randn(4, 8, 0.0, 1.0, &mut rng));
+        ckp.put_blob("meta", b"{\"rank\":4}".to_vec());
+        let dir = std::env::temp_dir().join("pissa_test_ckp");
+        let path = dir.join("test.ckpt");
+        ckp.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.mats.len(), 2);
+        assert_eq!(back.get("layer0.a").unwrap().data, ckp.get("layer0.a").unwrap().data);
+        assert_eq!(back.blobs["meta"], ckp.blobs["meta"]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let dir = std::env::temp_dir().join("pissa_test_ckp2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bogus.ckpt");
+        std::fs::write(&path, b"NOTAPISSACHECKPOINT").unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_tensor_error_names_it() {
+        let ckp = Checkpoint::new();
+        let err = ckp.get("nope").unwrap_err().to_string();
+        assert!(err.contains("nope"));
+    }
+}

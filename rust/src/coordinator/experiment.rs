@@ -1,0 +1,211 @@
+//! High-level experiment orchestration: pre-train a base model, apply a
+//! strategy, fine-tune, evaluate — the verbs every bench harness and the
+//! CLI compose. All runs are deterministic given their seeds.
+
+use super::sched::LrSchedule;
+use super::trainer::Trainer;
+use crate::adapter::init::Strategy;
+use crate::data::batcher::Batcher;
+use crate::data::tokenizer::Example;
+use crate::data::{codegen, mathqa};
+use crate::metrics::StepMetrics;
+use crate::model::{apply_strategy, BaseModel, TrainState};
+use crate::runtime::{Manifest, Runtime};
+use crate::util::rng::Rng;
+use anyhow::Result;
+
+/// Which fine-tuning corpus to use (the paper's three NLG task families).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TaskFamily {
+    /// MetaMathQA → GSM8K analog.
+    Math,
+    /// CodeFeedback → HumanEval analog.
+    Code,
+    /// WizardLM → MT-Bench analog (mixed corpus, scored as math here).
+    Chat,
+}
+
+impl TaskFamily {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TaskFamily::Math => "math",
+            TaskFamily::Code => "code",
+            TaskFamily::Chat => "chat",
+        }
+    }
+
+    /// Build the fine-tuning corpus. `level` applies to the math families.
+    pub fn corpus(&self, n: usize, seed: u64, level: mathqa::MathLevel) -> Vec<Example> {
+        match self {
+            TaskFamily::Math => {
+                mathqa::gen_dataset(level, n, seed).into_iter().map(|p| p.example).collect()
+            }
+            TaskFamily::Code => codegen::gen_dataset(n, seed).into_iter().map(|t| t.example).collect(),
+            TaskFamily::Chat => {
+                // mixed easy math + code + echo lines (instruction variety)
+                let mut out: Vec<Example> = mathqa::gen_dataset(mathqa::MathLevel::Easy, n / 2, seed)
+                    .into_iter()
+                    .map(|p| p.example)
+                    .collect();
+                out.extend(codegen::gen_dataset(n - n / 2, seed ^ 0xC0DE).into_iter().map(|t| t.example));
+                out
+            }
+        }
+    }
+}
+
+/// The hardest math level whose worst-case example fits `seq_len` tokens.
+pub fn level_for_seq(seq_len: usize) -> mathqa::MathLevel {
+    if seq_len >= mathqa::max_tokens(mathqa::MathLevel::Hard) {
+        mathqa::MathLevel::Hard
+    } else if seq_len >= mathqa::max_tokens(mathqa::MathLevel::Std) {
+        mathqa::MathLevel::Std
+    } else {
+        mathqa::MathLevel::Easy
+    }
+}
+
+/// Settings for one fine-tuning run.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub config: String,
+    pub strategy: Strategy,
+    pub rank: usize,
+    /// QPiSSA/LoftQ alternation count (paper's T; 5 in §5.3/5.4, 1 in §5.5).
+    pub iters: usize,
+    pub steps: usize,
+    pub peak_lr: f64,
+    pub corpus_size: usize,
+    pub seed: u64,
+    pub task: TaskFamily,
+}
+
+impl RunConfig {
+    pub fn quick(config: &str, strategy: Strategy, rank: usize) -> RunConfig {
+        RunConfig {
+            config: config.to_string(),
+            strategy,
+            rank,
+            iters: 5,
+            steps: 60,
+            peak_lr: 2e-3,
+            corpus_size: 512,
+            seed: 42,
+            task: TaskFamily::Math,
+        }
+    }
+}
+
+/// Result of a fine-tuning run.
+#[derive(Clone, Debug)]
+pub struct RunResult {
+    pub history: Vec<StepMetrics>,
+    pub final_state: TrainState,
+    pub trainable_params: usize,
+    pub overhead_s: f64,
+    pub total_s: f64,
+}
+
+impl RunResult {
+    pub fn final_loss(&self, window: usize) -> f32 {
+        let tail = &self.history[self.history.len().saturating_sub(window)..];
+        tail.iter().map(|m| m.loss).sum::<f32>() / tail.len().max(1) as f32
+    }
+}
+
+/// Pre-train a random-init base model with the full-FT artifact on the
+/// synthetic corpus; returns the base model with trained weights.
+pub fn pretrain(
+    rt: &Runtime,
+    manifest: &Manifest,
+    config: &str,
+    steps: usize,
+    peak_lr: f64,
+    seed: u64,
+) -> Result<(BaseModel, Vec<StepMetrics>)> {
+    let cfg = manifest.config(config)?.clone();
+    let mut rng = Rng::new(seed);
+    let base = BaseModel::random(&cfg, &mut rng);
+    let state = apply_strategy(&base, Strategy::FullFt, 0, 1, &mut rng)?;
+    let art_name = Manifest::train_name(config, 0, true);
+    let sched = LrSchedule::alpaca(peak_lr, steps);
+    let mut trainer = Trainer::new(rt, manifest, &art_name, state, sched)?;
+
+    let corpus: Vec<Example> = crate::data::corpus::gen_corpus(steps.max(64) * cfg.batch, seed ^ 0xBA5E);
+    let mut batcher = Batcher::new(corpus, cfg.batch, cfg.seq_len, seed ^ 0xF00D);
+    let mut history = Vec::with_capacity(steps);
+    for _ in 0..steps {
+        history.push(trainer.step(&batcher.next_batch())?);
+    }
+
+    // Harvest the trained weights back into a BaseModel.
+    let mut trained = base;
+    trained.scaffold.insert("embed".into(), trainer.state.trainable["embed"].clone());
+    trained.scaffold.insert("lm_head".into(), trainer.state.trainable["lm_head"].clone());
+    let mut linears = crate::model::ParamStore::new();
+    for name in crate::model::LINEARS {
+        let key = format!("base_{name}");
+        linears.insert(key.clone(), trainer.state.trainable[&key].clone());
+    }
+    trained.set_linears(linears);
+    Ok((trained, history))
+}
+
+/// Fine-tune a base model under a strategy; returns metrics + final state.
+pub fn finetune(
+    rt: &Runtime,
+    manifest: &Manifest,
+    base: &BaseModel,
+    run: &RunConfig,
+) -> Result<RunResult> {
+    let cfg = manifest.config(&run.config)?.clone();
+    let mut rng = Rng::new(run.seed);
+    let state = apply_strategy(base, run.strategy, run.rank, run.iters, &mut rng)?;
+    let trainable_params = crate::model::count_params(
+        &state.trainable,
+        &state.trainable.keys().cloned().collect::<Vec<_>>(),
+    );
+    let art_name = Manifest::train_name(&run.config, run.rank, run.strategy == Strategy::FullFt);
+    let sched = LrSchedule::alpaca(run.peak_lr, run.steps);
+    let mut trainer = Trainer::new(rt, manifest, &art_name, state, sched)?;
+
+    let level = level_for_seq(cfg.seq_len);
+    let corpus = run.task.corpus(run.corpus_size, run.seed ^ 0xDA7A, level);
+    let mut batcher = Batcher::new(corpus, cfg.batch, cfg.seq_len, run.seed ^ 0x5EED);
+    for _ in 0..run.steps {
+        trainer.step(&batcher.next_batch())?;
+    }
+    Ok(RunResult {
+        history: trainer.history.clone(),
+        overhead_s: trainer.overhead_s,
+        total_s: trainer.total_s,
+        final_state: trainer.state,
+        trainable_params,
+    })
+}
+
+/// Evaluate a fine-tuned state on the task family's held-out suite.
+pub fn evaluate(
+    rt: &Runtime,
+    manifest: &Manifest,
+    run: &RunConfig,
+    state: &TrainState,
+    n_eval: usize,
+    max_new: usize,
+) -> Result<f64> {
+    let art_name = Manifest::logits_name(&run.config, run.rank, run.strategy == Strategy::FullFt);
+    let gen = crate::eval::Generator::new(rt, manifest, &art_name, state)?;
+    let cfg = manifest.config(&run.config)?;
+    let level = level_for_seq(cfg.seq_len);
+    let eval_seed = run.seed ^ 0xE7A1;
+    match run.task {
+        TaskFamily::Math | TaskFamily::Chat => {
+            let problems = mathqa::gen_dataset(level, n_eval, eval_seed);
+            crate::eval::eval_math(&gen, &problems, max_new)
+        }
+        TaskFamily::Code => {
+            let tasks = codegen::gen_dataset(n_eval, eval_seed);
+            crate::eval::eval_code(&gen, &tasks, max_new)
+        }
+    }
+}

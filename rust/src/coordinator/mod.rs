@@ -1,0 +1,12 @@
+//! L3 coordinator: the training-loop driver over PJRT artifacts, the
+//! Alpaca LR schedule, the experiment orchestration verbs
+//! (pretrain/finetune/evaluate), and the rust-native Figure-2a toy.
+
+pub mod experiment;
+pub mod sched;
+pub mod toy;
+pub mod trainer;
+
+pub use experiment::{evaluate, finetune, pretrain, RunConfig, RunResult, TaskFamily};
+pub use sched::LrSchedule;
+pub use trainer::Trainer;

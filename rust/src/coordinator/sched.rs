@@ -1,0 +1,73 @@
+//! Learning-rate schedule: cosine annealing with linear warmup — the
+//! paper's Alpaca recipe (warmup ratio 0.03, cosine decay, no weight
+//! decay; weight decay lives in the L2 AdamW which is set to 0).
+
+/// Cosine schedule with linear warmup.
+#[derive(Clone, Copy, Debug)]
+pub struct LrSchedule {
+    pub peak_lr: f64,
+    pub total_steps: usize,
+    pub warmup_steps: usize,
+    /// Final lr as a fraction of peak (paper decays to ~0).
+    pub min_ratio: f64,
+}
+
+impl LrSchedule {
+    /// The paper's recipe: warmup_ratio 0.03, decay to 0.
+    pub fn alpaca(peak_lr: f64, total_steps: usize) -> LrSchedule {
+        LrSchedule {
+            peak_lr,
+            total_steps,
+            warmup_steps: ((total_steps as f64) * 0.03).ceil() as usize,
+            min_ratio: 0.0,
+        }
+    }
+
+    /// LR at a 1-based step index.
+    pub fn at(&self, step: usize) -> f64 {
+        if self.total_steps == 0 {
+            return self.peak_lr;
+        }
+        if step <= self.warmup_steps && self.warmup_steps > 0 {
+            return self.peak_lr * step as f64 / self.warmup_steps as f64;
+        }
+        let progress = (step - self.warmup_steps) as f64
+            / (self.total_steps - self.warmup_steps).max(1) as f64;
+        let progress = progress.clamp(0.0, 1.0);
+        let cos = 0.5 * (1.0 + (std::f64::consts::PI * progress).cos());
+        self.peak_lr * (self.min_ratio + (1.0 - self.min_ratio) * cos)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warmup_rises_then_cosine_falls() {
+        let s = LrSchedule::alpaca(1e-3, 100);
+        assert_eq!(s.warmup_steps, 3);
+        assert!(s.at(1) < s.at(2) && s.at(2) < s.at(3));
+        assert!((s.at(3) - 1e-3).abs() < 1e-12);
+        assert!(s.at(50) < s.at(3));
+        assert!(s.at(100) < 1e-5);
+    }
+
+    #[test]
+    fn monotone_decay_after_warmup() {
+        let s = LrSchedule::alpaca(2e-5, 1000);
+        let mut prev = f64::INFINITY;
+        for step in (s.warmup_steps..=1000).step_by(50) {
+            let lr = s.at(step.max(1));
+            assert!(lr <= prev + 1e-15);
+            prev = lr;
+        }
+    }
+
+    #[test]
+    fn zero_total_steps_is_constant() {
+        let s = LrSchedule { peak_lr: 1e-4, total_steps: 0, warmup_steps: 0, min_ratio: 0.0 };
+        assert_eq!(s.at(1), 1e-4);
+        assert_eq!(s.at(999), 1e-4);
+    }
+}

@@ -1,0 +1,217 @@
+//! The training-loop driver: executes AOT-compiled train-step artifacts
+//! through PJRT, owns the (trainable, m, v) state, applies the LR
+//! schedule, and streams metrics. Python is never on this path.
+
+use super::sched::LrSchedule;
+use crate::data::Batch;
+use crate::metrics::StepMetrics;
+use crate::model::params::{ParamStore, Tensor};
+use crate::model::TrainState;
+use crate::runtime::{lit_i32, lit_scalar_f32, scalar_f32, Artifact, Manifest, Runtime};
+use crate::util::timer::Timer;
+use anyhow::{Context, Result};
+use std::sync::Arc;
+
+/// A live decoder fine-tuning session bound to one train artifact.
+pub struct Trainer<'rt> {
+    rt: &'rt Runtime,
+    exe: Arc<xla::PjRtLoadedExecutable>,
+    art: Artifact,
+    /// Frozen parameters marshalled once (hot-path optimization: the
+    /// frozen block dominates input bytes and never changes).
+    frozen_lits: Vec<xla::Literal>,
+    pub state: TrainState,
+    pub sched: LrSchedule,
+    pub history: Vec<StepMetrics>,
+    /// Rust-side overhead (marshalling etc.) accumulated for §Perf.
+    pub overhead_s: f64,
+    /// Total step wall time accumulated.
+    pub total_s: f64,
+}
+
+impl<'rt> Trainer<'rt> {
+    /// Bind a train state to its artifact. Validates that the state's
+    /// tensors match the manifest shapes exactly.
+    pub fn new(
+        rt: &'rt Runtime,
+        manifest: &Manifest,
+        artifact_name: &str,
+        state: TrainState,
+        sched: LrSchedule,
+    ) -> Result<Trainer<'rt>> {
+        let art = manifest.get(artifact_name)?.clone();
+        anyhow::ensure!(
+            art.kind == "train" || art.kind == "encoder_train",
+            "artifact '{artifact_name}' is not a train step (kind={})",
+            art.kind
+        );
+        validate_state(&art, &state)?;
+        let exe = rt.load(artifact_name, &art.file)?;
+        let frozen_lits = marshal(&state.frozen, &art.frozen_names)?;
+        Ok(Trainer { rt, exe, art, frozen_lits, state, sched, history: Vec::new(), overhead_s: 0.0, total_s: 0.0 })
+    }
+
+    pub fn artifact(&self) -> &Artifact {
+        &self.art
+    }
+
+    /// Run one optimizer step on a decoder batch.
+    pub fn step(&mut self, batch: &Batch) -> Result<StepMetrics> {
+        anyhow::ensure!(self.art.kind == "train", "use step_encoder for encoder artifacts");
+        let total = Timer::start();
+        let t0 = Timer::start();
+        let b = self.art.batch as i64;
+        let t = self.art.seq_len as i64;
+        anyhow::ensure!(
+            batch.batch == self.art.batch && batch.seq_len == self.art.seq_len,
+            "batch {}x{} vs artifact {}x{}",
+            batch.batch,
+            batch.seq_len,
+            self.art.batch,
+            self.art.seq_len
+        );
+        let step_no = self.state.step + 1;
+        let lr = self.sched.at(step_no) as f32;
+
+        let tokens = lit_i32(&batch.tokens, &[b, t])?;
+        let mask = crate::runtime::lit_f32(&batch.loss_mask, &[b, t])?;
+        let lr_lit = lit_scalar_f32(lr);
+        let step_lit = lit_scalar_f32(step_no as f32);
+
+        let train_lits = marshal(&self.state.trainable, &self.art.trainable_names)?;
+        let m_lits = marshal(&self.state.m, &self.art.trainable_names)?;
+        let v_lits = marshal(&self.state.v, &self.art.trainable_names)?;
+
+        let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(self.art.args.len());
+        inputs.extend([&tokens, &mask, &lr_lit, &step_lit]);
+        inputs.extend(self.frozen_lits.iter());
+        inputs.extend(train_lits.iter());
+        inputs.extend(m_lits.iter());
+        inputs.extend(v_lits.iter());
+        anyhow::ensure!(inputs.len() == self.art.args.len(), "arg count mismatch");
+        let marshal_s = t0.secs();
+
+        let outs = self.rt.execute_refs(&self.exe, &inputs)?;
+
+        let t1 = Timer::start();
+        let loss = scalar_f32(&outs[0])?;
+        let grad_norm = scalar_f32(&outs[1])?;
+        self.unmarshal_state(&outs[2..])?;
+        self.state.step = step_no;
+        let unmarshal_s = t1.secs();
+
+        let metrics = StepMetrics {
+            step: step_no,
+            loss,
+            grad_norm,
+            lr,
+            step_time_s: total.secs(),
+        };
+        self.overhead_s += marshal_s + unmarshal_s;
+        self.total_s += metrics.step_time_s;
+        self.history.push(metrics.clone());
+        Ok(metrics)
+    }
+
+    /// Run one optimizer step on an encoder (NLU) batch.
+    pub fn step_encoder(
+        &mut self,
+        tokens: &[i32],
+        attn_mask: &[f32],
+        labels: &[i32],
+    ) -> Result<StepMetrics> {
+        anyhow::ensure!(self.art.kind == "encoder_train", "not an encoder artifact");
+        let total = Timer::start();
+        let b = self.art.batch as i64;
+        let t = self.art.seq_len as i64;
+        let step_no = self.state.step + 1;
+        let lr = self.sched.at(step_no) as f32;
+
+        let tokens = lit_i32(tokens, &[b, t])?;
+        let amask = crate::runtime::lit_f32(attn_mask, &[b, t])?;
+        let labels = lit_i32(labels, &[b])?;
+        let lr_lit = lit_scalar_f32(lr);
+        let step_lit = lit_scalar_f32(step_no as f32);
+
+        let train_lits = marshal(&self.state.trainable, &self.art.trainable_names)?;
+        let m_lits = marshal(&self.state.m, &self.art.trainable_names)?;
+        let v_lits = marshal(&self.state.v, &self.art.trainable_names)?;
+
+        let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(self.art.args.len());
+        inputs.extend([&tokens, &amask, &labels, &lr_lit, &step_lit]);
+        inputs.extend(self.frozen_lits.iter());
+        inputs.extend(train_lits.iter());
+        inputs.extend(m_lits.iter());
+        inputs.extend(v_lits.iter());
+        anyhow::ensure!(inputs.len() == self.art.args.len(), "arg count mismatch");
+
+        let outs = self.rt.execute_refs(&self.exe, &inputs)?;
+        let loss = scalar_f32(&outs[0])?;
+        let grad_norm = scalar_f32(&outs[1])?;
+        self.unmarshal_state(&outs[2..])?;
+        self.state.step = step_no;
+
+        let metrics = StepMetrics { step: step_no, loss, grad_norm, lr, step_time_s: total.secs() };
+        self.total_s += metrics.step_time_s;
+        self.history.push(metrics.clone());
+        Ok(metrics)
+    }
+
+    /// Write updated trainable/m/v tensors back from artifact outputs
+    /// (outputs[0..] = trainables, then m, then v, in manifest order).
+    fn unmarshal_state(&mut self, outs: &[xla::Literal]) -> Result<()> {
+        let names = self.art.trainable_names.clone();
+        let nt = names.len();
+        anyhow::ensure!(outs.len() == 3 * nt, "expected {} outputs, got {}", 3 * nt, outs.len());
+        for (i, name) in names.iter().enumerate() {
+            let shape = self.state.trainable[name].shape.clone();
+            self.state.trainable.insert(name.clone(), Tensor::from_literal(&outs[i], &shape)?);
+            self.state.m.insert(name.clone(), Tensor::from_literal(&outs[nt + i], &shape)?);
+            self.state.v.insert(name.clone(), Tensor::from_literal(&outs[2 * nt + i], &shape)?);
+        }
+        Ok(())
+    }
+
+    /// Mean loss over the last `n` recorded steps.
+    pub fn recent_loss(&self, n: usize) -> f32 {
+        let tail = &self.history[self.history.len().saturating_sub(n)..];
+        if tail.is_empty() {
+            return f32::NAN;
+        }
+        tail.iter().map(|m| m.loss).sum::<f32>() / tail.len() as f32
+    }
+}
+
+fn marshal(store: &ParamStore, names: &[String]) -> Result<Vec<xla::Literal>> {
+    crate::model::params::to_literals(store, names)
+}
+
+fn validate_state(art: &Artifact, state: &TrainState) -> Result<()> {
+    let by_name: std::collections::BTreeMap<&str, &[usize]> =
+        art.args.iter().map(|a| (a.name.as_str(), a.shape.as_slice())).collect();
+    for name in &art.frozen_names {
+        let t = state
+            .frozen
+            .get(name)
+            .with_context(|| format!("state missing frozen '{name}'"))?;
+        anyhow::ensure!(
+            by_name[name.as_str()] == t.shape.as_slice(),
+            "frozen '{name}': state {:?} vs artifact {:?}",
+            t.shape,
+            by_name[name.as_str()]
+        );
+    }
+    for name in &art.trainable_names {
+        let t = state
+            .trainable
+            .get(name)
+            .with_context(|| format!("state missing trainable '{name}'"))?;
+        anyhow::ensure!(
+            by_name[name.as_str()] == t.shape.as_slice(),
+            "trainable '{name}': state {:?} vs artifact {:?}",
+            t.shape,
+            by_name[name.as_str()]
+        );
+    }
+    Ok(())
+}

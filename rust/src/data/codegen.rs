@@ -1,0 +1,124 @@
+//! Synthetic "coding" task family — the CodeFeedback/HumanEval stand-in
+//! (DESIGN.md §3): string/sequence transformation programs described in
+//! words, answered with the transformed output. Scored by exact
+//! functional match, mirroring HumanEval's pass@1-style binary scoring.
+
+use super::tokenizer::Example;
+use crate::util::rng::Rng;
+
+/// One code-style task with its expected output.
+#[derive(Clone, Debug)]
+pub struct CodeTask {
+    pub example: Example,
+    pub expected: String,
+}
+
+const WORDS: [&str; 10] = [
+    "cat", "dog", "sun", "map", "key", "box", "jar", "log", "net", "pin",
+];
+
+/// Generate a single task.
+pub fn gen_task(rng: &mut Rng) -> CodeTask {
+    match rng.below(5) {
+        0 => {
+            let w = *rng.choice(&WORDS);
+            let out: String = w.chars().rev().collect();
+            CodeTask {
+                example: Example {
+                    prompt: format!("reverse('{w}')"),
+                    response: format!("-> {out}"),
+                },
+                expected: out,
+            }
+        }
+        1 => {
+            let w = *rng.choice(&WORDS);
+            let out = w.to_uppercase();
+            CodeTask {
+                example: Example {
+                    prompt: format!("upper('{w}')"),
+                    response: format!("-> {out}"),
+                },
+                expected: out,
+            }
+        }
+        2 => {
+            let a = *rng.choice(&WORDS);
+            let b = *rng.choice(&WORDS);
+            let out = format!("{a}{b}");
+            CodeTask {
+                example: Example {
+                    prompt: format!("concat('{a}','{b}')"),
+                    response: format!("-> {out}"),
+                },
+                expected: out,
+            }
+        }
+        3 => {
+            let w = *rng.choice(&WORDS);
+            let n = rng.range_i64(2, 3) as usize;
+            let out = w.repeat(n);
+            CodeTask {
+                example: Example {
+                    prompt: format!("repeat('{w}',{n})"),
+                    response: format!("-> {out}"),
+                },
+                expected: out,
+            }
+        }
+        _ => {
+            let w = *rng.choice(&WORDS);
+            let out = w.len().to_string();
+            CodeTask {
+                example: Example {
+                    prompt: format!("len('{w}')"),
+                    response: format!("-> {out}"),
+                },
+                expected: out,
+            }
+        }
+    }
+}
+
+pub fn gen_dataset(n: usize, seed: u64) -> Vec<CodeTask> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| gen_task(&mut rng)).collect()
+}
+
+/// Extract the model's answer from generated text: the token after "->".
+pub fn extract_output(text: &str) -> Option<String> {
+    let idx = text.find("->")?;
+    let tail = text[idx + 2..].trim();
+    let out: String = tail.chars().take_while(|c| !c.is_whitespace()).collect();
+    if out.is_empty() {
+        None
+    } else {
+        Some(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tasks_self_consistent() {
+        for t in gen_dataset(100, 5) {
+            assert_eq!(extract_output(&t.example.response).unwrap(), t.expected);
+        }
+    }
+
+    #[test]
+    fn covers_all_op_kinds() {
+        let ds = gen_dataset(200, 9);
+        for op in ["reverse", "upper", "concat", "repeat", "len"] {
+            assert!(ds.iter().any(|t| t.example.prompt.starts_with(op)), "missing {op}");
+        }
+    }
+
+    #[test]
+    fn extract_handles_noise() {
+        assert_eq!(extract_output("-> tac extra"), Some("tac".into()));
+        assert_eq!(extract_output("no arrow"), None);
+    }
+}

@@ -1,0 +1,82 @@
+//! Synthetic pre-training corpus.
+//!
+//! PiSSA's advantage depends on base weights having a realistic decaying
+//! singular spectrum — random Gaussian matrices would hide the effect
+//! (flat Marchenko–Pastur spectrum). We therefore *actually pre-train*
+//! the base models on this corpus (templated English + counting +
+//! arithmetic patterns) using the full-FT artifact, which produces
+//! weight matrices with dominant principal directions, like real LLMs.
+
+use super::tokenizer::Example;
+use crate::util::rng::Rng;
+
+const SUBJECTS: [&str; 10] =
+    ["the cat", "a dog", "the sun", "my friend", "the bird", "a child", "the team", "the river", "the clock", "a farmer"];
+const VERBS: [&str; 8] = ["sees", "likes", "finds", "makes", "takes", "keeps", "moves", "holds"];
+const OBJECTS: [&str; 10] =
+    ["the ball", "a tree", "the road", "a stone", "the light", "a song", "the door", "a boat", "the hill", "a star"];
+
+/// One pre-training line (prompt empty: loss over the whole text).
+pub fn gen_line(rng: &mut Rng) -> Example {
+    match rng.below(4) {
+        0 => {
+            // simple SVO sentences, chained
+            let n = 1 + rng.below(3);
+            let text: Vec<String> = (0..n)
+                .map(|_| {
+                    format!("{} {} {}", rng.choice(&SUBJECTS), rng.choice(&VERBS), rng.choice(&OBJECTS))
+                })
+                .collect();
+            Example { prompt: String::new(), response: text.join(". ") }
+        }
+        1 => {
+            // counting patterns
+            let start = rng.range_i64(0, 20);
+            let step = rng.range_i64(1, 5);
+            let seq: Vec<String> = (0..6).map(|i| (start + i * step).to_string()).collect();
+            Example { prompt: String::new(), response: seq.join(" ") }
+        }
+        2 => {
+            // arithmetic facts
+            let a = rng.range_i64(0, 20);
+            let b = rng.range_i64(0, 20);
+            Example { prompt: String::new(), response: format!("{a} + {b} = {}", a + b) }
+        }
+        _ => {
+            // copy/echo patterns (teaches induction)
+            let w = rng.choice(&OBJECTS).to_string();
+            Example { prompt: String::new(), response: format!("say {w} again: {w}") }
+        }
+    }
+}
+
+pub fn gen_corpus(n: usize, seed: u64) -> Vec<Example> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| gen_line(&mut rng)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corpus_generates_varied_lines() {
+        let c = gen_corpus(100, 11);
+        assert_eq!(c.len(), 100);
+        let unique: std::collections::HashSet<&str> =
+            c.iter().map(|e| e.response.as_str()).collect();
+        assert!(unique.len() > 50, "too repetitive: {}", unique.len());
+    }
+
+    #[test]
+    fn arithmetic_lines_correct() {
+        for e in gen_corpus(500, 12) {
+            if let Some((lhs, rhs)) = e.response.split_once(" = ") {
+                if let Some((a, b)) = lhs.split_once(" + ") {
+                    let (a, b): (i64, i64) = (a.trim().parse().unwrap(), b.trim().parse().unwrap());
+                    assert_eq!(a + b, rhs.trim().parse::<i64>().unwrap());
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,222 @@
+//! Synthetic MetaMathQA/GSM8K-style math corpus.
+//!
+//! Substitution for the paper's MetaMathQA-395K training set and GSM8K /
+//! MATH eval sets (see DESIGN.md §3): templated grade-school word
+//! problems with 1–3 arithmetic steps, a chain-of-thought style solution,
+//! and a final "The answer is N" line. Loss is computed only on the
+//! response (Alpaca/QLoRA recipe). Eval is exact-match on the extracted
+//! final number — the same metric GSM8K uses.
+
+use super::tokenizer::Example;
+use crate::util::rng::Rng;
+
+const NAMES: [&str; 8] = ["Tom", "Ana", "Raj", "Mia", "Leo", "Zoe", "Sam", "Ivy"];
+const ITEMS: [&str; 8] = ["apples", "books", "coins", "cards", "shells", "pens", "stamps", "marbles"];
+
+/// Difficulty presets: number of reasoning steps and operand ranges.
+#[derive(Clone, Copy, Debug)]
+pub enum MathLevel {
+    /// 1-step add/sub (GSM8K-easy analog).
+    Easy,
+    /// 2-step with multiplication (GSM8K analog).
+    Std,
+    /// 3-step incl. division with exact quotients (MATH analog).
+    Hard,
+}
+
+/// One generated problem with its ground-truth answer.
+#[derive(Clone, Debug)]
+pub struct Problem {
+    pub example: Example,
+    pub answer: i64,
+}
+
+/// Generate a single problem.
+pub fn gen_problem(level: MathLevel, rng: &mut Rng) -> Problem {
+    // Templates are deliberately compact: prompt+response must fit the
+    // smallest artifact's seq_len (tiny: 64 byte-tokens incl. specials).
+    let name = *rng.choice(&NAMES);
+    let item = *rng.choice(&ITEMS);
+    match level {
+        MathLevel::Easy => {
+            // Small operand range: the eval split is disjoint by seed, so
+            // exact-match requires generalizing over ~19² combinations —
+            // learnable by the tiny reproduction-scale models, like GSM8K
+            // is learnable by 7B models.
+            let a = rng.range_i64(2, 20);
+            let b = rng.range_i64(2, 20);
+            if rng.below(2) == 0 {
+                let ans = a + b;
+                Problem {
+                    example: Example {
+                        prompt: format!("{name}: {a} {item}, +{b}. Total?"),
+                        response: format!("{a}+{b}={ans}. The answer is {ans}"),
+                    },
+                    answer: ans,
+                }
+            } else {
+                let (hi, lo) = if a >= b { (a, b) } else { (b, a) };
+                let ans = hi - lo;
+                Problem {
+                    example: Example {
+                        prompt: format!("{name}: {hi} {item}, -{lo}. Left?"),
+                        response: format!("{hi}-{lo}={ans}. The answer is {ans}"),
+                    },
+                    answer: ans,
+                }
+            }
+        }
+        MathLevel::Std => {
+            let boxes = rng.range_i64(2, 9);
+            let per = rng.range_i64(2, 9);
+            let extra = rng.range_i64(1, 20);
+            let prod = boxes * per;
+            let ans = prod + extra;
+            Problem {
+                example: Example {
+                    prompt: format!("{name}: {boxes} boxes of {per} {item}, +{extra}. Total?"),
+                    response: format!("{boxes}*{per}={prod}. {prod}+{extra}={ans}. The answer is {ans}"),
+                },
+                answer: ans,
+            }
+        }
+        MathLevel::Hard => {
+            let per = rng.range_i64(2, 9);
+            let groups = rng.range_i64(2, 9);
+            let total = per * groups;
+            let sold = rng.range_i64(1, per - 1);
+            let keep = per - sold;
+            let ans = keep * groups;
+            Problem {
+                example: Example {
+                    prompt: format!("{name}: {total} {item} in {groups} piles, -{sold} each. Left?"),
+                    response: format!("{total}/{groups}={per}. {per}-{sold}={keep}. {keep}*{groups}={ans}. The answer is {ans}"),
+                },
+                answer: ans,
+            }
+        }
+    }
+}
+
+/// Worst-case token length of a problem (prompt + response + specials);
+/// tested against every config's seq_len.
+pub fn max_tokens(level: MathLevel) -> usize {
+    match level {
+        MathLevel::Easy => 60,
+        MathLevel::Std => 78,
+        MathLevel::Hard => 92,
+    }
+}
+
+/// A deterministic dataset: `n` problems from a seed.
+pub fn gen_dataset(level: MathLevel, n: usize, seed: u64) -> Vec<Problem> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| gen_problem(level, &mut rng)).collect()
+}
+
+/// Extract the final numeric answer from generated text — the GSM8K
+/// protocol ("The answer is N", falling back to the last integer).
+pub fn extract_answer(text: &str) -> Option<i64> {
+    if let Some(idx) = text.rfind("answer is") {
+        let tail = &text[idx + "answer is".len()..];
+        if let Some(n) = first_int(tail) {
+            return Some(n);
+        }
+    }
+    last_int(text)
+}
+
+fn first_int(s: &str) -> Option<i64> {
+    let mut cur = String::new();
+    for c in s.chars() {
+        if c.is_ascii_digit() || (c == '-' && cur.is_empty()) {
+            cur.push(c);
+        } else if !cur.is_empty() {
+            break;
+        }
+    }
+    cur.parse().ok()
+}
+
+fn last_int(s: &str) -> Option<i64> {
+    let mut best: Option<i64> = None;
+    let mut cur = String::new();
+    for c in s.chars().chain(std::iter::once(' ')) {
+        if c.is_ascii_digit() {
+            cur.push(c);
+        } else {
+            if let Ok(n) = cur.parse() {
+                best = Some(n);
+            }
+            cur.clear();
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn problems_are_self_consistent() {
+        for level in [MathLevel::Easy, MathLevel::Std, MathLevel::Hard] {
+            let probs = gen_dataset(level, 200, 7);
+            for p in &probs {
+                // the response's stated answer must equal the ground truth
+                let got = extract_answer(&p.example.response).unwrap();
+                assert_eq!(got, p.answer, "{:?}", p.example);
+                assert!(p.answer >= 0);
+            }
+        }
+    }
+
+    #[test]
+    fn problems_fit_token_budget() {
+        // Truncated responses produce all-zero loss masks; every level's
+        // problems must fit its declared max_tokens.
+        for level in [MathLevel::Easy, MathLevel::Std, MathLevel::Hard] {
+            let budget = max_tokens(level);
+            for p in gen_dataset(level, 500, 13) {
+                let (toks, split) = p.example.tokenize();
+                assert!(
+                    toks.len() <= budget,
+                    "{level:?} problem has {} tokens > {budget}: {:?}",
+                    toks.len(),
+                    p.example
+                );
+                assert!(split < toks.len());
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = gen_dataset(MathLevel::Std, 10, 42);
+        let b = gen_dataset(MathLevel::Std, 10, 42);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.example.prompt, y.example.prompt);
+        }
+        let c = gen_dataset(MathLevel::Std, 10, 43);
+        assert!(a.iter().zip(&c).any(|(x, y)| x.example.prompt != y.example.prompt));
+    }
+
+    #[test]
+    fn extract_answer_variants() {
+        assert_eq!(extract_answer("blah The answer is 42"), Some(42));
+        assert_eq!(extract_answer("3 + 4 = 7. The answer is 7"), Some(7));
+        assert_eq!(extract_answer("result: 13"), Some(13));
+        assert_eq!(extract_answer("no numbers here"), None);
+        // prefers the "answer is" marker over the last int
+        assert_eq!(extract_answer("The answer is 5. (confidence 99)"), Some(5));
+    }
+
+    #[test]
+    fn hard_problems_divide_exactly() {
+        for p in gen_dataset(MathLevel::Hard, 100, 3) {
+            // the template guarantees exact division; re-derive from text
+            assert!(p.answer >= 0);
+            assert!(p.example.response.contains("/"));
+        }
+    }
+}

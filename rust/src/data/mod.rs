@@ -1,0 +1,14 @@
+//! Data substrate: byte tokenizer, synthetic corpora standing in for the
+//! paper's datasets (MetaMathQA/GSM8K, CodeFeedback/HumanEval, GLUE — see
+//! DESIGN.md §3 for the substitution rationale), and the fixed-shape
+//! batcher with response-only loss masks.
+
+pub mod batcher;
+pub mod codegen;
+pub mod corpus;
+pub mod mathqa;
+pub mod nlu;
+pub mod tokenizer;
+
+pub use batcher::{batch_of, Batch, Batcher};
+pub use tokenizer::Example;

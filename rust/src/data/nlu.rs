@@ -1,0 +1,213 @@
+//! Synthetic GLUE-like NLU suite — 8 tasks mirroring Table 2's structure
+//! (2 single-sentence classification, 5 pairwise classification, 1
+//! similarity regression), each with a distinct learnable signal so the
+//! adapter strategies separate measurably.
+
+use super::tokenizer::encode;
+use crate::util::rng::Rng;
+
+/// Task descriptors matching the paper's GLUE columns.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NluTask {
+    /// 3-class entailment (MNLI analog).
+    Mnli,
+    /// binary sentiment (SST-2 analog).
+    Sst2,
+    /// binary paraphrase (MRPC analog).
+    Mrpc,
+    /// binary acceptability (CoLA analog, scored with Matthews corr).
+    Cola,
+    /// binary QA-entailment (QNLI analog).
+    Qnli,
+    /// binary question-pair (QQP analog).
+    Qqp,
+    /// binary entailment, small data (RTE analog).
+    Rte,
+    /// similarity regression in [0, 5] (STS-B analog, Pearson-scored).
+    Stsb,
+}
+
+pub const ALL_TASKS: [NluTask; 8] = [
+    NluTask::Mnli,
+    NluTask::Sst2,
+    NluTask::Mrpc,
+    NluTask::Cola,
+    NluTask::Qnli,
+    NluTask::Qqp,
+    NluTask::Rte,
+    NluTask::Stsb,
+];
+
+impl NluTask {
+    pub fn name(&self) -> &'static str {
+        match self {
+            NluTask::Mnli => "MNLI",
+            NluTask::Sst2 => "SST-2",
+            NluTask::Mrpc => "MRPC",
+            NluTask::Cola => "CoLA",
+            NluTask::Qnli => "QNLI",
+            NluTask::Qqp => "QQP",
+            NluTask::Rte => "RTE",
+            NluTask::Stsb => "STS-B",
+        }
+    }
+    pub fn n_classes(&self) -> usize {
+        match self {
+            NluTask::Mnli => 3,
+            NluTask::Stsb => 1, // regression
+            _ => 2,
+        }
+    }
+    pub fn regression(&self) -> bool {
+        matches!(self, NluTask::Stsb)
+    }
+    /// Training-set size (RTE is deliberately small, like the real task).
+    pub fn train_size(&self) -> usize {
+        match self {
+            NluTask::Rte => 400,
+            NluTask::Mnli | NluTask::Qqp => 2400,
+            _ => 1200,
+        }
+    }
+}
+
+/// A tokenized NLU example.
+#[derive(Clone, Debug)]
+pub struct NluExample {
+    pub tokens: Vec<i32>,
+    /// class id, or scaled similarity for STS-B (stored as f32 in label_f).
+    pub label: i32,
+    pub label_f: f32,
+}
+
+const POS_WORDS: [&str; 6] = ["great", "happy", "bright", "calm", "fresh", "kind"];
+const NEG_WORDS: [&str; 6] = ["awful", "sad", "dark", "angry", "stale", "cruel"];
+const NOUNS: [&str; 8] = ["film", "day", "meal", "song", "game", "trip", "book", "talk"];
+
+fn sentence(words: &[&str], rng: &mut Rng) -> String {
+    format!("the {} was {}", *rng.choice(&NOUNS), *rng.choice(words))
+}
+
+/// Generate one example for a task. The signals are deliberately simple
+/// (lexical overlap / sentiment words / length cues) — enough structure
+/// for fine-tuning to matter while keeping eval deterministic.
+pub fn gen_example(task: NluTask, rng: &mut Rng) -> NluExample {
+    match task {
+        NluTask::Sst2 => {
+            let pos = rng.below(2) == 1;
+            let s = sentence(if pos { &POS_WORDS } else { &NEG_WORDS }, rng);
+            NluExample { tokens: encode(&s), label: pos as i32, label_f: pos as i32 as f32 }
+        }
+        NluTask::Cola => {
+            // acceptable = subject-verb-object order; unacceptable = scrambled
+            let n = *rng.choice(&NOUNS);
+            let ok = rng.below(2) == 1;
+            let s = if ok { format!("she read the {n} today") } else { format!("the read {n} she today") };
+            NluExample { tokens: encode(&s), label: ok as i32, label_f: ok as i32 as f32 }
+        }
+        NluTask::Mnli => {
+            let n = *rng.choice(&NOUNS);
+            let label = rng.below(3) as i32; // 0=entail 1=neutral 2=contradict
+            let premise = format!("everyone liked the {n}");
+            let hypothesis = match label {
+                0 => format!("the {n} was liked"),
+                1 => format!("the {n} was long"),
+                _ => format!("nobody liked the {n}"),
+            };
+            NluExample {
+                tokens: encode(&format!("{premise} | {hypothesis}")),
+                label,
+                label_f: label as f32,
+            }
+        }
+        NluTask::Mrpc | NluTask::Qqp => {
+            let a = sentence(&POS_WORDS, rng);
+            let same = rng.below(2) == 1;
+            let b = if same { a.clone() } else { sentence(&NEG_WORDS, rng) };
+            NluExample {
+                tokens: encode(&format!("{a} | {b}")),
+                label: same as i32,
+                label_f: same as i32 as f32,
+            }
+        }
+        NluTask::Qnli | NluTask::Rte => {
+            let n = *rng.choice(&NOUNS);
+            let ent = rng.below(2) == 1;
+            let q = format!("was the {n} good?");
+            let ctx = if ent {
+                format!("the {n} was {}", *rng.choice(&POS_WORDS))
+            } else {
+                format!("the {} was {}", *rng.choice(&NOUNS), *rng.choice(&NEG_WORDS))
+            };
+            NluExample {
+                tokens: encode(&format!("{q} | {ctx}")),
+                label: ent as i32,
+                label_f: ent as i32 as f32,
+            }
+        }
+        NluTask::Stsb => {
+            // similarity = word-overlap fraction scaled to [0,5]
+            let a = sentence(&POS_WORDS, rng);
+            let overlap = rng.below(3); // 0,1,2 shared clauses
+            let b = match overlap {
+                2 => a.clone(),
+                1 => {
+                    let mut parts: Vec<&str> = a.split(' ').collect();
+                    let len = parts.len();
+                    parts[len - 1] = "fine";
+                    parts.join(" ")
+                }
+                _ => sentence(&NEG_WORDS, rng),
+            };
+            let sim = overlap as f32 * 2.5;
+            NluExample {
+                tokens: encode(&format!("{a} | {b}")),
+                label: overlap as i32,
+                label_f: sim,
+            }
+        }
+    }
+}
+
+pub fn gen_dataset(task: NluTask, n: usize, seed: u64) -> Vec<NluExample> {
+    let mut rng = Rng::new(seed ^ (task as u64) << 32);
+    (0..n).map(|_| gen_example(task, &mut rng)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_tasks_generate() {
+        for task in ALL_TASKS {
+            let ds = gen_dataset(task, 50, 1);
+            assert_eq!(ds.len(), 50);
+            for ex in &ds {
+                assert!(!ex.tokens.is_empty());
+                assert!((ex.label as usize) < task.n_classes().max(3));
+            }
+        }
+    }
+
+    #[test]
+    fn labels_balanced_roughly() {
+        let ds = gen_dataset(NluTask::Sst2, 1000, 2);
+        let pos = ds.iter().filter(|e| e.label == 1).count();
+        assert!(pos > 350 && pos < 650, "pos={pos}");
+    }
+
+    #[test]
+    fn stsb_is_regression() {
+        assert!(NluTask::Stsb.regression());
+        let ds = gen_dataset(NluTask::Stsb, 100, 3);
+        assert!(ds.iter().any(|e| e.label_f == 5.0));
+        assert!(ds.iter().all(|e| (0.0..=5.0).contains(&e.label_f)));
+    }
+
+    #[test]
+    fn task_names_match_paper() {
+        let names: Vec<&str> = ALL_TASKS.iter().map(|t| t.name()).collect();
+        assert_eq!(names, vec!["MNLI", "SST-2", "MRPC", "CoLA", "QNLI", "QQP", "RTE", "STS-B"]);
+    }
+}

@@ -1,0 +1,102 @@
+//! Byte-level tokenizer with special tokens — vocab 320 matches the AOT
+//! model configs (256 bytes + specials, padded for alignment).
+//!
+//! The paper fine-tunes on instruction-following data with response-only
+//! loss; the specials mark the prompt/response boundary so the batcher
+//! can build loss masks without re-parsing text.
+
+/// Special token ids.
+pub const PAD: i32 = 0;
+pub const BOS: i32 = 1;
+pub const EOS: i32 = 2;
+/// Separates prompt from response ("### Response:" in Alpaca terms).
+pub const SEP: i32 = 3;
+/// First byte id; byte b encodes as BYTE_BASE + b.
+pub const BYTE_BASE: i32 = 8;
+/// Total vocabulary (must match configs.py vocab).
+pub const VOCAB: usize = 320;
+
+/// Encode a string as byte tokens (no specials).
+pub fn encode(s: &str) -> Vec<i32> {
+    s.bytes().map(|b| BYTE_BASE + b as i32).collect()
+}
+
+/// Decode token ids back to a string; specials and out-of-range ids are
+/// dropped (lossy by design — generation may emit PAD/EOS).
+pub fn decode(tokens: &[i32]) -> String {
+    let bytes: Vec<u8> = tokens
+        .iter()
+        .filter_map(|&t| {
+            let b = t - BYTE_BASE;
+            if (0..256).contains(&b) {
+                Some(b as u8)
+            } else {
+                None
+            }
+        })
+        .collect();
+    String::from_utf8_lossy(&bytes).into_owned()
+}
+
+/// One training example: prompt + response with the boundary marked.
+#[derive(Clone, Debug)]
+pub struct Example {
+    pub prompt: String,
+    pub response: String,
+}
+
+impl Example {
+    /// Token sequence `BOS prompt SEP response EOS` and the index of the
+    /// first response token (= loss-mask start).
+    pub fn tokenize(&self) -> (Vec<i32>, usize) {
+        let mut toks = vec![BOS];
+        toks.extend(encode(&self.prompt));
+        toks.push(SEP);
+        let split = toks.len();
+        toks.extend(encode(&self.response));
+        toks.push(EOS);
+        (toks, split)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let s = "Q: 3 + 5 = ? A: 8";
+        assert_eq!(decode(&encode(s)), s);
+    }
+
+    #[test]
+    fn roundtrip_utf8() {
+        let s = "héllo → 世界";
+        assert_eq!(decode(&encode(s)), s);
+    }
+
+    #[test]
+    fn specials_dropped_on_decode() {
+        let mut toks = vec![BOS, PAD];
+        toks.extend(encode("x"));
+        toks.push(EOS);
+        assert_eq!(decode(&toks), "x");
+    }
+
+    #[test]
+    fn tokenize_marks_response_start() {
+        let ex = Example { prompt: "ab".into(), response: "cd".into() };
+        let (toks, split) = ex.tokenize();
+        assert_eq!(toks.len(), 1 + 2 + 1 + 2 + 1);
+        assert_eq!(toks[0], BOS);
+        assert_eq!(toks[3], SEP);
+        assert_eq!(split, 4);
+        assert_eq!(decode(&toks[split..]), "cd");
+    }
+
+    #[test]
+    fn all_ids_in_vocab() {
+        let (toks, _) = Example { prompt: "þÿ".into(), response: "!".into() }.tokenize();
+        assert!(toks.iter().all(|&t| (t as usize) < VOCAB));
+    }
+}

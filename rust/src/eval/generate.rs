@@ -1,0 +1,157 @@
+//! Greedy decoding over the logits artifact, plus scored evaluation on
+//! the synthetic GSM8K/HumanEval-analog suites.
+//!
+//! Decoding recomputes the full forward per emitted token (no KV cache —
+//! the artifacts are fixed-shape [B, T] and the models are tiny; the
+//! O(T²) cost is measured in §Perf and irrelevant at this scale).
+
+use crate::data::mathqa::{extract_answer, Problem};
+use crate::data::codegen::{extract_output, CodeTask};
+use crate::data::tokenizer::{decode, BOS, EOS, PAD, SEP};
+use crate::data::tokenizer::encode;
+use crate::model::params::to_literals;
+use crate::model::TrainState;
+use crate::runtime::{lit_i32, vec_f32, Artifact, Manifest, Runtime};
+use anyhow::Result;
+use std::sync::Arc;
+
+/// A generation session bound to a logits artifact.
+pub struct Generator<'rt> {
+    rt: &'rt Runtime,
+    exe: Arc<xla::PjRtLoadedExecutable>,
+    art: Artifact,
+    param_lits: Vec<xla::Literal>,
+}
+
+impl<'rt> Generator<'rt> {
+    pub fn new(
+        rt: &'rt Runtime,
+        manifest: &Manifest,
+        artifact_name: &str,
+        state: &TrainState,
+    ) -> Result<Generator<'rt>> {
+        let art = manifest.get(artifact_name)?.clone();
+        anyhow::ensure!(art.kind == "logits", "artifact '{artifact_name}' is not a logits fn");
+        let exe = rt.load(artifact_name, &art.file)?;
+        // logits artifacts take frozen then trainable params after tokens.
+        let mut param_lits = to_literals(&state.frozen, &art.frozen_names)?;
+        param_lits.extend(to_literals(&state.trainable, &art.trainable_names)?);
+        Ok(Generator { rt, exe, art, param_lits })
+    }
+
+    pub fn batch(&self) -> usize {
+        self.art.batch
+    }
+    pub fn seq_len(&self) -> usize {
+        self.art.seq_len
+    }
+
+    /// One forward pass: tokens [B, T] -> logits [B, T, V] (flat).
+    pub fn logits(&self, tokens: &[i32]) -> Result<Vec<f32>> {
+        let b = self.art.batch as i64;
+        let t = self.art.seq_len as i64;
+        let tok_lit = lit_i32(tokens, &[b, t])?;
+        let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(1 + self.param_lits.len());
+        inputs.push(&tok_lit);
+        inputs.extend(self.param_lits.iter());
+        let outs = self.rt.execute_refs(&self.exe, &inputs)?;
+        vec_f32(&outs[0])
+    }
+
+    /// Greedy-decode continuations for a batch of prompts. Each prompt is
+    /// laid out as `BOS prompt SEP`; generation continues until EOS or the
+    /// sequence fills. Returns the decoded response strings.
+    pub fn generate(&self, prompts: &[String], max_new: usize) -> Result<Vec<String>> {
+        let bsz = self.art.batch;
+        let t = self.art.seq_len;
+        let v = self.art.vocab;
+        anyhow::ensure!(prompts.len() <= bsz, "{} prompts > batch {bsz}", prompts.len());
+
+        let mut tokens = vec![PAD; bsz * t];
+        let mut lens = vec![0usize; bsz];
+        for (row, p) in prompts.iter().enumerate() {
+            let mut toks = vec![BOS];
+            toks.extend(encode(p));
+            toks.push(SEP);
+            toks.truncate(t - 1); // leave room to generate
+            lens[row] = toks.len();
+            tokens[row * t..row * t + toks.len()].copy_from_slice(&toks);
+        }
+        let mut done = vec![false; bsz];
+        for row in prompts.len()..bsz {
+            done[row] = true; // unused rows
+        }
+
+        for _ in 0..max_new {
+            if done.iter().all(|&d| d) {
+                break;
+            }
+            let logits = self.logits(&tokens)?;
+            for row in 0..prompts.len() {
+                if done[row] || lens[row] >= t {
+                    done[row] = true;
+                    continue;
+                }
+                // logits for the last real position predict the next token
+                let pos = lens[row] - 1;
+                let off = (row * t + pos) * v;
+                let slice = &logits[off..off + v];
+                let mut best = 0usize;
+                let mut best_v = f32::NEG_INFINITY;
+                for (i, &x) in slice.iter().enumerate() {
+                    if x > best_v {
+                        best_v = x;
+                        best = i;
+                    }
+                }
+                let tok = best as i32;
+                tokens[row * t + lens[row]] = tok;
+                lens[row] += 1;
+                if tok == EOS {
+                    done[row] = true;
+                }
+            }
+        }
+
+        let mut out = Vec::with_capacity(prompts.len());
+        for (row, _) in prompts.iter().enumerate() {
+            // response = tokens after the SEP
+            let row_toks = &tokens[row * t..row * t + lens[row]];
+            let sep_pos = row_toks.iter().position(|&x| x == SEP).unwrap_or(0);
+            out.push(decode(&row_toks[sep_pos + 1..]));
+        }
+        Ok(out)
+    }
+}
+
+/// Exact-match accuracy on math problems (GSM8K protocol).
+pub fn eval_math(gen: &Generator, problems: &[Problem], max_new: usize) -> Result<f64> {
+    let bsz = gen.batch();
+    let mut correct = 0usize;
+    for chunk in problems.chunks(bsz) {
+        let prompts: Vec<String> = chunk.iter().map(|p| p.example.prompt.clone()).collect();
+        let outs = gen.generate(&prompts, max_new)?;
+        for (p, o) in chunk.iter().zip(&outs) {
+            if extract_answer(o) == Some(p.answer) {
+                correct += 1;
+            }
+        }
+    }
+    Ok(correct as f64 / problems.len() as f64 * 100.0)
+}
+
+/// Exact functional match on code tasks (HumanEval-analog).
+pub fn eval_code(gen: &Generator, tasks: &[CodeTask], max_new: usize) -> Result<f64> {
+    let bsz = gen.batch();
+    let mut correct = 0usize;
+    for chunk in tasks.chunks(bsz) {
+        let prompts: Vec<String> = chunk.iter().map(|t| t.example.prompt.clone()).collect();
+        let outs = gen.generate(&prompts, max_new)?;
+        for (task, o) in chunk.iter().zip(&outs) {
+            if extract_output(o).as_deref() == Some(task.expected.as_str()) {
+                correct += 1;
+            }
+        }
+    }
+    Ok(correct as f64 / tasks.len() as f64 * 100.0)
+}

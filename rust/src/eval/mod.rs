@@ -1,0 +1,9 @@
+//! Evaluation: greedy decoding over logits artifacts, GSM8K-style
+//! exact-match math scoring, HumanEval-style code scoring, and the GLUE
+//! metric suite for the NLU encoder.
+
+pub mod generate;
+pub mod nlu_eval;
+
+pub use generate::{eval_code, eval_math, Generator};
+pub use nlu_eval::{score, NluScorer};

@@ -1,0 +1,127 @@
+//! NLU evaluation: run the encoder logits artifact over an eval set and
+//! compute the per-task GLUE metric (accuracy, Matthews for CoLA,
+//! Pearson for STS-B) — Table 2's columns.
+
+use crate::data::nlu::{NluExample, NluTask};
+use crate::data::tokenizer::PAD;
+use crate::metrics::{matthews, pearson};
+use crate::model::params::to_literals;
+use crate::model::TrainState;
+use crate::runtime::{lit_f32, lit_i32, vec_f32, Artifact, Manifest, Runtime};
+use anyhow::Result;
+use std::sync::Arc;
+
+/// Encoder scoring session.
+pub struct NluScorer<'rt> {
+    rt: &'rt Runtime,
+    exe: Arc<xla::PjRtLoadedExecutable>,
+    art: Artifact,
+    param_lits: Vec<xla::Literal>,
+    n_classes: usize,
+}
+
+impl<'rt> NluScorer<'rt> {
+    pub fn new(
+        rt: &'rt Runtime,
+        manifest: &Manifest,
+        artifact_name: &str,
+        state: &TrainState,
+        n_classes: usize,
+    ) -> Result<NluScorer<'rt>> {
+        let art = manifest.get(artifact_name)?.clone();
+        anyhow::ensure!(art.kind == "encoder_logits", "'{artifact_name}' is not an encoder logits fn");
+        let exe = rt.load(artifact_name, &art.file)?;
+        let mut param_lits = to_literals(&state.frozen, &art.frozen_names)?;
+        param_lits.extend(to_literals(&state.trainable, &art.trainable_names)?);
+        Ok(NluScorer { rt, exe, art, param_lits, n_classes })
+    }
+
+    /// Class logits for a [B, T] batch.
+    pub fn logits(&self, tokens: &[i32], attn_mask: &[f32]) -> Result<Vec<f32>> {
+        let b = self.art.batch as i64;
+        let t = self.art.seq_len as i64;
+        let tok = lit_i32(tokens, &[b, t])?;
+        let am = lit_f32(attn_mask, &[b, t])?;
+        let mut inputs: Vec<&xla::Literal> = vec![&tok, &am];
+        inputs.extend(self.param_lits.iter());
+        let outs = self.rt.execute_refs(&self.exe, &inputs)?;
+        vec_f32(&outs[0])
+    }
+
+    /// Pack NLU examples into fixed-shape batches (pad rows repeat the
+    /// last example; they are sliced off the predictions).
+    pub fn predict(&self, examples: &[NluExample]) -> Result<(Vec<i32>, Vec<f64>)> {
+        let b = self.art.batch;
+        let t = self.art.seq_len;
+        let nc = self.n_classes;
+        let mut preds = Vec::with_capacity(examples.len());
+        let mut scores = Vec::with_capacity(examples.len());
+        for chunk in examples.chunks(b) {
+            let mut tokens = vec![PAD; b * t];
+            let mut amask = vec![0.0f32; b * t];
+            for (row, ex) in chunk.iter().enumerate() {
+                let n = ex.tokens.len().min(t);
+                tokens[row * t..row * t + n].copy_from_slice(&ex.tokens[..n]);
+                for i in 0..n {
+                    amask[row * t + i] = 1.0;
+                }
+            }
+            let logits = self.logits(&tokens, &amask)?;
+            let out_c = self.art.outputs[0].shape[1];
+            for (row, _) in chunk.iter().enumerate() {
+                let slice = &logits[row * out_c..row * out_c + nc.max(1)];
+                let mut best = 0usize;
+                let mut best_v = f32::NEG_INFINITY;
+                for (i, &x) in slice.iter().enumerate() {
+                    if x > best_v {
+                        best_v = x;
+                        best = i;
+                    }
+                }
+                preds.push(best as i32);
+                scores.push(slice[0] as f64); // regression head = index 0
+            }
+        }
+        Ok((preds, scores))
+    }
+}
+
+/// Score predictions with the task's GLUE metric, in percent.
+pub fn score(task: NluTask, preds: &[i32], scores: &[f64], examples: &[NluExample]) -> f64 {
+    if task.regression() {
+        let labels: Vec<f64> = examples.iter().map(|e| e.label_f as f64).collect();
+        return pearson(scores, &labels) * 100.0;
+    }
+    if task == NluTask::Cola {
+        let labels: Vec<i32> = examples.iter().map(|e| e.label).collect();
+        return matthews(preds, &labels) * 100.0;
+    }
+    let correct = preds
+        .iter()
+        .zip(examples)
+        .filter(|(p, e)| **p == e.label)
+        .count();
+    correct as f64 / examples.len() as f64 * 100.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::nlu;
+
+    #[test]
+    fn score_accuracy_path() {
+        let ds = nlu::gen_dataset(NluTask::Sst2, 20, 1);
+        let preds: Vec<i32> = ds.iter().map(|e| e.label).collect();
+        let scores = vec![0.0; 20];
+        assert_eq!(score(NluTask::Sst2, &preds, &scores, &ds), 100.0);
+    }
+
+    #[test]
+    fn score_pearson_path() {
+        let ds = nlu::gen_dataset(NluTask::Stsb, 30, 2);
+        let scores: Vec<f64> = ds.iter().map(|e| e.label_f as f64).collect();
+        let preds = vec![0; 30];
+        assert!((score(NluTask::Stsb, &preds, &scores, &ds) - 100.0).abs() < 1e-9);
+    }
+}

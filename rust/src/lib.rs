@@ -1,0 +1,36 @@
+//! # PiSSA — Principal Singular values and Singular vectors Adaptation
+//!
+//! Full-system reproduction of *"PiSSA: Principal Singular Values and
+//! Singular Vectors Adaptation of Large Language Models"* (Meng, Wang,
+//! Zhang — NeurIPS 2024) as a three-layer rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the fine-tuning coordinator: adapter lifecycle
+//!   (PiSSA/LoRA/QPiSSA/LoftQ init, conversion, checkpoints), NF4
+//!   quantization, dense linear algebra (GEMM/QR/SVD/randomized SVD), the
+//!   synthetic data pipeline, the PJRT runtime that executes AOT-compiled
+//!   train/eval steps, and the experiment harnesses that regenerate every
+//!   table and figure of the paper.
+//! * **L2 (python/compile/model.py)** — the JAX transformer with
+//!   adapter-form linears, lowered once to HLO text by `make artifacts`.
+//! * **L1 (python/compile/kernels/)** — Pallas kernels for the fused
+//!   adapter matmul, NF4 quant/dequant, and the randomized-SVD range
+//!   finder, verified against pure-jnp oracles.
+//!
+//! Python never runs at training/serving time: the rust binary loads the
+//! HLO artifacts through the PJRT C API (`xla` crate) and owns the loop.
+
+pub mod adapter;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod linalg;
+pub mod metrics;
+pub mod model;
+pub mod quant;
+pub mod runtime;
+pub mod util;
+
+/// Crate version (mirrors Cargo.toml).
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

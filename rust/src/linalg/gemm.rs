@@ -1,0 +1,233 @@
+//! Blocked, packed, multithreaded SGEMM — the rust-side compute hot path.
+//!
+//! The coordinator uses this for adapter initialization (SVD power
+//! iterations are GEMM-bound), quantization-error analysis, the toy-MNIST
+//! experiment, and evaluation-side math. It is written to be auto-
+//! vectorizable: the inner loop is an 8-wide accumulator over a packed
+//! panel of B, i.e. a classic (MC×KC)·(KC×NR) micro-kernel layout without
+//! explicit SIMD intrinsics (portable, and LLVM vectorizes it well).
+//!
+//! Benchmarked and tuned in `benches/perf_micro.rs`; see EXPERIMENTS.md §Perf.
+
+use super::mat::Mat;
+use crate::util::par::par_rows_mut;
+
+/// Cache-blocking parameters (tuned on the image's CPU; see §Perf).
+const MC: usize = 64; // rows of A per macro-block
+const KC: usize = 256; // depth per macro-block
+const NR: usize = 8; // register tile width
+
+/// C = A · B. Panics on dimension mismatch.
+pub fn matmul(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols, b.rows, "matmul: {}x{} · {}x{}", a.rows, a.cols, b.rows, b.cols);
+    let mut c = Mat::zeros(a.rows, b.cols);
+    matmul_into(a, b, &mut c);
+    c
+}
+
+/// C = A · Bᵀ (B given row-major as the transposed operand).
+pub fn matmul_nt(a: &Mat, bt: &Mat) -> Mat {
+    assert_eq!(a.cols, bt.cols, "matmul_nt inner dim");
+    let (m, n, k) = (a.rows, bt.rows, a.cols);
+    let mut c = Mat::zeros(m, n);
+    // A·Bᵀ with both row-major means rows of A dot rows of Bᵀ: perfect
+    // locality already, no packing needed.
+    par_rows_mut(&mut c.data, m, n, 8, |lo, hi, chunk| {
+        for i in lo..hi {
+            let arow = a.row(i);
+            let crow = &mut chunk[(i - lo) * n..(i - lo + 1) * n];
+            for j in 0..n {
+                let brow = bt.row(j);
+                let mut acc = 0.0f32;
+                // 4-way unrolled reduction; LLVM vectorizes.
+                let mut t0 = 0.0f32;
+                let mut t1 = 0.0f32;
+                let mut t2 = 0.0f32;
+                let mut t3 = 0.0f32;
+                let chunks = k / 4;
+                for c4 in 0..chunks {
+                    let p = c4 * 4;
+                    t0 += arow[p] * brow[p];
+                    t1 += arow[p + 1] * brow[p + 1];
+                    t2 += arow[p + 2] * brow[p + 2];
+                    t3 += arow[p + 3] * brow[p + 3];
+                }
+                for p in chunks * 4..k {
+                    acc += arow[p] * brow[p];
+                }
+                crow[j] = acc + (t0 + t1) + (t2 + t3);
+            }
+        }
+    });
+    c
+}
+
+/// C = Aᵀ · B.
+pub fn matmul_tn(at: &Mat, b: &Mat) -> Mat {
+    assert_eq!(at.rows, b.rows, "matmul_tn inner dim");
+    let a = at.t();
+    matmul(&a, b)
+}
+
+/// C += alpha * A·B accumulated into an existing buffer.
+pub fn matmul_acc(a: &Mat, b: &Mat, alpha: f32, c: &mut Mat) {
+    assert_eq!(a.cols, b.rows);
+    assert_eq!((c.rows, c.cols), (a.rows, b.cols));
+    let prod = matmul(a, b);
+    for (ci, pi) in c.data.iter_mut().zip(&prod.data) {
+        *ci += alpha * pi;
+    }
+}
+
+/// Core: C = A · B with packing + parallel over row blocks of A.
+pub fn matmul_into(a: &Mat, b: &Mat, c: &mut Mat) {
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    assert_eq!((c.rows, c.cols), (m, n));
+    c.data.iter_mut().for_each(|x| *x = 0.0);
+    if m * n * k < 32 * 32 * 32 {
+        // Small case: naive triple loop, row-major friendly (ikj order).
+        for i in 0..m {
+            for p in 0..k {
+                let av = a.data[i * k + p];
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = &b.data[p * n..(p + 1) * n];
+                let crow = &mut c.data[i * n..(i + 1) * n];
+                for j in 0..n {
+                    crow[j] += av * brow[j];
+                }
+            }
+        }
+        return;
+    }
+
+    // Parallelize over row-blocks of C; each worker owns disjoint C rows.
+    par_rows_mut(&mut c.data, m, n, MC.min(16), |lo, hi, cchunk| {
+        for kb in (0..k).step_by(KC) {
+            let ke = (kb + KC).min(k);
+            for ib in (lo..hi).step_by(MC) {
+                let ie = (ib + MC).min(hi);
+                // Micro-kernel: for each row i, accumulate over the k-panel
+                // into C[i, :] with NR-wide strips (ikj order keeps B row
+                // access contiguous; the j-strip fits registers).
+                for i in ib..ie {
+                    let arow = &a.data[i * k..(i + 1) * k];
+                    let crow = &mut cchunk[(i - lo) * n..(i - lo + 1) * n];
+                    for p in kb..ke {
+                        let av = arow[p];
+                        let brow = &b.data[p * n..(p + 1) * n];
+                        // 8-wide strip-mined AXPY; LLVM vectorizes this.
+                        let strips = n / NR;
+                        for s in 0..strips {
+                            let j0 = s * NR;
+                            let cdst = &mut crow[j0..j0 + NR];
+                            let bsrc = &brow[j0..j0 + NR];
+                            for q in 0..NR {
+                                cdst[q] += av * bsrc[q];
+                            }
+                        }
+                        for j in strips * NR..n {
+                            crow[j] += av * brow[j];
+                        }
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// y = A·x for a vector x.
+pub fn matvec(a: &Mat, x: &[f32]) -> Vec<f32> {
+    assert_eq!(a.cols, x.len());
+    let mut y = vec![0.0f32; a.rows];
+    for i in 0..a.rows {
+        let row = a.row(i);
+        let mut acc = 0.0f32;
+        for (av, xv) in row.iter().zip(x) {
+            acc += av * xv;
+        }
+        y[i] = acc;
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn naive(a: &Mat, b: &Mat) -> Mat {
+        let mut c = Mat::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for j in 0..b.cols {
+                let mut acc = 0.0f64;
+                for p in 0..a.cols {
+                    acc += a[(i, p)] as f64 * b[(p, j)] as f64;
+                }
+                c[(i, j)] = acc as f32;
+            }
+        }
+        c
+    }
+
+    fn close(a: &Mat, b: &Mat, tol: f32) {
+        assert_eq!((a.rows, a.cols), (b.rows, b.cols));
+        for (x, y) in a.data.iter().zip(&b.data) {
+            assert!((x - y).abs() <= tol * (1.0 + x.abs().max(y.abs())), "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn matmul_matches_naive_various_shapes() {
+        let mut rng = Rng::new(2);
+        for &(m, k, n) in &[(1, 1, 1), (3, 5, 7), (17, 9, 33), (64, 64, 64), (100, 257, 65), (129, 70, 200)] {
+            let a = Mat::randn(m, k, 0.0, 1.0, &mut rng);
+            let b = Mat::randn(k, n, 0.0, 1.0, &mut rng);
+            close(&matmul(&a, &b), &naive(&a, &b), 1e-4);
+        }
+    }
+
+    #[test]
+    fn matmul_nt_tn_match() {
+        let mut rng = Rng::new(3);
+        let a = Mat::randn(23, 41, 0.0, 1.0, &mut rng);
+        let b = Mat::randn(41, 19, 0.0, 1.0, &mut rng);
+        let bt = b.t();
+        close(&matmul_nt(&a, &bt), &matmul(&a, &b), 1e-4);
+        let at = a.t();
+        close(&matmul_tn(&at, &b), &matmul(&a, &b), 1e-4);
+    }
+
+    #[test]
+    fn identity_is_noop() {
+        let mut rng = Rng::new(4);
+        let a = Mat::randn(40, 40, 0.0, 1.0, &mut rng);
+        close(&matmul(&a, &Mat::eye(40)), &a, 1e-6);
+        close(&matmul(&Mat::eye(40), &a), &a, 1e-6);
+    }
+
+    #[test]
+    fn acc_accumulates() {
+        let mut rng = Rng::new(5);
+        let a = Mat::randn(8, 8, 0.0, 1.0, &mut rng);
+        let b = Mat::randn(8, 8, 0.0, 1.0, &mut rng);
+        let mut c = Mat::zeros(8, 8);
+        matmul_acc(&a, &b, 1.0, &mut c);
+        matmul_acc(&a, &b, -1.0, &mut c);
+        assert!(c.fro() < 1e-5);
+    }
+
+    #[test]
+    fn matvec_matches() {
+        let mut rng = Rng::new(6);
+        let a = Mat::randn(12, 7, 0.0, 1.0, &mut rng);
+        let x: Vec<f32> = (0..7).map(|i| i as f32 * 0.5 - 1.0).collect();
+        let y = matvec(&a, &x);
+        let xm = Mat::from_vec(7, 1, x);
+        let ym = matmul(&a, &xm);
+        for i in 0..12 {
+            assert!((y[i] - ym[(i, 0)]).abs() < 1e-5);
+        }
+    }
+}

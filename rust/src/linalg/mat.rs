@@ -1,0 +1,265 @@
+//! Dense row-major f32 matrix type — the foundation every substrate
+//! (SVD, NF4 quantization, adapter init, the toy MLP, evaluation) builds on.
+
+use crate::util::rng::Rng;
+use std::fmt;
+
+/// Row-major dense matrix of f32.
+#[derive(Clone, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    /// Zero-filled matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Matrix from an existing buffer (must be rows*cols long).
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Mat {
+        assert_eq!(data.len(), rows * cols, "buffer size mismatch");
+        Mat { rows, cols, data }
+    }
+
+    /// Identity.
+    pub fn eye(n: usize) -> Mat {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// i.i.d. N(mean, std) entries.
+    pub fn randn(rows: usize, cols: usize, mean: f32, std: f32, rng: &mut Rng) -> Mat {
+        let mut m = Mat::zeros(rows, cols);
+        rng.fill_normal(&mut m.data, mean, std);
+        m
+    }
+
+    /// Build from a function of (row, col).
+    pub fn from_fn(rows: usize, cols: usize, f: impl Fn(usize, usize) -> f32) -> Mat {
+        let mut m = Mat::zeros(rows, cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                m.data[i * cols + j] = f(i, j);
+            }
+        }
+        m
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Column copy (rows are contiguous; columns are strided).
+    pub fn col(&self, j: usize) -> Vec<f32> {
+        (0..self.rows).map(|i| self.data[i * self.cols + j]).collect()
+    }
+
+    /// Transposed copy.
+    pub fn t(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        // Blocked transpose for cache friendliness on large matrices.
+        const B: usize = 32;
+        for ib in (0..self.rows).step_by(B) {
+            for jb in (0..self.cols).step_by(B) {
+                for i in ib..(ib + B).min(self.rows) {
+                    for j in jb..(jb + B).min(self.cols) {
+                        out.data[j * self.rows + i] = self.data[i * self.cols + j];
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Select column range [lo, hi) as a new matrix.
+    pub fn cols_range(&self, lo: usize, hi: usize) -> Mat {
+        assert!(lo <= hi && hi <= self.cols);
+        let mut out = Mat::zeros(self.rows, hi - lo);
+        for i in 0..self.rows {
+            out.row_mut(i).copy_from_slice(&self.row(i)[lo..hi]);
+        }
+        out
+    }
+
+    /// Select row range [lo, hi) as a new matrix.
+    pub fn rows_range(&self, lo: usize, hi: usize) -> Mat {
+        assert!(lo <= hi && hi <= self.rows);
+        Mat::from_vec(hi - lo, self.cols, self.data[lo * self.cols..hi * self.cols].to_vec())
+    }
+
+    /// Frobenius norm.
+    pub fn fro(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+
+    /// Max |x|.
+    pub fn absmax(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |a, &x| a.max(x.abs()))
+    }
+
+    /// Elementwise in-place ops.
+    pub fn add_assign(&mut self, other: &Mat) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+    pub fn sub_assign(&mut self, other: &Mat) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a -= b;
+        }
+    }
+    pub fn scale(&mut self, s: f32) {
+        for a in self.data.iter_mut() {
+            *a *= s;
+        }
+    }
+
+    /// `self - other` as a new matrix.
+    pub fn sub(&self, other: &Mat) -> Mat {
+        let mut out = self.clone();
+        out.sub_assign(other);
+        out
+    }
+
+    /// `self + other` as a new matrix.
+    pub fn add(&self, other: &Mat) -> Mat {
+        let mut out = self.clone();
+        out.add_assign(other);
+        out
+    }
+
+    /// Scale each column j by s[j] (i.e. `self * diag(s)`).
+    pub fn scale_cols(&mut self, s: &[f32]) {
+        assert_eq!(s.len(), self.cols);
+        for i in 0..self.rows {
+            let r = self.row_mut(i);
+            for (x, &f) in r.iter_mut().zip(s) {
+                *x *= f;
+            }
+        }
+    }
+
+    /// Scale each row i by s[i] (i.e. `diag(s) * self`).
+    pub fn scale_rows(&mut self, s: &[f32]) {
+        assert_eq!(s.len(), self.rows);
+        for i in 0..self.rows {
+            let f = s[i];
+            for x in self.row_mut(i) {
+                *x *= f;
+            }
+        }
+    }
+
+    /// Mean and (population) std of all entries.
+    pub fn mean_std(&self) -> (f64, f64) {
+        let n = self.data.len() as f64;
+        let mean = self.data.iter().map(|&x| x as f64).sum::<f64>() / n;
+        let var = self.data.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / n;
+        (mean, var.sqrt())
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f32;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f32 {
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f32 {
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+impl fmt::Debug for Mat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Mat {}x{} [", self.rows, self.cols)?;
+        for i in 0..self.rows.min(6) {
+            write!(f, "  ")?;
+            for j in 0..self.cols.min(8) {
+                write!(f, "{:+.4} ", self[(i, j)])?;
+            }
+            writeln!(f, "{}", if self.cols > 8 { "…" } else { "" })?;
+        }
+        if self.rows > 6 {
+            writeln!(f, "  …")?;
+        }
+        write!(f, "]")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_index() {
+        let m = Mat::from_fn(3, 4, |i, j| (i * 10 + j) as f32);
+        assert_eq!(m[(2, 3)], 23.0);
+        assert_eq!(m.row(1), &[10.0, 11.0, 12.0, 13.0]);
+        assert_eq!(m.col(2), vec![2.0, 12.0, 22.0]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::new(1);
+        let m = Mat::randn(37, 53, 0.0, 1.0, &mut rng);
+        assert_eq!(m.t().t(), m);
+        let t = m.t();
+        assert_eq!(t[(5, 7)], m[(7, 5)]);
+    }
+
+    #[test]
+    fn ranges() {
+        let m = Mat::from_fn(4, 6, |i, j| (i * 6 + j) as f32);
+        let c = m.cols_range(2, 5);
+        assert_eq!((c.rows, c.cols), (4, 3));
+        assert_eq!(c[(1, 0)], m[(1, 2)]);
+        let r = m.rows_range(1, 3);
+        assert_eq!((r.rows, r.cols), (2, 6));
+        assert_eq!(r[(0, 4)], m[(1, 4)]);
+    }
+
+    #[test]
+    fn norms_and_scale() {
+        let mut m = Mat::from_vec(1, 3, vec![3.0, 4.0, 0.0]);
+        assert!((m.fro() - 5.0).abs() < 1e-9);
+        assert_eq!(m.absmax(), 4.0);
+        m.scale(2.0);
+        assert_eq!(m.data, vec![6.0, 8.0, 0.0]);
+    }
+
+    #[test]
+    fn scale_rows_cols() {
+        let mut m = Mat::from_fn(2, 3, |_, _| 1.0);
+        m.scale_cols(&[1.0, 2.0, 3.0]);
+        assert_eq!(m.row(0), &[1.0, 2.0, 3.0]);
+        m.scale_rows(&[10.0, 100.0]);
+        assert_eq!(m.row(1), &[100.0, 200.0, 300.0]);
+    }
+
+    #[test]
+    fn mean_std() {
+        let m = Mat::from_vec(1, 4, vec![1.0, 2.0, 3.0, 4.0]);
+        let (mean, std) = m.mean_std();
+        assert!((mean - 2.5).abs() < 1e-12);
+        assert!((std - (1.25f64).sqrt()).abs() < 1e-9);
+    }
+}

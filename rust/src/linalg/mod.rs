@@ -1,0 +1,17 @@
+//! Dense linear-algebra substrate built from scratch: the matrix type,
+//! blocked multithreaded GEMM, Householder QR, exact one-sided Jacobi SVD,
+//! and Halko randomized ("fast") SVD — everything PiSSA initialization and
+//! the quantization-error analysis need, with no external BLAS/LAPACK.
+
+pub mod gemm;
+pub mod mat;
+pub mod norms;
+pub mod qr;
+pub mod rsvd;
+pub mod svd;
+
+pub use gemm::{matmul, matmul_acc, matmul_nt, matmul_tn, matvec};
+pub use mat::Mat;
+pub use norms::{nuclear_norm, singular_values};
+pub use rsvd::rsvd;
+pub use svd::{split_at_rank, svd, Svd};

@@ -1,0 +1,130 @@
+//! Matrix norms and spectrum diagnostics used by the quantization-error
+//! analysis (nuclear norm, Eq. 6–8) and by the Figure 3 / 9 / 10 spectrum
+//! and value-distribution plots.
+
+use super::mat::Mat;
+use super::svd::svd;
+
+/// Nuclear norm ‖M‖_* = Σ σᵢ (exact, via Jacobi SVD).
+pub fn nuclear_norm(m: &Mat) -> f64 {
+    svd(m).nuclear()
+}
+
+/// Full singular spectrum, descending.
+pub fn singular_values(m: &Mat) -> Vec<f32> {
+    svd(m).s
+}
+
+/// Spectral norm σ₁ estimated by power iteration (cheap; avoids full SVD).
+pub fn spectral_norm_est(m: &Mat, iters: usize, seed: u64) -> f64 {
+    use crate::linalg::gemm::matvec;
+    use crate::util::rng::Rng;
+    let mut rng = Rng::new(seed);
+    let mut x: Vec<f32> = (0..m.cols).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let mt = m.t();
+    let mut sigma = 0.0f64;
+    for _ in 0..iters {
+        let y = matvec(m, &x); // m·x
+        let z = matvec(&mt, &y); // mᵀ·m·x
+        let nz = z.iter().map(|&v| (v as f64).powi(2)).sum::<f64>().sqrt();
+        if nz == 0.0 {
+            return 0.0;
+        }
+        for (xi, zi) in x.iter_mut().zip(&z) {
+            *xi = (*zi as f64 / nz) as f32;
+        }
+        let ny = y.iter().map(|&v| (v as f64).powi(2)).sum::<f64>().sqrt();
+        sigma = ny;
+    }
+    sigma
+}
+
+/// Histogram of matrix entries over `bins` equal-width buckets in
+/// [lo, hi]; returns (bin_centers, counts). Used for Fig 3c/3f.
+pub fn value_histogram(m: &Mat, lo: f32, hi: f32, bins: usize) -> (Vec<f32>, Vec<usize>) {
+    assert!(bins > 0 && hi > lo);
+    let mut counts = vec![0usize; bins];
+    let w = (hi - lo) / bins as f32;
+    for &x in &m.data {
+        if x < lo || x >= hi {
+            continue;
+        }
+        let b = (((x - lo) / w) as usize).min(bins - 1);
+        counts[b] += 1;
+    }
+    let centers = (0..bins).map(|b| lo + w * (b as f32 + 0.5)).collect();
+    (centers, counts)
+}
+
+/// Fit a Student-t distribution to the entries of M by matching excess
+/// kurtosis (method of moments): for t with ν > 4,
+/// kurtosis = 3(ν−2)/(ν−4)  ⇒  ν = (4k−6)/(k−3)  with k the sample
+/// kurtosis. Returns (nu, scale). Higher ν ⇒ more Gaussian-like — the
+/// paper's Figure 10 shows W_res fits a *higher-ν* t than W.
+pub fn fit_student_t(m: &Mat) -> (f64, f64) {
+    let n = m.data.len() as f64;
+    let mean = m.data.iter().map(|&x| x as f64).sum::<f64>() / n;
+    let var = m.data.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / n;
+    let m4 = m.data.iter().map(|&x| (x as f64 - mean).powi(4)).sum::<f64>() / n;
+    let kurt = m4 / (var * var);
+    let nu = if kurt <= 3.0 + 1e-9 {
+        1e6 // effectively Gaussian
+    } else {
+        ((4.0 * kurt - 6.0) / (kurt - 3.0)).max(4.0 + 1e-6)
+    };
+    // variance of t_ν(scale) is scale² ν/(ν−2)
+    let scale = (var * (nu - 2.0) / nu).sqrt();
+    (nu, scale)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn nuclear_of_identity() {
+        assert!((nuclear_norm(&Mat::eye(6)) - 6.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn spectral_est_close_to_svd() {
+        let mut rng = Rng::new(40);
+        let a = Mat::randn(30, 20, 0.0, 1.0, &mut rng);
+        let s1 = singular_values(&a)[0] as f64;
+        let est = spectral_norm_est(&a, 50, 7);
+        assert!((est - s1).abs() / s1 < 0.02, "est={est} s1={s1}");
+    }
+
+    #[test]
+    fn histogram_counts_everything_in_range() {
+        let m = Mat::from_vec(1, 6, vec![-1.0, -0.5, 0.0, 0.25, 0.5, 0.99]);
+        let (_, counts) = value_histogram(&m, -1.0, 1.0, 4);
+        assert_eq!(counts.iter().sum::<usize>(), 6);
+        // bins over [-1,1): [-1,-.5) {-1.0}, [-.5,0) {-0.5}, [0,.5) {0, .25},
+        // [.5,1) {0.5, 0.99}
+        assert_eq!(counts, vec![1, 1, 2, 2]);
+    }
+
+    #[test]
+    fn t_fit_gaussian_gives_high_nu() {
+        let mut rng = Rng::new(41);
+        let m = Mat::randn(100, 100, 0.0, 0.02, &mut rng);
+        let (nu, scale) = fit_student_t(&m);
+        assert!(nu > 20.0, "nu={nu}");
+        assert!((scale - 0.02).abs() < 0.005, "scale={scale}");
+    }
+
+    #[test]
+    fn t_fit_heavy_tail_gives_low_nu() {
+        // Mixture: mostly small values + rare large outliers => heavy tails.
+        let mut rng = Rng::new(42);
+        let mut data = vec![0.0f32; 20_000];
+        for x in data.iter_mut() {
+            *x = if rng.uniform() < 0.01 { rng.normal_f32(0.0, 0.5) } else { rng.normal_f32(0.0, 0.02) };
+        }
+        let m = Mat::from_vec(100, 200, data);
+        let (nu, _) = fit_student_t(&m);
+        assert!(nu < 10.0, "nu={nu}");
+    }
+}

@@ -1,0 +1,143 @@
+//! Thin Householder QR — used by the randomized-SVD range finder to
+//! re-orthonormalize the sketch between power iterations, and as a
+//! building block for orthonormal test matrices.
+
+use super::mat::Mat;
+
+/// Thin QR of an m×n matrix with m ≥ n: returns Q (m×n, orthonormal
+/// columns) and R (n×n upper triangular) with A = Q·R.
+pub fn qr_thin(a: &Mat) -> (Mat, Mat) {
+    let (m, n) = (a.rows, a.cols);
+    assert!(m >= n, "qr_thin requires rows >= cols (got {m}x{n})");
+    // Work in f64 internally for stability on ill-conditioned sketches.
+    let mut r: Vec<f64> = a.data.iter().map(|&x| x as f64).collect(); // m×n, will become R in top block
+    let mut vs: Vec<(usize, Vec<f64>)> = Vec::with_capacity(n); // Householder vectors
+
+    for k in 0..n {
+        // Householder vector for column k below the diagonal.
+        let mut norm2 = 0.0f64;
+        for i in k..m {
+            let x = r[i * n + k];
+            norm2 += x * x;
+        }
+        let norm = norm2.sqrt();
+        if norm == 0.0 {
+            vs.push((k, vec![0.0; m - k]));
+            continue;
+        }
+        let x0 = r[k * n + k];
+        let alpha = if x0 >= 0.0 { -norm } else { norm };
+        let mut v: Vec<f64> = (k..m).map(|i| r[i * n + k]).collect();
+        v[0] -= alpha;
+        let vnorm2: f64 = v.iter().map(|x| x * x).sum();
+        if vnorm2 > 0.0 {
+            // Apply H = I - 2 v vᵀ / (vᵀv) to R[k.., k..]
+            for j in k..n {
+                let mut dot = 0.0f64;
+                for i in k..m {
+                    dot += v[i - k] * r[i * n + j];
+                }
+                let f = 2.0 * dot / vnorm2;
+                for i in k..m {
+                    r[i * n + j] -= f * v[i - k];
+                }
+            }
+        }
+        vs.push((k, v));
+    }
+
+    // Extract R (n×n upper-triangular part).
+    let mut rmat = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in i..n {
+            rmat[(i, j)] = r[i * n + j] as f32;
+        }
+    }
+
+    // Form thin Q by applying the Householder reflectors to the first n
+    // columns of I, in reverse order.
+    let mut q: Vec<f64> = vec![0.0; m * n];
+    for j in 0..n {
+        q[j * n + j] = 1.0;
+    }
+    for (k, v) in vs.iter().rev() {
+        let k = *k;
+        let vnorm2: f64 = v.iter().map(|x| x * x).sum();
+        if vnorm2 == 0.0 {
+            continue;
+        }
+        for j in 0..n {
+            let mut dot = 0.0f64;
+            for i in k..m {
+                dot += v[i - k] * q[i * n + j];
+            }
+            let f = 2.0 * dot / vnorm2;
+            for i in k..m {
+                q[i * n + j] -= f * v[i - k];
+            }
+        }
+    }
+    let qmat = Mat::from_vec(m, n, q.into_iter().map(|x| x as f32).collect());
+    (qmat, rmat)
+}
+
+/// Orthonormalize the columns of A in place (returns Q of the thin QR).
+pub fn orthonormalize(a: &Mat) -> Mat {
+    qr_thin(a).0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::{matmul, matmul_tn};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn qr_reconstructs() {
+        let mut rng = Rng::new(10);
+        for &(m, n) in &[(5, 5), (20, 7), (64, 16), (33, 32)] {
+            let a = Mat::randn(m, n, 0.0, 1.0, &mut rng);
+            let (q, r) = qr_thin(&a);
+            let qr = matmul(&q, &r);
+            let err = qr.sub(&a).fro() / a.fro();
+            assert!(err < 1e-5, "{m}x{n} err={err}");
+        }
+    }
+
+    #[test]
+    fn q_is_orthonormal() {
+        let mut rng = Rng::new(11);
+        let a = Mat::randn(50, 12, 0.0, 1.0, &mut rng);
+        let (q, _) = qr_thin(&a);
+        let qtq = matmul_tn(&q, &q);
+        let err = qtq.sub(&Mat::eye(12)).fro();
+        assert!(err < 1e-5, "orthonormality err={err}");
+    }
+
+    #[test]
+    fn r_is_upper_triangular() {
+        let mut rng = Rng::new(12);
+        let a = Mat::randn(30, 10, 0.0, 1.0, &mut rng);
+        let (_, r) = qr_thin(&a);
+        for i in 0..10 {
+            for j in 0..i {
+                assert_eq!(r[(i, j)], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn rank_deficient_is_stable() {
+        // Column 2 = column 0 + column 1: QR must not produce NaNs.
+        let mut rng = Rng::new(13);
+        let mut a = Mat::randn(16, 3, 0.0, 1.0, &mut rng);
+        for i in 0..16 {
+            a[(i, 2)] = a[(i, 0)] + a[(i, 1)];
+        }
+        let (q, r) = qr_thin(&a);
+        assert!(q.data.iter().all(|x| x.is_finite()));
+        assert!(r.data.iter().all(|x| x.is_finite()));
+        let err = matmul(&q, &r).sub(&a).fro() / a.fro();
+        assert!(err < 1e-4);
+    }
+}

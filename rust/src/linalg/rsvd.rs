@@ -1,0 +1,116 @@
+//! Randomized (fast) SVD — Halko, Martinsson & Tropp (2011), the
+//! "Fast SVD" the paper uses to make PiSSA initialization take seconds
+//! instead of minutes (paper §B, Table 4; reference [50]).
+//!
+//! Algorithm (rank r, oversampling p, `niter` subspace iterations):
+//!   1. Ω ~ N(0,1)^{n×(r+p)};  Y = A·Ω
+//!   2. repeat niter times:  Y = A·(Aᵀ·orth(Y))   (power iteration with
+//!      re-orthonormalization each half-step for stability)
+//!   3. Q = orth(Y);  B = Qᵀ·A  ((r+p)×n, small)
+//!   4. SVD(B) = Ũ S Vᵀ (exact Jacobi on the small matrix)
+//!   5. U = Q·Ũ; truncate everything to rank r.
+
+use super::gemm::{matmul, matmul_tn};
+use super::mat::Mat;
+use super::qr::orthonormalize;
+use super::svd::{svd, Svd};
+use crate::util::rng::Rng;
+
+/// Truncated randomized SVD: returns rank-`r` factors (u: m×r, s: r, vt: r×n).
+/// `niter` trades accuracy for time exactly like the paper's Table 4.
+pub fn rsvd(a: &Mat, r: usize, niter: usize, rng: &mut Rng) -> Svd {
+    let (m, n) = (a.rows, a.cols);
+    let k = r.min(m.min(n));
+    // Oversampling: +10 columns is the standard Halko recommendation.
+    let l = (k + 10).min(m.min(n));
+
+    let omega = Mat::randn(n, l, 0.0, 1.0, rng);
+    let mut y = matmul(a, &omega); // m×l
+
+    for _ in 0..niter {
+        let q = orthonormalize(&y); // m×l
+        let z = matmul_tn(&q, a); // l×n  (= QᵀA)
+        let zt = orthonormalize(&z.t()); // n×l
+        y = matmul(a, &zt); // m×l
+    }
+
+    let q = orthonormalize(&y); // m×l
+    let b = matmul_tn(&q, a); // l×n, small
+    let small = svd(&b);
+    let u = matmul(&q, &small.u); // m×l
+
+    Svd {
+        u: u.cols_range(0, k),
+        s: small.s[..k].to_vec(),
+        vt: small.vt.rows_range(0, k),
+    }
+}
+
+/// Best rank-r approximation error ‖A − A_r‖_F via rsvd (diagnostics).
+pub fn lowrank_error(a: &Mat, r: usize, niter: usize, rng: &mut Rng) -> f64 {
+    let d = rsvd(a, r, niter, rng);
+    d.reconstruct().sub(a).fro()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::matmul_tn as mtn;
+
+    #[test]
+    fn recovers_exact_low_rank() {
+        let mut rng = Rng::new(30);
+        let u = Mat::randn(40, 4, 0.0, 1.0, &mut rng);
+        let v = Mat::randn(4, 30, 0.0, 1.0, &mut rng);
+        let a = matmul(&u, &v);
+        let d = rsvd(&a, 4, 2, &mut rng);
+        let err = d.reconstruct().sub(&a).fro() / a.fro();
+        assert!(err < 1e-4, "err={err}");
+    }
+
+    #[test]
+    fn matches_exact_svd_leading_values() {
+        let mut rng = Rng::new(31);
+        let a = Mat::randn(48, 32, 0.0, 1.0, &mut rng);
+        let exact = svd(&a);
+        let approx = rsvd(&a, 8, 4, &mut rng);
+        for i in 0..8 {
+            let rel = (exact.s[i] - approx.s[i]).abs() / exact.s[i];
+            assert!(rel < 2e-2, "σ{i}: exact={} approx={}", exact.s[i], approx.s[i]);
+        }
+    }
+
+    #[test]
+    fn more_iters_is_more_accurate() {
+        // On a matrix with slowly decaying spectrum, power iterations help.
+        let mut rng = Rng::new(32);
+        let a = Mat::randn(64, 64, 0.0, 1.0, &mut rng);
+        let exact = svd(&a);
+        let opt: f64 = exact.s[6..].iter().map(|&x| (x as f64).powi(2)).sum::<f64>().sqrt();
+        let e1 = lowrank_error(&a, 6, 0, &mut rng);
+        let e3 = lowrank_error(&a, 6, 4, &mut rng);
+        assert!(e3 <= e1 + 1e-6, "niter=4 ({e3}) should beat niter=0 ({e1})");
+        // and e3 should be close to the optimal truncation error
+        assert!(e3 < 1.1 * opt, "e3={e3} opt={opt}");
+    }
+
+    #[test]
+    fn orthonormal_factors() {
+        let mut rng = Rng::new(33);
+        let a = Mat::randn(50, 40, 0.0, 1.0, &mut rng);
+        let d = rsvd(&a, 10, 2, &mut rng);
+        let utu = mtn(&d.u, &d.u).sub(&Mat::eye(10)).fro();
+        let vvt = matmul(&d.vt, &d.vt.t()).sub(&Mat::eye(10)).fro();
+        assert!(utu < 1e-4 && vvt < 1e-4, "utu={utu} vvt={vvt}");
+    }
+
+    #[test]
+    fn wide_matrix() {
+        let mut rng = Rng::new(34);
+        let a = Mat::randn(20, 60, 0.0, 1.0, &mut rng);
+        let d = rsvd(&a, 5, 2, &mut rng);
+        assert_eq!((d.u.rows, d.u.cols), (20, 5));
+        assert_eq!((d.vt.rows, d.vt.cols), (5, 60));
+        assert!(d.s.windows(2).all(|w| w[0] >= w[1] - 1e-6));
+    }
+}

@@ -1,0 +1,245 @@
+//! Exact economy SVD via one-sided Jacobi rotations.
+//!
+//! This is the reference decomposition behind PiSSA init (Eq. 2–4 of the
+//! paper), quantization-error nuclear norms, and the singular-spectrum
+//! figures. One-sided Jacobi orthogonalizes the columns of A by plane
+//! rotations; at convergence the column norms are the singular values,
+//! the normalized columns are U, and the accumulated rotations are V.
+//! It is O(n²·m) per sweep but extremely accurate (f64 accumulation),
+//! which is what we want for an oracle; the *fast* path is `rsvd.rs`.
+
+use super::mat::Mat;
+
+/// Result of an economy SVD: `a = u * diag(s) * vt`,
+/// u: m×k, s: k (descending), vt: k×n, with k = min(m, n).
+#[derive(Clone, Debug)]
+pub struct Svd {
+    pub u: Mat,
+    pub s: Vec<f32>,
+    pub vt: Mat,
+}
+
+impl Svd {
+    /// Reconstruct `u · diag(s) · vt`.
+    pub fn reconstruct(&self) -> Mat {
+        let mut us = self.u.clone();
+        us.scale_cols(&self.s);
+        super::gemm::matmul(&us, &self.vt)
+    }
+
+    /// Reconstruct using only singular triplets in [lo, hi).
+    pub fn reconstruct_range(&self, lo: usize, hi: usize) -> Mat {
+        let mut us = self.u.cols_range(lo, hi);
+        us.scale_cols(&self.s[lo..hi]);
+        super::gemm::matmul(&us, &self.vt.rows_range(lo, hi))
+    }
+
+    /// Nuclear norm = Σ σᵢ.
+    pub fn nuclear(&self) -> f64 {
+        self.s.iter().map(|&x| x as f64).sum()
+    }
+}
+
+/// Economy SVD of an arbitrary matrix. Handles m < n by transposing.
+pub fn svd(a: &Mat) -> Svd {
+    if a.rows >= a.cols {
+        svd_tall(a)
+    } else {
+        let t = svd_tall(&a.t());
+        Svd { u: t.vt.t(), s: t.s, vt: t.u.t() }
+    }
+}
+
+/// One-sided Jacobi on a tall (m ≥ n) matrix, f64 workspace.
+fn svd_tall(a: &Mat) -> Svd {
+    let (m, n) = (a.rows, a.cols);
+    // Column-major f64 workspace: cols[j] is column j of the working matrix.
+    let mut cols: Vec<Vec<f64>> = (0..n)
+        .map(|j| (0..m).map(|i| a[(i, j)] as f64).collect())
+        .collect();
+    // V accumulated as column-major too.
+    let mut v: Vec<Vec<f64>> = (0..n)
+        .map(|j| {
+            let mut e = vec![0.0; n];
+            e[j] = 1.0;
+            e
+        })
+        .collect();
+
+    let fro2: f64 = cols.iter().flat_map(|c| c.iter()).map(|x| x * x).sum();
+    let tol = 1e-14 * fro2.max(f64::MIN_POSITIVE);
+    let max_sweeps = 60;
+
+    for _sweep in 0..max_sweeps {
+        let mut off = 0.0f64;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                // 2x2 Gram entries.
+                let (mut app, mut aqq, mut apq) = (0.0f64, 0.0f64, 0.0f64);
+                {
+                    let (cp, cq) = (&cols[p], &cols[q]);
+                    for i in 0..m {
+                        app += cp[i] * cp[i];
+                        aqq += cq[i] * cq[i];
+                        apq += cp[i] * cq[i];
+                    }
+                }
+                off += apq * apq;
+                if apq * apq <= tol * app * aqq {
+                    continue;
+                }
+                // Jacobi rotation that zeroes the (p,q) Gram entry.
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = if tau >= 0.0 {
+                    1.0 / (tau + (1.0 + tau * tau).sqrt())
+                } else {
+                    1.0 / (tau - (1.0 + tau * tau).sqrt())
+                };
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                // Rotate columns p and q of the working matrix and of V.
+                let (lo, hi) = if p < q { (p, q) } else { (q, p) };
+                let (head, tail) = cols.split_at_mut(hi);
+                let (cp, cq) = (&mut head[lo], &mut tail[0]);
+                for i in 0..m {
+                    let (x, y) = (cp[i], cq[i]);
+                    cp[i] = c * x - s * y;
+                    cq[i] = s * x + c * y;
+                }
+                let (headv, tailv) = v.split_at_mut(hi);
+                let (vp, vq) = (&mut headv[lo], &mut tailv[0]);
+                for i in 0..n {
+                    let (x, y) = (vp[i], vq[i]);
+                    vp[i] = c * x - s * y;
+                    vq[i] = s * x + c * y;
+                }
+            }
+        }
+        if off <= tol {
+            break;
+        }
+    }
+
+    // Singular values = column norms; sort descending.
+    let mut order: Vec<usize> = (0..n).collect();
+    let norms: Vec<f64> = cols.iter().map(|c| c.iter().map(|x| x * x).sum::<f64>().sqrt()).collect();
+    order.sort_by(|&i, &j| norms[j].partial_cmp(&norms[i]).unwrap());
+
+    let mut u = Mat::zeros(m, n);
+    let mut vt = Mat::zeros(n, n);
+    let mut s = vec![0.0f32; n];
+    for (k, &j) in order.iter().enumerate() {
+        let nj = norms[j];
+        s[k] = nj as f32;
+        if nj > 0.0 {
+            for i in 0..m {
+                u[(i, k)] = (cols[j][i] / nj) as f32;
+            }
+        } else {
+            // Null direction: leave a zero column (callers only use the
+            // leading rank anyway).
+            u[(k.min(m - 1), k)] = 0.0;
+        }
+        for i in 0..n {
+            vt[(k, i)] = v[j][i] as f32;
+        }
+    }
+    Svd { u, s, vt }
+}
+
+/// Truncated reconstruction helpers used by adapter init:
+/// principal part `U[:, :r] S[:r] Vt[:r, :]` and residual `U[:, r:] …`.
+pub fn split_at_rank(dec: &Svd, r: usize) -> (Mat, Mat) {
+    let k = dec.s.len();
+    let r = r.min(k);
+    (dec.reconstruct_range(0, r), dec.reconstruct_range(r, k))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::{matmul, matmul_tn};
+    use crate::util::rng::Rng;
+
+    fn check_svd(a: &Mat, tol: f64) {
+        let d = svd(a);
+        let k = a.rows.min(a.cols);
+        assert_eq!(d.s.len(), k);
+        // descending
+        for w in d.s.windows(2) {
+            assert!(w[0] >= w[1] - 1e-6, "not descending: {:?}", &d.s);
+        }
+        // reconstruction
+        let err = d.reconstruct().sub(a).fro() / a.fro().max(1e-30);
+        assert!(err < tol, "reconstruction err={err}");
+        // orthonormal U, V — only over the numerically nonzero singular
+        // directions (null-space columns of U are not defined).
+        let rank = d.s.iter().take_while(|&&s| s > 1e-5 * d.s[0].max(1e-30)).count();
+        let ur = d.u.cols_range(0, rank);
+        let vr = d.vt.rows_range(0, rank);
+        let utu = matmul_tn(&ur, &ur).sub(&Mat::eye(rank)).fro();
+        let vvt = matmul(&vr, &vr.t()).sub(&Mat::eye(rank)).fro();
+        assert!(utu < 1e-4, "UᵀU err={utu}");
+        assert!(vvt < 1e-4, "VVᵀ err={vvt}");
+    }
+
+    #[test]
+    fn svd_square_and_rect() {
+        let mut rng = Rng::new(20);
+        for &(m, n) in &[(8, 8), (24, 10), (10, 24), (40, 40), (64, 17)] {
+            let a = Mat::randn(m, n, 0.0, 1.0, &mut rng);
+            check_svd(&a, 1e-5);
+        }
+    }
+
+    #[test]
+    fn svd_known_diagonal() {
+        let mut a = Mat::zeros(4, 3);
+        a[(0, 0)] = 5.0;
+        a[(1, 1)] = 3.0;
+        a[(2, 2)] = 1.0;
+        let d = svd(&a);
+        assert!((d.s[0] - 5.0).abs() < 1e-5);
+        assert!((d.s[1] - 3.0).abs() < 1e-5);
+        assert!((d.s[2] - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn svd_low_rank() {
+        // Rank-2 matrix: trailing singular values ~0.
+        let mut rng = Rng::new(21);
+        let u = Mat::randn(20, 2, 0.0, 1.0, &mut rng);
+        let v = Mat::randn(2, 15, 0.0, 1.0, &mut rng);
+        let a = matmul(&u, &v);
+        let d = svd(&a);
+        assert!(d.s[2] < 1e-4 * d.s[0], "σ₂={} σ₀={}", d.s[2], d.s[0]);
+        check_svd(&a, 1e-4);
+    }
+
+    #[test]
+    fn split_at_rank_sums_to_whole() {
+        let mut rng = Rng::new(22);
+        let a = Mat::randn(30, 20, 0.0, 1.0, &mut rng);
+        let d = svd(&a);
+        let (pri, res) = split_at_rank(&d, 5);
+        let err = pri.add(&res).sub(&a).fro() / a.fro();
+        assert!(err < 1e-5, "split err={err}");
+    }
+
+    #[test]
+    fn nuclear_norm_diag() {
+        let mut a = Mat::zeros(3, 3);
+        a[(0, 0)] = 2.0;
+        a[(1, 1)] = 1.0;
+        a[(2, 2)] = 0.5;
+        assert!((svd(&a).nuclear() - 3.5).abs() < 1e-5);
+    }
+
+    #[test]
+    fn zero_matrix() {
+        let a = Mat::zeros(5, 4);
+        let d = svd(&a);
+        assert!(d.s.iter().all(|&x| x == 0.0));
+        assert!(d.u.data.iter().all(|x| x.is_finite()));
+    }
+}

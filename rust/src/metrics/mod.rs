@@ -1,0 +1,171 @@
+//! Metric sinks: per-step training records, CSV/JSONL writers, and the
+//! curve summaries used by the figure benches.
+
+use crate::util::json::{jnum, Json};
+use std::io::Write;
+use std::path::Path;
+
+/// One training-step record (the paper's Figure 4/5 series: loss, grad
+/// norm, plus lr and timing for §Perf).
+#[derive(Clone, Debug)]
+pub struct StepMetrics {
+    pub step: usize,
+    pub loss: f32,
+    pub grad_norm: f32,
+    pub lr: f32,
+    pub step_time_s: f64,
+}
+
+impl StepMetrics {
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("step", jnum(self.step as f64));
+        o.set("loss", jnum(self.loss as f64));
+        o.set("grad_norm", jnum(self.grad_norm as f64));
+        o.set("lr", jnum(self.lr as f64));
+        o.set("step_time_s", jnum(self.step_time_s));
+        o
+    }
+}
+
+/// Append-mode JSONL writer for run logs.
+pub struct JsonlSink {
+    file: std::fs::File,
+}
+
+impl JsonlSink {
+    pub fn create(path: &Path) -> anyhow::Result<JsonlSink> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        Ok(JsonlSink { file: std::fs::File::create(path)? })
+    }
+    pub fn write(&mut self, j: &Json) -> anyhow::Result<()> {
+        writeln!(self.file, "{}", j.to_string())?;
+        Ok(())
+    }
+    pub fn write_step(&mut self, m: &StepMetrics) -> anyhow::Result<()> {
+        self.write(&m.to_json())
+    }
+}
+
+/// Write a simple CSV (header + f64 rows) — the bench harnesses emit the
+/// paper's table rows through this.
+pub fn write_csv(path: &Path, header: &[&str], rows: &[Vec<f64>]) -> anyhow::Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "{}", header.join(","))?;
+    for row in rows {
+        let line: Vec<String> = row.iter().map(|x| format!("{x}")).collect();
+        writeln!(f, "{}", line.join(","))?;
+    }
+    Ok(())
+}
+
+/// Write a labeled CSV where the first column is a string label.
+pub fn write_labeled_csv(
+    path: &Path,
+    header: &[&str],
+    rows: &[(String, Vec<f64>)],
+) -> anyhow::Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "{}", header.join(","))?;
+    for (label, vals) in rows {
+        let mut line = vec![label.clone()];
+        line.extend(vals.iter().map(|x| format!("{x}")));
+        writeln!(f, "{}", line.join(","))?;
+    }
+    Ok(())
+}
+
+/// Pearson correlation (STS-B metric).
+pub fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    let n = xs.len() as f64;
+    let mx = xs.iter().sum::<f64>() / n;
+    let my = ys.iter().sum::<f64>() / n;
+    let mut cov = 0.0;
+    let mut vx = 0.0;
+    let mut vy = 0.0;
+    for (x, y) in xs.iter().zip(ys) {
+        cov += (x - mx) * (y - my);
+        vx += (x - mx) * (x - mx);
+        vy += (y - my) * (y - my);
+    }
+    if vx == 0.0 || vy == 0.0 {
+        return 0.0;
+    }
+    cov / (vx.sqrt() * vy.sqrt())
+}
+
+/// Matthews correlation coefficient (CoLA metric), binary.
+pub fn matthews(preds: &[i32], labels: &[i32]) -> f64 {
+    let (mut tp, mut tn, mut fp, mut fne) = (0f64, 0f64, 0f64, 0f64);
+    for (&p, &l) in preds.iter().zip(labels) {
+        match (p, l) {
+            (1, 1) => tp += 1.0,
+            (0, 0) => tn += 1.0,
+            (1, 0) => fp += 1.0,
+            (0, 1) => fne += 1.0,
+            _ => {}
+        }
+    }
+    let denom = ((tp + fp) * (tp + fne) * (tn + fp) * (tn + fne)).sqrt();
+    if denom == 0.0 {
+        0.0
+    } else {
+        (tp * tn - fp * fne) / denom
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pearson_perfect_and_anti() {
+        let x = vec![1.0, 2.0, 3.0, 4.0];
+        let y = vec![2.0, 4.0, 6.0, 8.0];
+        assert!((pearson(&x, &y) - 1.0).abs() < 1e-12);
+        let z: Vec<f64> = y.iter().map(|v| -v).collect();
+        assert!((pearson(&x, &z) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn matthews_perfect() {
+        let p = vec![1, 0, 1, 0];
+        assert!((matthews(&p, &p) - 1.0).abs() < 1e-12);
+        let inv: Vec<i32> = p.iter().map(|v| 1 - v).collect();
+        assert!((matthews(&p, &inv) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let dir = std::env::temp_dir().join("pissa_csv_test");
+        let path = dir.join("t.csv");
+        write_csv(&path, &["a", "b"], &[vec![1.0, 2.0], vec![3.5, -1.0]]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("a,b\n1,2\n3.5,-1"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn jsonl_sink_writes_lines() {
+        let dir = std::env::temp_dir().join("pissa_jsonl_test");
+        let path = dir.join("log.jsonl");
+        let mut sink = JsonlSink::create(&path).unwrap();
+        let m = StepMetrics { step: 1, loss: 2.0, grad_norm: 0.5, lr: 1e-3, step_time_s: 0.1 };
+        sink.write_step(&m).unwrap();
+        sink.write_step(&m).unwrap();
+        drop(sink);
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 2);
+        assert!(text.contains("\"loss\""));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,252 @@
+//! Model assembly: create base weights, apply an adapter strategy, and
+//! produce the (frozen, trainable, opt-state) stores a train artifact
+//! expects — the rust-side mirror of python/compile/model.py's
+//! `param_specs`, driven by the manifest's ConfigInfo.
+
+use super::params::{ParamStore, Tensor};
+use crate::adapter::init::{initialize, AdapterInit, Strategy};
+use crate::linalg::Mat;
+use crate::runtime::ConfigInfo;
+use crate::util::rng::Rng;
+use anyhow::Result;
+
+/// The seven adapter-targeted linear types, canonical order
+/// (mirrors model.py LINEARS).
+pub const LINEARS: [&str; 7] = ["q", "k", "v", "o", "gate", "up", "down"];
+
+/// (in_dim, out_dim) for each linear type.
+pub fn linear_dims(cfg: &ConfigInfo, name: &str) -> (usize, usize) {
+    let (d, f) = (cfg.d_model, cfg.d_ff);
+    match name {
+        "q" | "k" | "v" | "o" => (d, d),
+        "gate" | "up" => (d, f),
+        "down" => (f, d),
+        other => panic!("unknown linear '{other}'"),
+    }
+}
+
+/// A "base model": the frozen scaffolding plus dense per-layer linears.
+/// Produced by random init then (optionally) pre-training via the full-FT
+/// artifact; consumed by `apply_strategy`.
+#[derive(Clone, Debug)]
+pub struct BaseModel {
+    pub config: String,
+    /// embed, lm_head/cls_base, attn_norm, mlp_norm, final_norm
+    pub scaffold: ParamStore,
+    /// base_q … base_down as stacked [L, m, n] tensors
+    pub linears: ParamStore,
+    pub encoder: bool,
+}
+
+impl BaseModel {
+    /// Random init matching python's init_params (embed/linears N(0,0.02),
+    /// norms = 1). Real experiments then pre-train this with full-FT.
+    pub fn random(cfg: &ConfigInfo, rng: &mut Rng) -> BaseModel {
+        let (v, d, l) = (cfg.vocab, cfg.d_model, cfg.n_layers);
+        let encoder = cfg.kind == "encoder";
+        let mut scaffold = ParamStore::new();
+        scaffold.insert("embed".into(), Tensor::randn(&[v, d], 0.02, rng));
+        if encoder {
+            scaffold.insert("cls_base".into(), Tensor::randn(&[d, cfg.n_classes], 0.02, rng));
+        } else {
+            scaffold.insert("lm_head".into(), Tensor::randn(&[d, v], 0.02, rng));
+        }
+        scaffold.insert("attn_norm".into(), Tensor::ones(&[l, d]));
+        scaffold.insert("mlp_norm".into(), Tensor::ones(&[l, d]));
+        scaffold.insert("final_norm".into(), Tensor::ones(&[d]));
+
+        let mut linears = ParamStore::new();
+        for name in LINEARS {
+            let (m, n) = linear_dims(cfg, name);
+            linears.insert(format!("base_{name}"), Tensor::randn(&[l, m, n], 0.02, rng));
+        }
+        BaseModel { config: cfg.name.clone(), scaffold, linears, encoder }
+    }
+
+    /// Replace the dense linears (e.g. with pre-trained weights).
+    pub fn set_linears(&mut self, linears: ParamStore) {
+        self.linears = linears;
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.linears["base_q"].shape[0]
+    }
+}
+
+/// Frozen + trainable + optimizer state, ready for a train artifact.
+#[derive(Clone, Debug)]
+pub struct TrainState {
+    pub strategy: Strategy,
+    pub rank: usize,
+    pub frozen: ParamStore,
+    pub trainable: ParamStore,
+    pub m: ParamStore,
+    pub v: ParamStore,
+    pub step: usize,
+}
+
+/// Apply an init strategy to every linear layer of a base model,
+/// producing the stores in the exact name layout the manifest uses.
+/// `iters` is the QPiSSA/LoftQ alternation count (Algorithm 1's T).
+pub fn apply_strategy(
+    base: &BaseModel,
+    strategy: Strategy,
+    rank: usize,
+    iters: usize,
+    rng: &mut Rng,
+) -> Result<TrainState> {
+    let mut frozen = base.scaffold.clone();
+    let mut trainable = ParamStore::new();
+    let l = base.n_layers();
+
+    if base.encoder {
+        // Trainable classification-head delta starts at zero.
+        let cls = &base.scaffold["cls_base"];
+        trainable.insert("cls_head".into(), Tensor::zeros(&cls.shape));
+    }
+
+    if strategy == Strategy::FullFt {
+        if !base.encoder {
+            // Decoder full-FT (and pre-training) also trains embed + head.
+            trainable.insert("embed".into(), frozen.remove("embed").unwrap());
+            trainable.insert("lm_head".into(), frozen.remove("lm_head").unwrap());
+        }
+        for name in LINEARS {
+            trainable.insert(format!("base_{name}"), base.linears[&format!("base_{name}")].clone());
+        }
+    } else {
+        for name in LINEARS {
+            let stacked = &base.linears[&format!("base_{name}")];
+            let (m_dim, n_dim) = (stacked.shape[1], stacked.shape[2]);
+            let mut bases = Vec::with_capacity(l);
+            let mut aas = Vec::with_capacity(l);
+            let mut bbs = Vec::with_capacity(l);
+            for li in 0..l {
+                let w = stacked.layer(li);
+                let AdapterInit { base: b0, a, b } = initialize(strategy, &w, rank, iters, rng);
+                bases.push(b0);
+                aas.push(a);
+                bbs.push(b);
+            }
+            frozen.insert(format!("base_{name}"), Tensor::stack(&bases));
+            let _ = (m_dim, n_dim);
+            trainable.insert(format!("a_{name}"), Tensor::stack(&aas));
+            trainable.insert(format!("b_{name}"), Tensor::stack(&bbs));
+        }
+    }
+
+    let m: ParamStore = trainable.iter().map(|(k, t)| (k.clone(), Tensor::zeros(&t.shape))).collect();
+    let v = m.clone();
+    Ok(TrainState { strategy, rank, frozen, trainable, m, v, step: 0 })
+}
+
+/// Effective dense weight of one linear layer under a train state
+/// (base + A·B, or the trainable dense weight for full-FT). Used by
+/// diagnostics and the quantization-error reports.
+pub fn effective_weight(state: &TrainState, name: &str, layer: usize) -> Mat {
+    if state.strategy == Strategy::FullFt {
+        return state.trainable[&format!("base_{name}")].layer(layer);
+    }
+    let base = state.frozen[&format!("base_{name}")].layer(layer);
+    let a = state.trainable[&format!("a_{name}")].layer(layer);
+    let b = state.trainable[&format!("b_{name}")].layer(layer);
+    base.add(&crate::linalg::matmul(&a, &b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> ConfigInfo {
+        ConfigInfo {
+            name: "tiny".into(),
+            kind: "decoder".into(),
+            vocab: 320,
+            d_model: 64,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 128,
+            seq_len: 64,
+            batch: 8,
+            eval_batch: 4,
+            n_classes: 0,
+            ranks: vec![2, 4],
+        }
+    }
+
+    #[test]
+    fn base_model_shapes() {
+        let cfg = tiny_cfg();
+        let mut rng = Rng::new(1);
+        let base = BaseModel::random(&cfg, &mut rng);
+        assert_eq!(base.scaffold["embed"].shape, vec![320, 64]);
+        assert_eq!(base.linears["base_gate"].shape, vec![2, 64, 128]);
+        assert_eq!(base.linears["base_down"].shape, vec![2, 128, 64]);
+        assert_eq!(base.n_layers(), 2);
+    }
+
+    #[test]
+    fn pissa_state_preserves_effective_weights() {
+        // Eq. 5 at the whole-model level: effective weight == original W.
+        let cfg = tiny_cfg();
+        let mut rng = Rng::new(2);
+        let base = BaseModel::random(&cfg, &mut rng);
+        let state = apply_strategy(&base, Strategy::Pissa, 4, 1, &mut rng).unwrap();
+        for name in LINEARS {
+            for l in 0..2 {
+                let orig = base.linears[&format!("base_{name}")].layer(l);
+                let eff = effective_weight(&state, name, l);
+                let err = eff.sub(&orig).fro() / orig.fro();
+                assert!(err < 1e-5, "{name}[{l}] err={err}");
+            }
+        }
+    }
+
+    #[test]
+    fn lora_state_preserves_effective_weights_exactly() {
+        let cfg = tiny_cfg();
+        let mut rng = Rng::new(3);
+        let base = BaseModel::random(&cfg, &mut rng);
+        let state = apply_strategy(&base, Strategy::Lora, 4, 1, &mut rng).unwrap();
+        let orig = base.linears["base_q"].layer(0);
+        let eff = effective_weight(&state, "q", 0);
+        assert_eq!(eff.sub(&orig).fro(), 0.0); // B = 0 ⇒ exact
+    }
+
+    #[test]
+    fn full_ft_trainables_are_dense() {
+        let cfg = tiny_cfg();
+        let mut rng = Rng::new(4);
+        let base = BaseModel::random(&cfg, &mut rng);
+        let state = apply_strategy(&base, Strategy::FullFt, 0, 1, &mut rng).unwrap();
+        assert!(state.trainable.contains_key("base_q"));
+        assert!(!state.trainable.contains_key("a_q"));
+        assert!(!state.frozen.contains_key("base_q"));
+    }
+
+    #[test]
+    fn qpissa_base_is_quantized() {
+        let cfg = tiny_cfg();
+        let mut rng = Rng::new(5);
+        let base = BaseModel::random(&cfg, &mut rng);
+        let state = apply_strategy(&base, Strategy::QPissa, 4, 1, &mut rng).unwrap();
+        // The frozen base must be an NF4 fixed point: re-quantizing changes nothing.
+        let b0 = state.frozen["base_q"].layer(0);
+        let rt = crate::quant::nf4_roundtrip(&b0);
+        assert!(b0.sub(&rt).fro() < 1e-5);
+    }
+
+    #[test]
+    fn trainable_param_counts_match_formula() {
+        let cfg = tiny_cfg();
+        let mut rng = Rng::new(6);
+        let base = BaseModel::random(&cfg, &mut rng);
+        let r = 4;
+        let state = apply_strategy(&base, Strategy::Pissa, r, 1, &mut rng).unwrap();
+        let names: Vec<String> = state.trainable.keys().cloned().collect();
+        let total = super::super::params::count_params(&state.trainable, &names);
+        let (d, f, l) = (64, 128, 2);
+        let expect = l * (4 * (d + d) * r + 2 * (d + f) * r + (f + d) * r);
+        assert_eq!(total, expect);
+    }
+}

@@ -1,0 +1,167 @@
+//! Parameter store: named tensors in manifest order.
+//!
+//! The L2 model's parameters are stacked per layer ([L, m, n]); rust
+//! stores everything as a generic `Tensor` (shape + flat f32 buffer) so a
+//! parameter set can be marshalled to literals by walking the manifest's
+//! `frozen_names` / `trainable_names` lists, and per-layer matrices can be
+//! sliced out for SVD/quantization work.
+
+use crate::linalg::Mat;
+use crate::runtime::{lit_f32, vec_f32};
+use crate::util::rng::Rng;
+use anyhow::Result;
+use std::collections::BTreeMap;
+
+/// N-dimensional f32 tensor (row-major).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+    pub fn ones(shape: &[usize]) -> Tensor {
+        Tensor { shape: shape.to_vec(), data: vec![1.0; shape.iter().product()] }
+    }
+    pub fn randn(shape: &[usize], std: f32, rng: &mut Rng) -> Tensor {
+        let mut t = Tensor::zeros(shape);
+        rng.fill_normal(&mut t.data, 0.0, std);
+        t
+    }
+    pub fn from_mat(m: &Mat) -> Tensor {
+        Tensor { shape: vec![m.rows, m.cols], data: m.data.clone() }
+    }
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+    pub fn fro(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+
+    /// View the whole tensor as a 2-D Mat (requires ndim ≤ 2).
+    pub fn as_mat(&self) -> Mat {
+        match self.shape.len() {
+            1 => Mat::from_vec(1, self.shape[0], self.data.clone()),
+            2 => Mat::from_vec(self.shape[0], self.shape[1], self.data.clone()),
+            n => panic!("as_mat on {n}-d tensor"),
+        }
+    }
+
+    /// Slice layer `l` of a stacked [L, m, n] tensor as a Mat copy.
+    pub fn layer(&self, l: usize) -> Mat {
+        assert_eq!(self.shape.len(), 3, "layer() needs a 3-d tensor");
+        let (nl, m, n) = (self.shape[0], self.shape[1], self.shape[2]);
+        assert!(l < nl);
+        Mat::from_vec(m, n, self.data[l * m * n..(l + 1) * m * n].to_vec())
+    }
+
+    /// Write a Mat back into layer `l` of a stacked tensor.
+    pub fn set_layer(&mut self, l: usize, m: &Mat) {
+        assert_eq!(self.shape.len(), 3);
+        let (nl, rows, cols) = (self.shape[0], self.shape[1], self.shape[2]);
+        assert!(l < nl && m.rows == rows && m.cols == cols);
+        self.data[l * rows * cols..(l + 1) * rows * cols].copy_from_slice(&m.data);
+    }
+
+    /// Build a stacked [L, m, n] tensor from per-layer Mats.
+    pub fn stack(layers: &[Mat]) -> Tensor {
+        let (m, n) = (layers[0].rows, layers[0].cols);
+        let mut t = Tensor::zeros(&[layers.len(), m, n]);
+        for (l, mat) in layers.iter().enumerate() {
+            t.set_layer(l, mat);
+        }
+        t
+    }
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        lit_f32(&self.data, &dims)
+    }
+
+    pub fn from_literal(lit: &xla::Literal, shape: &[usize]) -> Result<Tensor> {
+        let data = vec_f32(lit)?;
+        anyhow::ensure!(
+            data.len() == shape.iter().product::<usize>(),
+            "literal size {} vs shape {shape:?}",
+            data.len()
+        );
+        Ok(Tensor { shape: shape.to_vec(), data })
+    }
+}
+
+/// Named tensors. Iteration order is name-sorted (BTreeMap) but the
+/// marshalling path always walks an explicit name list from the manifest.
+pub type ParamStore = BTreeMap<String, Tensor>;
+
+/// Gather literals for `names` in order.
+pub fn to_literals(store: &ParamStore, names: &[String]) -> Result<Vec<xla::Literal>> {
+    names
+        .iter()
+        .map(|n| {
+            store
+                .get(n)
+                .ok_or_else(|| anyhow::anyhow!("param store missing '{n}'"))
+                .and_then(|t| t.to_literal())
+        })
+        .collect()
+}
+
+/// Total parameter count over a name list.
+pub fn count_params(store: &ParamStore, names: &[String]) -> usize {
+    names.iter().filter_map(|n| store.get(n)).map(|t| t.numel()).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layer_slicing_roundtrip() {
+        let mut t = Tensor::zeros(&[3, 4, 5]);
+        let mut rng = Rng::new(1);
+        let m = Mat::randn(4, 5, 0.0, 1.0, &mut rng);
+        t.set_layer(1, &m);
+        assert_eq!(t.layer(1).data, m.data);
+        assert_eq!(t.layer(0).fro(), 0.0);
+    }
+
+    #[test]
+    fn stack_matches_set_layer() {
+        let mut rng = Rng::new(2);
+        let mats: Vec<Mat> = (0..3).map(|_| Mat::randn(2, 6, 0.0, 1.0, &mut rng)).collect();
+        let t = Tensor::stack(&mats);
+        for (l, m) in mats.iter().enumerate() {
+            assert_eq!(t.layer(l).data, m.data);
+        }
+    }
+
+    #[test]
+    fn literal_roundtrip() {
+        let mut rng = Rng::new(3);
+        let t = Tensor::randn(&[2, 3, 4], 1.0, &mut rng);
+        let lit = t.to_literal().unwrap();
+        let back = Tensor::from_literal(&lit, &[2, 3, 4]).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn store_marshalling_order() {
+        let mut store = ParamStore::new();
+        store.insert("z".into(), Tensor::ones(&[2]));
+        store.insert("a".into(), Tensor::zeros(&[3]));
+        let names = vec!["z".to_string(), "a".to_string()];
+        let lits = to_literals(&store, &names).unwrap();
+        assert_eq!(lits.len(), 2);
+        assert_eq!(vec_f32(&lits[0]).unwrap(), vec![1.0, 1.0]);
+        assert_eq!(count_params(&store, &names), 5);
+    }
+
+    #[test]
+    fn missing_param_errors() {
+        let store = ParamStore::new();
+        assert!(to_literals(&store, &["nope".to_string()]).is_err());
+    }
+}

@@ -1,0 +1,66 @@
+//! Software bfloat16 rounding — used by the Table 5 precision-comparison
+//! experiment (BF16 vs FP32 full fine-tuning). bf16 keeps the f32
+//! exponent and truncates the mantissa to 7 bits; we implement
+//! round-to-nearest-even on the upper 16 bits.
+
+use crate::linalg::Mat;
+
+/// Round an f32 to the nearest bfloat16-representable value.
+#[inline]
+pub fn bf16_round(x: f32) -> f32 {
+    let bits = x.to_bits();
+    // round-to-nearest-even on bit 16
+    let rounding_bias = 0x7FFF + ((bits >> 16) & 1);
+    let rounded = bits.wrapping_add(rounding_bias) & 0xFFFF_0000;
+    f32::from_bits(rounded)
+}
+
+/// Round all entries of a matrix to bf16 precision (simulating bf16
+/// storage while computing in f32, which is what XLA CPU does too).
+pub fn bf16_round_mat(m: &Mat) -> Mat {
+    Mat::from_vec(m.rows, m.cols, m.data.iter().map(|&x| bf16_round(x)).collect())
+}
+
+/// In-place variant for the training loop's simulated-bf16 mode.
+pub fn bf16_round_inplace(data: &mut [f32]) {
+    for x in data.iter_mut() {
+        *x = bf16_round(*x);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_values_pass_through() {
+        for v in [0.0f32, 1.0, -2.0, 0.5, 256.0] {
+            assert_eq!(bf16_round(v), v);
+        }
+    }
+
+    #[test]
+    fn rounding_error_bounded() {
+        // bf16 has 8 mantissa bits (incl. implicit) => rel err <= 2^-8.
+        for &v in &[1.1f32, 3.14159, -0.001234, 12345.678] {
+            let r = bf16_round(v);
+            assert!(((r - v) / v).abs() <= 1.0 / 256.0, "v={v} r={r}");
+        }
+    }
+
+    #[test]
+    fn idempotent() {
+        for &v in &[1.1f32, -7.77, 0.030303] {
+            let once = bf16_round(v);
+            assert_eq!(bf16_round(once), once);
+        }
+    }
+
+    #[test]
+    fn round_to_nearest_even() {
+        // 1.0 + 2^-8 is exactly halfway between 1.0 and the next bf16;
+        // nearest-even rounds down to 1.0.
+        let halfway = f32::from_bits(0x3F80_8000);
+        assert_eq!(bf16_round(halfway), 1.0);
+    }
+}

@@ -1,0 +1,100 @@
+//! Double quantization (QLoRA §"Double Quantization"): the per-block f32
+//! absmax scales are themselves quantized to 8 bits with one f32
+//! (scale, offset) pair per group of 256 blocks, cutting the scale
+//! overhead from 32 to ~8.5 bits per block (0.5 → 0.127 bits/param).
+
+use super::nf4::Nf4Tensor;
+
+/// Scales per second-level quantization group.
+pub const GROUP: usize = 256;
+
+/// Double-quantized scale storage.
+#[derive(Clone, Debug)]
+pub struct DoubleQuantScales {
+    /// 8-bit codes, one per original scale.
+    pub codes: Vec<u8>,
+    /// Per-group (offset, step) pairs: scale ≈ offset + step * code.
+    pub groups: Vec<(f32, f32)>,
+}
+
+/// Quantize a vector of f32 scales to 8-bit affine codes per group.
+pub fn quantize_scales(scales: &[f32]) -> DoubleQuantScales {
+    let mut codes = vec![0u8; scales.len()];
+    let mut groups = Vec::with_capacity(scales.len().div_ceil(GROUP));
+    for (g, chunk) in scales.chunks(GROUP).enumerate() {
+        let lo = chunk.iter().cloned().fold(f32::INFINITY, f32::min);
+        let hi = chunk.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let step = if hi > lo { (hi - lo) / 255.0 } else { 0.0 };
+        groups.push((lo, step));
+        for (i, &s) in chunk.iter().enumerate() {
+            let code = if step > 0.0 { ((s - lo) / step).round().clamp(0.0, 255.0) as u8 } else { 0 };
+            codes[g * GROUP + i] = code;
+        }
+    }
+    DoubleQuantScales { codes, groups }
+}
+
+/// Dequantize scale codes back to f32.
+pub fn dequantize_scales(dq: &DoubleQuantScales) -> Vec<f32> {
+    dq.codes
+        .iter()
+        .enumerate()
+        .map(|(i, &c)| {
+            let (lo, step) = dq.groups[i / GROUP];
+            lo + step * c as f32
+        })
+        .collect()
+}
+
+/// Apply double quantization to an NF4 tensor in place (replaces its f32
+/// scales with their double-quantized round trip) and return the storage
+/// saving in bytes.
+pub fn double_quantize(t: &mut Nf4Tensor) -> usize {
+    let before = t.scales.len() * 4;
+    let dq = quantize_scales(&t.scales);
+    t.scales = dequantize_scales(&dq);
+    let after = dq.codes.len() + dq.groups.len() * 8;
+    before.saturating_sub(after)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+    use crate::quant::nf4::{dequantize, quantize};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn scale_roundtrip_error_small() {
+        let mut rng = Rng::new(60);
+        let scales: Vec<f32> = (0..1000).map(|_| rng.uniform_in(0.01, 0.2)).collect();
+        let dq = quantize_scales(&scales);
+        let back = dequantize_scales(&dq);
+        for (a, b) in scales.iter().zip(&back) {
+            // 8-bit affine over the group range: error ≤ step/2 ≤ range/510.
+            assert!((a - b).abs() <= (0.2 - 0.01) / 510.0 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn constant_scales_exact() {
+        let scales = vec![0.5f32; 300];
+        let back = dequantize_scales(&quantize_scales(&scales));
+        for b in back {
+            assert_eq!(b, 0.5);
+        }
+    }
+
+    #[test]
+    fn double_quant_saves_memory_and_keeps_error_small() {
+        let mut rng = Rng::new(61);
+        let m = Mat::randn(128, 128, 0.0, 0.05, &mut rng);
+        let mut t = quantize(&m);
+        let base_err = m.sub(&dequantize(&t)).fro();
+        let saved = double_quantize(&mut t);
+        assert!(saved > 0, "saved={saved}");
+        let dq_err = m.sub(&dequantize(&t)).fro();
+        // Double quantization should cost < 5% extra error on Gaussian data.
+        assert!(dq_err < base_err * 1.05, "base={base_err} dq={dq_err}");
+    }
+}

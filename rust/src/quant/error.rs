@@ -1,0 +1,76 @@
+//! Quantization-error measurement (paper §4, §5.3, Appendix E/F).
+//!
+//! The paper quantifies error as the nuclear norm of the difference
+//! between the original weight and its quantized reconstruction
+//! (Eq. 6–8), and reports the *reduction ratio* relative to plain NF4
+//! quantization of the base matrix (QLoRA's error):
+//!     ratio = (1 − ‖W − (nf4(W') + AB)‖_* / ‖W − nf4(W)‖_*) × 100%.
+
+use crate::linalg::{nuclear_norm, Mat};
+use crate::quant::nf4::nf4_roundtrip;
+
+/// ‖W − approx‖_* — the paper's error metric.
+pub fn nuclear_error(w: &Mat, approx: &Mat) -> f64 {
+    nuclear_norm(&w.sub(approx))
+}
+
+/// ‖W − approx‖_F — cheaper Frobenius variant used in Algorithm 1's
+/// objective (Eq. 11/12) and in fast sweeps.
+pub fn fro_error(w: &Mat, approx: &Mat) -> f64 {
+    w.sub(approx).fro()
+}
+
+/// QLoRA baseline error: ‖W − nf4(W)‖_* (adapters start at AB = 0).
+pub fn qlora_error(w: &Mat) -> f64 {
+    nuclear_error(w, &nf4_roundtrip(w))
+}
+
+/// Error of a strategy that stores `base` quantized and `a·b` in full
+/// precision: ‖W − (nf4(base) + ab)‖_*.
+pub fn strategy_error(w: &Mat, base: &Mat, ab: &Mat) -> f64 {
+    let approx = nf4_roundtrip(base).add(ab);
+    nuclear_error(w, &approx)
+}
+
+/// The paper's reduction ratio in percent (Table 3/6, Fig 7a/13).
+pub fn reduction_ratio(w: &Mat, base: &Mat, ab: &Mat) -> f64 {
+    let baseline = qlora_error(w);
+    if baseline == 0.0 {
+        return 0.0;
+    }
+    (1.0 - strategy_error(w, base, ab) / baseline) * 100.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn qlora_ratio_is_zero() {
+        // QLoRA: base = W, AB = 0 ⇒ ratio = 0 by construction (Eq. 6).
+        let mut rng = Rng::new(70);
+        let w = Mat::randn(48, 48, 0.0, 0.05, &mut rng);
+        let zero = Mat::zeros(48, 48);
+        let r = reduction_ratio(&w, &w, &zero);
+        assert!(r.abs() < 1e-9, "r={r}");
+    }
+
+    #[test]
+    fn perfect_adapter_gives_100pct() {
+        // base = 0, AB = W ⇒ error 0 ⇒ ratio 100 (nf4(0) == 0 exactly).
+        let mut rng = Rng::new(71);
+        let w = Mat::randn(32, 32, 0.0, 0.05, &mut rng);
+        let zero = Mat::zeros(32, 32);
+        let r = reduction_ratio(&w, &zero, &w);
+        assert!((r - 100.0).abs() < 1e-6, "r={r}");
+    }
+
+    #[test]
+    fn nuclear_ge_fro() {
+        let mut rng = Rng::new(72);
+        let w = Mat::randn(20, 20, 0.0, 1.0, &mut rng);
+        let approx = Mat::zeros(20, 20);
+        assert!(nuclear_error(&w, &approx) >= fro_error(&w, &approx) - 1e-4);
+    }
+}

@@ -1,0 +1,11 @@
+//! Quantization substrate: 4-bit NormalFloat (NF4) with blockwise absmax
+//! scaling, double quantization of the scales, software bf16 rounding, and
+//! the paper's nuclear-norm quantization-error analysis.
+
+pub mod bf16;
+pub mod double;
+pub mod error;
+pub mod nf4;
+
+pub use error::{qlora_error, reduction_ratio, strategy_error};
+pub use nf4::{dequantize, nf4_roundtrip, quantize, Nf4Tensor};

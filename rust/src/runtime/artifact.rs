@@ -1,0 +1,258 @@
+//! Artifact registry: parses `artifacts/manifest.json` (written by
+//! python/compile/aot.py) into typed descriptors. The manifest's argument
+//! order IS the HLO parameter order — the trainer builds its literal
+//! lists from these descriptors and nothing else.
+
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// One argument or output of an artifact.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArgSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl ArgSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+    fn from_json(j: &Json) -> Result<ArgSpec> {
+        Ok(ArgSpec {
+            name: j.req_str("name")?.to_string(),
+            shape: j
+                .req_arr("shape")?
+                .iter()
+                .map(|v| v.as_usize().unwrap_or(0))
+                .collect(),
+            dtype: j.req_str("dtype")?.to_string(),
+        })
+    }
+}
+
+/// Descriptor of a lowered artifact (train step, logits fn, …).
+#[derive(Clone, Debug)]
+pub struct Artifact {
+    pub name: String,
+    pub file: String,
+    pub kind: String,
+    pub config: String,
+    pub rank: usize,
+    pub full_ft: bool,
+    pub regression: bool,
+    pub batch: usize,
+    pub seq_len: usize,
+    pub vocab: usize,
+    pub frozen_names: Vec<String>,
+    pub trainable_names: Vec<String>,
+    pub args: Vec<ArgSpec>,
+    pub outputs: Vec<ArgSpec>,
+}
+
+impl Artifact {
+    /// Number of leading data arguments (tokens/masks/labels/lr/step)
+    /// before the parameter block begins.
+    pub fn n_data_args(&self) -> usize {
+        self.args.len()
+            - self.frozen_names.len()
+            - if self.kind.contains("logits") { 1 } else { 3 } * self.trainable_names.len()
+    }
+
+    /// Shape of a named argument.
+    pub fn arg_shape(&self, name: &str) -> Result<&[usize]> {
+        self.args
+            .iter()
+            .find(|a| a.name == name)
+            .map(|a| a.shape.as_slice())
+            .ok_or_else(|| anyhow::anyhow!("artifact {} has no arg '{name}'", self.name))
+    }
+}
+
+/// Model configuration echoed into the manifest.
+#[derive(Clone, Debug)]
+pub struct ConfigInfo {
+    pub name: String,
+    pub kind: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub seq_len: usize,
+    pub batch: usize,
+    pub eval_batch: usize,
+    pub n_classes: usize,
+    pub ranks: Vec<usize>,
+}
+
+/// The whole manifest.
+#[derive(Debug)]
+pub struct Manifest {
+    pub artifacts: BTreeMap<String, Artifact>,
+    pub configs: BTreeMap<String, ConfigInfo>,
+}
+
+impl Manifest {
+    pub fn load(art_dir: &Path) -> Result<Manifest> {
+        let path = art_dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+
+        let mut artifacts = BTreeMap::new();
+        for (name, entry) in j
+            .get("artifacts")
+            .and_then(|a| a.as_obj())
+            .context("manifest missing 'artifacts'")?
+        {
+            let args = entry
+                .req_arr("args")?
+                .iter()
+                .map(ArgSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = entry
+                .req_arr("outputs")?
+                .iter()
+                .map(ArgSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            artifacts.insert(
+                name.clone(),
+                Artifact {
+                    name: name.clone(),
+                    file: entry.req_str("file")?.to_string(),
+                    kind: entry.req_str("kind")?.to_string(),
+                    config: entry.req_str("config")?.to_string(),
+                    rank: entry.req_usize("rank")?,
+                    full_ft: entry.get("full_ft").and_then(|v| v.as_bool()).unwrap_or(false),
+                    regression: entry.get("regression").and_then(|v| v.as_bool()).unwrap_or(false),
+                    batch: entry.req_usize("batch")?,
+                    seq_len: entry.req_usize("seq_len")?,
+                    vocab: entry.req_usize("vocab")?,
+                    frozen_names: entry
+                        .req_arr("frozen_names")?
+                        .iter()
+                        .filter_map(|v| v.as_str().map(String::from))
+                        .collect(),
+                    trainable_names: entry
+                        .req_arr("trainable_names")?
+                        .iter()
+                        .filter_map(|v| v.as_str().map(String::from))
+                        .collect(),
+                    args,
+                    outputs,
+                },
+            );
+        }
+
+        let mut configs = BTreeMap::new();
+        if let Some(cfgs) = j.get("configs").and_then(|c| c.as_obj()) {
+            for (name, c) in cfgs {
+                configs.insert(
+                    name.clone(),
+                    ConfigInfo {
+                        name: name.clone(),
+                        kind: c.req_str("kind")?.to_string(),
+                        vocab: c.req_usize("vocab")?,
+                        d_model: c.req_usize("d_model")?,
+                        n_layers: c.req_usize("n_layers")?,
+                        n_heads: c.req_usize("n_heads")?,
+                        d_ff: c.req_usize("d_ff")?,
+                        seq_len: c.req_usize("seq_len")?,
+                        batch: c.req_usize("batch")?,
+                        eval_batch: c.req_usize("eval_batch")?,
+                        n_classes: c.req_usize("n_classes")?,
+                        ranks: c
+                            .req_arr("ranks")?
+                            .iter()
+                            .filter_map(|v| v.as_usize())
+                            .collect(),
+                    },
+                );
+            }
+        }
+        Ok(Manifest { artifacts, configs })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Artifact> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("manifest has no artifact '{name}' (have: {:?})",
+                self.artifacts.keys().take(8).collect::<Vec<_>>()))
+    }
+
+    pub fn config(&self, name: &str) -> Result<&ConfigInfo> {
+        self.configs
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("manifest has no config '{name}'"))
+    }
+
+    /// Conventional artifact names.
+    pub fn train_name(config: &str, rank: usize, full_ft: bool) -> String {
+        if full_ft {
+            format!("train_{config}_full")
+        } else {
+            format!("train_{config}_r{rank}")
+        }
+    }
+    pub fn logits_name(config: &str, rank: usize, full_ft: bool) -> String {
+        if full_ft {
+            format!("logits_{config}_full")
+        } else {
+            format!("logits_{config}_r{rank}")
+        }
+    }
+    pub fn enc_train_name(config: &str, rank: usize, full_ft: bool, regression: bool) -> String {
+        let tag = if full_ft { "full".to_string() } else { format!("r{rank}") };
+        let suffix = if regression { "reg" } else { "cls" };
+        format!("train_{config}_{tag}_{suffix}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn art_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn manifest_loads_and_is_consistent() {
+        let dir = art_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not generated");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(!m.artifacts.is_empty());
+        for (name, art) in &m.artifacts {
+            assert!(dir.join(&art.file).exists(), "{name}: file missing");
+            assert!(!art.args.is_empty());
+            if art.kind == "train" {
+                // 4 data args + frozen + 3×trainable
+                assert_eq!(
+                    art.args.len(),
+                    4 + art.frozen_names.len() + 3 * art.trainable_names.len(),
+                    "{name} arg count"
+                );
+                assert_eq!(art.outputs[0].name, "loss");
+            }
+        }
+        // configs echoed
+        assert!(m.configs.contains_key("tiny"));
+        let tiny = m.config("tiny").unwrap();
+        assert_eq!(tiny.kind, "decoder");
+        assert!(tiny.ranks.contains(&4));
+    }
+
+    #[test]
+    fn names() {
+        assert_eq!(Manifest::train_name("tiny", 4, false), "train_tiny_r4");
+        assert_eq!(Manifest::train_name("tiny", 0, true), "train_tiny_full");
+        assert_eq!(Manifest::enc_train_name("enc_tiny", 4, false, true), "train_enc_tiny_r4_reg");
+    }
+}

@@ -1,0 +1,110 @@
+//! PJRT client wrapper: loads HLO-text artifacts and compiles them into
+//! executables. One `Runtime` per process; executables are cached by
+//! artifact name so repeated `load` calls are free.
+
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// Wraps the PJRT CPU client plus a compile cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+    art_dir: PathBuf,
+}
+
+impl Runtime {
+    /// Create a CPU runtime rooted at an artifacts directory.
+    pub fn cpu(art_dir: &Path) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            cache: Mutex::new(HashMap::new()),
+            art_dir: art_dir.to_path_buf(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn artifacts_dir(&self) -> &Path {
+        &self.art_dir
+    }
+
+    /// Load (and cache) an executable from `<art_dir>/<file>` (HLO text).
+    pub fn load(&self, name: &str, file: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        {
+            let cache = self.cache.lock().unwrap();
+            if let Some(exe) = cache.get(name) {
+                return Ok(exe.clone());
+            }
+        }
+        let path = self.art_dir.join(file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact '{name}'"))?;
+        let exe = std::sync::Arc::new(exe);
+        self.cache.lock().unwrap().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute with the given input literals; returns the flattened tuple
+    /// elements (the AOT pipeline lowers with return_tuple=True).
+    pub fn execute(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        inputs: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let mut result = exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+        let elems = result.decompose_tuple()?;
+        Ok(elems)
+    }
+
+    /// Execute with borrowed literals (hot path: cached frozen parameters
+    /// are passed by reference, avoiding a re-marshal per step).
+    pub fn execute_refs(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        inputs: &[&xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let mut result = exe.execute::<&xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+        let elems = result.decompose_tuple()?;
+        Ok(elems)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn art_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn cpu_client_boots() {
+        let rt = Runtime::cpu(&art_dir()).unwrap();
+        assert!(rt.platform().to_lowercase().contains("cpu") || !rt.platform().is_empty());
+    }
+
+    #[test]
+    fn load_caches() {
+        let dir = art_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not generated");
+            return;
+        }
+        let rt = Runtime::cpu(&dir).unwrap();
+        let a = rt.load("logits_tiny_r4", "logits_tiny_r4.hlo.txt").unwrap();
+        let b = rt.load("logits_tiny_r4", "logits_tiny_r4.hlo.txt").unwrap();
+        assert!(std::sync::Arc::ptr_eq(&a, &b));
+    }
+}

@@ -1,0 +1,157 @@
+//! Literal marshalling: `Mat` / vectors / scalars ⇄ `xla::Literal`.
+//!
+//! The AOT artifacts take flat argument lists in manifest order; these
+//! helpers build those lists and unpack the tupled outputs.
+
+use crate::linalg::Mat;
+use anyhow::Result;
+
+/// A stacked 3-D tensor [layers, rows, cols] stored as a Vec<Mat> —
+/// the layout the L2 model uses for per-layer parameters.
+#[derive(Clone, Debug)]
+pub struct Stacked {
+    pub layers: Vec<Mat>,
+}
+
+impl Stacked {
+    pub fn new(layers: Vec<Mat>) -> Stacked {
+        assert!(!layers.is_empty());
+        let (r, c) = (layers[0].rows, layers[0].cols);
+        assert!(layers.iter().all(|m| m.rows == r && m.cols == c), "ragged stack");
+        Stacked { layers }
+    }
+    pub fn zeros(l: usize, rows: usize, cols: usize) -> Stacked {
+        Stacked { layers: (0..l).map(|_| Mat::zeros(rows, cols)).collect() }
+    }
+    pub fn shape(&self) -> (usize, usize, usize) {
+        (self.layers.len(), self.layers[0].rows, self.layers[0].cols)
+    }
+    pub fn numel(&self) -> usize {
+        let (l, r, c) = self.shape();
+        l * r * c
+    }
+    /// Frobenius norm over the whole stack.
+    pub fn fro(&self) -> f64 {
+        self.layers.iter().map(|m| m.fro().powi(2)).sum::<f64>().sqrt()
+    }
+}
+
+/// f32 tensor literal from a flat buffer + dims.
+pub fn lit_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    anyhow::ensure!(n as usize == data.len(), "dims {dims:?} vs len {}", data.len());
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+/// i32 tensor literal.
+pub fn lit_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    anyhow::ensure!(n as usize == data.len(), "dims {dims:?} vs len {}", data.len());
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+/// Scalar literals.
+pub fn lit_scalar_f32(x: f32) -> xla::Literal {
+    xla::Literal::scalar(x)
+}
+
+/// 2-D matrix literal.
+pub fn lit_mat(m: &Mat) -> Result<xla::Literal> {
+    lit_f32(&m.data, &[m.rows as i64, m.cols as i64])
+}
+
+/// Stacked [L, r, c] literal.
+pub fn lit_stacked(s: &Stacked) -> Result<xla::Literal> {
+    let (l, r, c) = s.shape();
+    let mut flat = Vec::with_capacity(l * r * c);
+    for m in &s.layers {
+        flat.extend_from_slice(&m.data);
+    }
+    lit_f32(&flat, &[l as i64, r as i64, c as i64])
+}
+
+/// 1-D vector literal.
+pub fn lit_vec(v: &[f32]) -> Result<xla::Literal> {
+    lit_f32(v, &[v.len() as i64])
+}
+
+/// Extract a scalar f32 from a literal.
+pub fn scalar_f32(lit: &xla::Literal) -> Result<f32> {
+    Ok(lit.get_first_element::<f32>()?)
+}
+
+/// Extract a flat f32 vector.
+pub fn vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+/// Extract a Mat given its expected dims.
+pub fn mat_from(lit: &xla::Literal, rows: usize, cols: usize) -> Result<Mat> {
+    let v = vec_f32(lit)?;
+    anyhow::ensure!(v.len() == rows * cols, "literal has {} elems, want {rows}x{cols}", v.len());
+    Ok(Mat::from_vec(rows, cols, v))
+}
+
+/// Extract a Stacked tensor given its expected dims.
+pub fn stacked_from(lit: &xla::Literal, l: usize, rows: usize, cols: usize) -> Result<Stacked> {
+    let v = vec_f32(lit)?;
+    anyhow::ensure!(v.len() == l * rows * cols, "literal has {} elems, want {l}x{rows}x{cols}", v.len());
+    let layers = (0..l)
+        .map(|i| Mat::from_vec(rows, cols, v[i * rows * cols..(i + 1) * rows * cols].to_vec()))
+        .collect();
+    Ok(Stacked::new(layers))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn stacked_invariants() {
+        let s = Stacked::zeros(3, 4, 5);
+        assert_eq!(s.shape(), (3, 4, 5));
+        assert_eq!(s.numel(), 60);
+        assert_eq!(s.fro(), 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "ragged")]
+    fn ragged_stack_panics() {
+        Stacked::new(vec![Mat::zeros(2, 2), Mat::zeros(3, 2)]);
+    }
+
+    #[test]
+    fn literal_roundtrip_mat() {
+        let mut rng = Rng::new(1);
+        let m = Mat::randn(5, 7, 0.0, 1.0, &mut rng);
+        let lit = lit_mat(&m).unwrap();
+        let back = mat_from(&lit, 5, 7).unwrap();
+        assert_eq!(back.data, m.data);
+    }
+
+    #[test]
+    fn literal_roundtrip_stacked() {
+        let mut rng = Rng::new(2);
+        let s = Stacked::new(vec![
+            Mat::randn(3, 4, 0.0, 1.0, &mut rng),
+            Mat::randn(3, 4, 0.0, 1.0, &mut rng),
+        ]);
+        let lit = lit_stacked(&s).unwrap();
+        let back = stacked_from(&lit, 2, 3, 4).unwrap();
+        for (a, b) in back.layers.iter().zip(&s.layers) {
+            assert_eq!(a.data, b.data);
+        }
+    }
+
+    #[test]
+    fn literal_scalar() {
+        let lit = lit_scalar_f32(3.5);
+        assert_eq!(scalar_f32(&lit).unwrap(), 3.5);
+    }
+
+    #[test]
+    fn dim_mismatch_errors() {
+        assert!(lit_f32(&[1.0, 2.0], &[3]).is_err());
+    }
+}

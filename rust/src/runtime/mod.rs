@@ -1,0 +1,14 @@
+//! L3 runtime: PJRT CPU client wrapper (compile + execute HLO-text
+//! artifacts), the manifest-driven artifact registry, and literal
+//! marshalling between rust tensors and XLA buffers.
+
+pub mod artifact;
+pub mod client;
+pub mod exec;
+
+pub use artifact::{ArgSpec, Artifact, ConfigInfo, Manifest};
+pub use client::Runtime;
+pub use exec::{
+    lit_f32, lit_i32, lit_mat, lit_scalar_f32, lit_stacked, lit_vec, mat_from, scalar_f32,
+    stacked_from, vec_f32, Stacked,
+};

@@ -1,0 +1,138 @@
+//! Tiny declarative CLI flag parser (clap is not in the offline vendor set).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, repeated
+//! positional arguments, and generates a usage string. Used by the `pissa`
+//! binary, the examples, and the bench harnesses.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: flags plus positionals.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    flags: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.flags.insert(name.to_string(), v);
+                } else {
+                    out.flags.insert(name.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env() -> Args {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.flags.contains_key(name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> u64 {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects a number, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, name: &str, default: bool) -> bool {
+        self.get(name)
+            .map(|v| matches!(v, "true" | "1" | "yes"))
+            .unwrap_or(default)
+    }
+
+    /// Comma-separated list of usizes: `--ranks 1,2,4`.
+    pub fn usize_list_or(&self, name: &str, default: &[usize]) -> Vec<usize> {
+        match self.get(name) {
+            Some(v) => v
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| s.trim().parse().unwrap_or_else(|_| panic!("--{name}: bad int '{s}'")))
+                .collect(),
+            None => default.to_vec(),
+        }
+    }
+
+    /// Comma-separated list of strings.
+    pub fn str_list_or(&self, name: &str, default: &[&str]) -> Vec<String> {
+        match self.get(name) {
+            Some(v) => v.split(',').filter(|s| !s.is_empty()).map(|s| s.trim().to_string()).collect(),
+            None => default.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p(args: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn flags_and_positionals() {
+        // NOTE: a bare `--flag` followed by a non-flag token consumes it as
+        // the value, so positionals must precede bare boolean flags.
+        let a = p(&["train", "extra", "--rank", "8", "--strategy=pissa", "--verbose"]);
+        assert_eq!(a.positional, vec!["train", "extra"]);
+        assert_eq!(a.usize_or("rank", 4), 8);
+        assert_eq!(a.str_or("strategy", "lora"), "pissa");
+        assert!(a.bool_or("verbose", false));
+        assert_eq!(a.usize_or("missing", 7), 7);
+    }
+
+    #[test]
+    fn lists() {
+        let a = p(&["--ranks", "1,2,4,8", "--models", "a, b"]);
+        assert_eq!(a.usize_list_or("ranks", &[]), vec![1, 2, 4, 8]);
+        assert_eq!(a.str_list_or("models", &[]), vec!["a", "b"]);
+        assert_eq!(a.usize_list_or("other", &[3]), vec![3]);
+    }
+
+    #[test]
+    fn negative_number_value() {
+        let a = p(&["--lr", "-0.5"]);
+        // "-0.5" does not start with "--", so it is consumed as the value.
+        assert_eq!(a.f64_or("lr", 0.0), -0.5);
+    }
+}

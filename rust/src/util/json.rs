@@ -1,0 +1,494 @@
+//! Minimal JSON value model, parser, and writer.
+//!
+//! serde is not in the offline vendor set, so config files and the AOT
+//! `manifest.json` are handled by this hand-rolled implementation. It
+//! supports the full JSON grammar we emit from python (`json.dump`):
+//! objects, arrays, strings (with escapes), numbers, booleans, null.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A JSON value. Objects use a BTreeMap for deterministic iteration.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(BTreeMap<String, Json>),
+}
+
+impl Json {
+    pub fn obj() -> Json {
+        Json::Obj(BTreeMap::new())
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_f64().map(|n| n as usize)
+    }
+    pub fn as_i64(&self) -> Option<i64> {
+        self.as_f64().map(|n| n as i64)
+    }
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(a) => Some(a),
+            _ => None,
+        }
+    }
+    pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
+        match self {
+            Json::Obj(o) => Some(o),
+            _ => None,
+        }
+    }
+    /// Object field access: `j.get("key")`.
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        self.as_obj().and_then(|o| o.get(key))
+    }
+    /// Required typed accessors (error messages name the key).
+    pub fn req_str(&self, key: &str) -> anyhow::Result<&str> {
+        self.get(key)
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| anyhow::anyhow!("missing/invalid string field '{key}'"))
+    }
+    pub fn req_usize(&self, key: &str) -> anyhow::Result<usize> {
+        self.get(key)
+            .and_then(|v| v.as_f64())
+            .map(|n| n as usize)
+            .ok_or_else(|| anyhow::anyhow!("missing/invalid numeric field '{key}'"))
+    }
+    pub fn req_f64(&self, key: &str) -> anyhow::Result<f64> {
+        self.get(key)
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| anyhow::anyhow!("missing/invalid numeric field '{key}'"))
+    }
+    pub fn req_arr(&self, key: &str) -> anyhow::Result<&[Json]> {
+        self.get(key)
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("missing/invalid array field '{key}'"))
+    }
+    /// Insert into an object value (panics if not an object).
+    pub fn set(&mut self, key: &str, val: Json) {
+        match self {
+            Json::Obj(o) => {
+                o.insert(key.to_string(), val);
+            }
+            _ => panic!("Json::set on non-object"),
+        }
+    }
+
+    /// Parse a JSON document.
+    pub fn parse(src: &str) -> anyhow::Result<Json> {
+        let mut p = Parser {
+            b: src.as_bytes(),
+            i: 0,
+        };
+        p.ws();
+        let v = p.value()?;
+        p.ws();
+        if p.i != p.b.len() {
+            anyhow::bail!("trailing characters at byte {}", p.i);
+        }
+        Ok(v)
+    }
+
+    /// Compact serialization.
+    pub fn to_string(&self) -> String {
+        let mut s = String::new();
+        self.write(&mut s, None, 0);
+        s
+    }
+
+    /// Pretty serialization with 2-space indent.
+    pub fn to_pretty(&self) -> String {
+        let mut s = String::new();
+        self.write(&mut s, Some(2), 0);
+        s.push('\n');
+        s
+    }
+
+    fn write(&self, out: &mut String, indent: Option<usize>, depth: usize) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(n) => {
+                if n.fract() == 0.0 && n.abs() < 1e15 {
+                    out.push_str(&format!("{}", *n as i64));
+                } else {
+                    out.push_str(&format!("{n}"));
+                }
+            }
+            Json::Str(s) => write_escaped(out, s),
+            Json::Arr(a) => {
+                out.push('[');
+                for (i, v) in a.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    if let Some(w) = indent {
+                        out.push('\n');
+                        out.push_str(&" ".repeat(w * (depth + 1)));
+                    }
+                    v.write(out, indent, depth + 1);
+                }
+                if indent.is_some() && !a.is_empty() {
+                    out.push('\n');
+                    out.push_str(&" ".repeat(indent.unwrap() * depth));
+                }
+                out.push(']');
+            }
+            Json::Obj(o) => {
+                out.push('{');
+                for (i, (k, v)) in o.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    if let Some(w) = indent {
+                        out.push('\n');
+                        out.push_str(&" ".repeat(w * (depth + 1)));
+                    }
+                    write_escaped(out, k);
+                    out.push(':');
+                    if indent.is_some() {
+                        out.push(' ');
+                    }
+                    v.write(out, indent, depth + 1);
+                }
+                if indent.is_some() && !o.is_empty() {
+                    out.push('\n');
+                    out.push_str(&" ".repeat(indent.unwrap() * depth));
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+impl fmt::Display for Json {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.to_string())
+    }
+}
+
+fn write_escaped(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn ws(&mut self) {
+        while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> anyhow::Result<u8> {
+        self.b
+            .get(self.i)
+            .copied()
+            .ok_or_else(|| anyhow::anyhow!("unexpected end of JSON"))
+    }
+
+    fn expect(&mut self, c: u8) -> anyhow::Result<()> {
+        if self.peek()? != c {
+            anyhow::bail!(
+                "expected '{}' at byte {}, found '{}'",
+                c as char,
+                self.i,
+                self.b[self.i] as char
+            );
+        }
+        self.i += 1;
+        Ok(())
+    }
+
+    fn value(&mut self) -> anyhow::Result<Json> {
+        match self.peek()? {
+            b'{' => self.object(),
+            b'[' => self.array(),
+            b'"' => Ok(Json::Str(self.string()?)),
+            b't' => self.lit("true", Json::Bool(true)),
+            b'f' => self.lit("false", Json::Bool(false)),
+            b'n' => self.lit("null", Json::Null),
+            _ => self.number(),
+        }
+    }
+
+    fn lit(&mut self, word: &str, v: Json) -> anyhow::Result<Json> {
+        if self.b[self.i..].starts_with(word.as_bytes()) {
+            self.i += word.len();
+            Ok(v)
+        } else {
+            anyhow::bail!("invalid literal at byte {}", self.i)
+        }
+    }
+
+    fn object(&mut self) -> anyhow::Result<Json> {
+        self.expect(b'{')?;
+        let mut map = BTreeMap::new();
+        self.ws();
+        if self.peek()? == b'}' {
+            self.i += 1;
+            return Ok(Json::Obj(map));
+        }
+        loop {
+            self.ws();
+            let key = self.string()?;
+            self.ws();
+            self.expect(b':')?;
+            self.ws();
+            let val = self.value()?;
+            map.insert(key, val);
+            self.ws();
+            match self.peek()? {
+                b',' => {
+                    self.i += 1;
+                }
+                b'}' => {
+                    self.i += 1;
+                    return Ok(Json::Obj(map));
+                }
+                c => anyhow::bail!("expected ',' or '}}' at byte {}, found '{}'", self.i, c as char),
+            }
+        }
+    }
+
+    fn array(&mut self) -> anyhow::Result<Json> {
+        self.expect(b'[')?;
+        let mut arr = Vec::new();
+        self.ws();
+        if self.peek()? == b']' {
+            self.i += 1;
+            return Ok(Json::Arr(arr));
+        }
+        loop {
+            self.ws();
+            arr.push(self.value()?);
+            self.ws();
+            match self.peek()? {
+                b',' => {
+                    self.i += 1;
+                }
+                b']' => {
+                    self.i += 1;
+                    return Ok(Json::Arr(arr));
+                }
+                c => anyhow::bail!("expected ',' or ']' at byte {}, found '{}'", self.i, c as char),
+            }
+        }
+    }
+
+    fn string(&mut self) -> anyhow::Result<String> {
+        self.expect(b'"')?;
+        let mut s = String::new();
+        loop {
+            let c = self.peek()?;
+            self.i += 1;
+            match c {
+                b'"' => return Ok(s),
+                b'\\' => {
+                    let e = self.peek()?;
+                    self.i += 1;
+                    match e {
+                        b'"' => s.push('"'),
+                        b'\\' => s.push('\\'),
+                        b'/' => s.push('/'),
+                        b'n' => s.push('\n'),
+                        b't' => s.push('\t'),
+                        b'r' => s.push('\r'),
+                        b'b' => s.push('\u{8}'),
+                        b'f' => s.push('\u{c}'),
+                        b'u' => {
+                            if self.i + 4 > self.b.len() {
+                                anyhow::bail!("truncated \\u escape");
+                            }
+                            let hex = std::str::from_utf8(&self.b[self.i..self.i + 4])?;
+                            let cp = u32::from_str_radix(hex, 16)?;
+                            self.i += 4;
+                            // Surrogate pairs: only handle BMP + paired surrogates.
+                            let ch = if (0xD800..0xDC00).contains(&cp) {
+                                // expect low surrogate
+                                if self.b.get(self.i) == Some(&b'\\')
+                                    && self.b.get(self.i + 1) == Some(&b'u')
+                                {
+                                    let hex2 =
+                                        std::str::from_utf8(&self.b[self.i + 2..self.i + 6])?;
+                                    let lo = u32::from_str_radix(hex2, 16)?;
+                                    self.i += 6;
+                                    0x10000 + ((cp - 0xD800) << 10) + (lo - 0xDC00)
+                                } else {
+                                    anyhow::bail!("lone high surrogate");
+                                }
+                            } else {
+                                cp
+                            };
+                            s.push(char::from_u32(ch).unwrap_or('\u{FFFD}'));
+                        }
+                        c => anyhow::bail!("bad escape '\\{}'", c as char),
+                    }
+                }
+                c if c < 0x80 => s.push(c as char),
+                c => {
+                    // Multi-byte UTF-8: copy the remaining continuation bytes.
+                    let len = if c >= 0xF0 {
+                        4
+                    } else if c >= 0xE0 {
+                        3
+                    } else {
+                        2
+                    };
+                    let start = self.i - 1;
+                    let chunk = std::str::from_utf8(&self.b[start..start + len])?;
+                    s.push_str(chunk);
+                    self.i = start + len;
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> anyhow::Result<Json> {
+        let start = self.i;
+        while self.i < self.b.len()
+            && matches!(self.b[self.i], b'-' | b'+' | b'.' | b'e' | b'E' | b'0'..=b'9')
+        {
+            self.i += 1;
+        }
+        let txt = std::str::from_utf8(&self.b[start..self.i])?;
+        let n: f64 = txt
+            .parse()
+            .map_err(|_| anyhow::anyhow!("invalid number '{txt}' at byte {start}"))?;
+        Ok(Json::Num(n))
+    }
+}
+
+/// Convenience constructors.
+pub fn jnum(n: f64) -> Json {
+    Json::Num(n)
+}
+pub fn jstr(s: &str) -> Json {
+    Json::Str(s.to_string())
+}
+pub fn jarr<I: IntoIterator<Item = Json>>(it: I) -> Json {
+    Json::Arr(it.into_iter().collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_basic() {
+        let src = r#"{"a": 1, "b": [true, null, "x\ny"], "c": {"d": -2.5e3}}"#;
+        let v = Json::parse(src).unwrap();
+        assert_eq!(v.get("a").unwrap().as_f64(), Some(1.0));
+        assert_eq!(v.get("c").unwrap().get("d").unwrap().as_f64(), Some(-2500.0));
+        let re = Json::parse(&v.to_string()).unwrap();
+        assert_eq!(v, re);
+        let re2 = Json::parse(&v.to_pretty()).unwrap();
+        assert_eq!(v, re2);
+    }
+
+    #[test]
+    fn unicode_and_escapes() {
+        let src = r#"{"s": "café 😀 \"q\" \\"}"#;
+        let v = Json::parse(src).unwrap();
+        assert_eq!(v.get("s").unwrap().as_str(), Some("café 😀 \"q\" \\"));
+        let rt = Json::parse(&v.to_string()).unwrap();
+        assert_eq!(v, rt);
+    }
+
+    #[test]
+    fn raw_utf8_passthrough() {
+        let src = "{\"s\": \"héllo→世界\"}";
+        let v = Json::parse(src).unwrap();
+        assert_eq!(v.get("s").unwrap().as_str(), Some("héllo→世界"));
+    }
+
+    #[test]
+    fn errors() {
+        assert!(Json::parse("{").is_err());
+        assert!(Json::parse("[1,]").is_err());
+        assert!(Json::parse("12 34").is_err());
+        assert!(Json::parse(r#"{"a" 1}"#).is_err());
+    }
+
+    #[test]
+    fn numbers() {
+        for (s, want) in [
+            ("0", 0.0),
+            ("-0.5", -0.5),
+            ("1e-3", 0.001),
+            ("123456789", 123456789.0),
+            ("3.14159", 3.14159),
+        ] {
+            assert_eq!(Json::parse(s).unwrap().as_f64(), Some(want), "src={s}");
+        }
+    }
+
+    #[test]
+    fn fuzz_roundtrip_random_trees() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(0xC0FFEE);
+        for _ in 0..50 {
+            let tree = random_tree(&mut rng, 0);
+            let s = tree.to_string();
+            let back = Json::parse(&s).unwrap();
+            assert_eq!(tree, back, "src={s}");
+        }
+    }
+
+    fn random_tree(rng: &mut crate::util::rng::Rng, depth: usize) -> Json {
+        let pick = if depth > 3 { rng.below(4) } else { rng.below(6) };
+        match pick {
+            0 => Json::Null,
+            1 => Json::Bool(rng.below(2) == 0),
+            2 => Json::Num((rng.range_i64(-1000, 1000) as f64) / 8.0),
+            3 => {
+                let n = rng.below(8);
+                Json::Str((0..n).map(|_| *rng.choice(&['a', 'é', '\n', '"', 'z'])).collect())
+            }
+            4 => Json::Arr((0..rng.below(4)).map(|_| random_tree(rng, depth + 1)).collect()),
+            _ => {
+                let mut o = BTreeMap::new();
+                for i in 0..rng.below(4) {
+                    o.insert(format!("k{i}"), random_tree(rng, depth + 1));
+                }
+                Json::Obj(o)
+            }
+        }
+    }
+}

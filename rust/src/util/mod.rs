@@ -1,0 +1,9 @@
+//! Foundation utilities built from scratch for the offline environment:
+//! PRNG, JSON, CLI parsing, timing/bench statistics, and thread-based
+//! data parallelism.
+
+pub mod cli;
+pub mod json;
+pub mod par;
+pub mod rng;
+pub mod timer;

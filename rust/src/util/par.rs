@@ -1,0 +1,112 @@
+//! Scoped-thread data parallelism (rayon is not in the offline vendor set).
+//!
+//! `par_chunks_mut` splits a mutable slice into contiguous chunks and runs a
+//! closure on each chunk on its own OS thread via `std::thread::scope`;
+//! `par_for` distributes an index range. Threads are cheap at our scale
+//! (a handful of spawns per GEMM call on matrices ≥256²; smaller work runs
+//! inline).
+
+/// Number of worker threads to use (cores, overridable with PISSA_THREADS).
+pub fn num_threads() -> usize {
+    if let Ok(v) = std::env::var("PISSA_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Run `f(start, end)` over disjoint subranges of `0..n` in parallel.
+/// `min_grain` is the smallest range worth a thread; below
+/// `2 * min_grain` everything runs inline on the caller thread.
+pub fn par_for<F>(n: usize, min_grain: usize, f: F)
+where
+    F: Fn(usize, usize) + Sync,
+{
+    let workers = num_threads().min(n / min_grain.max(1)).max(1);
+    if workers <= 1 {
+        f(0, n);
+        return;
+    }
+    let chunk = n.div_ceil(workers);
+    std::thread::scope(|s| {
+        for w in 0..workers {
+            let lo = w * chunk;
+            let hi = ((w + 1) * chunk).min(n);
+            if lo >= hi {
+                break;
+            }
+            let f = &f;
+            s.spawn(move || f(lo, hi));
+        }
+    });
+}
+
+/// Parallel iteration over mutable, equally-sized row chunks of a slice.
+/// `rows` logical rows of width `width`; each worker gets a contiguous row
+/// range `[lo, hi)` plus the matching mutable sub-slice.
+pub fn par_rows_mut<T, F>(data: &mut [T], rows: usize, width: usize, min_rows: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, usize, &mut [T]) + Sync,
+{
+    assert_eq!(data.len(), rows * width, "slice/rows/width mismatch");
+    let workers = num_threads().min(rows / min_rows.max(1)).max(1);
+    if workers <= 1 {
+        f(0, rows, data);
+        return;
+    }
+    let chunk_rows = rows.div_ceil(workers);
+    std::thread::scope(|s| {
+        let mut rest = data;
+        let mut row = 0;
+        while row < rows {
+            let take = chunk_rows.min(rows - row);
+            let (head, tail) = rest.split_at_mut(take * width);
+            rest = tail;
+            let f = &f;
+            let lo = row;
+            s.spawn(move || f(lo, lo + take, head));
+            row += take;
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn par_for_covers_range() {
+        let total = AtomicUsize::new(0);
+        par_for(1000, 10, |lo, hi| {
+            total.fetch_add(hi - lo, Ordering::Relaxed);
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 1000);
+    }
+
+    #[test]
+    fn par_for_small_runs_inline() {
+        let total = AtomicUsize::new(0);
+        par_for(3, 100, |lo, hi| {
+            total.fetch_add(hi - lo, Ordering::Relaxed);
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn par_rows_mut_writes_all() {
+        let rows = 64;
+        let width = 16;
+        let mut v = vec![0u32; rows * width];
+        par_rows_mut(&mut v, rows, width, 4, |lo, _hi, chunk| {
+            for (i, x) in chunk.iter_mut().enumerate() {
+                *x = (lo * width + i) as u32;
+            }
+        });
+        for (i, x) in v.iter().enumerate() {
+            assert_eq!(*x, i as u32);
+        }
+    }
+}

@@ -1,0 +1,113 @@
+//! Timing and micro-benchmark statistics (criterion is not available
+//! offline; the bench harnesses use this instead).
+
+use std::time::Instant;
+
+/// Simple scope timer.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Timer {
+        Timer { start: Instant::now() }
+    }
+    pub fn secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+    pub fn ms(&self) -> f64 {
+        self.secs() * 1e3
+    }
+    pub fn us(&self) -> f64 {
+        self.secs() * 1e6
+    }
+}
+
+/// Summary statistics over a set of timed samples (seconds).
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub max: f64,
+}
+
+impl BenchStats {
+    pub fn from_samples(mut samples: Vec<f64>) -> BenchStats {
+        assert!(!samples.is_empty());
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        let pct = |p: f64| samples[((p * (n - 1) as f64).round() as usize).min(n - 1)];
+        BenchStats {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: samples[0],
+            p50: pct(0.50),
+            p95: pct(0.95),
+            max: samples[n - 1],
+        }
+    }
+
+    /// Render as `mean ± std (min … p95)` with automatic unit scaling.
+    pub fn human(&self) -> String {
+        fn unit(s: f64) -> String {
+            if s >= 1.0 {
+                format!("{s:.3} s")
+            } else if s >= 1e-3 {
+                format!("{:.3} ms", s * 1e3)
+            } else {
+                format!("{:.1} µs", s * 1e6)
+            }
+        }
+        format!(
+            "{} ± {} (min {}, p95 {})",
+            unit(self.mean),
+            unit(self.std),
+            unit(self.min),
+            unit(self.p95)
+        )
+    }
+}
+
+/// Run `f` repeatedly: `warmup` discarded iterations then `iters` timed ones.
+pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    BenchStats::from_samples(samples)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_order() {
+        let s = BenchStats::from_samples(vec![3.0, 1.0, 2.0, 10.0]);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 10.0);
+        assert_eq!(s.n, 4);
+        assert!(s.mean > 1.0 && s.mean < 10.0);
+        assert!(s.p50 <= s.p95);
+    }
+
+    #[test]
+    fn bench_runs() {
+        let mut count = 0;
+        let s = bench(2, 5, || count += 1);
+        assert_eq!(count, 7);
+        assert_eq!(s.n, 5);
+    }
+}

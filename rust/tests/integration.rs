@@ -1,0 +1,349 @@
+//! Integration tests over the full three-layer stack: manifest ↔ state
+//! agreement, PJRT training, generation, NLU, checkpoint resume, and
+//! cross-language goldens (rust NF4/SVD vs jnp references).
+//!
+//! These tests need `make artifacts` to have run; they skip (not fail)
+//! when artifacts are absent so `cargo test` stays green pre-AOT.
+
+use pissa::adapter::init::Strategy;
+use pissa::coordinator::{self, LrSchedule, RunConfig, Trainer};
+use pissa::data::batcher::Batcher;
+use pissa::model::{apply_strategy, BaseModel};
+use pissa::runtime::{Manifest, Runtime};
+use pissa::util::json::Json;
+use pissa::util::rng::Rng;
+use std::path::PathBuf;
+
+fn art_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    art_dir().join("manifest.json").exists()
+}
+
+/// One PJRT client per test (PjRtClient is Rc-based and !Send, so it
+/// cannot be shared across the test harness's threads).
+fn runtime() -> Runtime {
+    Runtime::cpu(&art_dir()).expect("PJRT CPU client")
+}
+
+fn manifest() -> Manifest {
+    Manifest::load(&art_dir()).expect("manifest")
+}
+
+#[test]
+fn train_step_decreases_loss_for_all_strategies() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let rt = &runtime();
+    let manifest = manifest();
+    let cfg = manifest.config("tiny").unwrap().clone();
+    let mut rng = Rng::new(1);
+    let base = BaseModel::random(&cfg, &mut rng);
+
+    for strategy in [Strategy::Pissa, Strategy::Lora, Strategy::QPissa, Strategy::FullFt] {
+        let state = apply_strategy(&base, strategy, 4, 1, &mut rng).unwrap();
+        let art = Manifest::train_name("tiny", 4, strategy == Strategy::FullFt);
+        let sched = LrSchedule::alpaca(3e-3, 30);
+        let mut trainer = Trainer::new(rt, &manifest, &art, state, sched).unwrap();
+        let corpus = pissa::data::corpus::gen_corpus(256, 2);
+        let mut batcher = Batcher::new(corpus, cfg.batch, cfg.seq_len, 3);
+        let mut first = f32::NAN;
+        let mut last = f32::NAN;
+        for i in 0..30 {
+            let m = trainer.step(&batcher.next_batch()).unwrap();
+            assert!(m.loss.is_finite(), "{strategy:?} loss not finite at step {i}");
+            if i == 0 {
+                first = m.loss;
+            }
+            last = m.loss;
+        }
+        assert!(
+            last < first,
+            "{strategy:?}: loss did not decrease ({first} -> {last})"
+        );
+    }
+}
+
+#[test]
+fn pissa_and_lora_start_from_identical_loss() {
+    // Both inits preserve the base model exactly (Eq. 5), so step-1 loss
+    // on the same batch must match to fp tolerance.
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let rt = &runtime();
+    let manifest = manifest();
+    let cfg = manifest.config("tiny").unwrap().clone();
+    let mut rng = Rng::new(5);
+    let base = BaseModel::random(&cfg, &mut rng);
+    let mut first_losses = Vec::new();
+    for strategy in [Strategy::Pissa, Strategy::Lora] {
+        let state = apply_strategy(&base, strategy, 4, 1, &mut rng).unwrap();
+        let mut trainer = Trainer::new(
+            rt,
+            &manifest,
+            &Manifest::train_name("tiny", 4, false),
+            state,
+            LrSchedule::alpaca(1e-3, 10),
+        )
+        .unwrap();
+        let corpus = pissa::data::corpus::gen_corpus(64, 6);
+        let mut batcher = Batcher::new(corpus, cfg.batch, cfg.seq_len, 7);
+        first_losses.push(trainer.step(&batcher.next_batch()).unwrap().loss);
+    }
+    let diff = (first_losses[0] - first_losses[1]).abs();
+    assert!(diff < 2e-3, "first-step losses differ: {first_losses:?}");
+}
+
+#[test]
+fn generator_emits_text_and_eval_runs() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let rt = &runtime();
+    let manifest = manifest();
+    let run = RunConfig {
+        steps: 25,
+        corpus_size: 256,
+        ..RunConfig::quick("tiny", Strategy::Pissa, 4)
+    };
+    let (base, _) = coordinator::pretrain(rt, &manifest, "tiny", 40, 2e-3, 11).unwrap();
+    let result = coordinator::finetune(rt, &manifest, &base, &run).unwrap();
+    let acc = coordinator::evaluate(rt, &manifest, &run, &result.final_state, 8, 40).unwrap();
+    assert!((0.0..=100.0).contains(&acc), "accuracy {acc} out of range");
+    // direct generation sanity
+    let gen = pissa::eval::Generator::new(
+        rt,
+        &manifest,
+        &Manifest::logits_name("tiny", 4, false),
+        &result.final_state,
+    )
+    .unwrap();
+    let outs = gen.generate(&["Tom: 3 apples, +5. Total?".to_string()], 24).unwrap();
+    assert_eq!(outs.len(), 1);
+}
+
+#[test]
+fn encoder_training_works() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let rt = &runtime();
+    let manifest = manifest();
+    let cfg = manifest.config("enc_tiny").unwrap().clone();
+    let mut rng = Rng::new(21);
+    let base = BaseModel::random(&cfg, &mut rng);
+    let state = apply_strategy(&base, Strategy::Pissa, 4, 1, &mut rng).unwrap();
+    let art = Manifest::enc_train_name("enc_tiny", 4, false, false);
+    let mut trainer =
+        Trainer::new(rt, &manifest, &art, state, LrSchedule::alpaca(5e-3, 40)).unwrap();
+
+    let task = pissa::data::nlu::NluTask::Sst2;
+    let ds = pissa::data::nlu::gen_dataset(task, 256, 22);
+    let (b, t) = (cfg.batch, cfg.seq_len);
+    let mut first = f32::NAN;
+    let mut last = f32::NAN;
+    for step in 0..40 {
+        let lo = (step * b) % (ds.len() - b);
+        let mut tokens = vec![0i32; b * t];
+        let mut amask = vec![0.0f32; b * t];
+        let mut labels = vec![0i32; b];
+        for row in 0..b {
+            let ex = &ds[lo + row];
+            let n = ex.tokens.len().min(t);
+            tokens[row * t..row * t + n].copy_from_slice(&ex.tokens[..n]);
+            for i in 0..n {
+                amask[row * t + i] = 1.0;
+            }
+            labels[row] = ex.label;
+        }
+        let m = trainer.step_encoder(&tokens, &amask, &labels).unwrap();
+        if step == 0 {
+            first = m.loss;
+        }
+        last = m.loss;
+    }
+    assert!(last < first, "encoder loss {first} -> {last}");
+}
+
+#[test]
+fn golden_nf4_matches_python() {
+    // Cross-language check: rust NF4 quantizer vs the jnp reference.
+    let path = art_dir().join("goldens.json");
+    if !path.exists() {
+        eprintln!("skipping: no goldens");
+        return;
+    }
+    let j = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    let input: Vec<f32> = j.req_arr("nf4_input").unwrap().iter().map(|v| v.as_f64().unwrap() as f32).collect();
+    let want_codes: Vec<u8> =
+        j.req_arr("nf4_codes").unwrap().iter().map(|v| v.as_f64().unwrap() as u8).collect();
+    let want_rt: Vec<f32> =
+        j.req_arr("nf4_roundtrip").unwrap().iter().map(|v| v.as_f64().unwrap() as f32).collect();
+
+    let m = pissa::linalg::Mat::from_vec(1, input.len(), input.clone());
+    let q = pissa::quant::quantize(&m);
+    // unpack rust codes (2 per byte, low nibble first)
+    let got_codes: Vec<u8> = (0..input.len())
+        .map(|i| {
+            let byte = q.codes[i / 2];
+            if i % 2 == 0 {
+                byte & 0x0F
+            } else {
+                byte >> 4
+            }
+        })
+        .collect();
+    assert_eq!(got_codes, want_codes, "NF4 codes diverge from python");
+    let rt = pissa::quant::dequantize(&q);
+    for (a, b) in rt.data.iter().zip(&want_rt) {
+        assert!((a - b).abs() < 1e-6, "roundtrip {a} vs {b}");
+    }
+}
+
+#[test]
+fn golden_svd_matches_python() {
+    let path = art_dir().join("goldens.json");
+    if !path.exists() {
+        eprintln!("skipping: no goldens");
+        return;
+    }
+    let j = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    let rows = j.req_usize("svd_rows").unwrap();
+    let cols = j.req_usize("svd_cols").unwrap();
+    let input: Vec<f32> =
+        j.req_arr("svd_input").unwrap().iter().map(|v| v.as_f64().unwrap() as f32).collect();
+    let want_s: Vec<f32> = j
+        .req_arr("svd_singular_values")
+        .unwrap()
+        .iter()
+        .map(|v| v.as_f64().unwrap() as f32)
+        .collect();
+    let m = pissa::linalg::Mat::from_vec(rows, cols, input);
+    let got = pissa::linalg::singular_values(&m);
+    for (i, (a, b)) in got.iter().zip(&want_s).enumerate() {
+        assert!(
+            (a - b).abs() < 1e-3 * (1.0 + b.abs()),
+            "σ{i}: rust {a} vs numpy {b}"
+        );
+    }
+}
+
+#[test]
+fn checkpoint_resume_reproduces_training() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let rt = &runtime();
+    let manifest = manifest();
+    let cfg = manifest.config("tiny").unwrap().clone();
+    let mut rng = Rng::new(31);
+    let base = BaseModel::random(&cfg, &mut rng);
+
+    // Run A: 20 straight steps.
+    let corpus = pissa::data::corpus::gen_corpus(256, 32);
+    let run_steps = |state: pissa::model::TrainState, start: usize, n: usize| {
+        let mut trainer = Trainer::new(
+            rt,
+            &manifest,
+            &Manifest::train_name("tiny", 4, false),
+            state,
+            LrSchedule::alpaca(2e-3, 20),
+        )
+        .unwrap();
+        // Recreate the same batch stream and skip to `start`.
+        let mut batcher = Batcher::new(corpus.clone(), cfg.batch, cfg.seq_len, 33);
+        for _ in 0..start {
+            let _ = batcher.next_batch();
+        }
+        for _ in 0..n {
+            trainer.step(&batcher.next_batch()).unwrap();
+        }
+        trainer.state
+    };
+
+    let mut rng2 = Rng::new(34);
+    let s0 = apply_strategy(&base, Strategy::Pissa, 4, 1, &mut rng2).unwrap();
+    let full = run_steps(s0.clone(), 0, 20);
+
+    // Run B: 10 steps, save/load through the checkpoint container, 10 more.
+    let mid = run_steps(s0, 0, 10);
+    let dir = std::env::temp_dir().join("pissa_resume_test");
+    let path = dir.join("mid.ckpt");
+    let mut ckp = pissa::adapter::Checkpoint::new();
+    // Save trainable + opt state with distinct prefixes.
+    for (k, t) in &mid.trainable {
+        ckp.put(&format!("t.{k}"), pissa::linalg::Mat::from_vec(t.numel(), 1, t.data.clone()));
+    }
+    for (k, t) in &mid.m {
+        ckp.put(&format!("m.{k}"), pissa::linalg::Mat::from_vec(t.numel(), 1, t.data.clone()));
+    }
+    for (k, t) in &mid.v {
+        ckp.put(&format!("v.{k}"), pissa::linalg::Mat::from_vec(t.numel(), 1, t.data.clone()));
+    }
+    ckp.save(&path).unwrap();
+    let loaded = pissa::adapter::Checkpoint::load(&path).unwrap();
+    let mut resumed = mid.clone();
+    for (k, t) in resumed.trainable.iter_mut() {
+        t.data = loaded.get(&format!("t.{k}")).unwrap().data.clone();
+    }
+    for (k, t) in resumed.m.iter_mut() {
+        t.data = loaded.get(&format!("m.{k}")).unwrap().data.clone();
+    }
+    for (k, t) in resumed.v.iter_mut() {
+        t.data = loaded.get(&format!("v.{k}")).unwrap().data.clone();
+    }
+    let resumed_final = run_steps(resumed, 10, 10);
+
+    // Identical final trainable state bit-for-bit (same batches, same lr).
+    for (k, t) in &full.trainable {
+        assert_eq!(t.data, resumed_final.trainable[k].data, "divergence in {k}");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn pallas_logits_artifact_matches_jnp_artifact() {
+    // The kernel-path artifact and the jnp-path artifact must agree.
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let rt = &runtime();
+    let manifest = manifest();
+    if !manifest.artifacts.contains_key("logits_tiny_r4_pallas") {
+        eprintln!("skipping: pallas artifact absent");
+        return;
+    }
+    let cfg = manifest.config("tiny").unwrap().clone();
+    let mut rng = Rng::new(41);
+    let base = BaseModel::random(&cfg, &mut rng);
+    let state = apply_strategy(&base, Strategy::Pissa, 4, 1, &mut rng).unwrap();
+
+    let gen_jnp =
+        pissa::eval::Generator::new(rt, &manifest, "logits_tiny_r4", &state).unwrap();
+    let gen_pal =
+        pissa::eval::Generator::new(rt, &manifest, "logits_tiny_r4_pallas", &state).unwrap();
+    let b = gen_jnp.batch();
+    let t = gen_jnp.seq_len();
+    let mut tokens = vec![0i32; b * t];
+    for (i, tok) in tokens.iter_mut().enumerate() {
+        *tok = (i % 250) as i32 + 8;
+    }
+    let l1 = gen_jnp.logits(&tokens).unwrap();
+    let l2 = gen_pal.logits(&tokens).unwrap();
+    assert_eq!(l1.len(), l2.len());
+    let mut max_err = 0.0f32;
+    for (a, b) in l1.iter().zip(&l2) {
+        max_err = max_err.max((a - b).abs());
+    }
+    assert!(max_err < 5e-3, "pallas vs jnp logits max err {max_err}");
+}

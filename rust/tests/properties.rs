@@ -1,0 +1,196 @@
+//! Property-based tests over the coordinator-side substrates: randomized
+//! shape/seed sweeps asserting the algebraic invariants the paper's
+//! method relies on. (No proptest crate offline — a seeded-sweep loop
+//! over our own PRNG plays the same role, with the failing seed printed.)
+
+use pissa::adapter::convert::pissa_to_lora;
+use pissa::adapter::init::{self, Strategy};
+use pissa::linalg::{matmul, matmul_nt, matmul_tn, nuclear_norm, rsvd, svd, Mat};
+use pissa::quant::{nf4_roundtrip, qlora_error};
+use pissa::util::rng::Rng;
+
+fn rand_shape(rng: &mut Rng, lo: usize, hi: usize) -> (usize, usize) {
+    (lo + rng.below(hi - lo), lo + rng.below(hi - lo))
+}
+
+/// A matrix with a decaying (pre-trained-like) spectrum.
+fn spectral_mat(m: usize, n: usize, decay: f32, rng: &mut Rng) -> Mat {
+    let k = m.min(n);
+    let u = pissa::linalg::qr::orthonormalize(&Mat::randn(m, k, 0.0, 1.0, rng));
+    let v = pissa::linalg::qr::orthonormalize(&Mat::randn(n, k, 0.0, 1.0, rng));
+    let s: Vec<f32> = (0..k).map(|i| (1.0 + i as f32).powf(-decay)).collect();
+    let mut us = u;
+    us.scale_cols(&s);
+    matmul(&us, &v.t())
+}
+
+#[test]
+fn prop_pissa_exact_preservation_across_shapes() {
+    // base + A·B == W for every shape/rank/niter (Eq. 5).
+    for seed in 0..12u64 {
+        let mut rng = Rng::new(seed);
+        let (m, n) = rand_shape(&mut rng, 8, 48);
+        let r = 1 + rng.below(m.min(n).min(8));
+        let w = Mat::randn(m, n, 0.0, 0.3, &mut rng);
+        let niter = if rng.below(2) == 0 { None } else { Some(1 + rng.below(6)) };
+        let init = init::pissa(&w, r, niter, &mut rng);
+        let err = init.effective().sub(&w).fro() / w.fro();
+        assert!(err < 1e-5, "seed={seed} {m}x{n} r={r} niter={niter:?} err={err}");
+    }
+}
+
+#[test]
+fn prop_svd_reconstruction_and_ordering() {
+    for seed in 0..10u64 {
+        let mut rng = Rng::new(100 + seed);
+        let (m, n) = rand_shape(&mut rng, 4, 40);
+        let w = Mat::randn(m, n, 0.0, 1.0, &mut rng);
+        let d = svd(&w);
+        let err = d.reconstruct().sub(&w).fro() / w.fro();
+        assert!(err < 1e-4, "seed={seed} err={err}");
+        assert!(d.s.windows(2).all(|p| p[0] >= p[1] - 1e-5), "seed={seed} unsorted");
+        assert!(d.s.iter().all(|&x| x >= 0.0));
+    }
+}
+
+#[test]
+fn prop_rsvd_never_beats_optimal_but_close_with_iters() {
+    for seed in 0..6u64 {
+        let mut rng = Rng::new(200 + seed);
+        let w = spectral_mat(40, 32, 0.7, &mut rng);
+        let exact = svd(&w);
+        let r = 6;
+        let opt: f64 = exact.s[r..].iter().map(|&x| (x as f64).powi(2)).sum::<f64>().sqrt();
+        let approx = rsvd(&w, r, 5, &mut rng);
+        let err = approx.reconstruct().sub(&w).fro();
+        assert!(err >= opt - 1e-4, "seed={seed}: rsvd beat the optimum?!");
+        assert!(err <= 1.25 * opt + 1e-6, "seed={seed}: err {err} far from optimal {opt}");
+    }
+}
+
+#[test]
+fn prop_qpissa_error_never_exceeds_qlora() {
+    // On decaying-spectrum matrices, the paper's Eq. 8 ≤ Eq. 6 must hold.
+    for seed in 0..8u64 {
+        let mut rng = Rng::new(300 + seed);
+        let w = spectral_mat(32 + rng.below(16), 32, 0.6 + rng.uniform() as f32, &mut rng);
+        let baseline = qlora_error(&w);
+        let r = 2 + rng.below(6);
+        let qp = init::qpissa(&w, r, 1 + rng.below(4), &mut rng);
+        let err = nuclear_norm(&w.sub(&qp.base.add(&matmul(&qp.a, &qp.b))));
+        assert!(
+            err <= baseline * 1.001,
+            "seed={seed} r={r}: qpissa {err} > qlora {baseline}"
+        );
+    }
+}
+
+#[test]
+fn prop_conversion_exact_for_any_drift() {
+    for seed in 0..10u64 {
+        let mut rng = Rng::new(400 + seed);
+        let (m, n) = rand_shape(&mut rng, 8, 32);
+        let r = 1 + rng.below(4);
+        let w = Mat::randn(m, n, 0.0, 0.5, &mut rng);
+        let init = init::pissa(&w, r, None, &mut rng);
+        let mut a1 = init.a.clone();
+        let mut b1 = init.b.clone();
+        let scale = rng.uniform_in(0.0, 2.0);
+        for x in a1.data.iter_mut() {
+            *x += scale * rng.normal_f32(0.0, 0.1);
+        }
+        for x in b1.data.iter_mut() {
+            *x += scale * rng.normal_f32(0.0, 0.1);
+        }
+        let delta = pissa_to_lora(&init.a, &init.b, &a1, &b1);
+        let via = w.add(&delta.delta());
+        let direct = init.base.add(&matmul(&a1, &b1));
+        let err = via.sub(&direct).fro() / direct.fro().max(1e-20);
+        assert!(err < 1e-5, "seed={seed} err={err}");
+    }
+}
+
+#[test]
+fn prop_nf4_idempotent_and_bounded() {
+    for seed in 0..10u64 {
+        let mut rng = Rng::new(500 + seed);
+        let (m, n) = rand_shape(&mut rng, 4, 64);
+        let scale = 10f32.powf(rng.uniform_in(-3.0, 1.0));
+        let w = Mat::randn(m, n, 0.0, scale, &mut rng);
+        let rt = nf4_roundtrip(&w);
+        let rt2 = nf4_roundtrip(&rt);
+        for (a, b) in rt.data.iter().zip(&rt2.data) {
+            assert!((a - b).abs() <= 1e-6 * scale, "seed={seed} not idempotent");
+        }
+        // Largest codebook gap is levels[1]−levels[0] ≈ 0.304, so the
+        // worst-case elementwise error is half that times the block absmax.
+        let err = w.sub(&rt).absmax();
+        assert!(err <= 0.153 * w.absmax() + 1e-7, "seed={seed} err {err} vs absmax {}", w.absmax());
+    }
+}
+
+#[test]
+fn prop_gemm_linearity_and_transpose_identities() {
+    for seed in 0..8u64 {
+        let mut rng = Rng::new(600 + seed);
+        let (m, k) = rand_shape(&mut rng, 3, 40);
+        let (_, n) = rand_shape(&mut rng, 3, 40);
+        let a = Mat::randn(m, k, 0.0, 1.0, &mut rng);
+        let b = Mat::randn(k, n, 0.0, 1.0, &mut rng);
+        // (A·B)ᵀ == Bᵀ·Aᵀ
+        let lhs = matmul(&a, &b).t();
+        let rhs = matmul(&b.t(), &a.t());
+        assert!(lhs.sub(&rhs).fro() < 1e-3, "seed={seed} transpose identity");
+        // A·(B+B) == 2·A·B
+        let mut b2 = b.clone();
+        b2.add_assign(&b);
+        let mut two_ab = matmul(&a, &b);
+        two_ab.scale(2.0);
+        assert!(matmul(&a, &b2).sub(&two_ab).fro() < 1e-3, "seed={seed} linearity");
+        // nt/tn agree with explicit transposes
+        assert!(matmul_nt(&a, &b.t()).sub(&matmul(&a, &b)).fro() < 1e-3);
+        assert!(matmul_tn(&a.t(), &b).sub(&matmul(&a, &b)).fro() < 1e-3);
+    }
+}
+
+#[test]
+fn prop_strategy_inits_all_preserve_model_or_quantize_base() {
+    for seed in 0..6u64 {
+        let mut rng = Rng::new(700 + seed);
+        let w = spectral_mat(24, 24, 0.8, &mut rng);
+        for strategy in [Strategy::Lora, Strategy::Pissa] {
+            let i = init::initialize(strategy, &w, 4, 1, &mut rng);
+            let err = i.effective().sub(&w).fro() / w.fro();
+            assert!(err < 1e-4, "seed={seed} {strategy:?} err={err}");
+        }
+        for strategy in [Strategy::QLora, Strategy::QPissa, Strategy::LoftQ] {
+            let i = init::initialize(strategy, &w, 4, 2, &mut rng);
+            // quantized strategies can't preserve exactly, but must beat
+            // (or match) plain QLoRA's error
+            let err = i.effective().sub(&w).fro();
+            let base_err = w.sub(&nf4_roundtrip(&w)).fro();
+            assert!(
+                err <= base_err * 1.05,
+                "seed={seed} {strategy:?}: {err} vs qlora {base_err}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_lr_schedule_bounded_and_continuous() {
+    for seed in 0..6u64 {
+        let mut rng = Rng::new(800 + seed);
+        let total = 50 + rng.below(500);
+        let peak = 10f64.powf(rng.uniform_in(-5.0, -2.0) as f64);
+        let s = pissa::coordinator::LrSchedule::alpaca(peak, total);
+        let mut prev = 0.0f64;
+        for step in 1..=total {
+            let lr = s.at(step);
+            assert!((0.0..=peak * 1.0001).contains(&lr), "seed={seed} lr out of range");
+            // jumps are bounded (continuity at warmup boundary)
+            assert!((lr - prev).abs() <= peak / 2.0, "seed={seed} discontinuity at {step}");
+            prev = lr;
+        }
+    }
+}
