@@ -9,7 +9,7 @@
 
 mod common;
 
-use pissa::adapter::init::Strategy;
+use pissa::adapter::AdapterSpec;
 use pissa::coordinator::{self, RunConfig, TaskFamily};
 use pissa::metrics::write_labeled_csv;
 
@@ -29,14 +29,12 @@ fn main() -> anyhow::Result<()> {
         let (base, _) =
             coordinator::pretrain(&rt, &manifest, config, if full { 300 } else { 150 }, 2e-3, *seed)?;
         let mut rows = Vec::new();
-        for strategy in [Strategy::Lora, Strategy::Pissa, Strategy::FullFt] {
+        for spec in [AdapterSpec::lora(4), AdapterSpec::pissa(4), AdapterSpec::full_ft()] {
             let run = RunConfig {
                 config: config.to_string(),
-                strategy,
-                rank: 4,
-                iters: 5,
+                spec: spec.clone(),
                 steps,
-                peak_lr: if strategy == Strategy::FullFt { 5e-4 } else { 2e-3 },
+                peak_lr: if spec.is_full_ft() { 5e-4 } else { 2e-3 },
                 corpus_size: 1024,
                 seed: *seed,
                 task: TaskFamily::Math,
@@ -45,7 +43,7 @@ fn main() -> anyhow::Result<()> {
             // log curves
             for m in r.history.iter().step_by((steps / 40).max(1)) {
                 rows.push((
-                    format!("{}/{}", strategy.name(), m.step),
+                    format!("{}/{}", spec.name(), m.step),
                     vec![m.loss as f64, m.grad_norm as f64],
                 ));
             }
@@ -56,7 +54,7 @@ fn main() -> anyhow::Result<()> {
             let early = &r.history[steps / 10];
             println!(
                 "{:8}: loss@10% {:.4}, final loss {:.4}, mean gnorm {:.4}, acc {:>6.2}%",
-                strategy.name(),
+                spec.name(),
                 early.loss,
                 r.final_loss(10),
                 r.history.iter().map(|m| m.grad_norm as f64).sum::<f64>() / steps as f64,
@@ -68,7 +66,7 @@ fn main() -> anyhow::Result<()> {
                     let sub = RunConfig { steps: steps * frac / 5, ..run.clone() };
                     let rr = coordinator::finetune(&rt, &manifest, &base, &sub)?;
                     let a = coordinator::evaluate(&rt, &manifest, &sub, &rr.final_state, 32, 40)?;
-                    rows.push((format!("{}/acc@{}", strategy.name(), sub.steps), vec![a, 0.0]));
+                    rows.push((format!("{}/acc@{}", spec.name(), sub.steps), vec![a, 0.0]));
                 }
             }
         }

@@ -8,7 +8,7 @@
 
 mod common;
 
-use pissa::adapter::init::Strategy;
+use pissa::adapter::AdapterSpec;
 use pissa::coordinator::{self, RunConfig, TaskFamily};
 use pissa::metrics::write_labeled_csv;
 
@@ -22,24 +22,22 @@ fn main() -> anyhow::Result<()> {
     let (base, _) =
         coordinator::pretrain(&rt, &manifest, config, if full { 300 } else { 150 }, 2e-3, 42)?;
 
-    let strategies = [
-        Strategy::Lora,
-        Strategy::QLora,
-        Strategy::Pissa,
-        Strategy::QPissa,
-        Strategy::LoftQ,
-        Strategy::FullFt,
+    let specs = [
+        AdapterSpec::lora(4),
+        AdapterSpec::qlora(4),
+        AdapterSpec::pissa(4),
+        AdapterSpec::qpissa(4).iters(5),
+        AdapterSpec::loftq(4).iters(5),
+        AdapterSpec::full_ft(),
     ];
     let mut rows = Vec::new();
     let mut summary = Vec::new();
-    for strategy in strategies {
+    for spec in specs {
         let run = RunConfig {
             config: config.to_string(),
-            strategy,
-            rank: 4,
-            iters: 5,
+            spec: spec.clone(),
             steps,
-            peak_lr: if strategy == Strategy::FullFt { 5e-4 } else { 2e-3 },
+            peak_lr: if spec.is_full_ft() { 5e-4 } else { 2e-3 },
             corpus_size: 1024,
             seed: 42,
             task: TaskFamily::Math,
@@ -50,32 +48,32 @@ fn main() -> anyhow::Result<()> {
         let gnorm = r.history.iter().map(|m| m.grad_norm as f64).sum::<f64>() / steps as f64;
         println!(
             "{:8}: loss@10% {early:.4}, final {:.4}, mean gnorm {gnorm:.4}, acc {acc:>6.2}%",
-            strategy.name(),
+            spec.name(),
             r.final_loss(10)
         );
         for m in r.history.iter().step_by((steps / 40).max(1)) {
-            rows.push((format!("{}/{}", strategy.name(), m.step), vec![m.loss as f64, m.grad_norm as f64]));
+            rows.push((format!("{}/{}", spec.name(), m.step), vec![m.loss as f64, m.grad_norm as f64]));
         }
-        summary.push((strategy, early, r.final_loss(10), acc));
+        summary.push((spec.name(), early, r.final_loss(10), acc));
     }
 
-    let get = |s: Strategy| summary.iter().find(|x| x.0 == s).unwrap();
+    let get = |s: &str| summary.iter().find(|x| x.0 == s).unwrap();
     println!("\nshape checks (paper Fig 5):");
     println!(
         "  QPiSSA early-loss < QLoRA early-loss: {} ({:.4} vs {:.4})",
-        get(Strategy::QPissa).1 < get(Strategy::QLora).1,
-        get(Strategy::QPissa).1,
-        get(Strategy::QLora).1
+        get("qpissa").1 < get("qlora").1,
+        get("qpissa").1,
+        get("qlora").1
     );
     println!(
         "  QPiSSA final < LoftQ final:           {} ({:.4} vs {:.4})",
-        get(Strategy::QPissa).2 < get(Strategy::LoftQ).2,
-        get(Strategy::QPissa).2,
-        get(Strategy::LoftQ).2
+        get("qpissa").2 < get("loftq").2,
+        get("qpissa").2,
+        get("loftq").2
     );
     println!(
         "  LoftQ ≈ QLoRA convergence (not faster): Δ = {:+.4}",
-        get(Strategy::LoftQ).2 - get(Strategy::QLora).2
+        get("loftq").2 - get("qlora").2
     );
     write_labeled_csv(
         &common::results_dir().join("fig5_quant_curves.csv"),

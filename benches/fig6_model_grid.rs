@@ -9,7 +9,7 @@
 
 mod common;
 
-use pissa::adapter::init::Strategy;
+use pissa::adapter::AdapterSpec;
 use pissa::coordinator::{self, RunConfig, TaskFamily};
 use pissa::metrics::write_labeled_csv;
 
@@ -33,18 +33,16 @@ fn main() -> anyhow::Result<()> {
         let cfg = manifest.config(config)?;
         let rank = *cfg.ranks.iter().find(|&&r| r >= 4).unwrap_or(&cfg.ranks[cfg.ranks.len() - 1]);
         let (s_lora, s_pissa) = if quantized {
-            (Strategy::QLora, Strategy::QPissa)
+            (AdapterSpec::qlora(rank), AdapterSpec::qpissa(rank).iters(5))
         } else {
-            (Strategy::Lora, Strategy::Pissa)
+            (AdapterSpec::lora(rank), AdapterSpec::pissa(rank))
         };
         for task in [TaskFamily::Math, TaskFamily::Code] {
             let mut accs = Vec::new();
-            for strategy in [s_lora, s_pissa] {
+            for spec in [s_lora.clone(), s_pissa.clone()] {
                 let run = RunConfig {
                     config: config.to_string(),
-                    strategy,
-                    rank,
-                    iters: 5,
+                    spec: spec.clone(),
                     steps: ft,
                     peak_lr: 2e-3,
                     corpus_size: 1024,
@@ -56,7 +54,7 @@ fn main() -> anyhow::Result<()> {
                 println!(
                     "{config:6} d={:<4} {:7} {:6}: acc {acc:>6.2}%  (final loss {:.4})",
                     cfg.d_model,
-                    strategy.name(),
+                    spec.name(),
                     task.name(),
                     r.final_loss(8)
                 );

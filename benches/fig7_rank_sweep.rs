@@ -10,7 +10,8 @@
 
 mod common;
 
-use pissa::adapter::init::{loftq, qpissa, Strategy};
+use pissa::adapter::init::{loftq, qpissa};
+use pissa::adapter::AdapterSpec;
 use pissa::coordinator::{self, RunConfig, TaskFamily};
 use pissa::linalg::{matmul, nuclear_norm};
 use pissa::metrics::write_labeled_csv;
@@ -55,9 +56,7 @@ fn main() -> anyhow::Result<()> {
     // full-FT reference
     let full_run = RunConfig {
         config: config.to_string(),
-        strategy: Strategy::FullFt,
-        rank: 0,
-        iters: 1,
+        spec: AdapterSpec::full_ft(),
         steps,
         peak_lr: 5e-4,
         corpus_size: 1024,
@@ -72,12 +71,15 @@ fn main() -> anyhow::Result<()> {
     let mut pissa_wins = 0;
     for &r in &ranks {
         let mut cells = Vec::new();
-        for strategy in [Strategy::Lora, Strategy::Pissa, Strategy::QPissa, Strategy::LoftQ] {
+        for spec in [
+            AdapterSpec::lora(r),
+            AdapterSpec::pissa(r),
+            AdapterSpec::qpissa(r).iters(1),
+            AdapterSpec::loftq(r).iters(1),
+        ] {
             let run = RunConfig {
                 config: config.to_string(),
-                strategy,
-                rank: r,
-                iters: 1,
+                spec,
                 steps,
                 peak_lr: 2e-3,
                 corpus_size: 1024,

@@ -8,10 +8,11 @@
 
 mod common;
 
-use pissa::adapter::init::{pissa_window, Strategy, Window};
+use pissa::adapter::init::Window;
+use pissa::adapter::AdapterSpec;
 use pissa::coordinator::{self, LrSchedule, RunConfig, TaskFamily, Trainer};
 use pissa::metrics::write_labeled_csv;
-use pissa::model::{apply_strategy, Tensor};
+use pissa::model::apply_spec;
 use pissa::runtime::Manifest;
 use pissa::util::rng::Rng;
 
@@ -34,24 +35,11 @@ fn main() -> anyhow::Result<()> {
         for (wname, window) in
             [("principal", Window::Principal), ("medium", Window::Medium), ("minor", Window::Minor)]
         {
-            // Build the state with the window init.
+            // One declarative spec per window — no manual state patching:
+            // exact SVD (the ablation's protocol) over the chosen window.
+            let spec = AdapterSpec::pissa(rank).exact_svd().window(window).iters(1);
             let mut rng = Rng::new(*seed);
-            let mut state = apply_strategy(&base, Strategy::Pissa, rank, 1, &mut rng)?;
-            for name in pissa::model::LINEARS {
-                let stacked = &base.linears[&format!("base_{name}")];
-                let mut bases = Vec::new();
-                let mut aas = Vec::new();
-                let mut bbs = Vec::new();
-                for l in 0..stacked.shape[0] {
-                    let init = pissa_window(&stacked.layer(l), rank, window);
-                    bases.push(init.base);
-                    aas.push(init.a);
-                    bbs.push(init.b);
-                }
-                state.frozen.insert(format!("base_{name}"), Tensor::stack(&bases));
-                state.trainable.insert(format!("a_{name}"), Tensor::stack(&aas));
-                state.trainable.insert(format!("b_{name}"), Tensor::stack(&bbs));
-            }
+            let state = apply_spec(&base, &spec, &mut rng)?;
             let art = Manifest::train_name(config, rank, false);
             let mut trainer =
                 Trainer::new(&rt, &manifest, &art, state, LrSchedule::alpaca(2e-3, steps))?;
@@ -66,9 +54,7 @@ fn main() -> anyhow::Result<()> {
             // score
             let run = RunConfig {
                 config: config.to_string(),
-                strategy: Strategy::Pissa,
-                rank,
-                iters: 1,
+                spec: spec.clone(),
                 steps,
                 peak_lr: 2e-3,
                 corpus_size: 1024,

@@ -6,10 +6,10 @@
 
 mod common;
 
-use pissa::adapter::init::Strategy;
+use pissa::adapter::AdapterSpec;
 use pissa::coordinator::{LrSchedule, Trainer};
 use pissa::linalg::{matmul, rsvd, svd, Mat};
-use pissa::model::{apply_strategy, BaseModel};
+use pissa::model::{apply_spec, BaseModel};
 use pissa::quant::nf4::{dequantize, quantize};
 use pissa::runtime::Manifest;
 use pissa::util::rng::Rng;
@@ -78,7 +78,7 @@ fn main() -> anyhow::Result<()> {
         let cfg = manifest.config(config)?.clone();
         let base = BaseModel::random(&cfg, &mut rng);
         let t = Timer::start();
-        let _ = apply_strategy(&base, Strategy::Pissa, 8.min(cfg.ranks[cfg.ranks.len() - 1]), 1, &mut rng)?;
+        let _ = apply_spec(&base, &AdapterSpec::pissa(8.min(cfg.ranks[cfg.ranks.len() - 1])), &mut rng)?;
         println!("  {config:6}: {:.0} ms (paper target: seconds — ✓)", t.ms());
     }
 
@@ -88,8 +88,8 @@ fn main() -> anyhow::Result<()> {
         let cfg = manifest.config(config)?.clone();
         let mut rng2 = Rng::new(3);
         let base = BaseModel::random(&cfg, &mut rng2);
-        let state = apply_strategy(&base, Strategy::Pissa, 4.min(cfg.ranks[cfg.ranks.len() - 1]), 1, &mut rng2)?;
         let rank = 4.min(cfg.ranks[cfg.ranks.len() - 1]);
+        let state = apply_spec(&base, &AdapterSpec::pissa(rank), &mut rng2)?;
         let art = Manifest::train_name(config, rank, false);
         let mut trainer =
             Trainer::new(&rt, &manifest, &art, state, LrSchedule::alpaca(1e-3, 100))?;
@@ -117,7 +117,7 @@ fn main() -> anyhow::Result<()> {
         let cfg = manifest.config("tiny")?.clone();
         let mut rng3 = Rng::new(6);
         let base = BaseModel::random(&cfg, &mut rng3);
-        let state = apply_strategy(&base, Strategy::Pissa, 4, 1, &mut rng3)?;
+        let state = apply_spec(&base, &AdapterSpec::pissa(4), &mut rng3)?;
         let tokens: Vec<i32> = (0..cfg.eval_batch * cfg.seq_len).map(|i| (i % 250) as i32 + 8).collect();
         for name in ["logits_tiny_r4", "logits_tiny_r4_pallas"] {
             let g = pissa::eval::Generator::new(&rt, &manifest, name, &state)?;

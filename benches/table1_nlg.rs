@@ -8,7 +8,7 @@
 
 mod common;
 
-use pissa::adapter::init::Strategy;
+use pissa::adapter::AdapterSpec;
 use pissa::coordinator::{self, RunConfig, TaskFamily};
 use pissa::metrics::write_labeled_csv;
 
@@ -27,7 +27,7 @@ fn main() -> anyhow::Result<()> {
         &[("model-A", 42u64), ("model-B", 1337)]
     };
     let tasks = [TaskFamily::Math, TaskFamily::Code, TaskFamily::Chat];
-    let strategies = [Strategy::FullFt, Strategy::Lora, Strategy::Pissa];
+    let specs = [AdapterSpec::full_ft(), AdapterSpec::lora(4), AdapterSpec::pissa(4)];
 
     println!(
         "{:8} {:9} {:>6} | {:>10} {:>8} | task columns: loss/acc%",
@@ -36,7 +36,7 @@ fn main() -> anyhow::Result<()> {
     let mut rows = Vec::new();
     for &(mname, seed) in model_seeds {
         let (base, _) = coordinator::pretrain(&rt, &manifest, config, pre_steps, 2e-3, seed)?;
-        for strategy in strategies {
+        for spec in &specs {
             let mut vals = Vec::new();
             let mut params = 0;
             let _ = params;
@@ -45,8 +45,8 @@ fn main() -> anyhow::Result<()> {
                     steps: ft_steps,
                     task,
                     seed,
-                    peak_lr: if strategy == Strategy::FullFt { 5e-4 } else { 2e-3 },
-                    ..RunConfig::quick(config, strategy, 4)
+                    peak_lr: if spec.is_full_ft() { 5e-4 } else { 2e-3 },
+                    ..RunConfig::quick(config, spec.clone())
                 };
                 let r = coordinator::finetune(&rt, &manifest, &base, &run)?;
                 let acc =
@@ -57,14 +57,14 @@ fn main() -> anyhow::Result<()> {
                 println!(
                     "{:8} {:9} {:>6} | {:>10} | loss {:.4}  acc {:>6.2}%",
                     mname,
-                    strategy.name(),
+                    spec.name(),
                     params,
                     task.name(),
                     r.final_loss(8),
                     acc
                 );
             }
-            rows.push((format!("{mname}/{}", strategy.name()), vals));
+            rows.push((format!("{mname}/{}", spec.name()), vals));
         }
     }
     write_labeled_csv(

@@ -7,12 +7,12 @@
 
 mod common;
 
-use pissa::adapter::init::Strategy;
+use pissa::adapter::AdapterSpec;
 use pissa::coordinator::{LrSchedule, Trainer};
 use pissa::data::nlu::{gen_dataset, ALL_TASKS};
 use pissa::eval::nlu_eval::{score, NluScorer};
 use pissa::metrics::write_labeled_csv;
-use pissa::model::{apply_strategy, BaseModel};
+use pissa::model::{apply_spec, BaseModel};
 use pissa::runtime::Manifest;
 use pissa::util::rng::Rng;
 
@@ -21,7 +21,6 @@ fn main() -> anyhow::Result<()> {
     let (rt, manifest) = common::load()?;
     let full = common::full_mode();
     let encoders: &[&str] = if full { &["enc_tiny", "enc_small"] } else { &["enc_tiny"] };
-    let strategies = [Strategy::FullFt, Strategy::Lora, Strategy::Pissa];
     let epochs_scale = if full { 2 } else { 1 };
 
     let mut rows = Vec::new();
@@ -35,7 +34,9 @@ fn main() -> anyhow::Result<()> {
         let mut rng = Rng::new(77);
         let base = BaseModel::random(&cfg, &mut rng);
 
-        for strategy in strategies {
+        let specs =
+            [AdapterSpec::full_ft(), AdapterSpec::lora(rank).iters(1), AdapterSpec::pissa(rank).iters(1)];
+        for spec in &specs {
             let mut vals = Vec::new();
             for task in ALL_TASKS {
                 let train = gen_dataset(task, task.train_size() / (2 - epochs_scale.min(1)), 100 + task as u64);
@@ -43,11 +44,11 @@ fn main() -> anyhow::Result<()> {
                 let steps = (train.len() / cfg.batch) * epochs_scale;
 
                 let mut rng2 = Rng::new(7 ^ task as u64);
-                let state = apply_strategy(&base, strategy, rank, 1, &mut rng2)?;
+                let state = apply_spec(&base, spec, &mut rng2)?;
                 let art = Manifest::enc_train_name(
                     enc,
                     rank,
-                    strategy == Strategy::FullFt,
+                    spec.is_full_ft(),
                     task.regression(),
                 );
                 let mut trainer = Trainer::new(
@@ -55,7 +56,7 @@ fn main() -> anyhow::Result<()> {
                     &manifest,
                     &art,
                     state,
-                    LrSchedule::alpaca(if strategy == Strategy::FullFt { 1e-3 } else { 3e-3 }, steps),
+                    LrSchedule::alpaca(if spec.is_full_ft() { 1e-3 } else { 3e-3 }, steps),
                 )?;
                 let (b, t) = (cfg.batch, cfg.seq_len);
                 for step in 0..steps {
@@ -85,16 +86,16 @@ fn main() -> anyhow::Result<()> {
 
                 let eval_art = format!(
                     "logits_{enc}_{}",
-                    if strategy == Strategy::FullFt { "full".to_string() } else { format!("r{rank}") }
+                    if spec.is_full_ft() { "full".to_string() } else { format!("r{rank}") }
                 );
                 let scorer =
                     NluScorer::new(&rt, &manifest, &eval_art, &trainer.state, task.n_classes())?;
                 let (preds, scores) = scorer.predict(&eval)?;
                 let metric = score(task, &preds, &scores, &eval);
                 vals.push(metric);
-                println!("{enc:10} {:8} {:6}: {metric:>6.2}", strategy.name(), task.name());
+                println!("{enc:10} {:8} {:6}: {metric:>6.2}", spec.name(), task.name());
             }
-            rows.push((format!("{enc}/{}", strategy.name()), vals));
+            rows.push((format!("{enc}/{}", spec.name()), vals));
         }
     }
     write_labeled_csv(

@@ -8,7 +8,8 @@
 
 mod common;
 
-use pissa::adapter::init::{pissa, Strategy};
+use pissa::adapter::init::pissa;
+use pissa::adapter::AdapterSpec;
 use pissa::coordinator::{self, RunConfig};
 use pissa::linalg::matmul;
 use pissa::metrics::write_labeled_csv;
@@ -56,37 +57,18 @@ fn main() -> anyhow::Result<()> {
     println!("\nfinal fine-tune loss by init niter (rank {r}):");
     let mut loss_rows = Vec::new();
     for &niter in niters {
-        // pissa() with explicit niter; plumb through a custom strategy by
-        // patching the state after standard init.
+        // The niter knob is now first-class on the spec — no manual
+        // state patching needed to control the init quality.
+        let spec = match niter {
+            Some(n) => AdapterSpec::pissa(r).niter(n),
+            None => AdapterSpec::pissa(r).exact_svd(),
+        };
         let run = RunConfig {
             steps: if full { 120 } else { 60 },
-            ..RunConfig::quick(config, Strategy::Pissa, r)
+            ..RunConfig::quick(config, spec.clone())
         };
-        // Build state manually so we control niter.
         let mut rng = Rng::new(run.seed);
-        let mut state = pissa::model::apply_strategy(&base, Strategy::Pissa, r, 1, &mut rng)?;
-        for name in pissa::model::LINEARS {
-            let stacked = &base.linears[&format!("base_{name}")];
-            let mut bases = Vec::new();
-            let mut aas = Vec::new();
-            let mut bbs = Vec::new();
-            for l in 0..stacked.shape[0] {
-                let wl = stacked.layer(l);
-                let init = pissa(&wl, r, niter, &mut rng);
-                bases.push(init.base);
-                aas.push(init.a);
-                bbs.push(init.b);
-            }
-            state
-                .frozen
-                .insert(format!("base_{name}"), pissa::model::Tensor::stack(&bases));
-            state
-                .trainable
-                .insert(format!("a_{name}"), pissa::model::Tensor::stack(&aas));
-            state
-                .trainable
-                .insert(format!("b_{name}"), pissa::model::Tensor::stack(&bbs));
-        }
+        let state = pissa::model::apply_spec(&base, &spec, &mut rng)?;
         let cfg = manifest.config(config)?.clone();
         let sched = pissa::coordinator::LrSchedule::alpaca(run.peak_lr, run.steps);
         let art = pissa::runtime::Manifest::train_name(config, r, false);

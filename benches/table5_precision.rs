@@ -7,11 +7,11 @@
 
 mod common;
 
-use pissa::adapter::init::Strategy;
+use pissa::adapter::AdapterSpec;
 use pissa::coordinator::{LrSchedule, Trainer};
 use pissa::data::Batcher;
 use pissa::metrics::write_labeled_csv;
-use pissa::model::{apply_strategy, BaseModel};
+use pissa::model::{apply_spec, BaseModel};
 use pissa::quant::bf16::bf16_round_inplace;
 use pissa::runtime::Manifest;
 use pissa::util::rng::Rng;
@@ -31,7 +31,7 @@ fn main() -> anyhow::Result<()> {
         for bf16 in [false, true] {
             let mut rng = Rng::new(seed);
             let base = BaseModel::random(&cfg, &mut rng);
-            let state = apply_strategy(&base, Strategy::FullFt, 0, 1, &mut rng)?;
+            let state = apply_spec(&base, &AdapterSpec::full_ft(), &mut rng)?;
             let art = Manifest::train_name(config, 0, true);
             let mut trainer =
                 Trainer::new(&rt, &manifest, &art, state, LrSchedule::alpaca(1e-3, steps))?;

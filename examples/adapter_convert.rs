@@ -1,32 +1,154 @@
-//! Appendix C end-to-end: fine-tune a PiSSA adapter, convert it to an
-//! equivalent LoRA delta (ΔA = [A'|A], ΔB = [B';−B]) and verify that
-//! applying ΔA·ΔB to the ORIGINAL dense weights reproduces the
-//! fine-tuned model's logits exactly — no SVD needed at share time.
+//! Adapter lifecycle demo — two parts.
+//!
+//! **Part 1 (always runs, no artifacts needed):** the multi-adapter
+//! engine. Two named adapters (PiSSA r=8 on q/v, LoRA r=4 on all seven
+//! linears) over ONE frozen base; hot-swap between them, merge/unmerge
+//! the LoRA adapter (deployment path, §3), and export the PiSSA adapter
+//! as an Appendix-C LoRA delta (ΔA = [A'|A], ΔB = [B';−B]) — every
+//! invariant checked at runtime.
+//!
+//! **Part 2 (needs `artifacts/`):** the original end-to-end protocol —
+//! fine-tune a PiSSA adapter through the PJRT train artifact, convert it,
+//! and verify that applying ΔA·ΔB to the ORIGINAL dense weights
+//! reproduces the fine-tuned weights exactly — no SVD at share time.
 //!
 //! Run: cargo run --release --example adapter_convert
 
 use anyhow::Result;
 use pissa::adapter::convert::pissa_to_lora;
-use pissa::adapter::init::Strategy;
+use pissa::adapter::{AdapterEngine, AdapterSpec};
 use pissa::coordinator::{self, RunConfig};
-use pissa::linalg::Mat;
-use pissa::model::{apply_strategy, Tensor};
-use pissa::runtime::{Manifest, Runtime};
+use pissa::linalg::{matmul, Mat};
+use pissa::model::{apply_spec, BaseModel, Tensor};
+use pissa::runtime::{ConfigInfo, Manifest, Runtime};
 use pissa::util::rng::Rng;
 use std::path::PathBuf;
 
 fn main() -> Result<()> {
-    let art = PathBuf::from("artifacts");
-    let manifest = Manifest::load(&art)?;
-    let rt = Runtime::cpu(&art)?;
+    engine_demo()?;
 
-    println!("[convert] pre-train + PiSSA fine-tune on tiny…");
+    let art = PathBuf::from("artifacts");
+    if !art.join("manifest.json").exists() {
+        println!("\n[convert] artifacts/ absent — skipping the PJRT fine-tune flow");
+        println!("[convert] (run `make artifacts` and link the real xla crate to enable it)");
+        return Ok(());
+    }
+    pjrt_convert_flow(&art)
+}
+
+/// Part 1: AdapterEngine — registry ops over one frozen base.
+fn engine_demo() -> Result<()> {
+    println!("== AdapterEngine demo: two adapters, one frozen base ==");
+    let cfg = ConfigInfo {
+        name: "demo".into(),
+        kind: "decoder".into(),
+        vocab: 320,
+        d_model: 48,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff: 96,
+        seq_len: 32,
+        batch: 4,
+        eval_batch: 2,
+        n_classes: 0,
+        ranks: vec![4, 8],
+    };
+    let mut rng = Rng::new(42);
+    let base = BaseModel::random(&cfg, &mut rng);
+    let w_q0 = base.linears["base_q"].layer(0); // original dense weight
+    let mut engine = AdapterEngine::new(base);
+
+    // Two named adapters from declarative specs; attach validates the
+    // base + A·B == W invariant for every targeted layer.
+    engine.attach("math-pissa", AdapterSpec::pissa(8).niter(4).targets(&["q", "v"]), &mut rng)?;
+    engine.attach("chat-lora", AdapterSpec::lora(4), &mut rng)?;
+    println!("[engine] attached: {:?} (active: {:?})", engine.names(), engine.active());
+
+    // Both serve W exactly at init — that's the paper's point.
+    for name in ["math-pissa", "chat-lora"] {
+        let eff = engine.effective_weight_of(name, "q", 0)?;
+        let rel = eff.sub(&w_q0).fro() / w_q0.fro();
+        println!("[engine] {name:10}: ‖W − effective‖/‖W‖ = {rel:.2e}");
+        assert!(rel < 1e-5, "{name} must preserve W at init");
+    }
+    // PiSSA targets only q/v: untargeted modules serve the frozen base.
+    let gate = engine.effective_weight_of("math-pissa", "gate", 0)?;
+    assert_eq!(gate.data, engine.base_weight("gate", 0).data);
+
+    // Hot-swap: O(1), base untouched.
+    let prev = engine.swap("chat-lora")?;
+    println!("[engine] hot-swapped {:?} -> {:?}", prev, engine.active());
+
+    // Simulate training drift on both adapters.
+    for name in ["math-pissa", "chat-lora"] {
+        let modules: Vec<String> =
+            engine.get(name)?.spec.target_modules().iter().map(|s| s.to_string()).collect();
+        for module in modules {
+            for li in 0..2 {
+                let (mut a, mut b) = {
+                    let ad = engine.get(name)?;
+                    (
+                        ad.factors[&format!("a_{module}")].layer(li),
+                        ad.factors[&format!("b_{module}")].layer(li),
+                    )
+                };
+                for x in a.data.iter_mut() {
+                    *x += 0.05 * rng.normal_f32(0.0, 1.0);
+                }
+                for x in b.data.iter_mut() {
+                    *x += 0.05 * rng.normal_f32(0.0, 1.0);
+                }
+                engine.set_factors(name, &module, li, &a, &b)?;
+            }
+        }
+    }
+
+    // Merge/unmerge the LoRA adapter (deployment path). The merged dense
+    // weights equal base + A·B; unmerge verifies the round-trip and the
+    // factors come back bit-identical (they were never destroyed).
+    let factors_before = engine.get("chat-lora")?.factors.clone();
+    let eff_before = engine.effective_weight_of("chat-lora", "down", 1)?;
+    engine.merge("chat-lora")?;
+    let eff_merged = engine.effective_weight_of("chat-lora", "down", 1)?;
+    assert_eq!(eff_merged.data, eff_before.data, "merged dense == base + A·B");
+    engine.unmerge("chat-lora")?;
+    for (k, t) in &factors_before {
+        assert_eq!(t.data, engine.get("chat-lora")?.factors[k].data, "factor {k} changed");
+    }
+    println!("[engine] merge/unmerge(chat-lora): dense == base + A·B, factors restored ✓");
+
+    // Export the (drifted) PiSSA adapter as an Appendix-C LoRA delta;
+    // every layer is validated against the ORIGINAL dense W inside
+    // to_lora_delta.
+    let deltas = engine.to_lora_delta("math-pissa")?;
+    let d = &deltas["q"][0];
+    let via = w_q0.add(&d.delta());
+    let direct = engine.effective_weight_of("math-pissa", "q", 0)?;
+    let rel = via.sub(&direct).fro() / direct.fro();
+    println!(
+        "[engine] to_lora_delta(math-pissa): {} modules, ΔA is {}x{}, W+ΔAΔB rel err {rel:.2e} ✓",
+        deltas.len(),
+        d.da.rows,
+        d.da.cols
+    );
+    assert!(rel < 1e-4);
+    println!("[engine] OK — hot-swap, merge/unmerge, and LoRA export all hold ✓");
+    Ok(())
+}
+
+/// Part 2: the original PJRT-backed fine-tune + conversion protocol.
+fn pjrt_convert_flow(art: &PathBuf) -> Result<()> {
+    let manifest = Manifest::load(art)?;
+    let rt = Runtime::cpu(art)?;
+
+    println!("\n[convert] pre-train + PiSSA fine-tune on tiny…");
     let (base, _) = coordinator::pretrain(&rt, &manifest, "tiny", 100, 2e-3, 42)?;
     // Snapshot the INITIAL PiSSA factors (the conversion needs them).
+    let spec = AdapterSpec::pissa(4);
     let mut rng = Rng::new(42 /* same seed the finetune below uses */);
-    let init_state = apply_strategy(&base, Strategy::Pissa, 4, 5, &mut rng)?;
+    let init_state = apply_spec(&base, &spec, &mut rng)?;
 
-    let run = RunConfig { steps: 60, ..RunConfig::quick("tiny", Strategy::Pissa, 4) };
+    let run = RunConfig { steps: 60, ..RunConfig::quick("tiny", spec) };
     let result = coordinator::finetune(&rt, &manifest, &base, &run)?;
     let trained = &result.final_state;
 
@@ -45,7 +167,7 @@ fn main() -> Result<()> {
             let res = trained.frozen[&format!("base_{name}")].layer(l);
 
             // Fine-tuned effective weight: W_res + A'B'.
-            let w_ft = res.add(&pissa::linalg::matmul(&a1, &b1));
+            let w_ft = res.add(&matmul(&a1, &b1));
             // Via conversion: W_orig + ΔA·ΔB.
             let delta = pissa_to_lora(&a0, &b0, &a1, &b1);
             let w_via = w_orig.add(&delta.delta());

@@ -14,7 +14,7 @@
 //! Recorded in EXPERIMENTS.md §End-to-end.
 
 use anyhow::Result;
-use pissa::adapter::init::Strategy;
+use pissa::adapter::AdapterSpec;
 use pissa::coordinator::{self, RunConfig, TaskFamily};
 use pissa::metrics::JsonlSink;
 use pissa::runtime::{Manifest, Runtime};
@@ -63,30 +63,28 @@ fn main() -> Result<()> {
     }
 
     // ---- 2. fine-tune under three strategies ------------------------------
-    let strategies = [Strategy::Pissa, Strategy::Lora, Strategy::FullFt];
+    let specs = [AdapterSpec::pissa(rank), AdapterSpec::lora(rank), AdapterSpec::full_ft()];
     let mut summaries = Vec::new();
-    for strategy in strategies {
+    for spec in specs {
         let run = RunConfig {
             config: config.clone(),
-            strategy,
-            rank,
-            iters: 5,
+            spec: spec.clone(),
             steps: ft_steps,
-            peak_lr: if strategy == Strategy::FullFt { 5e-4 } else { 2e-3 },
+            peak_lr: if spec.is_full_ft() { 5e-4 } else { 2e-3 },
             corpus_size: 2048,
             seed,
             task: TaskFamily::Math,
         };
         let t = Timer::start();
         let result = coordinator::finetune(&rt, &manifest, &base, &run)?;
-        let mut sink = JsonlSink::create(&out_dir.join(format!("{}.jsonl", strategy.name())))?;
+        let mut sink = JsonlSink::create(&out_dir.join(format!("{}.jsonl", spec.name())))?;
         for m in &result.history {
             sink.write_step(m)?;
         }
         let acc = coordinator::evaluate(&rt, &manifest, &run, &result.final_state, n_eval, 56)?;
         println!(
             "[e2e] {:8} params={:>9}  loss {:.4} -> {:.4}  acc {:>6.2}%  ({:.1}s, overhead {:.1}%)",
-            strategy.name(),
+            spec.name(),
             fmt_count(result.trainable_params),
             result.history[0].loss,
             result.final_loss(10),
@@ -94,12 +92,12 @@ fn main() -> Result<()> {
             t.secs(),
             100.0 * result.overhead_s / result.total_s.max(1e-9),
         );
-        summaries.push((strategy, result.final_loss(10), acc));
+        summaries.push((spec.name(), result.final_loss(10), acc));
     }
 
     // ---- 3. verdict --------------------------------------------------------
-    let get = |s: Strategy| summaries.iter().find(|x| x.0 == s).unwrap();
-    let (p, l) = (get(Strategy::Pissa), get(Strategy::Lora));
+    let get = |s: &str| summaries.iter().find(|x| x.0 == s).unwrap();
+    let (p, l) = (get("pissa"), get("lora"));
     println!("\n[e2e] paper claims at reproduction scale:");
     println!(
         "  PiSSA loss {:.4} < LoRA loss {:.4} : {}",

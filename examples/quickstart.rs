@@ -9,7 +9,7 @@
 //! Run: cargo run --release --example quickstart
 
 use anyhow::Result;
-use pissa::adapter::init::{self, Strategy};
+use pissa::adapter::{init, AdapterSpec};
 use pissa::coordinator::{self, RunConfig};
 use pissa::linalg::matmul;
 use pissa::quant;
@@ -50,17 +50,17 @@ fn main() -> Result<()> {
 
     println!("== 3. fine-tune on synthetic math (identical budgets) ==");
     let mut results = Vec::new();
-    for strategy in [Strategy::Pissa, Strategy::Lora] {
-        let run = RunConfig { steps: 80, ..RunConfig::quick("tiny", strategy, 4) };
+    for spec in [AdapterSpec::pissa(4), AdapterSpec::lora(4)] {
+        let run = RunConfig { steps: 80, ..RunConfig::quick("tiny", spec.clone()) };
         let r = coordinator::finetune(&rt, &manifest, &base, &run)?;
         println!(
             "   {:8} params={}  loss {:.4} -> {:.4}",
-            strategy.name(),
+            spec.name(),
             r.trainable_params,
             r.history[0].loss,
             r.final_loss(8)
         );
-        results.push((strategy, r.final_loss(8)));
+        results.push((spec.name(), r.final_loss(8)));
     }
     println!(
         "   => PiSSA converges {} (paper Fig. 2a/4)\n",

@@ -1,0 +1,661 @@
+//! `AdapterEngine` — one frozen base model, a registry of named adapters.
+//!
+//! The serving-path building block the flat API could not express: many
+//! adapters (each initialized from its own [`AdapterSpec`], possibly
+//! targeting different module subsets at different ranks) share ONE
+//! frozen `BaseModel`, and requests hot-swap between them without
+//! touching the base weights. Registry operations:
+//!
+//! * `attach` / `detach` — initialize an adapter from a spec (validating
+//!   the paper's `base + A·B == W` exactness invariant per layer) or
+//!   remove it,
+//! * `swap` — O(1) hot-swap of the active adapter,
+//! * `merge` / `unmerge` — the deployment path (§3): fold `A·B` into
+//!   dense serving weights and back. The factors are never destroyed, so
+//!   unmerge restores them bit-for-bit; the merged weights are a derived
+//!   cache verified against the factors at unmerge time,
+//! * `to_lora_delta` — the Appendix-C conversion (`ΔA = [A'|A]`,
+//!   `ΔB = [B';−B]`) exported per targeted module/layer and validated
+//!   against the original dense weights,
+//! * `save` / `attach_saved` — v2 `PISSACKP` checkpoints that carry the
+//!   spec, so a stored adapter records how it was made.
+
+use super::convert::{pissa_to_lora, LoraDelta};
+use super::init::{AdapterInit, Strategy};
+use super::spec::AdapterSpec;
+use super::store::Checkpoint;
+use crate::linalg::{matmul, Mat};
+use crate::model::{BaseModel, ParamStore, Tensor, TrainState, LINEARS};
+use crate::quant::nf4_roundtrip;
+use crate::util::rng::Rng;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Relative tolerance for the `base + A·B == W` exactness invariant
+/// (full-precision strategies; quantized bases are bounded by the QLoRA
+/// round-trip error instead).
+pub const EXACTNESS_TOL: f64 = 1e-5;
+
+/// Relative tolerance for fp-roundtrip checks (merge/unmerge, Appendix C).
+const ROUNDTRIP_TOL: f64 = 1e-4;
+
+/// One registered adapter: its spec, frozen residual/base stacks, current
+/// factors, and the attach-time factor snapshot (Appendix C needs the
+/// initial factors).
+#[derive(Clone, Debug)]
+pub struct NamedAdapter {
+    pub spec: AdapterSpec,
+    /// `base_<module>` stacks ([L, m, n]) for targeted modules.
+    pub frozen: ParamStore,
+    /// Current `a_<module>` / `b_<module>` factor stacks (training updates
+    /// these via `set_factors`).
+    pub factors: ParamStore,
+    /// Factors as initialized (frozen snapshot for the Appendix-C export).
+    pub init_factors: ParamStore,
+}
+
+/// Multi-adapter registry over one frozen base model.
+#[derive(Debug)]
+pub struct AdapterEngine {
+    base: BaseModel,
+    adapters: BTreeMap<String, NamedAdapter>,
+    active: Option<String>,
+    /// Merged dense-weight cache: at most one adapter is merged at a time.
+    merged: Option<(String, ParamStore)>,
+}
+
+impl AdapterEngine {
+    /// Take ownership of a (frozen) base model.
+    pub fn new(base: BaseModel) -> AdapterEngine {
+        AdapterEngine { base, adapters: BTreeMap::new(), active: None, merged: None }
+    }
+
+    pub fn base(&self) -> &BaseModel {
+        &self.base
+    }
+
+    /// Registered adapter names (sorted).
+    pub fn names(&self) -> Vec<&str> {
+        self.adapters.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn active(&self) -> Option<&str> {
+        self.active.as_deref()
+    }
+
+    /// Name of the currently merged adapter, if any.
+    pub fn merged(&self) -> Option<&str> {
+        self.merged.as_ref().map(|(n, _)| n.as_str())
+    }
+
+    pub fn get(&self, name: &str) -> Result<&NamedAdapter> {
+        self.adapters
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("no adapter named '{name}' (have: {:?})", self.names()))
+    }
+
+    /// Original dense weight of `module` at `layer` in the frozen base.
+    pub fn base_weight(&self, module: &str, layer: usize) -> Mat {
+        self.base.linears[&format!("base_{module}")].layer(layer)
+    }
+
+    /// Initialize and register an adapter from a spec. The first attached
+    /// adapter becomes active. Every layer's init is validated against
+    /// the exactness invariant before the adapter is accepted.
+    pub fn attach(&mut self, name: &str, spec: AdapterSpec, rng: &mut Rng) -> Result<()> {
+        anyhow::ensure!(!name.is_empty(), "adapter name must be non-empty");
+        anyhow::ensure!(
+            !self.adapters.contains_key(name),
+            "adapter '{name}' is already attached"
+        );
+        anyhow::ensure!(
+            spec.strategy != Strategy::FullFt,
+            "full-ft is not an adapter: the engine's base stays frozen"
+        );
+        spec.validate()?;
+        let l = self.base.n_layers();
+        let mut frozen = ParamStore::new();
+        let mut factors = ParamStore::new();
+        for module in LINEARS {
+            if !spec.targets_module(module) {
+                continue;
+            }
+            let stacked = &self.base.linears[&format!("base_{module}")];
+            let rank = spec.module_rank(module);
+            let mut bases = Vec::with_capacity(l);
+            let mut aas = Vec::with_capacity(l);
+            let mut bbs = Vec::with_capacity(l);
+            for li in 0..l {
+                let w = stacked.layer(li);
+                let init = spec.init_matrix(&w, rank, rng);
+                check_exactness(&spec, &w, &init)
+                    .with_context(|| format!("adapter '{name}': {module}[{li}]"))?;
+                bases.push(init.base);
+                aas.push(init.a);
+                bbs.push(init.b);
+            }
+            frozen.insert(format!("base_{module}"), Tensor::stack(&bases));
+            factors.insert(format!("a_{module}"), Tensor::stack(&aas));
+            factors.insert(format!("b_{module}"), Tensor::stack(&bbs));
+        }
+        let init_factors = factors.clone();
+        self.adapters
+            .insert(name.to_string(), NamedAdapter { spec, frozen, factors, init_factors });
+        if self.active.is_none() {
+            self.active = Some(name.to_string());
+        }
+        Ok(())
+    }
+
+    /// Remove an adapter from the registry (must not be merged).
+    pub fn detach(&mut self, name: &str) -> Result<NamedAdapter> {
+        if let Some((m, _)) = &self.merged {
+            anyhow::ensure!(m != name, "adapter '{name}' is merged; unmerge it first");
+        }
+        let ad = self
+            .adapters
+            .remove(name)
+            .ok_or_else(|| anyhow::anyhow!("no adapter named '{name}'"))?;
+        if self.active.as_deref() == Some(name) {
+            self.active = None;
+        }
+        Ok(ad)
+    }
+
+    /// Hot-swap the active adapter. O(1): only the registry pointer moves;
+    /// the frozen base is untouched. Returns the previously active name.
+    pub fn swap(&mut self, name: &str) -> Result<Option<String>> {
+        anyhow::ensure!(
+            self.adapters.contains_key(name),
+            "cannot swap to unknown adapter '{name}' (have: {:?})",
+            self.names()
+        );
+        Ok(self.active.replace(name.to_string()))
+    }
+
+    /// Effective serving weight of `module` at `layer` under the ACTIVE
+    /// adapter: `base + A·B` for targeted modules (the merged dense cache
+    /// when merged), the original dense weight otherwise.
+    pub fn effective_weight(&self, module: &str, layer: usize) -> Result<Mat> {
+        let name = self
+            .active
+            .clone()
+            .ok_or_else(|| anyhow::anyhow!("no active adapter (attach/swap one first)"))?;
+        self.effective_weight_of(&name, module, layer)
+    }
+
+    /// Effective serving weight under a specific adapter.
+    pub fn effective_weight_of(&self, name: &str, module: &str, layer: usize) -> Result<Mat> {
+        let ad = self.get(name)?;
+        if !ad.spec.targets_module(module) {
+            return Ok(self.base_weight(module, layer));
+        }
+        if let Some((m, dense)) = &self.merged {
+            if m == name {
+                return Ok(dense[&format!("base_{module}")].layer(layer));
+            }
+        }
+        let base = ad.frozen[&format!("base_{module}")].layer(layer);
+        let a = ad.factors[&format!("a_{module}")].layer(layer);
+        let b = ad.factors[&format!("b_{module}")].layer(layer);
+        Ok(base.add(&matmul(&a, &b)))
+    }
+
+    /// Deployment path (§3): fold `A·B` into dense serving weights for
+    /// every targeted module. The factors are retained, so this is fully
+    /// reversible; at most one adapter may be merged at a time.
+    pub fn merge(&mut self, name: &str) -> Result<()> {
+        if let Some((m, _)) = &self.merged {
+            anyhow::bail!("adapter '{m}' is already merged; unmerge it first");
+        }
+        let ad = self.get(name)?;
+        let l = self.base.n_layers();
+        let mut dense = ParamStore::new();
+        for module in LINEARS {
+            if !ad.spec.targets_module(module) {
+                continue;
+            }
+            let mut merged_layers = Vec::with_capacity(l);
+            for li in 0..l {
+                let base = ad.frozen[&format!("base_{module}")].layer(li);
+                let a = ad.factors[&format!("a_{module}")].layer(li);
+                let b = ad.factors[&format!("b_{module}")].layer(li);
+                merged_layers.push(base.add(&matmul(&a, &b)));
+            }
+            dense.insert(format!("base_{module}"), Tensor::stack(&merged_layers));
+        }
+        self.merged = Some((name.to_string(), dense));
+        Ok(())
+    }
+
+    /// Undo a merge. Runtime invariant: subtracting `A·B` from the merged
+    /// dense weights must reproduce the frozen base (to fp tolerance);
+    /// the factors themselves were never touched, so they are restored
+    /// exactly.
+    pub fn unmerge(&mut self, name: &str) -> Result<()> {
+        let dense = match &self.merged {
+            Some((m, dense)) if m == name => dense,
+            Some((m, _)) => anyhow::bail!("adapter '{m}' is merged, not '{name}'"),
+            None => anyhow::bail!("no adapter is merged"),
+        };
+        let ad = self.get(name)?;
+        let l = self.base.n_layers();
+        for module in LINEARS {
+            if !ad.spec.targets_module(module) {
+                continue;
+            }
+            for li in 0..l {
+                let merged = dense[&format!("base_{module}")].layer(li);
+                let a = ad.factors[&format!("a_{module}")].layer(li);
+                let b = ad.factors[&format!("b_{module}")].layer(li);
+                let back = merged.sub(&matmul(&a, &b));
+                let frozen = ad.frozen[&format!("base_{module}")].layer(li);
+                let err = back.sub(&frozen).fro() / frozen.fro().max(1e-30);
+                anyhow::ensure!(
+                    err < ROUNDTRIP_TOL,
+                    "unmerge('{name}') {module}[{li}]: merged − A·B deviates from the \
+                     frozen base (rel err {err:.3e}) — factors changed while merged?"
+                );
+            }
+        }
+        self.merged = None;
+        Ok(())
+    }
+
+    /// Replace one layer's factors (e.g. after a training run). Rejected
+    /// while the adapter is merged: the dense cache would go stale.
+    pub fn set_factors(
+        &mut self,
+        name: &str,
+        module: &str,
+        layer: usize,
+        a: &Mat,
+        b: &Mat,
+    ) -> Result<()> {
+        if let Some((m, _)) = &self.merged {
+            anyhow::ensure!(
+                m != name,
+                "adapter '{name}' is merged; unmerge before updating factors"
+            );
+        }
+        let ad = self
+            .adapters
+            .get_mut(name)
+            .ok_or_else(|| anyhow::anyhow!("no adapter named '{name}'"))?;
+        anyhow::ensure!(
+            ad.spec.targets_module(module),
+            "adapter '{name}' does not target module '{module}'"
+        );
+        let at = ad
+            .factors
+            .get_mut(&format!("a_{module}"))
+            .ok_or_else(|| anyhow::anyhow!("missing a_{module}"))?;
+        anyhow::ensure!(
+            at.shape[1] == a.rows && at.shape[2] == a.cols,
+            "a_{module}[{layer}]: got {}x{}, want {}x{}",
+            a.rows,
+            a.cols,
+            at.shape[1],
+            at.shape[2]
+        );
+        at.set_layer(layer, a);
+        let bt = ad
+            .factors
+            .get_mut(&format!("b_{module}"))
+            .ok_or_else(|| anyhow::anyhow!("missing b_{module}"))?;
+        anyhow::ensure!(
+            bt.shape[1] == b.rows && bt.shape[2] == b.cols,
+            "b_{module}[{layer}]: got {}x{}, want {}x{}",
+            b.rows,
+            b.cols,
+            bt.shape[1],
+            bt.shape[2]
+        );
+        bt.set_layer(layer, b);
+        Ok(())
+    }
+
+    /// Appendix-C export: per targeted module, the per-layer equivalent
+    /// LoRA deltas `ΔA = [A'|A], ΔB = [B';−B]` that plug into the
+    /// ORIGINAL dense weights. Each delta is validated at runtime:
+    /// `W_orig + ΔA·ΔB == base + A'·B'`. Quantized strategies are
+    /// rejected — their frozen base is not the full-precision residual,
+    /// so the identity does not hold against the original W.
+    pub fn to_lora_delta(&self, name: &str) -> Result<BTreeMap<String, Vec<LoraDelta>>> {
+        let ad = self.get(name)?;
+        anyhow::ensure!(
+            !ad.spec.quantized(),
+            "Appendix-C conversion needs a full-precision residual; strategy '{}' \
+             quantizes its frozen base",
+            ad.spec.name()
+        );
+        let l = self.base.n_layers();
+        let mut out = BTreeMap::new();
+        for module in LINEARS {
+            if !ad.spec.targets_module(module) {
+                continue;
+            }
+            let mut deltas = Vec::with_capacity(l);
+            for li in 0..l {
+                let a0 = ad.init_factors[&format!("a_{module}")].layer(li);
+                let b0 = ad.init_factors[&format!("b_{module}")].layer(li);
+                let a1 = ad.factors[&format!("a_{module}")].layer(li);
+                let b1 = ad.factors[&format!("b_{module}")].layer(li);
+                let delta = pissa_to_lora(&a0, &b0, &a1, &b1);
+                // Invariant (Eq. 9–10): applying the delta to the original
+                // W reproduces the adapter's effective weight.
+                let via = self.base_weight(module, li).add(&delta.delta());
+                let direct =
+                    ad.frozen[&format!("base_{module}")].layer(li).add(&matmul(&a1, &b1));
+                let err = via.sub(&direct).fro() / direct.fro().max(1e-30);
+                anyhow::ensure!(
+                    err < ROUNDTRIP_TOL,
+                    "to_lora_delta('{name}') {module}[{li}]: conversion rel err {err:.3e}"
+                );
+                deltas.push(delta);
+            }
+            out.insert(module.to_string(), deltas);
+        }
+        Ok(out)
+    }
+
+    /// Bridge an adapter into the artifact-driven `Trainer`. The AOT
+    /// artifact layout requires all seven linears at one rank, so partial
+    /// or per-module-rank specs are rejected with a clear error.
+    pub fn state(&self, name: &str) -> Result<TrainState> {
+        let ad = self.get(name)?;
+        anyhow::ensure!(
+            ad.spec.covers_all() && ad.spec.uniform_rank(),
+            "train artifacts are lowered for adapters on all seven linears at one \
+             rank; spec '{}' targets [{}] — partial targeting is served by the \
+             engine directly",
+            ad.spec,
+            ad.spec.target_modules().join(",")
+        );
+        let mut frozen = self.base.scaffold.clone();
+        let mut trainable = ParamStore::new();
+        if self.base.encoder {
+            let cls = &self.base.scaffold["cls_base"];
+            trainable.insert("cls_head".into(), Tensor::zeros(&cls.shape));
+        }
+        for (k, t) in &ad.frozen {
+            frozen.insert(k.clone(), t.clone());
+        }
+        for (k, t) in &ad.factors {
+            trainable.insert(k.clone(), t.clone());
+        }
+        Ok(TrainState::new(ad.spec.clone(), frozen, trainable))
+    }
+
+    /// Persist one adapter (spec + frozen + current factors + init
+    /// snapshot) as a v2 `PISSACKP` checkpoint.
+    pub fn save(&self, name: &str, path: &Path) -> Result<()> {
+        let ad = self.get(name)?;
+        let mut ckp = Checkpoint::new();
+        ckp.spec = Some(ad.spec.clone());
+        for (k, t) in &ad.frozen {
+            ckp.put_tensor(&format!("frozen.{k}"), t);
+        }
+        for (k, t) in &ad.factors {
+            ckp.put_tensor(&format!("factors.{k}"), t);
+        }
+        for (k, t) in &ad.init_factors {
+            ckp.put_tensor(&format!("init.{k}"), t);
+        }
+        ckp.save(path)
+    }
+
+    /// Register an adapter previously stored with [`AdapterEngine::save`].
+    pub fn attach_saved(&mut self, name: &str, path: &Path) -> Result<()> {
+        anyhow::ensure!(
+            !self.adapters.contains_key(name),
+            "adapter '{name}' is already attached"
+        );
+        let ckp = Checkpoint::load(path)?;
+        let spec = ckp
+            .spec
+            .clone()
+            .ok_or_else(|| anyhow::anyhow!("checkpoint {path:?} carries no AdapterSpec (v1 file?)"))?;
+        spec.validate()?;
+        let mut frozen = ParamStore::new();
+        let mut factors = ParamStore::new();
+        let mut init_factors = ParamStore::new();
+        let l = self.base.n_layers();
+        for module in LINEARS {
+            if !spec.targets_module(module) {
+                continue;
+            }
+            let base_t = ckp.get_tensor(&format!("frozen.base_{module}"))?;
+            let expect = &self.base.linears[&format!("base_{module}")].shape;
+            anyhow::ensure!(
+                &base_t.shape == expect,
+                "saved adapter '{name}' base_{module} shape {:?} vs base model {:?}",
+                base_t.shape,
+                expect
+            );
+            anyhow::ensure!(base_t.shape[0] == l, "layer count mismatch for {module}");
+            let a0_t = ckp.get_tensor(&format!("init.a_{module}"))?;
+            let b0_t = ckp.get_tensor(&format!("init.b_{module}"))?;
+            // The attach-time invariant must hold against THIS engine's
+            // base: frozen + A₀·B₀ == W (resp. the quantized bound).
+            // Catches adapters saved against a different base model,
+            // which match on shape but serve an inconsistent mix.
+            for li in 0..l {
+                let w = self.base_weight(module, li);
+                let probe = AdapterInit {
+                    base: base_t.layer(li),
+                    a: a0_t.layer(li),
+                    b: b0_t.layer(li),
+                };
+                check_exactness(&spec, &w, &probe).with_context(|| {
+                    format!(
+                        "attach_saved('{name}') {module}[{li}]: saved adapter does not \
+                         decompose this engine's base (wrong base model?)"
+                    )
+                })?;
+            }
+            frozen.insert(format!("base_{module}"), base_t);
+            factors.insert(format!("a_{module}"), ckp.get_tensor(&format!("factors.a_{module}"))?);
+            factors.insert(format!("b_{module}"), ckp.get_tensor(&format!("factors.b_{module}"))?);
+            init_factors.insert(format!("a_{module}"), a0_t);
+            init_factors.insert(format!("b_{module}"), b0_t);
+        }
+        self.adapters
+            .insert(name.to_string(), NamedAdapter { spec, frozen, factors, init_factors });
+        if self.active.is_none() {
+            self.active = Some(name.to_string());
+        }
+        Ok(())
+    }
+}
+
+/// The paper's exactness invariant, checked at attach time.
+/// Full-precision strategies must preserve W to [`EXACTNESS_TOL`].
+/// Quantized strategies can't preserve W exactly; their structural
+/// invariant is that the frozen base is an NF4 fixed point, and — at
+/// standard scaling — the effective error must not exceed the plain
+/// NF4(W) round-trip (QLoRA) error by more than 5% (the paper's Table 3
+/// claim; alpha-scaled factors inflate the residual, so the bound is
+/// only asserted when scaling == 1).
+fn check_exactness(spec: &AdapterSpec, w: &Mat, init: &AdapterInit) -> Result<()> {
+    let err = init.effective().sub(w).fro();
+    if spec.quantized() {
+        let refix = init.base.sub(&nf4_roundtrip(&init.base)).fro();
+        anyhow::ensure!(
+            refix < 1e-5 * (1.0 + init.base.fro()),
+            "quantized base is not an NF4 fixed point (re-quantization moves it by {refix:.3e})"
+        );
+        if spec.default_alpha() {
+            // 10% slack covers near-flat spectra (random-init weights),
+            // where the principal-component reduction is marginal.
+            let bound = w.sub(&nf4_roundtrip(w)).fro() * 1.10 + 1e-9;
+            anyhow::ensure!(
+                err <= bound,
+                "quantized init error {err:.3e} exceeds the QLoRA bound {bound:.3e}"
+            );
+        }
+    } else {
+        let rel = err / w.fro().max(1e-30);
+        anyhow::ensure!(
+            rel < EXACTNESS_TOL,
+            "base + A·B deviates from W: rel err {rel:.3e}"
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::ConfigInfo;
+
+    fn tiny_cfg() -> ConfigInfo {
+        ConfigInfo {
+            name: "engine-test".into(),
+            kind: "decoder".into(),
+            vocab: 128,
+            d_model: 32,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 64,
+            seq_len: 32,
+            batch: 4,
+            eval_batch: 2,
+            n_classes: 0,
+            ranks: vec![2, 4],
+        }
+    }
+
+    fn engine(seed: u64) -> (AdapterEngine, Rng) {
+        let mut rng = Rng::new(seed);
+        let base = BaseModel::random(&tiny_cfg(), &mut rng);
+        (AdapterEngine::new(base), rng)
+    }
+
+    #[test]
+    fn attach_swap_detach_lifecycle() {
+        let (mut eng, mut rng) = engine(1);
+        eng.attach("p", AdapterSpec::pissa(4).targets(&["q", "v"]), &mut rng).unwrap();
+        eng.attach("l", AdapterSpec::lora(2), &mut rng).unwrap();
+        assert_eq!(eng.active(), Some("p")); // first attach activates
+        assert_eq!(eng.names(), vec!["l", "p"]);
+        assert!(eng.attach("p", AdapterSpec::lora(2), &mut rng).is_err()); // dup
+        let prev = eng.swap("l").unwrap();
+        assert_eq!(prev.as_deref(), Some("p"));
+        assert_eq!(eng.active(), Some("l"));
+        let det = eng.detach("l").unwrap();
+        assert_eq!(det.spec.strategy, Strategy::Lora);
+        assert_eq!(eng.active(), None);
+        assert!(eng.swap("l").is_err());
+    }
+
+    #[test]
+    fn untargeted_modules_serve_the_base_weight() {
+        let (mut eng, mut rng) = engine(2);
+        eng.attach("p", AdapterSpec::pissa(4).targets(&["q"]), &mut rng).unwrap();
+        let w_gate = eng.effective_weight("gate", 0).unwrap();
+        assert_eq!(w_gate.data, eng.base_weight("gate", 0).data);
+        // Targeted module preserves W too (exactness), but via base + A·B.
+        let w_q = eng.effective_weight("q", 0).unwrap();
+        let orig = eng.base_weight("q", 0);
+        assert!(w_q.sub(&orig).fro() / orig.fro() < 1e-5);
+    }
+
+    #[test]
+    fn merge_unmerge_roundtrip_and_guards() {
+        let (mut eng, mut rng) = engine(3);
+        eng.attach("p", AdapterSpec::pissa(4), &mut rng).unwrap();
+        eng.attach("l", AdapterSpec::lora(2), &mut rng).unwrap();
+        let factors_before = eng.get("p").unwrap().factors.clone();
+        let eff_before = eng.effective_weight_of("p", "q", 1).unwrap();
+        eng.merge("p").unwrap();
+        assert_eq!(eng.merged(), Some("p"));
+        // merged serving weight is the same effective weight
+        let eff_merged = eng.effective_weight_of("p", "q", 1).unwrap();
+        assert_eq!(eff_merged.data, eff_before.data);
+        // guards: second merge, detach-while-merged, set_factors-while-merged
+        assert!(eng.merge("l").is_err());
+        assert!(eng.detach("p").is_err());
+        let a = factors_before["a_q"].layer(0);
+        let b = factors_before["b_q"].layer(0);
+        assert!(eng.set_factors("p", "q", 0, &a, &b).is_err());
+        eng.unmerge("p").unwrap();
+        assert_eq!(eng.merged(), None);
+        // factors restored bit-for-bit
+        for (k, t) in &factors_before {
+            assert_eq!(t.data, eng.get("p").unwrap().factors[k].data, "factor {k} changed");
+        }
+    }
+
+    #[test]
+    fn full_ft_is_not_an_adapter() {
+        let (mut eng, mut rng) = engine(4);
+        assert!(eng.attach("f", AdapterSpec::full_ft(), &mut rng).is_err());
+    }
+
+    #[test]
+    fn lora_delta_export_validates() {
+        let (mut eng, mut rng) = engine(5);
+        eng.attach("p", AdapterSpec::pissa(3).targets(&["q", "v"]), &mut rng).unwrap();
+        // simulate training drift, then export
+        let (a1, b1) = {
+            let ad = eng.get("p").unwrap();
+            let mut a = ad.factors["a_q"].layer(0);
+            let mut b = ad.factors["b_q"].layer(0);
+            for x in a.data.iter_mut() {
+                *x += 0.05 * rng.normal_f32(0.0, 1.0);
+            }
+            for x in b.data.iter_mut() {
+                *x += 0.05 * rng.normal_f32(0.0, 1.0);
+            }
+            (a, b)
+        };
+        eng.set_factors("p", "q", 0, &a1, &b1).unwrap();
+        let deltas = eng.to_lora_delta("p").unwrap();
+        assert_eq!(deltas.len(), 2);
+        assert_eq!(deltas["q"].len(), 2);
+        // ΔA is m×2r
+        assert_eq!(deltas["q"][0].da.cols, 6);
+        // quantized adapters refuse the export
+        eng.attach("qp", AdapterSpec::qpissa(2).iters(1), &mut rng).unwrap();
+        assert!(eng.to_lora_delta("qp").is_err());
+    }
+
+    #[test]
+    fn state_bridge_requires_full_uniform_targeting() {
+        let (mut eng, mut rng) = engine(6);
+        eng.attach("partial", AdapterSpec::pissa(2).targets(&["q"]), &mut rng).unwrap();
+        assert!(eng.state("partial").is_err());
+        eng.attach("fullcov", AdapterSpec::pissa(2), &mut rng).unwrap();
+        let st = eng.state("fullcov").unwrap();
+        assert_eq!(st.rank(), 2);
+        assert!(st.trainable.contains_key("a_down"));
+        assert!(st.frozen.contains_key("base_down"));
+        assert!(st.frozen.contains_key("embed"));
+    }
+
+    #[test]
+    fn save_and_attach_saved_roundtrip() {
+        let (mut eng, mut rng) = engine(7);
+        eng.attach("p", AdapterSpec::pissa(3).targets(&["q", "v"]).target_rank("q", 4), &mut rng)
+            .unwrap();
+        let dir = std::env::temp_dir().join("pissa_engine_save_test");
+        let path = dir.join("p.ckpt");
+        eng.save("p", &path).unwrap();
+
+        // reload into a second engine over the same base
+        let mut eng2 = AdapterEngine::new(eng.base().clone());
+        eng2.attach_saved("p", &path).unwrap();
+        let (a, b) = (eng.get("p").unwrap(), eng2.get("p").unwrap());
+        assert_eq!(a.spec, b.spec);
+        for (k, t) in &a.factors {
+            assert_eq!(t.data, b.factors[k].data);
+            assert_eq!(t.shape, b.factors[k].shape);
+        }
+        for (k, t) in &a.frozen {
+            assert_eq!(t.data, b.frozen[k].data);
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -91,10 +91,39 @@ pub enum Window {
     Minor,
 }
 
+impl Window {
+    pub fn parse(s: &str) -> anyhow::Result<Window> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "principal" => Window::Principal,
+            "medium" => Window::Medium,
+            "minor" => Window::Minor,
+            other => anyhow::bail!("unknown window '{other}' (principal|medium|minor)"),
+        })
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            Window::Principal => "principal",
+            Window::Medium => "medium",
+            Window::Minor => "minor",
+        }
+    }
+}
+
 /// Factor a rank-r window of an SVD into (A, B) per Eq. 2–3:
 /// A = U·S^{1/2}, B = S^{1/2}·Vᵀ over columns [lo, lo+r).
-fn window_factors(dec: &Svd, lo: usize, r: usize) -> (Mat, Mat) {
-    let hi = (lo + r).min(dec.s.len());
+///
+/// A window starting at/after the end of the spectrum (e.g. a minor-window
+/// request against a rank-truncated decomposition of a small matrix) is a
+/// caller bug in debug builds; release builds clamp and return empty
+/// (m×0 / 0×n) factors instead of panicking on the slice.
+pub(crate) fn window_factors(dec: &Svd, lo: usize, r: usize) -> (Mat, Mat) {
+    let k = dec.s.len();
+    debug_assert!(
+        r == 0 || lo < k,
+        "window [{lo}, {lo}+{r}) starts beyond the {k}-long spectrum"
+    );
+    let lo = lo.min(k);
+    let hi = (lo + r).min(k);
     let sqrt_s: Vec<f32> = dec.s[lo..hi].iter().map(|&x| x.max(0.0).sqrt()).collect();
     let mut a = dec.u.cols_range(lo, hi);
     a.scale_cols(&sqrt_s);
@@ -147,16 +176,39 @@ pub fn qlora(w: &Mat, r: usize, rng: &mut Rng) -> AdapterInit {
     init
 }
 
+/// Rank-r factors of `target` via fast SVD with `niter` subspace
+/// iterations, or exact Jacobi SVD when `niter` is `None`.
+fn rank_factors(target: &Mat, r: usize, niter: Option<usize>, rng: &mut Rng) -> (Mat, Mat) {
+    let dec = match niter {
+        None => svd(target),
+        Some(t) => rsvd(target, r, t, rng),
+    };
+    window_factors(&dec, 0, r)
+}
+
 /// QPiSSA-T-iters (Algorithm 1). T = 1 is plain PiSSA + quantize(W_res).
 /// T ≥ 2 alternates: A,B ← SVDr(W − nf4(W_res)); W_res ← W − AB.
+/// Uses the legacy fast-SVD setting (niter = 4); see [`qpissa_with`].
 pub fn qpissa(w: &Mat, r: usize, iters: usize, rng: &mut Rng) -> AdapterInit {
+    qpissa_with(w, r, iters, Some(4), rng)
+}
+
+/// QPiSSA with an explicit SVD quality knob: `niter = Some(t)` uses the
+/// Halko fast SVD with t subspace iterations per alternation, `None`
+/// uses exact Jacobi SVD.
+pub fn qpissa_with(
+    w: &Mat,
+    r: usize,
+    iters: usize,
+    niter: Option<usize>,
+    rng: &mut Rng,
+) -> AdapterInit {
     assert!(iters >= 1);
-    let mut init = pissa(w, r, Some(4), rng);
+    let mut init = pissa(w, r, niter, rng);
     let mut w_res = init.base.clone();
     for _t in 1..iters {
         let target = w.sub(&nf4_roundtrip(&w_res));
-        let dec = rsvd(&target, r, 4, rng);
-        let (a, b) = window_factors(&dec, 0, r);
+        let (a, b) = rank_factors(&target, r, niter, rng);
         w_res = w.sub(&matmul(&a, &b));
         init.a = a;
         init.b = b;
@@ -167,7 +219,19 @@ pub fn qpissa(w: &Mat, r: usize, iters: usize, rng: &mut Rng) -> AdapterInit {
 
 /// LoftQ-T-iters (Eq. 11, 14–15): adapter holds the principal components
 /// of the *quantization error*; A, B start from SVD of W − nf4(Q).
+/// Uses the legacy fast-SVD setting (niter = 4); see [`loftq_with`].
 pub fn loftq(w: &Mat, r: usize, iters: usize, rng: &mut Rng) -> AdapterInit {
+    loftq_with(w, r, iters, Some(4), rng)
+}
+
+/// LoftQ with an explicit SVD quality knob (see [`qpissa_with`]).
+pub fn loftq_with(
+    w: &Mat,
+    r: usize,
+    iters: usize,
+    niter: Option<usize>,
+    rng: &mut Rng,
+) -> AdapterInit {
     assert!(iters >= 1);
     // t = 1: Q = nf4(W), err = W − Q, (A,B) = SVD_r(err).
     let mut q = nf4_roundtrip(w);
@@ -175,8 +239,7 @@ pub fn loftq(w: &Mat, r: usize, iters: usize, rng: &mut Rng) -> AdapterInit {
     let mut b = Mat::zeros(r, w.cols);
     for _t in 0..iters {
         let err = w.sub(&q);
-        let dec = rsvd(&err, r, 4, rng);
-        let (na, nb) = window_factors(&dec, 0, r);
+        let (na, nb) = rank_factors(&err, r, niter, rng);
         a = na;
         b = nb;
         // Re-quantize the residual after removing the adapter part.
@@ -187,6 +250,12 @@ pub fn loftq(w: &Mat, r: usize, iters: usize, rng: &mut Rng) -> AdapterInit {
 
 /// Dispatch by strategy (FullFt returns the identity decomposition:
 /// base = 0, A·B = unused; callers treat FullFt specially).
+///
+/// Legacy entry point: the declarative path is
+/// `AdapterSpec::init_matrix`, which is bit-identical to this dispatch
+/// for equivalent configs (asserted in `rust/tests/adapter_api.rs`) and
+/// additionally supports niter/window/alpha/targeting control.
+#[deprecated(note = "build an AdapterSpec and call init_matrix instead")]
 pub fn initialize(
     strategy: Strategy,
     w: &Mat,
@@ -335,6 +404,40 @@ mod tests {
             assert_eq!(Strategy::parse(s.name()).unwrap(), s);
         }
         assert!(Strategy::parse("bogus").is_err());
+    }
+
+    // Regression for the out-of-bounds window: a start index at/after the
+    // end of the spectrum used to panic on `dec.s[lo..hi]`. Debug builds
+    // now flag the misuse loudly; release builds clamp to empty factors.
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "starts beyond")]
+    fn window_factors_out_of_range_asserts_in_debug() {
+        let mut rng = Rng::new(88);
+        let w = Mat::randn(6, 5, 0.0, 1.0, &mut rng);
+        let dec = svd(&w); // spectrum length 5
+        let _ = window_factors(&dec, 10, 3);
+    }
+
+    #[cfg(not(debug_assertions))]
+    #[test]
+    fn window_factors_out_of_range_clamps_in_release() {
+        let mut rng = Rng::new(88);
+        let w = Mat::randn(6, 5, 0.0, 1.0, &mut rng);
+        let dec = svd(&w);
+        let (a, b) = window_factors(&dec, 10, 3);
+        assert_eq!((a.rows, a.cols), (6, 0));
+        assert_eq!((b.rows, b.cols), (0, 5));
+        // An empty window contributes nothing: A·B is all-zero.
+        assert_eq!(matmul(&a, &b).fro(), 0.0);
+    }
+
+    #[test]
+    fn window_parse_roundtrip() {
+        for w in [Window::Principal, Window::Medium, Window::Minor] {
+            assert_eq!(Window::parse(w.name()).unwrap(), w);
+        }
+        assert!(Window::parse("bogus").is_err());
     }
 
     #[test]

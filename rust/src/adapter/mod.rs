@@ -1,11 +1,21 @@
 //! The paper's contribution: adapter initialization (PiSSA Eq. 2–4, LoRA,
-//! QLoRA, QPiSSA Algorithm 1, LoftQ), the PiSSA→LoRA conversion of
-//! Appendix C, and adapter/optimizer checkpointing.
+//! QLoRA, QPiSSA Algorithm 1, LoftQ), the declarative [`AdapterSpec`]
+//! config surface, the multi-adapter [`AdapterEngine`] (hot-swap,
+//! merge/unmerge, Appendix-C export over one frozen base), the
+//! PiSSA→LoRA conversion of Appendix C, and adapter/optimizer
+//! checkpointing.
 
 pub mod convert;
+pub mod engine;
 pub mod init;
+pub mod spec;
 pub mod store;
 
 pub use convert::{apply_delta, pissa_to_lora, LoraDelta};
-pub use init::{initialize, lora, loftq, pissa, pissa_window, qlora, qpissa, AdapterInit, Strategy, Window};
+pub use engine::{AdapterEngine, NamedAdapter};
+pub use init::{
+    lora, loftq, loftq_with, pissa, pissa_window, qlora, qpissa, qpissa_with, AdapterInit,
+    Strategy, Window,
+};
+pub use spec::{AdapterSpec, TargetSpec};
 pub use store::Checkpoint;

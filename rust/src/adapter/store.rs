@@ -3,25 +3,62 @@
 //! little-endian container:
 //!
 //!   magic "PISSACKP" | version u32 | n_entries u32
-//!   per entry: name_len u32 | name bytes | rows u64 | cols u64 | f32 data
+//!   per entry: name_len u32 | name bytes | rows u64 | cols u64 | kind u32
+//!              | payload
+//!
+//! Entry kinds: 0 = f32 matrix (payload rows·cols·4 bytes), 1 = raw byte
+//! blob (payload `rows` bytes, cols = 0 sentinel), 2 = AdapterSpec string
+//! (payload `rows` bytes). Any future kind MUST store its payload byte
+//! length in `rows` so old loaders can skip it.
+//!
+//! Version history:
+//! * v1 — mats + blobs only.
+//! * v2 — adds the spec-metadata entry (`__spec__`, kind 2): a saved
+//!   adapter records the `AdapterSpec` that produced it. The loader
+//!   accepts v1 files (spec defaults to `None`) and skips entries with
+//!   unknown reserved names (`__*`) or unknown kinds instead of erroring.
 //!
 //! The same container stores NF4 tensors (as an entry pair
 //! `<name>.codes` (u8 payload, rows=len, cols=0 sentinel) and
 //! `<name>.scales`).
 
+use super::spec::AdapterSpec;
 use crate::linalg::Mat;
+use crate::model::params::Tensor;
 use std::collections::BTreeMap;
 use std::io::{Read, Write};
 use std::path::Path;
 
 const MAGIC: &[u8; 8] = b"PISSACKP";
-const VERSION: u32 = 1;
+const VERSION: u32 = 2;
 
-/// A named collection of matrices (and raw byte blobs).
+const KIND_MAT: u32 = 0;
+const KIND_BLOB: u32 = 1;
+const KIND_SPEC: u32 = 2;
+
+/// Reserved entry name carrying the serialized `AdapterSpec`.
+const SPEC_ENTRY: &str = "__spec__";
+
+/// A named collection of matrices (and raw byte blobs), optionally
+/// stamped with the `AdapterSpec` that produced the stored adapter.
 #[derive(Default, Debug)]
 pub struct Checkpoint {
     pub mats: BTreeMap<String, Mat>,
     pub blobs: BTreeMap<String, Vec<u8>>,
+    /// How the stored adapter was made (v2 files; `None` for v1).
+    pub spec: Option<AdapterSpec>,
+}
+
+/// Encode a tensor shape as the `.shape` sidecar blob.
+pub fn shape_blob(shape: &[usize]) -> Vec<u8> {
+    shape.iter().flat_map(|&d| (d as u64).to_le_bytes()).collect()
+}
+
+/// Decode a `.shape` sidecar blob.
+pub fn blob_shape(b: &[u8]) -> Vec<usize> {
+    b.chunks_exact(8)
+        .map(|c| u64::from_le_bytes(c.try_into().unwrap()) as usize)
+        .collect()
 }
 
 impl Checkpoint {
@@ -30,17 +67,41 @@ impl Checkpoint {
     }
 
     pub fn put(&mut self, name: &str, m: Mat) {
+        assert!(!name.starts_with("__"), "'__'-prefixed names are reserved (got '{name}')");
         self.mats.insert(name.to_string(), m);
     }
 
     pub fn put_blob(&mut self, name: &str, bytes: Vec<u8>) {
+        assert!(!name.starts_with("__"), "'__'-prefixed names are reserved (got '{name}')");
         self.blobs.insert(name.to_string(), bytes);
+    }
+
+    /// Store an N-D tensor as a flat column matrix plus a `.shape` blob.
+    pub fn put_tensor(&mut self, name: &str, t: &Tensor) {
+        self.put(name, Mat::from_vec(t.numel(), 1, t.data.clone()));
+        self.put_blob(&format!("{name}.shape"), shape_blob(&t.shape));
     }
 
     pub fn get(&self, name: &str) -> anyhow::Result<&Mat> {
         self.mats
             .get(name)
             .ok_or_else(|| anyhow::anyhow!("checkpoint missing tensor '{name}'"))
+    }
+
+    /// Recover a tensor stored with [`Checkpoint::put_tensor`].
+    pub fn get_tensor(&self, name: &str) -> anyhow::Result<Tensor> {
+        let m = self.get(name)?;
+        let shape_bytes = self
+            .blobs
+            .get(&format!("{name}.shape"))
+            .ok_or_else(|| anyhow::anyhow!("checkpoint missing '{name}.shape'"))?;
+        let shape = blob_shape(shape_bytes);
+        anyhow::ensure!(
+            shape.iter().product::<usize>() == m.data.len(),
+            "'{name}': shape {shape:?} does not match {} stored elements",
+            m.data.len()
+        );
+        Ok(Tensor { shape, data: m.data.clone() })
     }
 
     pub fn save(&self, path: &Path) -> anyhow::Result<()> {
@@ -50,17 +111,22 @@ impl Checkpoint {
         let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
         f.write_all(MAGIC)?;
         f.write_all(&VERSION.to_le_bytes())?;
-        let n = (self.mats.len() + self.blobs.len()) as u32;
+        let n = (self.mats.len() + self.blobs.len() + usize::from(self.spec.is_some())) as u32;
         f.write_all(&n.to_le_bytes())?;
         for (name, m) in &self.mats {
-            write_entry_header(&mut f, name, m.rows as u64, m.cols as u64, 0)?;
+            write_entry_header(&mut f, name, m.rows as u64, m.cols as u64, KIND_MAT)?;
             // f32 payload
             let bytes: Vec<u8> = m.data.iter().flat_map(|x| x.to_le_bytes()).collect();
             f.write_all(&bytes)?;
         }
         for (name, b) in &self.blobs {
-            write_entry_header(&mut f, name, b.len() as u64, 0, 1)?;
+            write_entry_header(&mut f, name, b.len() as u64, 0, KIND_BLOB)?;
             f.write_all(b)?;
+        }
+        if let Some(spec) = &self.spec {
+            let text = spec.to_string().into_bytes();
+            write_entry_header(&mut f, SPEC_ENTRY, text.len() as u64, 0, KIND_SPEC)?;
+            f.write_all(&text)?;
         }
         Ok(())
     }
@@ -71,7 +137,10 @@ impl Checkpoint {
         f.read_exact(&mut magic)?;
         anyhow::ensure!(&magic == MAGIC, "not a pissa checkpoint: {path:?}");
         let version = read_u32(&mut f)?;
-        anyhow::ensure!(version == VERSION, "unsupported checkpoint version {version}");
+        anyhow::ensure!(
+            (1..=VERSION).contains(&version),
+            "unsupported checkpoint version {version} (this build reads 1..={VERSION})"
+        );
         let n = read_u32(&mut f)?;
         let mut ckp = Checkpoint::new();
         for _ in 0..n {
@@ -82,22 +151,37 @@ impl Checkpoint {
             let rows = read_u64(&mut f)? as usize;
             let cols = read_u64(&mut f)? as usize;
             let kind = read_u32(&mut f)?;
+            // Payload size is derivable for every kind: f32 matrices use
+            // rows·cols·4 bytes, everything else stores its byte length
+            // in `rows` (a convention future kinds must keep).
+            let payload_len = if kind == KIND_MAT { rows * cols * 4 } else { rows };
+            let mut buf = vec![0u8; payload_len];
+            f.read_exact(&mut buf)?;
+            if name.starts_with("__") {
+                // Reserved namespace. The only entry this build knows is
+                // the spec; anything else is skipped (writers reject
+                // user-supplied '__' names, so nothing user-visible is
+                // lost on a round-trip).
+                if name == SPEC_ENTRY && kind == KIND_SPEC {
+                    let text = String::from_utf8(buf)?;
+                    ckp.spec = Some(AdapterSpec::parse(&text)?);
+                }
+                continue;
+            }
             match kind {
-                0 => {
-                    let mut buf = vec![0u8; rows * cols * 4];
-                    f.read_exact(&mut buf)?;
+                KIND_MAT => {
                     let data: Vec<f32> = buf
                         .chunks_exact(4)
                         .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
                         .collect();
                     ckp.mats.insert(name, Mat::from_vec(rows, cols, data));
                 }
-                1 => {
-                    let mut buf = vec![0u8; rows];
-                    f.read_exact(&mut buf)?;
+                KIND_BLOB => {
                     ckp.blobs.insert(name, buf);
                 }
-                k => anyhow::bail!("unknown entry kind {k}"),
+                // KIND_SPEC under a non-reserved name, or a future kind:
+                // skipped for forward compatibility.
+                _ => {}
             }
         }
         Ok(ckp)
@@ -150,6 +234,109 @@ mod tests {
         assert_eq!(back.mats.len(), 2);
         assert_eq!(back.get("layer0.a").unwrap().data, ckp.get("layer0.a").unwrap().data);
         assert_eq!(back.blobs["meta"], ckp.blobs["meta"]);
+        assert_eq!(back.spec, None);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn spec_metadata_roundtrips() {
+        let mut ckp = Checkpoint::new();
+        ckp.spec = Some(AdapterSpec::pissa(8).targets(&["q", "v"]).target_rank("q", 16));
+        ckp.put("a", Mat::zeros(2, 2));
+        let dir = std::env::temp_dir().join("pissa_test_ckp_spec");
+        let path = dir.join("spec.ckpt");
+        ckp.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.spec, ckp.spec);
+        assert_eq!(back.mats.len(), 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn tensor_helpers_roundtrip() {
+        let mut rng = Rng::new(101);
+        let t = Tensor::randn(&[2, 3, 4], 1.0, &mut rng);
+        let mut ckp = Checkpoint::new();
+        ckp.put_tensor("stack", &t);
+        let dir = std::env::temp_dir().join("pissa_test_ckp_tensor");
+        let path = dir.join("t.ckpt");
+        ckp.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap().get_tensor("stack").unwrap();
+        assert_eq!(back.shape, t.shape);
+        assert_eq!(back.data, t.data);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn v1_files_still_load() {
+        // Hand-craft a v1 container: one 1x2 mat, one blob, no spec entry.
+        let dir = std::env::temp_dir().join("pissa_test_ckp_v1");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("v1.ckpt");
+        let mut bytes: Vec<u8> = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&1u32.to_le_bytes()); // version 1
+        bytes.extend_from_slice(&2u32.to_le_bytes()); // 2 entries
+        // mat "m": rows=1 cols=2 kind=0, payload [1.5, -2.0]
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        bytes.extend_from_slice(b"m");
+        bytes.extend_from_slice(&1u64.to_le_bytes());
+        bytes.extend_from_slice(&2u64.to_le_bytes());
+        bytes.extend_from_slice(&0u32.to_le_bytes());
+        bytes.extend_from_slice(&1.5f32.to_le_bytes());
+        bytes.extend_from_slice(&(-2.0f32).to_le_bytes());
+        // blob "b": rows=3 cols=0 kind=1, payload "abc"
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        bytes.extend_from_slice(b"b");
+        bytes.extend_from_slice(&3u64.to_le_bytes());
+        bytes.extend_from_slice(&0u64.to_le_bytes());
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        bytes.extend_from_slice(b"abc");
+        std::fs::write(&path, &bytes).unwrap();
+
+        let ckp = Checkpoint::load(&path).unwrap();
+        assert_eq!(ckp.spec, None);
+        assert_eq!(ckp.get("m").unwrap().data, vec![1.5, -2.0]);
+        assert_eq!(ckp.blobs["b"], b"abc".to_vec());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn unknown_reserved_entries_and_kinds_are_skipped() {
+        let dir = std::env::temp_dir().join("pissa_test_ckp_skip");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("fwd.ckpt");
+        let mut bytes: Vec<u8> = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&2u32.to_le_bytes()); // version 2
+        bytes.extend_from_slice(&3u32.to_le_bytes()); // 3 entries
+        // entry 1: unknown reserved blob "__future__" (kind 1, 4 bytes)
+        bytes.extend_from_slice(&10u32.to_le_bytes());
+        bytes.extend_from_slice(b"__future__");
+        bytes.extend_from_slice(&4u64.to_le_bytes());
+        bytes.extend_from_slice(&0u64.to_le_bytes());
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        bytes.extend_from_slice(b"\x01\x02\x03\x04");
+        // entry 2: unknown kind 7 ("exotic", 5 payload bytes in rows)
+        bytes.extend_from_slice(&6u32.to_le_bytes());
+        bytes.extend_from_slice(b"exotic");
+        bytes.extend_from_slice(&5u64.to_le_bytes());
+        bytes.extend_from_slice(&0u64.to_le_bytes());
+        bytes.extend_from_slice(&7u32.to_le_bytes());
+        bytes.extend_from_slice(b"hello");
+        // entry 3: a normal mat that must survive
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        bytes.extend_from_slice(b"m");
+        bytes.extend_from_slice(&1u64.to_le_bytes());
+        bytes.extend_from_slice(&1u64.to_le_bytes());
+        bytes.extend_from_slice(&0u32.to_le_bytes());
+        bytes.extend_from_slice(&3.25f32.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+
+        let ckp = Checkpoint::load(&path).unwrap();
+        assert!(ckp.blobs.is_empty(), "reserved entry must be skipped");
+        assert_eq!(ckp.mats.len(), 1);
+        assert_eq!(ckp.get("m").unwrap().data, vec![3.25]);
         std::fs::remove_dir_all(&dir).ok();
     }
 
@@ -159,6 +346,20 @@ mod tests {
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join("bogus.ckpt");
         std::fs::write(&path, b"NOTAPISSACHECKPOINT").unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn future_version_rejected() {
+        let dir = std::env::temp_dir().join("pissa_test_ckp3");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("v99.ckpt");
+        let mut bytes: Vec<u8> = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&99u32.to_le_bytes());
+        bytes.extend_from_slice(&0u32.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
         assert!(Checkpoint::load(&path).is_err());
         std::fs::remove_dir_all(&dir).ok();
     }

@@ -5,11 +5,12 @@
 use super::sched::LrSchedule;
 use super::trainer::Trainer;
 use crate::adapter::init::Strategy;
+use crate::adapter::spec::AdapterSpec;
 use crate::data::batcher::Batcher;
 use crate::data::tokenizer::Example;
 use crate::data::{codegen, mathqa};
 use crate::metrics::StepMetrics;
-use crate::model::{apply_strategy, BaseModel, TrainState};
+use crate::model::{apply_spec, BaseModel, TrainState};
 use crate::runtime::{Manifest, Runtime};
 use crate::util::rng::Rng;
 use anyhow::Result;
@@ -65,14 +66,14 @@ pub fn level_for_seq(seq_len: usize) -> mathqa::MathLevel {
     }
 }
 
-/// Settings for one fine-tuning run.
+/// Settings for one fine-tuning run: the adapter spec plus the training
+/// budget/data knobs. Everything about HOW the adapter is initialized
+/// (strategy, rank, alpha, niter, iters, window, targets) lives in the
+/// [`AdapterSpec`].
 #[derive(Clone, Debug)]
 pub struct RunConfig {
     pub config: String,
-    pub strategy: Strategy,
-    pub rank: usize,
-    /// QPiSSA/LoftQ alternation count (paper's T; 5 in §5.3/5.4, 1 in §5.5).
-    pub iters: usize,
+    pub spec: AdapterSpec,
     pub steps: usize,
     pub peak_lr: f64,
     pub corpus_size: usize,
@@ -81,18 +82,41 @@ pub struct RunConfig {
 }
 
 impl RunConfig {
-    pub fn quick(config: &str, strategy: Strategy, rank: usize) -> RunConfig {
+    pub fn quick(config: &str, spec: AdapterSpec) -> RunConfig {
         RunConfig {
             config: config.to_string(),
-            strategy,
-            rank,
-            iters: 5,
+            spec,
             steps: 60,
             peak_lr: 2e-3,
             corpus_size: 512,
             seed: 42,
             task: TaskFamily::Math,
         }
+    }
+
+    /// Legacy shim: the old `(strategy, rank)` entry point (iters = 5),
+    /// producing bit-identical initializations for equivalent configs.
+    #[deprecated(note = "use RunConfig::quick with an AdapterSpec")]
+    pub fn quick_strategy(config: &str, strategy: Strategy, rank: usize) -> RunConfig {
+        RunConfig::quick(config, AdapterSpec::from_strategy(strategy, rank, 5))
+    }
+
+    pub fn strategy(&self) -> Strategy {
+        self.spec.strategy
+    }
+
+    pub fn rank(&self) -> usize {
+        self.spec.rank
+    }
+
+    /// Conventional train-artifact name for this run.
+    pub fn train_artifact(&self) -> String {
+        Manifest::train_name(&self.config, self.spec.rank, self.spec.is_full_ft())
+    }
+
+    /// Conventional logits-artifact name for this run.
+    pub fn logits_artifact(&self) -> String {
+        Manifest::logits_name(&self.config, self.spec.rank, self.spec.is_full_ft())
     }
 }
 
@@ -126,7 +150,7 @@ pub fn pretrain(
     let cfg = manifest.config(config)?.clone();
     let mut rng = Rng::new(seed);
     let base = BaseModel::random(&cfg, &mut rng);
-    let state = apply_strategy(&base, Strategy::FullFt, 0, 1, &mut rng)?;
+    let state = apply_spec(&base, &AdapterSpec::full_ft(), &mut rng)?;
     let art_name = Manifest::train_name(config, 0, true);
     let sched = LrSchedule::alpaca(peak_lr, steps);
     let mut trainer = Trainer::new(rt, manifest, &art_name, state, sched)?;
@@ -160,12 +184,12 @@ pub fn finetune(
 ) -> Result<RunResult> {
     let cfg = manifest.config(&run.config)?.clone();
     let mut rng = Rng::new(run.seed);
-    let state = apply_strategy(base, run.strategy, run.rank, run.iters, &mut rng)?;
+    let state = apply_spec(base, &run.spec, &mut rng)?;
     let trainable_params = crate::model::count_params(
         &state.trainable,
         &state.trainable.keys().cloned().collect::<Vec<_>>(),
     );
-    let art_name = Manifest::train_name(&run.config, run.rank, run.strategy == Strategy::FullFt);
+    let art_name = run.train_artifact();
     let sched = LrSchedule::alpaca(run.peak_lr, run.steps);
     let mut trainer = Trainer::new(rt, manifest, &art_name, state, sched)?;
 
@@ -193,7 +217,7 @@ pub fn evaluate(
     n_eval: usize,
     max_new: usize,
 ) -> Result<f64> {
-    let art_name = Manifest::logits_name(&run.config, run.rank, run.strategy == Strategy::FullFt);
+    let art_name = run.logits_artifact();
     let gen = crate::eval::Generator::new(rt, manifest, &art_name, state)?;
     let cfg = manifest.config(&run.config)?;
     let level = level_for_seq(cfg.seq_len);

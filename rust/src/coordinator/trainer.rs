@@ -45,6 +45,25 @@ impl<'rt> Trainer<'rt> {
             "artifact '{artifact_name}' is not a train step (kind={})",
             art.kind
         );
+        // AOT train artifacts are lowered for adapters on all seven linears
+        // at one uniform rank; reject partially-targeted specs up front
+        // with a pointer to the engine (which serves them natively) rather
+        // than a confusing missing-tensor error below.
+        anyhow::ensure!(
+            state.spec.covers_all(),
+            "artifact '{artifact_name}' expects adapters on all seven linears, but \
+             spec '{}' targets only [{}] — partial targeting is an AdapterEngine \
+             feature, not an artifact one",
+            state.spec,
+            state.spec.target_modules().join(",")
+        );
+        anyhow::ensure!(
+            state.spec.uniform_rank(),
+            "artifact '{artifact_name}' was lowered for uniform rank {}, but spec \
+             '{}' carries per-module rank overrides",
+            state.spec.rank,
+            state.spec
+        );
         validate_state(&art, &state)?;
         let exe = rt.load(artifact_name, &art.file)?;
         let frozen_lits = marshal(&state.frozen, &art.frozen_names)?;

@@ -4,8 +4,10 @@
 //! Singular Vectors Adaptation of Large Language Models"* (Meng, Wang,
 //! Zhang — NeurIPS 2024) as a three-layer rust + JAX + Pallas stack:
 //!
-//! * **L3 (this crate)** — the fine-tuning coordinator: adapter lifecycle
-//!   (PiSSA/LoRA/QPiSSA/LoftQ init, conversion, checkpoints), NF4
+//! * **L3 (this crate)** — the fine-tuning coordinator: the declarative
+//!   adapter API ([`adapter::AdapterSpec`] + [`adapter::AdapterEngine`]),
+//!   adapter initialization (PiSSA/LoRA/QLoRA/QPiSSA/LoftQ), the
+//!   Appendix-C PiSSA→LoRA conversion, `PISSACKP` checkpoints, NF4
 //!   quantization, dense linear algebra (GEMM/QR/SVD/randomized SVD), the
 //!   synthetic data pipeline, the PJRT runtime that executes AOT-compiled
 //!   train/eval steps, and the experiment harnesses that regenerate every
@@ -18,6 +20,45 @@
 //!
 //! Python never runs at training/serving time: the rust binary loads the
 //! HLO artifacts through the PJRT C API (`xla` crate) and owns the loop.
+//!
+//! ## Adapter API in one minute
+//!
+//! A single declarative config (mirroring peft's
+//! `LoraConfig(init_lora_weights="pissa_niter_4", target_modules=...)`)
+//! describes HOW an adapter is made; the engine owns one frozen base and
+//! a registry of named adapters built from such specs — hot-swap,
+//! merge/unmerge, and Appendix-C export are registry operations, each
+//! guarded by the paper's `base + A·B == W` exactness invariant:
+//!
+//! ```
+//! use pissa::adapter::{AdapterEngine, AdapterSpec};
+//! use pissa::model::BaseModel;
+//! use pissa::runtime::ConfigInfo;
+//! use pissa::util::rng::Rng;
+//!
+//! let cfg = ConfigInfo {
+//!     name: "demo".into(), kind: "decoder".into(), vocab: 64, d_model: 16,
+//!     n_layers: 1, n_heads: 2, d_ff: 32, seq_len: 16, batch: 2,
+//!     eval_batch: 2, n_classes: 0, ranks: vec![2],
+//! };
+//! let mut rng = Rng::new(0);
+//! let base = BaseModel::random(&cfg, &mut rng);
+//!
+//! let mut engine = AdapterEngine::new(base);
+//! engine.attach("math", AdapterSpec::pissa(2).niter(4).targets(&["q", "v"]), &mut rng).unwrap();
+//! engine.attach("chat", AdapterSpec::lora(2), &mut rng).unwrap();
+//! let w = engine.effective_weight("q", 0).unwrap(); // == original W to 1e-5
+//! assert_eq!((w.rows, w.cols), (16, 16));
+//! engine.swap("chat").unwrap();                     // O(1) hot-swap
+//! engine.merge("chat").unwrap();                    // deployment path (§3)
+//! engine.unmerge("chat").unwrap();                  // factors restored exactly
+//! ```
+//!
+//! For artifact-driven training, [`coordinator::RunConfig`] carries the
+//! same spec (`RunConfig::quick("tiny", AdapterSpec::pissa(4))`), and
+//! specs round-trip through a compact CLI string form
+//! (`pissa:rank=8:niter=4:targets=q@16,v`) as well as the v2 `PISSACKP`
+//! checkpoint container.
 
 pub mod adapter;
 pub mod coordinator;

@@ -10,12 +10,12 @@
 //!   info         print manifest/artifact inventory
 
 use anyhow::Result;
-use pissa::adapter::init::Strategy;
+use pissa::adapter::init::{Strategy, Window};
 use pissa::adapter::store::Checkpoint;
+use pissa::adapter::AdapterSpec;
 use pissa::coordinator::{self, RunConfig, TaskFamily};
 use pissa::linalg::matmul;
 use pissa::metrics::JsonlSink;
-use pissa::model::params::Tensor;
 use pissa::runtime::{Manifest, Runtime};
 use pissa::util::cli::Args;
 use pissa::util::rng::Rng;
@@ -51,14 +51,22 @@ USAGE: pissa <command> [--flags]
 
 COMMANDS
   pretrain     --config tiny --steps 200 --lr 2e-3 --out runs/base_tiny.ckpt
-  train        --config tiny --strategy pissa --rank 4 --steps 100
-               [--base runs/base_tiny.ckpt] [--out runs/run1] [--iters 5]
-  eval         --config tiny --strategy pissa --rank 4
+  train        --config tiny --spec pissa:rank=4:niter=4 --steps 100
+               [--base runs/base_tiny.ckpt] [--out runs/run1]
+  eval         --config tiny --spec pissa:rank=4
                [--task math|code|chat] [--n 64]
   quant-error  --config tiny [--base runs/base_tiny.ckpt] --ranks 2,4,8
   convert      --run runs/run1 --out runs/run1_lora.ckpt
   toy          [--rank 4] [--steps 60] (Figure 2a)
   info         list artifacts and configs
+
+ADAPTER SPECS (train/eval)
+  --spec STR   declarative adapter config, e.g.
+                 pissa:rank=8:niter=4:targets=q,v
+                 qpissa:rank=4:iters=5 | lora:rank=4:alpha=8 | full-ft
+  or the flag form: --strategy pissa --rank 4 [--iters 5] [--niter 4|exact]
+                    [--window principal|medium|minor] [--targets q,v]
+                    [--alpha 8]
 
 Global: --artifacts DIR (default ./artifacts), --seed N",
         pissa::version()
@@ -81,22 +89,11 @@ fn cmd_info(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn shape_blob(shape: &[usize]) -> Vec<u8> {
-    shape.iter().flat_map(|&d| (d as u64).to_le_bytes()).collect()
-}
-
-fn blob_shape(b: &[u8]) -> Vec<usize> {
-    b.chunks_exact(8)
-        .map(|c| u64::from_le_bytes(c.try_into().unwrap()) as usize)
-        .collect()
-}
-
 /// Save a base model to a checkpoint.
 fn save_base(base: &pissa::model::BaseModel, path: &Path) -> Result<()> {
     let mut ckp = Checkpoint::new();
     for (k, t) in base.scaffold.iter().chain(base.linears.iter()) {
-        ckp.put(k, pissa::linalg::Mat::from_vec(t.numel(), 1, t.data.clone()));
-        ckp.put_blob(&format!("{k}.shape"), shape_blob(&t.shape));
+        ckp.put_tensor(k, t);
     }
     ckp.put_blob("config", base.config.as_bytes().to_vec());
     ckp.put_blob("encoder", vec![base.encoder as u8]);
@@ -110,9 +107,8 @@ fn load_base(path: &Path) -> Result<pissa::model::BaseModel> {
     let encoder = ckp.blobs["encoder"][0] != 0;
     let mut scaffold = pissa::model::ParamStore::new();
     let mut linears = pissa::model::ParamStore::new();
-    for (k, m) in &ckp.mats {
-        let shape = blob_shape(&ckp.blobs[&format!("{k}.shape")]);
-        let t = Tensor { shape, data: m.data.clone() };
+    for k in ckp.mats.keys() {
+        let t = ckp.get_tensor(k)?;
         if k.starts_with("base_") {
             linears.insert(k.clone(), t);
         } else {
@@ -144,12 +140,40 @@ fn get_or_make_base(
     Ok(base)
 }
 
-fn run_config_from(args: &Args, config: &str, strategy: Strategy) -> Result<RunConfig> {
+/// Build an `AdapterSpec` from `--spec STR`, or from the individual
+/// `--strategy/--rank/--iters/--niter/--window/--targets/--alpha` flags.
+fn spec_from(args: &Args) -> Result<AdapterSpec> {
+    if let Some(s) = args.get("spec") {
+        return AdapterSpec::parse(s);
+    }
+    let strategy = Strategy::parse(&args.str_or("strategy", "pissa"))?;
+    let mut spec = AdapterSpec::new(strategy, args.usize_or("rank", 4));
+    spec.iters = args.usize_or("iters", 5);
+    if let Some(n) = args.get("niter") {
+        spec.niter = match n {
+            "exact" | "inf" => None,
+            n => Some(n.parse().map_err(|_| anyhow::anyhow!("--niter: bad value '{n}'"))?),
+        };
+    }
+    if let Some(w) = args.get("window") {
+        spec.window = Window::parse(w)?;
+    }
+    if args.has("targets") {
+        let mods = args.str_list_or("targets", &[]);
+        let refs: Vec<&str> = mods.iter().map(|s| s.as_str()).collect();
+        spec = spec.targets(&refs);
+    }
+    if let Some(a) = args.get("alpha") {
+        spec.alpha = a.parse().map_err(|_| anyhow::anyhow!("--alpha: bad value '{a}'"))?;
+    }
+    spec.validate()?;
+    Ok(spec)
+}
+
+fn run_config_from(args: &Args, config: &str) -> Result<RunConfig> {
     Ok(RunConfig {
         config: config.to_string(),
-        strategy,
-        rank: args.usize_or("rank", 4),
-        iters: args.usize_or("iters", 5),
+        spec: spec_from(args)?,
         steps: args.usize_or("steps", 100),
         peak_lr: args.f64_or("lr", 2e-3),
         corpus_size: args.usize_or("corpus", 1024),
@@ -183,14 +207,12 @@ fn cmd_train(args: &Args) -> Result<()> {
     let manifest = Manifest::load(&dir)?;
     let rt = Runtime::cpu(&dir)?;
     let config = args.str_or("config", "tiny");
-    let strategy = Strategy::parse(&args.str_or("strategy", "pissa"))?;
-    let run = run_config_from(args, &config, strategy)?;
+    let run = run_config_from(args, &config)?;
     let base = get_or_make_base(args, &rt, &manifest, &config)?;
     let result = coordinator::finetune(&rt, &manifest, &base, &run)?;
     println!(
-        "{} r={} params={}  loss {:.4} -> {:.4}  ({} steps, {:.2}s total, {:.1}% rust overhead)",
-        strategy.name(),
-        run.rank,
+        "{}  params={}  loss {:.4} -> {:.4}  ({} steps, {:.2}s total, {:.1}% rust overhead)",
+        run.spec,
         result.trainable_params,
         result.history.first().unwrap().loss,
         result.final_loss(8),
@@ -200,9 +222,11 @@ fn cmd_train(args: &Args) -> Result<()> {
     );
     if let Some(out) = args.get("out") {
         let mut ckp = Checkpoint::new();
+        // v2 container: the spec rides along, so the checkpoint records
+        // how the adapter was made.
+        ckp.spec = Some(run.spec.clone());
         for (k, t) in result.final_state.trainable.iter().chain(result.final_state.frozen.iter()) {
-            ckp.put(k, pissa::linalg::Mat::from_vec(t.numel(), 1, t.data.clone()));
-            ckp.put_blob(&format!("{k}.shape"), shape_blob(&t.shape));
+            ckp.put_tensor(k, t);
         }
         let mut log = JsonlSink::create(&PathBuf::from(format!("{out}.jsonl")))?;
         for m in &result.history {
@@ -219,8 +243,7 @@ fn cmd_eval(args: &Args) -> Result<()> {
     let manifest = Manifest::load(&dir)?;
     let rt = Runtime::cpu(&dir)?;
     let config = args.str_or("config", "tiny");
-    let strategy = Strategy::parse(&args.str_or("strategy", "pissa"))?;
-    let run = run_config_from(args, &config, strategy)?;
+    let run = run_config_from(args, &config)?;
     // Deterministic retrain (tiny models train in seconds) then score.
     let base = get_or_make_base(args, &rt, &manifest, &config)?;
     let result = coordinator::finetune(&rt, &manifest, &base, &run)?;
@@ -234,9 +257,8 @@ fn cmd_eval(args: &Args) -> Result<()> {
         args.usize_or("max-new", 48),
     )?;
     println!(
-        "{} r={} {}: accuracy {acc:.2}% over {n} problems",
-        strategy.name(),
-        run.rank,
+        "{} {}: accuracy {acc:.2}% over {n} problems",
+        run.spec,
         run.task.name()
     );
     Ok(())
@@ -281,28 +303,21 @@ fn cmd_convert(args: &Args) -> Result<()> {
     let run = args.get("run").ok_or_else(|| anyhow::anyhow!("--run required"))?;
     let ckp = Checkpoint::load(Path::new(&format!("{run}.ckpt")))
         .or_else(|_| Checkpoint::load(Path::new(run)))?;
-    println!("converting adapters in {run} to LoRA ΔA/ΔB (Appendix C)…");
+    match &ckp.spec {
+        Some(spec) => println!("converting adapters in {run} (spec: {spec}) to LoRA ΔA/ΔB (Appendix C)…"),
+        None => println!("converting adapters in {run} (v1 checkpoint, no spec) to LoRA ΔA/ΔB (Appendix C)…"),
+    }
     let mut out = Checkpoint::new();
+    out.spec = ckp.spec.clone();
     let mut n = 0;
     for key in ckp.mats.keys() {
         if let Some(name) = key.strip_prefix("a_") {
-            let a_flat = ckp.get(key)?;
-            let b_flat = ckp.get(&format!("b_{name}"))?;
-            let a_shape = blob_shape(&ckp.blobs[&format!("{key}.shape")]);
-            let b_shape = blob_shape(&ckp.blobs[&format!("b_{name}.shape")]);
-            let (l, m, r) = (a_shape[0], a_shape[1], a_shape[2]);
-            let ncols = b_shape[2];
+            let a_t = ckp.get_tensor(key)?;
+            let b_t = ckp.get_tensor(&format!("b_{name}"))?;
+            let l = a_t.shape[0];
             for li in 0..l {
-                let a = pissa::linalg::Mat::from_vec(
-                    m,
-                    r,
-                    a_flat.data[li * m * r..(li + 1) * m * r].to_vec(),
-                );
-                let b = pissa::linalg::Mat::from_vec(
-                    r,
-                    ncols,
-                    b_flat.data[li * r * ncols..(li + 1) * r * ncols].to_vec(),
-                );
+                let a = a_t.layer(li);
+                let b = b_t.layer(li);
                 // ΔA/ΔB relative to the stored trained factors vs themselves
                 // demonstrates the packing; the init-vs-trained protocol is
                 // exercised end-to-end in examples/adapter_convert.rs.

@@ -4,7 +4,8 @@
 //! `param_specs`, driven by the manifest's ConfigInfo.
 
 use super::params::{ParamStore, Tensor};
-use crate::adapter::init::{initialize, AdapterInit, Strategy};
+use crate::adapter::init::{AdapterInit, Strategy};
+use crate::adapter::spec::AdapterSpec;
 use crate::linalg::Mat;
 use crate::runtime::ConfigInfo;
 use crate::util::rng::Rng;
@@ -27,7 +28,7 @@ pub fn linear_dims(cfg: &ConfigInfo, name: &str) -> (usize, usize) {
 
 /// A "base model": the frozen scaffolding plus dense per-layer linears.
 /// Produced by random init then (optionally) pre-training via the full-FT
-/// artifact; consumed by `apply_strategy`.
+/// artifact; consumed by `apply_spec` (and the `AdapterEngine`).
 #[derive(Clone, Debug)]
 pub struct BaseModel {
     pub config: String,
@@ -76,8 +77,7 @@ impl BaseModel {
 /// Frozen + trainable + optimizer state, ready for a train artifact.
 #[derive(Clone, Debug)]
 pub struct TrainState {
-    pub strategy: Strategy,
-    pub rank: usize,
+    pub spec: AdapterSpec,
     pub frozen: ParamStore,
     pub trainable: ParamStore,
     pub m: ParamStore,
@@ -85,16 +85,34 @@ pub struct TrainState {
     pub step: usize,
 }
 
-/// Apply an init strategy to every linear layer of a base model,
-/// producing the stores in the exact name layout the manifest uses.
-/// `iters` is the QPiSSA/LoftQ alternation count (Algorithm 1's T).
-pub fn apply_strategy(
-    base: &BaseModel,
-    strategy: Strategy,
-    rank: usize,
-    iters: usize,
-    rng: &mut Rng,
-) -> Result<TrainState> {
+impl TrainState {
+    /// Assemble a fresh train state from its stores: zeroed Adam moments
+    /// matching the trainable shapes, step 0. The single construction
+    /// point shared by `apply_spec` and the `AdapterEngine` bridge.
+    pub fn new(spec: AdapterSpec, frozen: ParamStore, trainable: ParamStore) -> TrainState {
+        let m: ParamStore =
+            trainable.iter().map(|(k, t)| (k.clone(), Tensor::zeros(&t.shape))).collect();
+        let v = m.clone();
+        TrainState { spec, frozen, trainable, m, v, step: 0 }
+    }
+
+    pub fn strategy(&self) -> Strategy {
+        self.spec.strategy
+    }
+
+    pub fn rank(&self) -> usize {
+        self.spec.rank
+    }
+}
+
+/// Apply an [`AdapterSpec`] to every (targeted) linear layer of a base
+/// model, producing the stores in the exact name layout the manifest
+/// uses. Untargeted modules keep their dense weights frozen (no a/b
+/// factors) — note the AOT train artifacts are lowered for adapters on
+/// all seven linears, so partially-targeted states are for engine-side
+/// use (the `Trainer` rejects them with a clear error).
+pub fn apply_spec(base: &BaseModel, spec: &AdapterSpec, rng: &mut Rng) -> Result<TrainState> {
+    spec.validate()?;
     let mut frozen = base.scaffold.clone();
     let mut trainable = ParamStore::new();
     let l = base.n_layers();
@@ -105,7 +123,7 @@ pub fn apply_strategy(
         trainable.insert("cls_head".into(), Tensor::zeros(&cls.shape));
     }
 
-    if strategy == Strategy::FullFt {
+    if spec.is_full_ft() {
         if !base.encoder {
             // Decoder full-FT (and pre-training) also trains embed + head.
             trainable.insert("embed".into(), frozen.remove("embed").unwrap());
@@ -117,35 +135,54 @@ pub fn apply_strategy(
     } else {
         for name in LINEARS {
             let stacked = &base.linears[&format!("base_{name}")];
-            let (m_dim, n_dim) = (stacked.shape[1], stacked.shape[2]);
+            if !spec.targets_module(name) {
+                // Untargeted module: dense weights stay frozen as-is.
+                frozen.insert(format!("base_{name}"), stacked.clone());
+                continue;
+            }
+            let rank = spec.module_rank(name);
             let mut bases = Vec::with_capacity(l);
             let mut aas = Vec::with_capacity(l);
             let mut bbs = Vec::with_capacity(l);
             for li in 0..l {
                 let w = stacked.layer(li);
-                let AdapterInit { base: b0, a, b } = initialize(strategy, &w, rank, iters, rng);
+                let AdapterInit { base: b0, a, b } = spec.init_matrix(&w, rank, rng);
                 bases.push(b0);
                 aas.push(a);
                 bbs.push(b);
             }
             frozen.insert(format!("base_{name}"), Tensor::stack(&bases));
-            let _ = (m_dim, n_dim);
             trainable.insert(format!("a_{name}"), Tensor::stack(&aas));
             trainable.insert(format!("b_{name}"), Tensor::stack(&bbs));
         }
     }
 
-    let m: ParamStore = trainable.iter().map(|(k, t)| (k.clone(), Tensor::zeros(&t.shape))).collect();
-    let v = m.clone();
-    Ok(TrainState { strategy, rank, frozen, trainable, m, v, step: 0 })
+    Ok(TrainState::new(spec.clone(), frozen, trainable))
+}
+
+/// Legacy shim over [`apply_spec`]: bit-identical initializations for
+/// equivalent configs (`AdapterSpec::from_strategy` reproduces the old
+/// hardcoded niter/window defaults).
+#[deprecated(note = "build an AdapterSpec and call apply_spec instead")]
+pub fn apply_strategy(
+    base: &BaseModel,
+    strategy: Strategy,
+    rank: usize,
+    iters: usize,
+    rng: &mut Rng,
+) -> Result<TrainState> {
+    apply_spec(base, &AdapterSpec::from_strategy(strategy, rank, iters), rng)
 }
 
 /// Effective dense weight of one linear layer under a train state
-/// (base + A·B, or the trainable dense weight for full-FT). Used by
-/// diagnostics and the quantization-error reports.
+/// (base + A·B for targeted modules, the frozen/trainable dense weight
+/// otherwise). Used by diagnostics and the quantization-error reports.
 pub fn effective_weight(state: &TrainState, name: &str, layer: usize) -> Mat {
-    if state.strategy == Strategy::FullFt {
+    if state.spec.is_full_ft() {
         return state.trainable[&format!("base_{name}")].layer(layer);
+    }
+    if !state.spec.targets_module(name) {
+        return state.frozen[&format!("base_{name}")].layer(layer);
     }
     let base = state.frozen[&format!("base_{name}")].layer(layer);
     let a = state.trainable[&format!("a_{name}")].layer(layer);
@@ -191,7 +228,7 @@ mod tests {
         let cfg = tiny_cfg();
         let mut rng = Rng::new(2);
         let base = BaseModel::random(&cfg, &mut rng);
-        let state = apply_strategy(&base, Strategy::Pissa, 4, 1, &mut rng).unwrap();
+        let state = apply_spec(&base, &AdapterSpec::pissa(4), &mut rng).unwrap();
         for name in LINEARS {
             for l in 0..2 {
                 let orig = base.linears[&format!("base_{name}")].layer(l);
@@ -207,7 +244,7 @@ mod tests {
         let cfg = tiny_cfg();
         let mut rng = Rng::new(3);
         let base = BaseModel::random(&cfg, &mut rng);
-        let state = apply_strategy(&base, Strategy::Lora, 4, 1, &mut rng).unwrap();
+        let state = apply_spec(&base, &AdapterSpec::lora(4), &mut rng).unwrap();
         let orig = base.linears["base_q"].layer(0);
         let eff = effective_weight(&state, "q", 0);
         assert_eq!(eff.sub(&orig).fro(), 0.0); // B = 0 ⇒ exact
@@ -218,7 +255,7 @@ mod tests {
         let cfg = tiny_cfg();
         let mut rng = Rng::new(4);
         let base = BaseModel::random(&cfg, &mut rng);
-        let state = apply_strategy(&base, Strategy::FullFt, 0, 1, &mut rng).unwrap();
+        let state = apply_spec(&base, &AdapterSpec::full_ft(), &mut rng).unwrap();
         assert!(state.trainable.contains_key("base_q"));
         assert!(!state.trainable.contains_key("a_q"));
         assert!(!state.frozen.contains_key("base_q"));
@@ -229,7 +266,7 @@ mod tests {
         let cfg = tiny_cfg();
         let mut rng = Rng::new(5);
         let base = BaseModel::random(&cfg, &mut rng);
-        let state = apply_strategy(&base, Strategy::QPissa, 4, 1, &mut rng).unwrap();
+        let state = apply_spec(&base, &AdapterSpec::qpissa(4).iters(1), &mut rng).unwrap();
         // The frozen base must be an NF4 fixed point: re-quantizing changes nothing.
         let b0 = state.frozen["base_q"].layer(0);
         let rt = crate::quant::nf4_roundtrip(&b0);
@@ -242,11 +279,31 @@ mod tests {
         let mut rng = Rng::new(6);
         let base = BaseModel::random(&cfg, &mut rng);
         let r = 4;
-        let state = apply_strategy(&base, Strategy::Pissa, r, 1, &mut rng).unwrap();
+        let state = apply_spec(&base, &AdapterSpec::pissa(r), &mut rng).unwrap();
         let names: Vec<String> = state.trainable.keys().cloned().collect();
         let total = super::super::params::count_params(&state.trainable, &names);
         let (d, f, l) = (64, 128, 2);
         let expect = l * (4 * (d + d) * r + 2 * (d + f) * r + (f + d) * r);
         assert_eq!(total, expect);
+    }
+
+    #[test]
+    fn partial_targeting_keeps_untargeted_modules_dense() {
+        let cfg = tiny_cfg();
+        let mut rng = Rng::new(7);
+        let base = BaseModel::random(&cfg, &mut rng);
+        let spec = AdapterSpec::pissa(4).targets(&["q", "v"]).target_rank("q", 2);
+        let state = apply_spec(&base, &spec, &mut rng).unwrap();
+        // targeted: factors exist, with the per-module rank override
+        assert_eq!(state.trainable["a_q"].shape, vec![2, 64, 2]);
+        assert_eq!(state.trainable["a_v"].shape, vec![2, 64, 4]);
+        // untargeted: no factors, dense weights frozen and untouched
+        assert!(!state.trainable.contains_key("a_gate"));
+        assert_eq!(state.frozen["base_gate"].data, base.linears["base_gate"].data);
+        let eff = effective_weight(&state, "gate", 0);
+        assert_eq!(eff.data, base.linears["base_gate"].layer(0).data);
+        // targeted modules still preserve W
+        let orig = base.linears["base_q"].layer(0);
+        assert!(effective_weight(&state, "q", 0).sub(&orig).fro() / orig.fro() < 1e-5);
     }
 }

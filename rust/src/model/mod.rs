@@ -1,9 +1,11 @@
 //! Rust-side model assembly: the generic tensor/parameter store and the
-//! strategy application that mirrors python/compile/model.py's parameter
-//! layout (manifest-order marshalling).
+//! spec-driven adapter application that mirrors python/compile/model.py's
+//! parameter layout (manifest-order marshalling).
 
 pub mod build;
 pub mod params;
 
-pub use build::{apply_strategy, effective_weight, BaseModel, TrainState, LINEARS};
+pub use build::{apply_spec, effective_weight, BaseModel, TrainState, LINEARS};
+#[allow(deprecated)]
+pub use build::apply_strategy;
 pub use params::{count_params, to_literals, ParamStore, Tensor};

@@ -1,0 +1,319 @@
+//! API-migration and round-trip tests for the declarative adapter stack:
+//!
+//! * the legacy `initialize`/`apply_strategy` path and the new
+//!   `AdapterSpec` path produce BIT-IDENTICAL initializations for
+//!   equivalent configs (the refactor's no-regression guarantee),
+//! * `base + A·B == W` holds (to 1e-5, or the quantized bound) for every
+//!   strategy/spec combination,
+//! * engine `merge` → `unmerge` restores the original factors,
+//! * a `Checkpoint` save/load round-trips an `AdapterSpec` + NF4 blob
+//!   pair losslessly.
+
+#![allow(deprecated)] // the migration tests exercise the legacy shims on purpose
+
+use pissa::adapter::init::{self, Strategy, Window};
+use pissa::adapter::{AdapterEngine, AdapterSpec, Checkpoint};
+use pissa::linalg::{matmul, Mat};
+use pissa::model::{apply_spec, apply_strategy, BaseModel};
+use pissa::quant::{dequantize, nf4_roundtrip, quantize, Nf4Tensor};
+use pissa::runtime::ConfigInfo;
+use pissa::util::rng::Rng;
+
+/// A matrix with a decaying (pre-trained-like) spectrum.
+fn spectral_mat(m: usize, n: usize, decay: f32, rng: &mut Rng) -> Mat {
+    let k = m.min(n);
+    let u = pissa::linalg::qr::orthonormalize(&Mat::randn(m, k, 0.0, 1.0, rng));
+    let v = pissa::linalg::qr::orthonormalize(&Mat::randn(n, k, 0.0, 1.0, rng));
+    let s: Vec<f32> = (0..k).map(|i| (1.0 + i as f32).powf(-decay)).collect();
+    let mut us = u;
+    us.scale_cols(&s);
+    matmul(&us, &v.t())
+}
+
+fn tiny_cfg() -> ConfigInfo {
+    ConfigInfo {
+        name: "api-test".into(),
+        kind: "decoder".into(),
+        vocab: 128,
+        d_model: 32,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff: 64,
+        seq_len: 32,
+        batch: 4,
+        eval_batch: 2,
+        n_classes: 0,
+        ranks: vec![2, 4],
+    }
+}
+
+const ALL_STRATEGIES: [Strategy; 6] = [
+    Strategy::FullFt,
+    Strategy::Lora,
+    Strategy::Pissa,
+    Strategy::QLora,
+    Strategy::QPissa,
+    Strategy::LoftQ,
+];
+
+// ---------------------------------------------------------------------------
+// Migration: old path == new path, bit for bit
+// ---------------------------------------------------------------------------
+
+#[test]
+fn spec_init_bit_identical_to_legacy_initialize() {
+    // Same seed -> same rng stream -> identical matrices, for every
+    // strategy at several (rank, iters) points.
+    for (si, &strategy) in ALL_STRATEGIES.iter().enumerate() {
+        for (ri, &(rank, iters)) in [(2usize, 1usize), (4, 3), (6, 5)].iter().enumerate() {
+            let seed = 1000 + (si * 10 + ri) as u64;
+            let mut wgen = Rng::new(seed);
+            let w = spectral_mat(24, 20, 0.7, &mut wgen);
+
+            let mut rng_old = Rng::new(seed ^ 0xA5A5);
+            let old = init::initialize(strategy, &w, rank, iters, &mut rng_old);
+
+            let spec = AdapterSpec::from_strategy(strategy, rank, iters);
+            let mut rng_new = Rng::new(seed ^ 0xA5A5);
+            let new = spec.init_matrix(&w, rank, &mut rng_new);
+
+            assert_eq!(old.base.data, new.base.data, "{strategy:?} r={rank} T={iters}: base");
+            assert_eq!(old.a.data, new.a.data, "{strategy:?} r={rank} T={iters}: A");
+            assert_eq!(old.b.data, new.b.data, "{strategy:?} r={rank} T={iters}: B");
+        }
+    }
+}
+
+#[test]
+fn apply_spec_bit_identical_to_legacy_apply_strategy() {
+    // Whole-model check: identical rng stream order across all seven
+    // linears and layers.
+    let cfg = tiny_cfg();
+    for &(strategy, rank, iters) in &[
+        (Strategy::Pissa, 4usize, 1usize),
+        (Strategy::Lora, 2, 1),
+        (Strategy::QPissa, 2, 2),
+        (Strategy::FullFt, 0, 1),
+    ] {
+        let mut rng_base = Rng::new(7);
+        let base = BaseModel::random(&cfg, &mut rng_base);
+
+        let mut rng_old = Rng::new(99);
+        let old = apply_strategy(&base, strategy, rank, iters, &mut rng_old).unwrap();
+        let mut rng_new = Rng::new(99);
+        let new =
+            apply_spec(&base, &AdapterSpec::from_strategy(strategy, rank, iters), &mut rng_new)
+                .unwrap();
+
+        assert_eq!(
+            old.trainable.keys().collect::<Vec<_>>(),
+            new.trainable.keys().collect::<Vec<_>>()
+        );
+        for (k, t) in &old.trainable {
+            assert_eq!(t.data, new.trainable[k].data, "{strategy:?}: trainable {k}");
+        }
+        for (k, t) in &old.frozen {
+            assert_eq!(t.data, new.frozen[k].data, "{strategy:?}: frozen {k}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// (a) base + A·B == W for every strategy/spec combination
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_exactness_holds_for_every_spec_combination() {
+    let variants: Vec<Box<dyn Fn(AdapterSpec) -> AdapterSpec>> = vec![
+        Box::new(|s| s),
+        Box::new(|s| s.iters(1)),
+        Box::new(|s| s.alpha(32.0)),
+        Box::new(|s| s.targets(&["q", "v", "down"])),
+        Box::new(|s| s.target_rank("q", 6)),
+    ];
+    for seed in 0..4u64 {
+        let mut rng = Rng::new(2000 + seed);
+        let w = spectral_mat(32, 28, 0.6, &mut rng);
+        let quant_bound = w.sub(&nf4_roundtrip(&w)).fro() * 1.05 + 1e-9;
+        for &strategy in &ALL_STRATEGIES {
+            if strategy == Strategy::FullFt {
+                continue; // no factor decomposition to check
+            }
+            for make in &variants {
+                let spec = make(AdapterSpec::new(strategy, 4));
+                let rank = spec.module_rank("q");
+                let init = spec.init_matrix(&w, rank, &mut rng);
+                let err = init.effective().sub(&w).fro();
+                if spec.quantized() {
+                    // Structural invariant: the frozen base is an NF4
+                    // fixed point…
+                    let refix = init.base.sub(&nf4_roundtrip(&init.base)).fro();
+                    assert!(refix < 1e-5 * (1.0 + init.base.fro()), "seed={seed} {spec}: base not NF4-fixed");
+                    // …and at standard scaling the paper's claim holds:
+                    // error bounded by the plain QLoRA round-trip.
+                    if spec.scaling() == 1.0 {
+                        assert!(
+                            err <= quant_bound,
+                            "seed={seed} {spec}: err {err:.3e} > quantized bound {quant_bound:.3e}"
+                        );
+                    }
+                } else {
+                    let rel = err / w.fro();
+                    assert!(rel < 1e-5, "seed={seed} {spec}: rel err {rel:.3e}");
+                }
+            }
+        }
+        // Window ablation variants (exact SVD) preserve W too.
+        for window in [Window::Principal, Window::Medium, Window::Minor] {
+            let spec = AdapterSpec::pissa(4).exact_svd().window(window);
+            let init = spec.init_matrix(&w, 4, &mut rng);
+            let rel = init.effective().sub(&w).fro() / w.fro();
+            assert!(rel < 1e-5, "seed={seed} window={window:?}: rel err {rel:.3e}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// (b) merge → unmerge restores the original factors
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_merge_unmerge_restores_factors() {
+    let cfg = tiny_cfg();
+    for (seed, spec) in [
+        (0u64, AdapterSpec::pissa(4)),
+        (1, AdapterSpec::lora(2).alpha(8.0)),
+        (2, AdapterSpec::pissa(3).targets(&["q", "v"]).target_rank("q", 5)),
+        (3, AdapterSpec::qpissa(2).iters(2)),
+    ] {
+        let mut rng = Rng::new(3000 + seed);
+        let base = BaseModel::random(&cfg, &mut rng);
+        let mut engine = AdapterEngine::new(base);
+        engine.attach("ad", spec.clone(), &mut rng).unwrap();
+
+        // drift the factors a little (merge must work on trained adapters)
+        let modules: Vec<String> =
+            engine.get("ad").unwrap().spec.target_modules().iter().map(|s| s.to_string()).collect();
+        for module in &modules {
+            let (mut a, mut b) = {
+                let ad = engine.get("ad").unwrap();
+                (ad.factors[&format!("a_{module}")].layer(0), ad.factors[&format!("b_{module}")].layer(0))
+            };
+            for x in a.data.iter_mut() {
+                *x += 0.02 * rng.normal_f32(0.0, 1.0);
+            }
+            for x in b.data.iter_mut() {
+                *x += 0.02 * rng.normal_f32(0.0, 1.0);
+            }
+            engine.set_factors("ad", module, 0, &a, &b).unwrap();
+        }
+
+        let factors_before = engine.get("ad").unwrap().factors.clone();
+        let frozen_before = engine.get("ad").unwrap().frozen.clone();
+        let eff_before = engine.effective_weight_of("ad", modules[0].as_str(), 0).unwrap();
+
+        engine.merge("ad").unwrap();
+        let eff_merged = engine.effective_weight_of("ad", modules[0].as_str(), 0).unwrap();
+        assert_eq!(eff_merged.data, eff_before.data, "{spec}: merged == base + A·B");
+        engine.unmerge("ad").unwrap();
+
+        let ad = engine.get("ad").unwrap();
+        for (k, t) in &factors_before {
+            assert_eq!(t.data, ad.factors[k].data, "{spec}: factor {k} not restored");
+        }
+        for (k, t) in &frozen_before {
+            assert_eq!(t.data, ad.frozen[k].data, "{spec}: frozen {k} changed");
+        }
+        let eff_after = engine.effective_weight_of("ad", modules[0].as_str(), 0).unwrap();
+        assert_eq!(eff_after.data, eff_before.data);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// (c) Checkpoint round-trips an AdapterSpec + NF4 blob pair losslessly
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_checkpoint_spec_and_nf4_pair_roundtrip() {
+    for seed in 0..4u64 {
+        let mut rng = Rng::new(4000 + seed);
+        let w = Mat::randn(16 + seed as usize * 8, 24, 0.0, 0.5, &mut rng);
+        let q = quantize(&w);
+
+        // the spec + the <name>.codes / <name>.scales entry pair
+        let spec = AdapterSpec::qpissa(4).iters(3).targets(&["q", "up"]).target_rank("up", 2);
+        let mut ckp = Checkpoint::new();
+        ckp.spec = Some(spec.clone());
+        ckp.put_blob("base_q.codes", q.codes.clone());
+        let scale_bytes: Vec<u8> = q.scales.iter().flat_map(|s| s.to_le_bytes()).collect();
+        ckp.put_blob("base_q.scales", scale_bytes);
+        ckp.put_blob(
+            "base_q.dims",
+            [q.rows as u64, q.cols as u64].iter().flat_map(|d| d.to_le_bytes()).collect(),
+        );
+
+        let dir = std::env::temp_dir().join(format!("pissa_api_nf4_{seed}"));
+        let path = dir.join("nf4.ckpt");
+        ckp.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+
+        // spec survives, byte for byte of meaning
+        assert_eq!(back.spec, Some(spec));
+        // codes + scales are lossless
+        assert_eq!(back.blobs["base_q.codes"], q.codes);
+        let scales_back: Vec<f32> = back.blobs["base_q.scales"]
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        assert_eq!(scales_back, q.scales);
+        let dims: Vec<u64> = back.blobs["base_q.dims"]
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+
+        // reassemble and dequantize: identical to the original round trip
+        let q2 = Nf4Tensor {
+            rows: dims[0] as usize,
+            cols: dims[1] as usize,
+            codes: back.blobs["base_q.codes"].clone(),
+            scales: scales_back,
+        };
+        assert_eq!(dequantize(&q2).data, dequantize(&q).data);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// End-to-end: registry semantics over one frozen base
+// ---------------------------------------------------------------------------
+
+#[test]
+fn engine_serves_multiple_adapters_over_one_base() {
+    let cfg = tiny_cfg();
+    let mut rng = Rng::new(5000);
+    let base = BaseModel::random(&cfg, &mut rng);
+    let w_q = base.linears["base_q"].layer(0);
+    let mut engine = AdapterEngine::new(base);
+
+    engine.attach("pissa-qv", AdapterSpec::pissa(8).targets(&["q", "v"]), &mut rng).unwrap();
+    engine.attach("lora-all", AdapterSpec::lora(4), &mut rng).unwrap();
+
+    // both preserve W at init; hot-swap flips which one serves
+    for name in ["pissa-qv", "lora-all"] {
+        engine.swap(name).unwrap();
+        let eff = engine.effective_weight("q", 0).unwrap();
+        assert!(eff.sub(&w_q).fro() / w_q.fro() < 1e-5, "{name} must preserve W");
+    }
+    // the two adapters hold DIFFERENT factorizations of the same W
+    let a_p = engine.get("pissa-qv").unwrap().factors["a_q"].clone();
+    let a_l = engine.get("lora-all").unwrap().factors["a_q"].clone();
+    assert_ne!(a_p.shape, a_l.shape); // r=8 vs r=4
+    // PiSSA's adapter carries principal mass; LoRA's B is zero
+    assert!(engine.get("lora-all").unwrap().factors["b_q"].fro() == 0.0);
+    assert!(engine.get("pissa-qv").unwrap().factors["b_q"].fro() > 0.0);
+
+    // export the PiSSA adapter as an Appendix-C delta (validated inside)
+    let deltas = engine.to_lora_delta("pissa-qv").unwrap();
+    let keys: Vec<&str> = deltas.keys().map(|s| s.as_str()).collect();
+    assert_eq!(keys, vec!["q", "v"]);
+}

@@ -5,10 +5,10 @@
 //! These tests need `make artifacts` to have run; they skip (not fail)
 //! when artifacts are absent so `cargo test` stays green pre-AOT.
 
-use pissa::adapter::init::Strategy;
+use pissa::adapter::AdapterSpec;
 use pissa::coordinator::{self, LrSchedule, RunConfig, Trainer};
 use pissa::data::batcher::Batcher;
-use pissa::model::{apply_strategy, BaseModel};
+use pissa::model::{apply_spec, BaseModel};
 use pissa::runtime::{Manifest, Runtime};
 use pissa::util::json::Json;
 use pissa::util::rng::Rng;
@@ -44,9 +44,14 @@ fn train_step_decreases_loss_for_all_strategies() {
     let mut rng = Rng::new(1);
     let base = BaseModel::random(&cfg, &mut rng);
 
-    for strategy in [Strategy::Pissa, Strategy::Lora, Strategy::QPissa, Strategy::FullFt] {
-        let state = apply_strategy(&base, strategy, 4, 1, &mut rng).unwrap();
-        let art = Manifest::train_name("tiny", 4, strategy == Strategy::FullFt);
+    for spec in [
+        AdapterSpec::pissa(4),
+        AdapterSpec::lora(4),
+        AdapterSpec::qpissa(4).iters(1),
+        AdapterSpec::full_ft(),
+    ] {
+        let state = apply_spec(&base, &spec, &mut rng).unwrap();
+        let art = Manifest::train_name("tiny", 4, spec.is_full_ft());
         let sched = LrSchedule::alpaca(3e-3, 30);
         let mut trainer = Trainer::new(rt, &manifest, &art, state, sched).unwrap();
         let corpus = pissa::data::corpus::gen_corpus(256, 2);
@@ -55,7 +60,7 @@ fn train_step_decreases_loss_for_all_strategies() {
         let mut last = f32::NAN;
         for i in 0..30 {
             let m = trainer.step(&batcher.next_batch()).unwrap();
-            assert!(m.loss.is_finite(), "{strategy:?} loss not finite at step {i}");
+            assert!(m.loss.is_finite(), "{spec} loss not finite at step {i}");
             if i == 0 {
                 first = m.loss;
             }
@@ -63,7 +68,7 @@ fn train_step_decreases_loss_for_all_strategies() {
         }
         assert!(
             last < first,
-            "{strategy:?}: loss did not decrease ({first} -> {last})"
+            "{spec}: loss did not decrease ({first} -> {last})"
         );
     }
 }
@@ -82,8 +87,8 @@ fn pissa_and_lora_start_from_identical_loss() {
     let mut rng = Rng::new(5);
     let base = BaseModel::random(&cfg, &mut rng);
     let mut first_losses = Vec::new();
-    for strategy in [Strategy::Pissa, Strategy::Lora] {
-        let state = apply_strategy(&base, strategy, 4, 1, &mut rng).unwrap();
+    for spec in [AdapterSpec::pissa(4), AdapterSpec::lora(4)] {
+        let state = apply_spec(&base, &spec, &mut rng).unwrap();
         let mut trainer = Trainer::new(
             rt,
             &manifest,
@@ -111,7 +116,7 @@ fn generator_emits_text_and_eval_runs() {
     let run = RunConfig {
         steps: 25,
         corpus_size: 256,
-        ..RunConfig::quick("tiny", Strategy::Pissa, 4)
+        ..RunConfig::quick("tiny", AdapterSpec::pissa(4))
     };
     let (base, _) = coordinator::pretrain(rt, &manifest, "tiny", 40, 2e-3, 11).unwrap();
     let result = coordinator::finetune(rt, &manifest, &base, &run).unwrap();
@@ -140,7 +145,7 @@ fn encoder_training_works() {
     let cfg = manifest.config("enc_tiny").unwrap().clone();
     let mut rng = Rng::new(21);
     let base = BaseModel::random(&cfg, &mut rng);
-    let state = apply_strategy(&base, Strategy::Pissa, 4, 1, &mut rng).unwrap();
+    let state = apply_spec(&base, &AdapterSpec::pissa(4), &mut rng).unwrap();
     let art = Manifest::enc_train_name("enc_tiny", 4, false, false);
     let mut trainer =
         Trainer::new(rt, &manifest, &art, state, LrSchedule::alpaca(5e-3, 40)).unwrap();
@@ -271,7 +276,7 @@ fn checkpoint_resume_reproduces_training() {
     };
 
     let mut rng2 = Rng::new(34);
-    let s0 = apply_strategy(&base, Strategy::Pissa, 4, 1, &mut rng2).unwrap();
+    let s0 = apply_spec(&base, &AdapterSpec::pissa(4), &mut rng2).unwrap();
     let full = run_steps(s0.clone(), 0, 20);
 
     // Run B: 10 steps, save/load through the checkpoint container, 10 more.
@@ -326,7 +331,7 @@ fn pallas_logits_artifact_matches_jnp_artifact() {
     let cfg = manifest.config("tiny").unwrap().clone();
     let mut rng = Rng::new(41);
     let base = BaseModel::random(&cfg, &mut rng);
-    let state = apply_strategy(&base, Strategy::Pissa, 4, 1, &mut rng).unwrap();
+    let state = apply_spec(&base, &AdapterSpec::pissa(4), &mut rng).unwrap();
 
     let gen_jnp =
         pissa::eval::Generator::new(rt, &manifest, "logits_tiny_r4", &state).unwrap();

@@ -5,6 +5,7 @@
 
 use pissa::adapter::convert::pissa_to_lora;
 use pissa::adapter::init::{self, Strategy};
+use pissa::adapter::AdapterSpec;
 use pissa::linalg::{matmul, matmul_nt, matmul_tn, nuclear_norm, rsvd, svd, Mat};
 use pissa::quant::{nf4_roundtrip, qlora_error};
 use pissa::util::rng::Rng;
@@ -159,12 +160,12 @@ fn prop_strategy_inits_all_preserve_model_or_quantize_base() {
         let mut rng = Rng::new(700 + seed);
         let w = spectral_mat(24, 24, 0.8, &mut rng);
         for strategy in [Strategy::Lora, Strategy::Pissa] {
-            let i = init::initialize(strategy, &w, 4, 1, &mut rng);
+            let i = AdapterSpec::from_strategy(strategy, 4, 1).init_matrix(&w, 4, &mut rng);
             let err = i.effective().sub(&w).fro() / w.fro();
             assert!(err < 1e-4, "seed={seed} {strategy:?} err={err}");
         }
         for strategy in [Strategy::QLora, Strategy::QPissa, Strategy::LoftQ] {
-            let i = init::initialize(strategy, &w, 4, 2, &mut rng);
+            let i = AdapterSpec::from_strategy(strategy, 4, 2).init_matrix(&w, 4, &mut rng);
             // quantized strategies can't preserve exactly, but must beat
             // (or match) plain QLoRA's error
             let err = i.effective().sub(&w).fro();
