@@ -2,6 +2,10 @@
 //! offline vendor set; every bench is a `harness = false` binary that
 //! regenerates one of the paper's tables/figures and prints the rows).
 
+// Each bench binary compiles its own copy of this module and uses a
+// different subset of the helpers; unused ones are not dead code.
+#![allow(dead_code)]
+
 use pissa::runtime::{Manifest, Runtime};
 use std::path::PathBuf;
 

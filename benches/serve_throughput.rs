@@ -1,0 +1,168 @@
+//! §Serving — batched multi-adapter serving throughput.
+//!
+//! The acceptance workload of the serving runtime (EXPERIMENTS.md
+//! §Serving): a 768×768 base linear, 16 PiSSA rank-16 adapters drifted to
+//! simulate training, mixed 64-request batches. Three execution
+//! strategies over the SAME prepared `(W, ΔA, ΔB)` snapshot:
+//!
+//!   fused              shared X·W once + two skinny GEMMs per adapter
+//!                      group (ΔW never materialized)
+//!   dense-per-adapter  merge once per group, dense GEMM per group
+//!   merge-per-request  merge for every request (the naive baseline)
+//!
+//! Emits one `BENCH {json}` line per strategy plus a speedup summary and
+//! a CSV under results/. Target: fused ≥ 3× merge-per-request.
+//!
+//! Quick mode (default) trims batch count, not the workload shape; set
+//! PISSA_BENCH_FULL=1 for more timed batches.
+
+mod common;
+
+use pissa::adapter::{AdapterEngine, AdapterSpec};
+use pissa::metrics::write_labeled_csv;
+use pissa::model::BaseModel;
+use pissa::runtime::ConfigInfo;
+use pissa::serve::{drift_factors, Request, ServeConfig, ServeStrategy, Server};
+use pissa::util::json::{jnum, Json};
+use pissa::util::rng::Rng;
+
+const DIM: usize = 768;
+const N_ADAPTERS: usize = 16;
+const RANK: usize = 16;
+const BATCH: usize = 64;
+const MODULE: &str = "q";
+const BASE_FRAC: f64 = 0.125;
+
+fn workload(names: &[String], batches: usize, rng: &mut Rng) -> Vec<Vec<Request>> {
+    (0..batches)
+        .map(|_| {
+            (0..BATCH)
+                .map(|_| {
+                    let mut x = vec![0.0f32; DIM];
+                    rng.fill_normal(&mut x, 0.0, 1.0);
+                    if rng.uniform() < BASE_FRAC {
+                        Request::base(x)
+                    } else {
+                        Request::new(rng.choice(names), x)
+                    }
+                })
+                .collect()
+        })
+        .collect()
+}
+
+fn main() -> anyhow::Result<()> {
+    common::banner(
+        "§Serving",
+        &format!(
+            "fused low-rank vs merged serving — {DIM}x{DIM} base, {N_ADAPTERS} adapters, \
+             rank {RANK}, batch {BATCH}"
+        ),
+    );
+    let full = common::full_mode();
+    let mut rng = Rng::new(11);
+
+    let cfg = ConfigInfo {
+        name: "serve-bench".into(),
+        kind: "decoder".into(),
+        vocab: 64,
+        d_model: DIM,
+        n_layers: 1,
+        n_heads: 2,
+        d_ff: 64,
+        seq_len: 8,
+        batch: 8,
+        eval_batch: 4,
+        n_classes: 0,
+        ranks: vec![RANK],
+    };
+    eprintln!("[setup] base model + {N_ADAPTERS} pissa:rank={RANK} adapters (SVD init)…");
+    let base = BaseModel::random(&cfg, &mut rng);
+    let mut engine = AdapterEngine::new(base);
+    let names: Vec<String> = (0..N_ADAPTERS).map(|i| format!("tenant{i:02}")).collect();
+    for name in &names {
+        engine.attach(name, AdapterSpec::pissa(RANK).targets(&[MODULE]), &mut rng)?;
+        drift_factors(&mut engine, name, MODULE, 0.05, &mut rng)?;
+    }
+
+    println!(
+        "\n{:20} {:>10} {:>10} {:>10} {:>12}",
+        "strategy", "p50 ms", "p95 ms", "req/s", "vs merge"
+    );
+    let mut rows: Vec<(String, Vec<f64>)> = Vec::new();
+    let mut req_per_s = std::collections::BTreeMap::new();
+    // Baseline first so the speedup column fills as strategies complete.
+    let order =
+        [ServeStrategy::MergePerRequest, ServeStrategy::DensePerAdapter, ServeStrategy::Fused];
+    for strategy in order {
+        // merge-per-request does a dense merge per request — keep its
+        // batch count low; the timed quantity is per-request throughput.
+        let timed = match (strategy, full) {
+            (ServeStrategy::MergePerRequest, true) => 6,
+            (ServeStrategy::MergePerRequest, false) => 2,
+            (_, true) => 40,
+            (_, false) => 12,
+        };
+        let serve_cfg = ServeConfig::new(MODULE).strategy(strategy).max_batch(BATCH);
+        let mut server = Server::new(&engine, serve_cfg)?;
+        let mut wl_rng = Rng::new(77); // identical request stream per strategy
+        let all = workload(&names, timed + 1, &mut wl_rng);
+        server.forward(&all[0])?; // warmup (page in the snapshot)
+        server.reset_stats();
+        for batch in &all[1..] {
+            server.forward(batch)?;
+        }
+        let s = server.stats().summary();
+        req_per_s.insert(strategy.name(), s.req_per_s);
+        let baseline = req_per_s.get("merge-per-request").copied();
+        println!(
+            "{:20} {:>10.3} {:>10.3} {:>10.0} {:>12}",
+            strategy.name(),
+            s.p50_s * 1e3,
+            s.p95_s * 1e3,
+            s.req_per_s,
+            match (strategy, baseline) {
+                (ServeStrategy::MergePerRequest, _) => "1.0x".to_string(),
+                (_, Some(b)) if b > 0.0 => format!("{:.1}x", s.req_per_s / b),
+                _ => "-".to_string(),
+            },
+        );
+        let mut j = Json::obj();
+        j.set("bench", Json::Str("serve_throughput".into()));
+        j.set("strategy", Json::Str(strategy.name().into()));
+        j.set("dim", jnum(DIM as f64));
+        j.set("adapters", jnum(N_ADAPTERS as f64));
+        j.set("rank", jnum(RANK as f64));
+        j.set("batch", jnum(BATCH as f64));
+        j.set("batches", jnum(s.batches as f64));
+        j.set("p50_ms", jnum(s.p50_s * 1e3));
+        j.set("p95_ms", jnum(s.p95_s * 1e3));
+        j.set("req_per_s", jnum(s.req_per_s));
+        j.set("mean_occupancy", jnum(s.mean_occupancy));
+        j.set("mean_groups", jnum(s.mean_groups));
+        println!("BENCH {j}");
+        rows.push((
+            strategy.name().to_string(),
+            vec![s.p50_s * 1e3, s.p95_s * 1e3, s.req_per_s],
+        ));
+    }
+
+    let fused = req_per_s["fused"];
+    let merge = req_per_s["merge-per-request"];
+    let speedup = if merge > 0.0 { fused / merge } else { f64::INFINITY };
+    println!(
+        "\nfused vs merge-per-request: {speedup:.1}x  (target >= 3x: {})",
+        if speedup >= 3.0 { "PASS" } else { "FAIL" }
+    );
+    let mut j = Json::obj();
+    j.set("bench", Json::Str("serve_throughput_summary".into()));
+    j.set("fused_vs_merge_speedup", jnum(speedup));
+    j.set("target", jnum(3.0));
+    j.set("pass", Json::Bool(speedup >= 3.0));
+    println!("BENCH {j}");
+
+    let out = common::results_dir().join("serve_throughput.csv");
+    write_labeled_csv(&out, &["strategy", "p50_ms", "p95_ms", "req_per_s"], &rows)?;
+    println!("(rows -> {}; methodology in EXPERIMENTS.md §Serving)", out.display());
+    Ok(())
+}

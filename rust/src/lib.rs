@@ -59,6 +59,14 @@
 //! specs round-trip through a compact CLI string form
 //! (`pissa:rank=8:niter=4:targets=q@16,v`) as well as the v2 `PISSACKP`
 //! checkpoint container.
+//!
+//! At request time, the [`serve`] module turns an engine full of adapters
+//! into a batched multi-tenant server: requests carry an adapter name,
+//! batches are bucketed per adapter, and the fused forward runs one
+//! shared dense `X·W` plus two skinny GEMMs per adapter group — `ΔW` is
+//! never materialized (`pissa serve` drives a synthetic mixed-adapter
+//! workload; `benches/serve_throughput.rs` measures it against the
+//! merge-per-request and dense-per-adapter baselines).
 
 pub mod adapter;
 pub mod coordinator;
@@ -69,6 +77,7 @@ pub mod metrics;
 pub mod model;
 pub mod quant;
 pub mod runtime;
+pub mod serve;
 pub mod util;
 
 /// Crate version (mirrors Cargo.toml).

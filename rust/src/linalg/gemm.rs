@@ -62,11 +62,65 @@ pub fn matmul_nt(a: &Mat, bt: &Mat) -> Mat {
     c
 }
 
-/// C = Aᵀ · B.
+/// Column-block width of the `matmul_tn` panel kernel: the per-worker
+/// accumulator block is `m × TN_JB` floats (≤ 64 KiB at the m ≤ 128 cap),
+/// small enough to stay cache-resident across the whole k sweep.
+const TN_JB: usize = 128;
+
+/// Output-row cap under which `matmul_tn` uses the panel kernel; wider
+/// outputs fall back to transpose + blocked GEMM.
+const TN_SKINNY_M: usize = 128;
+
+/// C = Aᵀ · B, with A given row-major as the transposed operand (k×m).
+///
+/// For skinny outputs (m ≤ 128) — the rank-k panel shape that dominates
+/// adapter work: `Qᵀ·A` in the randomized SVD (m = rank + oversampling)
+/// and the low-rank backward products of the toy trainer — the dense
+/// micro-kernel is a poor fit (narrow C strips, plus a full transpose
+/// copy of `at`). This path instead sweeps k once, accumulating rank-1
+/// updates into an m×TN_JB cache-resident block per column panel: both
+/// operands are walked row-major with no packing or transpose.
+///
+/// Each C element is accumulated over p = 0..k in ascending order no
+/// matter how panels are distributed, so results are bit-identical for
+/// any `PISSA_THREADS` (the determinism contract of `util::par`).
 pub fn matmul_tn(at: &Mat, b: &Mat) -> Mat {
     assert_eq!(at.rows, b.rows, "matmul_tn inner dim");
-    let a = at.t();
-    matmul(&a, b)
+    let (k, m, n) = (at.rows, at.cols, b.cols);
+    if m > TN_SKINNY_M {
+        // Wide output: the blocked micro-kernel wins; pay the transpose.
+        return matmul(&at.t(), b);
+    }
+    let mut c = Mat::zeros(m, n);
+    if m == 0 || n == 0 {
+        return c;
+    }
+    let npanels = n.div_ceil(TN_JB);
+    let panels = crate::util::par::par_map(npanels, 1, |pi| {
+        let jlo = pi * TN_JB;
+        let jhi = (jlo + TN_JB).min(n);
+        let w = jhi - jlo;
+        let mut block = vec![0.0f32; m * w];
+        for p in 0..k {
+            let arow = at.row(p);
+            let brow = &b.row(p)[jlo..jhi];
+            for (i, &av) in arow.iter().enumerate() {
+                let dst = &mut block[i * w..(i + 1) * w];
+                for (d, &bv) in dst.iter_mut().zip(brow) {
+                    *d += av * bv;
+                }
+            }
+        }
+        block
+    });
+    for (pi, block) in panels.iter().enumerate() {
+        let jlo = pi * TN_JB;
+        let w = ((jlo + TN_JB).min(n)) - jlo;
+        for i in 0..m {
+            c.data[i * n + jlo..i * n + jlo + w].copy_from_slice(&block[i * w..(i + 1) * w]);
+        }
+    }
+    c
 }
 
 /// C += alpha * A·B accumulated into an existing buffer.
@@ -137,6 +191,19 @@ pub fn matmul_into(a: &Mat, b: &Mat, c: &mut Mat) {
     });
 }
 
+/// y = x·A for a row vector x (length `a.rows`) — the single-request
+/// serving path. Sequential AXPY sweep in fixed p order (deterministic).
+pub fn vecmat(x: &[f32], a: &Mat) -> Vec<f32> {
+    assert_eq!(x.len(), a.rows, "vecmat: x len {} vs {} rows", x.len(), a.rows);
+    let mut y = vec![0.0f32; a.cols];
+    for (p, &xv) in x.iter().enumerate() {
+        for (yv, &av) in y.iter_mut().zip(a.row(p)) {
+            *yv += xv * av;
+        }
+    }
+    y
+}
+
 /// y = A·x for a vector x.
 pub fn matvec(a: &Mat, x: &[f32]) -> Vec<f32> {
     assert_eq!(a.cols, x.len());
@@ -197,6 +264,37 @@ mod tests {
         close(&matmul_nt(&a, &bt), &matmul(&a, &b), 1e-4);
         let at = a.t();
         close(&matmul_tn(&at, &b), &matmul(&a, &b), 1e-4);
+    }
+
+    #[test]
+    fn matmul_tn_panel_kernel_shapes() {
+        // Exercise both the skinny panel path (m ≤ 128, incl. panel-edge
+        // n) and the wide fallback (m > 128).
+        let mut rng = Rng::new(7);
+        for &(k, m, n) in &[
+            (1usize, 1usize, 1usize),
+            (64, 8, 300),    // panel path, ragged last panel
+            (257, 16, 128),  // panel path, exactly one panel
+            (100, 128, 129), // panel path at the m cap
+            (50, 200, 40),   // wide fallback
+        ] {
+            let at = Mat::randn(k, m, 0.0, 1.0, &mut rng);
+            let b = Mat::randn(k, n, 0.0, 1.0, &mut rng);
+            close(&matmul_tn(&at, &b), &naive(&at.t(), &b), 1e-4);
+        }
+    }
+
+    #[test]
+    fn vecmat_matches_matmul_row() {
+        let mut rng = Rng::new(8);
+        let a = Mat::randn(9, 14, 0.0, 1.0, &mut rng);
+        let x: Vec<f32> = (0..9).map(|i| i as f32 * 0.25 - 1.0).collect();
+        let y = vecmat(&x, &a);
+        let xm = Mat::from_vec(1, 9, x);
+        let ym = matmul(&xm, &a);
+        for j in 0..14 {
+            assert!((y[j] - ym[(0, j)]).abs() < 1e-5);
+        }
     }
 
     #[test]

@@ -6,6 +6,7 @@
 //!   eval         score a trained run on the synthetic GSM8K/HumanEval analogs
 //!   quant-error  Table 3/6-style quantization-error reduction report
 //!   convert      PiSSA→LoRA adapter conversion (Appendix C)
+//!   serve        batched multi-adapter serving on a synthetic workload
 //!   toy          the Figure-2a MNIST-analog convergence comparison
 //!   info         print manifest/artifact inventory
 
@@ -34,6 +35,7 @@ fn main() -> Result<()> {
         "eval" => cmd_eval(&args),
         "quant-error" => cmd_quant_error(&args),
         "convert" => cmd_convert(&args),
+        "serve" => cmd_serve(&args),
         "toy" => cmd_toy(&args),
         "info" => cmd_info(&args),
         _ => {
@@ -57,6 +59,10 @@ COMMANDS
                [--task math|code|chat] [--n 64]
   quant-error  --config tiny [--base runs/base_tiny.ckpt] --ranks 2,4,8
   convert      --run runs/run1 --out runs/run1_lora.ckpt
+  serve        --adapters 8 --rank 8 --batch 32 --batches 40
+               [--strategy fused|merge|dense] [--module q] [--layer 0]
+               [--d-model 128] [--base-frac 0.125] [--drift 0.05]
+               [--out results/serve_stats.json]
   toy          [--rank 4] [--steps 60] (Figure 2a)
   info         list artifacts and configs
 
@@ -331,6 +337,100 @@ fn cmd_convert(args: &Args) -> Result<()> {
     let out_path = args.str_or("out", &format!("{run}_lora.ckpt"));
     out.save(Path::new(&out_path))?;
     println!("wrote {n} converted adapter pairs to {out_path}");
+    Ok(())
+}
+
+/// Batched multi-adapter serving on a synthetic mixed-tenant workload:
+/// one random base model, N PiSSA adapters (drifted to simulate
+/// training), and a request stream routed through the scheduler and the
+/// fused low-rank server. No artifacts needed.
+fn cmd_serve(args: &Args) -> Result<()> {
+    use pissa::serve::{drift_factors, Request, Scheduler, ServeConfig, ServeStrategy, Server};
+
+    let d_model = args.usize_or("d-model", 128);
+    let module = args.str_or("module", "q");
+    let layer = args.usize_or("layer", 0);
+    let n_adapters = args.usize_or("adapters", 8);
+    let rank = args.usize_or("rank", 8);
+    let batch = args.usize_or("batch", 32);
+    let batches = args.usize_or("batches", 40);
+    let base_frac = args.f64_or("base-frac", 0.125);
+    let drift = args.f64_or("drift", 0.05) as f32;
+    let strategy = ServeStrategy::parse(&args.str_or("strategy", "fused"))?;
+    let mut rng = Rng::new(args.u64_or("seed", 42));
+
+    let cfg = pissa::runtime::ConfigInfo {
+        name: "serve-synth".into(),
+        kind: "decoder".into(),
+        vocab: 64,
+        d_model,
+        n_layers: layer + 1,
+        n_heads: 2,
+        d_ff: d_model,
+        seq_len: 8,
+        batch: 8,
+        eval_batch: 4,
+        n_classes: 0,
+        ranks: vec![rank],
+    };
+    eprintln!(
+        "[serve] building base ({d_model}x{d_model} {module}) + {n_adapters} \
+         pissa:rank={rank} adapters…"
+    );
+    let base = pissa::model::BaseModel::random(&cfg, &mut rng);
+    let mut engine = pissa::adapter::AdapterEngine::new(base);
+    let names: Vec<String> = (0..n_adapters).map(|i| format!("tenant{i:02}")).collect();
+    for name in &names {
+        engine.attach(name, AdapterSpec::pissa(rank).targets(&[module.as_str()]), &mut rng)?;
+        drift_factors(&mut engine, name, &module, drift, &mut rng)?;
+    }
+
+    let serve_cfg = ServeConfig::new(&module).layer(layer).strategy(strategy).max_batch(batch);
+    let mut server = Server::new(&engine, serve_cfg)?;
+    let n_in = server.n_in();
+
+    let mut scheduler = Scheduler::new(batch);
+    let total = batches * batch;
+    for _ in 0..total {
+        let mut x = vec![0.0f32; n_in];
+        rng.fill_normal(&mut x, 0.0, 1.0);
+        // --adapters 0 degenerates to a pure base-weight workload.
+        let req = if names.is_empty() || rng.uniform() < base_frac {
+            Request::base(x)
+        } else {
+            Request::new(rng.choice(&names), x)
+        };
+        scheduler.submit(req);
+    }
+    while let Some(b) = scheduler.take_batch() {
+        server.forward(&b)?;
+    }
+
+    let s = server.stats().summary();
+    println!(
+        "served {} requests in {} batches [{}]  ({:.0} req/s)",
+        s.requests,
+        s.batches,
+        server.cfg(),
+        s.req_per_s
+    );
+    println!(
+        "latency p50 {:.3} ms  p95 {:.3} ms  |  occupancy {:.0}%  |  {:.1} adapter \
+         groups/batch",
+        s.p50_s * 1e3,
+        s.p95_s * 1e3,
+        s.mean_occupancy * 100.0,
+        s.mean_groups
+    );
+    println!("per-adapter hits:");
+    for (name, hits) in &server.stats().hits {
+        println!("  {name:12} {hits}");
+    }
+    if let Some(out) = args.get("out") {
+        let path = PathBuf::from(out);
+        pissa::metrics::write_json(&path, &server.stats().to_json())?;
+        println!("wrote stats json to {}", path.display());
+    }
     Ok(())
 }
 

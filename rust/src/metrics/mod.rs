@@ -49,6 +49,16 @@ impl JsonlSink {
     }
 }
 
+/// Write one JSON document to a file (the serving runtime exports its
+/// [`crate::serve::ServeStats`] snapshot through this).
+pub fn write_json(path: &Path, j: &Json) -> anyhow::Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(path, format!("{j}\n"))?;
+    Ok(())
+}
+
 /// Write a simple CSV (header + f64 rows) — the bench harnesses emit the
 /// paper's table rows through this.
 pub fn write_csv(path: &Path, header: &[&str], rows: &[Vec<f64>]) -> anyhow::Result<()> {
@@ -142,6 +152,19 @@ mod tests {
         assert!((matthews(&p, &p) - 1.0).abs() < 1e-12);
         let inv: Vec<i32> = p.iter().map(|v| 1 - v).collect();
         assert!((matthews(&p, &inv) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn write_json_roundtrips_through_parse() {
+        let dir = std::env::temp_dir().join("pissa_write_json_test");
+        let path = dir.join("stats.json");
+        let mut o = Json::obj();
+        o.set("req_per_s", jnum(123.5));
+        write_json(&path, &o).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back.get("req_per_s").and_then(|v| v.as_f64()), Some(123.5));
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -5,7 +5,7 @@
 pub mod build;
 pub mod params;
 
-pub use build::{apply_spec, effective_weight, BaseModel, TrainState, LINEARS};
+pub use build::{apply_spec, effective_weight, linear_dims, BaseModel, TrainState, LINEARS};
 #[allow(deprecated)]
 pub use build::apply_strategy;
 pub use params::{count_params, to_literals, ParamStore, Tensor};

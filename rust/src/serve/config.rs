@@ -1,0 +1,267 @@
+//! Serving configuration and the typed serving error set.
+//!
+//! A [`ServeConfig`] pins the served linear (module + layer), the
+//! execution [`ServeStrategy`], and the scheduler's batch ceiling.
+//! Validation happens against a concrete [`AdapterEngine`]: every
+//! registered adapter must be servable under the config (full-precision
+//! residual, declared rank within `min(m, n)`), so misconfiguration is a
+//! clear error at server construction, not a panic mid-batch.
+
+use crate::adapter::AdapterEngine;
+use crate::model::{linear_dims, LINEARS};
+use anyhow::Result;
+use std::fmt;
+
+/// How a batch is executed (the three contenders of
+/// `benches/serve_throughput.rs`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ServeStrategy {
+    /// The paper-faithful path: one shared dense `X·W` for the whole
+    /// batch, then per-adapter-group low-rank corrections
+    /// `(X_g·ΔA)·ΔB` — ΔW is never materialized.
+    Fused,
+    /// Naive baseline: materialize the merged dense weight for EVERY
+    /// request, then a dense vector-matrix product.
+    MergePerRequest,
+    /// Middle ground: materialize the merged dense weight once per
+    /// adapter group, then a dense group GEMM (no low-rank exploitation,
+    /// no cross-adapter sharing).
+    DensePerAdapter,
+}
+
+impl ServeStrategy {
+    pub fn parse(s: &str) -> Result<ServeStrategy> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "fused" => ServeStrategy::Fused,
+            "merge" | "merge-per-request" => ServeStrategy::MergePerRequest,
+            "dense" | "dense-per-adapter" => ServeStrategy::DensePerAdapter,
+            other => anyhow::bail!("unknown serve strategy '{other}' (fused|merge|dense)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ServeStrategy::Fused => "fused",
+            ServeStrategy::MergePerRequest => "merge-per-request",
+            ServeStrategy::DensePerAdapter => "dense-per-adapter",
+        }
+    }
+
+    /// All strategies, for equivalence sweeps.
+    pub fn all() -> [ServeStrategy; 3] {
+        [ServeStrategy::Fused, ServeStrategy::MergePerRequest, ServeStrategy::DensePerAdapter]
+    }
+}
+
+/// Typed serving errors — the contract of the edge-case hardening tests:
+/// bad requests are reported, never panicked on, and each variant can be
+/// matched (`err.downcast_ref::<ServeError>()`).
+#[derive(Debug, Clone, PartialEq)]
+pub enum ServeError {
+    /// A request named an adapter the engine does not hold.
+    UnknownAdapter { name: String, have: Vec<String> },
+    /// A request's input vector has the wrong length for the served linear.
+    DimMismatch { index: usize, got: usize, want: usize },
+    /// A batch exceeded the configured `max_batch` ceiling (the occupancy
+    /// denominator); route through a `Scheduler` or raise the ceiling.
+    BatchTooLarge { got: usize, max_batch: usize },
+    /// An adapter's declared rank exceeds `min(m, n)` of the served
+    /// weight — the "low-rank" update would be full-rank or worse, so
+    /// the fused strategy refuses it (merged/dense serving still works).
+    RankTooLarge { adapter: String, module: String, rank: usize, m: usize, n: usize },
+    /// Quantized strategies freeze an NF4 base that is not `W − A·B`,
+    /// so the shared-base + low-rank-delta decomposition does not exist.
+    QuantizedAdapter { adapter: String, strategy: &'static str },
+    /// The config names a module outside the seven served linears.
+    UnknownModule { module: String },
+    /// The config's layer index is out of range for the engine's base.
+    LayerOutOfRange { layer: usize, n_layers: usize },
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeError::UnknownAdapter { name, have } => {
+                write!(f, "no adapter named '{name}' is attached (have: {have:?})")
+            }
+            ServeError::DimMismatch { index, got, want } => {
+                write!(
+                    f,
+                    "request[{index}]: input has {got} features, the served linear takes {want}"
+                )
+            }
+            ServeError::BatchTooLarge { got, max_batch } => {
+                write!(
+                    f,
+                    "batch of {got} requests exceeds max_batch = {max_batch}; split it \
+                     (e.g. via Scheduler) or raise ServeConfig::max_batch"
+                )
+            }
+            ServeError::RankTooLarge { adapter, module, rank, m, n } => write!(
+                f,
+                "adapter '{adapter}' declares rank {rank} for module '{module}', but the \
+                 weight is {m}x{n}: a rank > min(m, n) = {} update is not low-rank — \
+                 lower the rank or serve the adapter merged/dense",
+                m.min(n)
+            ),
+            ServeError::QuantizedAdapter { adapter, strategy } => write!(
+                f,
+                "adapter '{adapter}' uses quantized strategy '{strategy}': its frozen NF4 \
+                 base cannot be expressed as shared-W + low-rank delta; fused serving \
+                 needs a full-precision residual"
+            ),
+            ServeError::UnknownModule { module } => {
+                write!(f, "unknown module '{module}' (expected one of {:?})", LINEARS)
+            }
+            ServeError::LayerOutOfRange { layer, n_layers } => {
+                write!(f, "layer {layer} out of range (base model has {n_layers} layers)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// Declarative serving configuration. Build with [`ServeConfig::new`] and
+/// the chained setters, then hand to `Server::new` (which validates).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServeConfig {
+    /// Which of the seven linears is served.
+    pub module: String,
+    /// Which layer of the stacked weight.
+    pub layer: usize,
+    /// Batch execution strategy.
+    pub strategy: ServeStrategy,
+    /// Scheduler batch ceiling (occupancy is reported against this).
+    pub max_batch: usize,
+}
+
+impl ServeConfig {
+    pub fn new(module: &str) -> ServeConfig {
+        ServeConfig {
+            module: module.to_string(),
+            layer: 0,
+            strategy: ServeStrategy::Fused,
+            max_batch: 64,
+        }
+    }
+
+    pub fn layer(mut self, layer: usize) -> ServeConfig {
+        self.layer = layer;
+        self
+    }
+
+    pub fn strategy(mut self, strategy: ServeStrategy) -> ServeConfig {
+        self.strategy = strategy;
+        self
+    }
+
+    pub fn max_batch(mut self, max_batch: usize) -> ServeConfig {
+        self.max_batch = max_batch;
+        self
+    }
+
+    /// Validate the config against a concrete engine: known module, layer
+    /// in range, and every attached adapter servable (full-precision
+    /// residual; for the fused strategy, declared rank ≤ min(m, n) of
+    /// the served weight — the merged/dense strategies accept any rank).
+    pub fn validate(&self, engine: &AdapterEngine) -> Result<()> {
+        anyhow::ensure!(self.max_batch >= 1, "max_batch must be >= 1");
+        if !LINEARS.contains(&self.module.as_str()) {
+            return Err(ServeError::UnknownModule { module: self.module.clone() }.into());
+        }
+        let n_layers = engine.base().n_layers();
+        if self.layer >= n_layers {
+            return Err(ServeError::LayerOutOfRange { layer: self.layer, n_layers }.into());
+        }
+        let w = engine.base_weight(&self.module, self.layer);
+        let (m, n) = (w.rows, w.cols);
+        for name in engine.names() {
+            let ad = engine.get(name)?;
+            if !ad.spec.targets_module(&self.module) {
+                continue; // served straight from the base weight
+            }
+            if ad.spec.quantized() {
+                return Err(ServeError::QuantizedAdapter {
+                    adapter: name.to_string(),
+                    strategy: ad.spec.name(),
+                }
+                .into());
+            }
+            // Only the fused path depends on the update actually being
+            // low-rank; the merged/dense strategies serve any rank
+            // correctly (the error message points there).
+            let rank = ad.spec.module_rank(&self.module);
+            if self.strategy == ServeStrategy::Fused && rank > m.min(n) {
+                return Err(ServeError::RankTooLarge {
+                    adapter: name.to_string(),
+                    module: self.module.clone(),
+                    rank,
+                    m,
+                    n,
+                }
+                .into());
+            }
+        }
+        Ok(())
+    }
+
+    /// (in_dim, out_dim) of the served linear under `cfg` for a given
+    /// model config — handy for request construction.
+    pub fn dims_for(&self, cfg: &crate::runtime::ConfigInfo) -> (usize, usize) {
+        linear_dims(cfg, &self.module)
+    }
+}
+
+impl fmt::Display for ServeConfig {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}[{}]:{}:max_batch={}",
+            self.module,
+            self.layer,
+            self.strategy.name(),
+            self.max_batch
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strategy_parse_roundtrip() {
+        for s in ServeStrategy::all() {
+            assert_eq!(ServeStrategy::parse(s.name()).unwrap(), s);
+        }
+        assert_eq!(ServeStrategy::parse("merge").unwrap(), ServeStrategy::MergePerRequest);
+        assert_eq!(ServeStrategy::parse("dense").unwrap(), ServeStrategy::DensePerAdapter);
+        assert!(ServeStrategy::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn builder_and_display() {
+        let c =
+            ServeConfig::new("q").layer(1).strategy(ServeStrategy::DensePerAdapter).max_batch(8);
+        assert_eq!(c.module, "q");
+        assert_eq!(c.layer, 1);
+        assert_eq!(c.max_batch, 8);
+        assert_eq!(c.to_string(), "q[1]:dense-per-adapter:max_batch=8");
+    }
+
+    #[test]
+    fn serve_error_messages_name_the_problem() {
+        let e = ServeError::RankTooLarge {
+            adapter: "t".into(),
+            module: "q".into(),
+            rank: 40,
+            m: 32,
+            n: 32,
+        };
+        let msg = e.to_string();
+        assert!(msg.contains("rank 40") && msg.contains("min(m, n) = 32"), "{msg}");
+        let u = ServeError::UnknownAdapter { name: "ghost".into(), have: vec!["a".into()] };
+        assert!(u.to_string().contains("ghost"));
+    }
+}

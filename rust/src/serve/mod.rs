@@ -1,0 +1,75 @@
+//! Batched multi-adapter serving runtime.
+//!
+//! PiSSA's deployment story (§3 + Appendix C): many low-rank adapters
+//! share ONE frozen dense base, so a single host serves many fine-tuned
+//! variants. This module is the layer that actually exploits that
+//! structure at request time, on top of [`crate::adapter::AdapterEngine`]:
+//!
+//! * [`Request`] / [`Scheduler`] / [`bucket`] — requests carry an adapter
+//!   name; the scheduler batches them and the router buckets a batch by
+//!   adapter in deterministic order,
+//! * [`ServeConfig`] + [`ServeStrategy`] — which linear/layer is served
+//!   and how: `fused` (shared `X·W` + per-group low-rank corrections,
+//!   `ΔW` never materialized), `merge-per-request`, or
+//!   `dense-per-adapter` (the baselines of `benches/serve_throughput.rs`),
+//! * [`Server`] — the batched forward `Y = X·W + Σ_g (X_g·ΔA_g)·ΔB_g`,
+//!   with per-adapter corrections dispatched in parallel via
+//!   [`crate::util::par::par_map`],
+//! * [`ServeStats`] — per-adapter hit counts, batch occupancy, and
+//!   p50/p95 latency, exported as JSON through the `metrics` sinks,
+//! * [`ServeError`] — typed request/config errors (unknown adapter,
+//!   dimension mismatch, rank > min(m, n), quantized base), never panics.
+//!
+//! Bit-for-bit thread-count determinism of the whole path is locked in
+//! by `rust/tests/determinism.rs`; fused ≡ merged-dense equivalence by
+//! `rust/tests/serve_equiv.rs`.
+
+pub mod config;
+pub mod router;
+pub mod server;
+pub mod stats;
+
+pub use config::{ServeConfig, ServeError, ServeStrategy};
+pub use router::{bucket, Group, Request, Scheduler};
+pub use server::Server;
+pub use stats::{ServeStats, ServeSummary, BASE_KEY};
+
+use crate::adapter::AdapterEngine;
+use crate::util::rng::Rng;
+use anyhow::Result;
+
+/// Simulate training drift on one adapter's factors for `module` (every
+/// layer): adds N(0, scale) noise to A and B. Synthetic-workload helper
+/// shared by the `serve` CLI, the throughput bench, and the equivalence
+/// tests — a server snapshot of a drifted adapter exercises the real
+/// Appendix-C delta path instead of the zero-delta init state.
+pub fn drift_factors(
+    engine: &mut AdapterEngine,
+    name: &str,
+    module: &str,
+    scale: f32,
+    rng: &mut Rng,
+) -> Result<()> {
+    anyhow::ensure!(
+        engine.get(name)?.spec.targets_module(module),
+        "adapter '{name}' does not target module '{module}'; nothing to drift"
+    );
+    let layers = engine.base().n_layers();
+    for layer in 0..layers {
+        let (mut a, mut b) = {
+            let ad = engine.get(name)?;
+            (
+                ad.factors[&format!("a_{module}")].layer(layer),
+                ad.factors[&format!("b_{module}")].layer(layer),
+            )
+        };
+        for x in a.data.iter_mut() {
+            *x += scale * rng.normal_f32(0.0, 1.0);
+        }
+        for x in b.data.iter_mut() {
+            *x += scale * rng.normal_f32(0.0, 1.0);
+        }
+        engine.set_factors(name, module, layer, &a, &b)?;
+    }
+    Ok(())
+}

@@ -1,0 +1,143 @@
+//! Request routing: adapter-keyed bucketing and the batching scheduler.
+//!
+//! A [`Request`] is one inference call against the served linear — an
+//! input vector plus the adapter it should run under (`None` = the frozen
+//! base). The router groups a batch by adapter in a deterministic
+//! (sorted, base-first) order so the server can amortize the shared base
+//! GEMM across every group and dispatch the per-adapter low-rank
+//! corrections in parallel; the [`Scheduler`] accumulates a request
+//! stream into batches of at most `max_batch`.
+
+use std::collections::BTreeMap;
+use std::collections::VecDeque;
+
+/// One serving request: an input row for the served linear, tagged with
+/// the adapter to run under (`None` = base weights only).
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub adapter: Option<String>,
+    pub x: Vec<f32>,
+}
+
+impl Request {
+    pub fn new(adapter: &str, x: Vec<f32>) -> Request {
+        Request { adapter: Some(adapter.to_string()), x }
+    }
+
+    /// A request against the frozen base (no adapter correction).
+    pub fn base(x: Vec<f32>) -> Request {
+        Request { adapter: None, x }
+    }
+}
+
+/// One adapter bucket of a batch: which rows (original batch positions,
+/// in arrival order) run under `adapter`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Group {
+    pub adapter: Option<String>,
+    pub rows: Vec<usize>,
+}
+
+/// Bucket a batch by adapter. Deterministic: groups come out base-first
+/// then name-sorted, rows within a group in arrival order — so a batch
+/// routes identically regardless of thread count or map iteration luck.
+pub fn bucket(requests: &[Request]) -> Vec<Group> {
+    let mut map: BTreeMap<Option<&str>, Vec<usize>> = BTreeMap::new();
+    for (i, r) in requests.iter().enumerate() {
+        map.entry(r.adapter.as_deref()).or_default().push(i);
+    }
+    map.into_iter()
+        .map(|(adapter, rows)| Group { adapter: adapter.map(|s| s.to_string()), rows })
+        .collect()
+}
+
+/// FIFO batching scheduler: submit requests as they arrive, drain them in
+/// batches of at most `max_batch` (the occupancy denominator of the
+/// serving stats).
+#[derive(Debug)]
+pub struct Scheduler {
+    queue: VecDeque<Request>,
+    max_batch: usize,
+}
+
+impl Scheduler {
+    pub fn new(max_batch: usize) -> Scheduler {
+        assert!(max_batch >= 1, "max_batch must be >= 1");
+        Scheduler { queue: VecDeque::new(), max_batch }
+    }
+
+    pub fn submit(&mut self, request: Request) {
+        self.queue.push_back(request);
+    }
+
+    /// Number of queued requests.
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Is a full batch ready?
+    pub fn full(&self) -> bool {
+        self.queue.len() >= self.max_batch
+    }
+
+    /// Pop the next batch (up to `max_batch` requests, FIFO); `None` when
+    /// the queue is empty. Callers decide whether to wait for `full()` or
+    /// flush a partial batch.
+    pub fn take_batch(&mut self) -> Option<Vec<Request>> {
+        if self.queue.is_empty() {
+            return None;
+        }
+        let take = self.max_batch.min(self.queue.len());
+        Some(self.queue.drain(..take).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_is_sorted_and_order_preserving() {
+        let reqs = vec![
+            Request::new("b", vec![0.0]),
+            Request::base(vec![1.0]),
+            Request::new("a", vec![2.0]),
+            Request::new("b", vec![3.0]),
+            Request::base(vec![4.0]),
+        ];
+        let groups = bucket(&reqs);
+        assert_eq!(groups.len(), 3);
+        // base-first, then name-sorted
+        assert_eq!(groups[0].adapter, None);
+        assert_eq!(groups[0].rows, vec![1, 4]);
+        assert_eq!(groups[1].adapter.as_deref(), Some("a"));
+        assert_eq!(groups[1].rows, vec![2]);
+        assert_eq!(groups[2].adapter.as_deref(), Some("b"));
+        assert_eq!(groups[2].rows, vec![0, 3]);
+    }
+
+    #[test]
+    fn bucket_empty_batch() {
+        assert!(bucket(&[]).is_empty());
+    }
+
+    #[test]
+    fn scheduler_drains_fifo_batches() {
+        let mut s = Scheduler::new(3);
+        for i in 0..7 {
+            s.submit(Request::base(vec![i as f32]));
+        }
+        assert!(s.full());
+        assert_eq!(s.pending(), 7);
+        let b1 = s.take_batch().unwrap();
+        assert_eq!(b1.len(), 3);
+        assert_eq!(b1[0].x, vec![0.0]);
+        let b2 = s.take_batch().unwrap();
+        assert_eq!(b2.len(), 3);
+        let b3 = s.take_batch().unwrap();
+        assert_eq!(b3.len(), 1); // partial flush
+        assert_eq!(b3[0].x, vec![6.0]);
+        assert!(s.take_batch().is_none());
+        assert!(!s.full());
+    }
+}

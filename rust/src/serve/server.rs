@@ -1,0 +1,431 @@
+//! The batched multi-adapter server.
+//!
+//! PiSSA's deployment promise: many cheap adapters share one frozen dense
+//! base, so one host serves many fine-tuned variants at once. The server
+//! snapshots, per attached adapter, a low-rank delta `(ΔA, ΔB)` against
+//! the ORIGINAL dense weight `W` (the Appendix-C equivalent-LoRA form
+//! `ΔA = [A'|A], ΔB = [B';−B]` for drifted PiSSA factors; the raw factors
+//! when the frozen residual is `W` itself, e.g. LoRA), and executes a
+//! mixed-adapter batch as
+//!
+//! ```text
+//!   Y = X·W  +  Σ_groups scatter( (X_g·ΔA_g)·ΔB_g )
+//! ```
+//!
+//! — one shared dense GEMM amortized across every adapter, plus two
+//! skinny GEMMs per adapter group, dispatched in parallel via
+//! [`crate::util::par::par_map`]. `ΔW` is never materialized. The
+//! merge-per-request and dense-per-adapter strategies execute the same
+//! `(W, ΔA, ΔB)` snapshot densely and exist as baselines (and as the
+//! reference the equivalence property tests compare against).
+//!
+//! Determinism: request bucketing is sorted, group corrections are
+//! scattered in group order on the caller thread, and every GEMM in the
+//! path accumulates in fixed k-order — so serving output is bit-identical
+//! for any `PISSA_THREADS` (locked in by `rust/tests/determinism.rs`).
+
+use super::config::{ServeConfig, ServeError, ServeStrategy};
+use super::router::{bucket, Group, Request};
+use super::stats::ServeStats;
+use crate::adapter::convert::pissa_to_lora;
+use crate::adapter::AdapterEngine;
+use crate::linalg::{matmul, vecmat, Mat};
+use crate::util::par::par_map;
+use crate::util::timer::Timer;
+use anyhow::Result;
+use std::collections::BTreeMap;
+
+/// Snapshot of one servable adapter: `effective = W + ΔA·ΔB`.
+/// `None` when the adapter does not target the served module (it serves
+/// the base weight unchanged).
+#[derive(Debug, Clone)]
+struct Prepared {
+    delta: Option<(Mat, Mat)>,
+}
+
+/// Batched multi-adapter server over a snapshot of an [`AdapterEngine`].
+///
+/// Construction validates the [`ServeConfig`] against the engine and
+/// copies out everything serving needs (shared base weight + per-adapter
+/// low-rank deltas), so the engine is free to keep training afterwards;
+/// rebuild the server to pick up new factors.
+#[derive(Debug)]
+pub struct Server {
+    cfg: ServeConfig,
+    /// Original dense weight of the served linear (m×n) — shared by
+    /// every adapter.
+    base_w: Mat,
+    prepared: BTreeMap<String, Prepared>,
+    stats: ServeStats,
+}
+
+impl Server {
+    /// Snapshot `engine` under `cfg`. Fails with a typed [`ServeError`]
+    /// on unknown module, out-of-range layer, quantized adapters, or
+    /// rank > min(m, n).
+    pub fn new(engine: &AdapterEngine, cfg: ServeConfig) -> Result<Server> {
+        cfg.validate(engine)?;
+        let base_w = engine.base_weight(&cfg.module, cfg.layer);
+        let mut prepared = BTreeMap::new();
+        for name in engine.names() {
+            let ad = engine.get(name)?;
+            let delta = if !ad.spec.targets_module(&cfg.module) {
+                None
+            } else {
+                let a0 = ad.init_factors[&format!("a_{}", cfg.module)].layer(cfg.layer);
+                let b0 = ad.init_factors[&format!("b_{}", cfg.module)].layer(cfg.layer);
+                let a1 = ad.factors[&format!("a_{}", cfg.module)].layer(cfg.layer);
+                let b1 = ad.factors[&format!("b_{}", cfg.module)].layer(cfg.layer);
+                if b0.data.iter().all(|&x| x == 0.0) {
+                    // Frozen residual is W itself (LoRA-style init):
+                    // the current factors ARE the delta, at rank r.
+                    Some((a1, b1))
+                } else {
+                    // Appendix C: ΔA·ΔB = A'·B' − A₀·B₀, rank 2r, plugs
+                    // into the original W (exact because the attach-time
+                    // invariant pins base = W − A₀·B₀).
+                    let d = pissa_to_lora(&a0, &b0, &a1, &b1);
+                    Some((d.da, d.db))
+                }
+            };
+            prepared.insert(name.to_string(), Prepared { delta });
+        }
+        Ok(Server { cfg, base_w, prepared, stats: ServeStats::new() })
+    }
+
+    pub fn cfg(&self) -> &ServeConfig {
+        &self.cfg
+    }
+
+    /// Input feature count of the served linear.
+    pub fn n_in(&self) -> usize {
+        self.base_w.rows
+    }
+
+    /// Output feature count of the served linear.
+    pub fn n_out(&self) -> usize {
+        self.base_w.cols
+    }
+
+    /// Names the server can route to (snapshot order).
+    pub fn adapter_names(&self) -> Vec<&str> {
+        self.prepared.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn stats(&self) -> &ServeStats {
+        &self.stats
+    }
+
+    pub fn reset_stats(&mut self) {
+        self.stats.reset();
+    }
+
+    /// Serve one batch: row i of the output is the served linear applied
+    /// to `requests[i]` under its adapter. An empty batch yields an empty
+    /// (0×n_out) output. Unknown adapters, wrong input widths, and
+    /// batches above `max_batch` (the occupancy denominator — route
+    /// through a [`super::Scheduler`]) are typed errors; nothing panics
+    /// on request data.
+    pub fn forward(&mut self, requests: &[Request]) -> Result<Mat> {
+        if requests.is_empty() {
+            return Ok(Mat::zeros(0, self.n_out()));
+        }
+        if requests.len() > self.cfg.max_batch {
+            return Err(ServeError::BatchTooLarge {
+                got: requests.len(),
+                max_batch: self.cfg.max_batch,
+            }
+            .into());
+        }
+        let want = self.n_in();
+        for (i, r) in requests.iter().enumerate() {
+            if r.x.len() != want {
+                return Err(ServeError::DimMismatch { index: i, got: r.x.len(), want }.into());
+            }
+            if let Some(name) = &r.adapter {
+                if !self.prepared.contains_key(name) {
+                    return Err(ServeError::UnknownAdapter {
+                        name: name.clone(),
+                        have: self.prepared.keys().cloned().collect(),
+                    }
+                    .into());
+                }
+            }
+        }
+        let timer = Timer::start();
+        let groups = bucket(requests);
+        let y = match self.cfg.strategy {
+            ServeStrategy::Fused => self.forward_fused(requests, &groups),
+            ServeStrategy::DensePerAdapter => self.forward_dense(requests, &groups),
+            ServeStrategy::MergePerRequest => self.forward_merge(requests),
+        };
+        let adapters: Vec<Option<&str>> = requests.iter().map(|r| r.adapter.as_deref()).collect();
+        self.stats.record_batch(&adapters, groups.len(), self.cfg.max_batch, timer.secs());
+        Ok(y)
+    }
+
+    /// Shared `X·W` once, then per-group `(X_g·ΔA)·ΔB` corrections in
+    /// parallel, scattered back in deterministic group order.
+    fn forward_fused(&self, requests: &[Request], groups: &[Group]) -> Mat {
+        let x = gather_all(requests, self.n_in());
+        let mut y = matmul(&x, &self.base_w);
+        let adapter_groups: Vec<&Group> = groups.iter().filter(|g| g.adapter.is_some()).collect();
+        let corrections: Vec<Option<Mat>> = par_map(adapter_groups.len(), 1, |gi| {
+            let g = adapter_groups[gi];
+            let prep = &self.prepared[g.adapter.as_deref().expect("filtered to Some")];
+            let (da, db) = prep.delta.as_ref()?;
+            let xg = gather_rows(&x, &g.rows);
+            let t = matmul(&xg, da); // |g| × R   (skinny)
+            Some(matmul(&t, db)) // |g| × n   (rank-R panel product)
+        });
+        for (g, c) in adapter_groups.iter().zip(&corrections) {
+            if let Some(c) = c {
+                for (k, &row) in g.rows.iter().enumerate() {
+                    for (yv, cv) in y.row_mut(row).iter_mut().zip(c.row(k)) {
+                        *yv += cv;
+                    }
+                }
+            }
+        }
+        y
+    }
+
+    /// Baseline: materialize the merged dense weight once per adapter
+    /// group, dense GEMM per group. Amortizes the merge across a group
+    /// but shares nothing across adapters.
+    fn forward_dense(&self, requests: &[Request], groups: &[Group]) -> Mat {
+        let mut y = Mat::zeros(requests.len(), self.n_out());
+        let outs: Vec<Mat> = par_map(groups.len(), 1, |gi| {
+            let g = &groups[gi];
+            let xg = gather_requests(requests, &g.rows, self.n_in());
+            match self.group_delta(g) {
+                Some((da, db)) => {
+                    let merged = self.base_w.add(&matmul(da, db));
+                    matmul(&xg, &merged)
+                }
+                None => matmul(&xg, &self.base_w),
+            }
+        });
+        for (g, out) in groups.iter().zip(&outs) {
+            for (k, &row) in g.rows.iter().enumerate() {
+                y.row_mut(row).copy_from_slice(out.row(k));
+            }
+        }
+        y
+    }
+
+    /// Naive baseline: merge (materialize `W + ΔA·ΔB`) for every single
+    /// request, then one dense vector-matrix product. Sequential — this
+    /// is the cost model the fused path is measured against.
+    fn forward_merge(&self, requests: &[Request]) -> Mat {
+        let mut y = Mat::zeros(requests.len(), self.n_out());
+        for (i, r) in requests.iter().enumerate() {
+            let delta = r.adapter.as_deref().and_then(|n| self.prepared[n].delta.as_ref());
+            let row = match delta {
+                Some((da, db)) => {
+                    let merged = self.base_w.add(&matmul(da, db));
+                    vecmat(&r.x, &merged)
+                }
+                None => vecmat(&r.x, &self.base_w),
+            };
+            y.row_mut(i).copy_from_slice(&row);
+        }
+        y
+    }
+
+    fn group_delta(&self, g: &Group) -> Option<&(Mat, Mat)> {
+        g.adapter.as_deref().and_then(|n| self.prepared[n].delta.as_ref())
+    }
+}
+
+/// Pack every request row into a batch×m matrix.
+fn gather_all(requests: &[Request], m: usize) -> Mat {
+    let mut x = Mat::zeros(requests.len(), m);
+    for (i, r) in requests.iter().enumerate() {
+        x.row_mut(i).copy_from_slice(&r.x);
+    }
+    x
+}
+
+/// Gather a row subset of a packed batch.
+fn gather_rows(x: &Mat, rows: &[usize]) -> Mat {
+    let mut out = Mat::zeros(rows.len(), x.cols);
+    for (k, &row) in rows.iter().enumerate() {
+        out.row_mut(k).copy_from_slice(x.row(row));
+    }
+    out
+}
+
+/// Gather a row subset straight from the request slice.
+fn gather_requests(requests: &[Request], rows: &[usize], m: usize) -> Mat {
+    let mut out = Mat::zeros(rows.len(), m);
+    for (k, &row) in rows.iter().enumerate() {
+        out.row_mut(k).copy_from_slice(&requests[row].x);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adapter::AdapterSpec;
+    use crate::model::BaseModel;
+    use crate::runtime::ConfigInfo;
+    use crate::util::rng::Rng;
+
+    fn tiny_cfg() -> ConfigInfo {
+        ConfigInfo {
+            name: "serve-test".into(),
+            kind: "decoder".into(),
+            vocab: 64,
+            d_model: 16,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 24,
+            seq_len: 8,
+            batch: 4,
+            eval_batch: 2,
+            n_classes: 0,
+            ranks: vec![2],
+        }
+    }
+
+    fn engine_with(names: &[(&str, AdapterSpec)], seed: u64) -> (AdapterEngine, Rng) {
+        let mut rng = Rng::new(seed);
+        let base = BaseModel::random(&tiny_cfg(), &mut rng);
+        let mut eng = AdapterEngine::new(base);
+        for (name, spec) in names {
+            eng.attach(name, spec.clone(), &mut rng).unwrap();
+        }
+        (eng, rng)
+    }
+
+    #[test]
+    fn empty_batch_serves_empty_output() {
+        let (eng, _) = engine_with(&[("p", AdapterSpec::pissa(2))], 1);
+        let mut srv = Server::new(&eng, ServeConfig::new("q")).unwrap();
+        let y = srv.forward(&[]).unwrap();
+        assert_eq!((y.rows, y.cols), (0, 16));
+        assert_eq!(srv.stats().batches, 0);
+    }
+
+    #[test]
+    fn unknown_adapter_is_a_typed_error() {
+        let (eng, _) = engine_with(&[("p", AdapterSpec::pissa(2))], 2);
+        let mut srv = Server::new(&eng, ServeConfig::new("q")).unwrap();
+        let err = srv.forward(&[Request::new("ghost", vec![0.0; 16])]).unwrap_err();
+        match err.downcast_ref::<ServeError>() {
+            Some(ServeError::UnknownAdapter { name, have }) => {
+                assert_eq!(name, "ghost");
+                assert_eq!(have, &vec!["p".to_string()]);
+            }
+            other => panic!("expected UnknownAdapter, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn dim_mismatch_is_a_typed_error() {
+        let (eng, _) = engine_with(&[("p", AdapterSpec::pissa(2))], 3);
+        let mut srv = Server::new(&eng, ServeConfig::new("q")).unwrap();
+        let err = srv
+            .forward(&[Request::base(vec![0.0; 16]), Request::base(vec![0.0; 5])])
+            .unwrap_err();
+        match err.downcast_ref::<ServeError>() {
+            Some(ServeError::DimMismatch { index, got, want }) => {
+                assert_eq!((*index, *got, *want), (1, 5, 16));
+            }
+            other => panic!("expected DimMismatch, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn oversized_batch_is_a_typed_error() {
+        let (eng, _) = engine_with(&[("p", AdapterSpec::pissa(2))], 9);
+        let mut srv = Server::new(&eng, ServeConfig::new("q").max_batch(2)).unwrap();
+        let reqs: Vec<Request> = (0..3).map(|_| Request::base(vec![0.0; 16])).collect();
+        let err = srv.forward(&reqs).unwrap_err();
+        match err.downcast_ref::<ServeError>() {
+            Some(ServeError::BatchTooLarge { got, max_batch }) => {
+                assert_eq!((*got, *max_batch), (3, 2));
+            }
+            other => panic!("expected BatchTooLarge, got {other:?}"),
+        }
+        // at the ceiling is fine
+        assert!(srv.forward(&reqs[..2]).is_ok());
+    }
+
+    #[test]
+    fn rank_above_min_dim_rejected_at_config_validation() {
+        // LoRA attaches fine at any rank (A·B = 0), but serving it as a
+        // "low-rank" update of a 16×16 weight at rank 40 is refused.
+        let (eng, _) = engine_with(&[("fat", AdapterSpec::lora(40).targets(&["q"]))], 4);
+        let err = Server::new(&eng, ServeConfig::new("q")).unwrap_err();
+        match err.downcast_ref::<ServeError>() {
+            Some(ServeError::RankTooLarge { rank, m, n, .. }) => {
+                assert_eq!((*rank, *m, *n), (40, 16, 16));
+            }
+            other => panic!("expected RankTooLarge, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn quantized_adapters_rejected_for_serving() {
+        // qlora attaches under the exact NF4-fixed-point invariant (A·B=0),
+        // so this test never depends on the Table-3 error bound.
+        let (eng, _) = engine_with(&[("qp", AdapterSpec::qlora(2))], 5);
+        let err = Server::new(&eng, ServeConfig::new("q")).unwrap_err();
+        assert!(matches!(
+            err.downcast_ref::<ServeError>(),
+            Some(ServeError::QuantizedAdapter { .. })
+        ));
+    }
+
+    #[test]
+    fn bad_module_and_layer_rejected() {
+        let (eng, _) = engine_with(&[("p", AdapterSpec::pissa(2))], 6);
+        assert!(matches!(
+            Server::new(&eng, ServeConfig::new("bogus")).unwrap_err().downcast_ref(),
+            Some(ServeError::UnknownModule { .. })
+        ));
+        assert!(matches!(
+            Server::new(&eng, ServeConfig::new("q").layer(9)).unwrap_err().downcast_ref(),
+            Some(ServeError::LayerOutOfRange { .. })
+        ));
+    }
+
+    #[test]
+    fn untargeted_adapter_serves_the_base_weight() {
+        let (eng, mut rng) = engine_with(&[("vonly", AdapterSpec::pissa(2).targets(&["v"]))], 7);
+        let mut srv = Server::new(&eng, ServeConfig::new("q")).unwrap();
+        let x: Vec<f32> = (0..16).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let via_adapter = srv.forward(&[Request::new("vonly", x.clone())]).unwrap();
+        let via_base = srv.forward(&[Request::base(x)]).unwrap();
+        assert_eq!(via_adapter.data, via_base.data);
+    }
+
+    #[test]
+    fn drift_factors_rejects_untargeted_module() {
+        let (mut eng, mut rng) =
+            engine_with(&[("vonly", AdapterSpec::pissa(2).targets(&["v"]))], 10);
+        let err = crate::serve::drift_factors(&mut eng, "vonly", "q", 0.1, &mut rng).unwrap_err();
+        assert!(err.to_string().contains("does not target"), "{err}");
+        assert!(crate::serve::drift_factors(&mut eng, "vonly", "v", 0.1, &mut rng).is_ok());
+    }
+
+    #[test]
+    fn stats_count_hits_and_batches() {
+        let (eng, _) = engine_with(&[("p", AdapterSpec::pissa(2))], 8);
+        let mut srv = Server::new(&eng, ServeConfig::new("q").max_batch(4)).unwrap();
+        let reqs =
+            vec![Request::new("p", vec![0.1; 16]), Request::base(vec![0.2; 16])];
+        srv.forward(&reqs).unwrap();
+        srv.forward(&reqs).unwrap();
+        let s = srv.stats().summary();
+        assert_eq!(s.batches, 2);
+        assert_eq!(s.requests, 4);
+        assert_eq!(srv.stats().hits["p"], 2);
+        assert!((s.mean_occupancy - 0.5).abs() < 1e-12);
+        srv.reset_stats();
+        assert_eq!(srv.stats().batches, 0);
+    }
+}

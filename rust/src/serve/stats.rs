@@ -1,0 +1,211 @@
+//! Serving statistics: per-adapter hit counts, batch occupancy, and
+//! latency percentiles — the operational surface of the serving runtime,
+//! exported as JSON through the `metrics` sinks.
+
+use crate::util::json::{jnum, Json};
+use crate::util::timer::BenchStats;
+use std::collections::{BTreeMap, VecDeque};
+
+/// Display key for base-only (adapter-less) requests in the hit table.
+pub const BASE_KEY: &str = "<base>";
+
+/// Trailing window for the per-batch samples (latency, occupancy,
+/// group fan-out). Totals and hit counts stay exact over the server's
+/// lifetime; percentiles are over the last `SAMPLE_WINDOW` batches, so
+/// memory and `summary()` cost stay bounded under sustained traffic.
+pub const SAMPLE_WINDOW: usize = 4096;
+
+/// Accumulated serving counters. One instance lives inside the server and
+/// is updated per executed batch; `summary()`/`to_json()` roll it up.
+#[derive(Debug, Default, Clone)]
+pub struct ServeStats {
+    /// Executed batches.
+    pub batches: usize,
+    /// Served requests (sum of batch sizes).
+    pub requests: usize,
+    /// Requests per adapter name (base-only requests under [`BASE_KEY`]).
+    pub hits: BTreeMap<String, usize>,
+    /// Adapter groups touched per batch (scheduling fan-out), last
+    /// [`SAMPLE_WINDOW`] batches.
+    group_counts: VecDeque<usize>,
+    /// batch_size / max_batch per batch, last [`SAMPLE_WINDOW`] batches.
+    occupancies: VecDeque<f64>,
+    /// Wall-clock seconds per batch, last [`SAMPLE_WINDOW`] batches.
+    latencies_s: VecDeque<f64>,
+    /// Exact lifetime sum of batch latencies (throughput denominator).
+    total_s: f64,
+}
+
+/// Rolled-up view of [`ServeStats`]. `batches`/`requests`/`total_s`/
+/// `req_per_s` are exact over the server's lifetime; means and
+/// percentiles are over the trailing [`SAMPLE_WINDOW`] batches.
+#[derive(Debug, Clone)]
+pub struct ServeSummary {
+    pub batches: usize,
+    pub requests: usize,
+    pub mean_occupancy: f64,
+    pub mean_groups: f64,
+    /// Per-batch latency percentiles, in seconds (0 when nothing ran).
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub total_s: f64,
+    /// Requests per second over the measured batches.
+    pub req_per_s: f64,
+}
+
+/// Bounded push: drop the oldest sample once the window is full.
+fn push_windowed<T>(q: &mut VecDeque<T>, v: T) {
+    if q.len() == SAMPLE_WINDOW {
+        q.pop_front();
+    }
+    q.push_back(v);
+}
+
+fn mean_of(iter: impl Iterator<Item = f64>) -> f64 {
+    let (mut sum, mut n) = (0.0, 0usize);
+    for v in iter {
+        sum += v;
+        n += 1;
+    }
+    if n == 0 {
+        0.0
+    } else {
+        sum / n as f64
+    }
+}
+
+impl ServeStats {
+    pub fn new() -> ServeStats {
+        ServeStats::default()
+    }
+
+    /// Record one executed batch: who was hit, how full the batch was,
+    /// how many adapter groups it split into, and how long it took.
+    pub fn record_batch(
+        &mut self,
+        adapters: &[Option<&str>],
+        n_groups: usize,
+        max_batch: usize,
+        secs: f64,
+    ) {
+        self.batches += 1;
+        self.requests += adapters.len();
+        for a in adapters {
+            let key = a.unwrap_or(BASE_KEY).to_string();
+            *self.hits.entry(key).or_insert(0) += 1;
+        }
+        push_windowed(&mut self.group_counts, n_groups);
+        push_windowed(&mut self.occupancies, adapters.len() as f64 / max_batch.max(1) as f64);
+        push_windowed(&mut self.latencies_s, secs);
+        self.total_s += secs;
+    }
+
+    pub fn reset(&mut self) {
+        *self = ServeStats::default();
+    }
+
+    pub fn summary(&self) -> ServeSummary {
+        let (p50_s, p95_s) = if self.latencies_s.is_empty() {
+            (0.0, 0.0)
+        } else {
+            let s = BenchStats::from_samples(self.latencies_s.iter().copied().collect());
+            (s.p50, s.p95)
+        };
+        ServeSummary {
+            batches: self.batches,
+            requests: self.requests,
+            mean_occupancy: mean_of(self.occupancies.iter().copied()),
+            mean_groups: mean_of(self.group_counts.iter().map(|&g| g as f64)),
+            p50_s,
+            p95_s,
+            total_s: self.total_s,
+            req_per_s: if self.total_s > 0.0 {
+                self.requests as f64 / self.total_s
+            } else {
+                0.0
+            },
+        }
+    }
+
+    /// JSON export (the `serve` CLI and the throughput bench write this
+    /// through the `metrics` sinks).
+    pub fn to_json(&self) -> Json {
+        let s = self.summary();
+        let mut o = Json::obj();
+        o.set("batches", jnum(s.batches as f64));
+        o.set("requests", jnum(s.requests as f64));
+        o.set("mean_occupancy", jnum(s.mean_occupancy));
+        o.set("mean_groups", jnum(s.mean_groups));
+        o.set("p50_ms", jnum(s.p50_s * 1e3));
+        o.set("p95_ms", jnum(s.p95_s * 1e3));
+        o.set("total_s", jnum(s.total_s));
+        o.set("req_per_s", jnum(s.req_per_s));
+        let mut hits = Json::obj();
+        for (k, v) in &self.hits {
+            hits.set(k, jnum(*v as f64));
+        }
+        o.set("hits", hits);
+        o
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_summarize() {
+        let mut st = ServeStats::new();
+        st.record_batch(&[Some("a"), Some("a"), None], 2, 4, 0.010);
+        st.record_batch(&[Some("b")], 1, 4, 0.030);
+        assert_eq!(st.batches, 2);
+        assert_eq!(st.requests, 4);
+        assert_eq!(st.hits["a"], 2);
+        assert_eq!(st.hits["b"], 1);
+        assert_eq!(st.hits[BASE_KEY], 1);
+        let s = st.summary();
+        assert_eq!(s.requests, 4);
+        assert!((s.mean_occupancy - (0.75 + 0.25) / 2.0).abs() < 1e-12);
+        assert!((s.mean_groups - 1.5).abs() < 1e-12);
+        assert!(s.p50_s > 0.0 && s.p95_s >= s.p50_s);
+        assert!((s.total_s - 0.040).abs() < 1e-12);
+        assert!(s.req_per_s > 0.0);
+    }
+
+    #[test]
+    fn empty_stats_do_not_divide_by_zero() {
+        let st = ServeStats::new();
+        let s = st.summary();
+        assert_eq!(s.batches, 0);
+        assert_eq!(s.p50_s, 0.0);
+        assert_eq!(s.req_per_s, 0.0);
+        // JSON renders without panicking
+        let j = st.to_json();
+        assert!(j.to_string().contains("\"requests\""));
+    }
+
+    #[test]
+    fn samples_are_windowed_but_totals_stay_exact() {
+        let mut st = ServeStats::new();
+        for _ in 0..(SAMPLE_WINDOW + 10) {
+            st.record_batch(&[Some("a")], 1, 1, 0.001);
+        }
+        assert_eq!(st.batches, SAMPLE_WINDOW + 10);
+        assert_eq!(st.requests, SAMPLE_WINDOW + 10);
+        assert_eq!(st.hits["a"], SAMPLE_WINDOW + 10);
+        assert_eq!(st.latencies_s.len(), SAMPLE_WINDOW);
+        assert_eq!(st.occupancies.len(), SAMPLE_WINDOW);
+        assert_eq!(st.group_counts.len(), SAMPLE_WINDOW);
+        let s = st.summary();
+        assert!((s.total_s - 0.001 * (SAMPLE_WINDOW + 10) as f64).abs() < 1e-9);
+        assert!(s.req_per_s > 0.0);
+    }
+
+    #[test]
+    fn json_has_latency_and_hits() {
+        let mut st = ServeStats::new();
+        st.record_batch(&[Some("t0")], 1, 8, 0.002);
+        let text = st.to_json().to_string();
+        assert!(text.contains("\"p95_ms\"") && text.contains("\"t0\""), "{text}");
+    }
+}

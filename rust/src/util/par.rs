@@ -1,10 +1,11 @@
 //! Scoped-thread data parallelism (rayon is not in the offline vendor set).
 //!
-//! `par_chunks_mut` splits a mutable slice into contiguous chunks and runs a
+//! `par_rows_mut` splits a mutable slice into contiguous chunks and runs a
 //! closure on each chunk on its own OS thread via `std::thread::scope`;
-//! `par_for` distributes an index range. Threads are cheap at our scale
-//! (a handful of spawns per GEMM call on matrices ≥256²; smaller work runs
-//! inline).
+//! `par_for` distributes an index range; `par_map` is a deterministic
+//! parallel map (order-stable output, used by the serving router for
+//! per-adapter-group dispatch). Threads are cheap at our scale (a handful
+//! of spawns per GEMM call on matrices ≥256²; smaller work runs inline).
 
 /// Number of worker threads to use (cores, overridable with PISSA_THREADS).
 pub fn num_threads() -> usize {
@@ -40,6 +41,42 @@ where
             s.spawn(move || f(lo, hi));
         }
     });
+}
+
+/// Parallel `(0..n).map(f)` with a deterministic result order. Each worker
+/// fills a disjoint slice of the output, so no locking and no reordering:
+/// the result is identical for any `PISSA_THREADS`, provided `f` itself is
+/// deterministic per index (the fixed-order reduction contract the serving
+/// path relies on). Below `2 * min_grain` items everything runs inline.
+pub fn par_map<U, F>(n: usize, min_grain: usize, f: F) -> Vec<U>
+where
+    U: Send,
+    F: Fn(usize) -> U + Sync,
+{
+    let workers = num_threads().min(n / min_grain.max(1)).max(1);
+    if workers <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let mut out: Vec<Option<U>> = std::iter::repeat_with(|| None).take(n).collect();
+    let chunk = n.div_ceil(workers);
+    std::thread::scope(|s| {
+        let mut rest = out.as_mut_slice();
+        let mut lo = 0;
+        while lo < n {
+            let take = chunk.min(n - lo);
+            let (head, tail) = rest.split_at_mut(take);
+            rest = tail;
+            let f = &f;
+            let base = lo;
+            s.spawn(move || {
+                for (off, slot) in head.iter_mut().enumerate() {
+                    *slot = Some(f(base + off));
+                }
+            });
+            lo += take;
+        }
+    });
+    out.into_iter().map(|o| o.expect("par_map worker filled every slot")).collect()
 }
 
 /// Parallel iteration over mutable, equally-sized row chunks of a slice.
@@ -93,6 +130,17 @@ mod tests {
             total.fetch_add(hi - lo, Ordering::Relaxed);
         });
         assert_eq!(total.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn par_map_preserves_order() {
+        let v = par_map(100, 4, |i| i * i);
+        assert_eq!(v, (0..100).map(|i| i * i).collect::<Vec<_>>());
+        // small inputs run inline and still return every element
+        let w = par_map(3, 100, |i| i + 1);
+        assert_eq!(w, vec![1, 2, 3]);
+        let e: Vec<usize> = par_map(0, 1, |i| i);
+        assert!(e.is_empty());
     }
 
     #[test]

@@ -1,0 +1,124 @@
+//! Thread-count determinism: GEMM and serving results must be
+//! BIT-IDENTICAL under `PISSA_THREADS=1` and `PISSA_THREADS=8`.
+//!
+//! This locks in the fixed-order reduction contract of `util::par`:
+//! parallelism only ever partitions independent output regions (rows,
+//! column panels, adapter groups); every accumulated element is summed in
+//! the same k-order regardless of how the partitions land on threads. CI
+//! additionally runs the whole suite under both thread counts.
+//!
+//! The tests in this binary mutate the process environment, so they
+//! serialize on a shared lock (cargo runs `#[test]`s concurrently).
+
+use pissa::adapter::{AdapterEngine, AdapterSpec};
+use pissa::linalg::{matmul, matmul_nt, matmul_tn, Mat};
+use pissa::model::BaseModel;
+use pissa::runtime::ConfigInfo;
+use pissa::serve::{drift_factors, Request, ServeConfig, ServeStrategy, Server};
+use pissa::util::rng::Rng;
+use std::sync::Mutex;
+
+static ENV_LOCK: Mutex<()> = Mutex::new(());
+
+/// Run `f` under a pinned PISSA_THREADS value, restoring the previous
+/// setting afterwards. Callers must hold ENV_LOCK.
+fn with_threads<T>(n: usize, f: impl FnOnce() -> T) -> T {
+    let prev = std::env::var("PISSA_THREADS").ok();
+    std::env::set_var("PISSA_THREADS", n.to_string());
+    let out = f();
+    match prev {
+        Some(v) => std::env::set_var("PISSA_THREADS", v),
+        None => std::env::remove_var("PISSA_THREADS"),
+    }
+    out
+}
+
+#[test]
+fn gemm_kernels_bit_identical_across_thread_counts() {
+    let _guard = ENV_LOCK.lock().unwrap();
+    let mut rng = Rng::new(1);
+    // Shapes chosen to actually hit the parallel paths: the blocked
+    // micro-kernel (rows ≥ 2·16), the nt row sweep, and the tn panel
+    // kernel (multiple column panels).
+    let a = Mat::randn(129, 70, 0.0, 1.0, &mut rng);
+    let b = Mat::randn(70, 300, 0.0, 1.0, &mut rng);
+    let at = a.t();
+    let bt = b.t();
+    let skinny = Mat::randn(70, 24, 0.0, 1.0, &mut rng); // k=70 panel operand
+
+    let run = || {
+        (
+            matmul(&a, &b),
+            matmul_nt(&a, &bt),
+            matmul_tn(&at, &b),     // m=129 > cap: wide fallback path
+            matmul_tn(&skinny, &b), // 24×300: panel kernel, 3 column panels
+        )
+    };
+    let t1 = with_threads(1, run);
+    let t8 = with_threads(8, run);
+    assert_eq!(t1.0.data, t8.0.data, "matmul drifted across thread counts");
+    assert_eq!(t1.1.data, t8.1.data, "matmul_nt drifted across thread counts");
+    assert_eq!(t1.2.data, t8.2.data, "matmul_tn (wide fallback) drifted");
+    assert_eq!(t1.3.data, t8.3.data, "matmul_tn (panel kernel) drifted");
+}
+
+#[test]
+fn serving_bit_identical_across_thread_counts() {
+    let _guard = ENV_LOCK.lock().unwrap();
+    let cfg = ConfigInfo {
+        name: "determinism".into(),
+        kind: "decoder".into(),
+        vocab: 64,
+        d_model: 48,
+        n_layers: 1,
+        n_heads: 2,
+        d_ff: 64,
+        seq_len: 8,
+        batch: 4,
+        eval_batch: 2,
+        n_classes: 0,
+        ranks: vec![4],
+    };
+    // Build the engine once (under a pinned thread count, though attach
+    // determinism is not what's under test here).
+    let (engine, requests) = with_threads(1, || {
+        let mut rng = Rng::new(5);
+        let base = BaseModel::random(&cfg, &mut rng);
+        let mut engine = AdapterEngine::new(base);
+        for name in ["t0", "t1", "t2", "t3"] {
+            engine.attach(name, AdapterSpec::pissa(4).targets(&["q"]), &mut rng).unwrap();
+            drift_factors(&mut engine, name, "q", 0.05, &mut rng).unwrap();
+        }
+        let requests: Vec<Request> = (0..64)
+            .map(|i| {
+                let mut x = vec![0.0f32; 48];
+                rng.fill_normal(&mut x, 0.0, 1.0);
+                if i % 5 == 4 {
+                    Request::base(x)
+                } else {
+                    Request::new(["t0", "t1", "t2", "t3"][i % 4], x)
+                }
+            })
+            .collect();
+        (engine, requests)
+    });
+
+    for strategy in ServeStrategy::all() {
+        let run = || {
+            let mut server = Server::new(
+                &engine,
+                ServeConfig::new("q").strategy(strategy).max_batch(64),
+            )
+            .unwrap();
+            server.forward(&requests).unwrap()
+        };
+        let y1 = with_threads(1, run);
+        let y8 = with_threads(8, run);
+        assert_eq!(
+            y1.data,
+            y8.data,
+            "strategy {} drifted across thread counts",
+            strategy.name()
+        );
+    }
+}

@@ -1,0 +1,69 @@
+//! Golden-file checkpoint tests: the `PISSACKP` loader must keep reading
+//! STABLE on-disk artifacts, not just files it wrote itself in-process.
+//!
+//! `rust/tests/fixtures/golden_v1.ckpt` is a hand-crafted v1 container
+//! (mats + blobs, no spec entry); `golden_v2.ckpt` is a v2 container with
+//! a spec entry plus two forward-compat probes (an unknown reserved
+//! `__future__` entry and an unknown kind) that the loader must skip.
+//! Both byte streams are checked in — any format regression breaks here
+//! first, before it breaks someone's saved adapter.
+
+use pissa::adapter::{AdapterSpec, Checkpoint};
+use std::path::PathBuf;
+
+fn fixture(name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("rust/tests/fixtures").join(name)
+}
+
+#[test]
+fn golden_v1_loads_with_expected_contents() {
+    let ckp = Checkpoint::load(&fixture("golden_v1.ckpt")).unwrap();
+    assert_eq!(ckp.spec, None, "v1 files carry no spec");
+    assert_eq!(ckp.mats.len(), 2);
+    let a = ckp.get("a_q").unwrap();
+    assert_eq!((a.rows, a.cols), (2, 3));
+    assert_eq!(a.data, vec![1.0, 2.0, 3.0, -0.5, 0.25, 8.0]);
+    let b = ckp.get("b_q").unwrap();
+    assert_eq!((b.rows, b.cols), (3, 2));
+    assert_eq!(b.data, vec![0.5, -1.5, 2.5, 4.0, -8.25, 0.125]);
+    assert_eq!(ckp.blobs["meta"], b"{\"rank\":4}".to_vec());
+}
+
+#[test]
+fn golden_v2_loads_spec_and_skips_unknown_entries() {
+    let ckp = Checkpoint::load(&fixture("golden_v2.ckpt")).unwrap();
+    assert_eq!(
+        ckp.spec,
+        Some(AdapterSpec::pissa(2).targets(&["q", "v"])),
+        "v2 spec entry must parse to the recorded AdapterSpec"
+    );
+    // the unknown-kind entry and the reserved __future__ blob are skipped
+    assert_eq!(ckp.mats.len(), 1, "unknown kinds must be skipped, not loaded");
+    assert_eq!(ckp.blobs.len(), 1, "reserved entries must be skipped");
+    let m = ckp.get("factors.a").unwrap();
+    assert_eq!((m.rows, m.cols), (2, 2));
+    assert_eq!(m.data, vec![0.5, -1.5, 2.5, 4.0]);
+    assert_eq!(ckp.blobs["note"], b"golden".to_vec());
+}
+
+#[test]
+fn golden_files_roundtrip_through_save_and_load() {
+    let dir = std::env::temp_dir().join("pissa_golden_roundtrip");
+    for name in ["golden_v1.ckpt", "golden_v2.ckpt"] {
+        let ckp = Checkpoint::load(&fixture(name)).unwrap();
+        let out = dir.join(name);
+        ckp.save(&out).unwrap();
+        let back = Checkpoint::load(&out).unwrap();
+        assert_eq!(back.spec, ckp.spec, "{name}: spec changed across a round-trip");
+        assert_eq!(
+            back.mats.keys().collect::<Vec<_>>(),
+            ckp.mats.keys().collect::<Vec<_>>()
+        );
+        for (k, m) in &ckp.mats {
+            assert_eq!(back.mats[k].data, m.data, "{name}: mat '{k}' changed");
+            assert_eq!((back.mats[k].rows, back.mats[k].cols), (m.rows, m.cols));
+        }
+        assert_eq!(back.blobs, ckp.blobs, "{name}: blobs changed across a round-trip");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,0 +1,229 @@
+//! Serving equivalence property tests.
+//!
+//! Contract: for random bases, every serving strategy, rank ∈ {1, 4, 16},
+//! and batch ∈ {1, 7, 64}, the batched server output equals the
+//! merged-dense forward (`engine.effective_weight_of` row by row) within
+//! 1e-4 relative Frobenius error — including mixed-adapter batches and
+//! the no-adapter (base-only) path. Plus the edge-case hardening set:
+//! empty batches, unknown adapters, and over-rank configs are typed
+//! errors, never panics.
+
+use pissa::adapter::{AdapterEngine, AdapterSpec};
+use pissa::linalg::{vecmat, Mat};
+use pissa::model::BaseModel;
+use pissa::runtime::ConfigInfo;
+use pissa::serve::{drift_factors, Request, ServeConfig, ServeError, ServeStrategy, Server};
+use pissa::util::rng::Rng;
+
+const MODULE: &str = "q";
+
+fn cfg(d_model: usize) -> ConfigInfo {
+    ConfigInfo {
+        name: "serve-equiv".into(),
+        kind: "decoder".into(),
+        vocab: 64,
+        d_model,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff: d_model + 8,
+        seq_len: 8,
+        batch: 4,
+        eval_batch: 2,
+        n_classes: 0,
+        ranks: vec![4],
+    }
+}
+
+/// Engine with one drifted PiSSA adapter and one drifted LoRA adapter at
+/// `rank`, plus an un-drifted PiSSA adapter (its delta must be ~zero).
+fn build_engine(rank: usize, seed: u64) -> (AdapterEngine, Vec<String>, Rng) {
+    let mut rng = Rng::new(seed);
+    let base = BaseModel::random(&cfg(32), &mut rng);
+    let mut eng = AdapterEngine::new(base);
+    eng.attach("pissa-t", AdapterSpec::pissa(rank).targets(&[MODULE, "v"]), &mut rng)
+        .unwrap();
+    drift_factors(&mut eng, "pissa-t", MODULE, 0.05, &mut rng).unwrap();
+    eng.attach("lora-t", AdapterSpec::lora(rank), &mut rng).unwrap();
+    drift_factors(&mut eng, "lora-t", MODULE, 0.05, &mut rng).unwrap();
+    eng.attach("pissa-init", AdapterSpec::pissa(rank).targets(&[MODULE]), &mut rng)
+        .unwrap();
+    let names = vec!["pissa-t".to_string(), "lora-t".to_string(), "pissa-init".to_string()];
+    (eng, names, rng)
+}
+
+/// Ground truth: per request, materialize the adapter's effective dense
+/// weight from the engine and apply it to the input row.
+fn reference(engine: &AdapterEngine, layer: usize, requests: &[Request]) -> Mat {
+    let mut y = Mat::zeros(requests.len(), 32);
+    for (i, r) in requests.iter().enumerate() {
+        let w = match &r.adapter {
+            Some(name) => engine.effective_weight_of(name, MODULE, layer).unwrap(),
+            None => engine.base_weight(MODULE, layer),
+        };
+        y.row_mut(i).copy_from_slice(&vecmat(&r.x, &w));
+    }
+    y
+}
+
+fn mixed_batch(names: &[String], size: usize, rng: &mut Rng) -> Vec<Request> {
+    (0..size)
+        .map(|i| {
+            let mut x = vec![0.0f32; 32];
+            rng.fill_normal(&mut x, 0.0, 1.0);
+            // Deterministic mix: every 4th request is base-only, the rest
+            // cycle through the adapters.
+            if i % 4 == 3 {
+                Request::base(x)
+            } else {
+                Request::new(&names[i % names.len()], x)
+            }
+        })
+        .collect()
+}
+
+fn rel_fro(a: &Mat, b: &Mat) -> f64 {
+    a.sub(b).fro() / b.fro().max(1e-30)
+}
+
+#[test]
+fn all_strategies_match_merged_dense_forward() {
+    for &rank in &[1usize, 4, 16] {
+        let (engine, names, mut rng) = build_engine(rank, 100 + rank as u64);
+        for layer in [0usize, 1] {
+            for &batch in &[1usize, 7, 64] {
+                let requests = mixed_batch(&names, batch, &mut rng);
+                let want = reference(&engine, layer, &requests);
+                for strategy in ServeStrategy::all() {
+                    let mut server = Server::new(
+                        &engine,
+                        ServeConfig::new(MODULE).layer(layer).strategy(strategy).max_batch(64),
+                    )
+                    .unwrap();
+                    let got = server.forward(&requests).unwrap();
+                    assert_eq!((got.rows, got.cols), (batch, 32));
+                    let err = rel_fro(&got, &want);
+                    assert!(
+                        err < 1e-4,
+                        "rank={rank} layer={layer} batch={batch} strategy={}: rel fro \
+                         err {err:.3e}",
+                        strategy.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn base_only_batch_matches_dense_base() {
+    let (engine, _, mut rng) = build_engine(4, 7);
+    let requests: Vec<Request> = (0..9)
+        .map(|_| {
+            let mut x = vec![0.0f32; 32];
+            rng.fill_normal(&mut x, 0.0, 1.0);
+            Request::base(x)
+        })
+        .collect();
+    let want = reference(&engine, 0, &requests);
+    for strategy in ServeStrategy::all() {
+        let mut server =
+            Server::new(&engine, ServeConfig::new(MODULE).strategy(strategy)).unwrap();
+        let got = server.forward(&requests).unwrap();
+        let err = rel_fro(&got, &want);
+        assert!(err < 1e-5, "{}: base-only err {err:.3e}", strategy.name());
+    }
+}
+
+#[test]
+fn single_adapter_batch_matches_merged_weight() {
+    // One group, whole batch under one drifted adapter: the fused
+    // correction path must agree with engine merge (effective weight).
+    let (engine, _, mut rng) = build_engine(4, 8);
+    let requests: Vec<Request> = (0..16)
+        .map(|_| {
+            let mut x = vec![0.0f32; 32];
+            rng.fill_normal(&mut x, 0.0, 1.0);
+            Request::new("pissa-t", x)
+        })
+        .collect();
+    let want = reference(&engine, 1, &requests);
+    let mut server = Server::new(&engine, ServeConfig::new(MODULE).layer(1)).unwrap();
+    let got = server.forward(&requests).unwrap();
+    assert!(rel_fro(&got, &want) < 1e-4);
+}
+
+#[test]
+fn undrifted_pissa_adapter_serves_the_original_weight() {
+    // At init the exactness invariant pins effective == W, so serving the
+    // un-drifted adapter must equal serving the base.
+    let (engine, _, mut rng) = build_engine(4, 9);
+    let mut x = vec![0.0f32; 32];
+    rng.fill_normal(&mut x, 0.0, 1.0);
+    let mut server = Server::new(&engine, ServeConfig::new(MODULE)).unwrap();
+    let via_adapter = server.forward(&[Request::new("pissa-init", x.clone())]).unwrap();
+    let via_base = server.forward(&[Request::base(x)]).unwrap();
+    assert!(rel_fro(&via_adapter, &via_base) < 1e-4);
+}
+
+// ---- edge-case hardening ---------------------------------------------
+
+#[test]
+fn empty_batch_is_ok_and_empty() {
+    let (engine, _, _) = build_engine(4, 10);
+    for strategy in ServeStrategy::all() {
+        let mut server =
+            Server::new(&engine, ServeConfig::new(MODULE).strategy(strategy)).unwrap();
+        let y = server.forward(&[]).unwrap();
+        assert_eq!((y.rows, y.cols), (0, 32));
+    }
+}
+
+#[test]
+fn unknown_adapter_is_typed_not_a_panic() {
+    let (engine, _, _) = build_engine(4, 11);
+    let mut server = Server::new(&engine, ServeConfig::new(MODULE)).unwrap();
+    let err = server.forward(&[Request::new("nope", vec![0.0; 32])]).unwrap_err();
+    let typed = err.downcast_ref::<ServeError>();
+    assert!(
+        matches!(typed, Some(ServeError::UnknownAdapter { name, .. }) if name == "nope"),
+        "got {err:?}"
+    );
+}
+
+#[test]
+fn over_rank_adapter_rejected_with_clear_message() {
+    let mut rng = Rng::new(12);
+    let base = BaseModel::random(&cfg(32), &mut rng);
+    let mut eng = AdapterEngine::new(base);
+    // LoRA attaches at any rank (A·B = 0); serving must refuse 48 > 32.
+    eng.attach("fat", AdapterSpec::lora(48).targets(&[MODULE]), &mut rng).unwrap();
+    let err = Server::new(&eng, ServeConfig::new(MODULE)).unwrap_err();
+    assert!(
+        matches!(
+            err.downcast_ref::<ServeError>(),
+            Some(ServeError::RankTooLarge { rank: 48, .. })
+        ),
+        "got {err:?}"
+    );
+    assert!(err.to_string().contains("min(m, n)"), "message: {err}");
+
+    // The escape hatch the message names: merged/dense serving accepts
+    // the over-rank adapter and still matches the engine's weights.
+    let mut x = vec![0.0f32; 32];
+    rng.fill_normal(&mut x, 0.0, 1.0);
+    let w = eng.effective_weight_of("fat", MODULE, 0).unwrap();
+    let want = vecmat(&x, &w);
+    for strategy in [ServeStrategy::DensePerAdapter, ServeStrategy::MergePerRequest] {
+        let mut server =
+            Server::new(&eng, ServeConfig::new(MODULE).strategy(strategy)).unwrap();
+        let got = server.forward(&[Request::new("fat", x.clone())]).unwrap();
+        let err: f64 = got
+            .row(0)
+            .iter()
+            .zip(&want)
+            .map(|(a, b)| ((a - b) as f64).powi(2))
+            .sum::<f64>()
+            .sqrt();
+        assert!(err < 1e-4, "{}: over-rank dense serve err {err:.3e}", strategy.name());
+    }
+}
