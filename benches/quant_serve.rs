@@ -1,0 +1,203 @@
+//! §QPiSSA Serving — quantized-base serving: fused NF4 dequant-GEMM vs
+//! dequantize-once-dense vs the fp32 fused path.
+//!
+//! The paper's deployment claim (§4): the frozen base can stay resident
+//! in blockwise NF4 with the adapters in fp32. This bench quantifies the
+//! serving-side trade on the standard mixed-tenant workload of
+//! `benches/serve_throughput.rs` (768×768 base, 16 rank-16 adapters,
+//! 64-request mixed batches), three strategies over the SAME engine:
+//!
+//!   fused          PR-2 fp32 path: dense base resident (m·n·4 bytes)
+//!   dequant-dense  quantize → dequantize ONCE at construction, then
+//!                  serve dense (fp32 residency, NF4-valued base)
+//!   fused-quant    NF4 base resident, streamed through the dequant-GEMM
+//!                  panel kernel — the dense base never exists
+//!
+//! Emits one `BENCH {json}` line per strategy (throughput + resident
+//! base bytes) plus a summary line. Targets: fused-quant resident bytes
+//! ≤ 0.35× the fp32 fused path while staying within 2× its latency; and
+//! fused-quant ≡ dequant-dense bit-for-bit (asserted on a probe batch).
+//!
+//! Quick mode (default) trims batch count, not the workload shape; set
+//! PISSA_BENCH_FULL=1 for more timed batches.
+
+mod common;
+
+use pissa::adapter::{AdapterEngine, AdapterSpec};
+use pissa::metrics::write_labeled_csv;
+use pissa::model::BaseModel;
+use pissa::runtime::ConfigInfo;
+use pissa::serve::{drift_factors, Request, ServeConfig, ServeStrategy, Server};
+use pissa::util::json::{jnum, Json};
+use pissa::util::rng::Rng;
+
+const DIM: usize = 768;
+const N_ADAPTERS: usize = 16;
+const RANK: usize = 16;
+const BATCH: usize = 64;
+const MODULE: &str = "q";
+const BASE_FRAC: f64 = 0.125;
+
+fn workload(names: &[String], batches: usize, rng: &mut Rng) -> Vec<Vec<Request>> {
+    (0..batches)
+        .map(|_| {
+            (0..BATCH)
+                .map(|_| {
+                    let mut x = vec![0.0f32; DIM];
+                    rng.fill_normal(&mut x, 0.0, 1.0);
+                    if rng.uniform() < BASE_FRAC {
+                        Request::base(x)
+                    } else {
+                        Request::new(rng.choice(names), x)
+                    }
+                })
+                .collect()
+        })
+        .collect()
+}
+
+fn main() -> anyhow::Result<()> {
+    common::banner(
+        "§QPiSSA Serving",
+        &format!(
+            "fused NF4 dequant-GEMM vs dequant-once vs fp32 fused — {DIM}x{DIM} base, \
+             {N_ADAPTERS} adapters, rank {RANK}, batch {BATCH}"
+        ),
+    );
+    let full = common::full_mode();
+    let mut rng = Rng::new(11);
+
+    let cfg = ConfigInfo {
+        name: "quant-serve-bench".into(),
+        kind: "decoder".into(),
+        vocab: 64,
+        d_model: DIM,
+        n_layers: 1,
+        n_heads: 2,
+        d_ff: 64,
+        seq_len: 8,
+        batch: 8,
+        eval_batch: 4,
+        n_classes: 0,
+        ranks: vec![RANK],
+    };
+    eprintln!("[setup] base model + {N_ADAPTERS} pissa:rank={RANK} adapters (SVD init)…");
+    let base = BaseModel::random(&cfg, &mut rng);
+    let mut engine = AdapterEngine::new(base);
+    let names: Vec<String> = (0..N_ADAPTERS).map(|i| format!("tenant{i:02}")).collect();
+    for name in &names {
+        engine.attach(name, AdapterSpec::pissa(RANK).targets(&[MODULE]), &mut rng)?;
+        drift_factors(&mut engine, name, MODULE, 0.05, &mut rng)?;
+    }
+
+    // Probe batch: fused-quant must equal dequant-once-dense bit for bit
+    // (same NF4 snapshot, same correction path, same accumulation order —
+    // the DequantGemm contract).
+    {
+        let mut probe_rng = Rng::new(99);
+        let probe_batches = workload(&names, 1, &mut probe_rng);
+        let probe = &probe_batches[0];
+        let mut fq = Server::new(
+            &engine,
+            ServeConfig::new(MODULE).strategy(ServeStrategy::FusedQuant).max_batch(BATCH),
+        )?;
+        let mut dd = Server::new(
+            &engine,
+            ServeConfig::new(MODULE).strategy(ServeStrategy::DequantDense).max_batch(BATCH),
+        )?;
+        let (yq, yd) = (fq.forward(probe)?, dd.forward(probe)?);
+        anyhow::ensure!(
+            yq.data == yd.data,
+            "fused-quant and dequant-dense diverged on the probe batch"
+        );
+        eprintln!("[probe] fused-quant == dequant-dense bit-for-bit on a {BATCH}-batch ✓");
+    }
+
+    println!(
+        "\n{:16} {:>10} {:>10} {:>10} {:>14} {:>10}",
+        "strategy", "p50 ms", "p95 ms", "req/s", "base bytes", "bytes x"
+    );
+    let timed = if full { 40 } else { 8 };
+    let order = [ServeStrategy::Fused, ServeStrategy::DequantDense, ServeStrategy::FusedQuant];
+    let mut rows: Vec<(String, Vec<f64>)> = Vec::new();
+    let mut req_per_s = std::collections::BTreeMap::new();
+    let mut p50_ms = std::collections::BTreeMap::new();
+    let mut resident = std::collections::BTreeMap::new();
+    for strategy in order {
+        let serve_cfg = ServeConfig::new(MODULE).strategy(strategy).max_batch(BATCH);
+        let mut server = Server::new(&engine, serve_cfg)?;
+        let bytes = server.base_resident_bytes();
+        let mut wl_rng = Rng::new(77); // identical request stream per strategy
+        let all = workload(&names, timed + 1, &mut wl_rng);
+        server.forward(&all[0])?; // warmup (page in the snapshot)
+        server.reset_stats();
+        for batch in &all[1..] {
+            server.forward(batch)?;
+        }
+        let s = server.stats().summary();
+        req_per_s.insert(strategy.name(), s.req_per_s);
+        p50_ms.insert(strategy.name(), s.p50_s * 1e3);
+        resident.insert(strategy.name(), bytes);
+        let dense_bytes = DIM * DIM * 4;
+        println!(
+            "{:16} {:>10.3} {:>10.3} {:>10.0} {:>14} {:>10.3}",
+            strategy.name(),
+            s.p50_s * 1e3,
+            s.p95_s * 1e3,
+            s.req_per_s,
+            bytes,
+            bytes as f64 / dense_bytes as f64,
+        );
+        let mut j = Json::obj();
+        j.set("bench", Json::Str("quant_serve".into()));
+        j.set("strategy", Json::Str(strategy.name().into()));
+        j.set("dim", jnum(DIM as f64));
+        j.set("adapters", jnum(N_ADAPTERS as f64));
+        j.set("rank", jnum(RANK as f64));
+        j.set("batch", jnum(BATCH as f64));
+        j.set("batches", jnum(s.batches as f64));
+        j.set("p50_ms", jnum(s.p50_s * 1e3));
+        j.set("p95_ms", jnum(s.p95_s * 1e3));
+        j.set("req_per_s", jnum(s.req_per_s));
+        j.set("resident_base_bytes", jnum(bytes as f64));
+        println!("BENCH {j}");
+        rows.push((
+            strategy.name().to_string(),
+            vec![s.p50_s * 1e3, s.p95_s * 1e3, s.req_per_s, bytes as f64],
+        ));
+    }
+
+    // Acceptance: fused-quant keeps ≤ 0.35× the fp32 fused base bytes
+    // while staying within 2× its latency (p50).
+    let bytes_ratio = resident["fused-quant"] as f64 / resident["fused"] as f64;
+    let latency_ratio = if p50_ms["fused"] > 0.0 {
+        p50_ms["fused-quant"] / p50_ms["fused"]
+    } else {
+        f64::INFINITY
+    };
+    let bytes_ok = bytes_ratio <= 0.35;
+    let latency_ok = latency_ratio <= 2.0;
+    println!(
+        "\nfused-quant vs fused: {bytes_ratio:.3}x base bytes (target <= 0.35x: {}), \
+         {latency_ratio:.2}x p50 latency (target <= 2x: {})",
+        if bytes_ok { "PASS" } else { "FAIL" },
+        if latency_ok { "PASS" } else { "FAIL" },
+    );
+    let mut j = Json::obj();
+    j.set("bench", Json::Str("quant_serve_summary".into()));
+    j.set("bytes_ratio", jnum(bytes_ratio));
+    j.set("bytes_target", jnum(0.35));
+    j.set("latency_ratio", jnum(latency_ratio));
+    j.set("latency_target", jnum(2.0));
+    j.set("pass", Json::Bool(bytes_ok && latency_ok));
+    println!("BENCH {j}");
+
+    let out = common::results_dir().join("quant_serve.csv");
+    write_labeled_csv(
+        &out,
+        &["strategy", "p50_ms", "p95_ms", "req_per_s", "resident_base_bytes"],
+        &rows,
+    )?;
+    println!("(rows -> {}; methodology in EXPERIMENTS.md §QPiSSA Serving)", out.display());
+    Ok(())
+}

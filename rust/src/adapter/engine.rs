@@ -100,6 +100,14 @@ impl AdapterEngine {
         self.base.linears[&format!("base_{module}")].layer(layer)
     }
 
+    /// Blockwise-NF4 snapshot of the base weight — what the
+    /// quantized-base serving strategies keep resident instead of the
+    /// dense matrix (§4's QPiSSA deployment trade: ~0.14× the bytes, at
+    /// the NF4 round-trip error the paper bounds in Table 3).
+    pub fn quant_base_weight(&self, module: &str, layer: usize) -> crate::quant::Nf4Tensor {
+        crate::quant::quantize(&self.base_weight(module, layer))
+    }
+
     /// Initialize and register an adapter from a spec. The first attached
     /// adapter becomes active. Every layer's init is validated against
     /// the exactness invariant before the adapter is accepted.

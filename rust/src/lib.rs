@@ -66,7 +66,12 @@
 //! shared dense `X·W` plus two skinny GEMMs per adapter group — `ΔW` is
 //! never materialized (`pissa serve` drives a synthetic mixed-adapter
 //! workload; `benches/serve_throughput.rs` measures it against the
-//! merge-per-request and dense-per-adapter baselines).
+//! merge-per-request and dense-per-adapter baselines). Quantized
+//! (QPiSSA/QLoRA/LoftQ) adapters serve through the `fused-quant`
+//! strategy: the shared base stays resident as blockwise NF4 and is
+//! streamed through [`linalg::dequant_matmul`] — `pissa serve
+//! --quantized` end-to-end, `benches/quant_serve.rs` for the
+//! bytes/latency trade.
 
 pub mod adapter;
 pub mod coordinator;

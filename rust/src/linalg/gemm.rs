@@ -10,12 +10,36 @@
 //! Benchmarked and tuned in `benches/perf_micro.rs`; see EXPERIMENTS.md §Perf.
 
 use super::mat::Mat;
+use crate::quant::nf4::Nf4Tensor;
 use crate::util::par::par_rows_mut;
 
 /// Cache-blocking parameters (tuned on the image's CPU; see §Perf).
 const MC: usize = 64; // rows of A per macro-block
 const KC: usize = 256; // depth per macro-block
 const NR: usize = 8; // register tile width
+
+/// The shared inner micro-kernel of [`matmul_into`] and
+/// [`dequant_matmul_panel`]: `crow += av * brow` as an 8-wide
+/// strip-mined AXPY (LLVM vectorizes it). Both GEMM paths MUST go
+/// through this one routine — one multiply-add per element, left to
+/// right — so the dequant-GEMM's bit-identical-to-dense contract is
+/// pinned structurally, not by two copies staying in sync.
+#[inline]
+fn axpy_row(crow: &mut [f32], av: f32, brow: &[f32]) {
+    let n = crow.len();
+    let strips = n / NR;
+    for s in 0..strips {
+        let j0 = s * NR;
+        let cdst = &mut crow[j0..j0 + NR];
+        let bsrc = &brow[j0..j0 + NR];
+        for q in 0..NR {
+            cdst[q] += av * bsrc[q];
+        }
+    }
+    for j in strips * NR..n {
+        crow[j] += av * brow[j];
+    }
+}
 
 /// C = A · B. Panics on dimension mismatch.
 pub fn matmul(a: &Mat, b: &Mat) -> Mat {
@@ -123,6 +147,66 @@ pub fn matmul_tn(at: &Mat, b: &Mat) -> Mat {
     c
 }
 
+/// Rows of the NF4 operand decoded per streaming panel of
+/// [`dequant_matmul`]. At serving widths (n ≤ a few thousand) a panel is
+/// a few hundred KiB — large enough to amortize the decode, small enough
+/// to stay cache-resident across the row sweep.
+pub const DQ_PANEL_ROWS: usize = 64;
+
+/// C = X · deq(W) with W kept in blockwise NF4 — the quantized-base
+/// serving kernel ("DequantGemm"). The dense W is NEVER materialized:
+/// each worker streams k-panels of `panel_rows` rows of W, decoding them
+/// into one reusable per-thread panel buffer
+/// ([`Nf4Tensor::dequantize_range`] handles panels that straddle the
+/// 64-value NF4 blocks), then runs the same ikj AXPY micro-kernel as
+/// [`matmul`] over the panel.
+///
+/// Every C element is accumulated in ascending p (k-index) order with one
+/// multiply-add per p — the exact arithmetic sequence of `matmul` on the
+/// dequantized dense operand — so the result is bit-identical to
+/// `matmul(x, &dequantize(w))`, for any `PISSA_THREADS` and any
+/// `panel_rows` (locked in by `rust/tests/determinism.rs`).
+pub fn dequant_matmul(x: &Mat, w: &Nf4Tensor) -> Mat {
+    dequant_matmul_panel(x, w, DQ_PANEL_ROWS)
+}
+
+/// [`dequant_matmul`] with an explicit panel height (rows of W decoded
+/// per streaming step). Exposed for the determinism/equivalence suites,
+/// which sweep panel sizes that don't divide the NF4 block size.
+pub fn dequant_matmul_panel(x: &Mat, w: &Nf4Tensor, panel_rows: usize) -> Mat {
+    assert!(panel_rows >= 1, "panel_rows must be >= 1");
+    assert_eq!(
+        x.cols, w.rows,
+        "dequant_matmul: {}x{} · {}x{}",
+        x.rows, x.cols, w.rows, w.cols
+    );
+    let (m, k, n) = (x.rows, w.rows, w.cols);
+    let mut c = Mat::zeros(m, n);
+    if m == 0 || n == 0 || k == 0 {
+        return c;
+    }
+    // Parallel over row blocks of C (disjoint output regions, the
+    // determinism contract of util::par). Each worker owns one decode
+    // buffer and walks every k-panel itself: the duplicated decode is
+    // O(k·n) per worker vs the O(rows·k·n) MACs it feeds.
+    par_rows_mut(&mut c.data, m, n, 8, |lo, hi, cchunk| {
+        let mut panel = vec![0.0f32; panel_rows.min(k) * n];
+        for kb in (0..k).step_by(panel_rows) {
+            let ke = (kb + panel_rows).min(k);
+            let vals = &mut panel[..(ke - kb) * n];
+            w.dequantize_range(kb * n, ke * n, vals);
+            for i in lo..hi {
+                let xrow = x.row(i);
+                let crow = &mut cchunk[(i - lo) * n..(i - lo + 1) * n];
+                for p in kb..ke {
+                    axpy_row(crow, xrow[p], &vals[(p - kb) * n..(p - kb + 1) * n]);
+                }
+            }
+        }
+    });
+    c
+}
+
 /// C += alpha * A·B accumulated into an existing buffer.
 pub fn matmul_acc(a: &Mat, b: &Mat, alpha: f32, c: &mut Mat) {
     assert_eq!(a.cols, b.rows);
@@ -169,21 +253,7 @@ pub fn matmul_into(a: &Mat, b: &Mat, c: &mut Mat) {
                     let arow = &a.data[i * k..(i + 1) * k];
                     let crow = &mut cchunk[(i - lo) * n..(i - lo + 1) * n];
                     for p in kb..ke {
-                        let av = arow[p];
-                        let brow = &b.data[p * n..(p + 1) * n];
-                        // 8-wide strip-mined AXPY; LLVM vectorizes this.
-                        let strips = n / NR;
-                        for s in 0..strips {
-                            let j0 = s * NR;
-                            let cdst = &mut crow[j0..j0 + NR];
-                            let bsrc = &brow[j0..j0 + NR];
-                            for q in 0..NR {
-                                cdst[q] += av * bsrc[q];
-                            }
-                        }
-                        for j in strips * NR..n {
-                            crow[j] += av * brow[j];
-                        }
+                        axpy_row(crow, arow[p], &b.data[p * n..(p + 1) * n]);
                     }
                 }
             }
@@ -314,6 +384,38 @@ mod tests {
         matmul_acc(&a, &b, 1.0, &mut c);
         matmul_acc(&a, &b, -1.0, &mut c);
         assert!(c.fro() < 1e-5);
+    }
+
+    #[test]
+    fn dequant_matmul_matches_dense_on_dequantized_operand() {
+        use crate::quant::nf4::{dequantize, quantize, BLOCK};
+        let mut rng = Rng::new(9);
+        // Shapes straddle the NF4 block size (cols not multiples of 64)
+        // and cover both matmul paths (small naive + blocked parallel).
+        for &(m, k, n) in &[(1usize, 9usize, 11usize), (7, 70, 37), (33, 64, 300), (64, 48, 96)] {
+            let x = Mat::randn(m, k, 0.0, 1.0, &mut rng);
+            let w = quantize(&Mat::randn(k, n, 0.0, 0.5, &mut rng));
+            let dense = dequantize(&w);
+            let want = matmul(&x, &dense);
+            assert_eq!(dequant_matmul(&x, &w).data, want.data, "{m}x{k}x{n}");
+            // Panel heights that don't divide (or exceed) BLOCK: the
+            // ascending-p accumulation makes the panel split invisible.
+            for panel in [1usize, 3, BLOCK - 1, BLOCK + 9, 4 * BLOCK] {
+                let got = dequant_matmul_panel(&x, &w, panel);
+                assert_eq!(got.data, want.data, "{m}x{k}x{n} panel={panel}");
+            }
+        }
+    }
+
+    #[test]
+    fn dequant_matmul_empty_shapes() {
+        use crate::quant::nf4::quantize;
+        let x = Mat::zeros(0, 8);
+        let w = quantize(&Mat::zeros(8, 4));
+        let c = dequant_matmul(&x, &w);
+        assert_eq!((c.rows, c.cols), (0, 4));
+        let c2 = dequant_matmul(&Mat::zeros(3, 8), &quantize(&Mat::zeros(8, 0)));
+        assert_eq!((c2.rows, c2.cols), (3, 0));
     }
 
     #[test]

@@ -10,7 +10,9 @@ pub mod qr;
 pub mod rsvd;
 pub mod svd;
 
-pub use gemm::{matmul, matmul_acc, matmul_nt, matmul_tn, matvec, vecmat};
+pub use gemm::{
+    dequant_matmul, dequant_matmul_panel, matmul, matmul_acc, matmul_nt, matmul_tn, matvec, vecmat,
+};
 pub use mat::Mat;
 pub use norms::{nuclear_norm, singular_values};
 pub use rsvd::rsvd;

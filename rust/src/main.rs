@@ -60,8 +60,11 @@ COMMANDS
   quant-error  --config tiny [--base runs/base_tiny.ckpt] --ranks 2,4,8
   convert      --run runs/run1 --out runs/run1_lora.ckpt
   serve        --adapters 8 --rank 8 --batch 32 --batches 40
-               [--strategy fused|merge|dense] [--module q] [--layer 0]
-               [--d-model 128] [--base-frac 0.125] [--drift 0.05]
+               [--strategy fused|merge|dense|fused-quant|dequant-dense]
+               [--quantized]  (QPiSSA adapters + NF4-resident base via
+                               the fused-quant dequant-GEMM path)
+               [--module q] [--layer 0] [--d-model 128]
+               [--base-frac 0.125] [--drift 0.05] [--iters 2]
                [--out results/serve_stats.json]
   toy          [--rank 4] [--steps 60] (Figure 2a)
   info         list artifacts and configs
@@ -341,9 +344,11 @@ fn cmd_convert(args: &Args) -> Result<()> {
 }
 
 /// Batched multi-adapter serving on a synthetic mixed-tenant workload:
-/// one random base model, N PiSSA adapters (drifted to simulate
-/// training), and a request stream routed through the scheduler and the
-/// fused low-rank server. No artifacts needed.
+/// one random base model, N adapters (drifted to simulate training), and
+/// a request stream routed through the scheduler and the fused low-rank
+/// server. `--quantized` switches to the QPiSSA deployment shape: QPiSSA
+/// adapters over an NF4-resident shared base served via the fused-quant
+/// dequant-GEMM path. No artifacts needed.
 fn cmd_serve(args: &Args) -> Result<()> {
     use pissa::serve::{drift_factors, Request, Scheduler, ServeConfig, ServeStrategy, Server};
 
@@ -356,7 +361,24 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let batches = args.usize_or("batches", 40);
     let base_frac = args.f64_or("base-frac", 0.125);
     let drift = args.f64_or("drift", 0.05) as f32;
-    let strategy = ServeStrategy::parse(&args.str_or("strategy", "fused"))?;
+    let quantized = args.bool_or("quantized", false);
+    let strategy = if quantized {
+        // --quantized pins the one strategy that serves an NF4 base;
+        // an explicit conflicting --strategy is a config error.
+        if let Some(s) = args.get("strategy") {
+            let parsed = ServeStrategy::parse(s)?;
+            anyhow::ensure!(
+                parsed.quantized_base(),
+                "--quantized serves an NF4 base; --strategy {s} is full-precision \
+                 (drop it or pick fused-quant/dequant-dense)"
+            );
+            parsed
+        } else {
+            ServeStrategy::FusedQuant
+        }
+    } else {
+        ServeStrategy::parse(&args.str_or("strategy", "fused"))?
+    };
     let mut rng = Rng::new(args.u64_or("seed", 42));
 
     let cfg = pissa::runtime::ConfigInfo {
@@ -373,15 +395,24 @@ fn cmd_serve(args: &Args) -> Result<()> {
         n_classes: 0,
         ranks: vec![rank],
     };
+    // Under --quantized every tenant is a QPiSSA adapter (frozen NF4
+    // residual, Algorithm-1 alternations) — the configuration the paper
+    // says is cheapest to deploy.
+    let spec = if quantized {
+        AdapterSpec::qpissa(rank).iters(args.usize_or("iters", 2))
+    } else {
+        AdapterSpec::pissa(rank)
+    };
     eprintln!(
         "[serve] building base ({d_model}x{d_model} {module}) + {n_adapters} \
-         pissa:rank={rank} adapters…"
+         {spec} adapters…",
+        spec = spec.clone().targets(&[module.as_str()])
     );
     let base = pissa::model::BaseModel::random(&cfg, &mut rng);
     let mut engine = pissa::adapter::AdapterEngine::new(base);
     let names: Vec<String> = (0..n_adapters).map(|i| format!("tenant{i:02}")).collect();
     for name in &names {
-        engine.attach(name, AdapterSpec::pissa(rank).targets(&[module.as_str()]), &mut rng)?;
+        engine.attach(name, spec.clone().targets(&[module.as_str()]), &mut rng)?;
         drift_factors(&mut engine, name, &module, drift, &mut rng)?;
     }
 
@@ -413,6 +444,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
         s.batches,
         server.cfg(),
         s.req_per_s
+    );
+    let dense_bytes = server.n_in() * server.n_out() * 4;
+    println!(
+        "resident base: {} bytes ({:.2}x of dense fp32 {})",
+        server.base_resident_bytes(),
+        server.base_resident_bytes() as f64 / dense_bytes as f64,
+        dense_bytes
     );
     println!(
         "latency p50 {:.3} ms  p95 {:.3} ms  |  occupancy {:.0}%  |  {:.1} adapter \

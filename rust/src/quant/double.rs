@@ -46,6 +46,13 @@ pub fn dequantize_scales(dq: &DoubleQuantScales) -> Vec<f32> {
         .collect()
 }
 
+/// Bytes resident for double-quantized scale storage: one u8 code per
+/// original scale plus one `(f32, f32)` affine pair per group. The
+/// counterpart of `nf4::storage_bytes` for the second quantization level.
+pub fn storage_bytes(dq: &DoubleQuantScales) -> usize {
+    dq.codes.len() + dq.groups.len() * 8
+}
+
 /// Apply double quantization to an NF4 tensor in place (replaces its f32
 /// scales with their double-quantized round trip) and return the storage
 /// saving in bytes.
@@ -53,7 +60,7 @@ pub fn double_quantize(t: &mut Nf4Tensor) -> usize {
     let before = t.scales.len() * 4;
     let dq = quantize_scales(&t.scales);
     t.scales = dequantize_scales(&dq);
-    let after = dq.codes.len() + dq.groups.len() * 8;
+    let after = storage_bytes(&dq);
     before.saturating_sub(after)
 }
 

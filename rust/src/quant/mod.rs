@@ -7,5 +7,5 @@ pub mod double;
 pub mod error;
 pub mod nf4;
 
-pub use error::{qlora_error, reduction_ratio, strategy_error};
-pub use nf4::{dequantize, nf4_roundtrip, quantize, Nf4Tensor};
+pub use error::{fro_error, qlora_error, reduction_ratio, strategy_error};
+pub use nf4::{dequantize, nf4_roundtrip, quantize, storage_bytes, Nf4Block, Nf4Tensor};

@@ -45,6 +45,119 @@ pub struct Nf4Tensor {
     pub scales: Vec<f32>,
 }
 
+/// One quantization block of an [`Nf4Tensor`]: values
+/// `[start, start + len)` of the flattened row-major buffer, all sharing
+/// `scale`. `BLOCK` is even, so every block starts byte-aligned in the
+/// packed code stream and `codes` holds exactly `ceil(len / 2)` bytes.
+#[derive(Clone, Copy, Debug)]
+pub struct Nf4Block<'a> {
+    /// Block index (`start / BLOCK`).
+    pub index: usize,
+    /// First flattened value index covered by this block.
+    pub start: usize,
+    /// Values in this block (`BLOCK`, except a shorter final block).
+    pub len: usize,
+    /// The block's absmax scale.
+    pub scale: f32,
+    codes: &'a [u8],
+}
+
+impl Nf4Block<'_> {
+    /// Decode the `i`-th value of this block (`i < len`).
+    #[inline]
+    pub fn value(&self, i: usize) -> f32 {
+        debug_assert!(i < self.len);
+        let byte = self.codes[i / 2];
+        let code = if i % 2 == 0 { byte & 0x0F } else { byte >> 4 };
+        NF4_LEVELS[code as usize] * self.scale
+    }
+
+    /// Decode the whole block into `out[..len]`.
+    pub fn dequantize_into(&self, out: &mut [f32]) {
+        assert!(out.len() >= self.len, "output buffer shorter than block");
+        // Pairwise nibble decode; the final odd value (short tail block
+        // only) falls out of the pair loop.
+        let pairs = self.len / 2;
+        for p in 0..pairs {
+            let byte = self.codes[p];
+            out[2 * p] = NF4_LEVELS[(byte & 0x0F) as usize] * self.scale;
+            out[2 * p + 1] = NF4_LEVELS[(byte >> 4) as usize] * self.scale;
+        }
+        if self.len % 2 == 1 {
+            out[self.len - 1] = NF4_LEVELS[(self.codes[pairs] & 0x0F) as usize] * self.scale;
+        }
+    }
+}
+
+impl Nf4Tensor {
+    /// Total flattened value count (`rows * cols`).
+    pub fn len(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Number of quantization blocks (`ceil(len / BLOCK)`).
+    pub fn n_blocks(&self) -> usize {
+        self.len().div_ceil(BLOCK)
+    }
+
+    /// The `b`-th quantization block.
+    pub fn block(&self, b: usize) -> Nf4Block<'_> {
+        let start = b * BLOCK;
+        let len = (start + BLOCK).min(self.len()) - start;
+        Nf4Block {
+            index: b,
+            start,
+            len,
+            scale: self.scales[b],
+            codes: &self.codes[start / 2..(start + len).div_ceil(2)],
+        }
+    }
+
+    /// Iterate the quantization blocks in flattened order — the streaming
+    /// API the fused dequant-GEMM serving path is built on: consumers
+    /// decode one cache-sized panel of blocks at a time and never
+    /// materialize the dense matrix.
+    pub fn blocks(&self) -> impl Iterator<Item = Nf4Block<'_>> {
+        (0..self.n_blocks()).map(|b| self.block(b))
+    }
+
+    /// Decode the flattened value range `[lo, hi)` into `out` (length
+    /// `hi - lo`). The range may start/end mid-block — panel widths that
+    /// don't divide `BLOCK` are fine (and exercised by the determinism
+    /// suite). Bit-identical to slicing a full [`dequantize`].
+    pub fn dequantize_range(&self, lo: usize, hi: usize, out: &mut [f32]) {
+        assert!(lo <= hi && hi <= self.len(), "range [{lo}, {hi}) out of bounds");
+        assert_eq!(out.len(), hi - lo, "output buffer/range length mismatch");
+        if lo == hi {
+            return;
+        }
+        let mut pos = lo;
+        for b in lo / BLOCK..=(hi - 1) / BLOCK {
+            let blk = self.block(b);
+            let stop = hi.min(blk.start + blk.len);
+            if pos == blk.start && stop == blk.start + blk.len {
+                // Whole block: fast pairwise decode.
+                blk.dequantize_into(&mut out[pos - lo..stop - lo]);
+            } else {
+                for i in pos..stop {
+                    out[i - lo] = blk.value(i - blk.start);
+                }
+            }
+            pos = stop;
+        }
+    }
+
+    /// Bytes resident for this tensor (packed codes + f32 scales); see
+    /// the free function [`storage_bytes`].
+    pub fn storage_bytes(&self) -> usize {
+        self.codes.len() + self.scales.len() * 4
+    }
+}
+
 /// Decision boundaries between adjacent codebook levels (midpoints):
 /// nearest level of x = number of boundaries strictly below x.
 /// (§Perf: replaced a branchy binary search — the 15 comparisons are
@@ -118,15 +231,13 @@ pub fn quantize(m: &Mat) -> Nf4Tensor {
     Nf4Tensor { rows: m.rows, cols: m.cols, codes, scales }
 }
 
-/// Dequantize back to f32.
+/// Dequantize back to f32 (block-by-block through the streaming API, so
+/// this is by construction bit-identical to any panel decomposition via
+/// [`Nf4Tensor::dequantize_range`]).
 pub fn dequantize(t: &Nf4Tensor) -> Mat {
-    let n = t.rows * t.cols;
-    let mut data = vec![0.0f32; n];
-    for i in 0..n {
-        let byte = t.codes[i / 2];
-        let code = if i % 2 == 0 { byte & 0x0F } else { byte >> 4 };
-        let scale = t.scales[i / BLOCK];
-        data[i] = NF4_LEVELS[code as usize] * scale;
+    let mut data = vec![0.0f32; t.len()];
+    for blk in t.blocks() {
+        blk.dequantize_into(&mut data[blk.start..blk.start + blk.len]);
     }
     Mat::from_vec(t.rows, t.cols, data)
 }
@@ -137,9 +248,10 @@ pub fn nf4_roundtrip(m: &Mat) -> Mat {
 }
 
 /// Bytes of storage used by the quantized representation (codes + f32
-/// scales, before double quantization).
+/// scales, before double quantization; see `double::storage_bytes` for
+/// the second-level scale metadata accounting).
 pub fn storage_bytes(t: &Nf4Tensor) -> usize {
-    t.codes.len() + t.scales.len() * 4
+    t.storage_bytes()
 }
 
 #[cfg(test)]
@@ -233,5 +345,45 @@ mod tests {
         let rt = nf4_roundtrip(&m);
         assert_eq!(rt.data.len(), 67);
         assert!(rt.data.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn block_iterator_tiles_the_tensor() {
+        let mut rng = Rng::new(54);
+        // 3×70 = 210 values: 3 full blocks + an 18-value tail block.
+        let m = Mat::randn(3, 70, 0.0, 1.0, &mut rng);
+        let t = quantize(&m);
+        assert_eq!(t.len(), 210);
+        assert_eq!(t.n_blocks(), 4);
+        let dense = dequantize(&t);
+        let mut covered = 0;
+        for blk in t.blocks() {
+            assert_eq!(blk.start, covered);
+            assert_eq!(blk.scale, t.scales[blk.index]);
+            let mut buf = vec![0.0f32; blk.len];
+            blk.dequantize_into(&mut buf);
+            assert_eq!(buf, dense.data[blk.start..blk.start + blk.len]);
+            for i in 0..blk.len {
+                assert_eq!(blk.value(i), dense.data[blk.start + i]);
+            }
+            covered += blk.len;
+        }
+        assert_eq!(covered, t.len());
+        assert_eq!(t.blocks().last().unwrap().len, 18);
+    }
+
+    #[test]
+    fn dequantize_range_matches_full_decode_on_unaligned_panels() {
+        let mut rng = Rng::new(55);
+        let m = Mat::randn(5, 37, 0.0, 0.7, &mut rng); // 185 values, ragged blocks
+        let t = quantize(&m);
+        let dense = dequantize(&t);
+        for &(lo, hi) in
+            &[(0usize, 185usize), (0, 1), (63, 65), (1, 184), (64, 128), (100, 100), (130, 185)]
+        {
+            let mut buf = vec![0.0f32; hi - lo];
+            t.dequantize_range(lo, hi, &mut buf);
+            assert_eq!(buf, dense.data[lo..hi], "range [{lo}, {hi})");
+        }
     }
 }

@@ -10,15 +10,21 @@
 //!   adapter in deterministic order,
 //! * [`ServeConfig`] + [`ServeStrategy`] — which linear/layer is served
 //!   and how: `fused` (shared `X·W` + per-group low-rank corrections,
-//!   `ΔW` never materialized), `merge-per-request`, or
-//!   `dense-per-adapter` (the baselines of `benches/serve_throughput.rs`),
-//! * [`Server`] — the batched forward `Y = X·W + Σ_g (X_g·ΔA_g)·ΔB_g`,
-//!   with per-adapter corrections dispatched in parallel via
+//!   `ΔW` never materialized), `merge-per-request`, `dense-per-adapter`
+//!   (the baselines of `benches/serve_throughput.rs`), plus the
+//!   quantized-base pair of `benches/quant_serve.rs`: `fused-quant`
+//!   (NF4-resident base streamed through the dequant-GEMM — the QPiSSA
+//!   deployment mode) and `dequant-dense` (dequantize once, serve dense
+//!   — its bit-for-bit fp32-residency reference),
+//! * [`Server`] — the batched forward `Y = X·W + Σ_g (X_g·ΔA_g)·ΔB_g`
+//!   (`X·deq(W_nf4)` under `fused-quant`, see [`QuantBase`]), with
+//!   per-adapter corrections dispatched in parallel via
 //!   [`crate::util::par::par_map`],
 //! * [`ServeStats`] — per-adapter hit counts, batch occupancy, and
 //!   p50/p95 latency, exported as JSON through the `metrics` sinks,
 //! * [`ServeError`] — typed request/config errors (unknown adapter,
-//!   dimension mismatch, rank > min(m, n), quantized base), never panics.
+//!   dimension mismatch, rank > min(m, n), quantized adapter under a
+//!   full-precision strategy), never panics.
 //!
 //! Bit-for-bit thread-count determinism of the whole path is locked in
 //! by `rust/tests/determinism.rs`; fused ≡ merged-dense equivalence by
@@ -31,7 +37,7 @@ pub mod stats;
 
 pub use config::{ServeConfig, ServeError, ServeStrategy};
 pub use router::{bucket, Group, Request, Scheduler};
-pub use server::Server;
+pub use server::{QuantBase, Server};
 pub use stats::{ServeStats, ServeSummary, BASE_KEY};
 
 use crate::adapter::AdapterEngine;

@@ -4,9 +4,10 @@
 //! input vector plus the adapter it should run under (`None` = the frozen
 //! base). The router groups a batch by adapter in a deterministic
 //! (sorted, base-first) order so the server can amortize the shared base
-//! GEMM across every group and dispatch the per-adapter low-rank
-//! corrections in parallel; the [`Scheduler`] accumulates a request
-//! stream into batches of at most `max_batch`.
+//! GEMM across every group — dense, or the NF4-resident `QuantBase`
+//! streamed through the dequant-GEMM — and dispatch the per-adapter
+//! low-rank corrections in parallel; the [`Scheduler`] accumulates a
+//! request stream into batches of at most `max_batch`.
 
 use std::collections::BTreeMap;
 use std::collections::VecDeque;

@@ -19,6 +19,15 @@
 //! `(W, ΔA, ΔB)` snapshot densely and exist as baselines (and as the
 //! reference the equivalence property tests compare against).
 //!
+//! The quantized-base strategies swap the base storage, not the
+//! algebra: `fused-quant` keeps the shared base resident as blockwise
+//! NF4 (a [`QuantBase`]) and streams it through
+//! [`crate::linalg::dequant_matmul`] — `Y = X·deq(W_nf4) + Σ_g …` —
+//! while `dequant-dense` dequantizes the same snapshot once into a
+//! dense copy (the bit-for-bit reference at fp32 residency). Both
+//! accept QPiSSA/QLoRA/LoftQ adapters, whose frozen NF4 base the
+//! full-precision strategies reject with a typed error.
+//!
 //! Determinism: request bucketing is sorted, group corrections are
 //! scattered in group order on the caller thread, and every GEMM in the
 //! path accumulates in fixed k-order — so serving output is bit-identical
@@ -29,7 +38,8 @@ use super::router::{bucket, Group, Request};
 use super::stats::ServeStats;
 use crate::adapter::convert::pissa_to_lora;
 use crate::adapter::AdapterEngine;
-use crate::linalg::{matmul, vecmat, Mat};
+use crate::linalg::{dequant_matmul, matmul, vecmat, Mat};
+use crate::quant::{dequantize, Nf4Tensor};
 use crate::util::par::par_map;
 use crate::util::timer::Timer;
 use anyhow::Result;
@@ -43,29 +53,93 @@ struct Prepared {
     delta: Option<(Mat, Mat)>,
 }
 
+/// The NF4-resident shared base of the `fused-quant` strategy: packed
+/// codes + blockwise scales, streamed through the dequant-GEMM at
+/// request time. The dense matrix is never materialized server-side.
+#[derive(Debug, Clone)]
+pub struct QuantBase {
+    /// Blockwise NF4 snapshot of the served base weight.
+    pub nf4: Nf4Tensor,
+}
+
+impl QuantBase {
+    /// Bytes this base keeps resident (packed codes + f32 scales).
+    pub fn resident_bytes(&self) -> usize {
+        self.nf4.storage_bytes()
+    }
+}
+
+/// How the server stores the shared base weight of the served linear —
+/// the storage side of the [`ServeStrategy`] choice.
+#[derive(Debug)]
+enum BaseStore {
+    /// Full-precision m×n matrix: the original `W` for the exact
+    /// strategies, or the dequantized-once NF4 round trip for
+    /// `dequant-dense`.
+    Dense(Mat),
+    /// NF4-resident base for `fused-quant` — the base GEMM streams the
+    /// packed blocks panel-by-panel instead of reading a dense matrix.
+    Quant(QuantBase),
+}
+
+impl BaseStore {
+    /// The shared base GEMM `X·base` of the fused forward.
+    fn forward(&self, x: &Mat) -> Mat {
+        match self {
+            BaseStore::Dense(w) => matmul(x, w),
+            BaseStore::Quant(q) => dequant_matmul(x, &q.nf4),
+        }
+    }
+
+    fn resident_bytes(&self) -> usize {
+        match self {
+            BaseStore::Dense(w) => w.data.len() * 4,
+            BaseStore::Quant(q) => q.resident_bytes(),
+        }
+    }
+}
+
 /// Batched multi-adapter server over a snapshot of an [`AdapterEngine`].
 ///
 /// Construction validates the [`ServeConfig`] against the engine and
-/// copies out everything serving needs (shared base weight + per-adapter
-/// low-rank deltas), so the engine is free to keep training afterwards;
-/// rebuild the server to pick up new factors.
+/// copies out everything serving needs (shared base weight — dense or
+/// NF4 depending on the strategy — plus per-adapter low-rank deltas), so
+/// the engine is free to keep training afterwards; rebuild the server to
+/// pick up new factors.
 #[derive(Debug)]
 pub struct Server {
     cfg: ServeConfig,
-    /// Original dense weight of the served linear (m×n) — shared by
-    /// every adapter.
-    base_w: Mat,
+    /// Shared base of the served linear (m×n), in the representation the
+    /// strategy serves from.
+    base: BaseStore,
+    n_in: usize,
+    n_out: usize,
     prepared: BTreeMap<String, Prepared>,
     stats: ServeStats,
 }
 
 impl Server {
     /// Snapshot `engine` under `cfg`. Fails with a typed [`ServeError`]
-    /// on unknown module, out-of-range layer, quantized adapters, or
-    /// rank > min(m, n).
+    /// on unknown module, out-of-range layer, quantized adapters under a
+    /// full-precision strategy, or rank > min(m, n) on a fused path.
     pub fn new(engine: &AdapterEngine, cfg: ServeConfig) -> Result<Server> {
         cfg.validate(engine)?;
         let base_w = engine.base_weight(&cfg.module, cfg.layer);
+        let (n_in, n_out) = (base_w.rows, base_w.cols);
+        let base = match cfg.strategy {
+            // NF4-resident base, streamed through the dequant-GEMM
+            // (same snapshot `AdapterEngine::quant_base_weight` hands
+            // external callers, built from the already-copied weight).
+            ServeStrategy::FusedQuant => {
+                BaseStore::Quant(QuantBase { nf4: crate::quant::quantize(&base_w) })
+            }
+            // Same quantized snapshot, dequantized once into a dense
+            // copy: bit-for-bit the FusedQuant output at fp32 residency.
+            ServeStrategy::DequantDense => {
+                BaseStore::Dense(dequantize(&crate::quant::quantize(&base_w)))
+            }
+            _ => BaseStore::Dense(base_w),
+        };
         let mut prepared = BTreeMap::new();
         for name in engine.names() {
             let ad = engine.get(name)?;
@@ -82,15 +156,19 @@ impl Server {
                     Some((a1, b1))
                 } else {
                     // Appendix C: ΔA·ΔB = A'·B' − A₀·B₀, rank 2r, plugs
-                    // into the original W (exact because the attach-time
-                    // invariant pins base = W − A₀·B₀).
+                    // into the original W (exact for full-precision
+                    // strategies, whose attach-time invariant pins
+                    // base = W − A₀·B₀; for quantized adapters the frozen
+                    // base is nf4(W_res), so the identity — and therefore
+                    // quantized serving — holds to the NF4 round-trip
+                    // error the paper bounds in Table 3).
                     let d = pissa_to_lora(&a0, &b0, &a1, &b1);
                     Some((d.da, d.db))
                 }
             };
             prepared.insert(name.to_string(), Prepared { delta });
         }
-        Ok(Server { cfg, base_w, prepared, stats: ServeStats::new() })
+        Ok(Server { cfg, base, n_in, n_out, prepared, stats: ServeStats::new() })
     }
 
     pub fn cfg(&self) -> &ServeConfig {
@@ -99,12 +177,30 @@ impl Server {
 
     /// Input feature count of the served linear.
     pub fn n_in(&self) -> usize {
-        self.base_w.rows
+        self.n_in
     }
 
     /// Output feature count of the served linear.
     pub fn n_out(&self) -> usize {
-        self.base_w.cols
+        self.n_out
+    }
+
+    /// Bytes the shared base keeps resident under this strategy: m·n·4
+    /// for a dense store, packed-codes + scales for the NF4 store (the
+    /// ≤ 0.35× acceptance bar of `benches/quant_serve.rs`).
+    pub fn base_resident_bytes(&self) -> usize {
+        self.base.resident_bytes()
+    }
+
+    /// Dense base for the merged/dense execution paths. Those strategies
+    /// always build a `Dense` store, so this cannot miss.
+    fn dense_base(&self) -> &Mat {
+        match &self.base {
+            BaseStore::Dense(w) => w,
+            BaseStore::Quant(_) => {
+                unreachable!("merged/dense strategies always snapshot a dense base")
+            }
+        }
     }
 
     /// Names the server can route to (snapshot order).
@@ -155,7 +251,11 @@ impl Server {
         let timer = Timer::start();
         let groups = bucket(requests);
         let y = match self.cfg.strategy {
-            ServeStrategy::Fused => self.forward_fused(requests, &groups),
+            // The three fused-style strategies share one forward; they
+            // differ only in how the BaseStore executes the shared GEMM.
+            ServeStrategy::Fused | ServeStrategy::FusedQuant | ServeStrategy::DequantDense => {
+                self.forward_fused(requests, &groups)
+            }
             ServeStrategy::DensePerAdapter => self.forward_dense(requests, &groups),
             ServeStrategy::MergePerRequest => self.forward_merge(requests),
         };
@@ -164,11 +264,13 @@ impl Server {
         Ok(y)
     }
 
-    /// Shared `X·W` once, then per-group `(X_g·ΔA)·ΔB` corrections in
-    /// parallel, scattered back in deterministic group order.
+    /// Shared `X·base` once (dense GEMM, or the streaming dequant-GEMM
+    /// for the NF4-resident store), then per-group `(X_g·ΔA)·ΔB`
+    /// corrections in parallel, scattered back in deterministic group
+    /// order.
     fn forward_fused(&self, requests: &[Request], groups: &[Group]) -> Mat {
         let x = gather_all(requests, self.n_in());
-        let mut y = matmul(&x, &self.base_w);
+        let mut y = self.base.forward(&x);
         let adapter_groups: Vec<&Group> = groups.iter().filter(|g| g.adapter.is_some()).collect();
         let corrections: Vec<Option<Mat>> = par_map(adapter_groups.len(), 1, |gi| {
             let g = adapter_groups[gi];
@@ -200,10 +302,10 @@ impl Server {
             let xg = gather_requests(requests, &g.rows, self.n_in());
             match self.group_delta(g) {
                 Some((da, db)) => {
-                    let merged = self.base_w.add(&matmul(da, db));
+                    let merged = self.dense_base().add(&matmul(da, db));
                     matmul(&xg, &merged)
                 }
-                None => matmul(&xg, &self.base_w),
+                None => matmul(&xg, self.dense_base()),
             }
         });
         for (g, out) in groups.iter().zip(&outs) {
@@ -223,10 +325,10 @@ impl Server {
             let delta = r.adapter.as_deref().and_then(|n| self.prepared[n].delta.as_ref());
             let row = match delta {
                 Some((da, db)) => {
-                    let merged = self.base_w.add(&matmul(da, db));
+                    let merged = self.dense_base().add(&matmul(da, db));
                     vecmat(&r.x, &merged)
                 }
-                None => vecmat(&r.x, &self.base_w),
+                None => vecmat(&r.x, self.dense_base()),
             };
             y.row_mut(i).copy_from_slice(&row);
         }
@@ -369,15 +471,65 @@ mod tests {
     }
 
     #[test]
-    fn quantized_adapters_rejected_for_serving() {
+    fn quantized_adapters_need_a_quantized_base_strategy() {
         // qlora attaches under the exact NF4-fixed-point invariant (A·B=0),
         // so this test never depends on the Table-3 error bound.
         let (eng, _) = engine_with(&[("qp", AdapterSpec::qlora(2))], 5);
-        let err = Server::new(&eng, ServeConfig::new("q")).unwrap_err();
-        assert!(matches!(
-            err.downcast_ref::<ServeError>(),
-            Some(ServeError::QuantizedAdapter { .. })
-        ));
+        for strategy in ServeStrategy::exact() {
+            let err =
+                Server::new(&eng, ServeConfig::new("q").strategy(strategy)).unwrap_err();
+            assert!(
+                matches!(
+                    err.downcast_ref::<ServeError>(),
+                    Some(ServeError::QuantizedAdapter { .. })
+                ),
+                "{}: expected QuantizedAdapter, got {err:?}",
+                strategy.name()
+            );
+            assert!(err.to_string().contains("fused-quant"), "message: {err}");
+        }
+        for strategy in [ServeStrategy::FusedQuant, ServeStrategy::DequantDense] {
+            assert!(
+                Server::new(&eng, ServeConfig::new("q").strategy(strategy)).is_ok(),
+                "{} must accept the quantized adapter",
+                strategy.name()
+            );
+        }
+    }
+
+    #[test]
+    fn fused_quant_serves_qlora_exactly_and_reports_nf4_residency() {
+        // A QLoRA adapter's frozen base IS nf4(W), so serving it from the
+        // shared NF4 snapshot reproduces the engine's effective weight up
+        // to GEMM association (no quantization mismatch term at all).
+        let (mut eng, mut rng) = engine_with(&[("qt", AdapterSpec::qlora(2))], 11);
+        crate::serve::drift_factors(&mut eng, "qt", "q", 0.05, &mut rng).unwrap();
+        let mut srv =
+            Server::new(&eng, ServeConfig::new("q").strategy(ServeStrategy::FusedQuant))
+                .unwrap();
+        let x: Vec<f32> = (0..16).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let got = srv.forward(&[Request::new("qt", x.clone())]).unwrap();
+        let w_eff = eng.effective_weight_of("qt", "q", 0).unwrap();
+        let want = vecmat(&x, &w_eff);
+        for (g, w) in got.row(0).iter().zip(&want) {
+            assert!((g - w).abs() < 1e-4 * (1.0 + w.abs()), "{g} vs {w}");
+        }
+        // NF4 residency: 4 bits/value + one f32 scale per 64 values —
+        // exactly the engine's quant_base_weight snapshot.
+        let dense_bytes = 16 * 16 * 4;
+        let nf4 = eng.quant_base_weight("q", 0);
+        assert_eq!(srv.base_resident_bytes(), nf4.storage_bytes());
+        assert!(
+            srv.base_resident_bytes() * 100 <= dense_bytes * 35,
+            "nf4 residency {} should be <= 0.35x dense {}",
+            srv.base_resident_bytes(),
+            dense_bytes
+        );
+        // The dense strategies report full fp32 residency.
+        let dense_srv =
+            Server::new(&eng, ServeConfig::new("q").strategy(ServeStrategy::DequantDense))
+                .unwrap();
+        assert_eq!(dense_srv.base_resident_bytes(), dense_bytes);
     }
 
     #[test]

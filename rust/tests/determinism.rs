@@ -11,8 +11,9 @@
 //! serialize on a shared lock (cargo runs `#[test]`s concurrently).
 
 use pissa::adapter::{AdapterEngine, AdapterSpec};
-use pissa::linalg::{matmul, matmul_nt, matmul_tn, Mat};
+use pissa::linalg::{dequant_matmul, dequant_matmul_panel, matmul, matmul_nt, matmul_tn, Mat};
 use pissa::model::BaseModel;
+use pissa::quant::{dequantize, quantize};
 use pissa::runtime::ConfigInfo;
 use pissa::serve::{drift_factors, Request, ServeConfig, ServeStrategy, Server};
 use pissa::util::rng::Rng;
@@ -60,6 +61,42 @@ fn gemm_kernels_bit_identical_across_thread_counts() {
     assert_eq!(t1.1.data, t8.1.data, "matmul_nt drifted across thread counts");
     assert_eq!(t1.2.data, t8.2.data, "matmul_tn (wide fallback) drifted");
     assert_eq!(t1.3.data, t8.3.data, "matmul_tn (panel kernel) drifted");
+}
+
+#[test]
+fn dequant_gemm_bit_identical_across_threads_and_panel_sizes() {
+    let _guard = ENV_LOCK.lock().unwrap();
+    let mut rng = Rng::new(3);
+    // 70 rows × 300 cols of NF4: each row is 300 values, so every panel
+    // boundary lands mid-block (300 % 64 != 0) — the ragged case the
+    // streaming decode must handle identically to a full dequantize.
+    let x_big = Mat::randn(40, 70, 0.0, 1.0, &mut rng); // parallel row path
+    let x_one = Mat::randn(1, 70, 0.0, 1.0, &mut rng); // inline path
+    let w = quantize(&Mat::randn(70, 300, 0.0, 0.5, &mut rng));
+
+    // Reference: dequantize once, dense GEMM (single-threaded so the
+    // reference itself is pinned).
+    let want_big = with_threads(1, || matmul(&x_big, &dequantize(&w)));
+    let want_one = with_threads(1, || matmul(&x_one, &dequantize(&w)));
+
+    // Panel heights that don't divide the NF4 block size (and one that
+    // exceeds k): the ascending-p accumulation makes both the panel
+    // split and the thread split invisible.
+    for panel in [1usize, 3, 37, 63, 64, 100] {
+        let run = || {
+            (dequant_matmul_panel(&x_big, &w, panel), dequant_matmul_panel(&x_one, &w, panel))
+        };
+        let t1 = with_threads(1, run);
+        let t8 = with_threads(8, run);
+        assert_eq!(t1.0.data, t8.0.data, "panel={panel}: thread drift (parallel path)");
+        assert_eq!(t1.1.data, t8.1.data, "panel={panel}: thread drift (inline path)");
+        assert_eq!(t1.0.data, want_big.data, "panel={panel}: diverged from dequant-once");
+        assert_eq!(t1.1.data, want_one.data, "panel={panel}: diverged from dequant-once");
+    }
+    let d1 = with_threads(1, || dequant_matmul(&x_big, &w));
+    let d8 = with_threads(8, || dequant_matmul(&x_big, &w));
+    assert_eq!(d1.data, d8.data, "default-panel dequant_matmul drifted");
+    assert_eq!(d1.data, want_big.data);
 }
 
 #[test]

@@ -195,3 +195,171 @@ fn prop_lr_schedule_bounded_and_continuous() {
         }
     }
 }
+
+// ---- NF4 quantization properties (quant/nf4.rs contract) ---------------
+
+/// Reference nearest-neighbor over the 16 codebook levels with the
+/// tie-break pinned: at an exact midpoint between two levels the LOWER
+/// code wins (the boundary-count kernel uses strict `>`).
+fn reference_nearest(x: f32) -> u8 {
+    let mut best = 0usize;
+    for (i, &level) in pissa::quant::nf4::NF4_LEVELS.iter().enumerate() {
+        let (d, db) = ((x - level).abs(), (x - pissa::quant::nf4::NF4_LEVELS[best]).abs());
+        if d < db {
+            best = i;
+        }
+    }
+    best as u8
+}
+
+/// Next representable f32 strictly greater than `x` (hand-rolled; avoids
+/// depending on the recently stabilized `f32::next_up`).
+fn next_up(x: f32) -> f32 {
+    if x > 0.0 {
+        f32::from_bits(x.to_bits() + 1)
+    } else if x < 0.0 {
+        f32::from_bits(x.to_bits() - 1)
+    } else {
+        f32::from_bits(1)
+    }
+}
+
+#[test]
+fn prop_nearest_code_is_true_nearest_neighbor() {
+    use pissa::quant::nf4::{nearest_code, NF4_LEVELS};
+    // Dense grid over (and beyond) the normalized domain: no grid point
+    // lands on an exact midpoint, so true-nearest is unambiguous there
+    // and the kernel must agree everywhere (exhaustive over all 16 codes
+    // as targets).
+    for step in -1500..=1500i32 {
+        let x = step as f32 * 1e-3;
+        let got = nearest_code(x);
+        let want = reference_nearest(x);
+        assert_eq!(got, want, "nearest_code({x}) = {got}, true nearest = {want}");
+    }
+    // Exact levels map to themselves; far outside saturates to the ends.
+    for (i, &level) in NF4_LEVELS.iter().enumerate() {
+        assert_eq!(nearest_code(level) as usize, i);
+    }
+    assert_eq!(nearest_code(-1e9), 0);
+    assert_eq!(nearest_code(1e9), 15);
+    // The 15 midpoints: exhaustive tie-break check, lower code wins at
+    // the exact tie, upper code one ulp past it.
+    for i in 0..15 {
+        let mid = (NF4_LEVELS[i] + NF4_LEVELS[i + 1]) / 2.0;
+        assert_eq!(
+            nearest_code(mid) as usize,
+            i,
+            "tie at midpoint {mid} between codes {i} and {} must pin to {i}",
+            i + 1
+        );
+        assert_eq!(nearest_code(next_up(mid)) as usize, i + 1, "just past midpoint {mid}");
+    }
+}
+
+#[test]
+fn prop_quantize_dequantize_is_idempotent() {
+    use pissa::quant::{dequantize, quantize};
+    for seed in 0..10u64 {
+        let mut rng = Rng::new(900 + seed);
+        let (m, n) = rand_shape(&mut rng, 1, 40); // incl. tail blocks & tiny mats
+        let scale = 10f32.powf(rng.uniform_in(-3.0, 1.0));
+        let mut w = Mat::randn(m, n, 0.0, scale, &mut rng);
+        if seed % 3 == 0 && !w.data.is_empty() {
+            // Force an all-zero block prefix (absmax = 0 edge case).
+            for x in w.data.iter_mut().take(64.min(w.data.len())) {
+                *x = 0.0;
+            }
+        }
+        let t1 = quantize(&w);
+        let d1 = dequantize(&t1);
+        let t2 = quantize(&d1);
+        // Quantized points are fixed points: codes AND scales identical,
+        // not just values-within-tolerance.
+        assert_eq!(t1.codes, t2.codes, "seed={seed} {m}x{n} codes drifted");
+        assert_eq!(t1.scales, t2.scales, "seed={seed} {m}x{n} scales drifted");
+        assert_eq!(d1.data, dequantize(&t2).data, "seed={seed} {m}x{n}");
+    }
+}
+
+#[test]
+fn prop_blockwise_error_bounded_by_half_max_gap_times_absmax() {
+    use pissa::quant::nf4::{BLOCK, NF4_LEVELS};
+    let max_gap = NF4_LEVELS.windows(2).map(|w| w[1] - w[0]).fold(0.0f32, f32::max);
+    for seed in 0..8u64 {
+        let mut rng = Rng::new(950 + seed);
+        let (m, n) = rand_shape(&mut rng, 3, 50);
+        let w = Mat::randn(m, n, 0.0, 0.5, &mut rng);
+        let rt = nf4_roundtrip(&w);
+        for (b, chunk) in w.data.chunks(BLOCK).enumerate() {
+            let absmax = chunk.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+            let bound = 0.5 * max_gap * absmax + 1e-6;
+            for (i, &x) in chunk.iter().enumerate() {
+                let err = (x - rt.data[b * BLOCK + i]).abs();
+                assert!(
+                    err <= bound,
+                    "seed={seed} {m}x{n} block {b}: err {err} > bound {bound} (absmax {absmax})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_storage_bytes_matches_actual_buffers_incl_double_quant() {
+    use pissa::quant::double::{double_quantize, quantize_scales, GROUP};
+    use pissa::quant::nf4::BLOCK;
+    use pissa::quant::{quantize, storage_bytes};
+    for seed in 0..8u64 {
+        let mut rng = Rng::new(990 + seed);
+        let (m, n) = rand_shape(&mut rng, 1, 80);
+        let w = Mat::randn(m, n, 0.0, 0.2, &mut rng);
+        let t = quantize(&w);
+        let vals = m * n;
+        // The declared layout: two codes per byte, one f32 scale / block.
+        assert_eq!(t.codes.len(), vals.div_ceil(2), "seed={seed} {m}x{n}");
+        assert_eq!(t.scales.len(), vals.div_ceil(BLOCK), "seed={seed} {m}x{n}");
+        assert_eq!(storage_bytes(&t), t.codes.len() + 4 * t.scales.len());
+        assert_eq!(storage_bytes(&t), t.storage_bytes());
+        // Double-quant metadata: one u8 code per scale + an (f32, f32)
+        // affine pair per group of 256.
+        let dq = quantize_scales(&t.scales);
+        assert_eq!(dq.codes.len(), t.scales.len());
+        assert_eq!(dq.groups.len(), t.scales.len().div_ceil(GROUP));
+        assert_eq!(
+            pissa::quant::double::storage_bytes(&dq),
+            dq.codes.len() + 8 * dq.groups.len()
+        );
+        // double_quantize's reported saving is the bytes delta.
+        let mut t2 = t.clone();
+        let saved = double_quantize(&mut t2);
+        let before = 4 * t.scales.len();
+        let after = pissa::quant::double::storage_bytes(&dq);
+        assert_eq!(saved, before.saturating_sub(after), "seed={seed} {m}x{n}");
+    }
+}
+
+#[test]
+fn prop_block_iterator_and_range_decode_agree_with_dequantize() {
+    use pissa::quant::{dequantize, quantize};
+    for seed in 0..8u64 {
+        let mut rng = Rng::new(1030 + seed);
+        let (m, n) = rand_shape(&mut rng, 2, 60);
+        let t = quantize(&Mat::randn(m, n, 0.0, 0.4, &mut rng));
+        let dense = dequantize(&t);
+        // Blocks tile the flattened buffer exactly.
+        let mut rebuilt = vec![0.0f32; t.len()];
+        for blk in t.blocks() {
+            blk.dequantize_into(&mut rebuilt[blk.start..blk.start + blk.len]);
+        }
+        assert_eq!(rebuilt, dense.data, "seed={seed} {m}x{n} blocks() retile");
+        // Random unaligned ranges decode identically to slicing.
+        for _ in 0..12 {
+            let lo = rng.below(t.len() + 1);
+            let hi = lo + rng.below(t.len() - lo + 1);
+            let mut buf = vec![0.0f32; hi - lo];
+            t.dequantize_range(lo, hi, &mut buf);
+            assert_eq!(buf, dense.data[lo..hi], "seed={seed} range [{lo}, {hi})");
+        }
+    }
+}

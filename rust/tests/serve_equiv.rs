@@ -1,16 +1,23 @@
 //! Serving equivalence property tests.
 //!
-//! Contract: for random bases, every serving strategy, rank ∈ {1, 4, 16},
-//! and batch ∈ {1, 7, 64}, the batched server output equals the
-//! merged-dense forward (`engine.effective_weight_of` row by row) within
-//! 1e-4 relative Frobenius error — including mixed-adapter batches and
-//! the no-adapter (base-only) path. Plus the edge-case hardening set:
-//! empty batches, unknown adapters, and over-rank configs are typed
-//! errors, never panics.
+//! Contract: for random bases, every full-precision serving strategy,
+//! rank ∈ {1, 4, 16}, and batch ∈ {1, 7, 64}, the batched server output
+//! equals the merged-dense forward (`engine.effective_weight_of` row by
+//! row) within 1e-4 relative Frobenius error — including mixed-adapter
+//! batches and the no-adapter (base-only) path. The quantized-base pair
+//! has its own contract over the same rank × batch grid: `fused-quant`
+//! equals the dequantize-once dense reference bit for bit, and matches
+//! the fp32 fused forward within a tolerance derived from
+//! `quant::error::fro_error` of the NF4 base round trip. Plus the
+//! edge-case hardening set: empty batches, unknown adapters, over-rank
+//! configs, and quantized adapters under full-precision strategies are
+//! typed errors, never panics.
 
 use pissa::adapter::{AdapterEngine, AdapterSpec};
-use pissa::linalg::{vecmat, Mat};
+use pissa::linalg::{matmul, vecmat, Mat};
 use pissa::model::BaseModel;
+use pissa::quant::error::fro_error;
+use pissa::quant::nf4_roundtrip;
 use pissa::runtime::ConfigInfo;
 use pissa::serve::{drift_factors, Request, ServeConfig, ServeError, ServeStrategy, Server};
 use pissa::util::rng::Rng;
@@ -86,14 +93,14 @@ fn rel_fro(a: &Mat, b: &Mat) -> f64 {
 }
 
 #[test]
-fn all_strategies_match_merged_dense_forward() {
+fn all_exact_strategies_match_merged_dense_forward() {
     for &rank in &[1usize, 4, 16] {
         let (engine, names, mut rng) = build_engine(rank, 100 + rank as u64);
         for layer in [0usize, 1] {
             for &batch in &[1usize, 7, 64] {
                 let requests = mixed_batch(&names, batch, &mut rng);
                 let want = reference(&engine, layer, &requests);
-                for strategy in ServeStrategy::all() {
+                for strategy in ServeStrategy::exact() {
                     let mut server = Server::new(
                         &engine,
                         ServeConfig::new(MODULE).layer(layer).strategy(strategy).max_batch(64),
@@ -125,12 +132,178 @@ fn base_only_batch_matches_dense_base() {
         })
         .collect();
     let want = reference(&engine, 0, &requests);
-    for strategy in ServeStrategy::all() {
+    for strategy in ServeStrategy::exact() {
         let mut server =
             Server::new(&engine, ServeConfig::new(MODULE).strategy(strategy)).unwrap();
         let got = server.forward(&requests).unwrap();
         let err = rel_fro(&got, &want);
         assert!(err < 1e-5, "{}: base-only err {err:.3e}", strategy.name());
+    }
+}
+
+// ---- quantized-base serving (fused NF4 dequant-GEMM) ------------------
+
+/// Frobenius norm of a batch of request inputs (for the ‖X·E‖_F ≤
+/// ‖X‖_F·‖E‖_F tolerance bound).
+fn requests_fro(requests: &[Request]) -> f64 {
+    requests
+        .iter()
+        .flat_map(|r| r.x.iter())
+        .map(|&v| (v as f64) * (v as f64))
+        .sum::<f64>()
+        .sqrt()
+}
+
+#[test]
+fn fused_quant_matches_dequant_once_dense_bit_for_bit() {
+    // The DequantGemm contract: streaming NF4 panels through the fused
+    // forward is the SAME arithmetic as dequantizing once into a dense
+    // base — for every rank × batch point, mixed batches included.
+    for &rank in &[1usize, 4, 16] {
+        let (engine, names, mut rng) = build_engine(rank, 300 + rank as u64);
+        for layer in [0usize, 1] {
+            for &batch in &[1usize, 7, 64] {
+                let requests = mixed_batch(&names, batch, &mut rng);
+                let mut fq = Server::new(
+                    &engine,
+                    ServeConfig::new(MODULE)
+                        .layer(layer)
+                        .strategy(ServeStrategy::FusedQuant)
+                        .max_batch(64),
+                )
+                .unwrap();
+                let mut dd = Server::new(
+                    &engine,
+                    ServeConfig::new(MODULE)
+                        .layer(layer)
+                        .strategy(ServeStrategy::DequantDense)
+                        .max_batch(64),
+                )
+                .unwrap();
+                let yq = fq.forward(&requests).unwrap();
+                let yd = dd.forward(&requests).unwrap();
+                assert_eq!(
+                    yq.data,
+                    yd.data,
+                    "rank={rank} layer={layer} batch={batch}: fused-quant diverged from \
+                     the dequantize-once dense reference"
+                );
+                // And the NF4 store really is smaller than the dense one.
+                assert!(fq.base_resident_bytes() * 2 < dd.base_resident_bytes());
+            }
+        }
+    }
+}
+
+#[test]
+fn fused_quant_matches_fp32_fused_within_nf4_tolerance() {
+    // fused-quant differs from the fp32 fused forward ONLY in the base:
+    // Y_q − Y = X·(deq(nf4(W)) − W), so ‖Y_q − Y‖_F is bounded by
+    // ‖X‖_F times the NF4 round-trip error fro_error(W, nf4(W)).
+    for &rank in &[1usize, 4, 16] {
+        let (engine, names, mut rng) = build_engine(rank, 400 + rank as u64);
+        for layer in [0usize, 1] {
+            let w = engine.base_weight(MODULE, layer);
+            let nf4_err = fro_error(&w, &nf4_roundtrip(&w));
+            assert!(nf4_err > 0.0, "NF4 must actually perturb a random base");
+            for &batch in &[1usize, 7, 64] {
+                let requests = mixed_batch(&names, batch, &mut rng);
+                let mut fused = Server::new(
+                    &engine,
+                    ServeConfig::new(MODULE)
+                        .layer(layer)
+                        .strategy(ServeStrategy::Fused)
+                        .max_batch(64),
+                )
+                .unwrap();
+                let mut fq = Server::new(
+                    &engine,
+                    ServeConfig::new(MODULE)
+                        .layer(layer)
+                        .strategy(ServeStrategy::FusedQuant)
+                        .max_batch(64),
+                )
+                .unwrap();
+                let y = fused.forward(&requests).unwrap();
+                let yq = fq.forward(&requests).unwrap();
+                let diff = yq.sub(&y).fro();
+                let bound = requests_fro(&requests) * nf4_err * 1.001 + 1e-5;
+                assert!(
+                    diff <= bound,
+                    "rank={rank} layer={layer} batch={batch}: |Yq - Y|_F = {diff:.4e} \
+                     exceeds the NF4-derived bound {bound:.4e}"
+                );
+                // The quantization is visible (guards a silently-dense base).
+                assert!(diff > 0.0, "rank={rank} layer={layer} batch={batch}");
+            }
+        }
+    }
+}
+
+#[test]
+fn quantized_adapters_route_through_fused_quant() {
+    // QLoRA and QPiSSA adapters — the configuration the paper says is
+    // cheapest to deploy — are a typed error under every full-precision
+    // strategy (message naming the escape hatch) and served end-to-end
+    // by fused-quant.
+    let mut rng = Rng::new(13);
+    let base = BaseModel::random(&cfg(32), &mut rng);
+    let mut eng = AdapterEngine::new(base);
+    eng.attach("ql", AdapterSpec::qlora(4).targets(&[MODULE]), &mut rng).unwrap();
+    drift_factors(&mut eng, "ql", MODULE, 0.05, &mut rng).unwrap();
+    eng.attach("qp", AdapterSpec::qpissa(4).iters(2).targets(&[MODULE]), &mut rng).unwrap();
+    drift_factors(&mut eng, "qp", MODULE, 0.05, &mut rng).unwrap();
+
+    for strategy in ServeStrategy::exact() {
+        let err =
+            Server::new(&eng, ServeConfig::new(MODULE).strategy(strategy)).unwrap_err();
+        assert!(
+            matches!(err.downcast_ref::<ServeError>(), Some(ServeError::QuantizedAdapter { .. })),
+            "{}: got {err:?}",
+            strategy.name()
+        );
+        assert!(err.to_string().contains("fused-quant"), "escape hatch missing: {err}");
+    }
+
+    let mut server = Server::new(
+        &eng,
+        ServeConfig::new(MODULE).strategy(ServeStrategy::FusedQuant).max_batch(8),
+    )
+    .unwrap();
+    let requests: Vec<Request> = (0..6)
+        .map(|i| {
+            let mut x = vec![0.0f32; 32];
+            rng.fill_normal(&mut x, 0.0, 1.0);
+            Request::new(["ql", "qp"][i % 2], x)
+        })
+        .collect();
+    let got = server.forward(&requests).unwrap();
+
+    let w = eng.base_weight(MODULE, 0);
+    for (i, r) in requests.iter().enumerate() {
+        let name = r.adapter.as_deref().unwrap();
+        let ad = eng.get(name).unwrap();
+        let w_eff = eng.effective_weight_of(name, MODULE, 0).unwrap();
+        let want = vecmat(&r.x, &w_eff);
+        // served_W − true_W = nf4(W) − A₀·B₀ − frozen, exactly (the
+        // drifted factors cancel); bound the row error by ‖x‖·‖E‖_F.
+        let a0 = ad.init_factors[&format!("a_{MODULE}")].layer(0);
+        let b0 = ad.init_factors[&format!("b_{MODULE}")].layer(0);
+        let frozen = ad.frozen[&format!("base_{MODULE}")].layer(0);
+        let e = nf4_roundtrip(&w).sub(&matmul(&a0, &b0)).sub(&frozen);
+        let x_norm = r.x.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt();
+        let bound = x_norm * e.fro() * 1.001 + 1e-4;
+        let row_err: f64 = got
+            .row(i)
+            .iter()
+            .zip(&want)
+            .map(|(a, b)| ((a - b) as f64).powi(2))
+            .sum::<f64>()
+            .sqrt();
+        assert!(
+            row_err <= bound,
+            "request {i} ({name}): err {row_err:.4e} > bound {bound:.4e}"
+        );
     }
 }
 
