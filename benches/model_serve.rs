@@ -1,0 +1,228 @@
+//! §Full-model serving — the whole-model pipeline vs merged-per-request,
+//! across layer counts.
+//!
+//! PR 2/3 measured one linear; this bench measures the deployment shape
+//! the paper actually fine-tunes: every tenant adapts ALL seven linears
+//! of EVERY layer, and a mixed batch of token requests runs embed →
+//! L blocks → head in one `ModelServer::forward` call. Three strategies
+//! over the SAME engine, at each layer count:
+//!
+//!   fused              shared base GEMM per linear + per-group low-rank
+//!                      corrections (ΔW never materialized)
+//!   merge-per-request  the naive baseline: materialize every merged
+//!                      dense weight for every request at every linear
+//!   fused-quant        the QPiSSA shape: all L×7 bases NF4-resident
+//!                      (shared per-module Nf4Stack snapshots), streamed
+//!                      through the dequant-GEMM
+//!
+//! Emits one `BENCH {json}` line per (layers, strategy) with throughput
+//! and aggregate resident base bytes, plus a summary line per layer
+//! count. Targets: fused ≥ 3× merge-per-request throughput, and
+//! fused-quant aggregate residency ≤ 0.35× dense while matching the
+//! dense pipeline's outputs (probe-asserted against dequant-dense bit
+//! for bit).
+//!
+//! Quick mode (default) trims batch count, not the workload shape; set
+//! PISSA_BENCH_FULL=1 for more timed batches.
+
+mod common;
+
+use pissa::adapter::{AdapterEngine, AdapterSpec};
+use pissa::metrics::write_labeled_csv;
+use pissa::model::{BaseModel, LINEARS};
+use pissa::runtime::ConfigInfo;
+use pissa::serve::{drift_factors, ModelRequest, ModelServer, ServeConfig, ServeStrategy};
+use pissa::util::json::{jnum, Json};
+use pissa::util::rng::Rng;
+
+const DIM: usize = 128;
+const D_FF: usize = 256;
+const VOCAB: usize = 64;
+const N_ADAPTERS: usize = 8;
+const RANK: usize = 8;
+const BATCH: usize = 32;
+const BASE_FRAC: f64 = 0.125;
+const LAYER_COUNTS: [usize; 3] = [1, 2, 4];
+
+fn workload(names: &[String], batches: usize, rng: &mut Rng) -> Vec<Vec<ModelRequest>> {
+    (0..batches)
+        .map(|_| {
+            (0..BATCH)
+                .map(|_| {
+                    let token = (rng.uniform() * VOCAB as f64) as usize % VOCAB;
+                    if rng.uniform() < BASE_FRAC {
+                        ModelRequest::base(token)
+                    } else {
+                        ModelRequest::new(rng.choice(names), token)
+                    }
+                })
+                .collect()
+        })
+        .collect()
+}
+
+fn build_engine(layers: usize, rng: &mut Rng) -> anyhow::Result<(AdapterEngine, Vec<String>)> {
+    let cfg = ConfigInfo {
+        name: "model-serve-bench".into(),
+        kind: "decoder".into(),
+        vocab: VOCAB,
+        d_model: DIM,
+        n_layers: layers,
+        n_heads: 2,
+        d_ff: D_FF,
+        seq_len: 8,
+        batch: 8,
+        eval_batch: 4,
+        n_classes: 0,
+        ranks: vec![RANK],
+    };
+    let base = BaseModel::random(&cfg, rng);
+    let mut engine = AdapterEngine::new(base);
+    let names: Vec<String> = (0..N_ADAPTERS).map(|i| format!("tenant{i:02}")).collect();
+    for name in &names {
+        engine.attach(name, AdapterSpec::pissa(RANK), rng)?;
+        for module in LINEARS {
+            drift_factors(&mut engine, name, module, 0.05, rng)?;
+        }
+    }
+    Ok((engine, names))
+}
+
+fn main() -> anyhow::Result<()> {
+    common::banner(
+        "§Full-model serving",
+        &format!(
+            "whole-model pipeline (L×7 adapted linears) — d={DIM}, f={D_FF}, \
+             {N_ADAPTERS} adapters, rank {RANK}, batch {BATCH}, layers {LAYER_COUNTS:?}"
+        ),
+    );
+    let full = common::full_mode();
+    let mut rows: Vec<(String, Vec<f64>)> = Vec::new();
+    let mut all_pass = true;
+
+    for layers in LAYER_COUNTS {
+        let mut rng = Rng::new(11 + layers as u64);
+        eprintln!("[setup] {layers}-layer engine + {N_ADAPTERS} pissa:rank={RANK} adapters…");
+        let (engine, names) = build_engine(layers, &mut rng)?;
+
+        // Probe: fused-quant must equal dequant-dense bit for bit through
+        // the WHOLE pipeline (same shared NF4 snapshots, same correction
+        // path, same accumulation order at every one of the L×7 linears).
+        {
+            let mut probe_rng = Rng::new(99);
+            let probe = &workload(&names, 1, &mut probe_rng)[0];
+            let mut fq = ModelServer::new(
+                &engine,
+                ServeConfig::full_model().strategy(ServeStrategy::FusedQuant).max_batch(BATCH),
+            )?;
+            let mut dd = ModelServer::new(
+                &engine,
+                ServeConfig::full_model().strategy(ServeStrategy::DequantDense).max_batch(BATCH),
+            )?;
+            anyhow::ensure!(
+                fq.forward(probe)?.data == dd.forward(probe)?.data,
+                "layers={layers}: fused-quant diverged from dequant-dense on the probe batch"
+            );
+            eprintln!("[probe] L={layers}: fused-quant == dequant-dense bit-for-bit ✓");
+        }
+
+        println!(
+            "\nlayers={layers}\n{:18} {:>10} {:>10} {:>10} {:>14} {:>8}",
+            "strategy", "p50 ms", "p95 ms", "req/s", "base bytes", "bytes x"
+        );
+        let mut req_per_s = std::collections::BTreeMap::new();
+        let mut resident = std::collections::BTreeMap::new();
+        let mut dense_bytes = 0usize;
+        let order =
+            [ServeStrategy::MergePerRequest, ServeStrategy::Fused, ServeStrategy::FusedQuant];
+        for strategy in order {
+            let timed = match (strategy, full) {
+                (ServeStrategy::MergePerRequest, true) => 4,
+                (ServeStrategy::MergePerRequest, false) => 2,
+                (_, true) => 20,
+                (_, false) => 6,
+            };
+            let mut server = ModelServer::new(
+                &engine,
+                ServeConfig::full_model().strategy(strategy).max_batch(BATCH),
+            )?;
+            dense_bytes = server.dense_base_bytes();
+            let bytes = server.base_resident_bytes();
+            let mut wl_rng = Rng::new(77); // identical request stream per strategy
+            let all = workload(&names, timed + 1, &mut wl_rng);
+            server.forward(&all[0])?; // warmup (page in the snapshot)
+            server.reset_stats();
+            for batch in &all[1..] {
+                server.forward(batch)?;
+            }
+            let s = server.stats().summary();
+            req_per_s.insert(strategy.name(), s.req_per_s);
+            resident.insert(strategy.name(), bytes);
+            println!(
+                "{:18} {:>10.3} {:>10.3} {:>10.0} {:>14} {:>8.3}",
+                strategy.name(),
+                s.p50_s * 1e3,
+                s.p95_s * 1e3,
+                s.req_per_s,
+                bytes,
+                bytes as f64 / dense_bytes as f64,
+            );
+            let mut j = Json::obj();
+            j.set("bench", Json::Str("model_serve".into()));
+            j.set("strategy", Json::Str(strategy.name().into()));
+            j.set("layers", jnum(layers as f64));
+            j.set("dim", jnum(DIM as f64));
+            j.set("d_ff", jnum(D_FF as f64));
+            j.set("adapters", jnum(N_ADAPTERS as f64));
+            j.set("rank", jnum(RANK as f64));
+            j.set("batch", jnum(BATCH as f64));
+            j.set("batches", jnum(s.batches as f64));
+            j.set("p50_ms", jnum(s.p50_s * 1e3));
+            j.set("p95_ms", jnum(s.p95_s * 1e3));
+            j.set("req_per_s", jnum(s.req_per_s));
+            j.set("resident_base_bytes", jnum(bytes as f64));
+            j.set("resident", server.resident_breakdown().to_json());
+            println!("BENCH {j}");
+            rows.push((
+                format!("L{layers}-{}", strategy.name()),
+                vec![layers as f64, s.p50_s * 1e3, s.p95_s * 1e3, s.req_per_s, bytes as f64],
+            ));
+        }
+
+        // Per-layer-count acceptance: fused ≥ 3× the merged baseline,
+        // fused-quant ≤ 0.35× the dense resident bytes.
+        let speedup = req_per_s["fused"] / req_per_s["merge-per-request"].max(1e-12);
+        let bytes_ratio = resident["fused-quant"] as f64 / dense_bytes as f64;
+        let speed_ok = speedup >= 3.0;
+        let bytes_ok = bytes_ratio <= 0.35;
+        all_pass &= speed_ok && bytes_ok;
+        println!(
+            "layers={layers}: fused {speedup:.1}x merge-per-request (target >= 3x: {}), \
+             fused-quant {bytes_ratio:.3}x dense bytes (target <= 0.35x: {})",
+            if speed_ok { "PASS" } else { "FAIL" },
+            if bytes_ok { "PASS" } else { "FAIL" },
+        );
+        let mut j = Json::obj();
+        j.set("bench", Json::Str("model_serve_summary".into()));
+        j.set("layers", jnum(layers as f64));
+        j.set("fused_speedup_vs_merge", jnum(speedup));
+        j.set("speedup_target", jnum(3.0));
+        j.set("quant_bytes_ratio", jnum(bytes_ratio));
+        j.set("bytes_target", jnum(0.35));
+        j.set("pass", Json::Bool(speed_ok && bytes_ok));
+        println!("BENCH {j}");
+    }
+
+    println!("\noverall: {}", if all_pass { "PASS" } else { "FAIL" });
+    let out = common::results_dir().join("model_serve.csv");
+    write_labeled_csv(
+        &out,
+        &["point", "layers", "p50_ms", "p95_ms", "req_per_s", "resident_base_bytes"],
+        &rows,
+    )?;
+    println!(
+        "(rows -> {}; methodology in EXPERIMENTS.md §Full-model serving)",
+        out.display()
+    );
+    Ok(())
+}

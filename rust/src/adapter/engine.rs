@@ -100,12 +100,63 @@ impl AdapterEngine {
         self.base.linears[&format!("base_{module}")].layer(layer)
     }
 
+    /// (rows, cols) of a module's base weight — the same for every layer
+    /// of the stack — read off the stacked tensor's shape without copying
+    /// a matrix out (validation walks all `L × 7` linears).
+    pub fn base_dims(&self, module: &str) -> (usize, usize) {
+        let t = &self.base.linears[&format!("base_{module}")];
+        (t.shape[1], t.shape[2])
+    }
+
     /// Blockwise-NF4 snapshot of the base weight — what the
     /// quantized-base serving strategies keep resident instead of the
     /// dense matrix (§4's QPiSSA deployment trade: ~0.14× the bytes, at
     /// the NF4 round-trip error the paper bounds in Table 3).
     pub fn quant_base_weight(&self, module: &str, layer: usize) -> crate::quant::Nf4Tensor {
         crate::quant::quantize(&self.base_weight(module, layer))
+    }
+
+    /// One shared NF4 snapshot of a module's whole stacked base weight:
+    /// every layer quantized once, handed out as `Arc` clones. The
+    /// full-model serving pipeline builds one stack per module and gives
+    /// each of its L per-layer serving units a handle, so the module's
+    /// NF4 codes are resident exactly once no matter how many layers (or
+    /// rebuilt servers) stream from them.
+    pub fn quant_base_stack(&self, module: &str) -> crate::quant::Nf4Stack {
+        let mats: Vec<Mat> =
+            (0..self.base.n_layers()).map(|li| self.base_weight(module, li)).collect();
+        crate::quant::Nf4Stack::quantize_layers(&mats)
+    }
+
+    /// Low-rank SERVING delta of one adapter for `(module, layer)`,
+    /// against the ORIGINAL dense weight `W`: `None` when the adapter
+    /// does not target the module (serve the base unchanged); the current
+    /// factors themselves (rank r) when the frozen residual is `W` (the
+    /// LoRA-style zero-B init); otherwise the Appendix-C equivalent-LoRA
+    /// pair `ΔA = [A'|A₀], ΔB = [B';−B₀]` at rank 2r, which plugs into
+    /// `W` exactly for full-precision adapters and to the NF4 round-trip
+    /// error (the paper's Table-3 bound) for quantized ones.
+    pub fn serve_delta(
+        &self,
+        name: &str,
+        module: &str,
+        layer: usize,
+    ) -> Result<Option<(Mat, Mat)>> {
+        let ad = self.get(name)?;
+        if !ad.spec.targets_module(module) {
+            return Ok(None);
+        }
+        let a0 = ad.init_factors[&format!("a_{module}")].layer(layer);
+        let b0 = ad.init_factors[&format!("b_{module}")].layer(layer);
+        let a1 = ad.factors[&format!("a_{module}")].layer(layer);
+        let b1 = ad.factors[&format!("b_{module}")].layer(layer);
+        if b0.data.iter().all(|&x| x == 0.0) {
+            // Frozen residual is W itself: the factors ARE the delta.
+            Ok(Some((a1, b1)))
+        } else {
+            let d = pissa_to_lora(&a0, &b0, &a1, &b1);
+            Ok(Some((d.da, d.db)))
+        }
     }
 
     /// Initialize and register an adapter from a spec. The first attached
@@ -641,6 +692,50 @@ mod tests {
         assert!(st.trainable.contains_key("a_down"));
         assert!(st.frozen.contains_key("base_down"));
         assert!(st.frozen.contains_key("embed"));
+    }
+
+    #[test]
+    fn serve_delta_plugs_into_the_original_weight() {
+        let (mut eng, mut rng) = engine(8);
+        eng.attach("p", AdapterSpec::pissa(3).targets(&["q"]), &mut rng).unwrap();
+        // Untargeted module: no delta.
+        assert!(eng.serve_delta("p", "v", 0).unwrap().is_none());
+        // Drift, then check W + ΔA·ΔB == effective weight (Appendix C).
+        let (mut a, mut b) = {
+            let ad = eng.get("p").unwrap();
+            (ad.factors["a_q"].layer(0), ad.factors["b_q"].layer(0))
+        };
+        for x in a.data.iter_mut().chain(b.data.iter_mut()) {
+            *x += 0.05 * rng.normal_f32(0.0, 1.0);
+        }
+        eng.set_factors("p", "q", 0, &a, &b).unwrap();
+        let (da, db) = eng.serve_delta("p", "q", 0).unwrap().unwrap();
+        assert_eq!(da.cols, 6, "PiSSA serve delta is the rank-2r Appendix-C pair");
+        let via = eng.base_weight("q", 0).add(&matmul(&da, &db));
+        let want = eng.effective_weight_of("p", "q", 0).unwrap();
+        assert!(via.sub(&want).fro() / want.fro() < 1e-4);
+        // LoRA (zero-B init): the delta is the raw rank-r factors.
+        eng.attach("l", AdapterSpec::lora(3).targets(&["q"]), &mut rng).unwrap();
+        let (la, _) = eng.serve_delta("l", "q", 0).unwrap().unwrap();
+        assert_eq!(la.cols, 3);
+    }
+
+    #[test]
+    fn quant_base_stack_matches_per_layer_snapshots() {
+        let (eng, _) = engine(9);
+        assert_eq!(eng.base_dims("gate"), (32, 64));
+        assert_eq!(eng.base_dims("down"), (64, 32));
+        let stack = eng.quant_base_stack("gate");
+        assert_eq!(stack.n_layers(), 2);
+        let mut total = 0;
+        for li in 0..2 {
+            let solo = eng.quant_base_weight("gate", li);
+            let shared = stack.layer(li);
+            assert_eq!(shared.codes, solo.codes);
+            assert_eq!(shared.scales, solo.scales);
+            total += shared.storage_bytes();
+        }
+        assert_eq!(stack.storage_bytes(), total);
     }
 
     #[test]

@@ -71,7 +71,11 @@
 //! strategy: the shared base stays resident as blockwise NF4 and is
 //! streamed through [`linalg::dequant_matmul`] — `pissa serve
 //! --quantized` end-to-end, `benches/quant_serve.rs` for the
-//! bytes/latency trade.
+//! bytes/latency trade. The same per-linear units stack into the
+//! whole-model pipeline [`serve::ModelServer`]: token-id requests run
+//! embed → every layer's seven adapted linears → head logits in one
+//! call, with residency/stats aggregated across the stack (`pissa serve
+//! --full-model`, `benches/model_serve.rs`).
 
 pub mod adapter;
 pub mod coordinator;

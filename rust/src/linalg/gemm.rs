@@ -170,10 +170,25 @@ pub fn dequant_matmul(x: &Mat, w: &Nf4Tensor) -> Mat {
     dequant_matmul_panel(x, w, DQ_PANEL_ROWS)
 }
 
+/// [`dequant_matmul`] writing into an existing buffer (overwritten, like
+/// [`matmul_into`]) — the quantized-base leg of the serving pipeline's
+/// reusable activation buffers: L layers of streamed base GEMMs land in
+/// the same ping-pong allocation instead of a fresh matrix per linear.
+pub fn dequant_matmul_into(x: &Mat, w: &Nf4Tensor, c: &mut Mat) {
+    dequant_matmul_panel_into(x, w, DQ_PANEL_ROWS, c);
+}
+
 /// [`dequant_matmul`] with an explicit panel height (rows of W decoded
 /// per streaming step). Exposed for the determinism/equivalence suites,
 /// which sweep panel sizes that don't divide the NF4 block size.
 pub fn dequant_matmul_panel(x: &Mat, w: &Nf4Tensor, panel_rows: usize) -> Mat {
+    let mut c = Mat::zeros(x.rows, w.cols);
+    dequant_matmul_panel_into(x, w, panel_rows, &mut c);
+    c
+}
+
+/// Core of the dequant-GEMM: C = X · deq(W) overwritten into `c`.
+pub fn dequant_matmul_panel_into(x: &Mat, w: &Nf4Tensor, panel_rows: usize, c: &mut Mat) {
     assert!(panel_rows >= 1, "panel_rows must be >= 1");
     assert_eq!(
         x.cols, w.rows,
@@ -181,9 +196,10 @@ pub fn dequant_matmul_panel(x: &Mat, w: &Nf4Tensor, panel_rows: usize) -> Mat {
         x.rows, x.cols, w.rows, w.cols
     );
     let (m, k, n) = (x.rows, w.rows, w.cols);
-    let mut c = Mat::zeros(m, n);
+    assert_eq!((c.rows, c.cols), (m, n), "dequant_matmul_into: output shape");
+    c.data.iter_mut().for_each(|v| *v = 0.0);
     if m == 0 || n == 0 || k == 0 {
-        return c;
+        return;
     }
     // Parallel over row blocks of C (disjoint output regions, the
     // determinism contract of util::par). Each worker owns one decode
@@ -204,7 +220,6 @@ pub fn dequant_matmul_panel(x: &Mat, w: &Nf4Tensor, panel_rows: usize) -> Mat {
             }
         }
     });
-    c
 }
 
 /// C += alpha * A·B accumulated into an existing buffer.
@@ -405,6 +420,19 @@ mod tests {
                 assert_eq!(got.data, want.data, "{m}x{k}x{n} panel={panel}");
             }
         }
+    }
+
+    #[test]
+    fn dequant_matmul_into_overwrites_stale_buffers() {
+        use crate::quant::nf4::quantize;
+        let mut rng = Rng::new(10);
+        let x = Mat::randn(5, 70, 0.0, 1.0, &mut rng);
+        let w = quantize(&Mat::randn(70, 37, 0.0, 0.5, &mut rng));
+        let want = dequant_matmul(&x, &w);
+        // A reused (ping-pong) buffer full of garbage must be overwritten.
+        let mut c = Mat::from_vec(5, 37, vec![7.5; 5 * 37]);
+        dequant_matmul_into(&x, &w, &mut c);
+        assert_eq!(c.data, want.data);
     }
 
     #[test]

@@ -63,6 +63,11 @@ COMMANDS
                [--strategy fused|merge|dense|fused-quant|dequant-dense]
                [--quantized]  (QPiSSA adapters + NF4-resident base via
                                the fused-quant dequant-GEMM path)
+               [--full-model] (whole-model pipeline: token requests
+                               through embed -> every layer's seven
+                               adapted linears -> head logits;
+                               [--layers 2] [--d-ff 2*d-model]
+                               [--vocab 64])
                [--module q] [--layer 0] [--d-model 128]
                [--base-frac 0.125] [--drift 0.05] [--iters 2]
                [--out results/serve_stats.json]
@@ -343,14 +348,43 @@ fn cmd_convert(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Resolve the serving strategy from `--strategy` / `--quantized`.
+/// `--quantized` pins a strategy that serves an NF4 base; an explicit
+/// conflicting `--strategy` is a config error.
+fn serve_strategy_from(args: &Args, quantized: bool) -> Result<pissa::serve::ServeStrategy> {
+    use pissa::serve::ServeStrategy;
+    if quantized {
+        if let Some(s) = args.get("strategy") {
+            let parsed = ServeStrategy::parse(s)?;
+            anyhow::ensure!(
+                parsed.quantized_base(),
+                "--quantized serves an NF4 base; --strategy {s} is full-precision \
+                 (drop it or pick fused-quant/dequant-dense)"
+            );
+            Ok(parsed)
+        } else {
+            Ok(ServeStrategy::FusedQuant)
+        }
+    } else {
+        ServeStrategy::parse(&args.str_or("strategy", "fused"))
+    }
+}
+
 /// Batched multi-adapter serving on a synthetic mixed-tenant workload:
 /// one random base model, N adapters (drifted to simulate training), and
 /// a request stream routed through the scheduler and the fused low-rank
 /// server. `--quantized` switches to the QPiSSA deployment shape: QPiSSA
 /// adapters over an NF4-resident shared base served via the fused-quant
-/// dequant-GEMM path. No artifacts needed.
+/// dequant-GEMM path. `--full-model` promotes the workload from one
+/// linear to the whole adapted forward pass (token-id requests through
+/// embed → every layer's seven linears → head logits). No artifacts
+/// needed.
 fn cmd_serve(args: &Args) -> Result<()> {
-    use pissa::serve::{drift_factors, Request, Scheduler, ServeConfig, ServeStrategy, Server};
+    use pissa::serve::{drift_factors, Request, Scheduler, ServeConfig, Server};
+
+    if args.bool_or("full-model", false) {
+        return cmd_serve_full_model(args);
+    }
 
     let d_model = args.usize_or("d-model", 128);
     let module = args.str_or("module", "q");
@@ -362,23 +396,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let base_frac = args.f64_or("base-frac", 0.125);
     let drift = args.f64_or("drift", 0.05) as f32;
     let quantized = args.bool_or("quantized", false);
-    let strategy = if quantized {
-        // --quantized pins the one strategy that serves an NF4 base;
-        // an explicit conflicting --strategy is a config error.
-        if let Some(s) = args.get("strategy") {
-            let parsed = ServeStrategy::parse(s)?;
-            anyhow::ensure!(
-                parsed.quantized_base(),
-                "--quantized serves an NF4 base; --strategy {s} is full-precision \
-                 (drop it or pick fused-quant/dequant-dense)"
-            );
-            parsed
-        } else {
-            ServeStrategy::FusedQuant
-        }
-    } else {
-        ServeStrategy::parse(&args.str_or("strategy", "fused"))?
-    };
+    let strategy = serve_strategy_from(args, quantized)?;
     let mut rng = Rng::new(args.u64_or("seed", 42));
 
     let cfg = pissa::runtime::ConfigInfo {
@@ -467,6 +485,122 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(out) = args.get("out") {
         let path = PathBuf::from(out);
         pissa::metrics::write_json(&path, &server.stats().to_json())?;
+        println!("wrote stats json to {}", path.display());
+    }
+    Ok(())
+}
+
+/// `pissa serve --full-model`: the whole-model pipeline on a synthetic
+/// mixed-tenant workload. Every tenant adapts ALL seven linears of every
+/// layer (the paper's fine-tuning shape); token-id requests stream
+/// through the scheduler into `ModelServer::forward`, which routes each
+/// batch through the `layers × 7` adapted linears in one call.
+fn cmd_serve_full_model(args: &Args) -> Result<()> {
+    use pissa::serve::{drift_factors, ModelRequest, ModelServer, Scheduler, ServeConfig};
+
+    let d_model = args.usize_or("d-model", 64);
+    let d_ff = args.usize_or("d-ff", 2 * d_model);
+    let n_layers = args.usize_or("layers", 2);
+    let vocab = args.usize_or("vocab", 64);
+    anyhow::ensure!(vocab >= 1, "--vocab must be >= 1 (token ids index the embedding table)");
+    let n_adapters = args.usize_or("adapters", 4);
+    let rank = args.usize_or("rank", 4);
+    let batch = args.usize_or("batch", 32);
+    let batches = args.usize_or("batches", 20);
+    let base_frac = args.f64_or("base-frac", 0.125);
+    let drift = args.f64_or("drift", 0.05) as f32;
+    let quantized = args.bool_or("quantized", false);
+    let strategy = serve_strategy_from(args, quantized)?;
+    let mut rng = Rng::new(args.u64_or("seed", 42));
+
+    let cfg = pissa::runtime::ConfigInfo {
+        name: "serve-full-synth".into(),
+        kind: "decoder".into(),
+        vocab,
+        d_model,
+        n_layers,
+        n_heads: 2,
+        d_ff,
+        seq_len: 8,
+        batch: 8,
+        eval_batch: 4,
+        n_classes: 0,
+        ranks: vec![rank],
+    };
+    let spec = if quantized {
+        AdapterSpec::qpissa(rank).iters(args.usize_or("iters", 2))
+    } else {
+        AdapterSpec::pissa(rank)
+    };
+    eprintln!(
+        "[serve] building {n_layers}-layer base (d={d_model}, f={d_ff}) + {n_adapters} \
+         {spec} adapters on all seven linears…"
+    );
+    let base = pissa::model::BaseModel::random(&cfg, &mut rng);
+    let mut engine = pissa::adapter::AdapterEngine::new(base);
+    let names: Vec<String> = (0..n_adapters).map(|i| format!("tenant{i:02}")).collect();
+    for name in &names {
+        engine.attach(name, spec.clone(), &mut rng)?;
+        for module in pissa::model::LINEARS {
+            drift_factors(&mut engine, name, module, drift, &mut rng)?;
+        }
+    }
+
+    let serve_cfg = ServeConfig::full_model().strategy(strategy).max_batch(batch);
+    let mut server = ModelServer::new(&engine, serve_cfg)?;
+
+    let mut scheduler: Scheduler<ModelRequest> = Scheduler::new(batch);
+    for _ in 0..batches * batch {
+        let token = (rng.uniform() * vocab as f64) as usize % vocab;
+        let req = if names.is_empty() || rng.uniform() < base_frac {
+            ModelRequest::base(token)
+        } else {
+            ModelRequest::new(rng.choice(&names), token)
+        };
+        scheduler.submit(req);
+    }
+    while let Some(b) = scheduler.take_batch() {
+        server.forward(&b)?;
+    }
+
+    let s = server.stats().summary();
+    println!(
+        "served {} requests in {} batches [{}] through {}x{} adapted linears  ({:.0} req/s)",
+        s.requests,
+        s.batches,
+        server.cfg(),
+        server.n_layers(),
+        pissa::model::LINEARS.len(),
+        s.req_per_s
+    );
+    let bd = server.resident_breakdown();
+    println!(
+        "resident base: {} bytes across all linears ({:.2}x of dense fp32 {})",
+        bd.total(),
+        bd.ratio(),
+        bd.dense_bytes
+    );
+    println!("per-module resident bytes (summed over {} layers):", server.n_layers());
+    for (module, bytes) in &bd.per_module {
+        println!("  {module:6} {bytes}");
+    }
+    println!(
+        "latency p50 {:.3} ms  p95 {:.3} ms  |  occupancy {:.0}%  |  {:.1} adapter \
+         groups/batch",
+        s.p50_s * 1e3,
+        s.p95_s * 1e3,
+        s.mean_occupancy * 100.0,
+        s.mean_groups
+    );
+    println!("per-adapter hits:");
+    for (name, hits) in &server.stats().hits {
+        println!("  {name:12} {hits}");
+    }
+    if let Some(out) = args.get("out") {
+        let path = PathBuf::from(out);
+        let mut j = server.stats().to_json();
+        j.set("resident", bd.to_json());
+        pissa::metrics::write_json(&path, &j)?;
         println!("wrote stats json to {}", path.display());
     }
     Ok(())

@@ -15,15 +15,20 @@ use anyhow::Result;
 /// (mirrors model.py LINEARS).
 pub const LINEARS: [&str; 7] = ["q", "k", "v", "o", "gate", "up", "down"];
 
-/// (in_dim, out_dim) for each linear type.
-pub fn linear_dims(cfg: &ConfigInfo, name: &str) -> (usize, usize) {
+/// (in_dim, out_dim) for each linear type. A name outside [`LINEARS`] is
+/// a typed [`crate::serve::ServeError::UnknownModule`] (callers range over
+/// user-supplied module names, e.g. serving configs — never a panic).
+pub fn linear_dims(cfg: &ConfigInfo, name: &str) -> Result<(usize, usize)> {
     let (d, f) = (cfg.d_model, cfg.d_ff);
-    match name {
+    Ok(match name {
         "q" | "k" | "v" | "o" => (d, d),
         "gate" | "up" => (d, f),
         "down" => (f, d),
-        other => panic!("unknown linear '{other}'"),
-    }
+        other => {
+            return Err(crate::serve::ServeError::UnknownModule { module: other.to_string() }
+                .into())
+        }
+    })
 }
 
 /// A "base model": the frozen scaffolding plus dense per-layer linears.
@@ -58,7 +63,7 @@ impl BaseModel {
 
         let mut linears = ParamStore::new();
         for name in LINEARS {
-            let (m, n) = linear_dims(cfg, name);
+            let (m, n) = linear_dims(cfg, name).expect("LINEARS names are always known");
             linears.insert(format!("base_{name}"), Tensor::randn(&[l, m, n], 0.02, rng));
         }
         BaseModel { config: cfg.name.clone(), scaffold, linears, encoder }
@@ -208,6 +213,20 @@ mod tests {
             eval_batch: 4,
             n_classes: 0,
             ranks: vec![2, 4],
+        }
+    }
+
+    #[test]
+    fn linear_dims_unknown_name_is_a_typed_error() {
+        let cfg = tiny_cfg();
+        assert_eq!(linear_dims(&cfg, "gate").unwrap(), (64, 128));
+        assert_eq!(linear_dims(&cfg, "down").unwrap(), (128, 64));
+        let err = linear_dims(&cfg, "bogus").unwrap_err();
+        match err.downcast_ref::<crate::serve::ServeError>() {
+            Some(crate::serve::ServeError::UnknownModule { module }) => {
+                assert_eq!(module, "bogus");
+            }
+            other => panic!("expected UnknownModule, got {other:?}"),
         }
     }
 

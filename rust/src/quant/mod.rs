@@ -8,4 +8,4 @@ pub mod error;
 pub mod nf4;
 
 pub use error::{fro_error, qlora_error, reduction_ratio, strategy_error};
-pub use nf4::{dequantize, nf4_roundtrip, quantize, storage_bytes, Nf4Block, Nf4Tensor};
+pub use nf4::{dequantize, nf4_roundtrip, quantize, storage_bytes, Nf4Block, Nf4Stack, Nf4Tensor};

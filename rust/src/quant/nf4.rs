@@ -10,6 +10,7 @@
 //! `double.rs`).
 
 use crate::linalg::Mat;
+use std::sync::Arc;
 
 /// Values per quantization block (QLoRA uses 64).
 pub const BLOCK: usize = 64;
@@ -155,6 +156,42 @@ impl Nf4Tensor {
     /// the free function [`storage_bytes`].
     pub fn storage_bytes(&self) -> usize {
         self.codes.len() + self.scales.len() * 4
+    }
+}
+
+/// Shared NF4 snapshot of a stacked per-layer weight (`[L, m, n]` sliced
+/// into L matrices). Every layer is quantized blockwise on its own —
+/// self-contained scales, so one layer can be dequantized or streamed
+/// through the dequant-GEMM without touching its neighbors — and the
+/// per-layer tensors sit behind `Arc`s, so every consumer of the stack
+/// (e.g. the L per-layer units of the full-model serving pipeline)
+/// serves from the SAME resident codes instead of quantizing or copying
+/// its own snapshot.
+#[derive(Clone, Debug)]
+pub struct Nf4Stack {
+    layers: Arc<[Arc<Nf4Tensor>]>,
+}
+
+impl Nf4Stack {
+    /// Quantize each layer matrix once. The layers usually share a shape
+    /// (a stacked weight) but are not required to.
+    pub fn quantize_layers(mats: &[Mat]) -> Nf4Stack {
+        Nf4Stack { layers: mats.iter().map(|m| Arc::new(quantize(m))).collect() }
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Shared handle to layer `l`'s NF4 tensor (an `Arc` clone — no code
+    /// or scale bytes are copied).
+    pub fn layer(&self, l: usize) -> Arc<Nf4Tensor> {
+        self.layers[l].clone()
+    }
+
+    /// Total resident bytes across all layers (packed codes + scales).
+    pub fn storage_bytes(&self) -> usize {
+        self.layers.iter().map(|t| t.storage_bytes()).sum()
     }
 }
 
@@ -370,6 +407,27 @@ mod tests {
         }
         assert_eq!(covered, t.len());
         assert_eq!(t.blocks().last().unwrap().len, 18);
+    }
+
+    #[test]
+    fn stack_layers_share_codes_and_match_per_layer_quantize() {
+        let mut rng = Rng::new(56);
+        let mats: Vec<Mat> = (0..3).map(|_| Mat::randn(6, 23, 0.0, 0.8, &mut rng)).collect();
+        let stack = Nf4Stack::quantize_layers(&mats);
+        assert_eq!(stack.n_layers(), 3);
+        let mut total = 0;
+        for (l, m) in mats.iter().enumerate() {
+            let solo = quantize(m);
+            let shared = stack.layer(l);
+            // Layer-local quantization: identical to quantizing the layer
+            // alone (scales never straddle layers).
+            assert_eq!(shared.codes, solo.codes, "layer {l} codes");
+            assert_eq!(shared.scales, solo.scales, "layer {l} scales");
+            total += shared.storage_bytes();
+            // Handing out another handle shares the allocation.
+            assert!(Arc::ptr_eq(&shared, &stack.layer(l)));
+        }
+        assert_eq!(stack.storage_bytes(), total);
     }
 
     #[test]

@@ -1,12 +1,16 @@
 //! Serving configuration and the typed serving error set.
 //!
-//! A [`ServeConfig`] pins the served linear (module + layer), the
-//! execution [`ServeStrategy`], and the scheduler's batch ceiling.
-//! Validation happens against a concrete [`AdapterEngine`]: every
-//! registered adapter must be servable under the config (quantized
-//! adapters only under a quantized-base strategy, declared rank within
-//! `min(m, n)` on the fused paths), so misconfiguration is a clear
-//! error at server construction, not a panic mid-batch.
+//! A [`ServeConfig`] pins WHAT is served — a [`ServeScope`]: one
+//! `(module, layer)` linear for a `Server`, or the whole adapted forward
+//! pass (every layer × all seven linears, embed to head) for a
+//! `ModelServer` — plus the execution [`ServeStrategy`] and the
+//! scheduler's batch ceiling. Validation happens against a concrete
+//! [`AdapterEngine`]: every registered adapter must be servable under
+//! the config (quantized adapters only under a quantized-base strategy,
+//! declared rank within `min(m, n)` on the fused paths — checked per
+//! served linear, i.e. across all `L×7` of them under the full-model
+//! scope), so misconfiguration is a clear error at server construction,
+//! not a panic mid-batch.
 
 use crate::adapter::AdapterEngine;
 use crate::model::{linear_dims, LINEARS};
@@ -104,6 +108,27 @@ impl ServeStrategy {
     }
 }
 
+/// What a serving config covers: one linear, or the whole model.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ServeScope {
+    /// One `(module, layer)` linear — the PR-2/PR-3 `Server`. This is the
+    /// default, so every pre-scope config keeps its meaning.
+    SingleLinear,
+    /// The whole adapted forward pass — embed → `n_layers` blocks over
+    /// all seven linears (norms + nonlinearity) → head — served by a
+    /// `ModelServer`. `module`/`layer` are ignored under this scope.
+    FullModel,
+}
+
+impl ServeScope {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ServeScope::SingleLinear => "single-linear",
+            ServeScope::FullModel => "full-model",
+        }
+    }
+}
+
 /// Typed serving errors — the contract of the edge-case hardening tests:
 /// bad requests are reported, never panicked on, and each variant can be
 /// matched (`err.downcast_ref::<ServeError>()`).
@@ -129,6 +154,11 @@ pub enum ServeError {
     UnknownModule { module: String },
     /// The config's layer index is out of range for the engine's base.
     LayerOutOfRange { layer: usize, n_layers: usize },
+    /// A full-model request's token id is outside the embedding table.
+    TokenOutOfRange { index: usize, token: usize, vocab: usize },
+    /// The config's [`ServeScope`] does not match the server type it was
+    /// handed to (`Server` is single-linear, `ModelServer` full-model).
+    ScopeMismatch { server: &'static str, scope: &'static str },
 }
 
 impl fmt::Display for ServeError {
@@ -171,19 +201,37 @@ impl fmt::Display for ServeError {
             ServeError::LayerOutOfRange { layer, n_layers } => {
                 write!(f, "layer {layer} out of range (base model has {n_layers} layers)")
             }
+            ServeError::TokenOutOfRange { index, token, vocab } => {
+                write!(
+                    f,
+                    "request[{index}]: token id {token} out of range (embedding table has \
+                     {vocab} entries)"
+                )
+            }
+            ServeError::ScopeMismatch { server, scope } => {
+                write!(
+                    f,
+                    "{server} cannot serve a {scope} config; use ServeConfig::new(module) \
+                     for a Server and ServeConfig::full_model() for a ModelServer"
+                )
+            }
         }
     }
 }
 
 impl std::error::Error for ServeError {}
 
-/// Declarative serving configuration. Build with [`ServeConfig::new`] and
-/// the chained setters, then hand to `Server::new` (which validates).
+/// Declarative serving configuration. Build with [`ServeConfig::new`]
+/// (single linear) or [`ServeConfig::full_model`] (whole forward pass)
+/// and the chained setters, then hand to `Server::new` /
+/// `ModelServer::new` (which validate).
 #[derive(Clone, Debug, PartialEq)]
 pub struct ServeConfig {
-    /// Which of the seven linears is served.
+    /// What is served: one linear or the whole model.
+    pub scope: ServeScope,
+    /// Which of the seven linears is served (single-linear scope only).
     pub module: String,
-    /// Which layer of the stacked weight.
+    /// Which layer of the stacked weight (single-linear scope only).
     pub layer: usize,
     /// Batch execution strategy.
     pub strategy: ServeStrategy,
@@ -194,11 +242,18 @@ pub struct ServeConfig {
 impl ServeConfig {
     pub fn new(module: &str) -> ServeConfig {
         ServeConfig {
+            scope: ServeScope::SingleLinear,
             module: module.to_string(),
             layer: 0,
             strategy: ServeStrategy::Fused,
             max_batch: 64,
         }
+    }
+
+    /// Whole-model scope: every layer × all seven linears, embed → head.
+    /// `module`/`layer` are unused (and left at their defaults).
+    pub fn full_model() -> ServeConfig {
+        ServeConfig { scope: ServeScope::FullModel, ..ServeConfig::new("q") }
     }
 
     pub fn layer(mut self, layer: usize) -> ServeConfig {
@@ -217,27 +272,56 @@ impl ServeConfig {
     }
 
     /// Validate the config against a concrete engine: known module, layer
-    /// in range, and every attached adapter servable. Quantized adapters
-    /// need a quantized-base strategy (`fused-quant`/`dequant-dense`) —
-    /// under the full-precision strategies their frozen NF4 base is not
-    /// the shared `W`, so the typed error points at the escape hatch.
-    /// The fused-style strategies additionally require declared rank ≤
-    /// min(m, n) of the served weight (the merged/dense strategies
+    /// in range (single-linear scope), and every attached adapter
+    /// servable on every linear the scope covers — one `(module, layer)`
+    /// for [`ServeScope::SingleLinear`], all `n_layers × 7` for
+    /// [`ServeScope::FullModel`]. Quantized adapters need a
+    /// quantized-base strategy (`fused-quant`/`dequant-dense`) — under
+    /// the full-precision strategies their frozen NF4 base is not the
+    /// shared `W`, so the typed error points at the escape hatch. The
+    /// fused-style strategies additionally require declared rank ≤
+    /// min(m, n) of each served weight (the merged/dense strategies
     /// accept any rank).
     pub fn validate(&self, engine: &AdapterEngine) -> Result<()> {
         anyhow::ensure!(self.max_batch >= 1, "max_batch must be >= 1");
-        if !LINEARS.contains(&self.module.as_str()) {
-            return Err(ServeError::UnknownModule { module: self.module.clone() }.into());
+        match self.scope {
+            ServeScope::SingleLinear => {
+                if !LINEARS.contains(&self.module.as_str()) {
+                    return Err(ServeError::UnknownModule { module: self.module.clone() }.into());
+                }
+                let n_layers = engine.base().n_layers();
+                if self.layer >= n_layers {
+                    return Err(
+                        ServeError::LayerOutOfRange { layer: self.layer, n_layers }.into()
+                    );
+                }
+                self.validate_module(engine, &self.module)
+            }
+            ServeScope::FullModel => {
+                // Every adapter must be servable on every linear it
+                // targets. Nothing in the servability check varies by
+                // layer (one module's stacked weights share a shape), so
+                // one pass over the seven modules covers all L×7 linears.
+                if engine.base().n_layers() == 0 {
+                    return Err(
+                        ServeError::LayerOutOfRange { layer: 0, n_layers: 0 }.into()
+                    );
+                }
+                for module in LINEARS {
+                    self.validate_module(engine, module)?;
+                }
+                Ok(())
+            }
         }
-        let n_layers = engine.base().n_layers();
-        if self.layer >= n_layers {
-            return Err(ServeError::LayerOutOfRange { layer: self.layer, n_layers }.into());
-        }
-        let w = engine.base_weight(&self.module, self.layer);
-        let (m, n) = (w.rows, w.cols);
+    }
+
+    /// The per-module servability check shared by both scopes. Reads the
+    /// weight dims off the stacked tensor — no matrix is copied out.
+    fn validate_module(&self, engine: &AdapterEngine, module: &str) -> Result<()> {
+        let (m, n) = engine.base_dims(module);
         for name in engine.names() {
             let ad = engine.get(name)?;
-            if !ad.spec.targets_module(&self.module) {
+            if !ad.spec.targets_module(module) {
                 continue; // served straight from the base weight
             }
             if ad.spec.quantized() && !self.strategy.quantized_base() {
@@ -250,11 +334,11 @@ impl ServeConfig {
             // Only the fused-style paths depend on the update actually
             // being low-rank; the merged/dense strategies serve any rank
             // correctly (the error message points there).
-            let rank = ad.spec.module_rank(&self.module);
+            let rank = ad.spec.module_rank(module);
             if self.strategy.fused_low_rank() && rank > m.min(n) {
                 return Err(ServeError::RankTooLarge {
                     adapter: name.to_string(),
-                    module: self.module.clone(),
+                    module: module.to_string(),
                     rank,
                     m,
                     n,
@@ -266,22 +350,36 @@ impl ServeConfig {
     }
 
     /// (in_dim, out_dim) of the served linear under `cfg` for a given
-    /// model config — handy for request construction.
-    pub fn dims_for(&self, cfg: &crate::runtime::ConfigInfo) -> (usize, usize) {
+    /// model config — handy for request construction. Errors under the
+    /// full-model scope (there is no single served linear).
+    pub fn dims_for(&self, cfg: &crate::runtime::ConfigInfo) -> Result<(usize, usize)> {
+        anyhow::ensure!(
+            self.scope == ServeScope::SingleLinear,
+            "dims_for: a {} config serves every linear, not one",
+            self.scope.name()
+        );
         linear_dims(cfg, &self.module)
     }
 }
 
 impl fmt::Display for ServeConfig {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        write!(
-            f,
-            "{}[{}]:{}:max_batch={}",
-            self.module,
-            self.layer,
-            self.strategy.name(),
-            self.max_batch
-        )
+        match self.scope {
+            ServeScope::SingleLinear => write!(
+                f,
+                "{}[{}]:{}:max_batch={}",
+                self.module,
+                self.layer,
+                self.strategy.name(),
+                self.max_batch
+            ),
+            ServeScope::FullModel => write!(
+                f,
+                "full-model:{}:max_batch={}",
+                self.strategy.name(),
+                self.max_batch
+            ),
+        }
     }
 }
 
@@ -318,10 +416,37 @@ mod tests {
     fn builder_and_display() {
         let c =
             ServeConfig::new("q").layer(1).strategy(ServeStrategy::DensePerAdapter).max_batch(8);
+        assert_eq!(c.scope, ServeScope::SingleLinear);
         assert_eq!(c.module, "q");
         assert_eq!(c.layer, 1);
         assert_eq!(c.max_batch, 8);
         assert_eq!(c.to_string(), "q[1]:dense-per-adapter:max_batch=8");
+    }
+
+    #[test]
+    fn full_model_scope_builder_and_display() {
+        let c = ServeConfig::full_model().strategy(ServeStrategy::FusedQuant).max_batch(16);
+        assert_eq!(c.scope, ServeScope::FullModel);
+        assert_eq!(c.to_string(), "full-model:fused-quant:max_batch=16");
+        assert_eq!(ServeScope::FullModel.name(), "full-model");
+        assert_eq!(ServeScope::SingleLinear.name(), "single-linear");
+        // No single served linear under the full-model scope.
+        let cfg = crate::runtime::ConfigInfo {
+            name: "t".into(),
+            kind: "decoder".into(),
+            vocab: 8,
+            d_model: 4,
+            n_layers: 1,
+            n_heads: 1,
+            d_ff: 8,
+            seq_len: 4,
+            batch: 1,
+            eval_batch: 1,
+            n_classes: 0,
+            ranks: vec![1],
+        };
+        assert!(c.dims_for(&cfg).is_err());
+        assert_eq!(ServeConfig::new("gate").dims_for(&cfg).unwrap(), (4, 8));
     }
 
     #[test]

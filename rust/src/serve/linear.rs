@@ -1,0 +1,441 @@
+//! `LinearServer` — the reusable per-linear serving unit.
+//!
+//! One `LinearServer` owns everything needed to execute a mixed-adapter
+//! batch through ONE `(module, layer)` linear: the shared base weight in
+//! the representation its strategy serves from, plus the prepared
+//! per-adapter low-rank deltas `(ΔA, ΔB)` against the ORIGINAL dense
+//! weight (the Appendix-C form, see [`AdapterEngine::serve_delta`]). The
+//! single-linear `Server` wraps exactly one of these; the whole-model
+//! `ModelServer` stacks `n_layers × 7` of them into a pipeline.
+//!
+//! The dense-vs-quant storage invariant is carried in the TYPE, not
+//! asserted at runtime: each strategy family constructs its own [`Exec`]
+//! variant, so the merged/dense execution paths hold a dense `Mat`
+//! directly — there is no "this store must be dense here" branch left to
+//! get wrong (the `unreachable!` the old monolithic server carried).
+//!
+//! A `LinearServer` operates on an already-packed batch (`X` plus the
+//! router's adapter [`Group`]s); request-level validation, scheduling,
+//! and stats live in the callers. `forward_into` overwrites a
+//! caller-owned output buffer, so a pipeline can ping-pong two
+//! activation buffers across a whole model instead of allocating a
+//! fresh matrix per linear.
+
+use super::config::ServeStrategy;
+use super::router::Group;
+use crate::adapter::AdapterEngine;
+use crate::linalg::{dequant_matmul_into, matmul, matmul_into, vecmat, Mat};
+use crate::quant::{dequantize, quantize, Nf4Tensor};
+use crate::util::par::par_map;
+use anyhow::Result;
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+/// Snapshot of one servable adapter on this linear:
+/// `effective = W + ΔA·ΔB`. `None` when the adapter does not target the
+/// served module (it serves the base weight unchanged).
+#[derive(Debug, Clone)]
+struct Prepared {
+    delta: Option<(Mat, Mat)>,
+}
+
+/// The NF4-resident shared base of the `fused-quant` strategy: packed
+/// codes + blockwise scales, streamed through the dequant-GEMM at
+/// request time. The dense matrix is never materialized server-side.
+/// Held behind an `Arc` so every consumer of one snapshot — e.g. the L
+/// per-layer units of a full-model pipeline fed from one
+/// [`crate::quant::Nf4Stack`] — shares the same resident bytes.
+#[derive(Debug, Clone)]
+pub struct QuantBase {
+    /// Blockwise NF4 snapshot of the served base weight (shared).
+    pub nf4: Arc<Nf4Tensor>,
+}
+
+impl QuantBase {
+    /// Bytes this base keeps resident (packed codes + f32 scales).
+    pub fn resident_bytes(&self) -> usize {
+        self.nf4.storage_bytes()
+    }
+}
+
+/// How the fused-family strategies store the shared base weight.
+#[derive(Debug)]
+enum BaseStore {
+    /// Full-precision m×n matrix: the original `W` for `fused`, or the
+    /// dequantized-once NF4 round trip for `dequant-dense`.
+    Dense(Mat),
+    /// NF4-resident base for `fused-quant` — the base GEMM streams the
+    /// packed blocks panel-by-panel instead of reading a dense matrix.
+    Quant(QuantBase),
+}
+
+impl BaseStore {
+    /// The shared base GEMM `X·base` of the fused forward, overwriting
+    /// `y` (a reusable activation buffer).
+    fn forward_into(&self, x: &Mat, y: &mut Mat) {
+        match self {
+            BaseStore::Dense(w) => matmul_into(x, w, y),
+            BaseStore::Quant(q) => dequant_matmul_into(x, &q.nf4, y),
+        }
+    }
+
+    fn resident_bytes(&self) -> usize {
+        match self {
+            BaseStore::Dense(w) => w.data.len() * 4,
+            BaseStore::Quant(q) => q.resident_bytes(),
+        }
+    }
+}
+
+/// Per-strategy execution state. The variant IS the strategy family, so
+/// each path statically holds the base representation it needs.
+#[derive(Debug)]
+enum Exec {
+    /// `fused` / `fused-quant` / `dequant-dense`: shared base GEMM (in
+    /// whichever storage) + per-group low-rank corrections.
+    Fused(BaseStore),
+    /// `dense-per-adapter`: dense base, merged once per adapter group.
+    GroupMerged(Mat),
+    /// `merge-per-request`: dense base, merged for every single request.
+    RequestMerged(Mat),
+}
+
+/// Batched mixed-adapter execution of ONE `(module, layer)` linear.
+///
+/// Snapshot semantics: construction copies the base weight (in the
+/// strategy's representation) and every adapter's serving delta out of
+/// the engine, which is then free to keep training; rebuild to pick up
+/// new factors.
+#[derive(Debug)]
+pub struct LinearServer {
+    module: String,
+    layer: usize,
+    n_in: usize,
+    n_out: usize,
+    exec: Exec,
+    prepared: BTreeMap<String, Prepared>,
+}
+
+impl LinearServer {
+    /// Snapshot one linear of `engine` under `strategy`. Assumes the
+    /// caller has run `ServeConfig::validate` (the `Server` /
+    /// `ModelServer` constructors do); engine lookups can still fail.
+    ///
+    /// `shared_quant` supplies a pre-built NF4 snapshot of this weight
+    /// for the quantized-base strategies — the full-model pipeline hands
+    /// every layer a handle from one per-module [`crate::quant::Nf4Stack`]
+    /// so nothing is quantized (or kept resident) twice. `None` quantizes
+    /// locally.
+    pub(crate) fn snapshot(
+        engine: &AdapterEngine,
+        module: &str,
+        layer: usize,
+        strategy: ServeStrategy,
+        shared_quant: Option<Arc<Nf4Tensor>>,
+    ) -> Result<LinearServer> {
+        // Dims come off the stacked tensor; the dense weight is only
+        // copied out in the arms that actually store it (under a shared
+        // NF4 snapshot the quantized strategies never touch it).
+        let (n_in, n_out) = engine.base_dims(module);
+        let nf4 = |sq: Option<Arc<Nf4Tensor>>| {
+            sq.unwrap_or_else(|| Arc::new(quantize(&engine.base_weight(module, layer))))
+        };
+        let exec = match strategy {
+            // NF4-resident base, streamed through the dequant-GEMM (the
+            // same snapshot `AdapterEngine::quant_base_weight` hands
+            // external callers).
+            ServeStrategy::FusedQuant => {
+                Exec::Fused(BaseStore::Quant(QuantBase { nf4: nf4(shared_quant) }))
+            }
+            // Same quantized snapshot, dequantized once into a dense
+            // copy: bit-for-bit the FusedQuant output at fp32 residency.
+            ServeStrategy::DequantDense => {
+                Exec::Fused(BaseStore::Dense(dequantize(&nf4(shared_quant))))
+            }
+            ServeStrategy::Fused => {
+                Exec::Fused(BaseStore::Dense(engine.base_weight(module, layer)))
+            }
+            ServeStrategy::DensePerAdapter => {
+                Exec::GroupMerged(engine.base_weight(module, layer))
+            }
+            ServeStrategy::MergePerRequest => {
+                Exec::RequestMerged(engine.base_weight(module, layer))
+            }
+        };
+        let mut prepared = BTreeMap::new();
+        for name in engine.names() {
+            let delta = engine.serve_delta(name, module, layer)?;
+            prepared.insert(name.to_string(), Prepared { delta });
+        }
+        Ok(LinearServer { module: module.to_string(), layer, n_in, n_out, exec, prepared })
+    }
+
+    pub fn module(&self) -> &str {
+        &self.module
+    }
+
+    pub fn layer(&self) -> usize {
+        self.layer
+    }
+
+    /// Input feature count of the served linear.
+    pub fn n_in(&self) -> usize {
+        self.n_in
+    }
+
+    /// Output feature count of the served linear.
+    pub fn n_out(&self) -> usize {
+        self.n_out
+    }
+
+    /// Names this unit can route to (snapshot order).
+    pub fn adapter_names(&self) -> Vec<&str> {
+        self.prepared.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Is `name` in the snapshot?
+    pub fn serves(&self, name: &str) -> bool {
+        self.prepared.contains_key(name)
+    }
+
+    /// Bytes the shared base keeps resident under this strategy: m·n·4
+    /// for every dense store, packed codes + scales for the NF4 store.
+    pub fn resident_bytes(&self) -> usize {
+        match &self.exec {
+            Exec::Fused(base) => base.resident_bytes(),
+            Exec::GroupMerged(w) | Exec::RequestMerged(w) => w.data.len() * 4,
+        }
+    }
+
+    /// Execute one packed batch: `x` is batch × n_in, `groups` the
+    /// router's bucketing of it (row indices into `x`). Allocates the
+    /// output; see [`LinearServer::forward_into`] for the buffer-reusing
+    /// form. Callers guarantee every group adapter is in the snapshot.
+    pub fn forward(&self, x: &Mat, groups: &[Group]) -> Mat {
+        let mut y = Mat::zeros(x.rows, self.n_out);
+        self.forward_into(x, groups, &mut y);
+        y
+    }
+
+    /// Execute one packed batch into a caller-owned buffer (overwritten).
+    /// This is the pipeline building block: a whole-model forward ping-
+    /// pongs two activation buffers through every layer's linears with
+    /// zero per-linear allocations on the shared path.
+    pub fn forward_into(&self, x: &Mat, groups: &[Group], y: &mut Mat) {
+        assert_eq!(x.cols, self.n_in, "{}[{}]: input width", self.module, self.layer);
+        assert_eq!(
+            (y.rows, y.cols),
+            (x.rows, self.n_out),
+            "{}[{}]: output shape",
+            self.module,
+            self.layer
+        );
+        match &self.exec {
+            Exec::Fused(base) => self.forward_fused(base, x, groups, y),
+            Exec::GroupMerged(w) => self.forward_group_merged(w, x, groups, y),
+            Exec::RequestMerged(w) => self.forward_request_merged(w, x, groups, y),
+        }
+    }
+
+    /// Shared `X·base` once (dense GEMM, or the streaming dequant-GEMM
+    /// for the NF4-resident store), then per-group `(X_g·ΔA)·ΔB`
+    /// corrections in parallel, scattered back in deterministic group
+    /// order.
+    fn forward_fused(&self, base: &BaseStore, x: &Mat, groups: &[Group], y: &mut Mat) {
+        base.forward_into(x, y);
+        let adapter_groups: Vec<&Group> = groups.iter().filter(|g| g.adapter.is_some()).collect();
+        let corrections: Vec<Option<Mat>> = par_map(adapter_groups.len(), 1, |gi| {
+            let g = adapter_groups[gi];
+            let prep = &self.prepared[g.adapter.as_deref().expect("filtered to Some")];
+            let (da, db) = prep.delta.as_ref()?;
+            let xg = gather_rows(x, &g.rows);
+            let t = matmul(&xg, da); // |g| × R   (skinny)
+            Some(matmul(&t, db)) // |g| × n   (rank-R panel product)
+        });
+        for (g, c) in adapter_groups.iter().zip(&corrections) {
+            if let Some(c) = c {
+                for (k, &row) in g.rows.iter().enumerate() {
+                    for (yv, cv) in y.row_mut(row).iter_mut().zip(c.row(k)) {
+                        *yv += cv;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Baseline: materialize the merged dense weight once per adapter
+    /// group, dense GEMM per group. Amortizes the merge across a group
+    /// but shares nothing across adapters.
+    fn forward_group_merged(&self, w: &Mat, x: &Mat, groups: &[Group], y: &mut Mat) {
+        y.data.iter_mut().for_each(|v| *v = 0.0);
+        let outs: Vec<Mat> = par_map(groups.len(), 1, |gi| {
+            let g = &groups[gi];
+            let xg = gather_rows(x, &g.rows);
+            match self.group_delta(g) {
+                Some((da, db)) => {
+                    let merged = w.add(&matmul(da, db));
+                    matmul(&xg, &merged)
+                }
+                None => matmul(&xg, w),
+            }
+        });
+        for (g, out) in groups.iter().zip(&outs) {
+            for (k, &row) in g.rows.iter().enumerate() {
+                y.row_mut(row).copy_from_slice(out.row(k));
+            }
+        }
+    }
+
+    /// Naive baseline: merge (materialize `W + ΔA·ΔB`) for every single
+    /// request, then one dense vector-matrix product. Sequential — this
+    /// is the cost model the fused path is measured against.
+    fn forward_request_merged(&self, w: &Mat, x: &Mat, groups: &[Group], y: &mut Mat) {
+        y.data.iter_mut().for_each(|v| *v = 0.0);
+        for g in groups {
+            let delta = self.group_delta(g);
+            for &row in &g.rows {
+                let out = match delta {
+                    Some((da, db)) => {
+                        let merged = w.add(&matmul(da, db));
+                        vecmat(x.row(row), &merged)
+                    }
+                    None => vecmat(x.row(row), w),
+                };
+                y.row_mut(row).copy_from_slice(&out);
+            }
+        }
+    }
+
+    fn group_delta(&self, g: &Group) -> Option<&(Mat, Mat)> {
+        g.adapter.as_deref().and_then(|n| self.prepared[n].delta.as_ref())
+    }
+}
+
+/// Gather a row subset of a packed batch.
+fn gather_rows(x: &Mat, rows: &[usize]) -> Mat {
+    let mut out = Mat::zeros(rows.len(), x.cols);
+    for (k, &row) in rows.iter().enumerate() {
+        out.row_mut(k).copy_from_slice(x.row(row));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adapter::AdapterSpec;
+    use crate::model::BaseModel;
+    use crate::runtime::ConfigInfo;
+    use crate::serve::router::bucket;
+    use crate::serve::{drift_factors, Request};
+    use crate::util::rng::Rng;
+
+    fn tiny_cfg() -> ConfigInfo {
+        ConfigInfo {
+            name: "linear-test".into(),
+            kind: "decoder".into(),
+            vocab: 64,
+            d_model: 16,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 24,
+            seq_len: 8,
+            batch: 4,
+            eval_batch: 2,
+            n_classes: 0,
+            ranks: vec![2],
+        }
+    }
+
+    fn engine(seed: u64) -> (AdapterEngine, Rng) {
+        let mut rng = Rng::new(seed);
+        let base = BaseModel::random(&tiny_cfg(), &mut rng);
+        let mut eng = AdapterEngine::new(base);
+        eng.attach("t", AdapterSpec::pissa(2).targets(&["q"]), &mut rng).unwrap();
+        drift_factors(&mut eng, "t", "q", 0.05, &mut rng).unwrap();
+        (eng, rng)
+    }
+
+    fn batch(n: usize, rng: &mut Rng) -> (Mat, Vec<Request>) {
+        let reqs: Vec<Request> = (0..n)
+            .map(|i| {
+                let mut x = vec![0.0f32; 16];
+                rng.fill_normal(&mut x, 0.0, 1.0);
+                if i % 3 == 2 {
+                    Request::base(x)
+                } else {
+                    Request::new("t", x)
+                }
+            })
+            .collect();
+        let mut x = Mat::zeros(n, 16);
+        for (i, r) in reqs.iter().enumerate() {
+            x.row_mut(i).copy_from_slice(&r.x);
+        }
+        (x, reqs)
+    }
+
+    #[test]
+    fn every_strategy_agrees_on_a_mixed_batch() {
+        let (eng, mut rng) = engine(21);
+        let (x, reqs) = batch(9, &mut rng);
+        let groups = bucket(&reqs);
+        let reference = LinearServer::snapshot(&eng, "q", 1, ServeStrategy::Fused, None)
+            .unwrap()
+            .forward(&x, &groups);
+        for strategy in [ServeStrategy::DensePerAdapter, ServeStrategy::MergePerRequest] {
+            let srv = LinearServer::snapshot(&eng, "q", 1, strategy, None).unwrap();
+            let got = srv.forward(&x, &groups);
+            let err = got.sub(&reference).fro() / reference.fro().max(1e-30);
+            assert!(err < 1e-4, "{:?}: rel err {err:.3e}", strategy.name());
+        }
+    }
+
+    #[test]
+    fn forward_into_overwrites_a_reused_buffer() {
+        let (eng, mut rng) = engine(22);
+        let (x, reqs) = batch(5, &mut rng);
+        let groups = bucket(&reqs);
+        for strategy in ServeStrategy::all() {
+            let srv = LinearServer::snapshot(&eng, "q", 0, strategy, None).unwrap();
+            let want = srv.forward(&x, &groups);
+            let mut y = Mat::from_vec(5, 16, vec![-3.25; 5 * 16]); // stale ping-pong buffer
+            srv.forward_into(&x, &groups, &mut y);
+            assert_eq!(y.data, want.data, "{}", strategy.name());
+        }
+    }
+
+    #[test]
+    fn shared_quant_snapshot_is_used_verbatim() {
+        let (eng, mut rng) = engine(23);
+        let shared = Arc::new(crate::quant::quantize(&eng.base_weight("q", 0)));
+        let srv = LinearServer::snapshot(
+            &eng,
+            "q",
+            0,
+            ServeStrategy::FusedQuant,
+            Some(shared.clone()),
+        )
+        .unwrap();
+        // Residency is exactly the shared snapshot's bytes…
+        assert_eq!(srv.resident_bytes(), shared.storage_bytes());
+        // …and the output matches a locally-quantized server bit for bit.
+        let local = LinearServer::snapshot(&eng, "q", 0, ServeStrategy::FusedQuant, None).unwrap();
+        let (x, reqs) = batch(4, &mut rng);
+        let groups = bucket(&reqs);
+        assert_eq!(srv.forward(&x, &groups).data, local.forward(&x, &groups).data);
+    }
+
+    #[test]
+    fn metadata_accessors() {
+        let (eng, _) = engine(24);
+        let srv = LinearServer::snapshot(&eng, "gate", 1, ServeStrategy::Fused, None).unwrap();
+        assert_eq!(srv.module(), "gate");
+        assert_eq!(srv.layer(), 1);
+        assert_eq!((srv.n_in(), srv.n_out()), (16, 24));
+        assert!(srv.serves("t"));
+        assert!(!srv.serves("ghost"));
+        assert_eq!(srv.adapter_names(), vec!["t"]);
+        assert_eq!(srv.resident_bytes(), 16 * 24 * 4);
+    }
+}

@@ -3,42 +3,66 @@
 //! PiSSA's deployment story (§3 + Appendix C): many low-rank adapters
 //! share ONE frozen dense base, so a single host serves many fine-tuned
 //! variants. This module is the layer that actually exploits that
-//! structure at request time, on top of [`crate::adapter::AdapterEngine`]:
+//! structure at request time, on top of [`crate::adapter::AdapterEngine`].
+//! It is a two-level design — a reusable per-linear unit, and servers
+//! built from it:
 //!
-//! * [`Request`] / [`Scheduler`] / [`bucket`] — requests carry an adapter
-//!   name; the scheduler batches them and the router buckets a batch by
-//!   adapter in deterministic order,
-//! * [`ServeConfig`] + [`ServeStrategy`] — which linear/layer is served
-//!   and how: `fused` (shared `X·W` + per-group low-rank corrections,
-//!   `ΔW` never materialized), `merge-per-request`, `dense-per-adapter`
-//!   (the baselines of `benches/serve_throughput.rs`), plus the
-//!   quantized-base pair of `benches/quant_serve.rs`: `fused-quant`
-//!   (NF4-resident base streamed through the dequant-GEMM — the QPiSSA
-//!   deployment mode) and `dequant-dense` (dequantize once, serve dense
-//!   — its bit-for-bit fp32-residency reference),
-//! * [`Server`] — the batched forward `Y = X·W + Σ_g (X_g·ΔA_g)·ΔB_g`
-//!   (`X·deq(W_nf4)` under `fused-quant`, see [`QuantBase`]), with
-//!   per-adapter corrections dispatched in parallel via
-//!   [`crate::util::par::par_map`],
-//! * [`ServeStats`] — per-adapter hit counts, batch occupancy, and
-//!   p50/p95 latency, exported as JSON through the `metrics` sinks,
+//! * [`LinearServer`] — batched mixed-adapter execution of ONE
+//!   `(module, layer)` linear: the shared base in its strategy's
+//!   representation (dense, or the NF4-resident [`QuantBase`] streamed
+//!   through the dequant-GEMM) plus prepared Appendix-C deltas, with a
+//!   buffer-reusing `forward_into`,
+//! * [`Server`] — the single-linear server: request validation,
+//!   bucketing, stats around one `LinearServer`; the batched forward
+//!   `Y = X·W + Σ_g (X_g·ΔA_g)·ΔB_g` (`X·deq(W_nf4)` under
+//!   `fused-quant`) with per-adapter corrections dispatched in parallel
+//!   via [`crate::util::par::par_map`],
+//! * [`ModelServer`] — the whole-model pipeline: embed → `n_layers`
+//!   blocks over all seven linears (norms + nonlinearity) → head, every
+//!   projection a full mixed-adapter `LinearServer` execution, with
+//!   activation buffers ping-ponged across layers and residency/stats
+//!   aggregated over all `L × 7` base stores,
+//! * [`Request`] / [`ModelRequest`] / [`Scheduler`] / [`bucket`] —
+//!   requests carry an adapter name; the generic scheduler batches
+//!   either request shape and the router buckets a batch by adapter in
+//!   deterministic order,
+//! * [`ServeConfig`] + [`ServeScope`] + [`ServeStrategy`] — WHAT is
+//!   served (one linear, or the full model) and HOW: `fused` (shared
+//!   base GEMM + per-group low-rank corrections, `ΔW` never
+//!   materialized), `merge-per-request`, `dense-per-adapter` (the
+//!   baselines of `benches/serve_throughput.rs` and
+//!   `benches/model_serve.rs`), plus the quantized-base pair of
+//!   `benches/quant_serve.rs`: `fused-quant` (NF4-resident base — the
+//!   QPiSSA deployment mode, shared per-module [`crate::quant::Nf4Stack`]
+//!   snapshots under the full-model scope) and `dequant-dense`
+//!   (dequantize once, serve dense — its bit-for-bit fp32-residency
+//!   reference),
+//! * [`ServeStats`] / [`ResidentBreakdown`] — per-adapter hit counts,
+//!   batch occupancy, p50/p95 latency, and the aggregated per-module
+//!   residency table, exported as JSON through the `metrics` sinks,
 //! * [`ServeError`] — typed request/config errors (unknown adapter,
-//!   dimension mismatch, rank > min(m, n), quantized adapter under a
-//!   full-precision strategy), never panics.
+//!   dimension mismatch, token out of range, scope mismatch,
+//!   rank > min(m, n), quantized adapter under a full-precision
+//!   strategy), never panics.
 //!
 //! Bit-for-bit thread-count determinism of the whole path is locked in
-//! by `rust/tests/determinism.rs`; fused ≡ merged-dense equivalence by
+//! by `rust/tests/determinism.rs`; fused ≡ merged-dense equivalence (per
+//! linear AND end-to-end through the model pipeline) by
 //! `rust/tests/serve_equiv.rs`.
 
 pub mod config;
+pub mod linear;
+pub mod model;
 pub mod router;
 pub mod server;
 pub mod stats;
 
-pub use config::{ServeConfig, ServeError, ServeStrategy};
-pub use router::{bucket, Group, Request, Scheduler};
-pub use server::{QuantBase, Server};
-pub use stats::{ServeStats, ServeSummary, BASE_KEY};
+pub use config::{ServeConfig, ServeError, ServeScope, ServeStrategy};
+pub use linear::{LinearServer, QuantBase};
+pub use model::{ModelServer, RMS_EPS};
+pub use router::{bucket, Group, ModelRequest, Request, Routable, Scheduler};
+pub use server::Server;
+pub use stats::{ResidentBreakdown, ServeStats, ServeSummary, BASE_KEY};
 
 use crate::adapter::AdapterEngine;
 use crate::util::rng::Rng;

@@ -1,0 +1,517 @@
+//! `ModelServer` — the whole-model serving pipeline.
+//!
+//! PiSSA adapts EVERY targeted linear of EVERY layer (the paper
+//! fine-tunes q/k/v/o/gate/up/down across all layers), so serving one
+//! linear at a time never exercises the actual deployment shape. The
+//! `ModelServer` snapshots the full [`AdapterEngine`] base — embedding
+//! table, per-layer norms, and `n_layers × 7` [`LinearServer`] units,
+//! head — and runs a mixed-adapter batch of [`ModelRequest`]s end to
+//! end:
+//!
+//! ```text
+//!   x   = embed[token]                                  (batch × d)
+//!   for each layer l:
+//!     h  = rms_norm(x, attn_norm[l])
+//!     qb, kb, vb = q(h), k(h), v(h)                      (adapted linears)
+//!     x += o( σ(⟨qb_i, kb_i⟩/√d) · vb )                  (adapted linear)
+//!     h  = rms_norm(x, mlp_norm[l])
+//!     x += down( silu(gate(h)) ⊙ up(h) )                 (adapted linears)
+//!   logits = rms_norm(x, final_norm) · head              (batch × vocab)
+//! ```
+//!
+//! Each of the seven per-layer projections is a full mixed-adapter
+//! [`LinearServer`] execution — shared base GEMM (dense or the streamed
+//! NF4 dequant-GEMM) plus per-adapter low-rank corrections — so one call
+//! routes the batch through all `L × 7` adapted linears. The attention
+//! mixing is the rust-native single-position analog of the L2 model's
+//! block (`python/compile/model.py`): requests are independent rows, so
+//! the softmax over one position's score degenerates and is replaced by
+//! the deterministic per-row gate `σ(⟨q, k⟩/√d)` — every projection stays
+//! load-bearing (a q/k-only adapter still changes the output), and the
+//! whole forward is a fixed-order f32 computation, bit-identical for any
+//! `PISSA_THREADS`.
+//!
+//! Activation buffers ping-pong: the hidden state `x`, the norm/attn
+//! scratch `h`, the three projection buffers, and the two MLP-width
+//! buffers are allocated once per batch and REUSED across all layers —
+//! `LinearServer::forward_into` overwrites them in place, so the layer
+//! loop performs no per-linear allocations on the shared path.
+//!
+//! Stats and residency aggregate across the whole pipeline:
+//! [`ModelServer::base_resident_bytes`] sums all `L × 7` base stores
+//! (under `fused-quant` every linear streams from a shared per-module
+//! [`crate::quant::Nf4Stack`], keeping the entire base NF4-resident),
+//! and [`ModelServer::resident_breakdown`] reports the per-module table.
+
+use super::config::{ServeConfig, ServeError, ServeScope};
+use super::linear::LinearServer;
+use super::router::{bucket, ModelRequest};
+use super::stats::{ResidentBreakdown, ServeStats};
+use crate::adapter::AdapterEngine;
+use crate::linalg::{matmul, Mat};
+use crate::model::LINEARS;
+use crate::util::timer::Timer;
+use anyhow::Result;
+
+/// RMS-norm epsilon (matches the L2 model's `rms_norm`).
+pub const RMS_EPS: f32 = 1e-6;
+
+// Indices into the per-layer linear array, in `LINEARS` order.
+const Q: usize = 0;
+const K: usize = 1;
+const V: usize = 2;
+const O: usize = 3;
+const GATE: usize = 4;
+const UP: usize = 5;
+const DOWN: usize = 6;
+
+/// Whole-model batched multi-adapter server over a snapshot of an
+/// [`AdapterEngine`]: embed → `n_layers` adapted blocks → head.
+///
+/// Like [`super::Server`], construction snapshots everything (the engine
+/// is free to keep training); unlike it, the snapshot spans every layer
+/// and all seven linears, plus the frozen scaffold (embedding, norms,
+/// head).
+#[derive(Debug)]
+pub struct ModelServer {
+    cfg: ServeConfig,
+    /// `n_layers × 7` per-linear units, layer-major (`layer * 7 + module`).
+    linears: Vec<LinearServer>,
+    /// Token embedding table (vocab × d).
+    embed: Mat,
+    /// Output head (d × vocab for decoders, d × n_classes for encoders).
+    head: Mat,
+    /// Per-layer RMS-norm gains (each of length d).
+    attn_norm: Vec<Vec<f32>>,
+    mlp_norm: Vec<Vec<f32>>,
+    final_norm: Vec<f32>,
+    n_layers: usize,
+    d_model: usize,
+    d_ff: usize,
+    stats: ServeStats,
+}
+
+impl ModelServer {
+    /// Snapshot the whole engine under a [`ServeScope::FullModel`]
+    /// config. Validation covers every `(module, layer)` linear: a typed
+    /// [`ServeError`] on quantized adapters under a full-precision
+    /// strategy or rank > min(m, n) anywhere in the stack.
+    pub fn new(engine: &AdapterEngine, cfg: ServeConfig) -> Result<ModelServer> {
+        if cfg.scope != ServeScope::FullModel {
+            return Err(ServeError::ScopeMismatch {
+                server: "ModelServer",
+                scope: cfg.scope.name(),
+            }
+            .into());
+        }
+        cfg.validate(engine)?;
+        let base = engine.base();
+        let n_layers = base.n_layers();
+        let embed = base.scaffold["embed"].as_mat();
+        let head = if base.encoder {
+            base.scaffold["cls_base"].as_mat()
+        } else {
+            base.scaffold["lm_head"].as_mat()
+        };
+        let attn_gains = base.scaffold["attn_norm"].as_mat();
+        let mlp_gains = base.scaffold["mlp_norm"].as_mat();
+        let attn_norm: Vec<Vec<f32>> = (0..n_layers).map(|l| attn_gains.row(l).to_vec()).collect();
+        let mlp_norm: Vec<Vec<f32>> = (0..n_layers).map(|l| mlp_gains.row(l).to_vec()).collect();
+        let final_norm = base.scaffold["final_norm"].data.clone();
+        // Under the quantized-base strategies every layer of a module
+        // streams from ONE shared NF4 snapshot of that module's stack —
+        // quantized once here, never duplicated per linear.
+        let stacks: Option<Vec<crate::quant::Nf4Stack>> = if cfg.strategy.quantized_base() {
+            Some(LINEARS.iter().map(|m| engine.quant_base_stack(m)).collect())
+        } else {
+            None
+        };
+        let mut linears = Vec::with_capacity(n_layers * LINEARS.len());
+        for layer in 0..n_layers {
+            for (mi, module) in LINEARS.iter().enumerate() {
+                let shared = stacks.as_ref().map(|s| s[mi].layer(layer));
+                linears.push(LinearServer::snapshot(
+                    engine,
+                    module,
+                    layer,
+                    cfg.strategy,
+                    shared,
+                )?);
+            }
+        }
+        let d_model = embed.cols;
+        let d_ff = linears[GATE].n_out();
+        Ok(ModelServer {
+            cfg,
+            linears,
+            embed,
+            head,
+            attn_norm,
+            mlp_norm,
+            final_norm,
+            n_layers,
+            d_model,
+            d_ff,
+            stats: ServeStats::new(),
+        })
+    }
+
+    fn linear(&self, layer: usize, module: usize) -> &LinearServer {
+        &self.linears[layer * LINEARS.len() + module]
+    }
+
+    pub fn cfg(&self) -> &ServeConfig {
+        &self.cfg
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.n_layers
+    }
+
+    pub fn d_model(&self) -> usize {
+        self.d_model
+    }
+
+    /// Embedding-table size — the valid token-id range of requests.
+    pub fn vocab(&self) -> usize {
+        self.embed.rows
+    }
+
+    /// Output width of the head (vocab for decoders, n_classes for
+    /// encoders).
+    pub fn n_out(&self) -> usize {
+        self.head.cols
+    }
+
+    /// Names the server can route to (snapshot order).
+    pub fn adapter_names(&self) -> Vec<&str> {
+        self.linears[0].adapter_names()
+    }
+
+    pub fn stats(&self) -> &ServeStats {
+        &self.stats
+    }
+
+    pub fn reset_stats(&mut self) {
+        self.stats.reset();
+    }
+
+    /// Aggregate bytes the shared base keeps resident across ALL
+    /// `n_layers × 7` served linears (the ≤ 0.35×-of-dense acceptance
+    /// bar of `benches/model_serve.rs` under `fused-quant`). The frozen
+    /// scaffold (embed/norms/head) is strategy-independent and excluded.
+    pub fn base_resident_bytes(&self) -> usize {
+        self.linears.iter().map(|l| l.resident_bytes()).sum()
+    }
+
+    /// What the same linears would hold resident as dense fp32 — the
+    /// denominator of the residency ratio.
+    pub fn dense_base_bytes(&self) -> usize {
+        self.linears.iter().map(|l| l.n_in() * l.n_out() * 4).sum()
+    }
+
+    /// Per-module residency table (bytes summed over layers).
+    pub fn resident_breakdown(&self) -> ResidentBreakdown {
+        let per_module = LINEARS
+            .iter()
+            .enumerate()
+            .map(|(mi, module)| {
+                let bytes: usize =
+                    (0..self.n_layers).map(|l| self.linear(l, mi).resident_bytes()).sum();
+                (module.to_string(), bytes)
+            })
+            .collect();
+        ResidentBreakdown::new(per_module, self.dense_base_bytes())
+    }
+
+    /// Serve one batch end to end: row i of the logits is the full
+    /// adapted forward of `requests[i]`'s token under its adapter. An
+    /// empty batch yields an empty (0×n_out) output. Unknown adapters,
+    /// out-of-range tokens, and batches above `max_batch` are typed
+    /// errors; nothing panics on request data.
+    pub fn forward(&mut self, requests: &[ModelRequest]) -> Result<Mat> {
+        if requests.is_empty() {
+            return Ok(Mat::zeros(0, self.n_out()));
+        }
+        if requests.len() > self.cfg.max_batch {
+            return Err(ServeError::BatchTooLarge {
+                got: requests.len(),
+                max_batch: self.cfg.max_batch,
+            }
+            .into());
+        }
+        for (i, r) in requests.iter().enumerate() {
+            if r.token >= self.vocab() {
+                return Err(ServeError::TokenOutOfRange {
+                    index: i,
+                    token: r.token,
+                    vocab: self.vocab(),
+                }
+                .into());
+            }
+            if let Some(name) = &r.adapter {
+                if !self.linears[0].serves(name) {
+                    return Err(ServeError::UnknownAdapter {
+                        name: name.clone(),
+                        have: self.adapter_names().iter().map(|s| s.to_string()).collect(),
+                    }
+                    .into());
+                }
+            }
+        }
+        let timer = Timer::start();
+        let groups = bucket(requests);
+        let (b, d, f) = (requests.len(), self.d_model, self.d_ff);
+
+        // Activation buffers, allocated once and ping-ponged across every
+        // layer (forward_into / *_into overwrite them in place).
+        let mut x = Mat::zeros(b, d); // hidden state (residual stream)
+        let mut h = Mat::zeros(b, d); // norm output / attention output
+        let mut qb = Mat::zeros(b, d);
+        let mut kb = Mat::zeros(b, d);
+        let mut vb = Mat::zeros(b, d);
+        let mut gate = Mat::zeros(b, f);
+        let mut up = Mat::zeros(b, f);
+
+        for (i, r) in requests.iter().enumerate() {
+            x.row_mut(i).copy_from_slice(self.embed.row(r.token));
+        }
+        let scale = 1.0 / (d as f32).sqrt();
+        for l in 0..self.n_layers {
+            // h = rms_norm(x); attention projections of h.
+            rms_norm_into(&x, &self.attn_norm[l], &mut h);
+            self.linear(l, Q).forward_into(&h, &groups, &mut qb);
+            self.linear(l, K).forward_into(&h, &groups, &mut kb);
+            self.linear(l, V).forward_into(&h, &groups, &mut vb);
+            // Single-position attention: per row, gate v by σ(⟨q,k⟩/√d).
+            for i in 0..b {
+                let dot: f32 =
+                    qb.row(i).iter().zip(kb.row(i)).map(|(qv, kv)| qv * kv).sum();
+                let g = sigmoid(dot * scale);
+                for v in vb.row_mut(i) {
+                    *v *= g;
+                }
+            }
+            self.linear(l, O).forward_into(&vb, &groups, &mut h);
+            x.add_assign(&h); // residual
+
+            // SwiGLU MLP on the normed residual.
+            rms_norm_into(&x, &self.mlp_norm[l], &mut h);
+            self.linear(l, GATE).forward_into(&h, &groups, &mut gate);
+            self.linear(l, UP).forward_into(&h, &groups, &mut up);
+            for (gv, uv) in gate.data.iter_mut().zip(&up.data) {
+                *gv = silu(*gv) * uv;
+            }
+            self.linear(l, DOWN).forward_into(&gate, &groups, &mut h);
+            x.add_assign(&h); // residual
+        }
+        rms_norm_into(&x, &self.final_norm, &mut h);
+        let logits = matmul(&h, &self.head);
+
+        let adapters: Vec<Option<&str>> = requests.iter().map(|r| r.adapter.as_deref()).collect();
+        self.stats.record_batch(&adapters, groups.len(), self.cfg.max_batch, timer.secs());
+        Ok(logits)
+    }
+}
+
+#[inline]
+fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+#[inline]
+fn silu(x: f32) -> f32 {
+    x * sigmoid(x)
+}
+
+/// Row-wise RMS norm with a gain vector, overwriting `out`:
+/// `out[i] = x[i] / sqrt(mean(x[i]²) + eps) * gain`. Fixed-order f32
+/// accumulation per row (thread-count independent).
+pub fn rms_norm_into(x: &Mat, gain: &[f32], out: &mut Mat) {
+    assert_eq!(x.cols, gain.len(), "rms_norm: gain length");
+    assert_eq!((out.rows, out.cols), (x.rows, x.cols), "rms_norm: output shape");
+    for i in 0..x.rows {
+        let row = x.row(i);
+        let mut ms = 0.0f32;
+        for &v in row {
+            ms += v * v;
+        }
+        let inv = 1.0 / (ms / row.len() as f32 + RMS_EPS).sqrt();
+        for (o, (&v, &g)) in out.row_mut(i).iter_mut().zip(row.iter().zip(gain)) {
+            *o = v * inv * g;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adapter::AdapterSpec;
+    use crate::model::BaseModel;
+    use crate::runtime::ConfigInfo;
+    use crate::serve::config::ServeStrategy;
+    use crate::serve::drift_factors;
+    use crate::util::rng::Rng;
+
+    fn tiny_cfg() -> ConfigInfo {
+        ConfigInfo {
+            name: "model-serve-test".into(),
+            kind: "decoder".into(),
+            vocab: 48,
+            d_model: 16,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 24,
+            seq_len: 8,
+            batch: 4,
+            eval_batch: 2,
+            n_classes: 0,
+            ranks: vec![2],
+        }
+    }
+
+    fn engine(seed: u64) -> (AdapterEngine, Rng) {
+        let mut rng = Rng::new(seed);
+        let base = BaseModel::random(&tiny_cfg(), &mut rng);
+        let mut eng = AdapterEngine::new(base);
+        eng.attach("t", AdapterSpec::pissa(2), &mut rng).unwrap();
+        for module in LINEARS {
+            drift_factors(&mut eng, "t", module, 0.05, &mut rng).unwrap();
+        }
+        (eng, rng)
+    }
+
+    #[test]
+    fn snapshot_covers_all_layers_and_linears() {
+        let (eng, _) = engine(1);
+        let srv = ModelServer::new(&eng, ServeConfig::full_model()).unwrap();
+        assert_eq!(srv.n_layers(), 2);
+        assert_eq!(srv.d_model(), 16);
+        assert_eq!(srv.vocab(), 48);
+        assert_eq!(srv.n_out(), 48);
+        assert_eq!(srv.adapter_names(), vec!["t"]);
+        // L×7 dense fp32 linears: 4 attn (16×16) + gate/up (16×24) +
+        // down (24×16), twice.
+        let per_layer = 4 * 16 * 16 + 3 * 16 * 24;
+        assert_eq!(srv.dense_base_bytes(), 2 * per_layer * 4);
+        assert_eq!(srv.base_resident_bytes(), srv.dense_base_bytes());
+        let bd = srv.resident_breakdown();
+        assert_eq!(bd.per_module.len(), 7);
+        assert_eq!(bd.total(), srv.base_resident_bytes());
+    }
+
+    #[test]
+    fn zero_layer_engine_is_a_typed_error_not_a_panic() {
+        let mut cfg = tiny_cfg();
+        cfg.n_layers = 0;
+        let mut rng = Rng::new(17);
+        let base = BaseModel::random(&cfg, &mut rng);
+        let eng = AdapterEngine::new(base);
+        let err = ModelServer::new(&eng, ServeConfig::full_model()).unwrap_err();
+        assert!(
+            matches!(
+                err.downcast_ref::<ServeError>(),
+                Some(ServeError::LayerOutOfRange { n_layers: 0, .. })
+            ),
+            "got {err:?}"
+        );
+    }
+
+    #[test]
+    fn single_linear_scope_is_rejected_with_a_typed_error() {
+        let (eng, _) = engine(2);
+        let err = ModelServer::new(&eng, ServeConfig::new("q")).unwrap_err();
+        match err.downcast_ref::<ServeError>() {
+            Some(ServeError::ScopeMismatch { server, scope }) => {
+                assert_eq!((*server, *scope), ("ModelServer", "single-linear"));
+            }
+            other => panic!("expected ScopeMismatch, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn empty_batch_and_request_validation() {
+        let (eng, _) = engine(3);
+        let mut srv =
+            ModelServer::new(&eng, ServeConfig::full_model().max_batch(2)).unwrap();
+        let y = srv.forward(&[]).unwrap();
+        assert_eq!((y.rows, y.cols), (0, 48));
+        assert_eq!(srv.stats().batches, 0);
+        // token out of range
+        let err = srv
+            .forward(&[ModelRequest::base(0), ModelRequest::base(48)])
+            .unwrap_err();
+        match err.downcast_ref::<ServeError>() {
+            Some(ServeError::TokenOutOfRange { index, token, vocab }) => {
+                assert_eq!((*index, *token, *vocab), (1, 48, 48));
+            }
+            other => panic!("expected TokenOutOfRange, got {other:?}"),
+        }
+        // unknown adapter
+        let err = srv.forward(&[ModelRequest::new("ghost", 0)]).unwrap_err();
+        assert!(matches!(
+            err.downcast_ref::<ServeError>(),
+            Some(ServeError::UnknownAdapter { .. })
+        ));
+        // over the batch ceiling
+        let reqs: Vec<ModelRequest> = (0..3).map(ModelRequest::base).collect();
+        let err = srv.forward(&reqs).unwrap_err();
+        assert!(matches!(
+            err.downcast_ref::<ServeError>(),
+            Some(ServeError::BatchTooLarge { got: 3, max_batch: 2 })
+        ));
+    }
+
+    #[test]
+    fn adapted_rows_differ_from_base_rows_and_stats_aggregate() {
+        // The drifted adapter must actually steer the whole-model output
+        // (all seven linears contribute), while base rows match a pure
+        // base forward.
+        let (eng, _) = engine(4);
+        let mut srv = ModelServer::new(&eng, ServeConfig::full_model()).unwrap();
+        let mixed = [ModelRequest::new("t", 7), ModelRequest::base(7)];
+        let y = srv.forward(&mixed).unwrap();
+        let base_only = srv.forward(&[ModelRequest::base(7)]).unwrap();
+        assert_eq!(y.row(1), base_only.row(0), "base row must be adapter-independent");
+        let diff: f32 =
+            y.row(0).iter().zip(y.row(1)).map(|(a, b)| (a - b).abs()).sum();
+        assert!(diff > 1e-3, "drifted adapter changed nothing (diff {diff:.3e})");
+        let s = srv.stats().summary();
+        assert_eq!(s.batches, 2);
+        assert_eq!(s.requests, 3);
+        assert_eq!(srv.stats().hits["t"], 1);
+    }
+
+    #[test]
+    fn fused_quant_shares_one_nf4_snapshot_across_the_stack() {
+        let (eng, _) = engine(5);
+        let srv = ModelServer::new(
+            &eng,
+            ServeConfig::full_model().strategy(ServeStrategy::FusedQuant),
+        )
+        .unwrap();
+        // Aggregate residency equals the sum of the per-module stacks —
+        // and is well under the 0.35× dense bar.
+        let want: usize =
+            LINEARS.iter().map(|m| eng.quant_base_stack(m).storage_bytes()).sum();
+        assert_eq!(srv.base_resident_bytes(), want);
+        assert!(
+            srv.base_resident_bytes() * 100 <= srv.dense_base_bytes() * 35,
+            "{} vs dense {}",
+            srv.base_resident_bytes(),
+            srv.dense_base_bytes()
+        );
+    }
+
+    #[test]
+    fn rms_norm_normalizes_rows() {
+        let x = Mat::from_vec(1, 4, vec![3.0, -3.0, 3.0, -3.0]);
+        let mut out = Mat::zeros(1, 4);
+        rms_norm_into(&x, &[1.0, 1.0, 2.0, 1.0], &mut out);
+        // mean square = 9 ⇒ x/3 * gain
+        let want = [1.0f32, -1.0, 2.0, -1.0];
+        for (o, w) in out.row(0).iter().zip(&want) {
+            assert!((o - w).abs() < 1e-5, "{o} vs {w}");
+        }
+    }
+}

@@ -1,13 +1,17 @@
 //! Request routing: adapter-keyed bucketing and the batching scheduler.
 //!
-//! A [`Request`] is one inference call against the served linear — an
-//! input vector plus the adapter it should run under (`None` = the frozen
-//! base). The router groups a batch by adapter in a deterministic
-//! (sorted, base-first) order so the server can amortize the shared base
-//! GEMM across every group — dense, or the NF4-resident `QuantBase`
-//! streamed through the dequant-GEMM — and dispatch the per-adapter
-//! low-rank corrections in parallel; the [`Scheduler`] accumulates a
-//! request stream into batches of at most `max_batch`.
+//! Two request shapes flow through the same router. A [`Request`] is one
+//! inference call against a served LINEAR — an input vector plus the
+//! adapter it should run under (`None` = the frozen base). A
+//! [`ModelRequest`] is one call against the whole adapted model — a
+//! token id that enters at the embedding and leaves as head logits.
+//! Both implement [`Routable`], so [`bucket`] groups any batch by
+//! adapter in a deterministic (sorted, base-first) order — the server
+//! amortizes the shared base GEMM(s) across every group (dense, or the
+//! NF4-resident `QuantBase` streamed through the dequant-GEMM) and
+//! dispatches the per-adapter low-rank corrections in parallel — and the
+//! generic [`Scheduler`] accumulates either request stream into batches
+//! of at most `max_batch`.
 
 use std::collections::BTreeMap;
 use std::collections::VecDeque;
@@ -31,6 +35,45 @@ impl Request {
     }
 }
 
+/// One whole-model serving request: a token id routed through the full
+/// adapted forward pass (embed → every layer's seven linears → head)
+/// under `adapter` (`None` = the frozen base model).
+#[derive(Clone, Debug)]
+pub struct ModelRequest {
+    pub adapter: Option<String>,
+    pub token: usize,
+}
+
+impl ModelRequest {
+    pub fn new(adapter: &str, token: usize) -> ModelRequest {
+        ModelRequest { adapter: Some(adapter.to_string()), token }
+    }
+
+    /// A request against the frozen base model (no adapter corrections).
+    pub fn base(token: usize) -> ModelRequest {
+        ModelRequest { adapter: None, token }
+    }
+}
+
+/// Anything the router can bucket: a request that names the adapter it
+/// runs under.
+pub trait Routable {
+    /// Adapter this request runs under (`None` = the frozen base).
+    fn adapter(&self) -> Option<&str>;
+}
+
+impl Routable for Request {
+    fn adapter(&self) -> Option<&str> {
+        self.adapter.as_deref()
+    }
+}
+
+impl Routable for ModelRequest {
+    fn adapter(&self) -> Option<&str> {
+        self.adapter.as_deref()
+    }
+}
+
 /// One adapter bucket of a batch: which rows (original batch positions,
 /// in arrival order) run under `adapter`.
 #[derive(Clone, Debug, PartialEq)]
@@ -42,10 +85,10 @@ pub struct Group {
 /// Bucket a batch by adapter. Deterministic: groups come out base-first
 /// then name-sorted, rows within a group in arrival order — so a batch
 /// routes identically regardless of thread count or map iteration luck.
-pub fn bucket(requests: &[Request]) -> Vec<Group> {
+pub fn bucket<R: Routable>(requests: &[R]) -> Vec<Group> {
     let mut map: BTreeMap<Option<&str>, Vec<usize>> = BTreeMap::new();
     for (i, r) in requests.iter().enumerate() {
-        map.entry(r.adapter.as_deref()).or_default().push(i);
+        map.entry(r.adapter()).or_default().push(i);
     }
     map.into_iter()
         .map(|(adapter, rows)| Group { adapter: adapter.map(|s| s.to_string()), rows })
@@ -54,20 +97,22 @@ pub fn bucket(requests: &[Request]) -> Vec<Group> {
 
 /// FIFO batching scheduler: submit requests as they arrive, drain them in
 /// batches of at most `max_batch` (the occupancy denominator of the
-/// serving stats).
+/// serving stats). Generic over the request shape — the same scheduler
+/// feeds a single-linear `Server` (`Scheduler<Request>`, the default)
+/// and a whole-model `ModelServer` (`Scheduler<ModelRequest>`).
 #[derive(Debug)]
-pub struct Scheduler {
-    queue: VecDeque<Request>,
+pub struct Scheduler<R = Request> {
+    queue: VecDeque<R>,
     max_batch: usize,
 }
 
-impl Scheduler {
-    pub fn new(max_batch: usize) -> Scheduler {
+impl<R> Scheduler<R> {
+    pub fn new(max_batch: usize) -> Scheduler<R> {
         assert!(max_batch >= 1, "max_batch must be >= 1");
         Scheduler { queue: VecDeque::new(), max_batch }
     }
 
-    pub fn submit(&mut self, request: Request) {
+    pub fn submit(&mut self, request: R) {
         self.queue.push_back(request);
     }
 
@@ -84,7 +129,7 @@ impl Scheduler {
     /// Pop the next batch (up to `max_batch` requests, FIFO); `None` when
     /// the queue is empty. Callers decide whether to wait for `full()` or
     /// flush a partial batch.
-    pub fn take_batch(&mut self) -> Option<Vec<Request>> {
+    pub fn take_batch(&mut self) -> Option<Vec<R>> {
         if self.queue.is_empty() {
             return None;
         }
@@ -119,7 +164,19 @@ mod tests {
 
     #[test]
     fn bucket_empty_batch() {
-        assert!(bucket(&[]).is_empty());
+        assert!(bucket::<Request>(&[]).is_empty());
+    }
+
+    #[test]
+    fn model_requests_bucket_identically_to_linear_requests() {
+        let linear = vec![
+            Request::new("b", vec![0.0]),
+            Request::base(vec![0.0]),
+            Request::new("a", vec![0.0]),
+        ];
+        let model =
+            vec![ModelRequest::new("b", 0), ModelRequest::base(1), ModelRequest::new("a", 2)];
+        assert_eq!(bucket(&linear), bucket(&model));
     }
 
     #[test]
@@ -140,5 +197,18 @@ mod tests {
         assert_eq!(b3[0].x, vec![6.0]);
         assert!(s.take_batch().is_none());
         assert!(!s.full());
+    }
+
+    #[test]
+    fn scheduler_is_generic_over_model_requests() {
+        let mut s: Scheduler<ModelRequest> = Scheduler::new(2);
+        s.submit(ModelRequest::new("t", 3));
+        s.submit(ModelRequest::base(5));
+        s.submit(ModelRequest::base(7));
+        let b = s.take_batch().unwrap();
+        assert_eq!(b.len(), 2);
+        assert_eq!(b[0].token, 3);
+        assert_eq!(b[0].adapter.as_deref(), Some("t"));
+        assert_eq!(s.take_batch().unwrap()[0].token, 7);
     }
 }

@@ -1,12 +1,13 @@
-//! The batched multi-adapter server.
+//! The batched multi-adapter single-linear server.
 //!
 //! PiSSA's deployment promise: many cheap adapters share one frozen dense
 //! base, so one host serves many fine-tuned variants at once. The server
-//! snapshots, per attached adapter, a low-rank delta `(ΔA, ΔB)` against
-//! the ORIGINAL dense weight `W` (the Appendix-C equivalent-LoRA form
-//! `ΔA = [A'|A], ΔB = [B';−B]` for drifted PiSSA factors; the raw factors
-//! when the frozen residual is `W` itself, e.g. LoRA), and executes a
-//! mixed-adapter batch as
+//! wraps ONE [`LinearServer`] — the reusable per-linear unit that holds
+//! the shared base (dense or NF4, per strategy) and the prepared
+//! Appendix-C deltas `(ΔA, ΔB)` against the ORIGINAL dense weight — and
+//! adds the request-facing contract: typed validation of every batch,
+//! adapter bucketing through the router, and serving stats. A
+//! mixed-adapter batch executes as
 //!
 //! ```text
 //!   Y = X·W  +  Σ_groups scatter( (X_g·ΔA_g)·ΔB_g )
@@ -17,87 +18,26 @@
 //! [`crate::util::par::par_map`]. `ΔW` is never materialized. The
 //! merge-per-request and dense-per-adapter strategies execute the same
 //! `(W, ΔA, ΔB)` snapshot densely and exist as baselines (and as the
-//! reference the equivalence property tests compare against).
-//!
-//! The quantized-base strategies swap the base storage, not the
-//! algebra: `fused-quant` keeps the shared base resident as blockwise
-//! NF4 (a [`QuantBase`]) and streams it through
-//! [`crate::linalg::dequant_matmul`] — `Y = X·deq(W_nf4) + Σ_g …` —
-//! while `dequant-dense` dequantizes the same snapshot once into a
-//! dense copy (the bit-for-bit reference at fp32 residency). Both
-//! accept QPiSSA/QLoRA/LoftQ adapters, whose frozen NF4 base the
-//! full-precision strategies reject with a typed error.
+//! reference the equivalence property tests compare against); the
+//! quantized-base pair swaps the base storage, not the algebra (see
+//! [`QuantBase`] and [`LinearServer`]). For the whole adapted forward
+//! pass — every layer × all seven linears — see [`super::ModelServer`],
+//! which stacks these same units into a pipeline.
 //!
 //! Determinism: request bucketing is sorted, group corrections are
 //! scattered in group order on the caller thread, and every GEMM in the
 //! path accumulates in fixed k-order — so serving output is bit-identical
 //! for any `PISSA_THREADS` (locked in by `rust/tests/determinism.rs`).
 
-use super::config::{ServeConfig, ServeError, ServeStrategy};
-use super::router::{bucket, Group, Request};
+use super::config::{ServeConfig, ServeError, ServeScope};
+use super::linear::LinearServer;
+pub use super::linear::QuantBase;
+use super::router::{bucket, Request};
 use super::stats::ServeStats;
-use crate::adapter::convert::pissa_to_lora;
 use crate::adapter::AdapterEngine;
-use crate::linalg::{dequant_matmul, matmul, vecmat, Mat};
-use crate::quant::{dequantize, Nf4Tensor};
-use crate::util::par::par_map;
+use crate::linalg::Mat;
 use crate::util::timer::Timer;
 use anyhow::Result;
-use std::collections::BTreeMap;
-
-/// Snapshot of one servable adapter: `effective = W + ΔA·ΔB`.
-/// `None` when the adapter does not target the served module (it serves
-/// the base weight unchanged).
-#[derive(Debug, Clone)]
-struct Prepared {
-    delta: Option<(Mat, Mat)>,
-}
-
-/// The NF4-resident shared base of the `fused-quant` strategy: packed
-/// codes + blockwise scales, streamed through the dequant-GEMM at
-/// request time. The dense matrix is never materialized server-side.
-#[derive(Debug, Clone)]
-pub struct QuantBase {
-    /// Blockwise NF4 snapshot of the served base weight.
-    pub nf4: Nf4Tensor,
-}
-
-impl QuantBase {
-    /// Bytes this base keeps resident (packed codes + f32 scales).
-    pub fn resident_bytes(&self) -> usize {
-        self.nf4.storage_bytes()
-    }
-}
-
-/// How the server stores the shared base weight of the served linear —
-/// the storage side of the [`ServeStrategy`] choice.
-#[derive(Debug)]
-enum BaseStore {
-    /// Full-precision m×n matrix: the original `W` for the exact
-    /// strategies, or the dequantized-once NF4 round trip for
-    /// `dequant-dense`.
-    Dense(Mat),
-    /// NF4-resident base for `fused-quant` — the base GEMM streams the
-    /// packed blocks panel-by-panel instead of reading a dense matrix.
-    Quant(QuantBase),
-}
-
-impl BaseStore {
-    /// The shared base GEMM `X·base` of the fused forward.
-    fn forward(&self, x: &Mat) -> Mat {
-        match self {
-            BaseStore::Dense(w) => matmul(x, w),
-            BaseStore::Quant(q) => dequant_matmul(x, &q.nf4),
-        }
-    }
-
-    fn resident_bytes(&self) -> usize {
-        match self {
-            BaseStore::Dense(w) => w.data.len() * 4,
-            BaseStore::Quant(q) => q.resident_bytes(),
-        }
-    }
-}
 
 /// Batched multi-adapter server over a snapshot of an [`AdapterEngine`].
 ///
@@ -109,66 +49,26 @@ impl BaseStore {
 #[derive(Debug)]
 pub struct Server {
     cfg: ServeConfig,
-    /// Shared base of the served linear (m×n), in the representation the
-    /// strategy serves from.
-    base: BaseStore,
-    n_in: usize,
-    n_out: usize,
-    prepared: BTreeMap<String, Prepared>,
+    linear: LinearServer,
     stats: ServeStats,
 }
 
 impl Server {
     /// Snapshot `engine` under `cfg`. Fails with a typed [`ServeError`]
-    /// on unknown module, out-of-range layer, quantized adapters under a
-    /// full-precision strategy, or rank > min(m, n) on a fused path.
+    /// on a non-single-linear scope, unknown module, out-of-range layer,
+    /// quantized adapters under a full-precision strategy, or
+    /// rank > min(m, n) on a fused path.
     pub fn new(engine: &AdapterEngine, cfg: ServeConfig) -> Result<Server> {
-        cfg.validate(engine)?;
-        let base_w = engine.base_weight(&cfg.module, cfg.layer);
-        let (n_in, n_out) = (base_w.rows, base_w.cols);
-        let base = match cfg.strategy {
-            // NF4-resident base, streamed through the dequant-GEMM
-            // (same snapshot `AdapterEngine::quant_base_weight` hands
-            // external callers, built from the already-copied weight).
-            ServeStrategy::FusedQuant => {
-                BaseStore::Quant(QuantBase { nf4: crate::quant::quantize(&base_w) })
+        if cfg.scope != ServeScope::SingleLinear {
+            return Err(ServeError::ScopeMismatch {
+                server: "Server",
+                scope: cfg.scope.name(),
             }
-            // Same quantized snapshot, dequantized once into a dense
-            // copy: bit-for-bit the FusedQuant output at fp32 residency.
-            ServeStrategy::DequantDense => {
-                BaseStore::Dense(dequantize(&crate::quant::quantize(&base_w)))
-            }
-            _ => BaseStore::Dense(base_w),
-        };
-        let mut prepared = BTreeMap::new();
-        for name in engine.names() {
-            let ad = engine.get(name)?;
-            let delta = if !ad.spec.targets_module(&cfg.module) {
-                None
-            } else {
-                let a0 = ad.init_factors[&format!("a_{}", cfg.module)].layer(cfg.layer);
-                let b0 = ad.init_factors[&format!("b_{}", cfg.module)].layer(cfg.layer);
-                let a1 = ad.factors[&format!("a_{}", cfg.module)].layer(cfg.layer);
-                let b1 = ad.factors[&format!("b_{}", cfg.module)].layer(cfg.layer);
-                if b0.data.iter().all(|&x| x == 0.0) {
-                    // Frozen residual is W itself (LoRA-style init):
-                    // the current factors ARE the delta, at rank r.
-                    Some((a1, b1))
-                } else {
-                    // Appendix C: ΔA·ΔB = A'·B' − A₀·B₀, rank 2r, plugs
-                    // into the original W (exact for full-precision
-                    // strategies, whose attach-time invariant pins
-                    // base = W − A₀·B₀; for quantized adapters the frozen
-                    // base is nf4(W_res), so the identity — and therefore
-                    // quantized serving — holds to the NF4 round-trip
-                    // error the paper bounds in Table 3).
-                    let d = pissa_to_lora(&a0, &b0, &a1, &b1);
-                    Some((d.da, d.db))
-                }
-            };
-            prepared.insert(name.to_string(), Prepared { delta });
+            .into());
         }
-        Ok(Server { cfg, base, n_in, n_out, prepared, stats: ServeStats::new() })
+        cfg.validate(engine)?;
+        let linear = LinearServer::snapshot(engine, &cfg.module, cfg.layer, cfg.strategy, None)?;
+        Ok(Server { cfg, linear, stats: ServeStats::new() })
     }
 
     pub fn cfg(&self) -> &ServeConfig {
@@ -177,35 +77,24 @@ impl Server {
 
     /// Input feature count of the served linear.
     pub fn n_in(&self) -> usize {
-        self.n_in
+        self.linear.n_in()
     }
 
     /// Output feature count of the served linear.
     pub fn n_out(&self) -> usize {
-        self.n_out
+        self.linear.n_out()
     }
 
     /// Bytes the shared base keeps resident under this strategy: m·n·4
     /// for a dense store, packed-codes + scales for the NF4 store (the
     /// ≤ 0.35× acceptance bar of `benches/quant_serve.rs`).
     pub fn base_resident_bytes(&self) -> usize {
-        self.base.resident_bytes()
-    }
-
-    /// Dense base for the merged/dense execution paths. Those strategies
-    /// always build a `Dense` store, so this cannot miss.
-    fn dense_base(&self) -> &Mat {
-        match &self.base {
-            BaseStore::Dense(w) => w,
-            BaseStore::Quant(_) => {
-                unreachable!("merged/dense strategies always snapshot a dense base")
-            }
-        }
+        self.linear.resident_bytes()
     }
 
     /// Names the server can route to (snapshot order).
     pub fn adapter_names(&self) -> Vec<&str> {
-        self.prepared.keys().map(|s| s.as_str()).collect()
+        self.linear.adapter_names()
     }
 
     pub fn stats(&self) -> &ServeStats {
@@ -239,10 +128,10 @@ impl Server {
                 return Err(ServeError::DimMismatch { index: i, got: r.x.len(), want }.into());
             }
             if let Some(name) = &r.adapter {
-                if !self.prepared.contains_key(name) {
+                if !self.linear.serves(name) {
                     return Err(ServeError::UnknownAdapter {
                         name: name.clone(),
-                        have: self.prepared.keys().cloned().collect(),
+                        have: self.linear.adapter_names().iter().map(|s| s.to_string()).collect(),
                     }
                     .into());
                 }
@@ -250,93 +139,11 @@ impl Server {
         }
         let timer = Timer::start();
         let groups = bucket(requests);
-        let y = match self.cfg.strategy {
-            // The three fused-style strategies share one forward; they
-            // differ only in how the BaseStore executes the shared GEMM.
-            ServeStrategy::Fused | ServeStrategy::FusedQuant | ServeStrategy::DequantDense => {
-                self.forward_fused(requests, &groups)
-            }
-            ServeStrategy::DensePerAdapter => self.forward_dense(requests, &groups),
-            ServeStrategy::MergePerRequest => self.forward_merge(requests),
-        };
+        let x = gather_all(requests, want);
+        let y = self.linear.forward(&x, &groups);
         let adapters: Vec<Option<&str>> = requests.iter().map(|r| r.adapter.as_deref()).collect();
         self.stats.record_batch(&adapters, groups.len(), self.cfg.max_batch, timer.secs());
         Ok(y)
-    }
-
-    /// Shared `X·base` once (dense GEMM, or the streaming dequant-GEMM
-    /// for the NF4-resident store), then per-group `(X_g·ΔA)·ΔB`
-    /// corrections in parallel, scattered back in deterministic group
-    /// order.
-    fn forward_fused(&self, requests: &[Request], groups: &[Group]) -> Mat {
-        let x = gather_all(requests, self.n_in());
-        let mut y = self.base.forward(&x);
-        let adapter_groups: Vec<&Group> = groups.iter().filter(|g| g.adapter.is_some()).collect();
-        let corrections: Vec<Option<Mat>> = par_map(adapter_groups.len(), 1, |gi| {
-            let g = adapter_groups[gi];
-            let prep = &self.prepared[g.adapter.as_deref().expect("filtered to Some")];
-            let (da, db) = prep.delta.as_ref()?;
-            let xg = gather_rows(&x, &g.rows);
-            let t = matmul(&xg, da); // |g| × R   (skinny)
-            Some(matmul(&t, db)) // |g| × n   (rank-R panel product)
-        });
-        for (g, c) in adapter_groups.iter().zip(&corrections) {
-            if let Some(c) = c {
-                for (k, &row) in g.rows.iter().enumerate() {
-                    for (yv, cv) in y.row_mut(row).iter_mut().zip(c.row(k)) {
-                        *yv += cv;
-                    }
-                }
-            }
-        }
-        y
-    }
-
-    /// Baseline: materialize the merged dense weight once per adapter
-    /// group, dense GEMM per group. Amortizes the merge across a group
-    /// but shares nothing across adapters.
-    fn forward_dense(&self, requests: &[Request], groups: &[Group]) -> Mat {
-        let mut y = Mat::zeros(requests.len(), self.n_out());
-        let outs: Vec<Mat> = par_map(groups.len(), 1, |gi| {
-            let g = &groups[gi];
-            let xg = gather_requests(requests, &g.rows, self.n_in());
-            match self.group_delta(g) {
-                Some((da, db)) => {
-                    let merged = self.dense_base().add(&matmul(da, db));
-                    matmul(&xg, &merged)
-                }
-                None => matmul(&xg, self.dense_base()),
-            }
-        });
-        for (g, out) in groups.iter().zip(&outs) {
-            for (k, &row) in g.rows.iter().enumerate() {
-                y.row_mut(row).copy_from_slice(out.row(k));
-            }
-        }
-        y
-    }
-
-    /// Naive baseline: merge (materialize `W + ΔA·ΔB`) for every single
-    /// request, then one dense vector-matrix product. Sequential — this
-    /// is the cost model the fused path is measured against.
-    fn forward_merge(&self, requests: &[Request]) -> Mat {
-        let mut y = Mat::zeros(requests.len(), self.n_out());
-        for (i, r) in requests.iter().enumerate() {
-            let delta = r.adapter.as_deref().and_then(|n| self.prepared[n].delta.as_ref());
-            let row = match delta {
-                Some((da, db)) => {
-                    let merged = self.dense_base().add(&matmul(da, db));
-                    vecmat(&r.x, &merged)
-                }
-                None => vecmat(&r.x, self.dense_base()),
-            };
-            y.row_mut(i).copy_from_slice(&row);
-        }
-        y
-    }
-
-    fn group_delta(&self, g: &Group) -> Option<&(Mat, Mat)> {
-        g.adapter.as_deref().and_then(|n| self.prepared[n].delta.as_ref())
     }
 }
 
@@ -349,30 +156,14 @@ fn gather_all(requests: &[Request], m: usize) -> Mat {
     x
 }
 
-/// Gather a row subset of a packed batch.
-fn gather_rows(x: &Mat, rows: &[usize]) -> Mat {
-    let mut out = Mat::zeros(rows.len(), x.cols);
-    for (k, &row) in rows.iter().enumerate() {
-        out.row_mut(k).copy_from_slice(x.row(row));
-    }
-    out
-}
-
-/// Gather a row subset straight from the request slice.
-fn gather_requests(requests: &[Request], rows: &[usize], m: usize) -> Mat {
-    let mut out = Mat::zeros(rows.len(), m);
-    for (k, &row) in rows.iter().enumerate() {
-        out.row_mut(k).copy_from_slice(&requests[row].x);
-    }
-    out
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::adapter::AdapterSpec;
+    use crate::linalg::vecmat;
     use crate::model::BaseModel;
     use crate::runtime::ConfigInfo;
+    use crate::serve::config::ServeStrategy;
     use crate::util::rng::Rng;
 
     fn tiny_cfg() -> ConfigInfo {
@@ -454,6 +245,21 @@ mod tests {
         }
         // at the ceiling is fine
         assert!(srv.forward(&reqs[..2]).is_ok());
+    }
+
+    #[test]
+    fn full_model_scope_is_rejected_with_a_typed_error() {
+        // The scope invariant is part of the construction contract now:
+        // a Server only ever holds a single-linear config.
+        let (eng, _) = engine_with(&[("p", AdapterSpec::pissa(2))], 13);
+        let err = Server::new(&eng, ServeConfig::full_model()).unwrap_err();
+        match err.downcast_ref::<ServeError>() {
+            Some(ServeError::ScopeMismatch { server, scope }) => {
+                assert_eq!((*server, *scope), ("Server", "full-model"));
+            }
+            other => panic!("expected ScopeMismatch, got {other:?}"),
+        }
+        assert!(err.to_string().contains("ModelServer"), "{err}");
     }
 
     #[test]

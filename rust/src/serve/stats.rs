@@ -1,6 +1,7 @@
-//! Serving statistics: per-adapter hit counts, batch occupancy, and
-//! latency percentiles — the operational surface of the serving runtime,
-//! exported as JSON through the `metrics` sinks.
+//! Serving statistics: per-adapter hit counts, batch occupancy, latency
+//! percentiles, and (for multi-linear servers) the aggregated residency
+//! breakdown — the operational surface of the serving runtime, exported
+//! as JSON through the `metrics` sinks.
 
 use crate::util::json::{jnum, Json};
 use crate::util::timer::BenchStats;
@@ -149,9 +150,70 @@ impl ServeStats {
     }
 }
 
+/// Residency accounting for a server that aggregates MANY linears (the
+/// whole-model pipeline's `L × 7` base stores): bytes kept resident per
+/// module (summed over layers) plus the dense-fp32 denominator, i.e. the
+/// §Full-model-serving table of EXPERIMENTS.md.
+#[derive(Debug, Clone)]
+pub struct ResidentBreakdown {
+    /// (module, resident bytes summed over its layers), in module order.
+    pub per_module: Vec<(String, usize)>,
+    /// What the same linears would hold resident as dense fp32.
+    pub dense_bytes: usize,
+}
+
+impl ResidentBreakdown {
+    pub fn new(per_module: Vec<(String, usize)>, dense_bytes: usize) -> ResidentBreakdown {
+        ResidentBreakdown { per_module, dense_bytes }
+    }
+
+    /// Aggregate resident bytes across every module.
+    pub fn total(&self) -> usize {
+        self.per_module.iter().map(|(_, b)| b).sum()
+    }
+
+    /// `total / dense` — the residency ratio the fused-quant strategy is
+    /// measured on (≤ 0.35 is the acceptance bar).
+    pub fn ratio(&self) -> f64 {
+        if self.dense_bytes == 0 {
+            0.0
+        } else {
+            self.total() as f64 / self.dense_bytes as f64
+        }
+    }
+
+    /// JSON export (nested under the serve CLI / bench BENCH lines).
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        let mut per = Json::obj();
+        for (module, bytes) in &self.per_module {
+            per.set(module, jnum(*bytes as f64));
+        }
+        o.set("per_module_bytes", per);
+        o.set("total_bytes", jnum(self.total() as f64));
+        o.set("dense_bytes", jnum(self.dense_bytes as f64));
+        o.set("ratio", jnum(self.ratio()));
+        o
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn resident_breakdown_totals_and_ratio() {
+        let bd = ResidentBreakdown::new(
+            vec![("q".into(), 100), ("gate".into(), 60)],
+            640,
+        );
+        assert_eq!(bd.total(), 160);
+        assert!((bd.ratio() - 0.25).abs() < 1e-12);
+        let text = bd.to_json().to_string();
+        assert!(text.contains("\"gate\"") && text.contains("\"ratio\""), "{text}");
+        // Degenerate denominator does not divide by zero.
+        assert_eq!(ResidentBreakdown::new(vec![], 0).ratio(), 0.0);
+    }
 
     #[test]
     fn record_and_summarize() {

@@ -12,10 +12,12 @@
 
 use pissa::adapter::{AdapterEngine, AdapterSpec};
 use pissa::linalg::{dequant_matmul, dequant_matmul_panel, matmul, matmul_nt, matmul_tn, Mat};
-use pissa::model::BaseModel;
+use pissa::model::{BaseModel, LINEARS};
 use pissa::quant::{dequantize, quantize};
 use pissa::runtime::ConfigInfo;
-use pissa::serve::{drift_factors, Request, ServeConfig, ServeStrategy, Server};
+use pissa::serve::{
+    drift_factors, ModelRequest, ModelServer, Request, ServeConfig, ServeStrategy, Server,
+};
 use pissa::util::rng::Rng;
 use std::sync::Mutex;
 
@@ -155,6 +157,68 @@ fn serving_bit_identical_across_thread_counts() {
             y1.data,
             y8.data,
             "strategy {} drifted across thread counts",
+            strategy.name()
+        );
+    }
+}
+
+#[test]
+fn full_model_serving_bit_identical_across_thread_counts() {
+    // The whole-model pipeline is a long chain of parallel GEMMs (L×7
+    // per batch) interleaved with fixed-order elementwise math; one
+    // nondeterministic reduction anywhere in it would show up here.
+    let _guard = ENV_LOCK.lock().unwrap();
+    let cfg = ConfigInfo {
+        name: "model-determinism".into(),
+        kind: "decoder".into(),
+        vocab: 32,
+        d_model: 48,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff: 64,
+        seq_len: 8,
+        batch: 4,
+        eval_batch: 2,
+        n_classes: 0,
+        ranks: vec![4],
+    };
+    let (engine, requests) = with_threads(1, || {
+        let mut rng = Rng::new(9);
+        let base = BaseModel::random(&cfg, &mut rng);
+        let mut engine = AdapterEngine::new(base);
+        for name in ["t0", "t1", "t2"] {
+            engine.attach(name, AdapterSpec::pissa(4), &mut rng).unwrap();
+            for module in LINEARS {
+                drift_factors(&mut engine, name, module, 0.05, &mut rng).unwrap();
+            }
+        }
+        let requests: Vec<ModelRequest> = (0..32)
+            .map(|i| {
+                if i % 5 == 4 {
+                    ModelRequest::base(i % 32)
+                } else {
+                    ModelRequest::new(["t0", "t1", "t2"][i % 3], (i * 7) % 32)
+                }
+            })
+            .collect();
+        (engine, requests)
+    });
+
+    for strategy in ServeStrategy::all() {
+        let run = || {
+            let mut server = ModelServer::new(
+                &engine,
+                ServeConfig::full_model().strategy(strategy).max_batch(64),
+            )
+            .unwrap();
+            server.forward(&requests).unwrap()
+        };
+        let y1 = with_threads(1, run);
+        let y8 = with_threads(8, run);
+        assert_eq!(
+            y1.data,
+            y8.data,
+            "full-model strategy {} drifted across thread counts",
             strategy.name()
         );
     }

@@ -12,14 +12,26 @@
 //! edge-case hardening set: empty batches, unknown adapters, over-rank
 //! configs, and quantized adapters under full-precision strategies are
 //! typed errors, never panics.
+//!
+//! The full-model section holds the `ModelServer` pipeline to the same
+//! bars end-to-end: over the identical strategy × rank × batch grid, one
+//! `forward` call through ALL `n_layers × 7` adapted linears must match
+//! an independent per-request dense reference (every linear materialized
+//! via `effective_weight_of`, the block math re-derived here) within
+//! 1e-4; `fused-quant` must equal `dequant-dense` bit for bit while
+//! keeping the aggregate base ≤ 0.35× dense-resident; and quantized
+//! adapters route through the quantized-base strategies only.
 
 use pissa::adapter::{AdapterEngine, AdapterSpec};
 use pissa::linalg::{matmul, vecmat, Mat};
-use pissa::model::BaseModel;
+use pissa::model::{BaseModel, LINEARS};
 use pissa::quant::error::fro_error;
 use pissa::quant::nf4_roundtrip;
 use pissa::runtime::ConfigInfo;
-use pissa::serve::{drift_factors, Request, ServeConfig, ServeError, ServeStrategy, Server};
+use pissa::serve::{
+    drift_factors, ModelRequest, ModelServer, Request, ServeConfig, ServeError, ServeStrategy,
+    Server,
+};
 use pissa::util::rng::Rng;
 
 const MODULE: &str = "q";
@@ -336,6 +348,286 @@ fn undrifted_pissa_adapter_serves_the_original_weight() {
     let via_adapter = server.forward(&[Request::new("pissa-init", x.clone())]).unwrap();
     let via_base = server.forward(&[Request::base(x)]).unwrap();
     assert!(rel_fro(&via_adapter, &via_base) < 1e-4);
+}
+
+// ---- full-model serving (ModelServer pipeline) ------------------------
+
+const MODEL_D: usize = 32;
+const MODEL_FF: usize = 40;
+const MODEL_LAYERS: usize = 2;
+const MODEL_VOCAB: usize = 48;
+
+fn model_cfg() -> ConfigInfo {
+    ConfigInfo {
+        name: "model-serve-equiv".into(),
+        kind: "decoder".into(),
+        vocab: MODEL_VOCAB,
+        d_model: MODEL_D,
+        n_layers: MODEL_LAYERS,
+        n_heads: 2,
+        d_ff: MODEL_FF,
+        seq_len: 8,
+        batch: 4,
+        eval_batch: 2,
+        n_classes: 0,
+        ranks: vec![4],
+    }
+}
+
+/// Engine with a drifted full-coverage PiSSA adapter, a drifted LoRA
+/// adapter, a PARTIAL adapter (v/up only — the other five linears serve
+/// the base weight), and an un-drifted PiSSA adapter (delta ~ 0).
+fn build_model_engine(rank: usize, seed: u64) -> (AdapterEngine, Vec<String>, Rng) {
+    let mut rng = Rng::new(seed);
+    let base = BaseModel::random(&model_cfg(), &mut rng);
+    let mut eng = AdapterEngine::new(base);
+    eng.attach("pissa-t", AdapterSpec::pissa(rank), &mut rng).unwrap();
+    for module in LINEARS {
+        drift_factors(&mut eng, "pissa-t", module, 0.05, &mut rng).unwrap();
+    }
+    eng.attach("lora-t", AdapterSpec::lora(rank), &mut rng).unwrap();
+    drift_factors(&mut eng, "lora-t", "q", 0.05, &mut rng).unwrap();
+    drift_factors(&mut eng, "lora-t", "down", 0.05, &mut rng).unwrap();
+    eng.attach("partial", AdapterSpec::pissa(rank).targets(&["v", "up"]), &mut rng).unwrap();
+    drift_factors(&mut eng, "partial", "v", 0.05, &mut rng).unwrap();
+    eng.attach("pissa-init", AdapterSpec::pissa(rank), &mut rng).unwrap();
+    let names: Vec<String> =
+        ["pissa-t", "lora-t", "partial", "pissa-init"].iter().map(|s| s.to_string()).collect();
+    (eng, names, rng)
+}
+
+fn model_batch(names: &[String], size: usize, rng: &mut Rng) -> Vec<ModelRequest> {
+    (0..size)
+        .map(|i| {
+            let token = (rng.uniform() * MODEL_VOCAB as f64) as usize % MODEL_VOCAB;
+            // Deterministic mix: every 4th request is base-only, the rest
+            // cycle through the adapters.
+            if i % 4 == 3 {
+                ModelRequest::base(token)
+            } else {
+                ModelRequest::new(&names[i % names.len()], token)
+            }
+        })
+        .collect()
+}
+
+fn rms_ref(x: &[f32], gain: &[f32]) -> Vec<f32> {
+    let mut ms = 0.0f32;
+    for &v in x {
+        ms += v * v;
+    }
+    let inv = 1.0 / (ms / x.len() as f32 + 1e-6).sqrt();
+    x.iter().zip(gain).map(|(&v, &g)| v * inv * g).collect()
+}
+
+fn sigmoid_ref(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+/// Independent ground truth for the whole pipeline: per request,
+/// materialize EVERY layer's seven effective dense weights from the
+/// engine and re-derive the block math (rms-norm → q/k/v with the
+/// σ(⟨q,k⟩/√d) single-position gate → o → residual → rms-norm → SwiGLU →
+/// residual → final norm → head), one row at a time.
+fn model_reference(engine: &AdapterEngine, requests: &[ModelRequest]) -> Mat {
+    let base = engine.base();
+    let embed = base.scaffold["embed"].as_mat();
+    let head = base.scaffold["lm_head"].as_mat();
+    let attn_gains = base.scaffold["attn_norm"].as_mat();
+    let mlp_gains = base.scaffold["mlp_norm"].as_mat();
+    let final_gain = &base.scaffold["final_norm"].data;
+    let scale = 1.0 / (MODEL_D as f32).sqrt();
+    let mut out = Mat::zeros(requests.len(), head.cols);
+    for (i, r) in requests.iter().enumerate() {
+        let w = |module: &str, layer: usize| -> Mat {
+            match &r.adapter {
+                Some(name) => engine.effective_weight_of(name, module, layer).unwrap(),
+                None => engine.base_weight(module, layer),
+            }
+        };
+        let mut x: Vec<f32> = embed.row(r.token).to_vec();
+        for li in 0..MODEL_LAYERS {
+            let h = rms_ref(&x, attn_gains.row(li));
+            let q = vecmat(&h, &w("q", li));
+            let k = vecmat(&h, &w("k", li));
+            let mut v = vecmat(&h, &w("v", li));
+            let dot: f32 = q.iter().zip(&k).map(|(a, b)| a * b).sum();
+            let gate = sigmoid_ref(dot * scale);
+            for vv in v.iter_mut() {
+                *vv *= gate;
+            }
+            let o = vecmat(&v, &w("o", li));
+            for (xv, ov) in x.iter_mut().zip(&o) {
+                *xv += ov;
+            }
+            let h2 = rms_ref(&x, mlp_gains.row(li));
+            let g = vecmat(&h2, &w("gate", li));
+            let u = vecmat(&h2, &w("up", li));
+            let act: Vec<f32> =
+                g.iter().zip(&u).map(|(&gv, &uv)| gv * sigmoid_ref(gv) * uv).collect();
+            let dn = vecmat(&act, &w("down", li));
+            for (xv, dv) in x.iter_mut().zip(&dn) {
+                *xv += dv;
+            }
+        }
+        let hf = rms_ref(&x, final_gain);
+        out.row_mut(i).copy_from_slice(&vecmat(&hf, &head));
+    }
+    out
+}
+
+#[test]
+fn full_model_exact_strategies_match_dense_reference() {
+    // The tentpole contract: one ModelServer::forward call routes a mixed
+    // batch through all n_layers × 7 adapted linears and agrees with the
+    // per-request merged-dense full forward within 1e-4, over the same
+    // strategy × rank × batch grid as the single-linear suite.
+    for &rank in &[1usize, 4, 16] {
+        let (engine, names, mut rng) = build_model_engine(rank, 500 + rank as u64);
+        for &batch in &[1usize, 7, 64] {
+            let requests = model_batch(&names, batch, &mut rng);
+            let want = model_reference(&engine, &requests);
+            for strategy in ServeStrategy::exact() {
+                let mut server = ModelServer::new(
+                    &engine,
+                    ServeConfig::full_model().strategy(strategy).max_batch(64),
+                )
+                .unwrap();
+                let got = server.forward(&requests).unwrap();
+                assert_eq!((got.rows, got.cols), (batch, MODEL_VOCAB));
+                let err = rel_fro(&got, &want);
+                assert!(
+                    err < 1e-4,
+                    "rank={rank} batch={batch} strategy={}: rel fro err {err:.3e}",
+                    strategy.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn full_model_fused_quant_matches_dequant_dense_bit_for_bit() {
+    // The DequantGemm contract survives the pipeline: streaming NF4
+    // panels at every one of the L×7 linears is the same arithmetic as
+    // dequantizing each base once — and the NF4-resident pipeline keeps
+    // the aggregate base within the 0.35× dense budget.
+    for &rank in &[1usize, 4, 16] {
+        let (engine, names, mut rng) = build_model_engine(rank, 700 + rank as u64);
+        for &batch in &[1usize, 7, 64] {
+            let requests = model_batch(&names, batch, &mut rng);
+            let mut fq = ModelServer::new(
+                &engine,
+                ServeConfig::full_model().strategy(ServeStrategy::FusedQuant).max_batch(64),
+            )
+            .unwrap();
+            let mut dd = ModelServer::new(
+                &engine,
+                ServeConfig::full_model().strategy(ServeStrategy::DequantDense).max_batch(64),
+            )
+            .unwrap();
+            let yq = fq.forward(&requests).unwrap();
+            let yd = dd.forward(&requests).unwrap();
+            assert_eq!(
+                yq.data, yd.data,
+                "rank={rank} batch={batch}: fused-quant diverged from dequant-dense"
+            );
+            // Aggregate residency: NF4 across ALL L×7 linears vs dense.
+            assert!(
+                fq.base_resident_bytes() * 100 <= fq.dense_base_bytes() * 35,
+                "rank={rank}: aggregate NF4 residency {} exceeds 0.35x dense {}",
+                fq.base_resident_bytes(),
+                fq.dense_base_bytes()
+            );
+            assert_eq!(dd.base_resident_bytes(), dd.dense_base_bytes());
+            // Quantization is visible end-to-end (guards a silently-dense
+            // base): the fp32 pipeline must differ.
+            let mut fused = ModelServer::new(
+                &engine,
+                ServeConfig::full_model().strategy(ServeStrategy::Fused).max_batch(64),
+            )
+            .unwrap();
+            let y = fused.forward(&requests).unwrap();
+            assert!(yq.sub(&y).fro() > 0.0, "rank={rank} batch={batch}");
+        }
+    }
+}
+
+#[test]
+fn full_model_quantized_adapters_route_through_fused_quant() {
+    let mut rng = Rng::new(42);
+    let base = BaseModel::random(&model_cfg(), &mut rng);
+    let mut eng = AdapterEngine::new(base);
+    eng.attach("qp", AdapterSpec::qpissa(4).iters(2), &mut rng).unwrap();
+    for module in LINEARS {
+        drift_factors(&mut eng, "qp", module, 0.05, &mut rng).unwrap();
+    }
+    for strategy in ServeStrategy::exact() {
+        let err =
+            ModelServer::new(&eng, ServeConfig::full_model().strategy(strategy)).unwrap_err();
+        assert!(
+            matches!(err.downcast_ref::<ServeError>(), Some(ServeError::QuantizedAdapter { .. })),
+            "{}: got {err:?}",
+            strategy.name()
+        );
+    }
+    let mut server = ModelServer::new(
+        &eng,
+        ServeConfig::full_model().strategy(ServeStrategy::FusedQuant).max_batch(8),
+    )
+    .unwrap();
+    let requests =
+        vec![ModelRequest::new("qp", 3), ModelRequest::base(3), ModelRequest::new("qp", 11)];
+    let y = server.forward(&requests).unwrap();
+    assert_eq!((y.rows, y.cols), (3, MODEL_VOCAB));
+    assert!(y.data.iter().all(|v| v.is_finite()));
+    // The drifted quantized adapter steers the output away from base.
+    let diff: f32 = y.row(0).iter().zip(y.row(1)).map(|(a, b)| (a - b).abs()).sum();
+    assert!(diff > 1e-3, "adapter row identical to base row (diff {diff:.3e})");
+}
+
+#[test]
+fn full_model_base_only_batch_matches_dense_base_forward() {
+    // A base-only batch takes the pure frozen-base pipeline (no
+    // correction GEMMs anywhere) and must reproduce the dense reference
+    // essentially exactly — a tighter bar than the mixed-batch 1e-4.
+    let (engine, _, mut rng) = build_model_engine(4, 900);
+    let requests: Vec<ModelRequest> = (0..9)
+        .map(|_| ModelRequest::base((rng.uniform() * MODEL_VOCAB as f64) as usize % MODEL_VOCAB))
+        .collect();
+    let want = model_reference(&engine, &requests);
+    for strategy in ServeStrategy::exact() {
+        let mut server =
+            ModelServer::new(&engine, ServeConfig::full_model().strategy(strategy)).unwrap();
+        let got = server.forward(&requests).unwrap();
+        let err = rel_fro(&got, &want);
+        assert!(err < 1e-5, "{}: base-only err {err:.3e}", strategy.name());
+    }
+}
+
+#[test]
+fn full_model_over_rank_adapter_names_the_offending_module() {
+    // down is 40×32 here, so rank 36 > min(m, n) = 32 must be refused on
+    // the fused paths — validation walks every linear in the stack.
+    let mut rng = Rng::new(43);
+    let base = BaseModel::random(&model_cfg(), &mut rng);
+    let mut eng = AdapterEngine::new(base);
+    eng.attach("fat", AdapterSpec::lora(36), &mut rng).unwrap();
+    let err = ModelServer::new(&eng, ServeConfig::full_model()).unwrap_err();
+    match err.downcast_ref::<ServeError>() {
+        Some(ServeError::RankTooLarge { rank, module, .. }) => {
+            assert_eq!(*rank, 36);
+            assert!(LINEARS.contains(&module.as_str()), "module '{module}'");
+        }
+        other => panic!("expected RankTooLarge, got {other:?}"),
+    }
+    // The merged/dense strategies accept it, end to end.
+    let mut server = ModelServer::new(
+        &eng,
+        ServeConfig::full_model().strategy(ServeStrategy::DensePerAdapter),
+    )
+    .unwrap();
+    assert!(server.forward(&[ModelRequest::new("fat", 1)]).is_ok());
 }
 
 // ---- edge-case hardening ---------------------------------------------
