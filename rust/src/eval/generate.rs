@@ -1,19 +1,58 @@
-//! Greedy decoding over the logits artifact, plus scored evaluation on
-//! the synthetic GSM8K/HumanEval-analog suites.
+//! Greedy decoding, plus scored evaluation on the synthetic
+//! GSM8K/HumanEval-analog suites.
 //!
-//! Decoding recomputes the full forward per emitted token (no KV cache —
-//! the artifacts are fixed-shape [B, T] and the models are tiny; the
-//! O(T²) cost is measured in §Perf and irrelevant at this scale).
+//! Two decoding backends share one prompt/stop/extraction protocol
+//! (`BOS prompt SEP …generation… EOS`, greedy first-max sampling):
+//!
+//! * [`Generator`] — the artifact path: a fixed-shape `[B, T]` logits
+//!   executable. The artifact recomputes every position per call (its
+//!   interface is the whole-sequence forward), so each emitted token
+//!   costs a full forward — O(T²) per sequence, inherent to the frozen
+//!   HLO shape and acceptable only because those models are tiny.
+//! * [`ServeGenerator`] — the serving path: the same greedy protocol
+//!   routed through `ModelServer::prefill`/`decode_step` over a
+//!   slot-paged KV cache via the continuous-batching `DecodeScheduler`.
+//!   Each emitted token costs ONE single-position forward over the
+//!   cached keys/values — O(T) per sequence — and the incremental
+//!   trajectory is bit-identical to recomputing every prefix from
+//!   scratch (`rust/tests/serve_equiv.rs` locks the equivalence on a
+//!   fixture prompt set).
 
-use crate::data::mathqa::{extract_answer, Problem};
+use crate::adapter::AdapterEngine;
 use crate::data::codegen::{extract_output, CodeTask};
-use crate::data::tokenizer::{decode, BOS, EOS, PAD, SEP};
-use crate::data::tokenizer::encode;
+use crate::data::mathqa::{extract_answer, Problem};
+use crate::data::tokenizer::{decode, encode, BOS, EOS, PAD, SEP};
 use crate::model::params::to_literals;
 use crate::model::TrainState;
 use crate::runtime::{lit_i32, vec_f32, Artifact, Manifest, Runtime};
+use crate::serve::{argmax, DecodeScheduler, KvCache, ModelServer, SeqRequest, ServeConfig};
 use anyhow::Result;
 use std::sync::Arc;
+
+/// Lay a prompt out for generation: `BOS prompt SEP`, with the prompt
+/// (not the SEP) truncated so the layout leaves at least one position to
+/// generate within `seq_len` — an over-long prompt loses its tail, never
+/// its prompt/response separator. Shared by both decoding backends so
+/// their protocols cannot drift.
+pub fn layout_prompt(prompt: &str, seq_len: usize) -> Vec<i32> {
+    let mut toks = vec![BOS];
+    toks.extend(encode(prompt));
+    toks.truncate(seq_len.saturating_sub(2)); // room for SEP + >=1 generated
+    toks.push(SEP);
+    toks
+}
+
+/// Extract the response from a generated row: everything after the first
+/// SEP, detokenized (specials dropped). A row with no SEP has no
+/// response (`layout_prompt` guarantees one is always present, so this
+/// only triggers on foreign token streams — better empty than echoing
+/// the prompt back as the "answer"). Shared by both backends.
+pub fn extract_response(tokens: &[i32]) -> String {
+    match tokens.iter().position(|&x| x == SEP) {
+        Some(sep_pos) => decode(&tokens[sep_pos + 1..]),
+        None => String::new(),
+    }
+}
 
 /// A generation session bound to a logits artifact.
 pub struct Generator<'rt> {
@@ -70,10 +109,7 @@ impl<'rt> Generator<'rt> {
         let mut tokens = vec![PAD; bsz * t];
         let mut lens = vec![0usize; bsz];
         for (row, p) in prompts.iter().enumerate() {
-            let mut toks = vec![BOS];
-            toks.extend(encode(p));
-            toks.push(SEP);
-            toks.truncate(t - 1); // leave room to generate
+            let toks = layout_prompt(p, t);
             lens[row] = toks.len();
             tokens[row * t..row * t + toks.len()].copy_from_slice(&toks);
         }
@@ -95,16 +131,7 @@ impl<'rt> Generator<'rt> {
                 // logits for the last real position predict the next token
                 let pos = lens[row] - 1;
                 let off = (row * t + pos) * v;
-                let slice = &logits[off..off + v];
-                let mut best = 0usize;
-                let mut best_v = f32::NEG_INFINITY;
-                for (i, &x) in slice.iter().enumerate() {
-                    if x > best_v {
-                        best_v = x;
-                        best = i;
-                    }
-                }
-                let tok = best as i32;
+                let tok = argmax(&logits[off..off + v]) as i32;
                 tokens[row * t + lens[row]] = tok;
                 lens[row] += 1;
                 if tok == EOS {
@@ -115,12 +142,74 @@ impl<'rt> Generator<'rt> {
 
         let mut out = Vec::with_capacity(prompts.len());
         for (row, _) in prompts.iter().enumerate() {
-            // response = tokens after the SEP
-            let row_toks = &tokens[row * t..row * t + lens[row]];
-            let sep_pos = row_toks.iter().position(|&x| x == SEP).unwrap_or(0);
-            out.push(decode(&row_toks[sep_pos + 1..]));
+            out.push(extract_response(&tokens[row * t..row * t + lens[row]]));
         }
         Ok(out)
+    }
+}
+
+/// KV-cached greedy generation over a [`ModelServer`] snapshot — the
+/// serving-stack backend of the shared decode protocol. One prefill per
+/// prompt, then one cached single-position decode step per emitted token
+/// (continuous batching across the prompt set), instead of recomputing
+/// the full sequence per token.
+pub struct ServeGenerator {
+    server: ModelServer,
+    cache: KvCache,
+    adapter: Option<String>,
+}
+
+impl ServeGenerator {
+    /// Snapshot `engine` for generation under `adapter` (`None` = the
+    /// frozen base). `cfg` must be a full-model config; its decode knobs
+    /// (`max_seq`, `slots`, `kv_budget_bytes`) size the KV cache.
+    pub fn new(engine: &AdapterEngine, cfg: ServeConfig, adapter: Option<&str>) -> Result<ServeGenerator> {
+        let server = ModelServer::new(engine, cfg)?;
+        let cache = server.new_cache()?;
+        if let Some(name) = adapter {
+            anyhow::ensure!(
+                server.adapter_names().contains(&name),
+                "ServeGenerator: engine has no adapter '{name}'"
+            );
+        }
+        Ok(ServeGenerator { server, cache, adapter: adapter.map(|s| s.to_string()) })
+    }
+
+    /// Longest sequence (prompt + generated) the cache admits.
+    pub fn max_seq(&self) -> usize {
+        self.cache.max_seq()
+    }
+
+    pub fn server(&self) -> &ModelServer {
+        &self.server
+    }
+
+    /// Greedy-decode continuations for a batch of prompts: the same
+    /// `BOS prompt SEP … EOS` protocol as [`Generator::generate`], with
+    /// `max_new` clamped so every sequence fits `max_seq`. Results come
+    /// back in prompt order.
+    pub fn generate(&mut self, prompts: &[String], max_new: usize) -> Result<Vec<String>> {
+        let mut sched = DecodeScheduler::new();
+        for p in prompts {
+            let toks = layout_prompt(p, self.cache.max_seq());
+            let budget = max_new.min(self.cache.max_seq() - toks.len());
+            let prompt: Vec<usize> = toks.iter().map(|&t| t as usize).collect();
+            let req = SeqRequest {
+                adapter: self.adapter.clone(),
+                prompt,
+                max_new: budget,
+                stop_token: Some(EOS as usize),
+            };
+            sched.submit(req);
+        }
+        let finished = sched.run_sorted(&mut self.server, &mut self.cache)?;
+        Ok(finished
+            .iter()
+            .map(|f| {
+                let toks: Vec<i32> = f.tokens.iter().map(|&t| t as i32).collect();
+                extract_response(&toks)
+            })
+            .collect())
     }
 }
 

@@ -1,9 +1,12 @@
-//! Evaluation: greedy decoding over logits artifacts, GSM8K-style
-//! exact-match math scoring, HumanEval-style code scoring, and the GLUE
-//! metric suite for the NLU encoder.
+//! Evaluation: greedy decoding (artifact-backed, and KV-cached through
+//! the serving stack), GSM8K-style exact-match math scoring,
+//! HumanEval-style code scoring, and the GLUE metric suite for the NLU
+//! encoder.
 
 pub mod generate;
 pub mod nlu_eval;
 
-pub use generate::{eval_code, eval_math, Generator};
+pub use generate::{
+    eval_code, eval_math, extract_response, layout_prompt, Generator, ServeGenerator,
+};
 pub use nlu_eval::{score, NluScorer};

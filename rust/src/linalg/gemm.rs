@@ -239,12 +239,14 @@ pub fn matmul_into(a: &Mat, b: &Mat, c: &mut Mat) {
     c.data.iter_mut().for_each(|x| *x = 0.0);
     if m * n * k < 32 * 32 * 32 {
         // Small case: naive triple loop, row-major friendly (ikj order).
+        // No zero-skip: every path that can stand in for a row of this
+        // product — the blocked kernel below, `vecmat`, the dequant-GEMM —
+        // performs one multiply-add per element in ascending p, and the
+        // decode path's bit-identity contract (single-row forward ≡ row
+        // of the batched forward) leans on that structural identity.
         for i in 0..m {
             for p in 0..k {
                 let av = a.data[i * k + p];
-                if av == 0.0 {
-                    continue;
-                }
                 let brow = &b.data[p * n..(p + 1) * n];
                 let crow = &mut c.data[i * n..(i + 1) * n];
                 for j in 0..n {
@@ -279,14 +281,47 @@ pub fn matmul_into(a: &Mat, b: &Mat, c: &mut Mat) {
 /// y = x·A for a row vector x (length `a.rows`) — the single-request
 /// serving path. Sequential AXPY sweep in fixed p order (deterministic).
 pub fn vecmat(x: &[f32], a: &Mat) -> Vec<f32> {
-    assert_eq!(x.len(), a.rows, "vecmat: x len {} vs {} rows", x.len(), a.rows);
     let mut y = vec![0.0f32; a.cols];
+    vecmat_into(x, a, &mut y);
+    y
+}
+
+/// [`vecmat`] overwriting a caller-owned buffer — the allocation-free
+/// single-row decode path. One multiply-add per element in ascending p
+/// order: bit-identical to the corresponding row of `matmul(X, a)` (the
+/// decode fast path's contract with the batched prefill).
+pub fn vecmat_into(x: &[f32], a: &Mat, y: &mut [f32]) {
+    assert_eq!(x.len(), a.rows, "vecmat: x len {} vs {} rows", x.len(), a.rows);
+    assert_eq!(y.len(), a.cols, "vecmat: y len {} vs {} cols", y.len(), a.cols);
+    y.iter_mut().for_each(|v| *v = 0.0);
     for (p, &xv) in x.iter().enumerate() {
-        for (yv, &av) in y.iter_mut().zip(a.row(p)) {
-            *yv += xv * av;
+        axpy_row(y, xv, a.row(p));
+    }
+}
+
+/// y = x·deq(W) for a row vector over a blockwise-NF4 operand — the
+/// single-row leg of the streaming dequant-GEMM. Decodes k-panels of
+/// [`DQ_PANEL_ROWS`] rows into one stack-local buffer and accumulates in
+/// ascending p order, so the result is bit-identical both to the
+/// corresponding row of [`dequant_matmul`] and to
+/// `vecmat(x, &dequantize(w))`.
+pub fn dequant_vecmat_into(x: &[f32], w: &Nf4Tensor, y: &mut [f32]) {
+    assert_eq!(x.len(), w.rows, "dequant_vecmat: x len {} vs {} rows", x.len(), w.rows);
+    assert_eq!(y.len(), w.cols, "dequant_vecmat: y len {} vs {} cols", y.len(), w.cols);
+    y.iter_mut().for_each(|v| *v = 0.0);
+    let (k, n) = (w.rows, w.cols);
+    if k == 0 || n == 0 {
+        return;
+    }
+    let mut panel = vec![0.0f32; DQ_PANEL_ROWS.min(k) * n];
+    for kb in (0..k).step_by(DQ_PANEL_ROWS) {
+        let ke = (kb + DQ_PANEL_ROWS).min(k);
+        let vals = &mut panel[..(ke - kb) * n];
+        w.dequantize_range(kb * n, ke * n, vals);
+        for p in kb..ke {
+            axpy_row(y, x[p], &vals[(p - kb) * n..(p - kb + 1) * n]);
         }
     }
-    y
 }
 
 /// y = A·x for a vector x.
@@ -444,6 +479,30 @@ mod tests {
         assert_eq!((c.rows, c.cols), (0, 4));
         let c2 = dequant_matmul(&Mat::zeros(3, 8), &quantize(&Mat::zeros(8, 0)));
         assert_eq!((c2.rows, c2.cols), (3, 0));
+    }
+
+    #[test]
+    fn row_fast_paths_are_bit_identical_to_batched_rows() {
+        use crate::quant::nf4::quantize;
+        // The decode fast path's contract: vecmat_into / dequant_vecmat_into
+        // reproduce rows of the batched GEMMs BIT for bit, covering both
+        // the small naive and the blocked parallel dispatch.
+        let mut rng = Rng::new(11);
+        for &(m, k, n) in &[(3usize, 9usize, 11usize), (40, 70, 300)] {
+            let x = Mat::randn(m, k, 0.0, 1.0, &mut rng);
+            let b = Mat::randn(k, n, 0.0, 1.0, &mut rng);
+            let dense = matmul(&x, &b);
+            let w = quantize(&b);
+            let dq = dequant_matmul(&x, &w);
+            let mut y = vec![-7.0f32; n]; // stale buffer must be overwritten
+            let mut yq = vec![-7.0f32; n];
+            for i in 0..m {
+                vecmat_into(x.row(i), &b, &mut y);
+                assert_eq!(y.as_slice(), dense.row(i), "{m}x{k}x{n} row {i}");
+                dequant_vecmat_into(x.row(i), &w, &mut yq);
+                assert_eq!(yq.as_slice(), dq.row(i), "{m}x{k}x{n} quant row {i}");
+            }
+        }
     }
 
     #[test]

@@ -11,8 +11,8 @@ pub mod rsvd;
 pub mod svd;
 
 pub use gemm::{
-    dequant_matmul, dequant_matmul_into, dequant_matmul_panel, matmul, matmul_acc, matmul_into,
-    matmul_nt, matmul_tn, matvec, vecmat,
+    dequant_matmul, dequant_matmul_into, dequant_matmul_panel, dequant_vecmat_into, matmul,
+    matmul_acc, matmul_into, matmul_nt, matmul_tn, matvec, vecmat, vecmat_into,
 };
 pub use mat::Mat;
 pub use norms::{nuclear_norm, singular_values};

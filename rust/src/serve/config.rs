@@ -159,6 +159,16 @@ pub enum ServeError {
     /// The config's [`ServeScope`] does not match the server type it was
     /// handed to (`Server` is single-linear, `ModelServer` full-model).
     ScopeMismatch { server: &'static str, scope: &'static str },
+    /// A sequence request's worst case (`prompt + max_new`) does not fit
+    /// in the configured `max_seq` positions.
+    SeqTooLong { prompt: usize, max_new: usize, max_seq: usize },
+    /// The KV cache cannot reserve enough pages for a sequence within the
+    /// configured byte budget — the request can NEVER be admitted (as
+    /// opposed to "wait until another sequence retires").
+    CacheBudgetExhausted { needed_bytes: usize, budget_bytes: usize },
+    /// A decode step named a cache slot that is not currently claimed (or
+    /// named the same slot twice in one step).
+    BadSlot { slot: usize, detail: &'static str },
 }
 
 impl fmt::Display for ServeError {
@@ -215,6 +225,20 @@ impl fmt::Display for ServeError {
                      for a Server and ServeConfig::full_model() for a ModelServer"
                 )
             }
+            ServeError::SeqTooLong { prompt, max_new, max_seq } => write!(
+                f,
+                "sequence of {prompt} prompt tokens + up to {max_new} generated exceeds \
+                 max_seq = {max_seq}; shorten the request or raise ServeConfig::max_seq"
+            ),
+            ServeError::CacheBudgetExhausted { needed_bytes, budget_bytes } => write!(
+                f,
+                "KV cache needs {needed_bytes} bytes for this sequence but the whole \
+                 budget is {budget_bytes}; raise ServeConfig::kv_budget_bytes or lower \
+                 max_seq/slots"
+            ),
+            ServeError::BadSlot { slot, detail } => {
+                write!(f, "KV-cache slot {slot}: {detail}")
+            }
         }
     }
 }
@@ -237,7 +261,22 @@ pub struct ServeConfig {
     pub strategy: ServeStrategy,
     /// Scheduler batch ceiling (occupancy is reported against this).
     pub max_batch: usize,
+    /// Longest sequence (prompt + generated) the decode path serves; the
+    /// per-slot KV-cache reservation ceiling.
+    pub max_seq: usize,
+    /// Concurrent-sequence budget of the continuous-batching decode
+    /// scheduler (and the KV cache's slot count).
+    pub decode_slots: usize,
+    /// Byte budget for the slot-paged KV cache across ALL slots; page
+    /// reservations beyond it are a typed
+    /// [`ServeError::CacheBudgetExhausted`].
+    pub kv_budget_bytes: usize,
 }
+
+/// Default KV-cache byte budget: roomy for the synthetic workloads (the
+/// tiny models here keep a full 8-slot × 256-position cache well under
+/// it), small enough that a misconfigured giant reservation is caught.
+pub const DEFAULT_KV_BUDGET_BYTES: usize = 64 << 20;
 
 impl ServeConfig {
     pub fn new(module: &str) -> ServeConfig {
@@ -247,6 +286,9 @@ impl ServeConfig {
             layer: 0,
             strategy: ServeStrategy::Fused,
             max_batch: 64,
+            max_seq: 128,
+            decode_slots: 8,
+            kv_budget_bytes: DEFAULT_KV_BUDGET_BYTES,
         }
     }
 
@@ -271,6 +313,24 @@ impl ServeConfig {
         self
     }
 
+    /// Sequence-length ceiling of the decode path (prompt + generated).
+    pub fn max_seq(mut self, max_seq: usize) -> ServeConfig {
+        self.max_seq = max_seq;
+        self
+    }
+
+    /// Concurrent-sequence slots of the continuous-batching scheduler.
+    pub fn slots(mut self, slots: usize) -> ServeConfig {
+        self.decode_slots = slots;
+        self
+    }
+
+    /// KV-cache byte budget across all slots.
+    pub fn kv_budget_bytes(mut self, bytes: usize) -> ServeConfig {
+        self.kv_budget_bytes = bytes;
+        self
+    }
+
     /// Validate the config against a concrete engine: known module, layer
     /// in range (single-linear scope), and every attached adapter
     /// servable on every linear the scope covers — one `(module, layer)`
@@ -284,6 +344,8 @@ impl ServeConfig {
     /// accept any rank).
     pub fn validate(&self, engine: &AdapterEngine) -> Result<()> {
         anyhow::ensure!(self.max_batch >= 1, "max_batch must be >= 1");
+        anyhow::ensure!(self.max_seq >= 1, "max_seq must be >= 1");
+        anyhow::ensure!(self.decode_slots >= 1, "decode_slots must be >= 1");
         match self.scope {
             ServeScope::SingleLinear => {
                 if !LINEARS.contains(&self.module.as_str()) {
@@ -421,6 +483,22 @@ mod tests {
         assert_eq!(c.layer, 1);
         assert_eq!(c.max_batch, 8);
         assert_eq!(c.to_string(), "q[1]:dense-per-adapter:max_batch=8");
+    }
+
+    #[test]
+    fn decode_knobs_build_and_error_messages_point_at_them() {
+        let c = ServeConfig::full_model().max_seq(256).slots(4).kv_budget_bytes(1 << 20);
+        assert_eq!(c.max_seq, 256);
+        assert_eq!(c.decode_slots, 4);
+        assert_eq!(c.kv_budget_bytes, 1 << 20);
+        assert_eq!(ServeConfig::new("q").kv_budget_bytes, DEFAULT_KV_BUDGET_BYTES);
+        let e = ServeError::SeqTooLong { prompt: 100, max_new: 50, max_seq: 128 };
+        let msg = e.to_string();
+        assert!(msg.contains("128") && msg.contains("max_seq"), "{msg}");
+        let e = ServeError::CacheBudgetExhausted { needed_bytes: 4096, budget_bytes: 1024 };
+        assert!(e.to_string().contains("kv_budget_bytes"), "{}", e);
+        let e = ServeError::BadSlot { slot: 3, detail: "not claimed" };
+        assert!(e.to_string().contains("slot 3"), "{}", e);
     }
 
     #[test]

@@ -1,0 +1,407 @@
+//! Slot-paged per-layer K/V cache — the state that turns the one-shot
+//! `ModelServer` forward into an autoregressive decode engine.
+//!
+//! One [`KvCache`] serves one `ModelServer`: a fixed number of sequence
+//! SLOTS (the continuous-batching concurrency budget) over a shared pool
+//! of fixed-size PAGES ([`KV_PAGE`] positions × `d_model` floats each).
+//! Every `(slot, layer)` pair owns two page lists — keys and values —
+//! that grow page-by-page as the sequence extends, so memory tracks the
+//! positions actually written, not `slots × max_seq` up front, and pages
+//! freed by a retiring sequence are immediately reusable by the next
+//! admission (no realloc churn under sustained traffic).
+//!
+//! Admission is reservation-based: [`KvCache::try_claim`] reserves the
+//! WORST-CASE page count for a sequence (its full `prompt + max_new`,
+//! exactly as requested — nothing is silently capped) against the byte
+//! budget before any token runs, so a sequence that starts decoding can
+//! always finish — there is no mid-flight allocation failure. A sequence
+//! that could never fit is a typed error: over `max_seq` positions is
+//! [`ServeError::SeqTooLong`] (callers that want a shorter generation
+//! must clamp `max_new` themselves, as `eval::ServeGenerator` does), and
+//! a reservation beyond the whole budget is
+//! [`ServeError::CacheBudgetExhausted`]. One that merely has to wait for
+//! other sequences to retire is `Ok(None)` (the scheduler keeps it
+//! queued, in arrival order).
+//!
+//! Determinism: the cache is pure storage — rows are written and read as
+//! plain `f32` slices in position order, so the attention math over
+//! cached rows is the exact arithmetic of attention over freshly
+//! computed rows (the bit-identity contract of
+//! `rust/tests/serve_equiv.rs`).
+
+use super::config::ServeError;
+use anyhow::Result;
+
+/// Positions per cache page. Small enough that short sequences don't
+/// over-reserve, large enough that the page table stays tiny.
+pub const KV_PAGE: usize = 16;
+
+/// Handle to a claimed sequence slot. Only the [`KvCache`] that issued it
+/// can interpret it; it is deliberately NOT `Clone`-proof (plain index)
+/// because the scheduler is the single owner of slot lifecycles.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SlotId(pub(crate) usize);
+
+impl SlotId {
+    /// Raw slot index (for stats/labels).
+    pub fn index(&self) -> usize {
+        self.0
+    }
+}
+
+/// One page list: indices into the shared page pool.
+#[derive(Debug, Default, Clone)]
+struct PageList {
+    pages: Vec<usize>,
+    /// Rows written into this list so far.
+    rows: usize,
+}
+
+/// Per-slot sequence state: a K and a V page list per layer.
+#[derive(Debug)]
+struct Slot {
+    /// Committed positions (advanced once per token, after every layer
+    /// has appended its K/V row).
+    len: usize,
+    /// Worst-case positions this slot reserved pages for.
+    reserved_positions: usize,
+    k: Vec<PageList>,
+    v: Vec<PageList>,
+}
+
+/// Slot-paged K/V cache over a shared page pool. See the module docs.
+#[derive(Debug)]
+pub struct KvCache {
+    n_layers: usize,
+    d: usize,
+    max_seq: usize,
+    /// Total pages the byte budget allows across all slots.
+    total_pages: usize,
+    /// Pages currently reserved by claimed slots (worst case).
+    reserved_pages: usize,
+    /// All page buffers ever allocated (index = page id). A released
+    /// page keeps its buffer; its id moves to `free_ids` for reuse.
+    pool: Vec<Vec<f32>>,
+    /// Free-list of pool indices.
+    free_ids: Vec<usize>,
+    slots: Vec<Option<Slot>>,
+}
+
+impl KvCache {
+    /// Build a cache for `slots` concurrent sequences of up to `max_seq`
+    /// positions over an `n_layers × d` model, within `budget_bytes`.
+    /// Typed [`ServeError::CacheBudgetExhausted`] if even ONE `max_seq`
+    /// sequence cannot fit — such a config could never serve anything.
+    pub fn new(
+        n_layers: usize,
+        d: usize,
+        max_seq: usize,
+        slots: usize,
+        budget_bytes: usize,
+    ) -> Result<KvCache> {
+        anyhow::ensure!(n_layers >= 1, "KvCache: n_layers must be >= 1");
+        anyhow::ensure!(d >= 1, "KvCache: d must be >= 1");
+        anyhow::ensure!(max_seq >= 1, "KvCache: max_seq must be >= 1");
+        anyhow::ensure!(slots >= 1, "KvCache: slots must be >= 1");
+        let page_bytes = KV_PAGE * d * 4;
+        let total_pages = budget_bytes / page_bytes;
+        let cache = KvCache {
+            n_layers,
+            d,
+            max_seq,
+            total_pages,
+            reserved_pages: 0,
+            pool: Vec::new(),
+            free_ids: Vec::new(),
+            slots: (0..slots).map(|_| None).collect(),
+        };
+        let one_seq = cache.pages_for(max_seq);
+        if one_seq > total_pages {
+            return Err(ServeError::CacheBudgetExhausted {
+                needed_bytes: one_seq * page_bytes,
+                budget_bytes,
+            }
+            .into());
+        }
+        Ok(cache)
+    }
+
+    /// Worst-case page reservation for a sequence of `positions`:
+    /// K + V lists across every layer.
+    pub fn pages_for(&self, positions: usize) -> usize {
+        2 * self.n_layers * positions.div_ceil(KV_PAGE)
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.n_layers
+    }
+
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    pub fn max_seq(&self) -> usize {
+        self.max_seq
+    }
+
+    /// Total slot count (the concurrency budget).
+    pub fn slots(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Currently unclaimed slots.
+    pub fn free_slots(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_none()).count()
+    }
+
+    /// Bytes held by live page buffers (allocated pages, claimed or
+    /// pooled for reuse) — the KV line of the residency breakdown.
+    pub fn resident_bytes(&self) -> usize {
+        self.pool.iter().map(|p| p.len() * 4).sum()
+    }
+
+    /// Bytes the current reservations pin (worst case of every claimed
+    /// sequence) — what admission control compares against the budget.
+    pub fn reserved_bytes(&self) -> usize {
+        self.reserved_pages * KV_PAGE * self.d * 4
+    }
+
+    /// Configured byte budget.
+    pub fn budget_bytes(&self) -> usize {
+        self.total_pages * KV_PAGE * self.d * 4
+    }
+
+    /// Try to claim a slot for a sequence of up to `positions` tokens.
+    ///
+    /// * `Ok(Some(slot))` — claimed, pages reserved.
+    /// * `Ok(None)` — nothing wrong with the request, but no free slot
+    ///   (or no budget headroom) RIGHT NOW; retry after a retirement.
+    /// * `Err(SeqTooLong)` — `positions > max_seq`, can never be served.
+    /// * `Err(CacheBudgetExhausted)` — the reservation alone exceeds the
+    ///   whole budget, can never be served.
+    pub fn try_claim(&mut self, positions: usize) -> Result<Option<SlotId>> {
+        if positions > self.max_seq {
+            // max_new is unknown at this level; the scheduler re-wraps
+            // with the request split. Report the total as prompt.
+            return Err(ServeError::SeqTooLong {
+                prompt: positions,
+                max_new: 0,
+                max_seq: self.max_seq,
+            }
+            .into());
+        }
+        let need = self.pages_for(positions.max(1));
+        if need > self.total_pages {
+            return Err(ServeError::CacheBudgetExhausted {
+                needed_bytes: need * KV_PAGE * self.d * 4,
+                budget_bytes: self.budget_bytes(),
+            }
+            .into());
+        }
+        if self.reserved_pages + need > self.total_pages {
+            return Ok(None);
+        }
+        let Some(idx) = self.slots.iter().position(|s| s.is_none()) else {
+            return Ok(None);
+        };
+        self.reserved_pages += need;
+        self.slots[idx] = Some(Slot {
+            len: 0,
+            reserved_positions: positions.max(1),
+            k: vec![PageList::default(); self.n_layers],
+            v: vec![PageList::default(); self.n_layers],
+        });
+        Ok(Some(SlotId(idx)))
+    }
+
+    /// Release a slot: its pages go back to the pool and its reservation
+    /// returns to the budget. Idempotent on unclaimed slots.
+    pub fn release(&mut self, slot: SlotId) {
+        if let Some(s) = self.slots.get_mut(slot.0).and_then(|s| s.take()) {
+            self.reserved_pages -= self.pages_for(s.reserved_positions);
+            for list in s.k.into_iter().chain(s.v) {
+                self.free_ids.extend(list.pages);
+            }
+        }
+    }
+
+    /// Committed positions of a claimed slot (advanced by
+    /// [`KvCache::advance`], i.e. whole tokens, not per-layer rows).
+    pub fn len(&self, slot: SlotId) -> usize {
+        self.slot_ref(slot).len
+    }
+
+    /// True when the slot holds no committed positions yet.
+    pub fn is_empty(&self, slot: SlotId) -> bool {
+        self.len(slot) == 0
+    }
+
+    /// Is this slot currently claimed?
+    pub fn is_claimed(&self, slot: SlotId) -> bool {
+        self.slots.get(slot.0).map(|s| s.is_some()).unwrap_or(false)
+    }
+
+    /// Rows written to `layer` so far (committed positions plus any rows
+    /// appended for the token in flight) — the attention bound during a
+    /// prefill/decode layer pass.
+    pub fn layer_len(&self, slot: SlotId, layer: usize) -> usize {
+        self.slot_ref(slot).k[layer].rows
+    }
+
+    fn slot_ref(&self, slot: SlotId) -> &Slot {
+        self.slots[slot.0].as_ref().expect("KvCache: slot not claimed")
+    }
+
+    /// Append one position's K and V row to `layer`. Panics (debug
+    /// contract — the serving layer validates requests) if the slot is
+    /// unclaimed or the reservation is exceeded; reservation-based
+    /// admission makes the latter unreachable from the scheduler.
+    pub fn append(&mut self, slot: SlotId, layer: usize, k_row: &[f32], v_row: &[f32]) {
+        assert_eq!(k_row.len(), self.d, "KvCache: k row width");
+        assert_eq!(v_row.len(), self.d, "KvCache: v row width");
+        let KvCache { d, pool, free_ids, slots, .. } = self;
+        let s = slots[slot.0].as_mut().expect("KvCache: slot not claimed");
+        for (list, row) in [(&mut s.k[layer], k_row), (&mut s.v[layer], v_row)] {
+            assert!(list.rows < s.reserved_positions, "KvCache: append past reservation");
+            let page_idx = list.rows / KV_PAGE;
+            let within = list.rows % KV_PAGE;
+            if page_idx == list.pages.len() {
+                // Next page: reuse a freed buffer or grow the pool (the
+                // reservation guarantees the budget allows it).
+                let id = free_ids.pop().unwrap_or_else(|| {
+                    pool.push(vec![0.0f32; KV_PAGE * *d]);
+                    pool.len() - 1
+                });
+                list.pages.push(id);
+            }
+            let page = &mut pool[list.pages[page_idx]];
+            page[within * *d..(within + 1) * *d].copy_from_slice(row);
+            list.rows += 1;
+        }
+    }
+
+    /// Key row at `pos` of `layer` (must be < [`KvCache::layer_len`]).
+    #[inline]
+    pub fn k_row(&self, slot: SlotId, layer: usize, pos: usize) -> &[f32] {
+        self.row(slot, layer, pos, true)
+    }
+
+    /// Value row at `pos` of `layer`.
+    #[inline]
+    pub fn v_row(&self, slot: SlotId, layer: usize, pos: usize) -> &[f32] {
+        self.row(slot, layer, pos, false)
+    }
+
+    #[inline]
+    fn row(&self, slot: SlotId, layer: usize, pos: usize, key: bool) -> &[f32] {
+        let s = self.slot_ref(slot);
+        let list = if key { &s.k[layer] } else { &s.v[layer] };
+        debug_assert!(pos < list.rows, "KvCache: row {pos} past {} written", list.rows);
+        let page = &self.pool[list.pages[pos / KV_PAGE]];
+        let within = pos % KV_PAGE;
+        &page[within * self.d..(within + 1) * self.d]
+    }
+
+    /// Commit `n` positions: every layer must have appended exactly `n`
+    /// rows beyond the previous commit (the model's layer loop does).
+    pub fn advance(&mut self, slot: SlotId, n: usize) {
+        let s = self.slots[slot.0].as_mut().expect("KvCache: slot not claimed");
+        for l in 0..self.n_layers {
+            debug_assert_eq!(s.k[l].rows, s.len + n, "KvCache: layer {l} K rows out of step");
+            debug_assert_eq!(s.v[l].rows, s.len + n, "KvCache: layer {l} V rows out of step");
+        }
+        s.len += n;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn claim_append_read_roundtrip() {
+        let mut c = KvCache::new(2, 4, 32, 2, 1 << 20).unwrap();
+        let slot = c.try_claim(5).unwrap().unwrap();
+        assert_eq!(c.free_slots(), 1);
+        assert!(c.is_empty(slot));
+        for pos in 0..3 {
+            for l in 0..2 {
+                let k: Vec<f32> = (0..4).map(|j| (pos * 10 + l * 100 + j) as f32).collect();
+                let v: Vec<f32> = k.iter().map(|x| -x).collect();
+                c.append(slot, l, &k, &v);
+            }
+            c.advance(slot, 1);
+        }
+        assert_eq!(c.len(slot), 3);
+        assert_eq!(c.layer_len(slot, 1), 3);
+        assert_eq!(c.k_row(slot, 1, 2), &[120.0, 121.0, 122.0, 123.0]);
+        assert_eq!(c.v_row(slot, 0, 0), &[-0.0, -1.0, -2.0, -3.0]);
+        c.release(slot);
+        assert_eq!(c.free_slots(), 2);
+        assert_eq!(c.reserved_bytes(), 0);
+    }
+
+    #[test]
+    fn pages_are_reused_across_sequences() {
+        let mut c = KvCache::new(1, 4, 64, 1, 1 << 20).unwrap();
+        let s1 = c.try_claim(40).unwrap().unwrap();
+        for _ in 0..40 {
+            c.append(s1, 0, &[1.0; 4], &[2.0; 4]);
+            c.advance(s1, 1);
+        }
+        let high_water = c.resident_bytes();
+        assert!(high_water > 0);
+        c.release(s1);
+        // A second, equally long sequence reuses the freed pages: the
+        // pool does not grow.
+        let s2 = c.try_claim(40).unwrap().unwrap();
+        for _ in 0..40 {
+            c.append(s2, 0, &[3.0; 4], &[4.0; 4]);
+            c.advance(s2, 1);
+        }
+        assert_eq!(c.resident_bytes(), high_water);
+        assert_eq!(c.k_row(s2, 0, 39), &[3.0; 4]);
+    }
+
+    #[test]
+    fn budget_and_slot_exhaustion_are_wait_states() {
+        // Budget fits exactly two 16-position sequences of this shape.
+        let page_bytes = KV_PAGE * 4 * 4;
+        let mut c = KvCache::new(1, 4, 16, 8, 4 * page_bytes).unwrap();
+        let a = c.try_claim(16).unwrap().unwrap();
+        let _b = c.try_claim(16).unwrap().unwrap();
+        // Third must WAIT (budget), not error.
+        assert!(c.try_claim(16).unwrap().is_none());
+        c.release(a);
+        assert!(c.try_claim(16).unwrap().is_some());
+        // No free slot is likewise a wait state.
+        let mut tiny = KvCache::new(1, 4, 16, 1, 1 << 20).unwrap();
+        let _s = tiny.try_claim(4).unwrap().unwrap();
+        assert!(tiny.try_claim(4).unwrap().is_none());
+    }
+
+    #[test]
+    fn impossible_requests_are_typed_errors() {
+        let mut c = KvCache::new(2, 8, 16, 2, 1 << 20).unwrap();
+        let err = c.try_claim(17).unwrap_err();
+        assert!(matches!(
+            err.downcast_ref::<ServeError>(),
+            Some(ServeError::SeqTooLong { max_seq: 16, .. })
+        ));
+        // A budget below one sequence's reservation can never serve.
+        let err = KvCache::new(2, 8, 64, 2, 128).unwrap_err();
+        assert!(matches!(
+            err.downcast_ref::<ServeError>(),
+            Some(ServeError::CacheBudgetExhausted { .. })
+        ));
+    }
+
+    #[test]
+    fn reservation_is_worst_case_pages() {
+        let c = KvCache::new(3, 4, 64, 2, 1 << 20).unwrap();
+        // 17 positions -> 2 pages per list, 2 lists (K, V) x 3 layers.
+        assert_eq!(c.pages_for(17), 2 * 3 * 2);
+        assert_eq!(c.pages_for(16), 2 * 3);
+        assert_eq!(c.pages_for(1), 2 * 3);
+    }
+}

@@ -24,7 +24,9 @@
 use super::config::ServeStrategy;
 use super::router::Group;
 use crate::adapter::AdapterEngine;
-use crate::linalg::{dequant_matmul_into, matmul, matmul_into, vecmat, Mat};
+use crate::linalg::{
+    dequant_matmul_into, dequant_vecmat_into, matmul, matmul_into, vecmat, vecmat_into, Mat,
+};
 use crate::quant::{dequantize, quantize, Nf4Tensor};
 use crate::util::par::par_map;
 use anyhow::Result;
@@ -309,6 +311,50 @@ impl LinearServer {
     fn group_delta(&self, g: &Group) -> Option<&(Mat, Mat)> {
         g.adapter.as_deref().and_then(|n| self.prepared[n].delta.as_ref())
     }
+
+    /// Single-row decode fast path: `y = x·W_eff` for ONE request under
+    /// `adapter`, overwriting `y` — no batch packing, no group bucketing,
+    /// no parallel dispatch, just the sequential `vecmat` sweep (or the
+    /// panel-streamed [`crate::linalg::dequant_vecmat_into`] for the
+    /// NF4-resident base).
+    ///
+    /// Bit-identity contract: for every strategy this produces EXACTLY
+    /// the row a batched [`LinearServer::forward_into`] would — the base
+    /// sweep is one multiply-add per element in ascending k, and the
+    /// low-rank correction is materialized into its own rank-R staging
+    /// buffer before being added (the same two-step accumulation as the
+    /// batched group path), so a decode step taken alone matches the same
+    /// position recomputed inside a multi-row prefill bit for bit.
+    pub fn forward_row_into(&self, x: &[f32], adapter: Option<&str>, y: &mut [f32]) {
+        assert_eq!(x.len(), self.n_in, "{}[{}]: input width", self.module, self.layer);
+        assert_eq!(y.len(), self.n_out, "{}[{}]: output width", self.module, self.layer);
+        let delta = adapter.and_then(|n| self.prepared[n].delta.as_ref());
+        match &self.exec {
+            Exec::Fused(base) => {
+                match base {
+                    BaseStore::Dense(w) => vecmat_into(x, w, y),
+                    BaseStore::Quant(q) => dequant_vecmat_into(x, &q.nf4, y),
+                }
+                if let Some((da, db)) = delta {
+                    let t = vecmat(x, da); // 1 × R
+                    let c = vecmat(&t, db); // 1 × n, staged like the group path
+                    for (yv, cv) in y.iter_mut().zip(&c) {
+                        *yv += cv;
+                    }
+                }
+            }
+            Exec::GroupMerged(w) | Exec::RequestMerged(w) => {
+                let out = match delta {
+                    Some((da, db)) => {
+                        let merged = w.add(&matmul(da, db));
+                        vecmat(x, &merged)
+                    }
+                    None => vecmat(x, w),
+                };
+                y.copy_from_slice(&out);
+            }
+        }
+    }
 }
 
 /// Gather a row subset of a packed batch.
@@ -424,6 +470,24 @@ mod tests {
         let (x, reqs) = batch(4, &mut rng);
         let groups = bucket(&reqs);
         assert_eq!(srv.forward(&x, &groups).data, local.forward(&x, &groups).data);
+    }
+
+    #[test]
+    fn forward_row_into_is_bit_identical_to_batched_rows() {
+        // The decode fast path must reproduce each row of a batched
+        // forward EXACTLY — every strategy, adapted and base rows alike.
+        let (eng, mut rng) = engine(25);
+        let (x, reqs) = batch(6, &mut rng);
+        let groups = bucket(&reqs);
+        for strategy in ServeStrategy::all() {
+            let srv = LinearServer::snapshot(&eng, "q", 0, strategy, None).unwrap();
+            let want = srv.forward(&x, &groups);
+            let mut y = vec![-9.5f32; srv.n_out()]; // stale buffer
+            for (i, r) in reqs.iter().enumerate() {
+                srv.forward_row_into(x.row(i), r.adapter.as_deref(), &mut y);
+                assert_eq!(y.as_slice(), want.row(i), "{} row {i}", strategy.name());
+            }
+        }
     }
 
     #[test]

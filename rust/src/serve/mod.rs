@@ -21,11 +21,23 @@
 //!   blocks over all seven linears (norms + nonlinearity) → head, every
 //!   projection a full mixed-adapter `LinearServer` execution, with
 //!   activation buffers ping-ponged across layers and residency/stats
-//!   aggregated over all `L × 7` base stores,
-//! * [`Request`] / [`ModelRequest`] / [`Scheduler`] / [`bucket`] —
-//!   requests carry an adapter name; the generic scheduler batches
-//!   either request shape and the router buckets a batch by adapter in
-//!   deterministic order,
+//!   aggregated over all `L × 7` base stores. Three entry points: the
+//!   one-shot `forward` (single-position gate, the PR-4 surface), and
+//!   the autoregressive pair `prefill` / `decode_step` — real causal
+//!   attention over per-layer K/V rows in a [`KvCache`], with
+//!   incremental decode BIT-IDENTICAL to recomputing the whole sequence,
+//! * [`KvCache`] — the slot-paged K/V store: fixed sequence slots over a
+//!   shared pool of fixed-size pages, reservation-based admission
+//!   against a byte budget (typed errors for impossible requests, wait
+//!   states for full-but-draining capacity),
+//! * [`Request`] / [`ModelRequest`] / [`DecodeRequest`] /
+//!   [`SeqRequest`] / [`bucket`] — requests carry an adapter name; the
+//!   router buckets a batch by adapter in deterministic order,
+//! * [`Scheduler`] / [`DecodeScheduler`] — the generic FIFO batcher for
+//!   the one-shot paths, and the continuous-batching decode scheduler:
+//!   per-step admission in strict arrival order, one decoded token per
+//!   running sequence per step, retirement the moment a stop condition
+//!   hits (freed slots are re-admitted the very next step),
 //! * [`ServeConfig`] + [`ServeScope`] + [`ServeStrategy`] — WHAT is
 //!   served (one linear, or the full model) and HOW: `fused` (shared
 //!   base GEMM + per-group low-rank corrections, `ΔW` never
@@ -51,16 +63,21 @@
 //! `rust/tests/serve_equiv.rs`.
 
 pub mod config;
+pub mod kvcache;
 pub mod linear;
 pub mod model;
 pub mod router;
 pub mod server;
 pub mod stats;
 
-pub use config::{ServeConfig, ServeError, ServeScope, ServeStrategy};
+pub use config::{ServeConfig, ServeError, ServeScope, ServeStrategy, DEFAULT_KV_BUDGET_BYTES};
+pub use kvcache::{KvCache, SlotId, KV_PAGE};
 pub use linear::{LinearServer, QuantBase};
 pub use model::{ModelServer, RMS_EPS};
-pub use router::{bucket, Group, ModelRequest, Request, Routable, Scheduler};
+pub use router::{
+    argmax, bucket, DecodeRequest, DecodeScheduler, FinishReason, FinishedSeq, Group,
+    ModelRequest, Request, Routable, Scheduler, SeqId, SeqRequest,
+};
 pub use server::Server;
 pub use stats::{ResidentBreakdown, ServeStats, ServeSummary, BASE_KEY};
 

@@ -44,12 +44,14 @@
 //! and [`ModelServer::resident_breakdown`] reports the per-module table.
 
 use super::config::{ServeConfig, ServeError, ServeScope};
+use super::kvcache::{KvCache, SlotId};
 use super::linear::LinearServer;
-use super::router::{bucket, ModelRequest};
+use super::router::{bucket, DecodeRequest, Group, ModelRequest};
 use super::stats::{ResidentBreakdown, ServeStats};
 use crate::adapter::AdapterEngine;
-use crate::linalg::{matmul, Mat};
+use crate::linalg::{matmul, vecmat, Mat};
 use crate::model::LINEARS;
+use crate::util::par::par_rows_mut;
 use crate::util::timer::Timer;
 use anyhow::Result;
 
@@ -210,6 +212,12 @@ impl ModelServer {
         self.linears.iter().map(|l| l.n_in() * l.n_out() * 4).sum()
     }
 
+    /// Per-module residency table plus the decode path's live KV-cache
+    /// bytes — what a decode server actually pins.
+    pub fn resident_breakdown_with_cache(&self, cache: &KvCache) -> ResidentBreakdown {
+        self.resident_breakdown().with_kv_bytes(cache.resident_bytes())
+    }
+
     /// Per-module residency table (bytes summed over layers).
     pub fn resident_breakdown(&self) -> ResidentBreakdown {
         let per_module = LINEARS
@@ -312,6 +320,346 @@ impl ModelServer {
         self.stats.record_batch(&adapters, groups.len(), self.cfg.max_batch, timer.secs());
         Ok(logits)
     }
+
+    /// Build a [`KvCache`] sized for this server from the config's decode
+    /// knobs (`max_seq` × `decode_slots` within `kv_budget_bytes`).
+    pub fn new_cache(&self) -> Result<KvCache> {
+        KvCache::new(
+            self.n_layers,
+            self.d_model,
+            self.cfg.max_seq,
+            self.cfg.decode_slots,
+            self.cfg.kv_budget_bytes,
+        )
+    }
+
+    /// Record one sequence's time-to-first-token (measured by the
+    /// scheduler from submission to its prefill completing).
+    pub fn record_ttft(&mut self, secs: f64) {
+        self.stats.record_ttft(secs);
+    }
+
+    /// Prefill: run `tokens` (one sequence, one adapter) through the full
+    /// pipeline with REAL causal attention, writing every layer's K/V
+    /// rows into `slot` of `cache`, and return the last position's logits
+    /// (the distribution over the first generated token).
+    ///
+    /// Unlike [`ModelServer::forward`]'s degenerate single-position gate,
+    /// position `i` here attends over positions `0..=i` with a true
+    /// softmax (single-head over the full `d_model`, fixed-order f32
+    /// accumulation — no RoPE; positional structure enters through
+    /// causality alone, matching the decode path exactly). Appending to a
+    /// non-empty slot continues the sequence from its committed length,
+    /// so a prefill may itself be split into chunks without changing any
+    /// bit of the result.
+    ///
+    /// All `T` positions run as one single-group batch through each of
+    /// the `L × 7` linears (the activation buffers are allocated once and
+    /// ping-ponged across layers, exactly like `forward`).
+    pub fn prefill(
+        &mut self,
+        cache: &mut KvCache,
+        slot: SlotId,
+        adapter: Option<&str>,
+        tokens: &[usize],
+    ) -> Result<Vec<f32>> {
+        self.check_cache(cache)?;
+        anyhow::ensure!(!tokens.is_empty(), "prefill: empty token sequence");
+        if !cache.is_claimed(slot) {
+            return Err(ServeError::BadSlot { slot: slot.index(), detail: "not claimed" }.into());
+        }
+        let start = cache.len(slot);
+        if start + tokens.len() > cache.max_seq() {
+            return Err(ServeError::SeqTooLong {
+                prompt: start + tokens.len(),
+                max_new: 0,
+                max_seq: cache.max_seq(),
+            }
+            .into());
+        }
+        for (i, &t) in tokens.iter().enumerate() {
+            if t >= self.vocab() {
+                return Err(ServeError::TokenOutOfRange {
+                    index: i,
+                    token: t,
+                    vocab: self.vocab(),
+                }
+                .into());
+            }
+        }
+        if let Some(name) = adapter {
+            if !self.linears[0].serves(name) {
+                return Err(ServeError::UnknownAdapter {
+                    name: name.to_string(),
+                    have: self.adapter_names().iter().map(|s| s.to_string()).collect(),
+                }
+                .into());
+            }
+        }
+        let timer = Timer::start();
+        let (t, d, f) = (tokens.len(), self.d_model, self.d_ff);
+        let groups =
+            vec![Group { adapter: adapter.map(|s| s.to_string()), rows: (0..t).collect() }];
+
+        let mut x = Mat::zeros(t, d);
+        let mut h = Mat::zeros(t, d);
+        let mut qb = Mat::zeros(t, d);
+        let mut kb = Mat::zeros(t, d);
+        let mut vb = Mat::zeros(t, d);
+        let mut ao = Mat::zeros(t, d); // attention mix output
+        let mut gate = Mat::zeros(t, f);
+        let mut up = Mat::zeros(t, f);
+
+        for (i, &tok) in tokens.iter().enumerate() {
+            x.row_mut(i).copy_from_slice(self.embed.row(tok));
+        }
+        let scale = 1.0 / (d as f32).sqrt();
+        for l in 0..self.n_layers {
+            rms_norm_into(&x, &self.attn_norm[l], &mut h);
+            self.linear(l, Q).forward_into(&h, &groups, &mut qb);
+            self.linear(l, K).forward_into(&h, &groups, &mut kb);
+            self.linear(l, V).forward_into(&h, &groups, &mut vb);
+            // Write this chunk's K/V rows, then attend reading from the
+            // cache — the same loads the decode path performs, so the
+            // arithmetic is shared, not merely equivalent.
+            for i in 0..t {
+                cache.append(slot, l, kb.row(i), vb.row(i));
+            }
+            {
+                let cache = &*cache;
+                par_rows_mut(&mut ao.data, t, d, 1, |lo, hi, chunk| {
+                    let mut scores = Vec::new();
+                    for i in lo..hi {
+                        let out = &mut chunk[(i - lo) * d..(i - lo + 1) * d];
+                        attn_into(cache, slot, l, qb.row(i), start + i + 1, scale, &mut scores, out);
+                    }
+                });
+            }
+            self.linear(l, O).forward_into(&ao, &groups, &mut h);
+            x.add_assign(&h);
+
+            rms_norm_into(&x, &self.mlp_norm[l], &mut h);
+            self.linear(l, GATE).forward_into(&h, &groups, &mut gate);
+            self.linear(l, UP).forward_into(&h, &groups, &mut up);
+            for (gv, uv) in gate.data.iter_mut().zip(&up.data) {
+                *gv = silu(*gv) * uv;
+            }
+            self.linear(l, DOWN).forward_into(&gate, &groups, &mut h);
+            x.add_assign(&h);
+        }
+        cache.advance(slot, t);
+        // Only the last position's logits matter for generation: one
+        // final-norm row + one vecmat instead of a T × vocab head GEMM.
+        let mut hf = vec![0.0f32; d];
+        rms_norm_row_into(x.row(t - 1), &self.final_norm, &mut hf);
+        let logits = vecmat(&hf, &self.head);
+        self.stats.record_prefill(adapter, t, timer.secs());
+        Ok(logits)
+    }
+
+    /// One decode step: each request contributes ONE new token whose
+    /// position attends over its slot's cached K/V history (plus itself),
+    /// and row `i` of the returned logits is request `i`'s next-token
+    /// distribution. Mixed adapters batch together — the step is bucketed
+    /// by adapter exactly like `forward`, sharing the base GEMMs across
+    /// the whole step — and a single-request step takes the
+    /// [`LinearServer::forward_row_into`] fast path (sequential `vecmat`
+    /// sweeps, no batch-GEMM setup), which is bit-identical to the
+    /// batched path by construction.
+    ///
+    /// Incremental contract (locked in by `rust/tests/serve_equiv.rs`):
+    /// prefill(p) followed by decode steps for tokens `p..n` yields, at
+    /// every step, EXACTLY the logits a fresh full prefill of the same
+    /// `n` tokens would — bit for bit, for every serving strategy.
+    pub fn decode_step(&mut self, cache: &mut KvCache, requests: &[DecodeRequest]) -> Result<Mat> {
+        self.check_cache(cache)?;
+        if requests.is_empty() {
+            return Ok(Mat::zeros(0, self.n_out()));
+        }
+        for (i, r) in requests.iter().enumerate() {
+            if !cache.is_claimed(r.slot) {
+                return Err(
+                    ServeError::BadSlot { slot: r.slot.index(), detail: "not claimed" }.into()
+                );
+            }
+            if requests[..i].iter().any(|p| p.slot == r.slot) {
+                return Err(ServeError::BadSlot {
+                    slot: r.slot.index(),
+                    detail: "appears twice in one decode step",
+                }
+                .into());
+            }
+            if cache.len(r.slot) + 1 > cache.max_seq() {
+                return Err(ServeError::SeqTooLong {
+                    prompt: cache.len(r.slot) + 1,
+                    max_new: 0,
+                    max_seq: cache.max_seq(),
+                }
+                .into());
+            }
+            if r.token >= self.vocab() {
+                return Err(ServeError::TokenOutOfRange {
+                    index: i,
+                    token: r.token,
+                    vocab: self.vocab(),
+                }
+                .into());
+            }
+            if let Some(name) = &r.adapter {
+                if !self.linears[0].serves(name) {
+                    return Err(ServeError::UnknownAdapter {
+                        name: name.clone(),
+                        have: self.adapter_names().iter().map(|s| s.to_string()).collect(),
+                    }
+                    .into());
+                }
+            }
+        }
+        let timer = Timer::start();
+        let (b, d, f) = (requests.len(), self.d_model, self.d_ff);
+        let groups = bucket(requests);
+
+        let mut x = Mat::zeros(b, d);
+        let mut h = Mat::zeros(b, d);
+        let mut qb = Mat::zeros(b, d);
+        let mut kb = Mat::zeros(b, d);
+        let mut vb = Mat::zeros(b, d);
+        let mut ao = Mat::zeros(b, d);
+        let mut gate = Mat::zeros(b, f);
+        let mut up = Mat::zeros(b, f);
+
+        for (i, r) in requests.iter().enumerate() {
+            x.row_mut(i).copy_from_slice(self.embed.row(r.token));
+        }
+        let scale = 1.0 / (d as f32).sqrt();
+        for l in 0..self.n_layers {
+            rms_norm_into(&x, &self.attn_norm[l], &mut h);
+            self.step_linear(l, Q, &h, &groups, requests, &mut qb);
+            self.step_linear(l, K, &h, &groups, requests, &mut kb);
+            self.step_linear(l, V, &h, &groups, requests, &mut vb);
+            for (i, r) in requests.iter().enumerate() {
+                cache.append(r.slot, l, kb.row(i), vb.row(i));
+            }
+            {
+                let cache = &*cache;
+                par_rows_mut(&mut ao.data, b, d, 1, |lo, hi, chunk| {
+                    let mut scores = Vec::new();
+                    for i in lo..hi {
+                        let r = &requests[i];
+                        let n_ctx = cache.layer_len(r.slot, l);
+                        let out = &mut chunk[(i - lo) * d..(i - lo + 1) * d];
+                        attn_into(cache, r.slot, l, qb.row(i), n_ctx, scale, &mut scores, out);
+                    }
+                });
+            }
+            self.step_linear(l, O, &ao, &groups, requests, &mut h);
+            x.add_assign(&h);
+
+            rms_norm_into(&x, &self.mlp_norm[l], &mut h);
+            self.step_linear(l, GATE, &h, &groups, requests, &mut gate);
+            self.step_linear(l, UP, &h, &groups, requests, &mut up);
+            for (gv, uv) in gate.data.iter_mut().zip(&up.data) {
+                *gv = silu(*gv) * uv;
+            }
+            self.step_linear(l, DOWN, &gate, &groups, requests, &mut h);
+            x.add_assign(&h);
+        }
+        for r in requests {
+            cache.advance(r.slot, 1);
+        }
+        rms_norm_into(&x, &self.final_norm, &mut h);
+        let logits = matmul(&h, &self.head);
+        self.stats.record_decode_step(b, groups.len(), self.cfg.decode_slots, timer.secs());
+        Ok(logits)
+    }
+
+    /// Dispatch one linear of a decode step: a single-request step takes
+    /// the row fast path, larger steps the bucketed batch path. Both are
+    /// bit-identical per row.
+    fn step_linear(
+        &self,
+        layer: usize,
+        module: usize,
+        x: &Mat,
+        groups: &[Group],
+        requests: &[DecodeRequest],
+        y: &mut Mat,
+    ) {
+        if requests.len() == 1 {
+            self.linear(layer, module).forward_row_into(
+                x.row(0),
+                requests[0].adapter.as_deref(),
+                y.row_mut(0),
+            );
+        } else {
+            self.linear(layer, module).forward_into(x, groups, y);
+        }
+    }
+
+    /// A cache built for a different model shape is a hard config error.
+    fn check_cache(&self, cache: &KvCache) -> Result<()> {
+        anyhow::ensure!(
+            cache.n_layers() == self.n_layers && cache.d() == self.d_model,
+            "KvCache shape ({} layers x d={}) does not match the served model \
+             ({} layers x d={})",
+            cache.n_layers(),
+            cache.d(),
+            self.n_layers,
+            self.d_model
+        );
+        Ok(())
+    }
+}
+
+/// Causal single-head attention for ONE query row over `n_ctx` cached
+/// positions of `(slot, layer)`: softmax(q·K^T / √d)·V with a fixed
+/// evaluation order — scores in ascending position order (each dot in
+/// ascending feature order), one max pass, one exp/sum pass, then V
+/// accumulated position-by-position and normalized at the end. Every
+/// element's arithmetic is independent of batch shape and thread count,
+/// which is what makes incremental decode ≡ full prefill bit-for-bit.
+#[allow(clippy::too_many_arguments)]
+fn attn_into(
+    cache: &KvCache,
+    slot: SlotId,
+    layer: usize,
+    q: &[f32],
+    n_ctx: usize,
+    scale: f32,
+    scores: &mut Vec<f32>,
+    out: &mut [f32],
+) {
+    debug_assert!(n_ctx >= 1);
+    scores.clear();
+    let mut max = f32::NEG_INFINITY;
+    for j in 0..n_ctx {
+        let k = cache.k_row(slot, layer, j);
+        let mut dot = 0.0f32;
+        for (qv, kv) in q.iter().zip(k) {
+            dot += qv * kv;
+        }
+        let s = dot * scale;
+        if s > max {
+            max = s;
+        }
+        scores.push(s);
+    }
+    let mut sum = 0.0f32;
+    for s in scores.iter_mut() {
+        *s = (*s - max).exp();
+        sum += *s;
+    }
+    out.iter_mut().for_each(|v| *v = 0.0);
+    for (j, &w) in scores.iter().enumerate() {
+        let v = cache.v_row(slot, layer, j);
+        for (ov, vv) in out.iter_mut().zip(v) {
+            *ov += w * vv;
+        }
+    }
+    let inv = 1.0 / sum;
+    for ov in out.iter_mut() {
+        *ov *= inv;
+    }
 }
 
 #[inline]
@@ -331,15 +679,21 @@ pub fn rms_norm_into(x: &Mat, gain: &[f32], out: &mut Mat) {
     assert_eq!(x.cols, gain.len(), "rms_norm: gain length");
     assert_eq!((out.rows, out.cols), (x.rows, x.cols), "rms_norm: output shape");
     for i in 0..x.rows {
-        let row = x.row(i);
-        let mut ms = 0.0f32;
-        for &v in row {
-            ms += v * v;
-        }
-        let inv = 1.0 / (ms / row.len() as f32 + RMS_EPS).sqrt();
-        for (o, (&v, &g)) in out.row_mut(i).iter_mut().zip(row.iter().zip(gain)) {
-            *o = v * inv * g;
-        }
+        rms_norm_row_into(x.row(i), gain, out.row_mut(i));
+    }
+}
+
+/// One row of [`rms_norm_into`] — the decode/prefill paths norm single
+/// rows through the SAME routine the batched forward uses, so the two
+/// cannot drift by a bit.
+pub fn rms_norm_row_into(row: &[f32], gain: &[f32], out: &mut [f32]) {
+    let mut ms = 0.0f32;
+    for &v in row {
+        ms += v * v;
+    }
+    let inv = 1.0 / (ms / row.len() as f32 + RMS_EPS).sqrt();
+    for (o, (&v, &g)) in out.iter_mut().zip(row.iter().zip(gain)) {
+        *o = v * inv * g;
     }
 }
 
@@ -501,6 +855,73 @@ mod tests {
             srv.base_resident_bytes(),
             srv.dense_base_bytes()
         );
+    }
+
+    #[test]
+    fn prefill_and_decode_step_validate_requests() {
+        let (eng, _) = engine(6);
+        let mut srv = ModelServer::new(&eng, ServeConfig::full_model().max_seq(8)).unwrap();
+        let mut cache = srv.new_cache().unwrap();
+        let slot = cache.try_claim(8).unwrap().unwrap();
+        // unclaimed slot
+        let ghost = crate::serve::kvcache::SlotId(5);
+        let err = srv.prefill(&mut cache, ghost, None, &[1, 2]).unwrap_err();
+        assert!(matches!(err.downcast_ref::<ServeError>(), Some(ServeError::BadSlot { .. })));
+        // token out of range
+        let err = srv.prefill(&mut cache, slot, None, &[1, 99]).unwrap_err();
+        assert!(matches!(
+            err.downcast_ref::<ServeError>(),
+            Some(ServeError::TokenOutOfRange { index: 1, token: 99, .. })
+        ));
+        // over max_seq
+        let err = srv.prefill(&mut cache, slot, None, &[0; 9]).unwrap_err();
+        assert!(matches!(
+            err.downcast_ref::<ServeError>(),
+            Some(ServeError::SeqTooLong { max_seq: 8, .. })
+        ));
+        // unknown adapter
+        let err = srv.prefill(&mut cache, slot, Some("ghost"), &[1]).unwrap_err();
+        assert!(matches!(
+            err.downcast_ref::<ServeError>(),
+            Some(ServeError::UnknownAdapter { .. })
+        ));
+        // a valid prefill, then a duplicate-slot decode step
+        srv.prefill(&mut cache, slot, Some("t"), &[1, 2]).unwrap();
+        let reqs = vec![
+            DecodeRequest { slot, token: 1, adapter: None },
+            DecodeRequest { slot, token: 2, adapter: None },
+        ];
+        let err = srv.decode_step(&mut cache, &reqs).unwrap_err();
+        assert!(matches!(
+            err.downcast_ref::<ServeError>(),
+            Some(ServeError::BadSlot { detail: "appears twice in one decode step", .. })
+        ));
+        // empty decode step is a no-op
+        let y = srv.decode_step(&mut cache, &[]).unwrap();
+        assert_eq!((y.rows, y.cols), (0, 48));
+    }
+
+    #[test]
+    fn chunked_prefill_is_bit_identical_to_one_shot() {
+        // Prefill continues from the slot's committed length, so feeding
+        // the prompt in two chunks must give the same final logits as one
+        // call — the simplest incremental≡recompute instance.
+        let (eng, _) = engine(7);
+        let mut srv = ModelServer::new(&eng, ServeConfig::full_model()).unwrap();
+        let mut cache = srv.new_cache().unwrap();
+        let tokens = [3usize, 11, 7, 29, 5];
+        let a = cache.try_claim(tokens.len()).unwrap().unwrap();
+        let one = srv.prefill(&mut cache, a, Some("t"), &tokens).unwrap();
+        cache.release(a);
+        let b = cache.try_claim(tokens.len()).unwrap().unwrap();
+        srv.prefill(&mut cache, b, Some("t"), &tokens[..2]).unwrap();
+        let two = srv.prefill(&mut cache, b, Some("t"), &tokens[2..]).unwrap();
+        cache.release(b);
+        assert_eq!(one, two, "chunked prefill drifted from one-shot");
+        let s = srv.stats();
+        assert_eq!(s.prefills, 3);
+        assert_eq!(s.prefill_tokens, 10);
+        assert_eq!(s.hits["t"], 3);
     }
 
     #[test]

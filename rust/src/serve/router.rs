@@ -1,18 +1,40 @@
-//! Request routing: adapter-keyed bucketing and the batching scheduler.
+//! Request routing: adapter-keyed bucketing and the batching schedulers.
 //!
-//! Two request shapes flow through the same router. A [`Request`] is one
-//! inference call against a served LINEAR — an input vector plus the
+//! Three request shapes flow through the same router. A [`Request`] is
+//! one inference call against a served LINEAR — an input vector plus the
 //! adapter it should run under (`None` = the frozen base). A
 //! [`ModelRequest`] is one call against the whole adapted model — a
-//! token id that enters at the embedding and leaves as head logits.
-//! Both implement [`Routable`], so [`bucket`] groups any batch by
-//! adapter in a deterministic (sorted, base-first) order — the server
-//! amortizes the shared base GEMM(s) across every group (dense, or the
-//! NF4-resident `QuantBase` streamed through the dequant-GEMM) and
-//! dispatches the per-adapter low-rank corrections in parallel — and the
-//! generic [`Scheduler`] accumulates either request stream into batches
-//! of at most `max_batch`.
+//! token id that enters at the embedding and leaves as head logits. A
+//! [`SeqRequest`] is one autoregressive GENERATION against the adapted
+//! model — prompt tokens plus a generation budget and stop condition —
+//! which the [`DecodeScheduler`] turns into a prefill and a stream of
+//! per-token [`DecodeRequest`]s. All the step-level shapes implement
+//! [`Routable`], so [`bucket`] groups any batch by adapter in a
+//! deterministic (sorted, base-first) order — the server amortizes the
+//! shared base GEMM(s) across every group and dispatches the per-adapter
+//! low-rank corrections in parallel.
+//!
+//! Two schedulers:
+//!
+//! * the generic FIFO [`Scheduler`] accumulates a request stream into
+//!   batches of at most `max_batch` (the one-shot serving path). Its
+//!   ordering contract is strict arrival order: a request submitted
+//!   while a batch is in flight drains AFTER everything already queued —
+//!   locked in by a regression test below.
+//! * the continuous-batching [`DecodeScheduler`] admits queued
+//!   [`SeqRequest`]s into KV-cache slots per step, decodes every running
+//!   sequence one token per step (adapter-bucketed within the step), and
+//!   retires sequences mid-flight the moment they hit their stop
+//!   condition — no drain barrier between "batches". Admission is
+//!   head-of-line: if the oldest pending request does not fit (slot or
+//!   cache budget), nothing behind it is admitted either, so a late
+//!   submission can never overtake an earlier one when capacity frees
+//!   up.
 
+use super::kvcache::{KvCache, SlotId};
+use super::model::ModelServer;
+use crate::util::timer::Timer;
+use anyhow::Result;
 use std::collections::BTreeMap;
 use std::collections::VecDeque;
 
@@ -71,6 +93,359 @@ impl Routable for Request {
 impl Routable for ModelRequest {
     fn adapter(&self) -> Option<&str> {
         self.adapter.as_deref()
+    }
+}
+
+/// One sequence's contribution to a decode step: the token sampled at
+/// the previous step (or by the prefill), the KV-cache slot holding its
+/// history, and the adapter it runs under.
+#[derive(Clone, Debug)]
+pub struct DecodeRequest {
+    pub slot: SlotId,
+    pub token: usize,
+    pub adapter: Option<String>,
+}
+
+impl Routable for DecodeRequest {
+    fn adapter(&self) -> Option<&str> {
+        self.adapter.as_deref()
+    }
+}
+
+/// One autoregressive generation request: prompt tokens, a cap on
+/// generated tokens, and an optional stop token (emitting it ends the
+/// sequence; it is included in the output).
+#[derive(Clone, Debug)]
+pub struct SeqRequest {
+    pub adapter: Option<String>,
+    pub prompt: Vec<usize>,
+    pub max_new: usize,
+    pub stop_token: Option<usize>,
+}
+
+impl SeqRequest {
+    /// A base-model generation (no adapter).
+    pub fn base(prompt: Vec<usize>, max_new: usize) -> SeqRequest {
+        SeqRequest { adapter: None, prompt, max_new, stop_token: None }
+    }
+
+    /// A generation under `adapter`.
+    pub fn new(adapter: &str, prompt: Vec<usize>, max_new: usize) -> SeqRequest {
+        SeqRequest { adapter: Some(adapter.to_string()), prompt, max_new, stop_token: None }
+    }
+
+    /// Stop as soon as `token` is emitted.
+    pub fn stop_at(mut self, token: usize) -> SeqRequest {
+        self.stop_token = Some(token);
+        self
+    }
+}
+
+/// Identity of a submitted [`SeqRequest`] (monotonic per scheduler).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct SeqId(u64);
+
+impl SeqId {
+    pub fn raw(&self) -> u64 {
+        self.0
+    }
+}
+
+/// Why a sequence retired.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FinishReason {
+    /// The stop token was emitted (it is the last token of the output).
+    StopToken,
+    /// The `max_new` generation budget was spent.
+    MaxNew,
+}
+
+/// A retired sequence: the full token trajectory plus bookkeeping.
+#[derive(Clone, Debug)]
+pub struct FinishedSeq {
+    pub id: SeqId,
+    pub adapter: Option<String>,
+    /// Prompt length (the first `prompt_len` entries of `tokens`).
+    pub prompt_len: usize,
+    /// Prompt followed by every generated token, in emission order.
+    pub tokens: Vec<usize>,
+    pub reason: FinishReason,
+}
+
+impl FinishedSeq {
+    /// The generated continuation (everything after the prompt).
+    pub fn generated(&self) -> &[usize] {
+        &self.tokens[self.prompt_len..]
+    }
+}
+
+/// Deterministic greedy sampling: the first index of the maximum logit
+/// (ascending scan, ties break low — identical for any thread count).
+pub fn argmax(logits: &[f32]) -> usize {
+    let mut best = 0usize;
+    let mut best_v = f32::NEG_INFINITY;
+    for (i, &v) in logits.iter().enumerate() {
+        if v > best_v {
+            best_v = v;
+            best = i;
+        }
+    }
+    best
+}
+
+struct PendingSeq {
+    id: SeqId,
+    req: SeqRequest,
+    submitted: Timer,
+}
+
+struct RunningSeq {
+    id: SeqId,
+    slot: SlotId,
+    adapter: Option<String>,
+    tokens: Vec<usize>,
+    prompt_len: usize,
+    max_new: usize,
+    stop_token: Option<usize>,
+    /// Last sampled token — the next decode step's input.
+    next: usize,
+    generated: usize,
+}
+
+impl RunningSeq {
+    fn finish_reason(&self) -> Option<FinishReason> {
+        if self.stop_token == Some(self.next) {
+            Some(FinishReason::StopToken)
+        } else if self.generated >= self.max_new {
+            Some(FinishReason::MaxNew)
+        } else {
+            None
+        }
+    }
+
+    fn into_finished(self, reason: FinishReason) -> FinishedSeq {
+        FinishedSeq {
+            id: self.id,
+            adapter: self.adapter,
+            prompt_len: self.prompt_len,
+            tokens: self.tokens,
+            reason,
+        }
+    }
+}
+
+/// Continuous-batching decode scheduler over a `ModelServer` + [`KvCache`].
+///
+/// Unlike the drain-everything [`Scheduler`], sequences are admitted and
+/// retired MID-FLIGHT: every [`DecodeScheduler::step`] first admits as
+/// many queued sequences as slots/budget allow (in strict arrival order
+/// — head-of-line blocking, never reordering), prefilling each and
+/// recording its time-to-first-token, then runs ONE decode step over
+/// every running sequence (adapter-bucketed inside the server), greedily
+/// samples, and retires whatever finished — freeing slots for the very
+/// next step's admissions. The slot budget is the cache's slot count
+/// ([`crate::serve::ServeConfig::slots`]).
+pub struct DecodeScheduler {
+    next_id: u64,
+    pending: VecDeque<PendingSeq>,
+    running: Vec<RunningSeq>,
+    /// Sequences that retired but have not been handed to the caller
+    /// yet. Retirements are pushed here the moment they happen, so an
+    /// error mid-step (or mid-`run`) never drops a finished result —
+    /// recover them with [`DecodeScheduler::drain_finished`].
+    done: Vec<FinishedSeq>,
+}
+
+impl Default for DecodeScheduler {
+    fn default() -> Self {
+        DecodeScheduler::new()
+    }
+}
+
+impl DecodeScheduler {
+    pub fn new() -> DecodeScheduler {
+        DecodeScheduler {
+            next_id: 0,
+            pending: VecDeque::new(),
+            running: Vec::new(),
+            done: Vec::new(),
+        }
+    }
+
+    /// Queue a sequence. Validation against a concrete server/cache
+    /// happens at admission (inside [`DecodeScheduler::step`]), where an
+    /// impossible request — over `max_seq`, or a KV reservation beyond
+    /// the whole cache budget — pops off the queue as a typed error.
+    pub fn submit(&mut self, req: SeqRequest) -> SeqId {
+        let id = SeqId(self.next_id);
+        self.next_id += 1;
+        self.pending.push_back(PendingSeq { id, req, submitted: Timer::start() });
+        id
+    }
+
+    /// Queued (not yet admitted) sequences.
+    pub fn pending(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Sequences currently holding a slot.
+    pub fn running(&self) -> usize {
+        self.running.len()
+    }
+
+    /// Nothing queued and nothing in flight.
+    pub fn idle(&self) -> bool {
+        self.pending.is_empty() && self.running.is_empty()
+    }
+
+    /// Retired sequences not yet returned by [`DecodeScheduler::step`] /
+    /// [`DecodeScheduler::run`] — non-empty only after one of them
+    /// errored mid-flight (completed work is buffered, never dropped).
+    pub fn drain_finished(&mut self) -> Vec<FinishedSeq> {
+        std::mem::take(&mut self.done)
+    }
+
+    /// One continuous-batching step: admit (strict FIFO) → decode one
+    /// token for every running sequence → retire. Returns the sequences
+    /// that finished during this step. An impossible head-of-queue
+    /// request (over `max_seq` / over the whole cache budget) is removed
+    /// from the queue and returned as the typed error; queued and running
+    /// work is untouched, the scheduler remains usable, and anything that
+    /// retired before the error is preserved for
+    /// [`DecodeScheduler::drain_finished`].
+    pub fn step(
+        &mut self,
+        server: &mut ModelServer,
+        cache: &mut KvCache,
+    ) -> Result<Vec<FinishedSeq>> {
+        // Admission: strict arrival order. If the head does not fit RIGHT
+        // NOW, stop — admitting anything younger would reorder.
+        while let Some(head) = self.pending.front() {
+            let total = head.req.prompt.len() + head.req.max_new;
+            let claimed = match cache.try_claim(total.max(1)) {
+                Ok(Some(slot)) => slot,
+                Ok(None) => break, // wait for a retirement; order preserved
+                Err(e) => {
+                    let p = self.pending.pop_front().expect("head exists");
+                    return Err(e.context(format!(
+                        "seq {:?} ({} prompt + {} max_new) can never be admitted",
+                        p.id,
+                        p.req.prompt.len(),
+                        p.req.max_new
+                    )));
+                }
+            };
+            let p = self.pending.pop_front().expect("head exists");
+            if p.req.prompt.is_empty() {
+                cache.release(claimed);
+                anyhow::bail!("seq {:?}: empty prompt (a generation needs >= 1 token)", p.id);
+            }
+            let logits =
+                match server.prefill(cache, claimed, p.req.adapter.as_deref(), &p.req.prompt) {
+                    Ok(l) => l,
+                    Err(e) => {
+                        cache.release(claimed);
+                        return Err(e);
+                    }
+                };
+            server.record_ttft(p.submitted.secs());
+            let mut run = RunningSeq {
+                id: p.id,
+                slot: claimed,
+                adapter: p.req.adapter,
+                tokens: p.req.prompt,
+                prompt_len: 0,
+                max_new: p.req.max_new,
+                stop_token: p.req.stop_token,
+                next: 0,
+                generated: 0,
+            };
+            run.prompt_len = run.tokens.len();
+            if run.max_new == 0 {
+                cache.release(claimed);
+                self.done.push(run.into_finished(FinishReason::MaxNew));
+                continue;
+            }
+            // The prefill's last-position logits ARE the first generated
+            // token (this is what TTFT measures).
+            run.next = argmax(&logits);
+            run.tokens.push(run.next);
+            run.generated = 1;
+            if let Some(reason) = run.finish_reason() {
+                cache.release(claimed);
+                self.done.push(run.into_finished(reason));
+            } else {
+                self.running.push(run);
+            }
+        }
+
+        // One decode step over every running sequence.
+        if !self.running.is_empty() {
+            let reqs: Vec<DecodeRequest> = self
+                .running
+                .iter()
+                .map(|r| DecodeRequest {
+                    slot: r.slot,
+                    token: r.next,
+                    adapter: r.adapter.clone(),
+                })
+                .collect();
+            let logits = server.decode_step(cache, &reqs)?;
+            let mut still = Vec::with_capacity(self.running.len());
+            for (i, mut run) in std::mem::take(&mut self.running).into_iter().enumerate() {
+                run.next = argmax(logits.row(i));
+                run.tokens.push(run.next);
+                run.generated += 1;
+                if let Some(reason) = run.finish_reason() {
+                    cache.release(run.slot);
+                    self.done.push(run.into_finished(reason));
+                } else {
+                    still.push(run);
+                }
+            }
+            self.running = still;
+        }
+        Ok(std::mem::take(&mut self.done))
+    }
+
+    /// Drive [`DecodeScheduler::step`] until every submitted sequence has
+    /// retired; finished sequences come back in retirement order (ties
+    /// within a step in submission order). If a step errors, everything
+    /// that had already retired goes back into the buffer (in order) so
+    /// the caller can recover it with [`DecodeScheduler::drain_finished`]
+    /// — a mid-run failure never loses completed sequences.
+    pub fn run(
+        &mut self,
+        server: &mut ModelServer,
+        cache: &mut KvCache,
+    ) -> Result<Vec<FinishedSeq>> {
+        let mut all = Vec::new();
+        while !self.idle() {
+            match self.step(server, cache) {
+                Ok(f) => all.extend(f),
+                Err(e) => {
+                    // `done` holds anything retired during the errored
+                    // step; earlier steps' results go back in front.
+                    let mut keep = all;
+                    keep.append(&mut self.done);
+                    self.done = keep;
+                    return Err(e);
+                }
+            }
+        }
+        Ok(all)
+    }
+
+    /// Convenience for callers that want prompt-order results: run to
+    /// completion and sort by submission id.
+    pub fn run_sorted(
+        &mut self,
+        server: &mut ModelServer,
+        cache: &mut KvCache,
+    ) -> Result<Vec<FinishedSeq>> {
+        let mut all = self.run(server, cache)?;
+        all.sort_by_key(|f| f.id);
+        Ok(all)
     }
 }
 
@@ -197,6 +572,54 @@ mod tests {
         assert_eq!(b3[0].x, vec![6.0]);
         assert!(s.take_batch().is_none());
         assert!(!s.full());
+    }
+
+    #[test]
+    fn take_batch_never_reorders_mid_flight_submissions() {
+        // Regression for the starvation/ordering edge: requests submitted
+        // WHILE earlier batches are in flight must drain strictly after
+        // everything already pending — capacity freeing up (a new
+        // take_batch) must never let a late arrival overtake.
+        let mut s = Scheduler::new(2);
+        for i in 0..3 {
+            s.submit(Request::base(vec![i as f32]));
+        }
+        let b1 = s.take_batch().unwrap(); // 0, 1 in flight
+        assert_eq!(b1.iter().map(|r| r.x[0] as usize).collect::<Vec<_>>(), vec![0, 1]);
+        // Mid-flight submissions land behind the already-pending 2.
+        s.submit(Request::base(vec![3.0]));
+        s.submit(Request::base(vec![4.0]));
+        let b2 = s.take_batch().unwrap();
+        assert_eq!(b2.iter().map(|r| r.x[0] as usize).collect::<Vec<_>>(), vec![2, 3]);
+        s.submit(Request::base(vec![5.0]));
+        let b3 = s.take_batch().unwrap();
+        assert_eq!(b3.iter().map(|r| r.x[0] as usize).collect::<Vec<_>>(), vec![4, 5]);
+        assert!(s.take_batch().is_none());
+    }
+
+    #[test]
+    fn seq_request_builders_and_finished_accessors() {
+        let r = SeqRequest::new("t", vec![1, 2, 3], 4).stop_at(9);
+        assert_eq!(r.adapter.as_deref(), Some("t"));
+        assert_eq!(r.stop_token, Some(9));
+        let b = SeqRequest::base(vec![5], 2);
+        assert_eq!(b.adapter, None);
+        let f = FinishedSeq {
+            id: SeqId(3),
+            adapter: None,
+            prompt_len: 2,
+            tokens: vec![1, 2, 7, 9],
+            reason: FinishReason::StopToken,
+        };
+        assert_eq!(f.generated(), &[7, 9]);
+        assert_eq!(f.id.raw(), 3);
+    }
+
+    #[test]
+    fn argmax_is_first_max_ascending() {
+        assert_eq!(argmax(&[0.0, 3.0, 3.0, 1.0]), 1);
+        assert_eq!(argmax(&[-1.0]), 0);
+        assert_eq!(argmax(&[f32::NEG_INFINITY, -5.0]), 1);
     }
 
     #[test]

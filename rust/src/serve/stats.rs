@@ -35,6 +35,21 @@ pub struct ServeStats {
     latencies_s: VecDeque<f64>,
     /// Exact lifetime sum of batch latencies (throughput denominator).
     total_s: f64,
+    // ---- decode-path counters (prefill / decode_step / TTFT) ----------
+    /// Admitted sequences (prefills executed).
+    pub prefills: usize,
+    /// Prompt tokens prefilled (exact lifetime total).
+    pub prefill_tokens: usize,
+    /// Exact lifetime seconds spent in prefills.
+    prefill_s: f64,
+    /// Decode steps executed.
+    pub decode_steps: usize,
+    /// Tokens decoded (one per sequence per step; exact lifetime total).
+    pub decode_tokens: usize,
+    /// Exact lifetime seconds spent in decode steps.
+    decode_s: f64,
+    /// Submit→first-token latency per sequence, last [`SAMPLE_WINDOW`].
+    ttft_s: VecDeque<f64>,
 }
 
 /// Rolled-up view of [`ServeStats`]. `batches`/`requests`/`total_s`/
@@ -52,6 +67,20 @@ pub struct ServeSummary {
     pub total_s: f64,
     /// Requests per second over the measured batches.
     pub req_per_s: f64,
+    // ---- decode-path rollup -------------------------------------------
+    /// Admitted sequences / prefilled prompt tokens / decoded tokens.
+    pub prefills: usize,
+    pub prefill_tokens: usize,
+    pub decode_tokens: usize,
+    /// Time-to-first-token percentiles over the trailing window
+    /// (0 when no sequence ran).
+    pub ttft_p50_s: f64,
+    pub ttft_p95_s: f64,
+    /// Decoded tokens per second of decode-step time (the steady-state
+    /// generation rate; 0 when no decode step ran).
+    pub decode_tok_per_s: f64,
+    /// End-to-end generated tokens per second (prefill + decode time).
+    pub seq_tok_per_s: f64,
 }
 
 /// Bounded push: drop the oldest sample once the window is full.
@@ -101,6 +130,35 @@ impl ServeStats {
         self.total_s += secs;
     }
 
+    /// Record one executed prefill: the sequence's adapter counts as a
+    /// served request (hit table included), its tokens toward the
+    /// prefill totals.
+    pub fn record_prefill(&mut self, adapter: Option<&str>, tokens: usize, secs: f64) {
+        self.requests += 1;
+        *self.hits.entry(adapter.unwrap_or(BASE_KEY).to_string()).or_insert(0) += 1;
+        self.prefills += 1;
+        self.prefill_tokens += tokens;
+        self.prefill_s += secs;
+        self.total_s += secs;
+    }
+
+    /// Record one continuous-batching decode step: `batch` sequences each
+    /// produced one token; occupancy is measured against the slot budget.
+    pub fn record_decode_step(&mut self, batch: usize, n_groups: usize, slots: usize, secs: f64) {
+        self.decode_steps += 1;
+        self.decode_tokens += batch;
+        self.decode_s += secs;
+        self.total_s += secs;
+        push_windowed(&mut self.group_counts, n_groups);
+        push_windowed(&mut self.occupancies, batch as f64 / slots.max(1) as f64);
+        push_windowed(&mut self.latencies_s, secs);
+    }
+
+    /// Record one sequence's submit→first-token latency.
+    pub fn record_ttft(&mut self, secs: f64) {
+        push_windowed(&mut self.ttft_s, secs);
+    }
+
     pub fn reset(&mut self) {
         *self = ServeStats::default();
     }
@@ -112,6 +170,13 @@ impl ServeStats {
             let s = BenchStats::from_samples(self.latencies_s.iter().copied().collect());
             (s.p50, s.p95)
         };
+        let (ttft_p50_s, ttft_p95_s) = if self.ttft_s.is_empty() {
+            (0.0, 0.0)
+        } else {
+            let s = BenchStats::from_samples(self.ttft_s.iter().copied().collect());
+            (s.p50, s.p95)
+        };
+        let gen_s = self.prefill_s + self.decode_s;
         ServeSummary {
             batches: self.batches,
             requests: self.requests,
@@ -122,6 +187,23 @@ impl ServeStats {
             total_s: self.total_s,
             req_per_s: if self.total_s > 0.0 {
                 self.requests as f64 / self.total_s
+            } else {
+                0.0
+            },
+            prefills: self.prefills,
+            prefill_tokens: self.prefill_tokens,
+            decode_tokens: self.decode_tokens,
+            ttft_p50_s,
+            ttft_p95_s,
+            decode_tok_per_s: if self.decode_s > 0.0 {
+                self.decode_tokens as f64 / self.decode_s
+            } else {
+                0.0
+            },
+            // Every prefill emits the sequence's first token; decode
+            // steps emit the rest.
+            seq_tok_per_s: if gen_s > 0.0 {
+                (self.prefills + self.decode_tokens) as f64 / gen_s
             } else {
                 0.0
             },
@@ -141,6 +223,13 @@ impl ServeStats {
         o.set("p95_ms", jnum(s.p95_s * 1e3));
         o.set("total_s", jnum(s.total_s));
         o.set("req_per_s", jnum(s.req_per_s));
+        o.set("prefills", jnum(s.prefills as f64));
+        o.set("prefill_tokens", jnum(s.prefill_tokens as f64));
+        o.set("decode_tokens", jnum(s.decode_tokens as f64));
+        o.set("ttft_p50_ms", jnum(s.ttft_p50_s * 1e3));
+        o.set("ttft_p95_ms", jnum(s.ttft_p95_s * 1e3));
+        o.set("decode_tok_per_s", jnum(s.decode_tok_per_s));
+        o.set("seq_tok_per_s", jnum(s.seq_tok_per_s));
         let mut hits = Json::obj();
         for (k, v) in &self.hits {
             hits.set(k, jnum(*v as f64));
@@ -160,16 +249,32 @@ pub struct ResidentBreakdown {
     pub per_module: Vec<(String, usize)>,
     /// What the same linears would hold resident as dense fp32.
     pub dense_bytes: usize,
+    /// Live KV-cache pages (0 for one-shot servers without a cache); NOT
+    /// part of [`ResidentBreakdown::total`] — the base-residency ratio
+    /// stays comparable across PRs — but reported alongside it.
+    pub kv_bytes: usize,
 }
 
 impl ResidentBreakdown {
     pub fn new(per_module: Vec<(String, usize)>, dense_bytes: usize) -> ResidentBreakdown {
-        ResidentBreakdown { per_module, dense_bytes }
+        ResidentBreakdown { per_module, dense_bytes, kv_bytes: 0 }
+    }
+
+    /// Attach the decode path's live KV-cache bytes.
+    pub fn with_kv_bytes(mut self, kv_bytes: usize) -> ResidentBreakdown {
+        self.kv_bytes = kv_bytes;
+        self
     }
 
     /// Aggregate resident bytes across every module.
     pub fn total(&self) -> usize {
         self.per_module.iter().map(|(_, b)| b).sum()
+    }
+
+    /// Base bytes plus the KV cache — what the decode server actually
+    /// pins while sequences are in flight.
+    pub fn total_with_kv(&self) -> usize {
+        self.total() + self.kv_bytes
     }
 
     /// `total / dense` — the residency ratio the fused-quant strategy is
@@ -193,6 +298,8 @@ impl ResidentBreakdown {
         o.set("total_bytes", jnum(self.total() as f64));
         o.set("dense_bytes", jnum(self.dense_bytes as f64));
         o.set("ratio", jnum(self.ratio()));
+        o.set("kv_cache_bytes", jnum(self.kv_bytes as f64));
+        o.set("total_with_kv_bytes", jnum(self.total_with_kv() as f64));
         o
     }
 }
@@ -261,6 +368,41 @@ mod tests {
         let s = st.summary();
         assert!((s.total_s - 0.001 * (SAMPLE_WINDOW + 10) as f64).abs() < 1e-9);
         assert!(s.req_per_s > 0.0);
+    }
+
+    #[test]
+    fn decode_counters_roll_up() {
+        let mut st = ServeStats::new();
+        st.record_prefill(Some("t"), 6, 0.004);
+        st.record_prefill(None, 3, 0.002);
+        st.record_ttft(0.005);
+        st.record_ttft(0.009);
+        st.record_decode_step(2, 2, 8, 0.001);
+        st.record_decode_step(1, 1, 8, 0.003);
+        assert_eq!(st.prefills, 2);
+        assert_eq!(st.prefill_tokens, 9);
+        assert_eq!(st.decode_tokens, 3);
+        assert_eq!(st.hits["t"], 1);
+        assert_eq!(st.hits[BASE_KEY], 1);
+        let s = st.summary();
+        assert_eq!((s.prefills, s.prefill_tokens, s.decode_tokens), (2, 9, 3));
+        assert!(s.ttft_p50_s > 0.0 && s.ttft_p95_s >= s.ttft_p50_s);
+        assert!((s.decode_tok_per_s - 3.0 / 0.004).abs() < 1e-6);
+        // 2 first tokens (prefills) + 3 decoded over 0.010s total.
+        assert!((s.seq_tok_per_s - 5.0 / 0.010).abs() < 1e-6);
+        // occupancy measured against the slot budget
+        assert!((s.mean_occupancy - (0.25 + 0.125) / 2.0).abs() < 1e-12);
+        let j = st.to_json().to_string();
+        assert!(j.contains("\"ttft_p50_ms\"") && j.contains("\"decode_tok_per_s\""), "{j}");
+    }
+
+    #[test]
+    fn resident_breakdown_carries_kv_bytes() {
+        let bd = ResidentBreakdown::new(vec![("q".into(), 100)], 400).with_kv_bytes(64);
+        assert_eq!(bd.total(), 100);
+        assert_eq!(bd.total_with_kv(), 164);
+        let j = bd.to_json().to_string();
+        assert!(j.contains("\"kv_cache_bytes\":64"), "{j}");
     }
 
     #[test]

@@ -16,7 +16,8 @@ use pissa::model::{BaseModel, LINEARS};
 use pissa::quant::{dequantize, quantize};
 use pissa::runtime::ConfigInfo;
 use pissa::serve::{
-    drift_factors, ModelRequest, ModelServer, Request, ServeConfig, ServeStrategy, Server,
+    drift_factors, DecodeRequest, DecodeScheduler, ModelRequest, ModelServer, Request,
+    SeqRequest, ServeConfig, ServeStrategy, Server,
 };
 use pissa::util::rng::Rng;
 use std::sync::Mutex;
@@ -221,5 +222,101 @@ fn full_model_serving_bit_identical_across_thread_counts() {
             "full-model strategy {} drifted across thread counts",
             strategy.name()
         );
+    }
+}
+
+#[test]
+fn full_decode_trajectories_bit_identical_across_thread_counts() {
+    // The decode pipeline adds three parallel surfaces on top of the
+    // forward — per-position attention (par_rows_mut over the batch),
+    // K/V cache writes, and the continuous-batching step loop. A whole
+    // workload's every sampled token (and the prefill logits that chose
+    // it) must be bit-identical under PISSA_THREADS=1 and 8, for every
+    // serving strategy.
+    let _guard = ENV_LOCK.lock().unwrap();
+    let cfg = ConfigInfo {
+        name: "decode-determinism".into(),
+        kind: "decoder".into(),
+        vocab: 32,
+        d_model: 48,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff: 64,
+        seq_len: 8,
+        batch: 4,
+        eval_batch: 2,
+        n_classes: 0,
+        ranks: vec![4],
+    };
+    let (engine, workload) = with_threads(1, || {
+        let mut rng = Rng::new(21);
+        let base = BaseModel::random(&cfg, &mut rng);
+        let mut engine = AdapterEngine::new(base);
+        for name in ["t0", "t1", "t2"] {
+            engine.attach(name, AdapterSpec::pissa(4), &mut rng).unwrap();
+            for module in LINEARS {
+                drift_factors(&mut engine, name, module, 0.05, &mut rng).unwrap();
+            }
+        }
+        let workload: Vec<SeqRequest> = (0..10)
+            .map(|i| {
+                let prompt: Vec<usize> = (0..(2 + i % 3)).map(|j| (i * 11 + j * 3) % 32).collect();
+                if i % 4 == 3 {
+                    SeqRequest::base(prompt, 6)
+                } else {
+                    SeqRequest::new(["t0", "t1", "t2"][i % 3], prompt, 6)
+                }
+            })
+            .collect();
+        (engine, workload)
+    });
+
+    for strategy in ServeStrategy::all() {
+        let run = || {
+            let mut server = ModelServer::new(
+                &engine,
+                ServeConfig::full_model().strategy(strategy).max_seq(16).slots(4),
+            )
+            .unwrap();
+            let mut cache = server.new_cache().unwrap();
+            let mut sched = DecodeScheduler::new();
+            for r in &workload {
+                sched.submit(r.clone());
+            }
+            let fin = sched.run_sorted(&mut server, &mut cache).unwrap();
+            fin.into_iter().map(|f| f.tokens).collect::<Vec<_>>()
+        };
+        let t1 = with_threads(1, run);
+        let t8 = with_threads(8, run);
+        assert_eq!(
+            t1,
+            t8,
+            "decode trajectories drifted across thread counts (strategy {})",
+            strategy.name()
+        );
+
+        // Trajectories compare post-argmax; also pin the RAW logits of a
+        // prefill and a mixed-adapter decode step.
+        let probe = || {
+            let mut server = ModelServer::new(
+                &engine,
+                ServeConfig::full_model().strategy(strategy).max_seq(16).slots(4),
+            )
+            .unwrap();
+            let mut cache = server.new_cache().unwrap();
+            let s0 = cache.try_claim(8).unwrap().unwrap();
+            let l0 = server.prefill(&mut cache, s0, Some("t0"), &[1, 2, 3]).unwrap();
+            let s1 = cache.try_claim(8).unwrap().unwrap();
+            server.prefill(&mut cache, s1, None, &[4, 5]).unwrap();
+            let reqs = vec![
+                DecodeRequest { slot: s0, token: 7, adapter: Some("t0".into()) },
+                DecodeRequest { slot: s1, token: 9, adapter: None },
+            ];
+            let lm = server.decode_step(&mut cache, &reqs).unwrap();
+            (l0, lm.data)
+        };
+        let p1 = with_threads(1, probe);
+        let p8 = with_threads(8, probe);
+        assert_eq!(p1, p8, "decode logits drifted across thread counts ({})", strategy.name());
     }
 }

@@ -29,8 +29,8 @@ use pissa::quant::error::fro_error;
 use pissa::quant::nf4_roundtrip;
 use pissa::runtime::ConfigInfo;
 use pissa::serve::{
-    drift_factors, ModelRequest, ModelServer, Request, ServeConfig, ServeError, ServeStrategy,
-    Server,
+    argmax, drift_factors, DecodeRequest, DecodeScheduler, KvCache, ModelRequest, ModelServer,
+    Request, SeqRequest, ServeConfig, ServeError, ServeStrategy, Server,
 };
 use pissa::util::rng::Rng;
 
@@ -628,6 +628,314 @@ fn full_model_over_rank_adapter_names_the_offending_module() {
     )
     .unwrap();
     assert!(server.forward(&[ModelRequest::new("fat", 1)]).is_ok());
+}
+
+// ---- KV-cached decode (prefill / decode_step / DecodeScheduler) -------
+
+/// The strategy grid of the decode equivalence contract: one exact
+/// full-precision path, the streaming-NF4 path, and the naive merged
+/// baseline — each must be bit-stable under incremental decode.
+fn decode_strategies() -> [ServeStrategy; 3] {
+    [ServeStrategy::Fused, ServeStrategy::FusedQuant, ServeStrategy::MergePerRequest]
+}
+
+/// Decode `n_new` tokens incrementally (one prefill + single-request
+/// decode steps), returning the token trajectory and EVERY step's
+/// logits row.
+fn incremental_trajectory(
+    server: &mut ModelServer,
+    cache: &mut KvCache,
+    adapter: Option<&str>,
+    prompt: &[usize],
+    n_new: usize,
+) -> (Vec<usize>, Vec<Vec<f32>>) {
+    let slot = cache.try_claim(prompt.len() + n_new).unwrap().unwrap();
+    let mut tokens = prompt.to_vec();
+    let mut logits_all = Vec::new();
+    let l0 = server.prefill(cache, slot, adapter, prompt).unwrap();
+    let mut next = argmax(&l0);
+    tokens.push(next);
+    logits_all.push(l0);
+    for _ in 1..n_new {
+        let req =
+            DecodeRequest { slot, token: next, adapter: adapter.map(|s| s.to_string()) };
+        let lm = server.decode_step(cache, &[req]).unwrap();
+        let row = lm.row(0).to_vec();
+        next = argmax(&row);
+        tokens.push(next);
+        logits_all.push(row);
+    }
+    cache.release(slot);
+    (tokens, logits_all)
+}
+
+#[test]
+fn incremental_decode_is_bit_identical_to_full_prefill_recompute() {
+    // THE tentpole contract: after prefilling a prompt, every decode step
+    // must produce EXACTLY the logits a from-scratch prefill of the same
+    // prefix would — bit for bit, across strategy × rank, for adapted,
+    // partially-adapted, and base sequences.
+    for &rank in &[1usize, 4, 16] {
+        let (engine, _, _) = build_model_engine(rank, 1100 + rank as u64);
+        let fixtures: [(Option<&str>, Vec<usize>); 3] = [
+            (Some("pissa-t"), vec![3, 17, 41, 8]),
+            (Some("partial"), vec![25, 1]),
+            (None, vec![9, 9, 30, 2, 44]),
+        ];
+        for strategy in decode_strategies() {
+            let cfg = ServeConfig::full_model().strategy(strategy).max_seq(32);
+            let mut server = ModelServer::new(&engine, cfg).unwrap();
+            let mut cache = server.new_cache().unwrap();
+            for (adapter, prompt) in &fixtures {
+                let n_new = 6;
+                let (tokens, logits) =
+                    incremental_trajectory(&mut server, &mut cache, *adapter, prompt, n_new);
+                assert_eq!(tokens.len(), prompt.len() + n_new);
+                // Reference: recompute every prefix from scratch.
+                for (step, want) in logits.iter().enumerate() {
+                    let prefix = &tokens[..prompt.len() + step];
+                    let slot = cache.try_claim(prefix.len()).unwrap().unwrap();
+                    let got = server.prefill(&mut cache, slot, *adapter, prefix).unwrap();
+                    cache.release(slot);
+                    assert_eq!(
+                        &got,
+                        want,
+                        "rank={rank} strategy={} adapter={adapter:?} step={step}: \
+                         incremental decode diverged from full recompute",
+                        strategy.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn batched_decode_steps_match_single_sequence_decode_across_slot_counts() {
+    // Continuous batching must not change a single bit of any sequence's
+    // trajectory: the same request set decoded at slots {1, 3, 8} (and
+    // manually, one sequence at a time) yields identical tokens.
+    let (engine, names, _) = build_model_engine(4, 1200);
+    let prompts: Vec<(Option<String>, Vec<usize>)> = (0..7)
+        .map(|i| {
+            let adapter =
+                if i % 4 == 3 { None } else { Some(names[i % names.len()].clone()) };
+            let prompt: Vec<usize> = (0..(2 + i % 4)).map(|j| (i * 13 + j * 7) % 48).collect();
+            (adapter, prompt)
+        })
+        .collect();
+    let max_new = 5;
+    for strategy in decode_strategies() {
+        let cfg = ServeConfig::full_model().strategy(strategy).max_seq(16);
+        // Manual single-sequence reference.
+        let mut server = ModelServer::new(&engine, cfg.clone()).unwrap();
+        let mut cache = server.new_cache().unwrap();
+        let reference: Vec<Vec<usize>> = prompts
+            .iter()
+            .map(|(a, p)| {
+                incremental_trajectory(&mut server, &mut cache, a.as_deref(), p, max_new).0
+            })
+            .collect();
+        for slots in [1usize, 3, 8] {
+            let mut server =
+                ModelServer::new(&engine, cfg.clone().slots(slots)).unwrap();
+            let mut cache = server.new_cache().unwrap();
+            let mut sched = DecodeScheduler::new();
+            for (a, p) in &prompts {
+                let req = SeqRequest {
+                    adapter: a.clone(),
+                    prompt: p.clone(),
+                    max_new,
+                    stop_token: None,
+                };
+                sched.submit(req);
+            }
+            let fin = sched.run_sorted(&mut server, &mut cache).unwrap();
+            assert_eq!(fin.len(), prompts.len());
+            for (i, f) in fin.iter().enumerate() {
+                assert_eq!(
+                    f.tokens,
+                    reference[i],
+                    "strategy={} slots={slots} seq={i}: continuous batching changed \
+                     the trajectory",
+                    strategy.name()
+                );
+                assert_eq!(f.generated().len(), max_new);
+            }
+            // Every slot was released on retirement.
+            assert_eq!(cache.free_slots(), slots);
+            assert_eq!(cache.reserved_bytes(), 0);
+            let s = server.stats().summary();
+            assert_eq!(s.prefills, prompts.len());
+            assert_eq!(s.decode_tokens, prompts.len() * (max_new - 1));
+            assert!(s.ttft_p95_s >= s.ttft_p50_s);
+        }
+    }
+}
+
+#[test]
+fn decode_scheduler_admits_in_strict_arrival_order() {
+    // Head-of-line contract (the take_batch starvation/ordering
+    // regression, held to on the new scheduler): while an early LONG
+    // request is waiting for cache budget, a later SHORT request that
+    // WOULD fit must NOT be admitted ahead of it.
+    let (engine, _, _) = build_model_engine(4, 1300);
+    // Page math (KV_PAGE = 16 positions, 2 layers): a 32-position
+    // sequence reserves 8 pages, a 17-position one 8, a 2-position one
+    // 4. Budget = 12 pages, so `a` (8) leaves room for `c` (4) but NOT
+    // for `b` (8).
+    let page_bytes = pissa::serve::KV_PAGE * MODEL_D * 4;
+    let probe = KvCache::new(MODEL_LAYERS, MODEL_D, 32, 2, 1 << 30).unwrap();
+    assert_eq!(probe.pages_for(32), 8);
+    assert_eq!(probe.pages_for(17), 8);
+    assert_eq!(probe.pages_for(2), 4);
+    let cfg =
+        ServeConfig::full_model().max_seq(32).slots(2).kv_budget_bytes(12 * page_bytes);
+    let mut server = ModelServer::new(&engine, cfg).unwrap();
+    let mut cache = server.new_cache().unwrap();
+    let mut sched = DecodeScheduler::new();
+    let a = sched.submit(SeqRequest::base(vec![1, 2], 30)); // 32 pos -> 8 pages
+    let b = sched.submit(SeqRequest::base(vec![3, 4, 5], 14)); // 17 pos -> 8 pages
+    let c = sched.submit(SeqRequest::base(vec![4], 1)); // 2 pos -> 4 pages
+    // While `a` is in flight, `b` blocks on budget — and `c`, despite
+    // fitting in both a free slot and the remaining budget, must stay
+    // queued behind it.
+    let mut finished = Vec::new();
+    loop {
+        let fin = sched.step(&mut server, &mut cache).unwrap();
+        let a_done = fin.iter().any(|f| f.id == a);
+        finished.extend(fin);
+        if a_done {
+            break;
+        }
+        assert_eq!(sched.running(), 1, "only `a` may hold a slot");
+        assert_eq!(sched.pending(), 2, "`c` was admitted ahead of the blocked `b`");
+    }
+    // With `a` retired, b then c admit (in order) and finish.
+    while !sched.idle() {
+        finished.extend(sched.step(&mut server, &mut cache).unwrap());
+    }
+    assert_eq!(finished.len(), 3);
+    let find = |id| finished.iter().find(|f| f.id == id).unwrap();
+    assert_eq!(find(a).generated().len(), 30);
+    assert_eq!(find(b).generated().len(), 14);
+    assert_eq!(find(c).generated().len(), 1);
+    assert_eq!(cache.reserved_bytes(), 0);
+}
+
+#[test]
+fn decode_typed_errors_budget_and_max_seq() {
+    let (engine, _, _) = build_model_engine(4, 1400);
+    // A config whose cache cannot hold even one max_seq sequence is a
+    // typed construction error.
+    let cfg = ServeConfig::full_model().max_seq(64).slots(2).kv_budget_bytes(256);
+    let server = ModelServer::new(&engine, cfg).unwrap();
+    let err = server.new_cache().unwrap_err();
+    assert!(
+        matches!(
+            err.downcast_ref::<ServeError>(),
+            Some(ServeError::CacheBudgetExhausted { .. })
+        ),
+        "got {err:?}"
+    );
+    // An over-max_seq request pops off the queue as a typed error; the
+    // scheduler keeps serving what remains.
+    let cfg = ServeConfig::full_model().max_seq(8).slots(2);
+    let mut server = ModelServer::new(&engine, cfg).unwrap();
+    let mut cache = server.new_cache().unwrap();
+    let mut sched = DecodeScheduler::new();
+    sched.submit(SeqRequest::base(vec![1, 2, 3, 4, 5], 10)); // 15 > 8
+    let ok = sched.submit(SeqRequest::base(vec![1, 2], 3));
+    let err = sched.step(&mut server, &mut cache).unwrap_err();
+    assert!(
+        matches!(
+            err.downcast_ref::<ServeError>(),
+            Some(ServeError::SeqTooLong { max_seq: 8, .. })
+        ),
+        "got {err:?}"
+    );
+    let fin = sched.run_sorted(&mut server, &mut cache).unwrap();
+    assert_eq!(fin.len(), 1);
+    assert_eq!(fin[0].id, ok);
+    assert_eq!(fin[0].generated().len(), 3);
+}
+
+#[test]
+fn decode_error_mid_step_never_drops_finished_sequences() {
+    // A sequence that retires in the same step an impossible request
+    // errors must survive: the scheduler buffers retirements and hands
+    // them back via drain_finished.
+    let (engine, _, _) = build_model_engine(4, 1500);
+    let cfg = ServeConfig::full_model().max_seq(8).slots(2);
+    let mut server = ModelServer::new(&engine, cfg).unwrap();
+    let mut cache = server.new_cache().unwrap();
+    let mut sched = DecodeScheduler::new();
+    // Finishes at admission (one prefill token is the whole budget)…
+    let a = sched.submit(SeqRequest::base(vec![1, 2], 1));
+    // …then the head-of-queue becomes an impossible request.
+    sched.submit(SeqRequest::base(vec![3], 20)); // 21 > max_seq 8
+    let err = sched.step(&mut server, &mut cache).unwrap_err();
+    assert!(matches!(
+        err.downcast_ref::<ServeError>(),
+        Some(ServeError::SeqTooLong { .. })
+    ));
+    let recovered = sched.drain_finished();
+    assert_eq!(recovered.len(), 1, "finished sequence was dropped by the error");
+    assert_eq!(recovered[0].id, a);
+    assert_eq!(recovered[0].generated().len(), 1);
+    assert!(sched.idle());
+    assert_eq!(cache.reserved_bytes(), 0);
+}
+
+#[test]
+fn decode_serve_generator_matches_naive_recompute_on_fixture_prompts() {
+    // The eval-side satellite: KV-cached generation through the serving
+    // stack ≡ recomputing full-sequence logits per emitted token (what
+    // `eval/generate.rs` used to do), token for token, on a fixture
+    // prompt set.
+    use pissa::data::tokenizer::{EOS, VOCAB};
+    use pissa::eval::{layout_prompt, extract_response, ServeGenerator};
+    let mut rng = Rng::new(4242);
+    let mut cfg = model_cfg();
+    cfg.vocab = VOCAB; // byte-level tokenizer ids must be embeddable
+    let base = BaseModel::random(&cfg, &mut rng);
+    let mut eng = AdapterEngine::new(base);
+    eng.attach("t", AdapterSpec::pissa(4), &mut rng).unwrap();
+    for module in LINEARS {
+        drift_factors(&mut eng, "t", module, 0.05, &mut rng).unwrap();
+    }
+    let serve_cfg = ServeConfig::full_model().max_seq(48).slots(4);
+    let fixtures: Vec<String> = ["3 + 4 =", "apples?", "x", "Total: 12 - 5"]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+    let max_new = 12;
+
+    let mut sgen = ServeGenerator::new(&eng, serve_cfg.clone(), Some("t")).unwrap();
+    let fast = sgen.generate(&fixtures, max_new).unwrap();
+
+    // Naive reference: per prompt, per token, a from-scratch prefill of
+    // the whole prefix (no cache reuse) — the O(T²) path.
+    let mut server = ModelServer::new(&eng, serve_cfg).unwrap();
+    let mut cache = server.new_cache().unwrap();
+    for (p, fast_out) in fixtures.iter().zip(&fast) {
+        let toks = layout_prompt(p, cache.max_seq());
+        let mut tokens: Vec<usize> = toks.iter().map(|&t| t as usize).collect();
+        let budget = max_new.min(cache.max_seq() - tokens.len());
+        for _ in 0..budget {
+            let slot = cache.try_claim(tokens.len()).unwrap().unwrap();
+            let logits = server.prefill(&mut cache, slot, Some("t"), &tokens).unwrap();
+            cache.release(slot);
+            let tok = argmax(&logits);
+            tokens.push(tok);
+            if tok == EOS as usize {
+                break;
+            }
+        }
+        let toks_i32: Vec<i32> = tokens.iter().map(|&t| t as i32).collect();
+        let want = extract_response(&toks_i32);
+        assert_eq!(fast_out, &want, "prompt {p:?}: cached decode diverged from recompute");
+    }
 }
 
 // ---- edge-case hardening ---------------------------------------------
