@@ -1,0 +1,371 @@
+//! §HTTP serving — loopback load test over the streaming front-end.
+//!
+//! Sustains mixed-tenant concurrent traffic against a real `NetServer`
+//! on a loopback port and asserts the three properties the front-end is
+//! specified by:
+//!
+//!   1. fidelity — every streamed token trajectory is BIT-IDENTICAL to
+//!      an in-process greedy decode of the same request on an
+//!      identically seeded engine (HTTP adds transport, not arithmetic),
+//!   2. admission — a throttled tenant draws typed 429s with Retry-After
+//!      while in-budget tenants meet the TTFT p95 SLO,
+//!   3. drain — a graceful drain finishes every running sequence with
+//!      zero lost or truncated streams, then refuses new work with 503.
+//!
+//! Emits one `BENCH {json}` line per wave plus `http_serve_summary`, and
+//! writes results/http_serve.json. Quick mode (default) trims client
+//! count and generation length, not the shape; PISSA_BENCH_FULL=1 for
+//! the full protocol.
+
+mod common;
+
+use pissa::adapter::{AdapterEngine, AdapterSpec};
+use pissa::model::{BaseModel, LINEARS};
+use pissa::net::{http, NetConfig, NetServer, StreamingClient, TenantPolicy};
+use pissa::runtime::ConfigInfo;
+use pissa::serve::{drift_factors, DecodeScheduler, ModelServer, SeqRequest, ServeConfig};
+use pissa::util::json::{jarr, jnum, jstr, Json};
+use pissa::util::rng::Rng;
+use pissa::util::timer::{BenchStats, Timer};
+
+const DIM: usize = 48;
+const D_FF: usize = 96;
+const LAYERS: usize = 2;
+const VOCAB: usize = 48;
+const N_ADAPTERS: usize = 5;
+const RANK: usize = 4;
+const SLOTS: usize = 8;
+const MAX_SEQ: usize = 96;
+const SEED: u64 = 4242;
+/// The tenant pinned to a near-empty token bucket.
+const THROTTLED: &str = "tenant04";
+/// TTFT p95 SLO for in-budget tenants (generous: loopback CI boxes).
+const TTFT_SLO_MS: f64 = 2000.0;
+
+fn build_engine(seed: u64) -> anyhow::Result<AdapterEngine> {
+    let cfg = ConfigInfo {
+        name: "http-serve-bench".into(),
+        kind: "decoder".into(),
+        vocab: VOCAB,
+        d_model: DIM,
+        n_layers: LAYERS,
+        n_heads: 2,
+        d_ff: D_FF,
+        seq_len: 8,
+        batch: 8,
+        eval_batch: 4,
+        n_classes: 0,
+        ranks: vec![RANK],
+    };
+    let mut rng = Rng::new(seed);
+    let base = BaseModel::random(&cfg, &mut rng);
+    let mut engine = AdapterEngine::new(base);
+    for i in 0..N_ADAPTERS {
+        let name = format!("tenant{i:02}");
+        engine.attach(&name, AdapterSpec::pissa(RANK), &mut rng)?;
+        for module in LINEARS {
+            drift_factors(&mut engine, &name, module, 0.05, &mut rng)?;
+        }
+    }
+    Ok(engine)
+}
+
+fn serve_cfg() -> ServeConfig {
+    ServeConfig::full_model().max_seq(MAX_SEQ).slots(SLOTS)
+}
+
+/// Deterministic per-client request: tenant assignment rotates over four
+/// in-budget adapters plus the base (five tenants of wire traffic).
+fn client_request(i: usize) -> (Option<String>, Vec<usize>) {
+    let adapter = match i % 5 {
+        0 => Some("tenant00".to_string()),
+        1 => Some("tenant01".to_string()),
+        2 => Some("tenant02".to_string()),
+        3 => Some("tenant03".to_string()),
+        _ => None,
+    };
+    let prompt = vec![(i * 7 + 1) % VOCAB, (i * 3 + 2) % VOCAB, (i + 5) % VOCAB];
+    (adapter, prompt)
+}
+
+fn gen_body(adapter: Option<&str>, prompt: &[usize], max_new: usize, stream: bool) -> Json {
+    let mut o = Json::obj();
+    o.set("adapter", adapter.map(jstr).unwrap_or(Json::Null));
+    o.set("prompt", jarr(prompt.iter().map(|&t| jnum(t as f64))));
+    o.set("max_new", jnum(max_new as f64));
+    o.set("stream", Json::Bool(stream));
+    o
+}
+
+struct ClientResult {
+    idx: usize,
+    ttft_s: f64,
+    wall_s: f64,
+    tokens: Vec<usize>,
+    truncated: bool,
+}
+
+/// One streaming client: POST, time the first token line, collect the
+/// whole trajectory, flag truncation (no done line).
+fn run_stream_client(addr: &str, idx: usize, max_new: usize) -> anyhow::Result<ClientResult> {
+    let (adapter, prompt) = client_request(idx);
+    let body = gen_body(adapter.as_deref(), &prompt, max_new, true);
+    let t = Timer::start();
+    let mut c = StreamingClient::post(addr, "/v1/generate", &body)?;
+    anyhow::ensure!(c.status == 200, "client {idx}: status {}", c.status);
+    let mut ttft_s = f64::NAN;
+    let mut tokens = Vec::new();
+    let mut done = false;
+    while let Some(chunk) = c.next_chunk()? {
+        for line in String::from_utf8(chunk)?.lines().filter(|l| !l.is_empty()) {
+            let j = Json::parse(line)?;
+            if let Some(tok) = j.get("token").and_then(|v| v.as_f64()) {
+                if tokens.is_empty() {
+                    ttft_s = t.secs();
+                }
+                tokens.push(tok as usize);
+            } else if j.get("done").is_some() {
+                done = true;
+            }
+        }
+    }
+    Ok(ClientResult { idx, ttft_s, wall_s: t.secs(), tokens, truncated: !done })
+}
+
+fn main() -> anyhow::Result<()> {
+    let full = common::full_mode();
+    let n_clients: usize = if full { 64 } else { 32 };
+    let n_throttled: usize = 8;
+    let max_new: usize = if full { 16 } else { 8 };
+    common::banner(
+        "§HTTP serving",
+        &format!(
+            "loopback load test — {n_clients} concurrent clients over 5 tenants \
+             (+{n_throttled} against a throttled one), d={DIM}, L={LAYERS}, \
+             {SLOTS} slots, max_new {max_new}"
+        ),
+    );
+
+    eprintln!("[setup] building {N_ADAPTERS}-tenant engine and starting the front-end…");
+    let engine = build_engine(SEED)?;
+    let net_cfg = NetConfig {
+        workers: n_clients + n_throttled,
+        accept_backlog: 2 * (n_clients + n_throttled),
+        tenant_policies: vec![(
+            THROTTLED.to_string(),
+            TenantPolicy { rate_per_s: 1e-6, burst: 2.0, max_inflight: 64 },
+        )],
+        ..NetConfig::default()
+    };
+    let server = NetServer::start(&engine, serve_cfg(), net_cfg)?;
+    let addr = server.addr().to_string();
+
+    // In-process oracle: same seed, same engine, one sequential greedy
+    // decode per request — the ground truth every stream must match.
+    let oracle_engine = build_engine(SEED)?;
+    let mut oracle_server = ModelServer::new(&oracle_engine, serve_cfg())?;
+    let mut oracle_cache = oracle_server.new_cache()?;
+    let mut oracle = |adapter: Option<String>, prompt: Vec<usize>| -> anyhow::Result<Vec<usize>> {
+        let mut sched = DecodeScheduler::new();
+        sched.submit(SeqRequest { adapter, prompt, max_new, stop_token: None });
+        let fin = sched.run(&mut oracle_server, &mut oracle_cache)?;
+        Ok(fin[0].generated().to_vec())
+    };
+
+    // ---- wave 1: mixed-tenant concurrent streaming + throttled burst --
+    eprintln!("[wave 1] {n_clients} streaming + {n_throttled} throttled clients…");
+    let wave = Timer::start();
+    let mut stream_handles = Vec::new();
+    for i in 0..n_clients {
+        let addr = addr.clone();
+        stream_handles.push(std::thread::spawn(move || run_stream_client(&addr, i, max_new)));
+    }
+    let mut throttle_handles = Vec::new();
+    for i in 0..n_throttled {
+        let addr = addr.clone();
+        throttle_handles.push(std::thread::spawn(move || -> anyhow::Result<(u16, bool)> {
+            let prompt = vec![(i + 1) % VOCAB, 2];
+            let body = gen_body(Some(THROTTLED), &prompt, 2, false);
+            let resp = http::request(&addr, "POST", "/v1/generate", Some(&body))?;
+            let code = resp
+                .json()
+                .ok()
+                .and_then(|j| {
+                    let c = j.get("error").and_then(|e| e.get("code"))?;
+                    c.as_str().map(|s| s.to_string())
+                })
+                .unwrap_or_default();
+            let typed_429 = resp.status == 429
+                && code == "rate_limited"
+                && resp.header("retry-after").is_some();
+            Ok((resp.status, typed_429))
+        }));
+    }
+
+    let mut results = Vec::new();
+    for h in stream_handles {
+        results.push(h.join().expect("stream client thread")?);
+    }
+    let mut throttled_429 = 0usize;
+    let mut throttled_ok = 0usize;
+    for h in throttle_handles {
+        let (status, typed) = h.join().expect("throttled client thread")?;
+        match status {
+            200 => throttled_ok += 1,
+            429 => {
+                anyhow::ensure!(typed, "429 without rate_limited code + Retry-After");
+                throttled_429 += 1;
+            }
+            other => anyhow::bail!("throttled client: unexpected status {other}"),
+        }
+    }
+    let wave_s = wave.secs();
+
+    // Fidelity: every in-budget stream matches the oracle bit for bit.
+    let mut trajectories_ok = true;
+    for r in &results {
+        let (adapter, prompt) = client_request(r.idx);
+        let want = oracle(adapter, prompt)?;
+        if r.tokens != want || r.truncated {
+            trajectories_ok = false;
+            let got = &r.tokens;
+            eprintln!("[FAIL] client {}: stream {got:?} != oracle {want:?}", r.idx);
+        }
+    }
+    let ttft = BenchStats::from_samples(results.iter().map(|r| r.ttft_s).collect());
+    let wall = BenchStats::from_samples(results.iter().map(|r| r.wall_s).collect());
+    let tokens_total: usize = results.iter().map(|r| r.tokens.len()).sum();
+    let slo_ok = ttft.p95 * 1e3 <= TTFT_SLO_MS;
+    // Burst is 2.0 and refill is negligible, so exactly two requests of
+    // the throttled burst are admitted no matter how threads interleave.
+    let throttling_ok = throttled_429 >= 1 && throttled_ok >= 1 && throttled_ok <= 2;
+    println!(
+        "\nmixed wave: {n_clients} clients, {tokens_total} tokens in {wave_s:.3}s \
+         ({:.0} tok/s aggregate)",
+        tokens_total as f64 / wave_s.max(1e-12)
+    );
+    println!(
+        "TTFT p50 {:.1} ms  p95 {:.1} ms (SLO {TTFT_SLO_MS:.0} ms: {})  |  \
+         stream wall p95 {:.1} ms",
+        ttft.p50 * 1e3,
+        ttft.p95 * 1e3,
+        if slo_ok { "PASS" } else { "FAIL" },
+        wall.p95 * 1e3
+    );
+    println!(
+        "throttled tenant: {throttled_ok} admitted (burst 2), {throttled_429} typed 429s \
+         ({})  |  trajectories vs oracle: {}",
+        if throttling_ok { "PASS" } else { "FAIL" },
+        if trajectories_ok { "PASS" } else { "FAIL" }
+    );
+    let mut j = Json::obj();
+    j.set("bench", jstr("http_serve"));
+    j.set("wave", jstr("mixed"));
+    j.set("clients", jnum(n_clients as f64));
+    j.set("tenants", jnum(5.0));
+    j.set("generated_tokens", jnum(tokens_total as f64));
+    j.set("wall_s", jnum(wave_s));
+    j.set("agg_tok_per_s", jnum(tokens_total as f64 / wave_s.max(1e-12)));
+    j.set("ttft_p50_ms", jnum(ttft.p50 * 1e3));
+    j.set("ttft_p95_ms", jnum(ttft.p95 * 1e3));
+    j.set("ttft_slo_ms", jnum(TTFT_SLO_MS));
+    j.set("throttled_clients", jnum(n_throttled as f64));
+    j.set("throttled_429", jnum(throttled_429 as f64));
+    j.set("trajectories_ok", Json::Bool(trajectories_ok));
+    println!("BENCH {j}");
+    let mixed_json = j;
+
+    // ---- wave 2: graceful drain under load ----------------------------
+    let drain_clients: usize = 6;
+    let drain_max_new = 2 * max_new;
+    eprintln!("[wave 2] drain with {drain_clients} streams in flight…");
+    // Each client signals readiness only after its 200 response head,
+    // which the server writes after the first decode event — so by the
+    // time the drain is requested every sequence is provably running.
+    let (ready_tx, ready_rx) = std::sync::mpsc::channel::<()>();
+    let mut handles = Vec::new();
+    for i in 0..drain_clients {
+        let addr = addr.clone();
+        let ready = ready_tx.clone();
+        handles.push(std::thread::spawn(move || -> anyhow::Result<(usize, bool)> {
+            let (adapter, prompt) = client_request(i);
+            let body = gen_body(adapter.as_deref(), &prompt, drain_max_new, true);
+            let mut c = StreamingClient::post(&addr, "/v1/generate", &body)?;
+            anyhow::ensure!(c.status == 200, "drain client {i}: status {}", c.status);
+            let _ = ready.send(());
+            let mut n_tokens = 0usize;
+            let mut done = false;
+            while let Some(chunk) = c.next_chunk()? {
+                for line in String::from_utf8(chunk)?.lines().filter(|l| !l.is_empty()) {
+                    let j = Json::parse(line)?;
+                    if j.get("token").is_some() {
+                        n_tokens += 1;
+                    } else if j.get("done").is_some() {
+                        done = true;
+                    }
+                }
+            }
+            Ok((n_tokens, done))
+        }));
+    }
+    drop(ready_tx);
+    for _ in 0..drain_clients {
+        ready_rx.recv()?;
+    }
+    let d = http::request(&addr, "POST", "/admin/drain", None)?;
+    anyhow::ensure!(d.status == 200, "drain endpoint: status {}", d.status);
+    let probe = gen_body(None, &[1, 2], 2, false);
+    let refused = http::request(&addr, "POST", "/v1/generate", Some(&probe))?;
+    let post_drain_503 = refused.status == 503;
+    let mut drain_ok = true;
+    let mut drained_tokens = 0usize;
+    for (i, h) in handles.into_iter().enumerate() {
+        let (n_tokens, done) = h.join().expect("drain client thread")?;
+        drained_tokens += n_tokens;
+        if !done || n_tokens != drain_max_new {
+            drain_ok = false;
+            eprintln!("[FAIL] drain client {i}: {n_tokens} tokens, done={done}");
+        }
+    }
+    server.wait_engine_stopped();
+    println!(
+        "drain: {drain_clients} in-flight streams finished with {drained_tokens} tokens, \
+         zero truncation: {}  |  new work refused with 503: {}",
+        if drain_ok { "PASS" } else { "FAIL" },
+        if post_drain_503 { "PASS" } else { "FAIL" }
+    );
+    let mut j = Json::obj();
+    j.set("bench", jstr("http_serve"));
+    j.set("wave", jstr("drain"));
+    j.set("inflight_streams", jnum(drain_clients as f64));
+    j.set("drained_tokens", jnum(drained_tokens as f64));
+    j.set("zero_truncation", Json::Bool(drain_ok));
+    j.set("post_drain_503", Json::Bool(post_drain_503));
+    println!("BENCH {j}");
+    let drain_json = j;
+    server.shutdown()?;
+
+    // ---- summary ------------------------------------------------------
+    let pass = trajectories_ok && slo_ok && throttling_ok && drain_ok && post_drain_503;
+    let mut s = Json::obj();
+    s.set("bench", jstr("http_serve_summary"));
+    s.set("clients", jnum((n_clients + n_throttled) as f64));
+    s.set("trajectories_ok", Json::Bool(trajectories_ok));
+    s.set("ttft_slo_ok", Json::Bool(slo_ok));
+    s.set("throttling_ok", Json::Bool(throttling_ok));
+    s.set("drain_zero_truncation", Json::Bool(drain_ok));
+    s.set("post_drain_503", Json::Bool(post_drain_503));
+    s.set("pass", Json::Bool(pass));
+    println!("BENCH {s}");
+    println!("overall: {}", if pass { "PASS" } else { "FAIL" });
+
+    let mut out = Json::obj();
+    out.set("mixed", mixed_json);
+    out.set("drain", drain_json);
+    out.set("summary", s);
+    let path = common::results_dir().join("http_serve.json");
+    pissa::metrics::write_json(&path, &out)?;
+    println!("(json -> {}; methodology in EXPERIMENTS.md §HTTP serving)", path.display());
+    anyhow::ensure!(pass, "http_serve SLO/fidelity assertions failed");
+    Ok(())
+}

@@ -25,11 +25,11 @@ use std::path::PathBuf;
 fn main() -> Result<()> {
     let args = Args::from_env();
     let config = args.str_or("config", "e2e");
-    let pre_steps = args.usize_or("pretrain-steps", 300);
-    let ft_steps = args.usize_or("steps", 200);
-    let rank = args.usize_or("rank", 8);
-    let n_eval = args.usize_or("n-eval", 64);
-    let seed = args.u64_or("seed", 42);
+    let pre_steps = args.usize_or("pretrain-steps", 300)?;
+    let ft_steps = args.usize_or("steps", 200)?;
+    let rank = args.usize_or("rank", 8)?;
+    let n_eval = args.usize_or("n-eval", 64)?;
+    let seed = args.u64_or("seed", 42)?;
 
     let art = PathBuf::from(args.str_or("artifacts", "artifacts"));
     let manifest = Manifest::load(&art)?;

@@ -18,8 +18,8 @@ use std::path::PathBuf;
 fn main() -> Result<()> {
     let args = Args::from_env();
     let config = args.str_or("config", "tiny");
-    let ranks = args.usize_list_or("ranks", &[2, 4, 8]);
-    let iters_list = args.usize_list_or("iters", &[1, 5]);
+    let ranks = args.usize_list_or("ranks", &[2, 4, 8])?;
+    let iters_list = args.usize_list_or("iters", &[1, 5])?;
 
     let art = PathBuf::from(args.str_or("artifacts", "artifacts"));
     let manifest = Manifest::load(&art)?;

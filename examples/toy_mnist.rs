@@ -11,9 +11,9 @@ use std::path::PathBuf;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
-    let rank = args.usize_or("rank", 4);
-    let steps = args.usize_or("steps", 80);
-    let seed = args.u64_or("seed", 7);
+    let rank = args.usize_or("rank", 4)?;
+    let steps = args.usize_or("steps", 80)?;
+    let seed = args.u64_or("seed", 7)?;
 
     println!("Figure 2a analog: odd-digit pretrain -> even-digit transfer (rank {rank})");
     let (lora, pissa, full) = toy::fig2a_protocol(32, rank, 120, steps, 0.5, seed);

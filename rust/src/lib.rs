@@ -75,7 +75,11 @@
 //! whole-model pipeline [`serve::ModelServer`]: token-id requests run
 //! embed → every layer's seven adapted linears → head logits in one
 //! call, with residency/stats aggregated across the stack (`pissa serve
-//! --full-model`, `benches/model_serve.rs`).
+//! --full-model`, `benches/model_serve.rs`). The [`net`] module puts
+//! the decode path on the wire: a dependency-free threaded HTTP/1.1
+//! front-end over the continuous-batching scheduler, with chunked token
+//! streaming, per-tenant admission control, `/healthz` + `/metrics`,
+//! and graceful drain (`pissa serve --http`, `benches/http_serve.rs`).
 
 pub mod adapter;
 pub mod coordinator;
@@ -84,6 +88,7 @@ pub mod eval;
 pub mod linalg;
 pub mod metrics;
 pub mod model;
+pub mod net;
 pub mod quant;
 pub mod runtime;
 pub mod serve;

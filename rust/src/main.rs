@@ -26,10 +26,10 @@ fn art_dir(args: &Args) -> PathBuf {
     PathBuf::from(args.str_or("artifacts", "artifacts"))
 }
 
-fn main() -> Result<()> {
+fn main() {
     let args = Args::from_env();
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
-    match cmd {
+    let result = match cmd {
         "pretrain" => cmd_pretrain(&args),
         "train" => cmd_train(&args),
         "eval" => cmd_eval(&args),
@@ -42,6 +42,17 @@ fn main() -> Result<()> {
             print_help();
             Ok(())
         }
+    };
+    if let Err(e) = result {
+        // A malformed flag is usage, not a crash: say which flag and how
+        // to get help, and exit with a distinct status.
+        if let Some(bad) = e.downcast_ref::<pissa::util::cli::ArgError>() {
+            eprintln!("pissa: {bad}");
+            eprintln!("run `pissa help` for usage");
+            std::process::exit(2);
+        }
+        eprintln!("pissa: {e:#}");
+        std::process::exit(1);
     }
 }
 
@@ -74,6 +85,12 @@ COMMANDS
                                [--requests 32] [--prompt-len 12]
                                [--max-new 24] [--slots 8] [--max-seq N]
                                [--kv-budget-mb 64])
+               [--http ADDR]  (streaming HTTP front-end over the decode
+                               scheduler: POST /v1/generate with chunked
+                               NDJSON token streaming, GET /healthz,
+                               GET /metrics, graceful drain on SIGTERM;
+                               [--workers 16] [--backlog 64] [--rate 64]
+                               [--burst 128] [--max-inflight 64])
                [--module q] [--layer 0] [--d-model 128]
                [--base-frac 0.125] [--drift 0.05] [--iters 2]
                [--out results/serve_stats.json]
@@ -148,10 +165,10 @@ fn get_or_make_base(
         return load_base(Path::new(path));
     }
     // No checkpoint: quick pre-train so weights have a realistic spectrum.
-    let steps = args.usize_or("pretrain-steps", 120);
+    let steps = args.usize_or("pretrain-steps", 120)?;
     eprintln!("[pissa] no --base given; pre-training {config} for {steps} steps…");
     let (base, hist) =
-        coordinator::pretrain(rt, manifest, config, steps, 2e-3, args.u64_or("seed", 42))?;
+        coordinator::pretrain(rt, manifest, config, steps, 2e-3, args.u64_or("seed", 42)?)?;
     eprintln!(
         "[pissa] pretrain loss {:.3} -> {:.3}",
         hist.first().map(|m| m.loss).unwrap_or(f32::NAN),
@@ -167,8 +184,8 @@ fn spec_from(args: &Args) -> Result<AdapterSpec> {
         return AdapterSpec::parse(s);
     }
     let strategy = Strategy::parse(&args.str_or("strategy", "pissa"))?;
-    let mut spec = AdapterSpec::new(strategy, args.usize_or("rank", 4));
-    spec.iters = args.usize_or("iters", 5);
+    let mut spec = AdapterSpec::new(strategy, args.usize_or("rank", 4)?);
+    spec.iters = args.usize_or("iters", 5)?;
     if let Some(n) = args.get("niter") {
         spec.niter = match n {
             "exact" | "inf" => None,
@@ -194,10 +211,10 @@ fn run_config_from(args: &Args, config: &str) -> Result<RunConfig> {
     Ok(RunConfig {
         config: config.to_string(),
         spec: spec_from(args)?,
-        steps: args.usize_or("steps", 100),
-        peak_lr: args.f64_or("lr", 2e-3),
-        corpus_size: args.usize_or("corpus", 1024),
-        seed: args.u64_or("seed", 42),
+        steps: args.usize_or("steps", 100)?,
+        peak_lr: args.f64_or("lr", 2e-3)?,
+        corpus_size: args.usize_or("corpus", 1024)?,
+        seed: args.u64_or("seed", 42)?,
         task: parse_task(&args.str_or("task", "math"))?,
     })
 }
@@ -207,9 +224,9 @@ fn cmd_pretrain(args: &Args) -> Result<()> {
     let manifest = Manifest::load(&dir)?;
     let rt = Runtime::cpu(&dir)?;
     let config = args.str_or("config", "tiny");
-    let steps = args.usize_or("steps", 200);
-    let lr = args.f64_or("lr", 2e-3);
-    let seed = args.u64_or("seed", 42);
+    let steps = args.usize_or("steps", 200)?;
+    let lr = args.f64_or("lr", 2e-3)?;
+    let seed = args.u64_or("seed", 42)?;
     let (base, hist) = coordinator::pretrain(&rt, &manifest, &config, steps, lr, seed)?;
     println!(
         "pretrained {config}: loss {:.4} -> {:.4} over {steps} steps",
@@ -267,14 +284,14 @@ fn cmd_eval(args: &Args) -> Result<()> {
     // Deterministic retrain (tiny models train in seconds) then score.
     let base = get_or_make_base(args, &rt, &manifest, &config)?;
     let result = coordinator::finetune(&rt, &manifest, &base, &run)?;
-    let n = args.usize_or("n", 48);
+    let n = args.usize_or("n", 48)?;
     let acc = coordinator::evaluate(
         &rt,
         &manifest,
         &run,
         &result.final_state,
         n,
-        args.usize_or("max-new", 48),
+        args.usize_or("max-new", 48)?,
     )?;
     println!(
         "{} {}: accuracy {acc:.2}% over {n} problems",
@@ -291,10 +308,10 @@ fn cmd_quant_error(args: &Args) -> Result<()> {
     let manifest = Manifest::load(&dir)?;
     let rt = Runtime::cpu(&dir)?;
     let config = args.str_or("config", "tiny");
-    let ranks = args.usize_list_or("ranks", &[2, 4, 8]);
-    let iters = args.usize_or("iters", 5);
+    let ranks = args.usize_list_or("ranks", &[2, 4, 8])?;
+    let iters = args.usize_or("iters", 5)?;
     let base = get_or_make_base(args, &rt, &manifest, &config)?;
-    let mut rng = Rng::new(args.u64_or("seed", 7));
+    let mut rng = Rng::new(args.u64_or("seed", 7)?);
 
     println!("quantization-error reduction ratio (%) vs QLoRA  [config={config}, T={iters}]");
     println!("{:8} {:>6} {:>8} {:>8}", "layer", "rank", "loftq", "qpissa");
@@ -388,6 +405,9 @@ fn serve_strategy_from(args: &Args, quantized: bool) -> Result<pissa::serve::Ser
 fn cmd_serve(args: &Args) -> Result<()> {
     use pissa::serve::{drift_factors, Request, Scheduler, ServeConfig, Server};
 
+    if args.has("http") {
+        return cmd_serve_http(args);
+    }
     if args.bool_or("decode", false) {
         return cmd_serve_decode(args);
     }
@@ -395,18 +415,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
         return cmd_serve_full_model(args);
     }
 
-    let d_model = args.usize_or("d-model", 128);
+    let d_model = args.usize_or("d-model", 128)?;
     let module = args.str_or("module", "q");
-    let layer = args.usize_or("layer", 0);
-    let n_adapters = args.usize_or("adapters", 8);
-    let rank = args.usize_or("rank", 8);
-    let batch = args.usize_or("batch", 32);
-    let batches = args.usize_or("batches", 40);
-    let base_frac = args.f64_or("base-frac", 0.125);
-    let drift = args.f64_or("drift", 0.05) as f32;
+    let layer = args.usize_or("layer", 0)?;
+    let n_adapters = args.usize_or("adapters", 8)?;
+    let rank = args.usize_or("rank", 8)?;
+    let batch = args.usize_or("batch", 32)?;
+    let batches = args.usize_or("batches", 40)?;
+    let base_frac = args.f64_or("base-frac", 0.125)?;
+    let drift = args.f64_or("drift", 0.05)? as f32;
     let quantized = args.bool_or("quantized", false);
     let strategy = serve_strategy_from(args, quantized)?;
-    let mut rng = Rng::new(args.u64_or("seed", 42));
+    let mut rng = Rng::new(args.u64_or("seed", 42)?);
 
     let cfg = pissa::runtime::ConfigInfo {
         name: "serve-synth".into(),
@@ -426,7 +446,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // residual, Algorithm-1 alternations) — the configuration the paper
     // says is cheapest to deploy.
     let spec = if quantized {
-        AdapterSpec::qpissa(rank).iters(args.usize_or("iters", 2))
+        AdapterSpec::qpissa(rank).iters(args.usize_or("iters", 2)?)
     } else {
         AdapterSpec::pissa(rank)
     };
@@ -510,28 +530,28 @@ fn cmd_serve_decode(args: &Args) -> Result<()> {
         drift_factors, DecodeScheduler, ModelServer, SeqRequest, ServeConfig,
     };
 
-    let d_model = args.usize_or("d-model", 64);
-    let d_ff = args.usize_or("d-ff", 2 * d_model);
-    let n_layers = args.usize_or("layers", 2);
-    let vocab = args.usize_or("vocab", 64);
+    let d_model = args.usize_or("d-model", 64)?;
+    let d_ff = args.usize_or("d-ff", 2 * d_model)?;
+    let n_layers = args.usize_or("layers", 2)?;
+    let vocab = args.usize_or("vocab", 64)?;
     anyhow::ensure!(vocab >= 2, "--vocab must be >= 2 (need a stop token + content)");
-    let n_adapters = args.usize_or("adapters", 4);
-    let rank = args.usize_or("rank", 4);
-    let requests = args.usize_or("requests", 32);
-    let prompt_len = args.usize_or("prompt-len", 12);
-    let max_new = args.usize_or("max-new", 24);
-    let slots = args.usize_or("slots", 8);
-    let max_seq = args.usize_or("max-seq", (prompt_len + max_new).max(32));
+    let n_adapters = args.usize_or("adapters", 4)?;
+    let rank = args.usize_or("rank", 4)?;
+    let requests = args.usize_or("requests", 32)?;
+    let prompt_len = args.usize_or("prompt-len", 12)?;
+    let max_new = args.usize_or("max-new", 24)?;
+    let slots = args.usize_or("slots", 8)?;
+    let max_seq = args.usize_or("max-seq", (prompt_len + max_new).max(32))?;
     anyhow::ensure!(
         max_seq > prompt_len,
         "--max-seq {max_seq} must exceed --prompt-len {prompt_len} (no room to generate)"
     );
-    let kv_budget = args.usize_or("kv-budget-mb", 64) << 20;
-    let base_frac = args.f64_or("base-frac", 0.125);
-    let drift = args.f64_or("drift", 0.05) as f32;
+    let kv_budget = args.usize_or("kv-budget-mb", 64)? << 20;
+    let base_frac = args.f64_or("base-frac", 0.125)?;
+    let drift = args.f64_or("drift", 0.05)? as f32;
     let quantized = args.bool_or("quantized", false);
     let strategy = serve_strategy_from(args, quantized)?;
-    let mut rng = Rng::new(args.u64_or("seed", 42));
+    let mut rng = Rng::new(args.u64_or("seed", 42)?);
 
     let cfg = pissa::runtime::ConfigInfo {
         name: "serve-decode-synth".into(),
@@ -548,7 +568,7 @@ fn cmd_serve_decode(args: &Args) -> Result<()> {
         ranks: vec![rank],
     };
     let spec = if quantized {
-        AdapterSpec::qpissa(rank).iters(args.usize_or("iters", 2))
+        AdapterSpec::qpissa(rank).iters(args.usize_or("iters", 2)?)
     } else {
         AdapterSpec::pissa(rank)
     };
@@ -634,6 +654,102 @@ fn cmd_serve_decode(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `pissa serve --http [addr]`: put the decode path on the wire. Builds
+/// the same synthetic multi-tenant engine as `--decode`, then serves it
+/// over the dependency-free HTTP/1.1 front-end: `POST /v1/generate` with
+/// chunked NDJSON token streaming, per-tenant token-bucket admission
+/// control, `GET /healthz` + `GET /metrics`, and graceful drain on
+/// SIGTERM/SIGINT (stop admitting, finish running sequences, flush
+/// streams, exit).
+fn cmd_serve_http(args: &Args) -> Result<()> {
+    use pissa::net::{NetConfig, NetServer, TenantPolicy};
+    use pissa::serve::{drift_factors, ServeConfig};
+
+    let addr = match args.str_or("http", "127.0.0.1:8080").as_str() {
+        // Bare `--http` parses as a boolean flag; fall back to the default.
+        "true" => "127.0.0.1:8080".to_string(),
+        a => a.to_string(),
+    };
+    let d_model = args.usize_or("d-model", 64)?;
+    let d_ff = args.usize_or("d-ff", 2 * d_model)?;
+    let n_layers = args.usize_or("layers", 2)?;
+    let vocab = args.usize_or("vocab", 64)?;
+    anyhow::ensure!(vocab >= 2, "--vocab must be >= 2 (need a stop token + content)");
+    let n_adapters = args.usize_or("adapters", 4)?;
+    let rank = args.usize_or("rank", 4)?;
+    let slots = args.usize_or("slots", 8)?;
+    let max_seq = args.usize_or("max-seq", 64)?;
+    let kv_budget = args.usize_or("kv-budget-mb", 64)? << 20;
+    let drift = args.f64_or("drift", 0.05)? as f32;
+    let quantized = args.bool_or("quantized", false);
+    let strategy = serve_strategy_from(args, quantized)?;
+    let mut rng = Rng::new(args.u64_or("seed", 42)?);
+
+    let cfg = pissa::runtime::ConfigInfo {
+        name: "serve-http-synth".into(),
+        kind: "decoder".into(),
+        vocab,
+        d_model,
+        n_layers,
+        n_heads: 2,
+        d_ff,
+        seq_len: 8,
+        batch: 8,
+        eval_batch: 4,
+        n_classes: 0,
+        ranks: vec![rank],
+    };
+    let spec = if quantized {
+        AdapterSpec::qpissa(rank).iters(args.usize_or("iters", 2)?)
+    } else {
+        AdapterSpec::pissa(rank)
+    };
+    eprintln!(
+        "[serve] building {n_layers}-layer base (d={d_model}, f={d_ff}) + {n_adapters} \
+         {spec} adapters for HTTP serving ({slots} slots, max_seq {max_seq})…"
+    );
+    let base = pissa::model::BaseModel::random(&cfg, &mut rng);
+    let mut engine = pissa::adapter::AdapterEngine::new(base);
+    let names: Vec<String> = (0..n_adapters).map(|i| format!("tenant{i:02}")).collect();
+    for name in &names {
+        engine.attach(name, spec.clone(), &mut rng)?;
+        for module in pissa::model::LINEARS {
+            drift_factors(&mut engine, name, module, drift, &mut rng)?;
+        }
+    }
+
+    let serve_cfg = ServeConfig::full_model()
+        .strategy(strategy)
+        .max_seq(max_seq)
+        .slots(slots)
+        .kv_budget_bytes(kv_budget);
+    let net_cfg = NetConfig {
+        addr,
+        workers: args.usize_or("workers", 16)?,
+        accept_backlog: args.usize_or("backlog", 64)?,
+        default_policy: TenantPolicy {
+            rate_per_s: args.f64_or("rate", 64.0)?,
+            burst: args.f64_or("burst", 128.0)?,
+            max_inflight: args.usize_or("max-inflight", 64)?,
+        },
+        handle_signals: true,
+        ..NetConfig::default()
+    };
+    let server = NetServer::start(&engine, serve_cfg, net_cfg)?;
+    let bound = server.addr();
+    println!("listening on http://{bound} ({n_adapters} tenants: {:?})", names);
+    println!("  curl -s http://{bound}/healthz");
+    println!(
+        "  curl -sN http://{bound}/v1/generate \\\n       \
+         -d '{{\"adapter\":\"tenant00\",\"prompt\":[1,2,3],\"max_new\":8}}'"
+    );
+    println!("  curl -s http://{bound}/metrics");
+    println!("SIGTERM/SIGINT drains gracefully: running sequences finish, streams flush.");
+    server.wait_engine_stopped();
+    eprintln!("[serve] drain complete; shutting down");
+    server.shutdown()
+}
+
 /// `pissa serve --full-model`: the whole-model pipeline on a synthetic
 /// mixed-tenant workload. Every tenant adapts ALL seven linears of every
 /// layer (the paper's fine-tuning shape); token-id requests stream
@@ -642,20 +758,20 @@ fn cmd_serve_decode(args: &Args) -> Result<()> {
 fn cmd_serve_full_model(args: &Args) -> Result<()> {
     use pissa::serve::{drift_factors, ModelRequest, ModelServer, Scheduler, ServeConfig};
 
-    let d_model = args.usize_or("d-model", 64);
-    let d_ff = args.usize_or("d-ff", 2 * d_model);
-    let n_layers = args.usize_or("layers", 2);
-    let vocab = args.usize_or("vocab", 64);
+    let d_model = args.usize_or("d-model", 64)?;
+    let d_ff = args.usize_or("d-ff", 2 * d_model)?;
+    let n_layers = args.usize_or("layers", 2)?;
+    let vocab = args.usize_or("vocab", 64)?;
     anyhow::ensure!(vocab >= 1, "--vocab must be >= 1 (token ids index the embedding table)");
-    let n_adapters = args.usize_or("adapters", 4);
-    let rank = args.usize_or("rank", 4);
-    let batch = args.usize_or("batch", 32);
-    let batches = args.usize_or("batches", 20);
-    let base_frac = args.f64_or("base-frac", 0.125);
-    let drift = args.f64_or("drift", 0.05) as f32;
+    let n_adapters = args.usize_or("adapters", 4)?;
+    let rank = args.usize_or("rank", 4)?;
+    let batch = args.usize_or("batch", 32)?;
+    let batches = args.usize_or("batches", 20)?;
+    let base_frac = args.f64_or("base-frac", 0.125)?;
+    let drift = args.f64_or("drift", 0.05)? as f32;
     let quantized = args.bool_or("quantized", false);
     let strategy = serve_strategy_from(args, quantized)?;
-    let mut rng = Rng::new(args.u64_or("seed", 42));
+    let mut rng = Rng::new(args.u64_or("seed", 42)?);
 
     let cfg = pissa::runtime::ConfigInfo {
         name: "serve-full-synth".into(),
@@ -672,7 +788,7 @@ fn cmd_serve_full_model(args: &Args) -> Result<()> {
         ranks: vec![rank],
     };
     let spec = if quantized {
-        AdapterSpec::qpissa(rank).iters(args.usize_or("iters", 2))
+        AdapterSpec::qpissa(rank).iters(args.usize_or("iters", 2)?)
     } else {
         AdapterSpec::pissa(rank)
     };
@@ -751,10 +867,11 @@ fn cmd_serve_full_model(args: &Args) -> Result<()> {
 }
 
 fn cmd_toy(args: &Args) -> Result<()> {
-    let rank = args.usize_or("rank", 4);
-    let steps = args.usize_or("steps", 60);
+    let rank = args.usize_or("rank", 4)?;
+    let steps = args.usize_or("steps", 60)?;
+    let seed = args.u64_or("seed", 7)?;
     let (lora_l, pissa_l, full_l) =
-        pissa::coordinator::toy::fig2a_protocol(32, rank, 100, steps, 0.5, args.u64_or("seed", 7));
+        pissa::coordinator::toy::fig2a_protocol(32, rank, 100, steps, 0.5, seed);
     println!("Figure 2a analog — fine-tune loss on even digits (rank {rank})");
     println!("{:>6} {:>10} {:>10} {:>10}", "step", "lora", "pissa", "full-ft");
     for i in (0..steps).step_by((steps / 12).max(1)) {

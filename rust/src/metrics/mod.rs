@@ -51,11 +51,28 @@ impl JsonlSink {
 
 /// Write one JSON document to a file (the serving runtime exports its
 /// [`crate::serve::ServeStats`] snapshot through this).
+///
+/// Atomic: the document lands in a unique temp file in the target
+/// directory and is `rename(2)`d into place, so a concurrent reader (an
+/// HTTP `/metrics` scrape, a bench harness tailing results/) observes
+/// either the old snapshot or the new one — never a torn half-write.
 pub fn write_json(path: &Path, j: &Json) -> anyhow::Result<()> {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static SEQ: AtomicU64 = AtomicU64::new(0);
     if let Some(dir) = path.parent() {
         std::fs::create_dir_all(dir)?;
     }
-    std::fs::write(path, format!("{j}\n"))?;
+    let name = path.file_name().and_then(|n| n.to_str()).unwrap_or("out.json");
+    let tmp = path.with_file_name(format!(
+        ".{name}.{}.{}.tmp",
+        std::process::id(),
+        SEQ.fetch_add(1, Ordering::Relaxed)
+    ));
+    std::fs::write(&tmp, format!("{j}\n"))?;
+    if let Err(e) = std::fs::rename(&tmp, path) {
+        let _ = std::fs::remove_file(&tmp);
+        return Err(e.into());
+    }
     Ok(())
 }
 
@@ -164,6 +181,26 @@ mod tests {
         let text = std::fs::read_to_string(&path).unwrap();
         let back = Json::parse(&text).unwrap();
         assert_eq!(back.get("req_per_s").and_then(|v| v.as_f64()), Some(123.5));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn write_json_is_atomic_replace_with_no_temp_residue() {
+        let dir = std::env::temp_dir().join("pissa_write_json_atomic_test");
+        std::fs::remove_dir_all(&dir).ok();
+        let path = dir.join("snap.json");
+        let mut a = Json::obj();
+        a.set("v", jnum(1.0));
+        write_json(&path, &a).unwrap();
+        let mut b = Json::obj();
+        b.set("v", jnum(2.0));
+        // Overwrite via rename; the old content is fully replaced.
+        write_json(&path, &b).unwrap();
+        let back = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(back.get("v").and_then(|v| v.as_f64()), Some(2.0));
+        // Exactly one entry in the directory: no .tmp files left behind.
+        let entries: Vec<_> = std::fs::read_dir(&dir).unwrap().collect();
+        assert_eq!(entries.len(), 1, "temp residue: {entries:?}");
         std::fs::remove_dir_all(&dir).ok();
     }
 

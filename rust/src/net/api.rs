@@ -1,0 +1,356 @@
+//! The wire API: typed request parsing/validation and response shapes.
+//!
+//! One endpoint does the work — `POST /v1/generate` with a JSON body:
+//!
+//! ```json
+//! {"adapter": "tenant00", "prompt": [1, 2, 3], "max_new": 16,
+//!  "stop": 7, "stream": true}
+//! ```
+//!
+//! `adapter` omitted/null targets the frozen base. Streaming responses
+//! are NDJSON over chunked transfer-encoding: a meta line, one line per
+//! token (`{"first":true,"token":5}`), and a final done line carrying
+//! the whole trajectory. Non-streaming responses return the done object
+//! alone. Errors are always `{"error":{"code":...,"message":...}}` with
+//! the status code mirroring [`ServeError::http_status`].
+
+use crate::serve::{FinishReason, FinishedSeq, ServeError};
+use crate::util::json::{jarr, jnum, jstr, Json};
+use std::collections::BTreeSet;
+
+/// A typed wire-level error: HTTP status + machine-readable code.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ApiError {
+    pub status: u16,
+    pub code: &'static str,
+    pub message: String,
+    /// Seconds the client should wait before retrying (429/503 only).
+    pub retry_after_s: Option<f64>,
+}
+
+impl ApiError {
+    pub fn new(status: u16, code: &'static str, message: impl Into<String>) -> ApiError {
+        ApiError { status, code, message: message.into(), retry_after_s: None }
+    }
+
+    pub fn retry_after(mut self, secs: f64) -> ApiError {
+        self.retry_after_s = Some(secs);
+        self
+    }
+
+    /// The response body: `{"error":{"code":...,"message":...}}`.
+    pub fn to_json(&self) -> Json {
+        let mut e = Json::obj();
+        e.set("code", jstr(self.code));
+        e.set("message", jstr(&self.message));
+        if let Some(s) = self.retry_after_s {
+            e.set("retry_after_s", jnum(s));
+        }
+        let mut o = Json::obj();
+        o.set("error", e);
+        o
+    }
+}
+
+/// Map an engine-side failure to the wire. [`ServeError`]s keep their
+/// typed status/code; anything else (empty prompt, admission context)
+/// is classified by message, defaulting to a 400.
+pub fn classify(err: &anyhow::Error) -> ApiError {
+    if let Some(se) = err.downcast_ref::<ServeError>() {
+        let mut api = ApiError::new(se.http_status(), se.code(), se.to_string());
+        if api.status == 503 {
+            api = api.retry_after(1.0);
+        }
+        return api;
+    }
+    let msg = format!("{err:#}");
+    if msg.contains("empty prompt") {
+        ApiError::new(422, "empty_prompt", msg)
+    } else {
+        ApiError::new(400, "bad_request", msg)
+    }
+}
+
+/// What the validator needs to know about the engine: fixed at server
+/// start (attach/detach during serving is out of scope for this PR).
+#[derive(Clone, Debug)]
+pub struct ApiContext {
+    pub vocab: usize,
+    pub max_seq: usize,
+    pub adapters: BTreeSet<String>,
+}
+
+/// A validated `/v1/generate` request.
+#[derive(Clone, Debug, PartialEq)]
+pub struct GenerateRequest {
+    pub adapter: Option<String>,
+    pub prompt: Vec<usize>,
+    pub max_new: usize,
+    pub stop_token: Option<usize>,
+    pub stream: bool,
+}
+
+/// Default `max_new` when the body omits it.
+pub const DEFAULT_MAX_NEW: usize = 16;
+
+/// Parse + validate a `/v1/generate` body against the engine's shape.
+/// Every rejection is a typed [`ApiError`] — the caller turns it into
+/// the response verbatim.
+pub fn parse_generate(body: &[u8], ctx: &ApiContext) -> Result<GenerateRequest, ApiError> {
+    let text = std::str::from_utf8(body)
+        .map_err(|e| ApiError::new(400, "bad_json", format!("body is not UTF-8: {e}")))?;
+    let j = Json::parse(text)
+        .map_err(|e| ApiError::new(400, "bad_json", format!("body is not valid JSON: {e}")))?;
+    if j.as_obj().is_none() {
+        return Err(ApiError::new(400, "bad_json", "body must be a JSON object"));
+    }
+
+    let adapter = match j.get("adapter") {
+        None | Some(Json::Null) => None,
+        Some(Json::Str(s)) => Some(s.clone()),
+        Some(_) => {
+            return Err(ApiError::new(400, "bad_request", "'adapter' must be a string or null"))
+        }
+    };
+    if let Some(name) = &adapter {
+        if !ctx.adapters.contains(name) {
+            return Err(ApiError::new(
+                404,
+                "unknown_adapter",
+                format!("no adapter named '{name}' (have: {:?})", ctx.adapters),
+            ));
+        }
+    }
+
+    let prompt_j = j
+        .get("prompt")
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| ApiError::new(400, "bad_request", "'prompt' must be an array of ints"))?;
+    if prompt_j.is_empty() {
+        return Err(ApiError::new(422, "empty_prompt", "a generation needs >= 1 prompt token"));
+    }
+    let mut prompt = Vec::with_capacity(prompt_j.len());
+    for (i, v) in prompt_j.iter().enumerate() {
+        let n = v.as_f64().ok_or_else(|| {
+            ApiError::new(400, "bad_request", format!("prompt[{i}] is not a number"))
+        })?;
+        if n.fract() != 0.0 || n < 0.0 {
+            return Err(ApiError::new(
+                400,
+                "bad_request",
+                format!("prompt[{i}] = {n} is not a nonnegative integer"),
+            ));
+        }
+        let t = n as usize;
+        if t >= ctx.vocab {
+            return Err(ApiError::new(
+                422,
+                "token_out_of_range",
+                format!("prompt[{i}] = {t} out of range (vocab = {})", ctx.vocab),
+            ));
+        }
+        prompt.push(t);
+    }
+
+    let max_new = match j.get("max_new") {
+        None => DEFAULT_MAX_NEW,
+        Some(v) => {
+            let n = v.as_f64().filter(|n| n.fract() == 0.0 && *n >= 0.0).ok_or_else(|| {
+                ApiError::new(400, "bad_request", "'max_new' must be a nonnegative integer")
+            })?;
+            n as usize
+        }
+    };
+    if prompt.len() + max_new > ctx.max_seq {
+        return Err(ApiError::new(
+            422,
+            "seq_too_long",
+            format!(
+                "{} prompt + {max_new} max_new exceeds max_seq = {}",
+                prompt.len(),
+                ctx.max_seq
+            ),
+        ));
+    }
+
+    let stop_token = match j.get("stop") {
+        None | Some(Json::Null) => None,
+        Some(v) => Some(
+            v.as_f64()
+                .filter(|n| n.fract() == 0.0 && *n >= 0.0 && (*n as usize) < ctx.vocab)
+                .map(|n| n as usize)
+                .ok_or_else(|| {
+                    ApiError::new(400, "bad_request", "'stop' must be an in-vocab token id")
+                })?,
+        ),
+    };
+
+    let stream = match j.get("stream") {
+        None => true,
+        Some(Json::Bool(b)) => *b,
+        Some(_) => return Err(ApiError::new(400, "bad_request", "'stream' must be a boolean")),
+    };
+
+    Ok(GenerateRequest { adapter, prompt, max_new, stop_token, stream })
+}
+
+/// Wire name of a finish reason.
+pub fn reason_name(reason: FinishReason) -> &'static str {
+    match reason {
+        FinishReason::StopToken => "stop_token",
+        FinishReason::MaxNew => "max_new",
+    }
+}
+
+/// The stream's opening meta line.
+pub fn meta_line(id: u64, adapter: Option<&str>) -> Json {
+    let mut o = Json::obj();
+    o.set("seq", jnum(id as f64));
+    o.set("adapter", adapter.map(jstr).unwrap_or(Json::Null));
+    o
+}
+
+/// One streamed token line.
+pub fn token_line(token: usize, first: bool) -> Json {
+    let mut o = Json::obj();
+    o.set("first", Json::Bool(first));
+    o.set("token", jnum(token as f64));
+    o
+}
+
+/// The terminal done object (also the whole body when not streaming).
+pub fn done_line(f: &FinishedSeq) -> Json {
+    let mut o = Json::obj();
+    o.set("done", Json::Bool(true));
+    o.set("seq", jnum(f.id.raw() as f64));
+    o.set("adapter", f.adapter.as_deref().map(jstr).unwrap_or(Json::Null));
+    o.set("reason", jstr(reason_name(f.reason)));
+    o.set("prompt_len", jnum(f.prompt_len as f64));
+    o.set("tokens", jarr(f.generated().iter().map(|&t| jnum(t as f64))));
+    o
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx() -> ApiContext {
+        ApiContext {
+            vocab: 16,
+            max_seq: 24,
+            adapters: ["t0".to_string(), "t1".to_string()].into_iter().collect(),
+        }
+    }
+
+    fn parse(body: &str) -> Result<GenerateRequest, ApiError> {
+        parse_generate(body.as_bytes(), &ctx())
+    }
+
+    #[test]
+    fn parses_a_full_request() {
+        let r = parse(r#"{"adapter":"t0","prompt":[1,2,3],"max_new":4,"stop":7,"stream":false}"#)
+            .unwrap();
+        assert_eq!(r.adapter.as_deref(), Some("t0"));
+        assert_eq!(r.prompt, vec![1, 2, 3]);
+        assert_eq!(r.max_new, 4);
+        assert_eq!(r.stop_token, Some(7));
+        assert!(!r.stream);
+    }
+
+    #[test]
+    fn defaults_base_adapter_streaming_and_max_new() {
+        let r = parse(r#"{"prompt":[0]}"#).unwrap();
+        assert_eq!(r.adapter, None);
+        assert_eq!(r.max_new, DEFAULT_MAX_NEW);
+        assert_eq!(r.stop_token, None);
+        assert!(r.stream);
+        let r2 = parse(r#"{"adapter":null,"prompt":[0]}"#).unwrap();
+        assert_eq!(r2.adapter, None);
+    }
+
+    #[test]
+    fn typed_rejections() {
+        // (body, want_status, want_code)
+        for (body, status, code) in [
+            ("{", 400, "bad_json"),
+            ("[1,2]", 400, "bad_json"),
+            (r#"{"adapter":"ghost","prompt":[1]}"#, 404, "unknown_adapter"),
+            (r#"{"adapter":7,"prompt":[1]}"#, 400, "bad_request"),
+            (r#"{"prompt":[]}"#, 422, "empty_prompt"),
+            (r#"{"prompt":"hi"}"#, 400, "bad_request"),
+            (r#"{"prompt":[1.5]}"#, 400, "bad_request"),
+            (r#"{"prompt":[-1]}"#, 400, "bad_request"),
+            (r#"{"prompt":[99]}"#, 422, "token_out_of_range"),
+            (r#"{"prompt":[1],"max_new":99}"#, 422, "seq_too_long"),
+            (r#"{"prompt":[1],"max_new":-2}"#, 400, "bad_request"),
+            (r#"{"prompt":[1],"stop":99}"#, 400, "bad_request"),
+            (r#"{"prompt":[1],"stream":"yes"}"#, 400, "bad_request"),
+        ] {
+            let e = parse(body).unwrap_err();
+            assert_eq!((e.status, e.code), (status, code), "body={body}");
+        }
+    }
+
+    #[test]
+    fn seq_budget_counts_prompt_plus_max_new() {
+        // 20 prompt + 4 max_new == max_seq = 24: admissible.
+        let tokens: Vec<String> = (0..20).map(|i| (i % 16).to_string()).collect();
+        let body = format!("{{\"prompt\":[{}],\"max_new\":4}}", tokens.join(","));
+        assert!(parse(&body).is_ok());
+        let body = format!("{{\"prompt\":[{}],\"max_new\":5}}", tokens.join(","));
+        assert_eq!(parse(&body).unwrap_err().code, "seq_too_long");
+    }
+
+    #[test]
+    fn classify_maps_serve_errors_and_preserves_types() {
+        let se = ServeError::UnknownAdapter { name: "g".into(), have: vec![] };
+        let api = classify(&anyhow::Error::new(se));
+        assert_eq!((api.status, api.code), (404, "unknown_adapter"));
+
+        let se = ServeError::CacheBudgetExhausted { needed_bytes: 9, budget_bytes: 1 };
+        let api = classify(&anyhow::Error::new(se));
+        assert_eq!(api.status, 503);
+        assert_eq!(api.retry_after_s, Some(1.0));
+
+        let plain = anyhow::anyhow!("seq SeqId(0): empty prompt (a generation needs >= 1 token)");
+        assert_eq!(classify(&plain).code, "empty_prompt");
+        assert_eq!(classify(&anyhow::anyhow!("weird")).status, 400);
+    }
+
+    #[test]
+    fn error_body_shape_and_retry_after() {
+        let e = ApiError::new(429, "rate_limited", "slow down").retry_after(2.5);
+        let j = e.to_json();
+        let inner = j.get("error").unwrap();
+        assert_eq!(inner.get("code").and_then(|v| v.as_str()), Some("rate_limited"));
+        assert_eq!(inner.get("retry_after_s").and_then(|v| v.as_f64()), Some(2.5));
+    }
+
+    #[test]
+    fn stream_lines_have_the_documented_shape() {
+        let m = meta_line(3, Some("t0")).to_string();
+        assert!(m.contains("\"seq\":3") && m.contains("\"adapter\":\"t0\""), "{m}");
+        let t = token_line(5, true).to_string();
+        assert!(t.contains("\"first\":true") && t.contains("\"token\":5"), "{t}");
+        let f = FinishedSeq {
+            id: seq_id_for_test(7),
+            adapter: None,
+            prompt_len: 2,
+            tokens: vec![1, 2, 9, 4],
+            reason: FinishReason::MaxNew,
+        };
+        let d = done_line(&f).to_string();
+        assert!(d.contains("\"done\":true") && d.contains("\"tokens\":[9,4]"), "{d}");
+        assert!(d.contains("\"reason\":\"max_new\"") && d.contains("\"seq\":7"), "{d}");
+    }
+
+    /// `SeqId` has no public constructor; route through a scheduler.
+    fn seq_id_for_test(n: u64) -> crate::serve::SeqId {
+        let mut s = crate::serve::DecodeScheduler::new();
+        let mut id = s.submit(crate::serve::SeqRequest::base(vec![0], 1));
+        for _ in 0..n {
+            id = s.submit(crate::serve::SeqRequest::base(vec![0], 1));
+        }
+        id
+    }
+}

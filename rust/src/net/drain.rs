@@ -1,0 +1,204 @@
+//! Graceful-drain lifecycle for the HTTP front-end.
+//!
+//! A serving process moves through three phases: `Running` (admitting
+//! new work), `Draining` (new requests are rejected with 503 while
+//! everything already admitted runs to completion and its stream is
+//! flushed), and `Stopped` (the engine thread has exited). The phase
+//! lives in one [`DrainState`] shared by the listener, every connection
+//! worker, the engine thread, and the optional SIGTERM/SIGINT watcher —
+//! a single atomic so a phase check never takes a lock on the hot path.
+
+use std::sync::atomic::{AtomicBool, AtomicU8, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Server lifecycle phase.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// Admitting new requests.
+    Running,
+    /// Rejecting new requests (503 + `Retry-After`); in-flight sequences
+    /// run to completion and their streams are flushed.
+    Draining,
+    /// The engine thread has exited; nothing is in flight.
+    Stopped,
+}
+
+impl Phase {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Phase::Running => "running",
+            Phase::Draining => "draining",
+            Phase::Stopped => "stopped",
+        }
+    }
+}
+
+const RUNNING: u8 = 0;
+const DRAINING: u8 = 1;
+const STOPPED: u8 = 2;
+
+/// Shared drain coordination: the phase atomic plus a condvar the engine
+/// thread signals when it exits (so `shutdown` can wait without
+/// spinning).
+#[derive(Debug)]
+pub struct DrainState {
+    phase: AtomicU8,
+    engine_stopped: Mutex<bool>,
+    cv: Condvar,
+}
+
+impl Default for DrainState {
+    fn default() -> Self {
+        DrainState::new()
+    }
+}
+
+impl DrainState {
+    pub fn new() -> DrainState {
+        DrainState {
+            phase: AtomicU8::new(RUNNING),
+            engine_stopped: Mutex::new(false),
+            cv: Condvar::new(),
+        }
+    }
+
+    pub fn phase(&self) -> Phase {
+        match self.phase.load(Ordering::Acquire) {
+            RUNNING => Phase::Running,
+            DRAINING => Phase::Draining,
+            _ => Phase::Stopped,
+        }
+    }
+
+    /// Still admitting new requests?
+    pub fn accepting(&self) -> bool {
+        self.phase.load(Ordering::Acquire) == RUNNING
+    }
+
+    /// Move `Running` → `Draining`. Returns `true` if THIS call made the
+    /// transition (idempotent: later calls and calls after `Stopped` are
+    /// no-ops returning `false`).
+    pub fn begin_drain(&self) -> bool {
+        self.phase
+            .compare_exchange(RUNNING, DRAINING, Ordering::AcqRel, Ordering::Acquire)
+            .is_ok()
+    }
+
+    /// The engine thread announces it has exited: phase becomes
+    /// `Stopped` and every `wait_engine_stopped` waiter wakes.
+    pub fn mark_engine_stopped(&self) {
+        self.phase.store(STOPPED, Ordering::Release);
+        let mut stopped = self.engine_stopped.lock().expect("drain lock");
+        *stopped = true;
+        self.cv.notify_all();
+    }
+
+    /// Block until the engine thread has exited (drain complete).
+    pub fn wait_engine_stopped(&self) {
+        let mut stopped = self.engine_stopped.lock().expect("drain lock");
+        while !*stopped {
+            stopped = self.cv.wait(stopped).expect("drain lock");
+        }
+    }
+}
+
+/// Process-global "a termination signal arrived" flag, set by the raw
+/// signal handler below (a handler can do nothing more elaborate than a
+/// relaxed atomic store).
+static SIGNALED: AtomicBool = AtomicBool::new(false);
+
+/// Has SIGTERM/SIGINT been delivered since [`install_signal_handlers`]?
+pub fn termination_signaled() -> bool {
+    SIGNALED.load(Ordering::Relaxed)
+}
+
+#[cfg(unix)]
+mod sys {
+    use super::SIGNALED;
+    use std::sync::atomic::Ordering;
+
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+
+    extern "C" {
+        // POSIX signal(2); the libc crate is not in the vendor set, so
+        // declare the single symbol we need.
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+
+    extern "C" fn on_signal(_sig: i32) {
+        SIGNALED.store(true, Ordering::Relaxed);
+    }
+
+    pub fn install() {
+        let h = on_signal as extern "C" fn(i32) as usize;
+        unsafe {
+            signal(SIGTERM, h);
+            signal(SIGINT, h);
+        }
+    }
+}
+
+#[cfg(not(unix))]
+mod sys {
+    pub fn install() {}
+}
+
+/// Route SIGTERM/SIGINT into [`termination_signaled`] (no-op off unix).
+/// The server pairs this with a watcher thread that polls the flag and
+/// calls [`DrainState::begin_drain`] — the handler itself only flips an
+/// atomic, which is all that is async-signal-safe.
+pub fn install_signal_handlers() {
+    sys::install()
+}
+
+/// Spawn the watcher thread: poll [`termination_signaled`] and begin the
+/// drain the moment it fires. Exits once the drain has started (for any
+/// reason, signal or programmatic).
+pub fn spawn_signal_watcher(drain: Arc<DrainState>) -> std::thread::JoinHandle<()> {
+    std::thread::spawn(move || loop {
+        if termination_signaled() {
+            drain.begin_drain();
+            return;
+        }
+        if drain.phase() != Phase::Running {
+            return;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(25));
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phase_transitions_are_one_way_and_idempotent() {
+        let d = DrainState::new();
+        assert_eq!(d.phase(), Phase::Running);
+        assert!(d.accepting());
+        assert!(d.begin_drain());
+        assert_eq!(d.phase(), Phase::Draining);
+        assert!(!d.accepting());
+        // Second drain call is a no-op.
+        assert!(!d.begin_drain());
+        d.mark_engine_stopped();
+        assert_eq!(d.phase(), Phase::Stopped);
+        // Draining after stop does not resurrect the server.
+        assert!(!d.begin_drain());
+        assert_eq!(d.phase(), Phase::Stopped);
+        assert_eq!(Phase::Stopped.name(), "stopped");
+    }
+
+    #[test]
+    fn wait_engine_stopped_wakes_on_mark() {
+        let d = Arc::new(DrainState::new());
+        let d2 = Arc::clone(&d);
+        let waiter = std::thread::spawn(move || d2.wait_engine_stopped());
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        d.mark_engine_stopped();
+        waiter.join().expect("waiter thread");
+        // Waiting after the fact returns immediately.
+        d.wait_engine_stopped();
+    }
+}

@@ -1,0 +1,217 @@
+//! The dedicated batching thread that owns the model.
+//!
+//! Connection workers never touch the `ModelServer` — they talk to ONE
+//! engine thread over an mpsc channel. The engine loop interleaves
+//! command intake (submit/metrics/health) with continuous-batching
+//! [`DecodeScheduler::step_observed`] calls, forwarding every sampled
+//! token to the submitting connection's [`StreamEvent`] channel the
+//! moment it exists. This is the decoupling the front-end is built on:
+//! slow clients block their own socket, never the batch loop (token
+//! sends are non-blocking onto an unbounded per-request channel), and
+//! the engine admits across tenants in strict arrival order.
+
+use super::api::{classify, ApiError};
+use super::drain::DrainState;
+use crate::serve::{
+    DecodeScheduler, FinishedSeq, KvCache, ModelServer, SeqId, SeqRequest, StepObserver,
+};
+use crate::util::json::{jnum, jstr, Json};
+use std::collections::HashMap;
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Per-request stream events, in emission order: zero or more `Token`s
+/// then exactly one terminal `Done`/`Error`.
+#[derive(Clone, Debug)]
+pub enum StreamEvent {
+    Token { token: usize, first: bool },
+    Done { finished: FinishedSeq },
+    Error(ApiError),
+}
+
+/// Commands into the engine thread.
+pub enum EngineMsg {
+    /// Run one generation; every event goes back through `events`.
+    Submit { req: SeqRequest, events: Sender<StreamEvent> },
+    /// Snapshot `/metrics` (serve stats + residency + queue depths).
+    Metrics { reply: Sender<Json> },
+    /// Snapshot `/healthz`.
+    Health { reply: Sender<Json> },
+}
+
+/// How long the idle engine parks in `recv_timeout` before re-checking
+/// the drain flag.
+const IDLE_WAIT: Duration = Duration::from_millis(20);
+
+struct EventObserver<'a> {
+    streams: &'a mut HashMap<SeqId, Sender<StreamEvent>>,
+    rejected: Vec<(SeqId, ApiError)>,
+}
+
+impl StepObserver for EventObserver<'_> {
+    fn on_token(&mut self, id: SeqId, token: usize, first: bool) {
+        if let Some(tx) = self.streams.get(&id) {
+            // A hung-up client is its own problem; the batch moves on.
+            let _ = tx.send(StreamEvent::Token { token, first });
+        }
+    }
+
+    fn on_reject(&mut self, id: SeqId, err: &anyhow::Error) {
+        self.rejected.push((id, classify(err)));
+    }
+}
+
+/// Everything the engine thread owns.
+struct Engine {
+    server: ModelServer,
+    cache: KvCache,
+    sched: DecodeScheduler,
+    streams: HashMap<SeqId, Sender<StreamEvent>>,
+    drain: Arc<DrainState>,
+}
+
+impl Engine {
+    fn handle(&mut self, msg: EngineMsg) {
+        match msg {
+            EngineMsg::Submit { req, events } => {
+                // The HTTP layer checks the drain flag before submitting,
+                // but the race (drain begins while a submit is in the
+                // channel) lands here: refuse rather than admit.
+                if !self.drain.accepting() {
+                    let api = ApiError::new(503, "draining", "server is draining").retry_after(1.0);
+                    let _ = events.send(StreamEvent::Error(api));
+                    return;
+                }
+                let id = self.sched.submit(req);
+                self.streams.insert(id, events);
+            }
+            EngineMsg::Metrics { reply } => {
+                let _ = reply.send(self.metrics_json());
+            }
+            EngineMsg::Health { reply } => {
+                let _ = reply.send(self.health_json());
+            }
+        }
+    }
+
+    /// Serve stats + residency + live queue depths.
+    fn metrics_json(&self) -> Json {
+        let mut o = self.server.stats().to_json();
+        o.set("resident", self.server.resident_breakdown_with_cache(&self.cache).to_json());
+        o.set("pending_seqs", jnum(self.sched.pending() as f64));
+        o.set("running_seqs", jnum(self.sched.running() as f64));
+        o
+    }
+
+    /// Readiness: engine loop alive + still admitting + KV pages free.
+    fn health_json(&self) -> Json {
+        let free = self.cache.free_slots();
+        let ready = self.drain.accepting() && free > 0;
+        let mut o = Json::obj();
+        o.set("ready", Json::Bool(ready));
+        o.set("phase", jstr(self.drain.phase().name()));
+        o.set("slots", jnum(self.cache.slots() as f64));
+        o.set("free_slots", jnum(free as f64));
+        o.set("kv_reserved_bytes", jnum(self.cache.reserved_bytes() as f64));
+        o.set("kv_budget_bytes", jnum(self.cache.budget_bytes() as f64));
+        o.set("pending_seqs", jnum(self.sched.pending() as f64));
+        o.set("running_seqs", jnum(self.sched.running() as f64));
+        o
+    }
+
+    /// Flush `f` to its stream as the terminal Done event.
+    fn send_done(&mut self, f: FinishedSeq) {
+        if let Some(tx) = self.streams.remove(&f.id) {
+            let _ = tx.send(StreamEvent::Done { finished: f });
+        }
+    }
+}
+
+/// The engine loop. Runs until the command channel disconnects or a
+/// drain completes (drain begun + nothing pending or running), then
+/// flushes buffered retirements — zero lost streams — and marks the
+/// drain state stopped.
+pub fn run_engine(
+    server: ModelServer,
+    cache: KvCache,
+    rx: Receiver<EngineMsg>,
+    drain: Arc<DrainState>,
+) {
+    let mut eng = Engine {
+        server,
+        cache,
+        sched: DecodeScheduler::new(),
+        streams: HashMap::new(),
+        drain,
+    };
+    let mut disconnected = false;
+    loop {
+        // Intake: everything queued right now, without blocking.
+        loop {
+            match rx.try_recv() {
+                Ok(msg) => eng.handle(msg),
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    disconnected = true;
+                    break;
+                }
+            }
+        }
+
+        if eng.sched.idle() {
+            if disconnected || !eng.drain.accepting() {
+                break;
+            }
+            // Nothing to decode: park until a command arrives.
+            match rx.recv_timeout(IDLE_WAIT) {
+                Ok(msg) => eng.handle(msg),
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => disconnected = true,
+            }
+            continue;
+        }
+
+        // One continuous-batching step; tokens stream out mid-step.
+        let mut obs = EventObserver { streams: &mut eng.streams, rejected: Vec::new() };
+        let result = eng.sched.step_observed(&mut eng.server, &mut eng.cache, &mut obs);
+        let rejected = std::mem::take(&mut obs.rejected);
+        for (id, api) in rejected {
+            eng.server.record_rejection(api.code);
+            if let Some(tx) = eng.streams.remove(&id) {
+                let _ = tx.send(StreamEvent::Error(api));
+            }
+        }
+        match result {
+            Ok(finished) => {
+                for f in finished {
+                    eng.send_done(f);
+                }
+            }
+            Err(e) => {
+                // A step-level failure poisons every in-flight sequence:
+                // tell each client, then stop serving.
+                let api = ApiError::new(500, "engine_failure", format!("{e:#}"));
+                for f in eng.sched.drain_finished() {
+                    eng.send_done(f);
+                }
+                for (_, tx) in eng.streams.drain() {
+                    let _ = tx.send(StreamEvent::Error(api.clone()));
+                }
+                break;
+            }
+        }
+    }
+    // Retirements buffered by an errored step still reach their clients.
+    for f in eng.sched.drain_finished() {
+        eng.send_done(f);
+    }
+    for (_, tx) in eng.streams.drain() {
+        let _ = tx.send(StreamEvent::Error(ApiError::new(
+            503,
+            "stopped",
+            "server stopped before this sequence completed",
+        )));
+    }
+    eng.drain.mark_engine_stopped();
+}

@@ -1,0 +1,484 @@
+//! Dependency-free HTTP/1.1 plumbing over std TCP streams.
+//!
+//! Exactly what the front-end needs and nothing more: blocking
+//! request parsing with size limits (header block and body), fixed
+//! `Content-Length` JSON responses, chunked transfer-encoding for token
+//! streaming, and a tiny loopback client (used by the tests and the
+//! load-test bench). Every connection is `Connection: close` — one
+//! request per TCP stream keeps worker lifecycle and drain accounting
+//! trivial, and the loopback benchmarks show connection setup is noise
+//! next to decode time.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+
+/// Upper bound on the request line + headers block.
+pub const MAX_HEADER_BYTES: usize = 16 * 1024;
+
+/// One parsed request. Header names are lower-cased.
+#[derive(Clone, Debug)]
+pub struct HttpRequest {
+    pub method: String,
+    pub target: String,
+    pub headers: BTreeMap<String, String>,
+    pub body: Vec<u8>,
+}
+
+/// A request-parse failure, mapped straight to a status code.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HttpParseError {
+    pub status: u16,
+    pub message: String,
+}
+
+impl HttpParseError {
+    fn new(status: u16, message: impl Into<String>) -> HttpParseError {
+        HttpParseError { status, message: message.into() }
+    }
+}
+
+/// Canonical reason phrase for the statuses the server emits.
+pub fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        413 => "Payload Too Large",
+        422 => "Unprocessable Entity",
+        429 => "Too Many Requests",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+/// Read one request from `reader`. `max_body` bounds the declared
+/// `Content-Length`; anything larger is a 413 without reading the body.
+pub fn read_request<R: BufRead>(
+    reader: &mut R,
+    max_body: usize,
+) -> Result<HttpRequest, HttpParseError> {
+    let mut head_bytes = 0usize;
+    let mut line = String::new();
+    reader
+        .read_line(&mut line)
+        .map_err(|e| HttpParseError::new(400, format!("read request line: {e}")))?;
+    if line.is_empty() {
+        return Err(HttpParseError::new(400, "empty request"));
+    }
+    head_bytes += line.len();
+    let mut parts = line.split_whitespace();
+    let method = parts
+        .next()
+        .ok_or_else(|| HttpParseError::new(400, "missing method"))?
+        .to_string();
+    let target = parts
+        .next()
+        .ok_or_else(|| HttpParseError::new(400, "missing request target"))?
+        .to_string();
+    let version = parts.next().unwrap_or("");
+    if !version.starts_with("HTTP/1.") {
+        return Err(HttpParseError::new(400, format!("unsupported version '{version}'")));
+    }
+    let mut headers = BTreeMap::new();
+    loop {
+        let mut h = String::new();
+        reader
+            .read_line(&mut h)
+            .map_err(|e| HttpParseError::new(400, format!("read header: {e}")))?;
+        head_bytes += h.len();
+        if head_bytes > MAX_HEADER_BYTES {
+            return Err(HttpParseError::new(413, "header block too large"));
+        }
+        let t = h.trim_end_matches(['\r', '\n']);
+        if t.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = t.split_once(':') {
+            headers.insert(k.trim().to_ascii_lowercase(), v.trim().to_string());
+        } else {
+            return Err(HttpParseError::new(400, format!("malformed header '{t}'")));
+        }
+    }
+    let body = match headers.get("content-length") {
+        Some(v) => {
+            let n: usize = v
+                .parse()
+                .map_err(|_| HttpParseError::new(400, format!("bad content-length '{v}'")))?;
+            if n > max_body {
+                return Err(HttpParseError::new(
+                    413,
+                    format!("body of {n} bytes exceeds limit {max_body}"),
+                ));
+            }
+            let mut buf = vec![0u8; n];
+            reader
+                .read_exact(&mut buf)
+                .map_err(|e| HttpParseError::new(400, format!("read body: {e}")))?;
+            buf
+        }
+        None => Vec::new(),
+    };
+    Ok(HttpRequest { method, target, headers, body })
+}
+
+/// Write a complete JSON response with `Content-Length` and close
+/// semantics. `extra_headers` are (name, value) pairs appended verbatim
+/// (e.g. `("Retry-After", "2")`).
+pub fn write_json_response(
+    stream: &mut impl Write,
+    status: u16,
+    extra_headers: &[(String, String)],
+    body: &Json,
+) -> std::io::Result<()> {
+    let text = format!("{body}\n");
+    let mut head = format!(
+        "HTTP/1.1 {status} {}\r\ncontent-type: application/json\r\ncontent-length: {}\r\nconnection: close\r\n",
+        reason(status),
+        text.len()
+    );
+    for (k, v) in extra_headers {
+        head.push_str(&format!("{k}: {v}\r\n"));
+    }
+    head.push_str("\r\n");
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(text.as_bytes())?;
+    stream.flush()
+}
+
+/// Chunked transfer-encoding writer for token streaming. Every
+/// [`ChunkedWriter::chunk`] is flushed immediately — the whole point is
+/// that the client sees each token as `decode_step` produces it.
+pub struct ChunkedWriter<W: Write> {
+    stream: W,
+}
+
+impl<W: Write> ChunkedWriter<W> {
+    /// Write the response head and enter chunked mode.
+    pub fn start(
+        mut stream: W,
+        status: u16,
+        extra_headers: &[(String, String)],
+    ) -> std::io::Result<ChunkedWriter<W>> {
+        let mut head = format!(
+            "HTTP/1.1 {status} {}\r\ncontent-type: application/x-ndjson\r\ntransfer-encoding: chunked\r\nconnection: close\r\n",
+            reason(status)
+        );
+        for (k, v) in extra_headers {
+            head.push_str(&format!("{k}: {v}\r\n"));
+        }
+        head.push_str("\r\n");
+        stream.write_all(head.as_bytes())?;
+        stream.flush()?;
+        Ok(ChunkedWriter { stream })
+    }
+
+    /// One chunk: `{len:x}\r\n{data}\r\n`, flushed.
+    pub fn chunk(&mut self, data: &[u8]) -> std::io::Result<()> {
+        if data.is_empty() {
+            return Ok(()); // an empty chunk would terminate the stream
+        }
+        write!(self.stream, "{:x}\r\n", data.len())?;
+        self.stream.write_all(data)?;
+        self.stream.write_all(b"\r\n")?;
+        self.stream.flush()
+    }
+
+    /// Terminating zero chunk.
+    pub fn finish(mut self) -> std::io::Result<()> {
+        self.stream.write_all(b"0\r\n\r\n")?;
+        self.stream.flush()
+    }
+}
+
+/// A fully buffered response from the loopback client.
+#[derive(Clone, Debug)]
+pub struct HttpResponse {
+    pub status: u16,
+    pub headers: BTreeMap<String, String>,
+    /// Decoded body (chunked responses are de-chunked).
+    pub body: Vec<u8>,
+}
+
+impl HttpResponse {
+    pub fn body_str(&self) -> &str {
+        std::str::from_utf8(&self.body).unwrap_or("")
+    }
+
+    pub fn json(&self) -> anyhow::Result<Json> {
+        Json::parse(self.body_str().trim())
+    }
+
+    /// Parse an NDJSON body (one JSON document per line).
+    pub fn json_lines(&self) -> anyhow::Result<Vec<Json>> {
+        self.body_str()
+            .lines()
+            .filter(|l| !l.trim().is_empty())
+            .map(Json::parse)
+            .collect()
+    }
+
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers.get(&name.to_ascii_lowercase()).map(|s| s.as_str())
+    }
+}
+
+/// Read a full response (status line, headers, body — de-chunking if
+/// needed) from `reader`.
+pub fn read_response<R: BufRead>(reader: &mut R) -> anyhow::Result<HttpResponse> {
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let status: u16 = line
+        .split_whitespace()
+        .nth(1)
+        .ok_or_else(|| anyhow::anyhow!("malformed status line '{line}'"))?
+        .parse()?;
+    let mut headers = BTreeMap::new();
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h)?;
+        let t = h.trim_end_matches(['\r', '\n']);
+        if t.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = t.split_once(':') {
+            headers.insert(k.trim().to_ascii_lowercase(), v.trim().to_string());
+        }
+    }
+    let mut body = Vec::new();
+    if headers.get("transfer-encoding").map(|v| v == "chunked").unwrap_or(false) {
+        loop {
+            let mut size_line = String::new();
+            reader.read_line(&mut size_line)?;
+            let n = usize::from_str_radix(size_line.trim(), 16)
+                .map_err(|_| anyhow::anyhow!("bad chunk size '{}'", size_line.trim()))?;
+            if n == 0 {
+                let mut crlf = String::new();
+                reader.read_line(&mut crlf)?;
+                break;
+            }
+            let mut chunk = vec![0u8; n + 2]; // data + trailing CRLF
+            reader.read_exact(&mut chunk)?;
+            chunk.truncate(n);
+            body.extend_from_slice(&chunk);
+        }
+    } else if let Some(v) = headers.get("content-length") {
+        let n: usize = v.parse()?;
+        let mut buf = vec![0u8; n];
+        reader.read_exact(&mut buf)?;
+        body = buf;
+    } else {
+        reader.read_to_end(&mut body)?;
+    }
+    Ok(HttpResponse { status, headers, body })
+}
+
+/// One-shot loopback client: connect, send, read the whole response.
+pub fn request(
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: Option<&Json>,
+) -> anyhow::Result<HttpResponse> {
+    let mut stream = TcpStream::connect(addr)?;
+    let payload = body.map(|j| format!("{j}\n")).unwrap_or_default();
+    let head = format!(
+        "{method} {path} HTTP/1.1\r\nhost: {addr}\r\ncontent-length: {}\r\nconnection: close\r\n\r\n",
+        payload.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(payload.as_bytes())?;
+    stream.flush()?;
+    let mut reader = BufReader::new(stream);
+    read_response(&mut reader)
+}
+
+/// Streaming loopback client: sends the request, exposes the response
+/// head immediately, then yields chunks one at a time — so a test can
+/// measure time-to-first-chunk and observe tokens arriving before the
+/// generation finishes.
+pub struct StreamingClient {
+    reader: BufReader<TcpStream>,
+    pub status: u16,
+    pub headers: BTreeMap<String, String>,
+    chunked: bool,
+    done: bool,
+}
+
+impl StreamingClient {
+    pub fn post(addr: &str, path: &str, body: &Json) -> anyhow::Result<StreamingClient> {
+        let mut stream = TcpStream::connect(addr)?;
+        let payload = format!("{body}\n");
+        let head = format!(
+            "POST {path} HTTP/1.1\r\nhost: {addr}\r\ncontent-length: {}\r\nconnection: close\r\n\r\n",
+            payload.len()
+        );
+        stream.write_all(head.as_bytes())?;
+        stream.write_all(payload.as_bytes())?;
+        stream.flush()?;
+        let mut reader = BufReader::new(stream);
+        let mut line = String::new();
+        reader.read_line(&mut line)?;
+        let status: u16 = line
+            .split_whitespace()
+            .nth(1)
+            .ok_or_else(|| anyhow::anyhow!("malformed status line '{line}'"))?
+            .parse()?;
+        let mut headers = BTreeMap::new();
+        loop {
+            let mut h = String::new();
+            reader.read_line(&mut h)?;
+            let t = h.trim_end_matches(['\r', '\n']);
+            if t.is_empty() {
+                break;
+            }
+            if let Some((k, v)) = t.split_once(':') {
+                headers.insert(k.trim().to_ascii_lowercase(), v.trim().to_string());
+            }
+        }
+        let chunked =
+            headers.get("transfer-encoding").map(|v| v == "chunked").unwrap_or(false);
+        Ok(StreamingClient { reader, status, headers, chunked, done: false })
+    }
+
+    /// Next chunk of the chunked body (`None` once the stream ends).
+    /// For non-chunked responses, returns the whole body once.
+    pub fn next_chunk(&mut self) -> anyhow::Result<Option<Vec<u8>>> {
+        if self.done {
+            return Ok(None);
+        }
+        if !self.chunked {
+            self.done = true;
+            let mut body = Vec::new();
+            if let Some(v) = self.headers.get("content-length") {
+                body = vec![0u8; v.parse()?];
+                self.reader.read_exact(&mut body)?;
+            } else {
+                self.reader.read_to_end(&mut body)?;
+            }
+            return Ok(Some(body));
+        }
+        let mut size_line = String::new();
+        self.reader.read_line(&mut size_line)?;
+        let n = usize::from_str_radix(size_line.trim(), 16)
+            .map_err(|_| anyhow::anyhow!("bad chunk size '{}'", size_line.trim()))?;
+        if n == 0 {
+            self.done = true;
+            let mut crlf = String::new();
+            self.reader.read_line(&mut crlf)?;
+            return Ok(None);
+        }
+        let mut chunk = vec![0u8; n + 2];
+        self.reader.read_exact(&mut chunk)?;
+        chunk.truncate(n);
+        Ok(Some(chunk))
+    }
+
+    /// Drain the remaining chunks into one buffer.
+    pub fn read_rest(&mut self) -> anyhow::Result<Vec<u8>> {
+        let mut out = Vec::new();
+        while let Some(c) = self.next_chunk()? {
+            out.extend_from_slice(&c);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn parses_a_post_with_body() {
+        let raw = b"POST /v1/generate HTTP/1.1\r\nHost: x\r\nContent-Length: 4\r\n\r\nabcd";
+        let mut r = BufReader::new(Cursor::new(&raw[..]));
+        let req = read_request(&mut r, 1024).unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.target, "/v1/generate");
+        assert_eq!(req.headers.get("host").map(|s| s.as_str()), Some("x"));
+        assert_eq!(req.body, b"abcd");
+    }
+
+    #[test]
+    fn rejects_oversized_and_malformed_requests() {
+        let over = b"POST / HTTP/1.1\r\nContent-Length: 999\r\n\r\n";
+        let mut r = BufReader::new(Cursor::new(&over[..]));
+        assert_eq!(read_request(&mut r, 100).unwrap_err().status, 413);
+
+        let badver = b"GET / SPDY/9\r\n\r\n";
+        let mut r = BufReader::new(Cursor::new(&badver[..]));
+        assert_eq!(read_request(&mut r, 100).unwrap_err().status, 400);
+
+        let badlen = b"POST / HTTP/1.1\r\nContent-Length: ten\r\n\r\n";
+        let mut r = BufReader::new(Cursor::new(&badlen[..]));
+        assert_eq!(read_request(&mut r, 100).unwrap_err().status, 400);
+
+        let noheader = b"GET / HTTP/1.1\r\nnot-a-header\r\n\r\n";
+        let mut r = BufReader::new(Cursor::new(&noheader[..]));
+        assert_eq!(read_request(&mut r, 100).unwrap_err().status, 400);
+
+        // Truncated body: declared 10 bytes, stream has 2.
+        let short = b"POST / HTTP/1.1\r\nContent-Length: 10\r\n\r\nab";
+        let mut r = BufReader::new(Cursor::new(&short[..]));
+        assert_eq!(read_request(&mut r, 100).unwrap_err().status, 400);
+
+        let mut r = BufReader::new(Cursor::new(&b""[..]));
+        assert!(read_request(&mut r, 100).is_err());
+    }
+
+    #[test]
+    fn giant_header_block_is_413() {
+        let mut raw = b"GET / HTTP/1.1\r\n".to_vec();
+        for i in 0..2000 {
+            raw.extend_from_slice(format!("x-h{i}: {}\r\n", "v".repeat(64)).as_bytes());
+        }
+        raw.extend_from_slice(b"\r\n");
+        let mut r = BufReader::new(Cursor::new(raw));
+        assert_eq!(read_request(&mut r, 100).unwrap_err().status, 413);
+    }
+
+    #[test]
+    fn json_response_roundtrips_through_read_response() {
+        let mut j = Json::obj();
+        j.set("ok", Json::Bool(true));
+        let mut wire = Vec::new();
+        write_json_response(&mut wire, 200, &[("retry-after".into(), "2".into())], &j).unwrap();
+        let mut r = BufReader::new(Cursor::new(wire));
+        let resp = read_response(&mut r).unwrap();
+        assert_eq!(resp.status, 200);
+        assert_eq!(resp.header("retry-after"), Some("2"));
+        assert_eq!(resp.json().unwrap().get("ok"), Some(&Json::Bool(true)));
+    }
+
+    #[test]
+    fn chunked_writer_roundtrips_and_dechunks() {
+        let mut wire = Vec::new();
+        {
+            let mut w = ChunkedWriter::start(&mut wire, 200, &[]).unwrap();
+            w.chunk(b"{\"token\":1}\n").unwrap();
+            w.chunk(b"").unwrap(); // no-op, must not terminate early
+            w.chunk(b"{\"token\":2}\n").unwrap();
+            w.finish().unwrap();
+        }
+        let mut r = BufReader::new(Cursor::new(wire));
+        let resp = read_response(&mut r).unwrap();
+        assert_eq!(resp.status, 200);
+        assert_eq!(resp.header("transfer-encoding"), Some("chunked"));
+        let lines = resp.json_lines().unwrap();
+        assert_eq!(lines.len(), 2);
+        assert_eq!(lines[1].get("token").and_then(|v| v.as_f64()), Some(2.0));
+    }
+
+    #[test]
+    fn reason_phrases_cover_the_emitted_statuses() {
+        for s in [200, 400, 404, 405, 413, 422, 429, 500, 503] {
+            assert_ne!(reason(s), "Unknown", "status {s}");
+        }
+        assert_eq!(reason(599), "Unknown");
+    }
+}

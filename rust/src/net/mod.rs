@@ -1,0 +1,529 @@
+//! Streaming HTTP/1.1 front-end over the continuous-batching decode
+//! scheduler — the wire protocol of the multi-adapter serving stack.
+//!
+//! Dependency-free by construction (std `TcpListener` + the crate's own
+//! `util/json.rs`), threaded by design:
+//!
+//! * ONE engine thread owns the `ModelServer` + `KvCache` +
+//!   [`crate::serve::DecodeScheduler`] and runs the continuous-batching
+//!   loop ([`engine::run_engine`]), streaming every sampled token back
+//!   to its connection over a per-request channel,
+//! * ONE listener thread accepts connections onto a BOUNDED queue
+//!   (overflow answers an immediate 503 — backpressure, not OOM),
+//! * N connection workers pull from the queue, parse one request each
+//!   ([`http`]), validate it ([`api`]), pass admission control
+//!   ([`tenant`]), and forward to the engine,
+//! * a [`drain::DrainState`] coordinates graceful shutdown: stop
+//!   admitting, finish every running sequence, flush every stream, exit
+//!   (SIGTERM/SIGINT optional via [`drain::install_signal_handlers`]).
+//!
+//! Endpoints: `POST /v1/generate` (NDJSON token streaming over chunked
+//! transfer-encoding, or one-shot JSON with `"stream": false`),
+//! `GET /healthz`, `GET /metrics`, `POST /admin/drain`. Status codes
+//! mirror [`crate::serve::ServeError::http_status`]; 429s carry
+//! `Retry-After` + `X-RateLimit-Remaining`.
+
+pub mod api;
+pub mod drain;
+pub mod engine;
+pub mod http;
+pub mod tenant;
+
+pub use api::{ApiContext, ApiError, GenerateRequest};
+pub use drain::{DrainState, Phase};
+pub use engine::{EngineMsg, StreamEvent};
+pub use http::{HttpRequest, HttpResponse, StreamingClient};
+pub use tenant::{Admission, AdmissionControl, TenantPolicy};
+
+use crate::adapter::AdapterEngine;
+use crate::serve::{ModelServer, SeqRequest, ServeConfig};
+use crate::util::json::{jnum, jstr, Json};
+use crate::util::timer::Timer;
+use anyhow::Result;
+use std::collections::BTreeSet;
+use std::io::{BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{Receiver, Sender, SyncSender, TrySendError};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// How long a worker waits for an engine reply (health/metrics) before
+/// reporting the engine unresponsive.
+const REPLY_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// Front-end configuration.
+#[derive(Clone, Debug)]
+pub struct NetConfig {
+    /// Bind address; port 0 picks a free port (see [`NetServer::addr`]).
+    pub addr: String,
+    /// Connection worker threads (concurrent in-flight HTTP requests).
+    pub workers: usize,
+    /// Bounded accept queue depth; overflow is an immediate 503.
+    pub accept_backlog: usize,
+    /// Largest accepted request body.
+    pub max_body_bytes: usize,
+    /// Admission policy for tenants without an explicit override.
+    pub default_policy: TenantPolicy,
+    /// Per-tenant (adapter-name) policy overrides.
+    pub tenant_policies: Vec<(String, TenantPolicy)>,
+    /// Install SIGTERM/SIGINT handlers that begin a graceful drain.
+    pub handle_signals: bool,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig {
+            addr: "127.0.0.1:0".to_string(),
+            workers: 16,
+            accept_backlog: 64,
+            max_body_bytes: 1 << 20,
+            default_policy: TenantPolicy::default(),
+            tenant_policies: Vec::new(),
+            handle_signals: false,
+        }
+    }
+}
+
+/// Immutable state shared by every connection worker.
+struct Shared {
+    ctx: ApiContext,
+    drain: Arc<DrainState>,
+    admission: Mutex<AdmissionControl>,
+    /// Server boot clock — the token buckets' time source.
+    clock: Timer,
+    max_body: usize,
+}
+
+/// RAII in-flight permit: releases the tenant's admission slot when the
+/// request finishes, on every exit path.
+struct Permit<'a> {
+    shared: &'a Shared,
+    adapter: Option<String>,
+}
+
+impl Drop for Permit<'_> {
+    fn drop(&mut self) {
+        if let Ok(mut ac) = self.shared.admission.lock() {
+            ac.release(self.adapter.as_deref());
+        }
+    }
+}
+
+/// A running HTTP front-end. Dropping it WITHOUT calling
+/// [`NetServer::shutdown`] leaves the threads running detached; the
+/// clean exit is `begin_drain` (or SIGTERM) followed by `shutdown`.
+pub struct NetServer {
+    addr: SocketAddr,
+    engine_tx: Sender<EngineMsg>,
+    drain: Arc<DrainState>,
+    stop_listener: Arc<AtomicBool>,
+    engine_handle: JoinHandle<()>,
+    listener_handle: JoinHandle<()>,
+    worker_handles: Vec<JoinHandle<()>>,
+}
+
+impl NetServer {
+    /// Build the model server synchronously (config errors surface here,
+    /// not on a thread), bind, and start the thread ensemble.
+    pub fn start(
+        engine: &AdapterEngine,
+        serve_cfg: ServeConfig,
+        net_cfg: NetConfig,
+    ) -> Result<NetServer> {
+        let server = ModelServer::new(engine, serve_cfg)?;
+        let cache = server.new_cache()?;
+        let ctx = ApiContext {
+            vocab: server.vocab(),
+            max_seq: server.cfg().max_seq,
+            adapters: server
+                .adapter_names()
+                .iter()
+                .map(|s| s.to_string())
+                .collect::<BTreeSet<_>>(),
+        };
+        let listener = TcpListener::bind(&net_cfg.addr)?;
+        let addr = listener.local_addr()?;
+
+        let drain = Arc::new(DrainState::new());
+        if net_cfg.handle_signals {
+            drain::install_signal_handlers();
+            drain::spawn_signal_watcher(Arc::clone(&drain));
+        }
+
+        let (engine_tx, engine_rx) = mpsc::channel::<EngineMsg>();
+        let engine_drain = Arc::clone(&drain);
+        let engine_handle = std::thread::Builder::new()
+            .name("pissa-engine".into())
+            .spawn(move || engine::run_engine(server, cache, engine_rx, engine_drain))?;
+
+        let mut admission = AdmissionControl::new(net_cfg.default_policy);
+        for (tenant, policy) in &net_cfg.tenant_policies {
+            admission.set_policy(tenant, *policy);
+        }
+        let shared = Arc::new(Shared {
+            ctx,
+            drain: Arc::clone(&drain),
+            admission: Mutex::new(admission),
+            clock: Timer::start(),
+            max_body: net_cfg.max_body_bytes,
+        });
+
+        // Bounded accept queue: listener pushes, workers pull.
+        let (conn_tx, conn_rx) = mpsc::sync_channel::<TcpStream>(net_cfg.accept_backlog.max(1));
+        let conn_rx = Arc::new(Mutex::new(conn_rx));
+        let mut worker_handles = Vec::with_capacity(net_cfg.workers.max(1));
+        for i in 0..net_cfg.workers.max(1) {
+            let rx = Arc::clone(&conn_rx);
+            let shared = Arc::clone(&shared);
+            let tx = engine_tx.clone();
+            worker_handles.push(
+                std::thread::Builder::new()
+                    .name(format!("pissa-http-{i}"))
+                    .spawn(move || worker_loop(&rx, &shared, &tx))?,
+            );
+        }
+
+        let stop_listener = Arc::new(AtomicBool::new(false));
+        let listener_stop = Arc::clone(&stop_listener);
+        let listener_handle = std::thread::Builder::new()
+            .name("pissa-listen".into())
+            .spawn(move || listener_loop(listener, conn_tx, &listener_stop))?;
+
+        Ok(NetServer {
+            addr,
+            engine_tx,
+            drain,
+            stop_listener,
+            engine_handle,
+            listener_handle,
+            worker_handles,
+        })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn phase(&self) -> Phase {
+        self.drain.phase()
+    }
+
+    /// Stop admitting; in-flight sequences keep running.
+    pub fn begin_drain(&self) {
+        self.drain.begin_drain();
+    }
+
+    /// Block until every admitted sequence has finished and the engine
+    /// thread has exited (only terminates after a drain has begun).
+    pub fn wait_engine_stopped(&self) {
+        self.drain.wait_engine_stopped();
+    }
+
+    /// Fetch a `/metrics`-equivalent snapshot in-process.
+    pub fn metrics(&self) -> Result<Json> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.engine_tx
+            .send(EngineMsg::Metrics { reply: reply_tx })
+            .map_err(|_| anyhow::anyhow!("engine stopped"))?;
+        Ok(reply_rx.recv_timeout(REPLY_TIMEOUT)?)
+    }
+
+    /// Graceful shutdown: drain, finish every running sequence, flush
+    /// every stream, stop the listener, join every thread.
+    pub fn shutdown(self) -> Result<()> {
+        self.drain.begin_drain();
+        self.drain.wait_engine_stopped();
+        self.engine_handle.join().map_err(|_| anyhow::anyhow!("engine thread panicked"))?;
+        // Unblock the (blocking) accept so the listener sees the flag.
+        self.stop_listener.store(true, Ordering::Release);
+        let _ = TcpStream::connect(self.addr);
+        self.listener_handle.join().map_err(|_| anyhow::anyhow!("listener thread panicked"))?;
+        // The listener dropped conn_tx; workers drain the queue and exit.
+        for h in self.worker_handles {
+            h.join().map_err(|_| anyhow::anyhow!("worker thread panicked"))?;
+        }
+        Ok(())
+    }
+}
+
+fn listener_loop(listener: TcpListener, conn_tx: SyncSender<TcpStream>, stop: &AtomicBool) {
+    for stream in listener.incoming() {
+        if stop.load(Ordering::Acquire) {
+            return;
+        }
+        let Ok(stream) = stream else { continue };
+        match conn_tx.try_send(stream) {
+            Ok(()) => {}
+            Err(TrySendError::Full(mut stream)) => {
+                // Accept queue full: shed load with an immediate 503
+                // instead of queueing unboundedly.
+                let api = ApiError::new(503, "overloaded", "accept queue full").retry_after(0.5);
+                let hdr = [("retry-after".to_string(), "1".to_string())];
+                let _ = http::write_json_response(&mut stream, 503, &hdr, &api.to_json());
+            }
+            Err(TrySendError::Disconnected(_)) => return,
+        }
+    }
+}
+
+fn worker_loop(
+    conn_rx: &Arc<Mutex<Receiver<TcpStream>>>,
+    shared: &Arc<Shared>,
+    engine_tx: &Sender<EngineMsg>,
+) {
+    loop {
+        // Hold the lock only for the recv handoff, not the request.
+        let stream = {
+            let guard = match conn_rx.lock() {
+                Ok(g) => g,
+                Err(_) => return,
+            };
+            guard.recv()
+        };
+        match stream {
+            Ok(s) => handle_connection(s, shared, engine_tx),
+            Err(_) => return, // listener gone and queue drained
+        }
+    }
+}
+
+/// Serve one connection: exactly one request, `Connection: close`.
+fn handle_connection(stream: TcpStream, shared: &Shared, engine_tx: &Sender<EngineMsg>) {
+    let Ok(read_half) = stream.try_clone() else { return };
+    let mut reader = BufReader::new(read_half);
+    let mut stream = stream;
+    let req = match http::read_request(&mut reader, shared.max_body) {
+        Ok(r) => r,
+        Err(e) => {
+            let api = ApiError::new(e.status, "bad_request", e.message);
+            let _ = http::write_json_response(&mut stream, api.status, &[], &api.to_json());
+            return;
+        }
+    };
+    match (req.method.as_str(), req.target.as_str()) {
+        ("POST", "/v1/generate") => handle_generate(stream, &req, shared, engine_tx),
+        ("GET", "/healthz") => handle_health(stream, shared, engine_tx),
+        ("GET", "/metrics") => handle_metrics(stream, shared, engine_tx),
+        ("POST", "/admin/drain") => {
+            shared.drain.begin_drain();
+            let mut o = Json::obj();
+            o.set("draining", Json::Bool(true));
+            let _ = http::write_json_response(&mut stream, 200, &[], &o);
+        }
+        (_, "/v1/generate") | (_, "/healthz") | (_, "/metrics") | (_, "/admin/drain") => {
+            let api = ApiError::new(405, "method_not_allowed", "wrong method for this endpoint");
+            let _ = http::write_json_response(&mut stream, 405, &[], &api.to_json());
+        }
+        (_, target) => {
+            let api = ApiError::new(404, "not_found", format!("no route for '{target}'"));
+            let _ = http::write_json_response(&mut stream, 404, &[], &api.to_json());
+        }
+    }
+}
+
+fn handle_health(mut stream: TcpStream, shared: &Shared, engine_tx: &Sender<EngineMsg>) {
+    let (reply_tx, reply_rx) = mpsc::channel();
+    let alive = engine_tx.send(EngineMsg::Health { reply: reply_tx }).is_ok();
+    let body = if alive { reply_rx.recv_timeout(REPLY_TIMEOUT).ok() } else { None };
+    match body {
+        Some(j) => {
+            let ready = j.get("ready").and_then(|v| v.as_bool()).unwrap_or(false);
+            let status = if ready { 200 } else { 503 };
+            let _ = http::write_json_response(&mut stream, status, &[], &j);
+        }
+        None => {
+            let mut o = Json::obj();
+            o.set("ready", Json::Bool(false));
+            o.set("phase", jstr(shared.drain.phase().name()));
+            let _ = http::write_json_response(&mut stream, 503, &[], &o);
+        }
+    }
+}
+
+fn handle_metrics(mut stream: TcpStream, shared: &Shared, engine_tx: &Sender<EngineMsg>) {
+    let (reply_tx, reply_rx) = mpsc::channel();
+    let alive = engine_tx.send(EngineMsg::Metrics { reply: reply_tx }).is_ok();
+    let body = if alive { reply_rx.recv_timeout(REPLY_TIMEOUT).ok() } else { None };
+    match body {
+        Some(mut j) => {
+            j.set("phase", jstr(shared.drain.phase().name()));
+            if let Ok(ac) = shared.admission.lock() {
+                j.set("tenants", ac.to_json());
+            }
+            let _ = http::write_json_response(&mut stream, 200, &[], &j);
+        }
+        None => {
+            let api = ApiError::new(503, "stopped", "engine is not running");
+            let _ = http::write_json_response(&mut stream, 503, &[], &api.to_json());
+        }
+    }
+}
+
+fn handle_generate(
+    mut stream: TcpStream,
+    req: &HttpRequest,
+    shared: &Shared,
+    engine_tx: &Sender<EngineMsg>,
+) {
+    if !shared.drain.accepting() {
+        let api = ApiError::new(503, "draining", "server is draining").retry_after(1.0);
+        let hdr = [("retry-after".to_string(), "1".to_string())];
+        let _ = http::write_json_response(&mut stream, 503, &hdr, &api.to_json());
+        return;
+    }
+    let gen = match api::parse_generate(&req.body, &shared.ctx) {
+        Ok(g) => g,
+        Err(api) => {
+            let _ = http::write_json_response(&mut stream, api.status, &[], &api.to_json());
+            return;
+        }
+    };
+    // Admission control BEFORE the engine sees anything.
+    let now = shared.clock.secs();
+    let verdict = match shared.admission.lock() {
+        Ok(mut ac) => ac.admit(gen.adapter.as_deref(), now),
+        Err(_) => return,
+    };
+    match verdict {
+        Admission::Granted => {}
+        Admission::RateLimited { retry_after_s } => {
+            let api = ApiError::new(429, "rate_limited", "tenant token bucket is empty")
+                .retry_after(retry_after_s);
+            let remaining = match shared.admission.lock() {
+                Ok(ac) => ac.remaining(gen.adapter.as_deref(), now),
+                Err(_) => 0.0,
+            };
+            let hdr = [
+                ("retry-after".to_string(), format!("{}", retry_after_s.ceil() as u64)),
+                ("x-ratelimit-remaining".to_string(), format!("{}", remaining.floor() as u64)),
+            ];
+            let _ = http::write_json_response(&mut stream, 429, &hdr, &api.to_json());
+            return;
+        }
+        Admission::Saturated { inflight, max_inflight } => {
+            let api = ApiError::new(
+                503,
+                "saturated",
+                format!("tenant has {inflight}/{max_inflight} requests in flight"),
+            )
+            .retry_after(1.0);
+            let hdr = [("retry-after".to_string(), "1".to_string())];
+            let _ = http::write_json_response(&mut stream, 503, &hdr, &api.to_json());
+            return;
+        }
+    }
+    let _permit = Permit { shared, adapter: gen.adapter.clone() };
+
+    let seq_req = SeqRequest {
+        adapter: gen.adapter.clone(),
+        prompt: gen.prompt.clone(),
+        max_new: gen.max_new,
+        stop_token: gen.stop_token,
+    };
+    let (events_tx, events_rx) = mpsc::channel::<StreamEvent>();
+    if engine_tx.send(EngineMsg::Submit { req: seq_req, events: events_tx }).is_err() {
+        let api = ApiError::new(503, "stopped", "engine is not running");
+        let _ = http::write_json_response(&mut stream, 503, &[], &api.to_json());
+        return;
+    }
+
+    // The first event decides the status line (deferred status): a
+    // rejected sequence answers its typed error; a token or an
+    // immediate Done answers 200.
+    let first = match events_rx.recv() {
+        Ok(ev) => ev,
+        Err(_) => {
+            let api = ApiError::new(500, "engine_failure", "engine hung up without an event");
+            let _ = http::write_json_response(&mut stream, 500, &[], &api.to_json());
+            return;
+        }
+    };
+    if let StreamEvent::Error(api) = first {
+        let mut hdr = Vec::new();
+        if let Some(s) = api.retry_after_s {
+            hdr.push(("retry-after".to_string(), format!("{}", s.ceil().max(1.0) as u64)));
+        }
+        let _ = http::write_json_response(&mut stream, api.status, &hdr, &api.to_json());
+        return;
+    }
+    if gen.stream {
+        stream_response(stream, &gen, first, &events_rx);
+    } else {
+        collect_response(stream, first, &events_rx);
+    }
+}
+
+/// Streaming mode: NDJSON lines over chunked transfer-encoding.
+fn stream_response(
+    stream: TcpStream,
+    gen: &GenerateRequest,
+    first: StreamEvent,
+    events: &Receiver<StreamEvent>,
+) {
+    let Ok(mut w) = http::ChunkedWriter::start(stream, 200, &[]) else { return };
+    let meta = api::meta_line(0, gen.adapter.as_deref());
+    if w.chunk(format!("{meta}\n").as_bytes()).is_err() {
+        return;
+    }
+    let mut ev = first;
+    loop {
+        let line = match &ev {
+            StreamEvent::Token { token, first } => api::token_line(*token, *first),
+            StreamEvent::Done { finished } => {
+                let _ = w.chunk(format!("{}\n", api::done_line(finished)).as_bytes());
+                let _ = w.finish();
+                return;
+            }
+            StreamEvent::Error(api) => {
+                // Mid-stream failure: the 200 head is on the wire, so the
+                // error travels as the terminal NDJSON line.
+                let _ = w.chunk(format!("{}\n", api.to_json()).as_bytes());
+                let _ = w.finish();
+                return;
+            }
+        };
+        if w.chunk(format!("{line}\n").as_bytes()).is_err() {
+            return; // client hung up; engine keeps going, sends are dropped
+        }
+        ev = match events.recv() {
+            Ok(next) => next,
+            Err(_) => {
+                let api = ApiError::new(500, "engine_failure", "stream ended without Done");
+                let _ = w.chunk(format!("{}\n", api.to_json()).as_bytes());
+                let _ = w.finish();
+                return;
+            }
+        };
+    }
+}
+
+/// Non-streaming mode: wait for Done, answer one JSON document.
+fn collect_response(mut stream: TcpStream, first: StreamEvent, events: &Receiver<StreamEvent>) {
+    let mut ev = first;
+    loop {
+        match ev {
+            StreamEvent::Token { .. } => {}
+            StreamEvent::Done { finished } => {
+                let mut body = api::done_line(&finished);
+                body.set("n_generated", jnum(finished.generated().len() as f64));
+                let _ = http::write_json_response(&mut stream, 200, &[], &body);
+                return;
+            }
+            StreamEvent::Error(api) => {
+                let _ = http::write_json_response(&mut stream, api.status, &[], &api.to_json());
+                return;
+            }
+        }
+        ev = match events.recv() {
+            Ok(next) => next,
+            Err(_) => {
+                let api = ApiError::new(500, "engine_failure", "stream ended without Done");
+                let _ = http::write_json_response(&mut stream, 500, &[], &api.to_json());
+                return;
+            }
+        };
+    }
+}

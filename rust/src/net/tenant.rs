@@ -1,0 +1,232 @@
+//! Per-tenant admission control: token-bucket rate limiting plus an
+//! in-flight request cap.
+//!
+//! A tenant is an adapter name (base-model traffic files under
+//! [`crate::serve::BASE_KEY`]). Each tenant owns a classic token bucket
+//! — `rate_per_s` refill, `burst` capacity — and an `max_inflight`
+//! ceiling on concurrently admitted requests. Admission is checked at
+//! the HTTP layer BEFORE a request reaches the engine thread, so a
+//! rate-limited tenant costs one map lookup, not a scheduler round-trip.
+//!
+//! Time is passed in explicitly (seconds from the server's boot
+//! [`crate::util::timer::Timer`]) instead of read from a clock, which
+//! keeps the arithmetic testable with synthetic timestamps.
+
+use crate::serve::BASE_KEY;
+use crate::util::json::{jnum, Json};
+use std::collections::BTreeMap;
+
+/// Rate/concurrency policy for one tenant (or the default for all).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TenantPolicy {
+    /// Sustained admissions per second (token-bucket refill rate).
+    pub rate_per_s: f64,
+    /// Bucket capacity: how many admissions may burst back-to-back.
+    pub burst: f64,
+    /// Max concurrently admitted (submitted, not yet finished) requests.
+    pub max_inflight: usize,
+}
+
+impl Default for TenantPolicy {
+    fn default() -> Self {
+        TenantPolicy { rate_per_s: 64.0, burst: 128.0, max_inflight: 64 }
+    }
+}
+
+/// Admission verdict for one request.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Admission {
+    Granted,
+    /// Token bucket empty → HTTP 429 with a `Retry-After` hint (seconds
+    /// until one token has refilled).
+    RateLimited { retry_after_s: f64 },
+    /// Too many requests already in flight → HTTP 503.
+    Saturated { inflight: usize, max_inflight: usize },
+}
+
+#[derive(Clone, Debug, Default)]
+struct TenantState {
+    /// Current bucket level (tokens, fractional between refills).
+    tokens: f64,
+    /// Timestamp of the last refill, seconds from server boot.
+    last_s: f64,
+    /// Live bucket? (first sighting seeds a full bucket.)
+    seen: bool,
+    inflight: usize,
+    admitted: usize,
+    rejected_rate: usize,
+    rejected_inflight: usize,
+}
+
+/// Admission controller over every tenant. One instance lives behind a
+/// mutex in the HTTP server; all methods are O(log tenants).
+#[derive(Clone, Debug)]
+pub struct AdmissionControl {
+    default_policy: TenantPolicy,
+    policies: BTreeMap<String, TenantPolicy>,
+    tenants: BTreeMap<String, TenantState>,
+}
+
+impl AdmissionControl {
+    pub fn new(default_policy: TenantPolicy) -> AdmissionControl {
+        AdmissionControl { default_policy, policies: BTreeMap::new(), tenants: BTreeMap::new() }
+    }
+
+    /// Override the policy for one tenant (adapter name).
+    pub fn set_policy(&mut self, tenant: &str, policy: TenantPolicy) {
+        self.policies.insert(tenant.to_string(), policy);
+    }
+
+    pub fn policy_for(&self, tenant: &str) -> TenantPolicy {
+        self.policies.get(tenant).copied().unwrap_or(self.default_policy)
+    }
+
+    fn key(adapter: Option<&str>) -> String {
+        adapter.unwrap_or(BASE_KEY).to_string()
+    }
+
+    /// Try to admit one request for `adapter` at time `now_s` (seconds
+    /// from server boot). On `Granted`, the tenant's in-flight count is
+    /// incremented — the caller MUST pair it with [`Self::release`]
+    /// when the request finishes (success or failure).
+    pub fn admit(&mut self, adapter: Option<&str>, now_s: f64) -> Admission {
+        let key = Self::key(adapter);
+        let policy = self.policy_for(&key);
+        let st = self.tenants.entry(key).or_default();
+        if !st.seen {
+            st.seen = true;
+            st.tokens = policy.burst;
+            st.last_s = now_s;
+        }
+        // Refill first (monotonic clock assumed; clamp regressions).
+        let dt = (now_s - st.last_s).max(0.0);
+        st.tokens = (st.tokens + dt * policy.rate_per_s).min(policy.burst);
+        st.last_s = now_s;
+        if st.inflight >= policy.max_inflight {
+            st.rejected_inflight += 1;
+            return Admission::Saturated { inflight: st.inflight, max_inflight: policy.max_inflight };
+        }
+        if st.tokens < 1.0 {
+            st.rejected_rate += 1;
+            let retry_after_s = if policy.rate_per_s > 0.0 {
+                (1.0 - st.tokens) / policy.rate_per_s
+            } else {
+                f64::INFINITY
+            };
+            return Admission::RateLimited { retry_after_s };
+        }
+        st.tokens -= 1.0;
+        st.inflight += 1;
+        st.admitted += 1;
+        Admission::Granted
+    }
+
+    /// A previously admitted request for `adapter` finished.
+    pub fn release(&mut self, adapter: Option<&str>) {
+        if let Some(st) = self.tenants.get_mut(&Self::key(adapter)) {
+            st.inflight = st.inflight.saturating_sub(1);
+        }
+    }
+
+    /// Remaining whole tokens for a tenant at `now_s` (the
+    /// `X-RateLimit-Remaining` header), without consuming anything.
+    pub fn remaining(&self, adapter: Option<&str>, now_s: f64) -> f64 {
+        let key = Self::key(adapter);
+        let policy = self.policy_for(&key);
+        match self.tenants.get(&key) {
+            Some(st) if st.seen => {
+                let dt = (now_s - st.last_s).max(0.0);
+                (st.tokens + dt * policy.rate_per_s).min(policy.burst)
+            }
+            _ => policy.burst,
+        }
+    }
+
+    /// Per-tenant admission counters for `/metrics`.
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        for (name, st) in &self.tenants {
+            let mut t = Json::obj();
+            t.set("inflight", jnum(st.inflight as f64));
+            t.set("admitted", jnum(st.admitted as f64));
+            t.set("rejected_rate_limited", jnum(st.rejected_rate as f64));
+            t.set("rejected_saturated", jnum(st.rejected_inflight as f64));
+            o.set(name, t);
+        }
+        o
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy(rate: f64, burst: f64, inflight: usize) -> TenantPolicy {
+        TenantPolicy { rate_per_s: rate, burst, max_inflight: inflight }
+    }
+
+    #[test]
+    fn burst_then_rate_limit_then_refill() {
+        let mut ac = AdmissionControl::new(policy(2.0, 3.0, 100));
+        // Full bucket at first sight: three admissions burst through.
+        for _ in 0..3 {
+            assert_eq!(ac.admit(Some("a"), 0.0), Admission::Granted);
+        }
+        // Fourth at the same instant is limited, with a refill ETA.
+        match ac.admit(Some("a"), 0.0) {
+            Admission::RateLimited { retry_after_s } => {
+                assert!((retry_after_s - 0.5).abs() < 1e-9, "eta={retry_after_s}");
+            }
+            other => panic!("expected rate limit, got {other:?}"),
+        }
+        // Half a second later one token has refilled.
+        assert_eq!(ac.admit(Some("a"), 0.5), Admission::Granted);
+        assert!(matches!(ac.admit(Some("a"), 0.5), Admission::RateLimited { .. }));
+        // Refill caps at burst, not beyond.
+        assert!((ac.remaining(Some("a"), 1000.0) - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn inflight_cap_and_release() {
+        let mut ac = AdmissionControl::new(policy(1000.0, 1000.0, 2));
+        assert_eq!(ac.admit(Some("a"), 0.0), Admission::Granted);
+        assert_eq!(ac.admit(Some("a"), 0.0), Admission::Granted);
+        assert_eq!(
+            ac.admit(Some("a"), 0.0),
+            Admission::Saturated { inflight: 2, max_inflight: 2 }
+        );
+        ac.release(Some("a"));
+        assert_eq!(ac.admit(Some("a"), 0.0), Admission::Granted);
+        // Double release never underflows.
+        ac.release(Some("b"));
+    }
+
+    #[test]
+    fn tenants_are_isolated_and_base_uses_base_key() {
+        let mut ac = AdmissionControl::new(policy(0.0, 1.0, 10));
+        assert_eq!(ac.admit(Some("a"), 0.0), Admission::Granted);
+        // Tenant a is dry (rate 0: never refills) but b has its own bucket.
+        assert!(matches!(ac.admit(Some("a"), 9.0), Admission::RateLimited { .. }));
+        assert_eq!(ac.admit(Some("b"), 9.0), Admission::Granted);
+        assert_eq!(ac.admit(None, 9.0), Admission::Granted);
+        let j = ac.to_json().to_string();
+        assert!(j.contains(BASE_KEY) && j.contains("\"rejected_rate_limited\":1"), "{j}");
+    }
+
+    #[test]
+    fn per_tenant_policy_overrides_default() {
+        let mut ac = AdmissionControl::new(policy(100.0, 100.0, 100));
+        ac.set_policy("throttled", policy(0.5, 1.0, 100));
+        assert_eq!(ac.admit(Some("throttled"), 0.0), Admission::Granted);
+        match ac.admit(Some("throttled"), 0.0) {
+            Admission::RateLimited { retry_after_s } => {
+                assert!((retry_after_s - 2.0).abs() < 1e-9);
+            }
+            other => panic!("expected rate limit, got {other:?}"),
+        }
+        // Other tenants still ride the generous default.
+        for _ in 0..50 {
+            assert_eq!(ac.admit(Some("open"), 0.0), Admission::Granted);
+        }
+    }
+}

@@ -243,6 +243,48 @@ impl fmt::Display for ServeError {
     }
 }
 
+impl ServeError {
+    /// HTTP status the wire API maps this error to. Request-shaped
+    /// faults are 4xx (the client can fix them); capacity faults are
+    /// 429/503 (retryable); config/operator faults are 500 — a request
+    /// should never have been able to trigger them.
+    pub fn http_status(&self) -> u16 {
+        match self {
+            ServeError::UnknownAdapter { .. } => 404,
+            ServeError::DimMismatch { .. }
+            | ServeError::TokenOutOfRange { .. }
+            | ServeError::SeqTooLong { .. } => 422,
+            ServeError::BatchTooLarge { .. } => 429,
+            ServeError::CacheBudgetExhausted { .. } => 503,
+            ServeError::RankTooLarge { .. }
+            | ServeError::QuantizedAdapter { .. }
+            | ServeError::UnknownModule { .. }
+            | ServeError::LayerOutOfRange { .. }
+            | ServeError::ScopeMismatch { .. }
+            | ServeError::BadSlot { .. } => 500,
+        }
+    }
+
+    /// Short snake_case reason key for metrics and the wire API's typed
+    /// error bodies (`{"error": {"code": ...}}`).
+    pub fn code(&self) -> &'static str {
+        match self {
+            ServeError::UnknownAdapter { .. } => "unknown_adapter",
+            ServeError::DimMismatch { .. } => "dim_mismatch",
+            ServeError::BatchTooLarge { .. } => "batch_too_large",
+            ServeError::RankTooLarge { .. } => "rank_too_large",
+            ServeError::QuantizedAdapter { .. } => "quantized_adapter",
+            ServeError::UnknownModule { .. } => "unknown_module",
+            ServeError::LayerOutOfRange { .. } => "layer_out_of_range",
+            ServeError::TokenOutOfRange { .. } => "token_out_of_range",
+            ServeError::ScopeMismatch { .. } => "scope_mismatch",
+            ServeError::SeqTooLong { .. } => "seq_too_long",
+            ServeError::CacheBudgetExhausted { .. } => "cache_budget_exhausted",
+            ServeError::BadSlot { .. } => "bad_slot",
+        }
+    }
+}
+
 impl std::error::Error for ServeError {}
 
 /// Declarative serving configuration. Build with [`ServeConfig::new`]
@@ -525,6 +567,25 @@ mod tests {
         };
         assert!(c.dims_for(&cfg).is_err());
         assert_eq!(ServeConfig::new("gate").dims_for(&cfg).unwrap(), (4, 8));
+    }
+
+    #[test]
+    fn serve_error_http_status_and_code_mapping() {
+        // Request-shaped faults → 4xx; capacity → 429/503; config → 500.
+        let unknown = ServeError::UnknownAdapter { name: "g".into(), have: vec![] };
+        assert_eq!(unknown.http_status(), 404);
+        assert_eq!(unknown.code(), "unknown_adapter");
+        let too_long = ServeError::SeqTooLong { prompt: 9, max_new: 9, max_seq: 8 };
+        assert_eq!(too_long.http_status(), 422);
+        assert_eq!(too_long.code(), "seq_too_long");
+        let tok = ServeError::TokenOutOfRange { index: 0, token: 99, vocab: 8 };
+        assert_eq!(tok.http_status(), 422);
+        let budget = ServeError::CacheBudgetExhausted { needed_bytes: 9, budget_bytes: 1 };
+        assert_eq!(budget.http_status(), 503);
+        assert_eq!(budget.code(), "cache_budget_exhausted");
+        assert_eq!(ServeError::BatchTooLarge { got: 9, max_batch: 1 }.http_status(), 429);
+        let cfg_fault = ServeError::BadSlot { slot: 3, detail: "free" };
+        assert_eq!(cfg_fault.http_status(), 500);
     }
 
     #[test]

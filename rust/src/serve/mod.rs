@@ -76,7 +76,7 @@ pub use linear::{LinearServer, QuantBase};
 pub use model::{ModelServer, RMS_EPS};
 pub use router::{
     argmax, bucket, DecodeRequest, DecodeScheduler, FinishReason, FinishedSeq, Group,
-    ModelRequest, Request, Routable, Scheduler, SeqId, SeqRequest,
+    ModelRequest, Request, Routable, Scheduler, SeqId, SeqRequest, StepObserver,
 };
 pub use server::Server;
 pub use stats::{ResidentBreakdown, ServeStats, ServeSummary, BASE_KEY};

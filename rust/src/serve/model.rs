@@ -339,6 +339,12 @@ impl ModelServer {
         self.stats.record_ttft(secs);
     }
 
+    /// Record one sequence rejected at admission (keyed by a short
+    /// reason such as `"unknown_adapter"`); surfaces in `/metrics`.
+    pub fn record_rejection(&mut self, reason: &str) {
+        self.stats.record_rejection(reason);
+    }
+
     /// Prefill: run `tokens` (one sequence, one adapter) through the full
     /// pipeline with REAL causal attention, writing every layer's K/V
     /// rows into `slot` of `cache`, and return the last position's logits

@@ -193,6 +193,38 @@ pub fn argmax(logits: &[f32]) -> usize {
     best
 }
 
+/// Observer hooks for [`DecodeScheduler::step_observed`]: token-level
+/// progress for streaming front-ends (the HTTP server forwards every
+/// `on_token` to the client as a chunk the moment it is sampled) and
+/// per-sequence rejection notices. Default impls are no-ops, so an
+/// observer only implements what it needs.
+pub trait StepObserver {
+    /// `token` was sampled for sequence `id`; `first` marks the
+    /// prefill-produced token (what TTFT measures).
+    fn on_token(&mut self, _id: SeqId, _token: usize, _first: bool) {}
+    /// Sequence `id` was removed from the queue as unservable (over
+    /// `max_seq`/budget, empty prompt, or a prefill failure such as an
+    /// unknown adapter). Only fired by [`DecodeScheduler::step_observed`];
+    /// plain [`DecodeScheduler::step`] returns these as errors instead.
+    fn on_reject(&mut self, _id: SeqId, _err: &anyhow::Error) {}
+}
+
+/// The do-nothing observer behind plain [`DecodeScheduler::step`].
+struct NoopObserver;
+
+impl StepObserver for NoopObserver {}
+
+/// What to do with an unservable head-of-queue request.
+#[derive(Clone, Copy)]
+enum RejectMode {
+    /// Return the typed error to the caller (the in-process contract:
+    /// queued and running work is untouched, the caller decides).
+    Halt,
+    /// Notify the observer and keep admitting — one tenant's bad request
+    /// must not stall every other connection behind it.
+    Notify,
+}
+
 struct PendingSeq {
     id: SeqId,
     req: SeqRequest,
@@ -318,6 +350,34 @@ impl DecodeScheduler {
         server: &mut ModelServer,
         cache: &mut KvCache,
     ) -> Result<Vec<FinishedSeq>> {
+        self.step_impl(server, cache, &mut NoopObserver, RejectMode::Halt)
+    }
+
+    /// [`DecodeScheduler::step`] with token-level observation and
+    /// non-halting rejection — the serving-front-end variant. Every
+    /// sampled token is reported through `obs.on_token` the moment it
+    /// exists (streaming), and an unservable head-of-queue request is
+    /// reported through `obs.on_reject` and DROPPED, after which
+    /// admission continues with the next queued sequence — one tenant's
+    /// impossible request never stalls or kills the batch loop. A
+    /// returned error therefore means the step itself failed (a decode
+    /// error affecting every running sequence), not a bad request.
+    pub fn step_observed(
+        &mut self,
+        server: &mut ModelServer,
+        cache: &mut KvCache,
+        obs: &mut dyn StepObserver,
+    ) -> Result<Vec<FinishedSeq>> {
+        self.step_impl(server, cache, obs, RejectMode::Notify)
+    }
+
+    fn step_impl(
+        &mut self,
+        server: &mut ModelServer,
+        cache: &mut KvCache,
+        obs: &mut dyn StepObserver,
+        mode: RejectMode,
+    ) -> Result<Vec<FinishedSeq>> {
         // Admission: strict arrival order. If the head does not fit RIGHT
         // NOW, stop — admitting anything younger would reorder.
         while let Some(head) = self.pending.front() {
@@ -327,25 +387,48 @@ impl DecodeScheduler {
                 Ok(None) => break, // wait for a retirement; order preserved
                 Err(e) => {
                     let p = self.pending.pop_front().expect("head exists");
-                    return Err(e.context(format!(
+                    let err = e.context(format!(
                         "seq {:?} ({} prompt + {} max_new) can never be admitted",
                         p.id,
                         p.req.prompt.len(),
                         p.req.max_new
-                    )));
+                    ));
+                    match mode {
+                        RejectMode::Halt => return Err(err),
+                        RejectMode::Notify => {
+                            obs.on_reject(p.id, &err);
+                            continue;
+                        }
+                    }
                 }
             };
             let p = self.pending.pop_front().expect("head exists");
             if p.req.prompt.is_empty() {
                 cache.release(claimed);
-                anyhow::bail!("seq {:?}: empty prompt (a generation needs >= 1 token)", p.id);
+                let err = anyhow::anyhow!(
+                    "seq {:?}: empty prompt (a generation needs >= 1 token)",
+                    p.id
+                );
+                match mode {
+                    RejectMode::Halt => return Err(err),
+                    RejectMode::Notify => {
+                        obs.on_reject(p.id, &err);
+                        continue;
+                    }
+                }
             }
             let logits =
                 match server.prefill(cache, claimed, p.req.adapter.as_deref(), &p.req.prompt) {
                     Ok(l) => l,
                     Err(e) => {
                         cache.release(claimed);
-                        return Err(e);
+                        match mode {
+                            RejectMode::Halt => return Err(e),
+                            RejectMode::Notify => {
+                                obs.on_reject(p.id, &e);
+                                continue;
+                            }
+                        }
                     }
                 };
             server.record_ttft(p.submitted.secs());
@@ -371,6 +454,7 @@ impl DecodeScheduler {
             run.next = argmax(&logits);
             run.tokens.push(run.next);
             run.generated = 1;
+            obs.on_token(run.id, run.next, true);
             if let Some(reason) = run.finish_reason() {
                 cache.release(claimed);
                 self.done.push(run.into_finished(reason));
@@ -396,6 +480,7 @@ impl DecodeScheduler {
                 run.next = argmax(logits.row(i));
                 run.tokens.push(run.next);
                 run.generated += 1;
+                obs.on_token(run.id, run.next, false);
                 if let Some(reason) = run.finish_reason() {
                     cache.release(run.slot);
                     self.done.push(run.into_finished(reason));

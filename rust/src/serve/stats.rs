@@ -50,6 +50,10 @@ pub struct ServeStats {
     decode_s: f64,
     /// Submit→first-token latency per sequence, last [`SAMPLE_WINDOW`].
     ttft_s: VecDeque<f64>,
+    /// Rejected sequences by reason (exact lifetime totals) — requests
+    /// dropped at admission by the observed decode path (unknown
+    /// adapter, over-budget, empty prompt) rather than served.
+    pub rejections: BTreeMap<String, usize>,
 }
 
 /// Rolled-up view of [`ServeStats`]. `batches`/`requests`/`total_s`/
@@ -159,6 +163,12 @@ impl ServeStats {
         push_windowed(&mut self.ttft_s, secs);
     }
 
+    /// Record one rejected sequence under a short reason key (e.g.
+    /// `"unknown_adapter"`, `"cache_budget_exhausted"`).
+    pub fn record_rejection(&mut self, reason: &str) {
+        *self.rejections.entry(reason.to_string()).or_insert(0) += 1;
+    }
+
     pub fn reset(&mut self) {
         *self = ServeStats::default();
     }
@@ -235,6 +245,11 @@ impl ServeStats {
             hits.set(k, jnum(*v as f64));
         }
         o.set("hits", hits);
+        let mut rej = Json::obj();
+        for (k, v) in &self.rejections {
+            rej.set(k, jnum(*v as f64));
+        }
+        o.set("rejections", rej);
         o
     }
 }
@@ -411,5 +426,17 @@ mod tests {
         st.record_batch(&[Some("t0")], 1, 8, 0.002);
         let text = st.to_json().to_string();
         assert!(text.contains("\"p95_ms\"") && text.contains("\"t0\""), "{text}");
+    }
+
+    #[test]
+    fn rejections_roll_up_by_reason() {
+        let mut st = ServeStats::new();
+        st.record_rejection("unknown_adapter");
+        st.record_rejection("unknown_adapter");
+        st.record_rejection("cache_budget_exhausted");
+        assert_eq!(st.rejections["unknown_adapter"], 2);
+        assert_eq!(st.rejections["cache_budget_exhausted"], 1);
+        let j = st.to_json().to_string();
+        assert!(j.contains("\"rejections\"") && j.contains("\"unknown_adapter\":2"), "{j}");
     }
 }

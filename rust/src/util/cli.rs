@@ -2,9 +2,36 @@
 //!
 //! Supports `--flag value`, `--flag=value`, boolean `--flag`, repeated
 //! positional arguments, and generates a usage string. Used by the `pissa`
-//! binary, the examples, and the bench harnesses.
+//! binary, the examples, and the bench harnesses. Malformed flag values
+//! surface as a typed [`ArgError`] (never a panic), so the binary can
+//! print usage and exit nonzero instead of unwinding.
 
 use std::collections::BTreeMap;
+use std::fmt;
+
+/// A malformed flag value: `--rank banana` where an integer was expected.
+/// Implements [`std::error::Error`], so it converts into `anyhow::Error`
+/// with `?` and can be recovered by downcast at the top level to print
+/// usage + exit nonzero.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArgError {
+    pub flag: String,
+    pub message: String,
+}
+
+impl ArgError {
+    fn new(flag: &str, message: String) -> ArgError {
+        ArgError { flag: flag.to_string(), message }
+    }
+}
+
+impl fmt::Display for ArgError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "--{}: {}", self.flag, self.message)
+    }
+}
+
+impl std::error::Error for ArgError {}
 
 /// Parsed arguments: flags plus positionals.
 #[derive(Debug, Default, Clone)]
@@ -15,6 +42,8 @@ pub struct Args {
 
 impl Args {
     /// Parse from an iterator of raw arguments (excluding argv[0]).
+    /// Splitting into flags/positionals never fails; value validation
+    /// happens in the typed accessors below.
     pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
         let mut out = Args::default();
         let mut it = raw.into_iter().peekable();
@@ -22,14 +51,10 @@ impl Args {
             if let Some(name) = a.strip_prefix("--") {
                 if let Some((k, v)) = name.split_once('=') {
                     out.flags.insert(k.to_string(), v.to_string());
-                } else if it
-                    .peek()
-                    .map(|n| !n.starts_with("--"))
-                    .unwrap_or(false)
-                {
-                    let v = it.next().unwrap();
+                } else if let Some(v) = it.next_if(|n| !n.starts_with("--")) {
                     out.flags.insert(name.to_string(), v);
                 } else {
+                    // Trailing `--flag` or `--flag --other`: boolean.
                     out.flags.insert(name.to_string(), "true".to_string());
                 }
             } else {
@@ -56,39 +81,50 @@ impl Args {
         self.get(name).unwrap_or(default).to_string()
     }
 
-    pub fn usize_or(&self, name: &str, default: usize) -> usize {
-        self.get(name)
-            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got '{v}'")))
-            .unwrap_or(default)
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize, ArgError> {
+        match self.get(name) {
+            Some(v) => v
+                .parse()
+                .map_err(|_| ArgError::new(name, format!("expects an integer, got '{v}'"))),
+            None => Ok(default),
+        }
     }
 
-    pub fn u64_or(&self, name: &str, default: u64) -> u64 {
-        self.get(name)
-            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got '{v}'")))
-            .unwrap_or(default)
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64, ArgError> {
+        match self.get(name) {
+            Some(v) => v
+                .parse()
+                .map_err(|_| ArgError::new(name, format!("expects an integer, got '{v}'"))),
+            None => Ok(default),
+        }
     }
 
-    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
-        self.get(name)
-            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects a number, got '{v}'")))
-            .unwrap_or(default)
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64, ArgError> {
+        match self.get(name) {
+            Some(v) => {
+                v.parse().map_err(|_| ArgError::new(name, format!("expects a number, got '{v}'")))
+            }
+            None => Ok(default),
+        }
     }
 
     pub fn bool_or(&self, name: &str, default: bool) -> bool {
-        self.get(name)
-            .map(|v| matches!(v, "true" | "1" | "yes"))
-            .unwrap_or(default)
+        self.get(name).map(|v| matches!(v, "true" | "1" | "yes")).unwrap_or(default)
     }
 
     /// Comma-separated list of usizes: `--ranks 1,2,4`.
-    pub fn usize_list_or(&self, name: &str, default: &[usize]) -> Vec<usize> {
+    pub fn usize_list_or(&self, name: &str, default: &[usize]) -> Result<Vec<usize>, ArgError> {
         match self.get(name) {
             Some(v) => v
                 .split(',')
                 .filter(|s| !s.is_empty())
-                .map(|s| s.trim().parse().unwrap_or_else(|_| panic!("--{name}: bad int '{s}'")))
+                .map(|s| {
+                    s.trim()
+                        .parse()
+                        .map_err(|_| ArgError::new(name, format!("bad integer '{}'", s.trim())))
+                })
                 .collect(),
-            None => default.to_vec(),
+            None => Ok(default.to_vec()),
         }
     }
 
@@ -115,24 +151,47 @@ mod tests {
         // the value, so positionals must precede bare boolean flags.
         let a = p(&["train", "extra", "--rank", "8", "--strategy=pissa", "--verbose"]);
         assert_eq!(a.positional, vec!["train", "extra"]);
-        assert_eq!(a.usize_or("rank", 4), 8);
+        assert_eq!(a.usize_or("rank", 4).unwrap(), 8);
         assert_eq!(a.str_or("strategy", "lora"), "pissa");
         assert!(a.bool_or("verbose", false));
-        assert_eq!(a.usize_or("missing", 7), 7);
+        assert_eq!(a.usize_or("missing", 7).unwrap(), 7);
     }
 
     #[test]
     fn lists() {
         let a = p(&["--ranks", "1,2,4,8", "--models", "a, b"]);
-        assert_eq!(a.usize_list_or("ranks", &[]), vec![1, 2, 4, 8]);
+        assert_eq!(a.usize_list_or("ranks", &[]).unwrap(), vec![1, 2, 4, 8]);
         assert_eq!(a.str_list_or("models", &[]), vec!["a", "b"]);
-        assert_eq!(a.usize_list_or("other", &[3]), vec![3]);
+        assert_eq!(a.usize_list_or("other", &[3]).unwrap(), vec![3]);
     }
 
     #[test]
     fn negative_number_value() {
         let a = p(&["--lr", "-0.5"]);
         // "-0.5" does not start with "--", so it is consumed as the value.
-        assert_eq!(a.f64_or("lr", 0.0), -0.5);
+        assert_eq!(a.f64_or("lr", 0.0).unwrap(), -0.5);
+    }
+
+    #[test]
+    fn malformed_values_are_typed_errors_not_panics() {
+        let a = p(&["--rank", "banana", "--lr", "fast", "--ranks", "1,x,3"]);
+        let e = a.usize_or("rank", 4).unwrap_err();
+        assert_eq!(e.flag, "rank");
+        assert!(e.to_string().contains("banana"), "msg={e}");
+        assert!(a.u64_or("rank", 4).is_err());
+        assert!(a.f64_or("lr", 0.0).is_err());
+        let le = a.usize_list_or("ranks", &[]).unwrap_err();
+        assert!(le.to_string().contains("'x'"), "msg={le}");
+    }
+
+    #[test]
+    fn trailing_valueless_flag_is_boolean_not_a_panic() {
+        // Regression: `--quantized` as the LAST token used to hit the
+        // value-consuming path; it must parse as a boolean flag.
+        let a = p(&["serve", "--quantized"]);
+        assert!(a.bool_or("quantized", false));
+        let b = p(&["--alpha", "--beta"]);
+        assert!(b.bool_or("alpha", false));
+        assert!(b.bool_or("beta", false));
     }
 }

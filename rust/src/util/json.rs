@@ -100,6 +100,7 @@ impl Json {
         let mut p = Parser {
             b: src.as_bytes(),
             i: 0,
+            depth: 0,
         };
         p.ws();
         let v = p.value()?;
@@ -204,9 +205,15 @@ fn write_escaped(out: &mut String, s: &str) {
     out.push('"');
 }
 
+/// Maximum container nesting depth. Network-facing inputs (the HTTP API)
+/// go through this parser, so recursion must be bounded — a document of
+/// a few thousand `[` bytes would otherwise overflow the stack.
+const MAX_DEPTH: usize = 128;
+
 struct Parser<'a> {
     b: &'a [u8],
     i: usize,
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
@@ -238,8 +245,15 @@ impl<'a> Parser<'a> {
 
     fn value(&mut self) -> anyhow::Result<Json> {
         match self.peek()? {
-            b'{' => self.object(),
-            b'[' => self.array(),
+            b'{' | b'[' => {
+                if self.depth >= MAX_DEPTH {
+                    anyhow::bail!("nesting deeper than {MAX_DEPTH} at byte {}", self.i);
+                }
+                self.depth += 1;
+                let v = if self.peek()? == b'{' { self.object() } else { self.array() };
+                self.depth -= 1;
+                v
+            }
             b'"' => Ok(Json::Str(self.string()?)),
             b't' => self.lit("true", Json::Bool(true)),
             b'f' => self.lit("false", Json::Bool(false)),
@@ -333,30 +347,35 @@ impl<'a> Parser<'a> {
                         b'b' => s.push('\u{8}'),
                         b'f' => s.push('\u{c}'),
                         b'u' => {
-                            if self.i + 4 > self.b.len() {
-                                anyhow::bail!("truncated \\u escape");
-                            }
-                            let hex = std::str::from_utf8(&self.b[self.i..self.i + 4])?;
-                            let cp = u32::from_str_radix(hex, 16)?;
-                            self.i += 4;
-                            // Surrogate pairs: only handle BMP + paired surrogates.
+                            let cp = self.hex4()?;
+                            // Surrogate pairs: a high surrogate MUST be
+                            // followed by an escaped low surrogate; both
+                            // lone halves are rejected (the HTTP API makes
+                            // this user-facing — no U+FFFD smoothing).
                             let ch = if (0xD800..0xDC00).contains(&cp) {
-                                // expect low surrogate
                                 if self.b.get(self.i) == Some(&b'\\')
                                     && self.b.get(self.i + 1) == Some(&b'u')
                                 {
-                                    let hex2 =
-                                        std::str::from_utf8(&self.b[self.i + 2..self.i + 6])?;
-                                    let lo = u32::from_str_radix(hex2, 16)?;
-                                    self.i += 6;
+                                    self.i += 2;
+                                    let lo = self.hex4()?;
+                                    if !(0xDC00..0xE000).contains(&lo) {
+                                        anyhow::bail!(
+                                            "\\u{cp:04x} not followed by a low surrogate"
+                                        );
+                                    }
                                     0x10000 + ((cp - 0xD800) << 10) + (lo - 0xDC00)
                                 } else {
-                                    anyhow::bail!("lone high surrogate");
+                                    anyhow::bail!("lone high surrogate \\u{cp:04x}");
                                 }
+                            } else if (0xDC00..0xE000).contains(&cp) {
+                                anyhow::bail!("lone low surrogate \\u{cp:04x}");
                             } else {
                                 cp
                             };
-                            s.push(char::from_u32(ch).unwrap_or('\u{FFFD}'));
+                            s.push(
+                                char::from_u32(ch)
+                                    .ok_or_else(|| anyhow::anyhow!("invalid scalar U+{ch:X}"))?,
+                            );
                         }
                         c => anyhow::bail!("bad escape '\\{}'", c as char),
                     }
@@ -391,7 +410,26 @@ impl<'a> Parser<'a> {
         let n: f64 = txt
             .parse()
             .map_err(|_| anyhow::anyhow!("invalid number '{txt}' at byte {start}"))?;
+        // `"1e999".parse::<f64>()` yields inf without erroring; JSON has
+        // no non-finite numbers, so reject rather than propagate them.
+        if !n.is_finite() {
+            anyhow::bail!("number '{txt}' at byte {start} overflows f64");
+        }
         Ok(Json::Num(n))
+    }
+
+    /// Four hex digits of a `\uXXXX` escape (cursor just past the `u`).
+    fn hex4(&mut self) -> anyhow::Result<u32> {
+        let end = self
+            .i
+            .checked_add(4)
+            .filter(|&e| e <= self.b.len())
+            .ok_or_else(|| anyhow::anyhow!("truncated \\u escape"))?;
+        let hex = std::str::from_utf8(&self.b[self.i..end])?;
+        let cp = u32::from_str_radix(hex, 16)
+            .map_err(|_| anyhow::anyhow!("bad \\u escape '\\u{hex}'"))?;
+        self.i = end;
+        Ok(cp)
     }
 }
 
@@ -444,6 +482,82 @@ mod tests {
         assert!(Json::parse("[1,]").is_err());
         assert!(Json::parse("12 34").is_err());
         assert!(Json::parse(r#"{"a" 1}"#).is_err());
+    }
+
+    #[test]
+    fn surrogate_pairs_decode_to_non_bmp_scalars() {
+        // 😀 = U+1F600 GRINNING FACE; 𐍈 = U+10348.
+        let v = Json::parse("\"\\uD83D\\uDE00 \\uD800\\uDF48\"").unwrap();
+        assert_eq!(v.as_str(), Some("\u{1F600} \u{10348}"));
+        // Escaped non-BMP round-trips through our writer (raw UTF-8 out).
+        let rt = Json::parse(&v.to_string()).unwrap();
+        assert_eq!(v, rt);
+        // BMP escapes still work, including lowercase hex and U+FFFD.
+        let esc = Json::parse("\"\\u00e9 \\uFFFD\"").unwrap();
+        assert_eq!(esc.as_str(), Some("é \u{FFFD}"));
+    }
+
+    #[test]
+    fn lone_and_mismatched_surrogates_are_rejected() {
+        // Lone high surrogate (end of string).
+        assert!(Json::parse(r#""\uD83D""#).is_err());
+        // Lone high surrogate followed by a normal escape.
+        assert!(Json::parse(r#""\uD83D\n""#).is_err());
+        // High surrogate followed by a non-low \u escape.
+        assert!(Json::parse(r#""\uD83DA""#).is_err());
+        // High surrogate followed by another high surrogate.
+        assert!(Json::parse(r#""\uD83D\uD83D""#).is_err());
+        // Lone low surrogate.
+        assert!(Json::parse(r#""\uDE00""#).is_err());
+        // Truncated second escape must error, not panic on a short slice.
+        assert!(Json::parse(r#""\uD83D\uDE"#).is_err());
+    }
+
+    #[test]
+    fn truncated_documents_error_cleanly() {
+        for src in [
+            "",
+            "{\"a\":",
+            "{\"a\": 1",
+            "[1, 2",
+            "\"abc",
+            "\"ab\\",
+            "\"ab\\u",
+            "\"ab\\u00",
+            "tru",
+            "-",
+        ] {
+            assert!(Json::parse(src).is_err(), "src={src:?}");
+        }
+    }
+
+    #[test]
+    fn deep_nesting_errors_instead_of_overflowing_the_stack() {
+        // Within the limit: fine.
+        let ok = "[".repeat(100) + &"]".repeat(100);
+        assert!(Json::parse(&ok).is_ok());
+        // Past the limit: typed error, not a stack overflow.
+        let arrs = "[".repeat(100_000) + &"]".repeat(100_000);
+        assert!(Json::parse(&arrs).is_err());
+        let objs = "{\"k\":".repeat(100_000) + "null" + &"}".repeat(100_000);
+        assert!(Json::parse(&objs).is_err());
+    }
+
+    #[test]
+    fn duplicate_keys_last_one_wins() {
+        let v = Json::parse(r#"{"a": 1, "a": 2}"#).unwrap();
+        assert_eq!(v.get("a").unwrap().as_f64(), Some(2.0));
+        assert_eq!(v.as_obj().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn oversized_numbers_are_rejected() {
+        assert!(Json::parse("1e999").is_err());
+        assert!(Json::parse("-1e999").is_err());
+        let long = "9".repeat(400);
+        assert!(Json::parse(&long).is_err());
+        // Subnormal underflow parses to 0.0 — finite, so accepted.
+        assert_eq!(Json::parse("1e-999").unwrap().as_f64(), Some(0.0));
     }
 
     #[test]

@@ -1,0 +1,369 @@
+//! End-to-end tests for the streaming HTTP front-end (`pissa::net`).
+//!
+//! Every test starts a real `NetServer` on a loopback port and talks to
+//! it over TCP with the crate's own minimal HTTP client — no mocks. The
+//! load-bearing property is trajectory equivalence: tokens streamed over
+//! the wire must be BIT-IDENTICAL to an in-process decode of the same
+//! request on an identically seeded engine (greedy decode is
+//! deterministic, and continuous ≡ sequential batching is pinned by the
+//! serve test suite, so the oracle is independent of HTTP interleaving).
+
+use pissa::adapter::{AdapterEngine, AdapterSpec};
+use pissa::model::{BaseModel, LINEARS};
+use pissa::net::{http, NetConfig, NetServer, StreamingClient, TenantPolicy};
+use pissa::runtime::ConfigInfo;
+use pissa::serve::{
+    drift_factors, DecodeScheduler, ModelServer, SeqId, SeqRequest, ServeConfig, StepObserver,
+};
+use pissa::util::json::{jarr, jnum, jstr, Json};
+use pissa::util::rng::Rng;
+
+const DIM: usize = 32;
+const D_FF: usize = 64;
+const LAYERS: usize = 2;
+const VOCAB: usize = 32;
+const N_ADAPTERS: usize = 3;
+const RANK: usize = 4;
+const SLOTS: usize = 4;
+const MAX_SEQ: usize = 96;
+const SEED: u64 = 2024;
+
+/// Deterministic engine build: same seed -> bit-identical weights, so a
+/// second build is a valid in-process oracle for the served one.
+fn build_engine(seed: u64) -> anyhow::Result<(AdapterEngine, Vec<String>)> {
+    let cfg = ConfigInfo {
+        name: "http-serve-test".into(),
+        kind: "decoder".into(),
+        vocab: VOCAB,
+        d_model: DIM,
+        n_layers: LAYERS,
+        n_heads: 2,
+        d_ff: D_FF,
+        seq_len: 8,
+        batch: 8,
+        eval_batch: 4,
+        n_classes: 0,
+        ranks: vec![RANK],
+    };
+    let mut rng = Rng::new(seed);
+    let base = BaseModel::random(&cfg, &mut rng);
+    let mut engine = AdapterEngine::new(base);
+    let names: Vec<String> = (0..N_ADAPTERS).map(|i| format!("tenant{i:02}")).collect();
+    for name in &names {
+        engine.attach(name, AdapterSpec::pissa(RANK), &mut rng)?;
+        for module in LINEARS {
+            drift_factors(&mut engine, name, module, 0.05, &mut rng)?;
+        }
+    }
+    Ok((engine, names))
+}
+
+fn serve_cfg() -> ServeConfig {
+    ServeConfig::full_model().max_seq(MAX_SEQ).slots(SLOTS)
+}
+
+fn start_server(net_cfg: NetConfig) -> anyhow::Result<NetServer> {
+    let (engine, _) = build_engine(SEED)?;
+    NetServer::start(&engine, serve_cfg(), net_cfg)
+}
+
+/// In-process greedy decode of one request on a fresh identical engine.
+fn oracle_tokens(
+    adapter: Option<&str>,
+    prompt: &[usize],
+    max_new: usize,
+) -> anyhow::Result<Vec<usize>> {
+    let (engine, _) = build_engine(SEED)?;
+    let mut server = ModelServer::new(&engine, serve_cfg())?;
+    let mut cache = server.new_cache()?;
+    let mut sched = DecodeScheduler::new();
+    sched.submit(SeqRequest {
+        adapter: adapter.map(|s| s.to_string()),
+        prompt: prompt.to_vec(),
+        max_new,
+        stop_token: None,
+    });
+    let fin = sched.run(&mut server, &mut cache)?;
+    Ok(fin[0].generated().to_vec())
+}
+
+fn gen_body(adapter: Option<&str>, prompt: &[usize], max_new: usize, stream: bool) -> Json {
+    let mut o = Json::obj();
+    o.set("adapter", adapter.map(jstr).unwrap_or(Json::Null));
+    o.set("prompt", jarr(prompt.iter().map(|&t| jnum(t as f64))));
+    o.set("max_new", jnum(max_new as f64));
+    o.set("stream", Json::Bool(stream));
+    o
+}
+
+fn tokens_of(j: &Json) -> Vec<usize> {
+    j.get("tokens")
+        .and_then(|v| v.as_arr())
+        .map(|a| a.iter().filter_map(|t| t.as_f64()).map(|f| f as usize).collect())
+        .unwrap_or_default()
+}
+
+#[test]
+fn non_streaming_generate_matches_in_process_decode() -> anyhow::Result<()> {
+    let server = start_server(NetConfig::default())?;
+    let addr = server.addr().to_string();
+    for (adapter, prompt, max_new) in [
+        (Some("tenant00"), vec![1usize, 5, 9], 6usize),
+        (Some("tenant02"), vec![3, 3, 7, 11], 8),
+        (None, vec![2, 4], 5),
+    ] {
+        let body = gen_body(adapter, &prompt, max_new, false);
+        let resp = http::request(&addr, "POST", "/v1/generate", Some(&body))?;
+        assert_eq!(resp.status, 200, "body={}", resp.body_str());
+        let j = resp.json()?;
+        assert_eq!(j.get("done"), Some(&Json::Bool(true)));
+        assert_eq!(j.get("prompt_len").and_then(|v| v.as_f64()), Some(prompt.len() as f64));
+        let want = oracle_tokens(adapter, &prompt, max_new)?;
+        assert_eq!(tokens_of(&j), want, "adapter={adapter:?} prompt={prompt:?}");
+    }
+    server.shutdown()
+}
+
+#[test]
+fn streaming_frames_meta_then_tokens_then_done_bit_identical() -> anyhow::Result<()> {
+    let server = start_server(NetConfig::default())?;
+    let addr = server.addr().to_string();
+    let prompt = [4usize, 8, 15];
+    let max_new = 7;
+    let body = gen_body(Some("tenant01"), &prompt, max_new, true);
+    let mut client = StreamingClient::post(&addr, "/v1/generate", &body)?;
+    assert_eq!(client.status, 200);
+    assert_eq!(
+        client.headers.get("transfer-encoding").map(|s| s.as_str()),
+        Some("chunked"),
+        "streaming must use chunked transfer-encoding"
+    );
+    let text = String::from_utf8(client.read_rest()?)?;
+    let lines: Vec<Json> =
+        text.lines().filter(|l| !l.is_empty()).map(Json::parse).collect::<Result<_, _>>()?;
+    // Frame order: meta, then token lines, then the terminal done line.
+    assert!(lines.len() >= 3, "got {} lines: {text}");
+    let meta = &lines[0];
+    assert_eq!(meta.get("adapter").and_then(|v| v.as_str()), Some("tenant01"));
+    assert!(meta.get("seq").is_some());
+    let done = lines.last().unwrap();
+    assert_eq!(done.get("done"), Some(&Json::Bool(true)));
+    assert_eq!(done.get("reason").and_then(|v| v.as_str()), Some("max_new"));
+    let mut streamed = Vec::new();
+    for (i, line) in lines[1..lines.len() - 1].iter().enumerate() {
+        let tok = line.get("token").and_then(|v| v.as_f64()).expect("token line") as usize;
+        let first = line.get("first").and_then(|v| v.as_bool()).unwrap();
+        assert_eq!(first, i == 0, "only the first token line carries first=true");
+        streamed.push(tok);
+    }
+    let want = oracle_tokens(Some("tenant01"), &prompt, max_new)?;
+    assert_eq!(streamed, want, "streamed tokens must be bit-identical to in-process decode");
+    assert_eq!(tokens_of(done), want, "done line repeats the full trajectory");
+    server.shutdown()
+}
+
+#[test]
+fn healthz_and_metrics_expose_engine_state() -> anyhow::Result<()> {
+    let server = start_server(NetConfig::default())?;
+    let addr = server.addr().to_string();
+    let h = http::request(&addr, "GET", "/healthz", None)?;
+    assert_eq!(h.status, 200, "body={}", h.body_str());
+    let hj = h.json()?;
+    assert_eq!(hj.get("ready"), Some(&Json::Bool(true)));
+    assert_eq!(hj.get("phase").and_then(|v| v.as_str()), Some("running"));
+    assert_eq!(hj.get("slots").and_then(|v| v.as_f64()), Some(SLOTS as f64));
+    assert!(hj.get("kv_budget_bytes").and_then(|v| v.as_f64()).unwrap() > 0.0);
+
+    // Serve one request so the counters move, then snapshot metrics.
+    let body = gen_body(Some("tenant00"), &[1, 2], 3, false);
+    let resp = http::request(&addr, "POST", "/v1/generate", Some(&body))?;
+    assert_eq!(resp.status, 200);
+    let m = http::request(&addr, "GET", "/metrics", None)?;
+    assert_eq!(m.status, 200);
+    let mj = m.json()?;
+    for field in ["requests", "rejections", "resident", "tenants", "phase", "hits"] {
+        assert!(mj.get(field).is_some(), "metrics missing '{field}': {mj}");
+    }
+    let tenants = mj.get("tenants").unwrap();
+    let t0 = tenants.get("tenant00").expect("tenant00 admission counters");
+    assert_eq!(t0.get("admitted").and_then(|v| v.as_f64()), Some(1.0));
+    server.shutdown()
+}
+
+#[test]
+fn rate_limited_tenant_gets_typed_429_while_open_tenant_proceeds() -> anyhow::Result<()> {
+    let cfg = NetConfig {
+        tenant_policies: vec![(
+            "tenant00".to_string(),
+            TenantPolicy { rate_per_s: 1e-6, burst: 1.0, max_inflight: 8 },
+        )],
+        ..NetConfig::default()
+    };
+    let server = start_server(cfg)?;
+    let addr = server.addr().to_string();
+    let body = gen_body(Some("tenant00"), &[1, 2], 2, false);
+    // The single bucket token admits the first request…
+    let ok = http::request(&addr, "POST", "/v1/generate", Some(&body))?;
+    assert_eq!(ok.status, 200, "body={}", ok.body_str());
+    // …and the second is a typed 429 with retry hints.
+    let limited = http::request(&addr, "POST", "/v1/generate", Some(&body))?;
+    assert_eq!(limited.status, 429);
+    assert!(limited.header("retry-after").is_some(), "429 must carry Retry-After");
+    assert!(limited.header("x-ratelimit-remaining").is_some());
+    let err = limited.json()?;
+    assert_eq!(
+        err.get("error").and_then(|e| e.get("code")).and_then(|v| v.as_str()),
+        Some("rate_limited")
+    );
+    // An unthrottled tenant is unaffected.
+    let open = gen_body(Some("tenant01"), &[1, 2], 2, false);
+    let resp = http::request(&addr, "POST", "/v1/generate", Some(&open))?;
+    assert_eq!(resp.status, 200, "body={}", resp.body_str());
+    // The rejection shows up in the admission counters.
+    let mj = http::request(&addr, "GET", "/metrics", None)?.json()?;
+    let t0 = mj.get("tenants").and_then(|t| t.get("tenant00")).unwrap();
+    assert_eq!(t0.get("rejected_rate_limited").and_then(|v| v.as_f64()), Some(1.0));
+    server.shutdown()
+}
+
+#[test]
+fn wire_errors_are_typed_status_codes() -> anyhow::Result<()> {
+    let server = start_server(NetConfig::default())?;
+    let addr = server.addr().to_string();
+    // (body, want_status, want_code)
+    let cases: Vec<(Json, u16, &str)> = vec![
+        (gen_body(Some("ghost"), &[1], 2, false), 404, "unknown_adapter"),
+        (gen_body(None, &[], 2, false), 422, "empty_prompt"),
+        (gen_body(None, &[VOCAB + 5], 2, false), 422, "token_out_of_range"),
+        (gen_body(None, &[1], MAX_SEQ + 1, false), 422, "seq_too_long"),
+    ];
+    for (body, status, code) in cases {
+        let resp = http::request(&addr, "POST", "/v1/generate", Some(&body))?;
+        assert_eq!(resp.status, status, "body={}", resp.body_str());
+        let got = resp.json()?;
+        assert_eq!(
+            got.get("error").and_then(|e| e.get("code")).and_then(|v| v.as_str()),
+            Some(code)
+        );
+    }
+    // Malformed JSON body.
+    let mut raw = Json::obj();
+    raw.set("not", jstr("a valid generate request"));
+    let resp = http::request(&addr, "POST", "/v1/generate", Some(&raw))?;
+    assert_eq!(resp.status, 400);
+    // Wrong method and unknown route.
+    assert_eq!(http::request(&addr, "GET", "/v1/generate", None)?.status, 405);
+    assert_eq!(http::request(&addr, "POST", "/healthz", None)?.status, 405);
+    assert_eq!(http::request(&addr, "GET", "/nope", None)?.status, 404);
+    server.shutdown()
+}
+
+#[test]
+fn drain_finishes_inflight_streams_and_rejects_new_requests() -> anyhow::Result<()> {
+    let server = start_server(NetConfig::default())?;
+    let addr = server.addr().to_string();
+    let max_new = 48;
+    // Long-running streamed generation in a background thread.
+    let body = gen_body(Some("tenant00"), &[7, 7, 7], max_new, true);
+    let stream_addr = addr.clone();
+    let inflight = std::thread::spawn(move || -> anyhow::Result<Vec<Json>> {
+        let mut c = StreamingClient::post(&stream_addr, "/v1/generate", &body)?;
+        anyhow::ensure!(c.status == 200, "stream status {}", c.status);
+        let text = String::from_utf8(c.read_rest()?)?;
+        text.lines().filter(|l| !l.is_empty()).map(|l| Ok(Json::parse(l)?)).collect()
+    });
+    // Begin the drain over the wire while the stream is (likely) running.
+    let d = http::request(&addr, "POST", "/admin/drain", None)?;
+    assert_eq!(d.status, 200);
+    // New work is refused with a typed 503 once draining.
+    let refused =
+        http::request(&addr, "POST", "/v1/generate", Some(&gen_body(None, &[1], 2, false)))?;
+    assert_eq!(refused.status, 503, "body={}", refused.body_str());
+    let code = refused.json()?;
+    assert_eq!(
+        code.get("error").and_then(|e| e.get("code")).and_then(|v| v.as_str()),
+        Some("draining")
+    );
+    // The in-flight stream still completes with zero truncation: meta +
+    // every token + the done line.
+    let lines = inflight.join().expect("stream thread")?;
+    let done = lines.last().expect("nonempty stream");
+    assert_eq!(done.get("done"), Some(&Json::Bool(true)), "stream truncated: {lines:?}");
+    assert_eq!(tokens_of(done).len(), max_new, "drained stream lost tokens");
+    assert_eq!(lines.len(), max_new + 2, "meta + tokens + done");
+    // Drain completes and the whole thread ensemble joins cleanly.
+    server.wait_engine_stopped();
+    server.shutdown()
+}
+
+#[test]
+fn concurrent_mixed_tenant_clients_all_complete_with_oracle_trajectories() -> anyhow::Result<()> {
+    let server = start_server(NetConfig::default())?;
+    let addr = server.addr().to_string();
+    let mut handles = Vec::new();
+    for i in 0..8usize {
+        let addr = addr.clone();
+        handles.push(std::thread::spawn(move || -> anyhow::Result<(usize, Vec<usize>)> {
+            let adapter = match i % 4 {
+                0 => Some("tenant00"),
+                1 => Some("tenant01"),
+                2 => Some("tenant02"),
+                _ => None,
+            };
+            let prompt = vec![(i % VOCAB), (i * 3 % VOCAB), 1];
+            let body = gen_body(adapter, &prompt, 5, false);
+            let resp = http::request(&addr, "POST", "/v1/generate", Some(&body))?;
+            anyhow::ensure!(resp.status == 200, "status {} body {}", resp.status, resp.body_str());
+            Ok((i, tokens_of(&resp.json()?)))
+        }));
+    }
+    for h in handles {
+        let (i, tokens) = h.join().expect("client thread")?;
+        let adapter = match i % 4 {
+            0 => Some("tenant00"),
+            1 => Some("tenant01"),
+            2 => Some("tenant02"),
+            _ => None,
+        };
+        let prompt = vec![(i % VOCAB), (i * 3 % VOCAB), 1];
+        let want = oracle_tokens(adapter, &prompt, 5)?;
+        assert_eq!(tokens, want, "client {i}: concurrent trajectory diverged from oracle");
+    }
+    server.shutdown()
+}
+
+/// The observer hook the engine thread streams through: every token is
+/// reported exactly once, with `first` set only on the prefill token.
+#[test]
+fn step_observed_reports_every_token_with_first_flags() -> anyhow::Result<()> {
+    struct Recorder {
+        events: Vec<(SeqId, usize, bool)>,
+    }
+    impl StepObserver for Recorder {
+        fn on_token(&mut self, id: SeqId, token: usize, first: bool) {
+            self.events.push((id, token, first));
+        }
+    }
+    let (engine, _) = build_engine(SEED)?;
+    let mut server = ModelServer::new(&engine, serve_cfg())?;
+    let mut cache = server.new_cache()?;
+    let mut sched = DecodeScheduler::new();
+    let a = sched.submit(SeqRequest::new("tenant00", vec![1, 2, 3], 4));
+    let b = sched.submit(SeqRequest::base(vec![9, 9], 3));
+    let mut rec = Recorder { events: Vec::new() };
+    let mut finished = Vec::new();
+    while !sched.idle() {
+        finished.extend(sched.step_observed(&mut server, &mut cache, &mut rec)?);
+    }
+    assert_eq!(finished.len(), 2);
+    for (id, want_n) in [(a, 4usize), (b, 3)] {
+        let seq: Vec<_> = rec.events.iter().filter(|(i, _, _)| *i == id).collect();
+        assert_eq!(seq.len(), want_n, "one on_token per generated token");
+        assert!(seq[0].2, "prefill token carries first=true");
+        assert!(seq[1..].iter().all(|(_, _, f)| !f));
+        let fin = finished.iter().find(|f| f.id == id).unwrap();
+        let observed: Vec<usize> = seq.iter().map(|(_, t, _)| *t).collect();
+        assert_eq!(observed, fin.generated(), "observer saw the retired trajectory");
+    }
+    Ok(())
+}
