@@ -7,6 +7,7 @@
 #![allow(dead_code)]
 
 use pissa::runtime::{Manifest, Runtime};
+use pissa::util::json::{jnum, Json};
 use std::path::PathBuf;
 
 pub fn art_dir() -> PathBuf {
@@ -38,4 +39,29 @@ pub fn banner(id: &str, title: &str) {
     println!("\n================================================================");
     println!("  {id} — {title}");
     println!("================================================================");
+}
+
+/// Write a bench's normalized perf summary to `results/BENCH_<name>.json`
+/// (and echo it as a `BENCH {json}` stdout line).
+///
+/// The trajectory contract (see README §Perf trajectory): every metric is
+/// a same-run RATIO (speedup vs a baseline measured in the same process,
+/// or a resident-bytes fraction) — never an absolute time, so summaries
+/// are comparable across machines. `pissa-bench-check` diffs these fresh
+/// files against the committed `benches/baselines/BENCH_<name>.json`
+/// trajectory and fails CI outside tolerance.
+pub fn write_bench_summary(name: &str, metrics: &[(&str, f64)]) -> anyhow::Result<PathBuf> {
+    let mut m = Json::obj();
+    for (key, val) in metrics {
+        m.set(key, jnum(*val));
+    }
+    let mut j = Json::obj();
+    j.set("bench", Json::Str(name.into()));
+    j.set("schema", Json::Str("ratio-trajectory-v1".into()));
+    j.set("metrics", m);
+    let path = results_dir().join(format!("BENCH_{name}.json"));
+    pissa::metrics::write_json(&path, &j)?;
+    println!("BENCH {j}");
+    println!("(normalized summary -> {})", path.display());
+    Ok(path)
 }

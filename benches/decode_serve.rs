@@ -279,6 +279,13 @@ fn main() -> anyhow::Result<()> {
     j.set("continuous_speedup_vs_sequential", jnum(speedup_seq));
     j.set("pass", Json::Bool(naive_ok));
     println!("BENCH {j}");
+    common::write_bench_summary(
+        "decode_serve",
+        &[
+            ("continuous_tok_s_x_naive", speedup_naive),
+            ("continuous_tok_s_x_sequential", speedup_seq),
+        ],
+    )?;
     println!("overall: {}", if naive_ok { "PASS" } else { "FAIL" });
 
     let out = common::results_dir().join("decode_serve.csv");

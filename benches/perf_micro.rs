@@ -1,6 +1,9 @@
 //! §Perf — microbenchmarks of every hot path, feeding EXPERIMENTS.md §Perf:
 //!   L3: GEMM GFLOP/s vs naive + vs practical peak, exact vs fast SVD,
 //!       NF4 quant/dequant throughput, PiSSA init end-to-end
+//!   trajectory: same-run speedups of the register-tiled kernels vs the
+//!       pre-PR reference kernels, written to results/BENCH_perf_micro.json
+//!       (normalized ratios only — see README §Perf trajectory)
 //!   runtime: train-step latency breakdown (marshal vs execute) for each
 //!       artifact, logits-fn latency (jnp vs pallas variant)
 
@@ -8,12 +11,78 @@ mod common;
 
 use pissa::adapter::AdapterSpec;
 use pissa::coordinator::{LrSchedule, Trainer};
-use pissa::linalg::{matmul, rsvd, svd, Mat};
+use pissa::linalg::{dequant_matmul_into, matmul, matmul_into, rsvd, svd, vecmat_into, Mat};
 use pissa::model::{apply_spec, BaseModel};
 use pissa::quant::nf4::{dequantize, quantize};
 use pissa::runtime::Manifest;
 use pissa::util::rng::Rng;
 use pissa::util::timer::{bench, Timer};
+
+/// The seed's pre-PR GEMM kernels, kept verbatim so the
+/// `packed_gemm_x_ref_*` / `row_kernel_x_ref_*` trajectory metrics are
+/// same-run, same-machine speedup RATIOS against the exact code this PR
+/// replaced — never absolute times. Both old and new kernels perform one
+/// multiply-add per C element in ascending k order, so the bit-identity
+/// probes below hold exactly.
+mod refkernel {
+    use pissa::linalg::Mat;
+    use pissa::util::par::par_rows_mut;
+
+    const MC: usize = 64; // rows of A per macro-block
+    const KC: usize = 256; // depth per macro-block
+    const NR: usize = 8; // register tile width
+
+    #[inline]
+    fn axpy_row(crow: &mut [f32], av: f32, brow: &[f32]) {
+        let n = crow.len();
+        let strips = n / NR;
+        for s in 0..strips {
+            let j0 = s * NR;
+            let cdst = &mut crow[j0..j0 + NR];
+            let bsrc = &brow[j0..j0 + NR];
+            for q in 0..NR {
+                cdst[q] += av * bsrc[q];
+            }
+        }
+        for j in strips * NR..n {
+            crow[j] += av * brow[j];
+        }
+    }
+
+    /// The seed's blocked-AXPY `matmul_into` (MC/KC macro-blocks, 8-wide
+    /// strip-mined inner AXPY, parallel over row blocks).
+    pub fn matmul_into(a: &Mat, b: &Mat, c: &mut Mat) {
+        let (m, k, n) = (a.rows, a.cols, b.cols);
+        assert_eq!((c.rows, c.cols), (m, n));
+        c.data.iter_mut().for_each(|x| *x = 0.0);
+        par_rows_mut(&mut c.data, m, n, MC.min(16), |lo, hi, cchunk| {
+            for kb in (0..k).step_by(KC) {
+                let ke = (kb + KC).min(k);
+                for ib in (lo..hi).step_by(MC) {
+                    let ie = (ib + MC).min(hi);
+                    for i in ib..ie {
+                        let arow = &a.data[i * k..(i + 1) * k];
+                        let crow = &mut cchunk[(i - lo) * n..(i - lo + 1) * n];
+                        for p in kb..ke {
+                            axpy_row(crow, arow[p], &b.data[p * n..(p + 1) * n]);
+                        }
+                    }
+                }
+            }
+        });
+    }
+
+    /// The seed's sequential single-row sweep (`vecmat_into` before the
+    /// 4-row-blocked decode kernel).
+    pub fn vecmat_into(x: &[f32], a: &Mat, y: &mut [f32]) {
+        assert_eq!(x.len(), a.rows);
+        assert_eq!(y.len(), a.cols);
+        y.iter_mut().for_each(|v| *v = 0.0);
+        for (p, &xv) in x.iter().enumerate() {
+            axpy_row(y, xv, a.row(p));
+        }
+    }
+}
 
 fn main() -> anyhow::Result<()> {
     common::banner("§Perf", "hot-path microbenchmarks");
@@ -31,6 +100,108 @@ fn main() -> anyhow::Result<()> {
         let gflops = 2.0 * (n as f64).powi(3) / stats.min / 1e9;
         println!("  {n:4}³: {} -> {gflops:.2} GFLOP/s (best)", stats.human());
     }
+
+    // ---- trajectory: packed kernels vs pre-PR reference -----------------
+    // Same-run ratios (reference best / packed best); machine-independent
+    // by construction. These feed results/BENCH_perf_micro.json, which
+    // `pissa-bench-check` diffs against benches/baselines/ in CI.
+    println!("\n[trajectory] register-tiled kernels vs pre-PR reference kernels:");
+    let mut metrics: Vec<(&str, f64)> = Vec::new();
+    for &n in &[256usize, 512, 1024] {
+        let a = Mat::randn(n, n, 0.0, 1.0, &mut rng);
+        let b = Mat::randn(n, n, 0.0, 1.0, &mut rng);
+        let mut c_new = Mat::zeros(n, n);
+        let mut c_ref = Mat::zeros(n, n);
+        if n == 256 {
+            // Bit-identity probe: the register-tiled kernel must produce
+            // the exact bits of the pre-PR kernel (one multiply-add per
+            // element, ascending k — the determinism contract).
+            matmul_into(&a, &b, &mut c_new);
+            refkernel::matmul_into(&a, &b, &mut c_ref);
+            assert_eq!(
+                c_new.data, c_ref.data,
+                "packed kernel diverged bitwise from the pre-PR kernel"
+            );
+            println!("  bit-identity probe at 256³: ok");
+        }
+        let iters = if full {
+            8
+        } else if n >= 1024 {
+            3
+        } else {
+            5
+        };
+        let s_new = bench(1, iters, || {
+            matmul_into(&a, &b, &mut c_new);
+            std::hint::black_box(&c_new);
+        });
+        let s_ref = bench(1, iters, || {
+            refkernel::matmul_into(&a, &b, &mut c_ref);
+            std::hint::black_box(&c_ref);
+        });
+        let ratio = s_ref.min / s_new.min;
+        let name = match n {
+            256 => "packed_gemm_x_ref_256",
+            512 => "packed_gemm_x_ref_512",
+            _ => "packed_gemm_x_ref_1024",
+        };
+        println!(
+            "  {n:4}³: packed {ratio:.2}x reference (ref {}, packed {})",
+            s_ref.human(),
+            s_new.human()
+        );
+        metrics.push((name, ratio));
+    }
+
+    // Single-row decode kernel vs the seed's sequential sweep, k = n = 1024.
+    {
+        let k = 1024usize;
+        let n = 1024usize;
+        let a = Mat::randn(k, n, 0.0, 1.0, &mut rng);
+        let x: Vec<f32> = (0..k).map(|i| (i % 17) as f32 * 0.1 - 0.8).collect();
+        let mut y_new = vec![0.0f32; n];
+        let mut y_ref = vec![0.0f32; n];
+        vecmat_into(&x, &a, &mut y_new);
+        refkernel::vecmat_into(&x, &a, &mut y_ref);
+        assert_eq!(y_new, y_ref, "row kernel diverged bitwise from the pre-PR sweep");
+        let iters = if full { 30 } else { 12 };
+        let s_new = bench(2, iters, || {
+            vecmat_into(&x, &a, &mut y_new);
+            std::hint::black_box(&y_new);
+        });
+        let s_ref = bench(2, iters, || {
+            refkernel::vecmat_into(&x, &a, &mut y_ref);
+            std::hint::black_box(&y_ref);
+        });
+        let ratio = s_ref.min / s_new.min;
+        println!("  row k=1024: blocked {ratio:.2}x sequential sweep");
+        metrics.push(("row_kernel_x_ref_k1024", ratio));
+    }
+
+    // Fused LUT dequant-GEMM vs materialize-then-multiply, m=8 decode batch.
+    {
+        let k = 1024usize;
+        let n = 1024usize;
+        let x = Mat::randn(8, k, 0.0, 1.0, &mut rng);
+        let w = quantize(&Mat::randn(k, n, 0.0, 0.05, &mut rng));
+        let mut c_fused = Mat::zeros(8, n);
+        let mut c_mat = Mat::zeros(8, n);
+        let iters = if full { 10 } else { 4 };
+        let s_fused = bench(1, iters, || {
+            dequant_matmul_into(&x, &w, &mut c_fused);
+            std::hint::black_box(&c_fused);
+        });
+        let s_mat = bench(1, iters, || {
+            let dense = dequantize(&w);
+            matmul_into(&x, &dense, &mut c_mat);
+            std::hint::black_box(&c_mat);
+        });
+        assert_eq!(c_fused.data, c_mat.data, "fused dequant diverged from materialized product");
+        let ratio = s_mat.min / s_fused.min;
+        println!("  fused dequant m=8, 1024²: {ratio:.2}x vs materialize+matmul");
+        metrics.push(("fused_dequant_x_materialize_1024", ratio));
+    }
+    common::write_bench_summary("perf_micro", &metrics)?;
 
     // ---- SVD ------------------------------------------------------------
     println!("\n[svd] exact Jacobi vs randomized (rank 16, niter 4):");
@@ -71,9 +242,20 @@ fn main() -> anyhow::Result<()> {
         bytes as f64 / sd.min / 1e9
     );
 
+    // ---- artifact-backed sections (skipped when artifacts/ is absent,
+    // e.g. the CI perf-trajectory job, which only needs the BENCH summary
+    // written above) ------------------------------------------------------
+    let (rt, manifest) = match common::load() {
+        Ok(v) => v,
+        Err(e) => {
+            println!("\n[init/step/logits] skipped — no artifacts ({e})");
+            println!("\n(record these in EXPERIMENTS.md §Perf)");
+            return Ok(());
+        }
+    };
+
     // ---- PiSSA init end-to-end -------------------------------------------
     println!("\n[init] full-model PiSSA init (fast SVD, niter 4):");
-    let (rt, manifest) = common::load()?;
     for config in ["tiny", "small"] {
         let cfg = manifest.config(config)?.clone();
         let base = BaseModel::random(&cfg, &mut rng);

@@ -191,6 +191,10 @@ fn main() -> anyhow::Result<()> {
     j.set("latency_target", jnum(2.0));
     j.set("pass", Json::Bool(bytes_ok && latency_ok));
     println!("BENCH {j}");
+    common::write_bench_summary(
+        "quant_serve",
+        &[("bytes_ratio", bytes_ratio), ("latency_ratio", latency_ratio)],
+    )?;
 
     let out = common::results_dir().join("quant_serve.csv");
     write_labeled_csv(

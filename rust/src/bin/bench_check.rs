@@ -1,0 +1,259 @@
+//! `pissa-bench-check` — perf-trajectory regression gate.
+//!
+//! Compares fresh bench summaries (`results/BENCH_<name>.json`, written by
+//! the `harness = false` bench binaries via `common::write_bench_summary`)
+//! against the committed trajectory in `benches/baselines/BENCH_<name>.json`
+//! and exits non-zero if any metric regresses beyond its tolerance.
+//!
+//! Every metric is a same-run normalized RATIO (e.g. packed-kernel speedup
+//! over the pre-PR reference measured in the same process, or a
+//! resident-bytes fraction) — never an absolute time — so one committed
+//! baseline is meaningful on any machine. Baseline entries look like:
+//!
+//! ```json
+//! {"value": 3.0, "tolerance": 0.33, "direction": "higher", "floor": 2.0}
+//! ```
+//!
+//! direction "higher" (speedups): fresh must be >= max(value*(1-tolerance),
+//! floor). direction "lower" (byte/latency ratios): fresh must be <=
+//! min(value*(1+tolerance), ceiling). `floor`/`ceiling` are optional hard
+//! acceptance bounds that tolerance can never relax past.
+//!
+//! Usage: `pissa-bench-check [--baselines DIR] [--fresh DIR]`
+//! (defaults: benches/baselines, results)
+
+use anyhow::{bail, Context, Result};
+use pissa::util::json::Json;
+use std::path::{Path, PathBuf};
+
+/// Outcome of one metric comparison.
+#[derive(Debug)]
+struct Check {
+    metric: String,
+    pass: bool,
+    detail: String,
+}
+
+/// Compare one fresh summary against its committed baseline. Returns a
+/// check per baseline metric; a metric missing from the fresh summary (or
+/// NaN) fails. Extra fresh metrics with no baseline are ignored — adding
+/// a metric to a bench before committing its trajectory must not go red.
+fn compare_summaries(baseline: &Json, fresh: &Json) -> Result<Vec<Check>> {
+    let base_metrics = baseline
+        .get("metrics")
+        .and_then(|m| m.as_obj())
+        .context("baseline missing 'metrics' object")?;
+    let fresh_metrics = fresh
+        .get("metrics")
+        .and_then(|m| m.as_obj())
+        .context("fresh summary missing 'metrics' object")?;
+    let mut checks = Vec::new();
+    for (name, spec) in base_metrics {
+        let value = spec.req_f64("value")?;
+        let tol = spec.req_f64("tolerance")?;
+        let direction = spec.req_str("direction")?;
+        let got = fresh_metrics.get(name).and_then(|v| v.as_f64());
+        let check = match (direction, got) {
+            (_, None) => Check {
+                metric: name.clone(),
+                pass: false,
+                detail: "metric missing from fresh summary".into(),
+            },
+            ("higher", Some(g)) => {
+                let mut bound = value * (1.0 - tol);
+                if let Some(floor) = spec.get("floor").and_then(|v| v.as_f64()) {
+                    bound = bound.max(floor);
+                }
+                Check {
+                    metric: name.clone(),
+                    // NaN compares false -> fails, as it should.
+                    pass: g >= bound,
+                    detail: format!("{g:.3} (need >= {bound:.3}; trajectory {value:.3})"),
+                }
+            }
+            ("lower", Some(g)) => {
+                let mut bound = value * (1.0 + tol);
+                if let Some(ceiling) = spec.get("ceiling").and_then(|v| v.as_f64()) {
+                    bound = bound.min(ceiling);
+                }
+                Check {
+                    metric: name.clone(),
+                    pass: g <= bound,
+                    detail: format!("{g:.3} (need <= {bound:.3}; trajectory {value:.3})"),
+                }
+            }
+            (d, _) => bail!("metric '{name}': unknown direction '{d}'"),
+        };
+        checks.push(check);
+    }
+    Ok(checks)
+}
+
+fn load_json(path: &Path) -> Result<Json> {
+    let src = std::fs::read_to_string(path)
+        .with_context(|| format!("reading bench summary {}", path.display()))?;
+    Json::parse(&src).with_context(|| format!("parsing {}", path.display()))
+}
+
+fn run(baselines: &Path, fresh_dir: &Path) -> Result<usize> {
+    let mut entries: Vec<PathBuf> = std::fs::read_dir(baselines)
+        .with_context(|| format!("listing baselines dir {}", baselines.display()))?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| {
+            let name = p.file_name().and_then(|n| n.to_str()).unwrap_or("");
+            name.starts_with("BENCH_") && name.ends_with(".json")
+        })
+        .collect();
+    entries.sort();
+    if entries.is_empty() {
+        bail!("no BENCH_*.json baselines in {}", baselines.display());
+    }
+    let mut failures = 0usize;
+    for base_path in &entries {
+        let fname = base_path.file_name().unwrap().to_str().unwrap();
+        let baseline = load_json(base_path)?;
+        let bench = baseline.req_str("bench")?.to_string();
+        let fresh_path = fresh_dir.join(fname);
+        if !fresh_path.exists() {
+            println!(
+                "FAIL {bench}: fresh summary {} not found (bench not run?)",
+                fresh_path.display()
+            );
+            failures += 1;
+            continue;
+        }
+        let fresh = load_json(&fresh_path)?;
+        for c in compare_summaries(&baseline, &fresh)? {
+            let tag = if c.pass { "PASS" } else { "FAIL" };
+            println!("{tag} {bench}/{}: {}", c.metric, c.detail);
+            if !c.pass {
+                failures += 1;
+            }
+        }
+    }
+    Ok(failures)
+}
+
+fn main() -> Result<()> {
+    let mut baselines = PathBuf::from("benches/baselines");
+    let mut fresh_dir = PathBuf::from("results");
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--baselines" if i + 1 < args.len() => {
+                baselines = PathBuf::from(&args[i + 1]);
+                i += 2;
+            }
+            "--fresh" if i + 1 < args.len() => {
+                fresh_dir = PathBuf::from(&args[i + 1]);
+                i += 2;
+            }
+            a => bail!("unknown arg '{a}' (flags: --baselines DIR, --fresh DIR)"),
+        }
+    }
+    println!(
+        "pissa-bench-check: {} vs committed trajectory {}",
+        fresh_dir.display(),
+        baselines.display()
+    );
+    let failures = run(&baselines, &fresh_dir)?;
+    if failures > 0 {
+        bail!("{failures} perf-trajectory check(s) failed");
+    }
+    println!("perf trajectory OK");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use pissa::util::json::{jnum, jstr, Json};
+
+    fn spec(value: f64, tol: f64, dir: &str, bound: Option<(&str, f64)>) -> Json {
+        let mut s = Json::obj();
+        s.set("value", jnum(value));
+        s.set("tolerance", jnum(tol));
+        s.set("direction", jstr(dir));
+        if let Some((k, v)) = bound {
+            s.set(k, jnum(v));
+        }
+        s
+    }
+
+    fn summary(metrics: &[(&str, Json)]) -> Json {
+        let mut m = Json::obj();
+        for (k, v) in metrics {
+            m.set(k, v.clone());
+        }
+        let mut j = Json::obj();
+        j.set("bench", jstr("t"));
+        j.set("metrics", m);
+        j
+    }
+
+    fn baseline() -> Json {
+        summary(&[
+            ("gemm_speedup", spec(3.0, 0.33, "higher", Some(("floor", 2.0)))),
+            ("bytes_ratio", spec(0.15, 0.2, "lower", Some(("ceiling", 0.35)))),
+        ])
+    }
+
+    #[test]
+    fn matching_trajectory_passes() {
+        let fresh = summary(&[("gemm_speedup", jnum(3.1)), ("bytes_ratio", jnum(0.14))]);
+        let checks = compare_summaries(&baseline(), &fresh).unwrap();
+        assert_eq!(checks.len(), 2);
+        assert!(checks.iter().all(|c| c.pass), "{checks:?}");
+    }
+
+    #[test]
+    fn red_on_slowdown() {
+        // The acceptance drill: halve every speedup ratio (and blow up the
+        // byte ratio) — the gate must go red, not shrug.
+        let fresh = summary(&[("gemm_speedup", jnum(1.5)), ("bytes_ratio", jnum(0.5))]);
+        let checks = compare_summaries(&baseline(), &fresh).unwrap();
+        let failures = checks.iter().filter(|c| !c.pass).count();
+        assert_eq!(failures, 2, "{checks:?}");
+    }
+
+    #[test]
+    fn floor_binds_tighter_than_tolerance() {
+        // value*(1-tol) = 2.01 > floor, so 2.005 fails even though it is
+        // above the hard floor of 2.0 ...
+        let base = summary(&[("s", spec(3.0, 0.33, "higher", Some(("floor", 2.0))))]);
+        let fresh = summary(&[("s", jnum(2.005))]);
+        assert!(!compare_summaries(&base, &fresh).unwrap()[0].pass);
+        // ... and with a looser tolerance the floor takes over: 1.9 < 2.0
+        // fails no matter how generous the tolerance is.
+        let base = summary(&[("s", spec(3.0, 0.9, "higher", Some(("floor", 2.0))))]);
+        let fresh = summary(&[("s", jnum(1.9))]);
+        assert!(!compare_summaries(&base, &fresh).unwrap()[0].pass);
+        let fresh = summary(&[("s", jnum(2.1))]);
+        assert!(compare_summaries(&base, &fresh).unwrap()[0].pass);
+    }
+
+    #[test]
+    fn ceiling_caps_lower_direction() {
+        let base = summary(&[("r", spec(0.3, 0.5, "lower", Some(("ceiling", 0.35))))]);
+        // value*(1+tol) = 0.45 but the ceiling holds the line at 0.35.
+        let fresh = summary(&[("r", jnum(0.4))]);
+        assert!(!compare_summaries(&base, &fresh).unwrap()[0].pass);
+        let fresh = summary(&[("r", jnum(0.34))]);
+        assert!(compare_summaries(&base, &fresh).unwrap()[0].pass);
+    }
+
+    #[test]
+    fn missing_and_nan_metrics_fail() {
+        let fresh = summary(&[("gemm_speedup", jnum(f64::NAN))]);
+        let checks = compare_summaries(&baseline(), &fresh).unwrap();
+        assert!(checks.iter().all(|c| !c.pass), "{checks:?}");
+    }
+
+    #[test]
+    fn unknown_direction_is_an_error() {
+        let base = summary(&[("s", spec(1.0, 0.1, "sideways", None))]);
+        let fresh = summary(&[("s", jnum(1.0))]);
+        assert!(compare_summaries(&base, &fresh).is_err());
+    }
+}

@@ -187,14 +187,10 @@ impl Mlp {
         let (_, logits) = self.forward(x);
         let mut correct = 0;
         for i in 0..x.rows {
-            let row = logits.row(i);
-            let pred = row
-                .iter()
-                .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                .unwrap()
-                .0;
-            if pred == y[i] {
+            // serve::argmax: NaN-safe (NaNs never win; all-NaN rows
+            // resolve to class 0 instead of panicking) with the serving
+            // stack's first-max tie-break.
+            if crate::serve::argmax(logits.row(i)) == y[i] {
                 correct += 1;
             }
         }
@@ -377,6 +373,20 @@ mod tests {
         let pissa_m = AdapterMlp::from_mlp(&mlp, 4, true, &mut rng);
         assert!((lora_m.loss(&x, &y) - base_loss).abs() < 1e-5);
         assert!((pissa_m.loss(&x, &y) - base_loss).abs() < 1e-4);
+    }
+
+    #[test]
+    fn accuracy_survives_nan_logits() {
+        // Regression: argmax used partial_cmp(..).unwrap() and panicked
+        // on NaN logits (e.g. a diverged fine-tune). NaN rows now resolve
+        // to class 0 via serve::argmax instead of aborting the eval.
+        let mut rng = Rng::new(3);
+        let mut mlp = Mlp::random(4, &mut rng);
+        mlp.w2.data.iter_mut().for_each(|v| *v = f32::NAN);
+        let x = Mat::from_vec(2, NPIX, vec![1.0; 2 * NPIX]);
+        let acc = mlp.accuracy(&x, &[0, 1]);
+        // Every row's logits are NaN -> every prediction is class 0.
+        assert!((acc - 0.5).abs() < 1e-12, "acc = {acc}");
     }
 
     #[test]

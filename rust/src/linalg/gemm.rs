@@ -1,44 +1,294 @@
-//! Blocked, packed, multithreaded SGEMM — the rust-side compute hot path.
+//! Register-tiled, packed, multithreaded SGEMM — the rust-side compute
+//! hot path.
 //!
 //! The coordinator uses this for adapter initialization (SVD power
 //! iterations are GEMM-bound), quantization-error analysis, the toy-MNIST
-//! experiment, and evaluation-side math. It is written to be auto-
-//! vectorizable: the inner loop is an 8-wide accumulator over a packed
-//! panel of B, i.e. a classic (MC×KC)·(KC×NR) micro-kernel layout without
-//! explicit SIMD intrinsics (portable, and LLVM vectorizes it well).
+//! experiment, evaluation-side math, and — through the serving stack —
+//! every prefill/decode forward. The kernel is a classic BLIS-style
+//! decomposition without explicit SIMD intrinsics (portable; LLVM
+//! vectorizes the constant-bound register tile):
 //!
-//! Benchmarked and tuned in `benches/perf_micro.rs`; see EXPERIMENTS.md §Perf.
+//! * the k dimension is cut into `KC`-deep panels; each panel of B is
+//!   **packed** once per worker into strip-major layout (`NR`-wide column
+//!   strips, contiguous in k) so the inner loop streams it linearly,
+//! * each `MR`-row band of A is packed k-major (`apack[p*MR + r]`) so the
+//!   micro-kernel broadcasts A values from consecutive memory,
+//! * the micro-kernel accumulates an `MR × NR` register tile over one
+//!   packed k-panel, loading the tile from C on entry and storing it back
+//!   on exit (C-carry).
+//!
+//! The C-carry detail is what keeps the **bit-determinism contract**: each
+//! C element still receives exactly one multiply-add per k index, in
+//! ascending k order, across any panel/tile/thread decomposition — the
+//! same arithmetic sequence as the pre-tiled kernel, the naive small-case
+//! loop, and the single-row `vecmat_into` path, so all of them agree bit
+//! for bit (pinned by `rust/tests/determinism.rs`).
+//!
+//! The quantized path (`dequant_matmul*`) shares the same driver: the NF4
+//! operand's nibbles are expanded **during packing** through a per-block
+//! 16-entry scaled LUT (`slut[c] = NF4_LEVELS[c] * scale`, bitwise equal
+//! to `Nf4Block::value`), so dequantization costs zero extra passes over
+//! what the dense packed kernel already pays — the dense W is never
+//! materialized, not even panel-wise outside the packed operand buffer.
+//!
+//! Benchmarked and tuned in `benches/perf_micro.rs`; see EXPERIMENTS.md
+//! §Perf. The per-machine trajectory lives in `benches/baselines/`.
 
 use super::mat::Mat;
-use crate::quant::nf4::Nf4Tensor;
+use crate::quant::nf4::{Nf4Tensor, BLOCK, NF4_LEVELS};
 use crate::util::par::par_rows_mut;
 
-/// Cache-blocking parameters (tuned on the image's CPU; see §Perf).
-const MC: usize = 64; // rows of A per macro-block
-const KC: usize = 256; // depth per macro-block
-const NR: usize = 8; // register tile width
+/// Register-tile height: rows of A accumulated at once in the
+/// micro-kernel. 6×16 f32 accumulators fit the 16 portable vector
+/// registers (12 × 8-lane plus broadcast/load scratch).
+const MR: usize = 6;
+/// Register-tile width: columns of B per packed strip.
+const NR: usize = 16;
+/// Depth of a packed k-panel for the dense kernel.
+const KC: usize = 256;
+/// Below this many MACs the naive ikj loop beats the packing overhead.
+const SMALL_ELEMS: usize = 32 * 32 * 32;
+/// Strip width of the fallback AXPY kernel ([`axpy_row`]).
+const AXPY_W: usize = 8;
 
-/// The shared inner micro-kernel of [`matmul_into`] and
-/// [`dequant_matmul_panel`]: `crow += av * brow` as an 8-wide
-/// strip-mined AXPY (LLVM vectorizes it). Both GEMM paths MUST go
-/// through this one routine — one multiply-add per element, left to
-/// right — so the dequant-GEMM's bit-identical-to-dense contract is
-/// pinned structurally, not by two copies staying in sync.
+/// Strip-mined AXPY: `crow += av * brow`, 8-wide (LLVM vectorizes it).
+/// This is the shared row kernel of every non-tiled path — the small /
+/// skinny GEMM cases and the single-row serving kernels. One multiply-add
+/// per element, left to right, so any composition of these paths keeps
+/// the fixed-k-order contract.
 #[inline]
 fn axpy_row(crow: &mut [f32], av: f32, brow: &[f32]) {
     let n = crow.len();
-    let strips = n / NR;
+    let strips = n / AXPY_W;
     for s in 0..strips {
-        let j0 = s * NR;
-        let cdst = &mut crow[j0..j0 + NR];
-        let bsrc = &brow[j0..j0 + NR];
-        for q in 0..NR {
+        let j0 = s * AXPY_W;
+        let cdst = &mut crow[j0..j0 + AXPY_W];
+        let bsrc = &brow[j0..j0 + AXPY_W];
+        for q in 0..AXPY_W {
             cdst[q] += av * bsrc[q];
         }
     }
-    for j in strips * NR..n {
+    for j in strips * AXPY_W..n {
         crow[j] += av * brow[j];
     }
+}
+
+/// The register micro-kernel: accumulate an `mr × nw` C tile (at rows
+/// `row0..row0+mr` of `cchunk`, columns `j0..j0+nw`) over one packed
+/// k-panel of depth `kc`. `apack` is k-major MR-wide (zero-padded rows
+/// past `mr`), `bstrip` is one k-contiguous NR-wide strip (zero-padded
+/// columns past `nw`).
+///
+/// The accumulator tile is **loaded from C and stored back** rather than
+/// starting from zero: per element this appends `kc` multiply-adds, in
+/// ascending k, onto whatever earlier k-panels already produced — the
+/// exact arithmetic sequence of a flat ascending-k sweep. Padded lanes
+/// multiply packed zeros and are never stored.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn micro_tile(
+    kc: usize,
+    apack: &[f32],
+    bstrip: &[f32],
+    cchunk: &mut [f32],
+    row0: usize,
+    mr: usize,
+    j0: usize,
+    nw: usize,
+    n: usize,
+) {
+    let mut acc = [[0.0f32; NR]; MR];
+    for r in 0..mr {
+        let base = (row0 + r) * n + j0;
+        acc[r][..nw].copy_from_slice(&cchunk[base..base + nw]);
+    }
+    for p in 0..kc {
+        let arow = &apack[p * MR..(p + 1) * MR];
+        let brow = &bstrip[p * NR..(p + 1) * NR];
+        for r in 0..MR {
+            let av = arow[r];
+            for q in 0..NR {
+                acc[r][q] += av * brow[q];
+            }
+        }
+    }
+    for r in 0..mr {
+        let base = (row0 + r) * n + j0;
+        cchunk[base..base + nw].copy_from_slice(&acc[r][..nw]);
+    }
+}
+
+/// Pack `mr` rows of A (rows `i0..i0+mr`, k range `kb..ke`) k-major into
+/// `apack[p*MR + r]`, scaled by `alpha` (exact for `alpha == 1.0`), with
+/// rows past `mr` zero-padded.
+fn pack_a(a: &Mat, i0: usize, mr: usize, kb: usize, ke: usize, alpha: f32, apack: &mut [f32]) {
+    let k = a.cols;
+    if mr < MR {
+        apack.fill(0.0);
+    }
+    for r in 0..mr {
+        let arow = &a.data[(i0 + r) * k + kb..(i0 + r) * k + ke];
+        for (p, &v) in arow.iter().enumerate() {
+            apack[p * MR + r] = alpha * v;
+        }
+    }
+}
+
+/// Pack the dense k-panel `b[kb..ke, :]` strip-major: strip `s` occupies
+/// `bpack[s*kc*NR ..][p*NR + q]`, tail columns zero-padded.
+fn pack_b_dense(b: &Mat, kb: usize, ke: usize, bpack: &mut [f32]) {
+    let n = b.cols;
+    let kc = ke - kb;
+    let nstrips = n.div_ceil(NR);
+    for p in 0..kc {
+        let brow = &b.data[(kb + p) * n..(kb + p + 1) * n];
+        for s in 0..nstrips {
+            let j0 = s * NR;
+            let nw = NR.min(n - j0);
+            let dst = &mut bpack[s * kc * NR + p * NR..s * kc * NR + (p + 1) * NR];
+            dst[..nw].copy_from_slice(&brow[j0..j0 + nw]);
+            dst[nw..].iter_mut().for_each(|v| *v = 0.0);
+        }
+    }
+}
+
+/// Pack the NF4 k-panel `w[kb..ke, :]` strip-major, expanding nibbles
+/// through a 16-entry **scaled LUT** rebuilt at each 64-value block
+/// boundary: `slut[c] = NF4_LEVELS[c] * scale` is bitwise equal to
+/// `Nf4Block::value`, so the packed panel is bit-identical to packing the
+/// dequantized dense operand — dequantization is fused into the packing
+/// pass the dense kernel pays anyway, with no side panel and no second
+/// sweep.
+fn pack_b_nf4(w: &Nf4Tensor, kb: usize, ke: usize, bpack: &mut [f32]) {
+    let n = w.cols;
+    let kc = ke - kb;
+    let nstrips = n.div_ceil(NR);
+    for p in 0..kc {
+        let mut flat = (kb + p) * n;
+        let mut j = 0usize;
+        while j < n {
+            // One run per NF4 block: rows may straddle the 64-value
+            // blocks, so the scale (and LUT) can change mid-row.
+            let scale = w.scales[flat / BLOCK];
+            let mut slut = [0.0f32; 16];
+            for (t, l) in slut.iter_mut().zip(NF4_LEVELS) {
+                *t = l * scale;
+            }
+            let run = n.min(j + (BLOCK - flat % BLOCK));
+            while j < run {
+                // Low nibble first (even flat), then high — the
+                // `Nf4Block::value` layout, extracted branchlessly.
+                let code = (w.codes[flat / 2] >> (4 * (flat % 2))) & 0x0F;
+                bpack[(j / NR) * kc * NR + p * NR + (j % NR)] = slut[code as usize];
+                flat += 1;
+                j += 1;
+            }
+        }
+        let tail = n % NR;
+        if tail != 0 {
+            let base = (nstrips - 1) * kc * NR + p * NR;
+            bpack[base + tail..base + NR].iter_mut().for_each(|v| *v = 0.0);
+        }
+    }
+}
+
+/// Shared packed-kernel driver for both operand kinds: `C (+)= (alpha·A) · P`
+/// where `pack_panel(kb, ke, bpack)` materializes the strip-major packed
+/// k-panel `P[kb..ke, :]` (dense copy or fused NF4 expansion). Parallel
+/// over disjoint row blocks of C; each worker owns its packed buffers and
+/// walks every k-panel itself (the duplicated pack is O(k·n) per worker
+/// vs the O(rows·k·n) MACs it feeds).
+fn packed_gemm_rows<P>(
+    a: &Mat,
+    n: usize,
+    kc_max: usize,
+    min_rows: usize,
+    alpha: f32,
+    c: &mut Mat,
+    pack_panel: P,
+) where
+    P: Fn(usize, usize, &mut [f32]) + Sync,
+{
+    let (m, k) = (a.rows, a.cols);
+    let nstrips = n.div_ceil(NR);
+    let kcap = kc_max.min(k);
+    par_rows_mut(&mut c.data, m, n, min_rows, |lo, hi, cchunk| {
+        let mut bpack = vec![0.0f32; nstrips * kcap * NR];
+        let mut apack = vec![0.0f32; kcap * MR];
+        for kb in (0..k).step_by(kc_max) {
+            let ke = (kb + kc_max).min(k);
+            let kc = ke - kb;
+            pack_panel(kb, ke, &mut bpack[..nstrips * kc * NR]);
+            for i0 in (lo..hi).step_by(MR) {
+                let mr = MR.min(hi - i0);
+                pack_a(a, i0, mr, kb, ke, alpha, &mut apack[..kc * MR]);
+                for s in 0..nstrips {
+                    let j0 = s * NR;
+                    let nw = NR.min(n - j0);
+                    micro_tile(
+                        kc,
+                        &apack[..kc * MR],
+                        &bpack[s * kc * NR..(s + 1) * kc * NR],
+                        cchunk,
+                        i0 - lo,
+                        mr,
+                        j0,
+                        nw,
+                        n,
+                    );
+                }
+            }
+        }
+    });
+}
+
+/// One entry point behind [`matmul_into`] (overwrite) and [`matmul_acc`]
+/// (accumulate): `C (+)= alpha · A·B`. The two differ ONLY in whether C
+/// is zeroed first — the C-carrying micro-kernel accumulates in place
+/// either way, so `matmul_acc` no longer materializes a temporary
+/// product.
+fn gemm_core(a: &Mat, b: &Mat, alpha: f32, c: &mut Mat, accumulate: bool) {
+    assert_eq!(a.cols, b.rows, "matmul: {}x{} · {}x{}", a.rows, a.cols, b.rows, b.cols);
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    assert_eq!((c.rows, c.cols), (m, n), "matmul: output shape");
+    if !accumulate {
+        c.data.iter_mut().for_each(|x| *x = 0.0);
+    }
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    if m * n * k < SMALL_ELEMS {
+        // Small case: naive triple loop, row-major friendly (ikj order).
+        // No zero-skip: every path that can stand in for a row of this
+        // product — the packed kernel, `vecmat`, the dequant-GEMM —
+        // performs one multiply-add per element in ascending p, and the
+        // decode path's bit-identity contract (single-row forward ≡ row
+        // of the batched forward) leans on that structural identity.
+        for i in 0..m {
+            for p in 0..k {
+                let av = alpha * a.data[i * k + p];
+                let brow = &b.data[p * n..(p + 1) * n];
+                let crow = &mut c.data[i * n..(i + 1) * n];
+                for j in 0..n {
+                    crow[j] += av * brow[j];
+                }
+            }
+        }
+        return;
+    }
+    if m < MR {
+        // Skinny batch: a padded register tile would mostly multiply
+        // zeros; the flat AXPY row sweep (same per-element sequence) wins.
+        for i in 0..m {
+            let arow = &a.data[i * k..(i + 1) * k];
+            let crow = &mut c.data[i * n..(i + 1) * n];
+            for p in 0..k {
+                axpy_row(crow, alpha * arow[p], &b.data[p * n..(p + 1) * n]);
+            }
+        }
+        return;
+    }
+    packed_gemm_rows(a, n, KC, 16, alpha, c, |kb, ke, bpack| pack_b_dense(b, kb, ke, bpack));
 }
 
 /// C = A · B. Panics on dimension mismatch.
@@ -147,19 +397,19 @@ pub fn matmul_tn(at: &Mat, b: &Mat) -> Mat {
     c
 }
 
-/// Rows of the NF4 operand decoded per streaming panel of
+/// Rows of the NF4 operand expanded per packed k-panel of
 /// [`dequant_matmul`]. At serving widths (n ≤ a few thousand) a panel is
-/// a few hundred KiB — large enough to amortize the decode, small enough
-/// to stay cache-resident across the row sweep.
+/// a few hundred KiB — large enough to amortize the LUT setup, small
+/// enough to stay cache-resident across the row-band sweep.
 pub const DQ_PANEL_ROWS: usize = 64;
 
 /// C = X · deq(W) with W kept in blockwise NF4 — the quantized-base
 /// serving kernel ("DequantGemm"). The dense W is NEVER materialized:
-/// each worker streams k-panels of `panel_rows` rows of W, decoding them
-/// into one reusable per-thread panel buffer
-/// ([`Nf4Tensor::dequantize_range`] handles panels that straddle the
-/// 64-value NF4 blocks), then runs the same ikj AXPY micro-kernel as
-/// [`matmul`] over the panel.
+/// each worker expands k-panels of `panel_rows` rows of W **directly into
+/// its packed operand buffer** through the per-block scaled LUT
+/// ([`pack_b_nf4`]), then runs the same register micro-kernel as
+/// [`matmul`] over the panel — dequantization rides the packing pass the
+/// dense kernel needs anyway.
 ///
 /// Every C element is accumulated in ascending p (k-index) order with one
 /// multiply-add per p — the exact arithmetic sequence of `matmul` on the
@@ -178,8 +428,8 @@ pub fn dequant_matmul_into(x: &Mat, w: &Nf4Tensor, c: &mut Mat) {
     dequant_matmul_panel_into(x, w, DQ_PANEL_ROWS, c);
 }
 
-/// [`dequant_matmul`] with an explicit panel height (rows of W decoded
-/// per streaming step). Exposed for the determinism/equivalence suites,
+/// [`dequant_matmul`] with an explicit panel height (rows of W expanded
+/// per packed k-panel). Exposed for the determinism/equivalence suites,
 /// which sweep panel sizes that don't divide the NF4 block size.
 pub fn dequant_matmul_panel(x: &Mat, w: &Nf4Tensor, panel_rows: usize) -> Mat {
     let mut c = Mat::zeros(x.rows, w.cols);
@@ -201,85 +451,33 @@ pub fn dequant_matmul_panel_into(x: &Mat, w: &Nf4Tensor, panel_rows: usize, c: &
     if m == 0 || n == 0 || k == 0 {
         return;
     }
-    // Parallel over row blocks of C (disjoint output regions, the
-    // determinism contract of util::par). Each worker owns one decode
-    // buffer and walks every k-panel itself: the duplicated decode is
-    // O(k·n) per worker vs the O(rows·k·n) MACs it feeds.
-    par_rows_mut(&mut c.data, m, n, 8, |lo, hi, cchunk| {
-        let mut panel = vec![0.0f32; panel_rows.min(k) * n];
-        for kb in (0..k).step_by(panel_rows) {
-            let ke = (kb + panel_rows).min(k);
-            let vals = &mut panel[..(ke - kb) * n];
-            w.dequantize_range(kb * n, ke * n, vals);
-            for i in lo..hi {
-                let xrow = x.row(i);
-                let crow = &mut cchunk[(i - lo) * n..(i - lo + 1) * n];
-                for p in kb..ke {
-                    axpy_row(crow, xrow[p], &vals[(p - kb) * n..(p - kb + 1) * n]);
-                }
-            }
-        }
-    });
-}
-
-/// C += alpha * A·B accumulated into an existing buffer.
-pub fn matmul_acc(a: &Mat, b: &Mat, alpha: f32, c: &mut Mat) {
-    assert_eq!(a.cols, b.rows);
-    assert_eq!((c.rows, c.cols), (a.rows, b.cols));
-    let prod = matmul(a, b);
-    for (ci, pi) in c.data.iter_mut().zip(&prod.data) {
-        *ci += alpha * pi;
-    }
-}
-
-/// Core: C = A · B with packing + parallel over row blocks of A.
-pub fn matmul_into(a: &Mat, b: &Mat, c: &mut Mat) {
-    let (m, k, n) = (a.rows, a.cols, b.cols);
-    assert_eq!((c.rows, c.cols), (m, n));
-    c.data.iter_mut().for_each(|x| *x = 0.0);
-    if m * n * k < 32 * 32 * 32 {
-        // Small case: naive triple loop, row-major friendly (ikj order).
-        // No zero-skip: every path that can stand in for a row of this
-        // product — the blocked kernel below, `vecmat`, the dequant-GEMM —
-        // performs one multiply-add per element in ascending p, and the
-        // decode path's bit-identity contract (single-row forward ≡ row
-        // of the batched forward) leans on that structural identity.
+    if m < MR {
+        // Skinny batch: the fused-LUT row sweep (shared with the decode
+        // fast path) beats a mostly-padded register tile.
         for i in 0..m {
-            for p in 0..k {
-                let av = a.data[i * k + p];
-                let brow = &b.data[p * n..(p + 1) * n];
-                let crow = &mut c.data[i * n..(i + 1) * n];
-                for j in 0..n {
-                    crow[j] += av * brow[j];
-                }
-            }
+            let crow = &mut c.data[i * n..(i + 1) * n];
+            dequant_row_axpy(x.row(i), w, crow);
         }
         return;
     }
+    packed_gemm_rows(x, n, panel_rows, 8, 1.0, c, |kb, ke, bpack| pack_b_nf4(w, kb, ke, bpack));
+}
 
-    // Parallelize over row-blocks of C; each worker owns disjoint C rows.
-    par_rows_mut(&mut c.data, m, n, MC.min(16), |lo, hi, cchunk| {
-        for kb in (0..k).step_by(KC) {
-            let ke = (kb + KC).min(k);
-            for ib in (lo..hi).step_by(MC) {
-                let ie = (ib + MC).min(hi);
-                // Micro-kernel: for each row i, accumulate over the k-panel
-                // into C[i, :] with NR-wide strips (ikj order keeps B row
-                // access contiguous; the j-strip fits registers).
-                for i in ib..ie {
-                    let arow = &a.data[i * k..(i + 1) * k];
-                    let crow = &mut cchunk[(i - lo) * n..(i - lo + 1) * n];
-                    for p in kb..ke {
-                        axpy_row(crow, arow[p], &b.data[p * n..(p + 1) * n]);
-                    }
-                }
-            }
-        }
-    });
+/// C += alpha * A·B accumulated in place through the C-carrying packed
+/// kernel — no intermediate product matrix. Each element still receives
+/// its k multiply-adds in ascending order (of `alpha·a[i,p]` against
+/// `b[p,j]`), appended onto the existing C value.
+pub fn matmul_acc(a: &Mat, b: &Mat, alpha: f32, c: &mut Mat) {
+    gemm_core(a, b, alpha, c, true);
+}
+
+/// Core: C = A · B, register-tiled + packed, parallel over row blocks.
+pub fn matmul_into(a: &Mat, b: &Mat, c: &mut Mat) {
+    gemm_core(a, b, 1.0, c, false);
 }
 
 /// y = x·A for a row vector x (length `a.rows`) — the single-request
-/// serving path. Sequential AXPY sweep in fixed p order (deterministic).
+/// serving path. Sequential sweep in fixed p order (deterministic).
 pub fn vecmat(x: &[f32], a: &Mat) -> Vec<f32> {
     let mut y = vec![0.0f32; a.cols];
     vecmat_into(x, a, &mut y);
@@ -287,41 +485,83 @@ pub fn vecmat(x: &[f32], a: &Mat) -> Vec<f32> {
 }
 
 /// [`vecmat`] overwriting a caller-owned buffer — the allocation-free
-/// single-row decode path. One multiply-add per element in ascending p
-/// order: bit-identical to the corresponding row of `matmul(X, a)` (the
-/// decode fast path's contract with the batched prefill).
+/// single-row decode path, tuned for the one-token-per-step hot loop:
+/// four A rows are swept per pass so each y element is loaded/stored once
+/// per four k steps instead of every step. Per element the adds still
+/// land one multiply-add at a time in ascending p order — bit-identical
+/// to the corresponding row of `matmul(X, a)` (the decode fast path's
+/// contract with the batched prefill).
 pub fn vecmat_into(x: &[f32], a: &Mat, y: &mut [f32]) {
     assert_eq!(x.len(), a.rows, "vecmat: x len {} vs {} rows", x.len(), a.rows);
     assert_eq!(y.len(), a.cols, "vecmat: y len {} vs {} cols", y.len(), a.cols);
     y.iter_mut().for_each(|v| *v = 0.0);
-    for (p, &xv) in x.iter().enumerate() {
-        axpy_row(y, xv, a.row(p));
+    let (k, n) = (a.rows, a.cols);
+    let mut p = 0usize;
+    while p + 4 <= k {
+        let (x0, x1, x2, x3) = (x[p], x[p + 1], x[p + 2], x[p + 3]);
+        let r0 = a.row(p);
+        let r1 = a.row(p + 1);
+        let r2 = a.row(p + 2);
+        let r3 = a.row(p + 3);
+        for j in 0..n {
+            let mut t = y[j];
+            t += x0 * r0[j];
+            t += x1 * r1[j];
+            t += x2 * r2[j];
+            t += x3 * r3[j];
+            y[j] = t;
+        }
+        p += 4;
+    }
+    while p < k {
+        axpy_row(y, x[p], a.row(p));
+        p += 1;
+    }
+}
+
+/// `y += x · deq(w)` with the NF4 nibbles expanded through the per-block
+/// scaled LUT directly in the AXPY loop — no panel buffer at all. The
+/// shared row kernel of [`dequant_vecmat_into`] and the skinny-batch case
+/// of [`dequant_matmul_panel_into`]; `y` must be pre-zeroed (or hold the
+/// values being accumulated onto).
+fn dequant_row_axpy(x: &[f32], w: &Nf4Tensor, y: &mut [f32]) {
+    let (k, n) = (w.rows, w.cols);
+    let mut flat = 0usize;
+    for (p, &xv) in x.iter().enumerate().take(k) {
+        debug_assert_eq!(flat, p * n);
+        let mut j = 0usize;
+        while j < n {
+            let scale = w.scales[flat / BLOCK];
+            let mut slut = [0.0f32; 16];
+            for (t, l) in slut.iter_mut().zip(NF4_LEVELS) {
+                *t = l * scale;
+            }
+            let run = n.min(j + (BLOCK - flat % BLOCK));
+            while j < run {
+                let code = (w.codes[flat / 2] >> (4 * (flat % 2))) & 0x0F;
+                y[j] += xv * slut[code as usize];
+                flat += 1;
+                j += 1;
+            }
+        }
     }
 }
 
 /// y = x·deq(W) for a row vector over a blockwise-NF4 operand — the
-/// single-row leg of the streaming dequant-GEMM. Decodes k-panels of
-/// [`DQ_PANEL_ROWS`] rows into one stack-local buffer and accumulates in
-/// ascending p order, so the result is bit-identical both to the
-/// corresponding row of [`dequant_matmul`] and to
-/// `vecmat(x, &dequantize(w))`.
+/// single-row leg of the streaming dequant-GEMM, fully fused: nibbles are
+/// expanded through the 16-entry scaled LUT inside the accumulation loop,
+/// with no decode buffer. Accumulates in ascending p order with
+/// `slut[code]` bitwise equal to `Nf4Block::value`, so the result is
+/// bit-identical both to the corresponding row of [`dequant_matmul`] and
+/// to `vecmat(x, &dequantize(w))`.
 pub fn dequant_vecmat_into(x: &[f32], w: &Nf4Tensor, y: &mut [f32]) {
     assert_eq!(x.len(), w.rows, "dequant_vecmat: x len {} vs {} rows", x.len(), w.rows);
     assert_eq!(y.len(), w.cols, "dequant_vecmat: y len {} vs {} cols", y.len(), w.cols);
     y.iter_mut().for_each(|v| *v = 0.0);
-    let (k, n) = (w.rows, w.cols);
-    if k == 0 || n == 0 {
+    if w.rows == 0 || w.cols == 0 {
         return;
     }
-    let mut panel = vec![0.0f32; DQ_PANEL_ROWS.min(k) * n];
-    for kb in (0..k).step_by(DQ_PANEL_ROWS) {
-        let ke = (kb + DQ_PANEL_ROWS).min(k);
-        let vals = &mut panel[..(ke - kb) * n];
-        w.dequantize_range(kb * n, ke * n, vals);
-        for p in kb..ke {
-            axpy_row(y, x[p], &vals[(p - kb) * n..(p - kb + 1) * n]);
-        }
-    }
+    dequant_row_axpy(x, w, y);
 }
 
 /// y = A·x for a vector x.
@@ -368,7 +608,19 @@ mod tests {
     #[test]
     fn matmul_matches_naive_various_shapes() {
         let mut rng = Rng::new(2);
-        for &(m, k, n) in &[(1, 1, 1), (3, 5, 7), (17, 9, 33), (64, 64, 64), (100, 257, 65), (129, 70, 200)] {
+        // Shapes cover all three dispatches: small naive, skinny (m < MR)
+        // AXPY sweep, and the packed register kernel with partial tiles
+        // in every dimension (m % MR, n % NR, k % KC all nonzero).
+        for &(m, k, n) in &[
+            (1, 1, 1),
+            (3, 5, 7),
+            (17, 9, 33),
+            (5, 100, 80),   // skinny: m < MR above the small cutoff
+            (7, 40, 130),   // packed: partial row band + partial strip
+            (64, 64, 64),
+            (100, 257, 65), // packed: k straddles a KC panel
+            (129, 70, 200),
+        ] {
             let a = Mat::randn(m, k, 0.0, 1.0, &mut rng);
             let b = Mat::randn(k, n, 0.0, 1.0, &mut rng);
             close(&matmul(&a, &b), &naive(&a, &b), 1e-4);
@@ -431,9 +683,32 @@ mod tests {
         let a = Mat::randn(8, 8, 0.0, 1.0, &mut rng);
         let b = Mat::randn(8, 8, 0.0, 1.0, &mut rng);
         let mut c = Mat::zeros(8, 8);
+        // In-place accumulation reassociates the cancellation (the second
+        // pass subtracts products one by one instead of a materialized
+        // prod matrix), so exact zero is no longer guaranteed — only
+        // zero to fp accumulation error.
         matmul_acc(&a, &b, 1.0, &mut c);
         matmul_acc(&a, &b, -1.0, &mut c);
-        assert!(c.fro() < 1e-5);
+        assert!(c.fro() < 1e-4, "fro = {}", c.fro());
+    }
+
+    #[test]
+    fn acc_matches_reference_through_packed_path() {
+        // Accumulate onto a non-zero C through the register kernel
+        // (shape above the small cutoff, m ≥ MR) and check against the
+        // explicit c0 + alpha·A·B reference.
+        let mut rng = Rng::new(12);
+        let a = Mat::randn(40, 80, 0.0, 1.0, &mut rng);
+        let b = Mat::randn(80, 50, 0.0, 1.0, &mut rng);
+        let c0 = Mat::randn(40, 50, 0.0, 1.0, &mut rng);
+        let mut c = c0.clone();
+        matmul_acc(&a, &b, 0.5, &mut c);
+        let prod = naive(&a, &b);
+        let mut want = c0.clone();
+        for (wi, pi) in want.data.iter_mut().zip(&prod.data) {
+            *wi += 0.5 * pi;
+        }
+        close(&c, &want, 1e-4);
     }
 
     #[test]
@@ -441,7 +716,7 @@ mod tests {
         use crate::quant::nf4::{dequantize, quantize, BLOCK};
         let mut rng = Rng::new(9);
         // Shapes straddle the NF4 block size (cols not multiples of 64)
-        // and cover both matmul paths (small naive + blocked parallel).
+        // and cover all dispatches (small/skinny sweep + packed kernel).
         for &(m, k, n) in &[(1usize, 9usize, 11usize), (7, 70, 37), (33, 64, 300), (64, 48, 96)] {
             let x = Mat::randn(m, k, 0.0, 1.0, &mut rng);
             let w = quantize(&Mat::randn(k, n, 0.0, 0.5, &mut rng));
@@ -485,10 +760,10 @@ mod tests {
     fn row_fast_paths_are_bit_identical_to_batched_rows() {
         use crate::quant::nf4::quantize;
         // The decode fast path's contract: vecmat_into / dequant_vecmat_into
-        // reproduce rows of the batched GEMMs BIT for bit, covering both
-        // the small naive and the blocked parallel dispatch.
+        // reproduce rows of the batched GEMMs BIT for bit, covering the
+        // small naive, skinny sweep, and packed register dispatches.
         let mut rng = Rng::new(11);
-        for &(m, k, n) in &[(3usize, 9usize, 11usize), (40, 70, 300)] {
+        for &(m, k, n) in &[(3usize, 9usize, 11usize), (5, 100, 80), (40, 70, 300)] {
             let x = Mat::randn(m, k, 0.0, 1.0, &mut rng);
             let b = Mat::randn(k, n, 0.0, 1.0, &mut rng);
             let dense = matmul(&x, &b);

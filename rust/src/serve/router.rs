@@ -708,6 +708,19 @@ mod tests {
     }
 
     #[test]
+    fn argmax_is_nan_safe() {
+        // NaN comparisons are false, so NaNs never win and never panic:
+        // the scan just skips them (the contract toy::Mlp::accuracy now
+        // shares).
+        assert_eq!(argmax(&[f32::NAN, 2.0, 1.0]), 1);
+        assert_eq!(argmax(&[2.0, f32::NAN, 3.0]), 2);
+        // All-NaN (or empty) input degrades to index 0 rather than
+        // aborting the decode step.
+        assert_eq!(argmax(&[f32::NAN, f32::NAN]), 0);
+        assert_eq!(argmax(&[]), 0);
+    }
+
+    #[test]
     fn scheduler_is_generic_over_model_requests() {
         let mut s: Scheduler<ModelRequest> = Scheduler::new(2);
         s.submit(ModelRequest::new("t", 3));

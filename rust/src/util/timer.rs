@@ -38,7 +38,11 @@ pub struct BenchStats {
 impl BenchStats {
     pub fn from_samples(mut samples: Vec<f64>) -> BenchStats {
         assert!(!samples.is_empty());
-        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // total_cmp: a NaN sample (e.g. a degenerate latency ratio fed in
+        // by a caller) must not panic the stats path — under the IEEE
+        // total order NaNs sort to the ends and the finite percentiles
+        // stay meaningful.
+        samples.sort_by(f64::total_cmp);
         let n = samples.len();
         let mean = samples.iter().sum::<f64>() / n as f64;
         let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
@@ -101,6 +105,18 @@ mod tests {
         assert_eq!(s.n, 4);
         assert!(s.mean > 1.0 && s.mean < 10.0);
         assert!(s.p50 <= s.p95);
+    }
+
+    #[test]
+    fn nan_samples_do_not_panic() {
+        // Regression: this used to panic in sort_by(partial_cmp().unwrap()).
+        let s = BenchStats::from_samples(vec![2.0, f64::NAN, 1.0, 3.0]);
+        assert_eq!(s.n, 4);
+        // Positive NaN sorts last under total_cmp: the low-end stats stay
+        // finite, the NaN surfaces at the max end instead of panicking.
+        assert_eq!(s.min, 1.0);
+        assert!(s.p50.is_finite());
+        assert!(s.max.is_nan());
     }
 
     #[test]

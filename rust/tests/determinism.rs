@@ -7,11 +7,15 @@
 //! the same k-order regardless of how the partitions land on threads. CI
 //! additionally runs the whole suite under both thread counts.
 //!
-//! The tests in this binary mutate the process environment, so they
-//! serialize on a shared lock (cargo runs `#[test]`s concurrently).
+//! The tests in this binary pin the process-global parallelism degree
+//! (via `util::par::with_parallelism` — the cached `PISSA_THREADS` parse
+//! is process-wide), so they serialize on a shared lock (cargo runs
+//! `#[test]`s concurrently).
 
 use pissa::adapter::{AdapterEngine, AdapterSpec};
-use pissa::linalg::{dequant_matmul, dequant_matmul_panel, matmul, matmul_nt, matmul_tn, Mat};
+use pissa::linalg::{
+    dequant_matmul, dequant_matmul_panel, matmul, matmul_nt, matmul_tn, vecmat, Mat,
+};
 use pissa::model::{BaseModel, LINEARS};
 use pissa::quant::{dequantize, quantize};
 use pissa::runtime::ConfigInfo;
@@ -24,17 +28,14 @@ use std::sync::Mutex;
 
 static ENV_LOCK: Mutex<()> = Mutex::new(());
 
-/// Run `f` under a pinned PISSA_THREADS value, restoring the previous
-/// setting afterwards. Callers must hold ENV_LOCK.
+/// Run `f` under a pinned parallelism degree, restoring the previous
+/// setting afterwards. Callers must hold ENV_LOCK (the override is
+/// process-global). Uses the scoped in-process override rather than the
+/// `PISSA_THREADS` env var: the env parse is cached once per process, so
+/// mutating the environment mid-run would silently pin every comparison
+/// to the first value seen.
 fn with_threads<T>(n: usize, f: impl FnOnce() -> T) -> T {
-    let prev = std::env::var("PISSA_THREADS").ok();
-    std::env::set_var("PISSA_THREADS", n.to_string());
-    let out = f();
-    match prev {
-        Some(v) => std::env::set_var("PISSA_THREADS", v),
-        None => std::env::remove_var("PISSA_THREADS"),
-    }
-    out
+    pissa::util::par::with_parallelism(n, f)
 }
 
 #[test]
@@ -100,6 +101,67 @@ fn dequant_gemm_bit_identical_across_threads_and_panel_sizes() {
     let d8 = with_threads(8, || dequant_matmul(&x_big, &w));
     assert_eq!(d1.data, d8.data, "default-panel dequant_matmul drifted");
     assert_eq!(d1.data, want_big.data);
+}
+
+#[test]
+fn packed_kernel_edge_shapes_bit_identical() {
+    // The register-tiled packed kernel has partial tiles in every
+    // dimension (m % MR, n % NR, k % KC) plus small/skinny dispatch
+    // cutoffs; each edge shape must be bit-identical across thread
+    // counts AND to the single-row kernel swept row by row (the decode
+    // fast path's structural contract).
+    let _guard = ENV_LOCK.lock().unwrap();
+    let mut rng = Rng::new(31);
+    for &(m, k, n) in &[
+        (3usize, 64usize, 64usize), // threads > rows (skinny sweep)
+        (40, 300, 48),              // k spans two KC panels, ragged tail
+        (33, 70, 5),                // n < NR: one partial strip
+        (2, 80, 300),               // m < MR above the small cutoff
+        (64, 257, 96),              // k = KC + 1, several row chunks
+    ] {
+        let a = Mat::randn(m, k, 0.0, 1.0, &mut rng);
+        let b = Mat::randn(k, n, 0.0, 1.0, &mut rng);
+        let t1 = with_threads(1, || matmul(&a, &b));
+        let t8 = with_threads(8, || matmul(&a, &b));
+        assert_eq!(t1.data, t8.data, "{m}x{k}x{n}: thread drift");
+        for i in 0..m {
+            let y = with_threads(8, || vecmat(a.row(i), &b));
+            assert_eq!(
+                y.as_slice(),
+                t1.row(i),
+                "{m}x{k}x{n} row {i}: row kernel diverged from packed kernel"
+            );
+        }
+    }
+}
+
+#[test]
+fn packed_nf4_kernel_block_straddling_panels_bit_identical() {
+    // NF4 scales are per-64-value-block over the FLATTENED buffer, so
+    // packed panels and register strips routinely straddle block
+    // boundaries mid-row (n % 64 != 0). Every (shape × panel × threads)
+    // combination must reproduce the dequantize-then-matmul reference
+    // bit for bit.
+    let _guard = ENV_LOCK.lock().unwrap();
+    let mut rng = Rng::new(33);
+    for &(m, k, n) in &[
+        (3usize, 70usize, 37usize), // skinny sweep, ragged blocks
+        (9, 130, 5),                // packed path, n < NR
+        (40, 70, 300),              // packed path, parallel row chunks
+    ] {
+        let x = Mat::randn(m, k, 0.0, 1.0, &mut rng);
+        let w = quantize(&Mat::randn(k, n, 0.0, 0.5, &mut rng));
+        let want = with_threads(1, || matmul(&x, &dequantize(&w)));
+        for panel in [1usize, 63, 64, 65, 100] {
+            let p1 = with_threads(1, || dequant_matmul_panel(&x, &w, panel));
+            let p8 = with_threads(8, || dequant_matmul_panel(&x, &w, panel));
+            assert_eq!(p1.data, p8.data, "{m}x{k}x{n} panel={panel}: thread drift");
+            assert_eq!(
+                p1.data, want.data,
+                "{m}x{k}x{n} panel={panel}: diverged from dequant-once reference"
+            );
+        }
+    }
 }
 
 #[test]
