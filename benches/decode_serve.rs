@@ -23,8 +23,20 @@
 //! the naive tokens/s at 8 slots (the continuous-vs-sequential ratio is
 //! reported alongside).
 //!
+//! A fourth section measures CHUNKED PREFILL: open-loop mixed traffic
+//! (one arrival per scheduler step, a long prompt every ~22 requests)
+//! served with `prefill_chunk = 8` vs one-shot prefill. Chunking bounds
+//! how long a freshly-admitted long prompt can stall everyone else's
+//! first token, so the TTFT p95 of the mixed stream must drop to
+//! ≤ 0.7× the one-shot value — with bit-identical trajectories
+//! (probe-asserted: chunked prefill is a scheduler change, not a model
+//! change).
+//!
 //! Quick mode (default) trims the request count, not the shape; set
-//! PISSA_BENCH_FULL=1 for more sequences.
+//! PISSA_BENCH_FULL=1 for more sequences. PISSA_SERVE_HEADS /
+//! PISSA_SERVE_KV_HEADS switch every section onto a multi-head (+RoPE)
+//! attention layout — CI's head-config matrix runs single-head and
+//! 4-head/2-KV-head GQA.
 
 mod common;
 
@@ -33,8 +45,8 @@ use pissa::metrics::write_labeled_csv;
 use pissa::model::{BaseModel, LINEARS};
 use pissa::runtime::ConfigInfo;
 use pissa::serve::{
-    argmax, drift_factors, DecodeScheduler, FinishedSeq, ModelServer, SeqRequest, ServeConfig,
-    ServeStrategy,
+    argmax, drift_factors, DecodeScheduler, FinishedSeq, ModelServer, SeqId, SeqRequest,
+    ServeConfig, ServeStrategy, StepObserver,
 };
 use pissa::util::timer::Timer;
 use pissa::util::rng::Rng;
@@ -51,6 +63,14 @@ const PROMPT_LEN: usize = 12;
 const MAX_NEW: usize = 24;
 const MAX_SEQ: usize = PROMPT_LEN + MAX_NEW;
 const BASE_FRAC: f64 = 0.125;
+/// Long-prompt length for the chunked-prefill TTFT section.
+const LONG_LEN: usize = 48;
+/// One long prompt per this many mixed-traffic requests — few enough
+/// that the p95 rank always lands on a SHORT request (the longs' own
+/// first tokens legitimately arrive later under chunking).
+const LONG_EVERY: usize = 22;
+/// Prefill chunk size for the chunked contender.
+const CHUNK: usize = 8;
 
 fn build_engine(rng: &mut Rng) -> anyhow::Result<(AdapterEngine, Vec<String>)> {
     let cfg = ConfigInfo {
@@ -96,11 +116,27 @@ fn workload(names: &[String], n: usize) -> Vec<SeqRequest> {
         .collect()
 }
 
+/// CI head-config matrix hook: PISSA_SERVE_HEADS / PISSA_SERVE_KV_HEADS
+/// switch the whole bench onto a multi-head (+RoPE) attention layout;
+/// unset keeps the legacy single-head default.
+fn head_overrides(cfg: ServeConfig) -> ServeConfig {
+    let var = |k: &str| std::env::var(k).ok().and_then(|s| s.parse::<usize>().ok());
+    match var("PISSA_SERVE_HEADS") {
+        Some(n) if n > 1 => {
+            let kv = var("PISSA_SERVE_KV_HEADS").unwrap_or(n);
+            cfg.heads(n, kv).rope_theta(10000.0)
+        }
+        _ => cfg,
+    }
+}
+
 fn serve_cfg(slots: usize) -> ServeConfig {
-    ServeConfig::full_model()
-        .strategy(ServeStrategy::Fused)
-        .max_seq(MAX_SEQ)
-        .slots(slots)
+    head_overrides(
+        ServeConfig::full_model()
+            .strategy(ServeStrategy::Fused)
+            .max_seq(MAX_SEQ)
+            .slots(slots),
+    )
 }
 
 /// KV-cached continuous batching at `slots`.
@@ -148,6 +184,95 @@ fn run_naive(
         outs.push(tokens);
     }
     Ok((outs, server, t.secs()))
+}
+
+/// Mixed traffic for the chunked-prefill section: mostly interactive
+/// prompts, with a LONG_LEN-token prompt every LONG_EVERY requests.
+fn mixed_workload(names: &[String], n: usize) -> Vec<SeqRequest> {
+    let mut rng = Rng::new(177);
+    (0..n)
+        .map(|i| {
+            let long = i % LONG_EVERY == LONG_EVERY / 2;
+            let plen = if long { LONG_LEN } else { 4 + (rng.uniform() * 4.0) as usize };
+            let prompt: Vec<usize> =
+                (0..plen).map(|_| (rng.uniform() * VOCAB as f64) as usize % VOCAB).collect();
+            if names.is_empty() || rng.uniform() < BASE_FRAC {
+                SeqRequest::base(prompt, 4)
+            } else {
+                SeqRequest::new(rng.choice(names), prompt, 4)
+            }
+        })
+        .collect()
+}
+
+/// Wall-clock first-token times, recorded the moment the scheduler
+/// emits them.
+struct TtftProbe {
+    clock: Timer,
+    firsts: Vec<(SeqId, f64)>,
+}
+
+impl StepObserver for TtftProbe {
+    fn on_token(&mut self, id: SeqId, _token: usize, first: bool) {
+        if first {
+            self.firsts.push((id, self.clock.secs()));
+        }
+    }
+}
+
+/// Open-loop mixed traffic: ONE request arrives per scheduler step (so
+/// TTFT measures in-step head-of-line blocking, not closed-batch queue
+/// depth), served with `prefill_chunk = chunk`. Returns the finished
+/// trajectories (id order) and per-request arrival→first-token TTFTs in
+/// submission order.
+fn run_mixed_traffic(
+    engine: &AdapterEngine,
+    reqs: &[SeqRequest],
+    chunk: usize,
+) -> anyhow::Result<(Vec<FinishedSeq>, Vec<f64>)> {
+    let cfg = head_overrides(
+        ServeConfig::full_model()
+            .strategy(ServeStrategy::Fused)
+            .max_seq(LONG_LEN + 8)
+            .slots(SLOTS)
+            .prefill_chunk(chunk),
+    );
+    let mut server = ModelServer::new(engine, cfg)?;
+    let mut cache = server.new_cache()?;
+    let mut sched = DecodeScheduler::new();
+    let mut probe = TtftProbe { clock: Timer::start(), firsts: Vec::new() };
+    let mut arrivals: Vec<(SeqId, f64)> = Vec::new();
+    let mut finished = Vec::new();
+    let mut next = 0usize;
+    while next < reqs.len() || !sched.idle() {
+        if next < reqs.len() {
+            let id = sched.submit(reqs[next].clone());
+            arrivals.push((id, probe.clock.secs()));
+            next += 1;
+        }
+        finished.extend(sched.step_observed(&mut server, &mut cache, &mut probe)?);
+    }
+    let ttfts = arrivals
+        .iter()
+        .map(|(id, t0)| {
+            let first = probe
+                .firsts
+                .iter()
+                .find(|(fid, _)| fid == id)
+                .expect("every sequence emits a first token");
+            first.1 - t0
+        })
+        .collect();
+    finished.sort_by_key(|f| f.id);
+    Ok((finished, ttfts))
+}
+
+/// Nearest-rank 95th percentile.
+fn p95(xs: &[f64]) -> f64 {
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = ((v.len() as f64 * 0.95).ceil() as usize).max(1) - 1;
+    v[idx.min(v.len() - 1)]
 }
 
 fn main() -> anyhow::Result<()> {
@@ -263,6 +388,33 @@ fn main() -> anyhow::Result<()> {
         "contenders generated different token counts ({tokens} / {tokens_seq} / {tokens_naive})"
     );
 
+    // §chunked prefill: open-loop mixed long/short traffic, TTFT p95
+    // with prefill_chunk=CHUNK vs one-shot admission-time prefill.
+    let n_mixed = if common::full_mode() { 64 } else { 32 };
+    let mixed = mixed_workload(&names, n_mixed);
+    let n_long = mixed.iter().filter(|r| r.prompt.len() == LONG_LEN).count();
+    eprintln!("[mixed] {n_mixed} open-loop requests ({n_long} long) x {{one-shot, chunked}}…");
+    let (fin_one, ttft_one) = run_mixed_traffic(&engine, &mixed, 0)?;
+    let (fin_chunk, ttft_chunk) = run_mixed_traffic(&engine, &mixed, CHUNK)?;
+    anyhow::ensure!(fin_one.len() == fin_chunk.len() && fin_one.len() == n_mixed);
+    for (a, b) in fin_one.iter().zip(&fin_chunk) {
+        anyhow::ensure!(
+            a.id == b.id && a.tokens == b.tokens,
+            "chunked prefill changed a trajectory (seq {:?})",
+            a.id
+        );
+    }
+    let (p95_one, p95_chunk) = (p95(&ttft_one), p95(&ttft_chunk));
+    let ttft_ratio = p95_chunk / p95_one.max(1e-12);
+    let ttft_ok = ttft_ratio <= 0.7;
+    println!(
+        "\nchunked prefill (chunk {CHUNK}): mixed-traffic ttft p95 {:.3} ms vs one-shot \
+         {:.3} ms -> {ttft_ratio:.2}x (target <= 0.7x: {}); trajectories identical ✓",
+        p95_chunk * 1e3,
+        p95_one * 1e3,
+        if ttft_ok { "PASS" } else { "FAIL" },
+    );
+
     let speedup_naive = tok_per_s["continuous"] / tok_per_s["naive"].max(1e-12);
     let speedup_seq = tok_per_s["continuous"] / tok_per_s["sequential"].max(1e-12);
     let naive_ok = speedup_naive >= 3.0;
@@ -277,16 +429,23 @@ fn main() -> anyhow::Result<()> {
     j.set("continuous_speedup_vs_naive", jnum(speedup_naive));
     j.set("naive_target", jnum(3.0));
     j.set("continuous_speedup_vs_sequential", jnum(speedup_seq));
-    j.set("pass", Json::Bool(naive_ok));
+    j.set("prefill_chunk", jnum(CHUNK as f64));
+    j.set("mixed_requests", jnum(n_mixed as f64));
+    j.set("ttft_p95_ms_chunked", jnum(p95_chunk * 1e3));
+    j.set("ttft_p95_ms_one_shot", jnum(p95_one * 1e3));
+    j.set("chunked_ttft_p95_x_unchunked", jnum(ttft_ratio));
+    j.set("ttft_target", jnum(0.7));
+    j.set("pass", Json::Bool(naive_ok && ttft_ok));
     println!("BENCH {j}");
     common::write_bench_summary(
         "decode_serve",
         &[
             ("continuous_tok_s_x_naive", speedup_naive),
             ("continuous_tok_s_x_sequential", speedup_seq),
+            ("chunked_ttft_p95_x_unchunked", ttft_ratio),
         ],
     )?;
-    println!("overall: {}", if naive_ok { "PASS" } else { "FAIL" });
+    println!("overall: {}", if naive_ok && ttft_ok { "PASS" } else { "FAIL" });
 
     let out = common::results_dir().join("decode_serve.csv");
     write_labeled_csv(

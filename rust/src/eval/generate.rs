@@ -162,7 +162,10 @@ pub struct ServeGenerator {
 impl ServeGenerator {
     /// Snapshot `engine` for generation under `adapter` (`None` = the
     /// frozen base). `cfg` must be a full-model config; its decode knobs
-    /// (`max_seq`, `slots`, `kv_budget_bytes`) size the KV cache.
+    /// (`max_seq`, `slots`, `kv_budget_bytes`) size the KV cache, and
+    /// its attention geometry (`heads`, `rope_theta`, `prefill_chunk`)
+    /// flows through unchanged — trajectories are bit-identical for any
+    /// `prefill_chunk`, so chunking is safe to leave on for eval runs.
     pub fn new(engine: &AdapterEngine, cfg: ServeConfig, adapter: Option<&str>) -> Result<ServeGenerator> {
         let server = ModelServer::new(engine, cfg)?;
         let cache = server.new_cache()?;

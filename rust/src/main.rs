@@ -84,7 +84,9 @@ COMMANDS
                                scheduler over the slot-paged KV cache;
                                [--requests 32] [--prompt-len 12]
                                [--max-new 24] [--slots 8] [--max-seq N]
-                               [--kv-budget-mb 64])
+                               [--kv-budget-mb 64] [--heads 1]
+                               [--kv-heads HEADS] [--rope-theta 10000]
+                               [--prefill-chunk 0])
                [--http ADDR]  (streaming HTTP front-end over the decode
                                scheduler: POST /v1/generate with chunked
                                NDJSON token streaming, GET /healthz,
@@ -547,6 +549,12 @@ fn cmd_serve_decode(args: &Args) -> Result<()> {
         "--max-seq {max_seq} must exceed --prompt-len {prompt_len} (no room to generate)"
     );
     let kv_budget = args.usize_or("kv-budget-mb", 64)? << 20;
+    // Attention geometry: legacy single-head unless asked otherwise;
+    // RoPE defaults ON for multi-head layouts (0 disables it).
+    let n_heads = args.usize_or("heads", 1)?;
+    let n_kv_heads = args.usize_or("kv-heads", n_heads)?;
+    let rope_theta = args.f64_or("rope-theta", if n_heads > 1 { 10000.0 } else { 0.0 })?;
+    let prefill_chunk = args.usize_or("prefill-chunk", 0)?;
     let base_frac = args.f64_or("base-frac", 0.125)?;
     let drift = args.f64_or("drift", 0.05)? as f32;
     let quantized = args.bool_or("quantized", false);
@@ -590,7 +598,10 @@ fn cmd_serve_decode(args: &Args) -> Result<()> {
         .strategy(strategy)
         .max_seq(max_seq)
         .slots(slots)
-        .kv_budget_bytes(kv_budget);
+        .kv_budget_bytes(kv_budget)
+        .heads(n_heads, n_kv_heads)
+        .rope_theta(rope_theta)
+        .prefill_chunk(prefill_chunk);
     let mut server = ModelServer::new(&engine, serve_cfg)?;
     let mut cache = server.new_cache()?;
 
@@ -680,6 +691,10 @@ fn cmd_serve_http(args: &Args) -> Result<()> {
     let slots = args.usize_or("slots", 8)?;
     let max_seq = args.usize_or("max-seq", 64)?;
     let kv_budget = args.usize_or("kv-budget-mb", 64)? << 20;
+    let n_heads = args.usize_or("heads", 1)?;
+    let n_kv_heads = args.usize_or("kv-heads", n_heads)?;
+    let rope_theta = args.f64_or("rope-theta", if n_heads > 1 { 10000.0 } else { 0.0 })?;
+    let prefill_chunk = args.usize_or("prefill-chunk", 0)?;
     let drift = args.f64_or("drift", 0.05)? as f32;
     let quantized = args.bool_or("quantized", false);
     let strategy = serve_strategy_from(args, quantized)?;
@@ -722,7 +737,10 @@ fn cmd_serve_http(args: &Args) -> Result<()> {
         .strategy(strategy)
         .max_seq(max_seq)
         .slots(slots)
-        .kv_budget_bytes(kv_budget);
+        .kv_budget_bytes(kv_budget)
+        .heads(n_heads, n_kv_heads)
+        .rope_theta(rope_theta)
+        .prefill_chunk(prefill_chunk);
     let net_cfg = NetConfig {
         addr,
         workers: args.usize_or("workers", 16)?,

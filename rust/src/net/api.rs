@@ -18,6 +18,13 @@ use crate::serve::{FinishReason, FinishedSeq, ServeError};
 use crate::util::json::{jarr, jnum, jstr, Json};
 use std::collections::BTreeSet;
 
+/// Upper bound on any advertised retry delay. A tenant with
+/// `rate_per_s: 0.0` has an INFINITE token-refill ETA; without a cap
+/// that used to reach the `Retry-After` header as
+/// `f64::INFINITY.ceil() as u64` = 18446744073709551615. Anything
+/// non-finite or beyond this cap is reported as the cap instead.
+pub const MAX_RETRY_AFTER_S: f64 = 60.0;
+
 /// A typed wire-level error: HTTP status + machine-readable code.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ApiError {
@@ -25,6 +32,7 @@ pub struct ApiError {
     pub code: &'static str,
     pub message: String,
     /// Seconds the client should wait before retrying (429/503 only).
+    /// Always finite, in `[0, MAX_RETRY_AFTER_S]` — the setter clamps.
     pub retry_after_s: Option<f64>,
 }
 
@@ -34,8 +42,23 @@ impl ApiError {
     }
 
     pub fn retry_after(mut self, secs: f64) -> ApiError {
+        let secs =
+            if secs.is_finite() { secs.clamp(0.0, MAX_RETRY_AFTER_S) } else { MAX_RETRY_AFTER_S };
         self.retry_after_s = Some(secs);
         self
+    }
+
+    /// The `Retry-After` header derived from THE SAME clamped value the
+    /// JSON body reports (empty when no retry hint is set) — the single
+    /// place body and header are kept in sync. Sub-second hints round up
+    /// to the header's 1-second floor.
+    pub fn retry_after_header(&self) -> Vec<(String, String)> {
+        match self.retry_after_s {
+            Some(s) => {
+                vec![("retry-after".to_string(), format!("{}", s.ceil().max(1.0) as u64))]
+            }
+            None => Vec::new(),
+        }
     }
 
     /// The response body: `{"error":{"code":...,"message":...}}`.
@@ -324,6 +347,37 @@ mod tests {
         let inner = j.get("error").unwrap();
         assert_eq!(inner.get("code").and_then(|v| v.as_str()), Some("rate_limited"));
         assert_eq!(inner.get("retry_after_s").and_then(|v| v.as_f64()), Some(2.5));
+    }
+
+    #[test]
+    fn retry_after_header_matches_the_body_value() {
+        // Regression: the accept-queue 503 used to set 0.5 in the body
+        // but hardcode `Retry-After: 1` — now both derive from one value.
+        let e = ApiError::new(503, "overloaded", "full").retry_after(0.5);
+        assert_eq!(e.retry_after_s, Some(0.5));
+        let hdr = e.retry_after_header();
+        assert_eq!(hdr, vec![("retry-after".to_string(), "1".to_string())]);
+        let e = ApiError::new(429, "rate_limited", "wait").retry_after(2.0);
+        assert_eq!(e.retry_after_header()[0].1, "2");
+        // No hint → no header.
+        assert!(ApiError::new(400, "bad_request", "x").retry_after_header().is_empty());
+    }
+
+    #[test]
+    fn infinite_retry_after_is_capped_finite() {
+        // Regression: a rate_per_s=0.0 tenant yields an infinite refill
+        // ETA; `INFINITY.ceil() as u64` saturated the header to
+        // 18446744073709551615 and the body JSON was unrepresentable.
+        let e = ApiError::new(429, "rate_limited", "never").retry_after(f64::INFINITY);
+        assert_eq!(e.retry_after_s, Some(MAX_RETRY_AFTER_S));
+        assert_eq!(e.retry_after_header()[0].1, format!("{}", MAX_RETRY_AFTER_S as u64));
+        let e = ApiError::new(429, "rate_limited", "nan").retry_after(f64::NAN);
+        assert_eq!(e.retry_after_s, Some(MAX_RETRY_AFTER_S));
+        let e = ApiError::new(429, "rate_limited", "huge").retry_after(1e18);
+        assert_eq!(e.retry_after_s, Some(MAX_RETRY_AFTER_S));
+        let e = ApiError::new(429, "rate_limited", "neg").retry_after(-3.0);
+        assert_eq!(e.retry_after_s, Some(0.0));
+        assert_eq!(e.retry_after_header()[0].1, "1");
     }
 
     #[test]

@@ -9,6 +9,14 @@
 //! slow clients block their own socket, never the batch loop (token
 //! sends are non-blocking onto an unbounded per-request channel), and
 //! the engine admits across tenants in strict arrival order.
+//!
+//! With `prefill_chunk > 0` on the [`crate::serve::ServeConfig`], long
+//! prompts prefill a fixed-size chunk per engine step instead of
+//! monopolizing the step they are admitted in, so streams already in
+//! flight keep receiving a token per step while a long prompt warms up;
+//! the mid-prefill request's own first `Token { first: true }` arrives
+//! when its final chunk commits. Nothing here changes — the scheduler
+//! hides the chunking behind the same `step_observed` calls.
 
 use super::api::{classify, ApiError};
 use super::drain::DrainState;

@@ -1,10 +1,11 @@
 //! Dependency-free HTTP/1.1 plumbing over std TCP streams.
 //!
 //! Exactly what the front-end needs and nothing more: blocking
-//! request parsing with size limits (header block and body), fixed
-//! `Content-Length` JSON responses, chunked transfer-encoding for token
-//! streaming, and a tiny loopback client (used by the tests and the
-//! load-test bench). Every connection is `Connection: close` — one
+//! request parsing with size limits (header block and body, including
+//! chunked request bodies — extensions stripped, every declared chunk
+//! size bounded before allocation), fixed `Content-Length` JSON
+//! responses, chunked transfer-encoding for token streaming, and a tiny
+//! loopback client (used by the tests and the load-test bench). Every connection is `Connection: close` — one
 //! request per TCP stream keeps worker lifecycle and drain accounting
 //! trivial, and the loopback benchmarks show connection setup is noise
 //! next to decode time.
@@ -37,6 +38,29 @@ impl HttpParseError {
     fn new(status: u16, message: impl Into<String>) -> HttpParseError {
         HttpParseError { status, message: message.into() }
     }
+}
+
+/// Upper bound on a single transfer-encoding chunk accepted by the
+/// loopback CLIENT readers ([`read_response`] /
+/// [`StreamingClient::next_chunk`]); the server side bounds chunks by
+/// its `max_body` instead. A declared size is validated against the
+/// bound BEFORE the buffer for it is allocated — a hostile
+/// `ffffffffffffffff\r\n` size line is an error, not an OOM.
+pub const MAX_CHUNK_BYTES: usize = 1 << 20;
+
+/// Parse one RFC 7230 chunk-size line: hex size, optionally followed by
+/// `;`-separated chunk extensions (`1a;ext=v`), which are ignored.
+/// Errors on malformed hex or a size above `cap`.
+pub fn parse_chunk_size(size_line: &str, cap: usize) -> Result<usize, String> {
+    let line = size_line.trim();
+    // Extensions (and any padding around the size) are legal; only the
+    // leading hex field matters.
+    let size = line.split(';').next().unwrap_or("").trim();
+    let n = usize::from_str_radix(size, 16).map_err(|_| format!("bad chunk size '{line}'"))?;
+    if n > cap {
+        return Err(format!("chunk of {n} bytes exceeds limit {cap}"));
+    }
+    Ok(n)
 }
 
 /// Canonical reason phrase for the statuses the server emits.
@@ -104,26 +128,75 @@ pub fn read_request<R: BufRead>(
             return Err(HttpParseError::new(400, format!("malformed header '{t}'")));
         }
     }
-    let body = match headers.get("content-length") {
-        Some(v) => {
-            let n: usize = v
-                .parse()
-                .map_err(|_| HttpParseError::new(400, format!("bad content-length '{v}'")))?;
-            if n > max_body {
-                return Err(HttpParseError::new(
-                    413,
-                    format!("body of {n} bytes exceeds limit {max_body}"),
-                ));
+    let chunked = headers
+        .get("transfer-encoding")
+        .map(|v| v.eq_ignore_ascii_case("chunked"))
+        .unwrap_or(false);
+    let body = if chunked {
+        read_chunked_body(reader, max_body)?
+    } else {
+        match headers.get("content-length") {
+            Some(v) => {
+                let n: usize = v
+                    .parse()
+                    .map_err(|_| HttpParseError::new(400, format!("bad content-length '{v}'")))?;
+                if n > max_body {
+                    return Err(HttpParseError::new(
+                        413,
+                        format!("body of {n} bytes exceeds limit {max_body}"),
+                    ));
+                }
+                let mut buf = vec![0u8; n];
+                reader
+                    .read_exact(&mut buf)
+                    .map_err(|e| HttpParseError::new(400, format!("read body: {e}")))?;
+                buf
             }
-            let mut buf = vec![0u8; n];
-            reader
-                .read_exact(&mut buf)
-                .map_err(|e| HttpParseError::new(400, format!("read body: {e}")))?;
-            buf
+            None => Vec::new(),
         }
-        None => Vec::new(),
     };
     Ok(HttpRequest { method, target, headers, body })
+}
+
+/// De-chunk a `Transfer-Encoding: chunked` request body. Chunk
+/// extensions (`1a;ext=v`) parse per RFC 7230; every declared size is
+/// checked against what `max_body` still allows BEFORE its buffer is
+/// allocated, so an oversized declaration is a 413, never an OOM.
+fn read_chunked_body<R: BufRead>(
+    reader: &mut R,
+    max_body: usize,
+) -> Result<Vec<u8>, HttpParseError> {
+    let mut body = Vec::new();
+    loop {
+        let mut size_line = String::new();
+        reader
+            .read_line(&mut size_line)
+            .map_err(|e| HttpParseError::new(400, format!("read chunk size: {e}")))?;
+        let remaining = max_body - body.len();
+        let n = parse_chunk_size(&size_line, remaining).map_err(|m| {
+            let status = if m.starts_with("bad chunk size") { 400 } else { 413 };
+            HttpParseError::new(status, m)
+        })?;
+        if n == 0 {
+            // Trailer section: skip until the blank line ending the body.
+            loop {
+                let mut t = String::new();
+                reader
+                    .read_line(&mut t)
+                    .map_err(|e| HttpParseError::new(400, format!("read trailer: {e}")))?;
+                if t.trim_end_matches(['\r', '\n']).is_empty() {
+                    break;
+                }
+            }
+            return Ok(body);
+        }
+        let mut chunk = vec![0u8; n + 2]; // data + trailing CRLF
+        reader
+            .read_exact(&mut chunk)
+            .map_err(|e| HttpParseError::new(400, format!("read chunk: {e}")))?;
+        chunk.truncate(n);
+        body.append(&mut chunk);
+    }
 }
 
 /// Write a complete JSON response with `Content-Length` and close
@@ -254,8 +327,8 @@ pub fn read_response<R: BufRead>(reader: &mut R) -> anyhow::Result<HttpResponse>
         loop {
             let mut size_line = String::new();
             reader.read_line(&mut size_line)?;
-            let n = usize::from_str_radix(size_line.trim(), 16)
-                .map_err(|_| anyhow::anyhow!("bad chunk size '{}'", size_line.trim()))?;
+            let n = parse_chunk_size(&size_line, MAX_CHUNK_BYTES)
+                .map_err(|m| anyhow::anyhow!("{m}"))?;
             if n == 0 {
                 let mut crlf = String::new();
                 reader.read_line(&mut crlf)?;
@@ -364,8 +437,8 @@ impl StreamingClient {
         }
         let mut size_line = String::new();
         self.reader.read_line(&mut size_line)?;
-        let n = usize::from_str_radix(size_line.trim(), 16)
-            .map_err(|_| anyhow::anyhow!("bad chunk size '{}'", size_line.trim()))?;
+        let n = parse_chunk_size(&size_line, MAX_CHUNK_BYTES)
+            .map_err(|m| anyhow::anyhow!("{m}"))?;
         if n == 0 {
             self.done = true;
             let mut crlf = String::new();
@@ -472,6 +545,66 @@ mod tests {
         let lines = resp.json_lines().unwrap();
         assert_eq!(lines.len(), 2);
         assert_eq!(lines[1].get("token").and_then(|v| v.as_f64()), Some(2.0));
+    }
+
+    #[test]
+    fn chunk_size_lines_accept_extensions_and_bound_the_size() {
+        // RFC 7230 chunk extensions are ignored, not a parse error.
+        assert_eq!(parse_chunk_size("1a;ext=v\r\n", 1024).unwrap(), 0x1a);
+        assert_eq!(parse_chunk_size("A; x=\"y\"; z\r\n", 1024).unwrap(), 10);
+        assert_eq!(parse_chunk_size("0\r\n", 1024).unwrap(), 0);
+        assert!(parse_chunk_size("zz\r\n", 1024).is_err());
+        assert!(parse_chunk_size(";ext\r\n", 1024).is_err());
+        // The declared size is checked against the cap BEFORE any
+        // allocation — a hostile 2^64-ish declaration is an error.
+        assert!(parse_chunk_size("ffffffffffffffff\r\n", 1024).is_err());
+        assert!(parse_chunk_size("401\r\n", 1024).is_err());
+        assert_eq!(parse_chunk_size("400\r\n", 1024).unwrap(), 1024);
+    }
+
+    #[test]
+    fn chunked_request_bodies_dechunk_with_extensions() {
+        let raw = b"POST /v1/generate HTTP/1.1\r\nHost: x\r\n\
+                    Transfer-Encoding: chunked\r\n\r\n\
+                    4;ext=v\r\nabcd\r\n3\r\nefg\r\n0\r\n\r\n";
+        let mut r = BufReader::new(Cursor::new(&raw[..]));
+        let req = read_request(&mut r, 1024).unwrap();
+        assert_eq!(req.body, b"abcdefg");
+    }
+
+    #[test]
+    fn oversized_chunk_declaration_is_413_not_oom() {
+        // Declares a ~72 PB chunk; must fail on the declaration, never
+        // allocating for it.
+        let raw = b"POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n\
+                    ffffffffffffff\r\n";
+        let mut r = BufReader::new(Cursor::new(&raw[..]));
+        assert_eq!(read_request(&mut r, 1024).unwrap_err().status, 413);
+        // Cumulative chunks beyond max_body are also a 413.
+        let raw = b"POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n\
+                    4\r\nabcd\r\n4\r\nefgh\r\n0\r\n\r\n";
+        let mut r = BufReader::new(Cursor::new(&raw[..]));
+        assert_eq!(read_request(&mut r, 6).unwrap_err().status, 413);
+        // A malformed size line is a 400.
+        let raw = b"POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\nzz\r\n";
+        let mut r = BufReader::new(Cursor::new(&raw[..]));
+        assert_eq!(read_request(&mut r, 1024).unwrap_err().status, 400);
+    }
+
+    #[test]
+    fn client_readers_accept_chunk_extensions() {
+        let wire = b"HTTP/1.1 200 OK\r\ntransfer-encoding: chunked\r\n\r\n\
+                     5;note=x\r\nhello\r\n0\r\n\r\n";
+        let mut r = BufReader::new(Cursor::new(&wire[..]));
+        let resp = read_response(&mut r).unwrap();
+        assert_eq!(resp.body, b"hello");
+        // And reject an over-cap declaration instead of allocating it.
+        let wire = format!(
+            "HTTP/1.1 200 OK\r\ntransfer-encoding: chunked\r\n\r\n{:x}\r\n",
+            MAX_CHUNK_BYTES + 1
+        );
+        let mut r = BufReader::new(Cursor::new(wire.into_bytes()));
+        assert!(read_response(&mut r).is_err());
     }
 
     #[test]

@@ -261,7 +261,7 @@ fn listener_loop(listener: TcpListener, conn_tx: SyncSender<TcpStream>, stop: &A
                 // Accept queue full: shed load with an immediate 503
                 // instead of queueing unboundedly.
                 let api = ApiError::new(503, "overloaded", "accept queue full").retry_after(0.5);
-                let hdr = [("retry-after".to_string(), "1".to_string())];
+                let hdr = api.retry_after_header();
                 let _ = http::write_json_response(&mut stream, 503, &hdr, &api.to_json());
             }
             Err(TrySendError::Disconnected(_)) => return,
@@ -370,7 +370,7 @@ fn handle_generate(
 ) {
     if !shared.drain.accepting() {
         let api = ApiError::new(503, "draining", "server is draining").retry_after(1.0);
-        let hdr = [("retry-after".to_string(), "1".to_string())];
+        let hdr = api.retry_after_header();
         let _ = http::write_json_response(&mut stream, 503, &hdr, &api.to_json());
         return;
     }
@@ -396,10 +396,12 @@ fn handle_generate(
                 Ok(ac) => ac.remaining(gen.adapter.as_deref(), now),
                 Err(_) => 0.0,
             };
-            let hdr = [
-                ("retry-after".to_string(), format!("{}", retry_after_s.ceil() as u64)),
-                ("x-ratelimit-remaining".to_string(), format!("{}", remaining.floor() as u64)),
-            ];
+            // Header and body share the clamped value from the setter —
+            // an unlimited-ETA tenant (rate 0) caps at MAX_RETRY_AFTER_S
+            // instead of saturating `u64`.
+            let mut hdr = api.retry_after_header();
+            let remaining = format!("{}", remaining.floor() as u64);
+            hdr.push(("x-ratelimit-remaining".to_string(), remaining));
             let _ = http::write_json_response(&mut stream, 429, &hdr, &api.to_json());
             return;
         }
@@ -410,7 +412,7 @@ fn handle_generate(
                 format!("tenant has {inflight}/{max_inflight} requests in flight"),
             )
             .retry_after(1.0);
-            let hdr = [("retry-after".to_string(), "1".to_string())];
+            let hdr = api.retry_after_header();
             let _ = http::write_json_response(&mut stream, 503, &hdr, &api.to_json());
             return;
         }
@@ -442,10 +444,7 @@ fn handle_generate(
         }
     };
     if let StreamEvent::Error(api) = first {
-        let mut hdr = Vec::new();
-        if let Some(s) = api.retry_after_s {
-            hdr.push(("retry-after".to_string(), format!("{}", s.ceil().max(1.0) as u64)));
-        }
+        let hdr = api.retry_after_header();
         let _ = http::write_json_response(&mut stream, api.status, &hdr, &api.to_json());
         return;
     }

@@ -169,6 +169,11 @@ pub enum ServeError {
     /// A decode step named a cache slot that is not currently claimed (or
     /// named the same slot twice in one step).
     BadSlot { slot: usize, detail: &'static str },
+    /// A prefill/decode call would append more positions than the slot's
+    /// claim reserved pages for. The serving layer checks this BEFORE
+    /// touching the cache, so the `KvCache::append` reservation assert
+    /// stays unreachable — re-claim with a larger `positions` instead.
+    ReservationExceeded { slot: usize, reserved: usize, needed: usize },
 }
 
 impl fmt::Display for ServeError {
@@ -239,6 +244,12 @@ impl fmt::Display for ServeError {
             ServeError::BadSlot { slot, detail } => {
                 write!(f, "KV-cache slot {slot}: {detail}")
             }
+            ServeError::ReservationExceeded { slot, reserved, needed } => write!(
+                f,
+                "KV-cache slot {slot}: appending would commit {needed} positions but the \
+                 claim reserved only {reserved}; claim the slot for the sequence's full \
+                 worst case (prompt + max_new) before prefilling"
+            ),
         }
     }
 }
@@ -253,7 +264,8 @@ impl ServeError {
             ServeError::UnknownAdapter { .. } => 404,
             ServeError::DimMismatch { .. }
             | ServeError::TokenOutOfRange { .. }
-            | ServeError::SeqTooLong { .. } => 422,
+            | ServeError::SeqTooLong { .. }
+            | ServeError::ReservationExceeded { .. } => 422,
             ServeError::BatchTooLarge { .. } => 429,
             ServeError::CacheBudgetExhausted { .. } => 503,
             ServeError::RankTooLarge { .. }
@@ -281,6 +293,7 @@ impl ServeError {
             ServeError::SeqTooLong { .. } => "seq_too_long",
             ServeError::CacheBudgetExhausted { .. } => "cache_budget_exhausted",
             ServeError::BadSlot { .. } => "bad_slot",
+            ServeError::ReservationExceeded { .. } => "reservation_exceeded",
         }
     }
 }
@@ -313,6 +326,30 @@ pub struct ServeConfig {
     /// reservations beyond it are a typed
     /// [`ServeError::CacheBudgetExhausted`].
     pub kv_budget_bytes: usize,
+    /// Attention (query) heads of the decode path. `d_model` must divide
+    /// evenly into `n_heads` slices of `head_dim = d_model / n_heads`.
+    /// The default of 1 reproduces the original single-head-over-d_model
+    /// attention bit for bit.
+    pub n_heads: usize,
+    /// K/V heads for grouped-query attention: query head `h` reads cached
+    /// K/V head `h / (n_heads / n_kv_heads)`, and the KV cache stores
+    /// only `n_kv_heads × head_dim` floats per position per layer (2×,
+    /// for K and V). Must divide `n_heads`; `n_kv_heads == n_heads` is
+    /// plain multi-head attention.
+    pub n_kv_heads: usize,
+    /// Rotary-embedding base frequency (e.g. 10000.0). `0.0` disables
+    /// RoPE entirely — the default, which keeps legacy configs
+    /// bit-identical to the pre-head-aware decode path. When enabled,
+    /// `head_dim` must be even (features rotate in pairs).
+    pub rope_theta: f64,
+    /// Chunked-prefill granularity of the [`super::DecodeScheduler`]: an
+    /// admitted prompt prefills at most this many tokens per scheduler
+    /// step, interleaved with decode steps of the running sequences, so a
+    /// long prompt no longer stalls every other sequence's next token.
+    /// `0` (the default) prefills each prompt in one shot at admission —
+    /// the legacy behavior. Chunking never changes any output bit (the
+    /// chunked ≡ one-shot prefill contract); it only reorders wall-clock.
+    pub prefill_chunk: usize,
 }
 
 /// Default KV-cache byte budget: roomy for the synthetic workloads (the
@@ -331,6 +368,10 @@ impl ServeConfig {
             max_seq: 128,
             decode_slots: 8,
             kv_budget_bytes: DEFAULT_KV_BUDGET_BYTES,
+            n_heads: 1,
+            n_kv_heads: 1,
+            rope_theta: 0.0,
+            prefill_chunk: 0,
         }
     }
 
@@ -373,6 +414,41 @@ impl ServeConfig {
         self
     }
 
+    /// Attention head layout: `n_heads` query heads sharing `n_kv_heads`
+    /// cached K/V heads (GQA). `heads(n, n)` is plain multi-head
+    /// attention; `heads(1, 1)` is the legacy single-head path.
+    pub fn heads(mut self, n_heads: usize, n_kv_heads: usize) -> ServeConfig {
+        self.n_heads = n_heads;
+        self.n_kv_heads = n_kv_heads;
+        self
+    }
+
+    /// Enable rotary position embeddings with base frequency `theta`
+    /// (0.0 disables).
+    pub fn rope_theta(mut self, theta: f64) -> ServeConfig {
+        self.rope_theta = theta;
+        self
+    }
+
+    /// Chunked-prefill granularity of the decode scheduler (0 = one-shot
+    /// prefill at admission).
+    pub fn prefill_chunk(mut self, chunk: usize) -> ServeConfig {
+        self.prefill_chunk = chunk;
+        self
+    }
+
+    /// Per-head feature width under this config for a model of `d_model`.
+    pub fn head_dim(&self, d_model: usize) -> usize {
+        d_model / self.n_heads
+    }
+
+    /// Cached K/V row width per position per layer: `n_kv_heads ×
+    /// head_dim` floats. With the default single-head layout this equals
+    /// `d_model` — the pre-GQA cache shape.
+    pub fn kv_dim(&self, d_model: usize) -> usize {
+        self.n_kv_heads * self.head_dim(d_model)
+    }
+
     /// Validate the config against a concrete engine: known module, layer
     /// in range (single-linear scope), and every attached adapter
     /// servable on every linear the scope covers — one `(module, layer)`
@@ -388,6 +464,39 @@ impl ServeConfig {
         anyhow::ensure!(self.max_batch >= 1, "max_batch must be >= 1");
         anyhow::ensure!(self.max_seq >= 1, "max_seq must be >= 1");
         anyhow::ensure!(self.decode_slots >= 1, "decode_slots must be >= 1");
+        anyhow::ensure!(self.n_heads >= 1, "n_heads must be >= 1");
+        anyhow::ensure!(self.n_kv_heads >= 1, "n_kv_heads must be >= 1");
+        anyhow::ensure!(
+            self.n_heads % self.n_kv_heads == 0,
+            "n_kv_heads = {} must divide n_heads = {} (every query head needs exactly one \
+             cached K/V head)",
+            self.n_kv_heads,
+            self.n_heads
+        );
+        anyhow::ensure!(
+            self.rope_theta >= 0.0 && self.rope_theta.is_finite(),
+            "rope_theta must be finite and >= 0 (0 disables RoPE), got {}",
+            self.rope_theta
+        );
+        if self.scope == ServeScope::FullModel {
+            // The attention head layout slices d_model; read it off the
+            // q projection (d_model × d_model) without copying weights.
+            let (d_model, _) = engine.base_dims("q");
+            anyhow::ensure!(
+                d_model % self.n_heads == 0,
+                "n_heads = {} must divide d_model = {d_model} evenly",
+                self.n_heads
+            );
+            if self.rope_theta > 0.0 {
+                let head_dim = d_model / self.n_heads;
+                anyhow::ensure!(
+                    head_dim % 2 == 0,
+                    "RoPE rotates features in pairs: head_dim = d_model / n_heads = \
+                     {head_dim} must be even (d_model {d_model}, n_heads {})",
+                    self.n_heads
+                );
+            }
+        }
         match self.scope {
             ServeScope::SingleLinear => {
                 if !LINEARS.contains(&self.module.as_str()) {
@@ -541,6 +650,35 @@ mod tests {
         assert!(e.to_string().contains("kv_budget_bytes"), "{}", e);
         let e = ServeError::BadSlot { slot: 3, detail: "not claimed" };
         assert!(e.to_string().contains("slot 3"), "{}", e);
+    }
+
+    #[test]
+    fn head_knobs_build_with_legacy_defaults() {
+        // Defaults reproduce the pre-head-aware decode path: one head
+        // over all of d_model, no RoPE, one-shot prefill.
+        let c = ServeConfig::full_model();
+        assert_eq!((c.n_heads, c.n_kv_heads), (1, 1));
+        assert_eq!(c.rope_theta, 0.0);
+        assert_eq!(c.prefill_chunk, 0);
+        assert_eq!(c.head_dim(32), 32);
+        assert_eq!(c.kv_dim(32), 32);
+        // GQA shrinks the cached row width: 8 heads over d_model 32 →
+        // head_dim 4, 2 KV heads → kv_dim 8.
+        let c = ServeConfig::full_model().heads(8, 2).rope_theta(10000.0).prefill_chunk(16);
+        assert_eq!((c.n_heads, c.n_kv_heads), (8, 2));
+        assert_eq!(c.head_dim(32), 4);
+        assert_eq!(c.kv_dim(32), 8);
+        assert_eq!(c.rope_theta, 10000.0);
+        assert_eq!(c.prefill_chunk, 16);
+    }
+
+    #[test]
+    fn reservation_exceeded_error_shape() {
+        let e = ServeError::ReservationExceeded { slot: 2, reserved: 8, needed: 11 };
+        let msg = e.to_string();
+        assert!(msg.contains("slot 2") && msg.contains('8') && msg.contains("11"), "{msg}");
+        assert_eq!(e.http_status(), 422);
+        assert_eq!(e.code(), "reservation_exceeded");
     }
 
     #[test]

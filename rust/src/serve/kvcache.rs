@@ -3,7 +3,10 @@
 //!
 //! One [`KvCache`] serves one `ModelServer`: a fixed number of sequence
 //! SLOTS (the continuous-batching concurrency budget) over a shared pool
-//! of fixed-size PAGES ([`KV_PAGE`] positions × `d_model` floats each).
+//! of fixed-size PAGES ([`KV_PAGE`] positions × `d` floats each, where
+//! `d` is the cached ROW width — under grouped-query attention that is
+//! `n_kv_heads × head_dim`, not `d_model`, so GQA configs shrink every
+//! page by the same `n_kv_heads / n_heads` factor).
 //! Every `(slot, layer)` pair owns two page lists — keys and values —
 //! that grow page-by-page as the sequence extends, so memory tracks the
 //! positions actually written, not `slots × max_seq` up front, and pages
@@ -89,7 +92,10 @@ pub struct KvCache {
 
 impl KvCache {
     /// Build a cache for `slots` concurrent sequences of up to `max_seq`
-    /// positions over an `n_layers × d` model, within `budget_bytes`.
+    /// positions, `n_layers` layers × `d` floats per cached K/V row,
+    /// within `budget_bytes`. `d` is the row width actually cached —
+    /// `ServeConfig::kv_dim` (= `n_kv_heads × head_dim`) for a
+    /// head-aware server, `d_model` for the legacy single-head layout.
     /// Typed [`ServeError::CacheBudgetExhausted`] if even ONE `max_seq`
     /// sequence cannot fit — such a config could never serve anything.
     pub fn new(
@@ -136,6 +142,7 @@ impl KvCache {
         self.n_layers
     }
 
+    /// Cached K/V row width in floats (`kv_dim` of the serving config).
     pub fn d(&self) -> usize {
         self.d
     }
@@ -239,6 +246,13 @@ impl KvCache {
     /// Is this slot currently claimed?
     pub fn is_claimed(&self, slot: SlotId) -> bool {
         self.slots.get(slot.0).map(|s| s.is_some()).unwrap_or(false)
+    }
+
+    /// Worst-case positions this claimed slot reserved pages for — the
+    /// ceiling the serving layer validates appends against (a typed
+    /// [`ServeError::ReservationExceeded`] instead of the append assert).
+    pub fn reserved_positions(&self, slot: SlotId) -> usize {
+        self.slot_ref(slot).reserved_positions
     }
 
     /// Rows written to `layer` so far (committed positions plus any rows

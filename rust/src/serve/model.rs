@@ -31,6 +31,21 @@
 //! whole forward is a fixed-order f32 computation, bit-identical for any
 //! `PISSA_THREADS`.
 //!
+//! The KV-cached sequence path ([`ModelServer::prefill`] /
+//! [`ModelServer::decode_step`]) runs REAL causal attention over the
+//! cached context, head-aware and position-aware: the `d_model`-wide
+//! q/k/v projections are split into `n_heads` slices of `head_dim`
+//! features, rotary position embeddings rotate q and k in place at each
+//! token's absolute position (`rope_theta > 0`), only the first
+//! `kv_dim = n_kv_heads × head_dim` features of k/v are cached (grouped-
+//! query attention: query head `h` reads cached head `h / (n_heads /
+//! n_kv_heads)`), and [`attn_into`] computes a per-head causal softmax
+//! `softmax(q_h·K_g^T / √head_dim)·V_g`. Every stage keeps the fixed
+//! f32 evaluation order, so incremental decode stays bit-identical to a
+//! full-prefill recompute and to any thread count. The legacy default
+//! (`n_heads = 1`, `rope_theta = 0`) degenerates to exactly the PR 5
+//! arithmetic: one head of width `d_model`, no rotation, same 1/√d scale.
+//!
 //! Activation buffers ping-pong: the hidden state `x`, the norm/attn
 //! scratch `h`, the three projection buffers, and the two MLP-width
 //! buffers are allocated once per batch and REUSED across all layers —
@@ -67,6 +82,30 @@ const GATE: usize = 4;
 const UP: usize = 5;
 const DOWN: usize = 6;
 
+/// Attention head layout of the decode path, precomputed at server
+/// construction from the validated config. `Copy` so the parallel
+/// attention closures capture it by value instead of borrowing the
+/// server.
+#[derive(Debug, Clone, Copy)]
+struct HeadLayout {
+    /// Query heads (d_model = n_heads × head_dim).
+    n_heads: usize,
+    /// Cached K/V heads; query head `h` reads KV head
+    /// `h / (n_heads / n_kv_heads)`.
+    n_kv_heads: usize,
+    /// Features per head.
+    head_dim: usize,
+    /// Cached row width: `n_kv_heads × head_dim` (the K/V projections
+    /// compute full d_model rows, but only this prefix is cached under
+    /// GQA — the grouped heads never read past it).
+    kv_dim: usize,
+    /// Per-head score scale `1/√head_dim`. With one head this equals the
+    /// legacy `1/√d_model`, which is what keeps old configs bit-stable.
+    scale: f32,
+    /// RoPE base frequency; 0.0 disables rotation entirely.
+    rope_theta: f32,
+}
+
 /// Whole-model batched multi-adapter server over a snapshot of an
 /// [`AdapterEngine`]: embed → `n_layers` adapted blocks → head.
 ///
@@ -90,6 +129,7 @@ pub struct ModelServer {
     n_layers: usize,
     d_model: usize,
     d_ff: usize,
+    heads: HeadLayout,
     stats: ServeStats,
 }
 
@@ -143,6 +183,15 @@ impl ModelServer {
         }
         let d_model = embed.cols;
         let d_ff = linears[GATE].n_out();
+        let head_dim = d_model / cfg.n_heads;
+        let heads = HeadLayout {
+            n_heads: cfg.n_heads,
+            n_kv_heads: cfg.n_kv_heads,
+            head_dim,
+            kv_dim: cfg.n_kv_heads * head_dim,
+            scale: 1.0 / (head_dim as f32).sqrt(),
+            rope_theta: cfg.rope_theta as f32,
+        };
         Ok(ModelServer {
             cfg,
             linears,
@@ -154,6 +203,7 @@ impl ModelServer {
             n_layers,
             d_model,
             d_ff,
+            heads,
             stats: ServeStats::new(),
         })
     }
@@ -172,6 +222,13 @@ impl ModelServer {
 
     pub fn d_model(&self) -> usize {
         self.d_model
+    }
+
+    /// Cached K/V row width: `n_kv_heads × head_dim` floats per position
+    /// per layer — what [`ModelServer::new_cache`] sizes pages by. Equals
+    /// `d_model` under the default single-head layout.
+    pub fn kv_dim(&self) -> usize {
+        self.heads.kv_dim
     }
 
     /// Embedding-table size — the valid token-id range of requests.
@@ -322,11 +379,14 @@ impl ModelServer {
     }
 
     /// Build a [`KvCache`] sized for this server from the config's decode
-    /// knobs (`max_seq` × `decode_slots` within `kv_budget_bytes`).
+    /// knobs (`max_seq` × `decode_slots` within `kv_budget_bytes`). Rows
+    /// are [`ModelServer::kv_dim`] floats wide, so a GQA config
+    /// (`n_kv_heads < n_heads`) shrinks every cached position by
+    /// `n_kv_heads / n_heads` relative to the single-head layout.
     pub fn new_cache(&self) -> Result<KvCache> {
         KvCache::new(
             self.n_layers,
-            self.d_model,
+            self.heads.kv_dim,
             self.cfg.max_seq,
             self.cfg.decode_slots,
             self.cfg.kv_budget_bytes,
@@ -352,12 +412,14 @@ impl ModelServer {
     ///
     /// Unlike [`ModelServer::forward`]'s degenerate single-position gate,
     /// position `i` here attends over positions `0..=i` with a true
-    /// softmax (single-head over the full `d_model`, fixed-order f32
-    /// accumulation — no RoPE; positional structure enters through
-    /// causality alone, matching the decode path exactly). Appending to a
-    /// non-empty slot continues the sequence from its committed length,
-    /// so a prefill may itself be split into chunks without changing any
-    /// bit of the result.
+    /// per-head causal softmax (`n_heads` slices of `head_dim`, GQA
+    /// sharing of the cached `kv_dim` prefix, RoPE rotation of q/k at
+    /// the row's absolute position when `rope_theta > 0` — fixed-order
+    /// f32 throughout, matching the decode path exactly). Appending to a
+    /// non-empty slot continues the sequence from its committed length —
+    /// every rotation and score depends only on absolute position, so a
+    /// prefill may itself be split into chunks without changing any bit
+    /// of the result.
     ///
     /// All `T` positions run as one single-group batch through each of
     /// the `L × 7` linears (the activation buffers are allocated once and
@@ -380,6 +442,19 @@ impl ModelServer {
                 prompt: start + tokens.len(),
                 max_new: 0,
                 max_seq: cache.max_seq(),
+            }
+            .into());
+        }
+        // Validate against the slot's reservation BEFORE any append: a
+        // prompt longer than the claim used to trip the KvCache append
+        // assert mid-layer; now it is a typed error and the cache is
+        // untouched.
+        let reserved = cache.reserved_positions(slot);
+        if start + tokens.len() > reserved {
+            return Err(ServeError::ReservationExceeded {
+                slot: slot.index(),
+                reserved,
+                needed: start + tokens.len(),
             }
             .into());
         }
@@ -419,17 +494,29 @@ impl ModelServer {
         for (i, &tok) in tokens.iter().enumerate() {
             x.row_mut(i).copy_from_slice(self.embed.row(tok));
         }
-        let scale = 1.0 / (d as f32).sqrt();
+        let heads = self.heads;
         for l in 0..self.n_layers {
             rms_norm_into(&x, &self.attn_norm[l], &mut h);
             self.linear(l, Q).forward_into(&h, &groups, &mut qb);
             self.linear(l, K).forward_into(&h, &groups, &mut kb);
             self.linear(l, V).forward_into(&h, &groups, &mut vb);
-            // Write this chunk's K/V rows, then attend reading from the
-            // cache — the same loads the decode path performs, so the
-            // arithmetic is shared, not merely equivalent.
+            // Rotate Q (every head) and the cached K prefix (the
+            // n_kv_heads heads that survive into the cache) at each row's
+            // ABSOLUTE position — `start + i` here, `cache.len()` on the
+            // decode path — so an incremental continuation computes the
+            // exact same rotation a from-scratch prefill would.
             for i in 0..t {
-                cache.append(slot, l, kb.row(i), vb.row(i));
+                let pos = start + i;
+                rope_rotate(qb.row_mut(i), heads.n_heads, heads.head_dim, pos, heads.rope_theta);
+                let k = &mut kb.row_mut(i)[..heads.kv_dim];
+                rope_rotate(k, heads.n_kv_heads, heads.head_dim, pos, heads.rope_theta);
+            }
+            // Write this chunk's K/V rows (only the kv_dim prefix is ever
+            // read under GQA), then attend reading from the cache — the
+            // same loads the decode path performs, so the arithmetic is
+            // shared, not merely equivalent.
+            for i in 0..t {
+                cache.append(slot, l, &kb.row(i)[..heads.kv_dim], &vb.row(i)[..heads.kv_dim]);
             }
             {
                 let cache = &*cache;
@@ -437,7 +524,8 @@ impl ModelServer {
                     let mut scores = Vec::new();
                     for i in lo..hi {
                         let out = &mut chunk[(i - lo) * d..(i - lo + 1) * d];
-                        attn_into(cache, slot, l, qb.row(i), start + i + 1, scale, &mut scores, out);
+                        let n_ctx = start + i + 1;
+                        attn_into(cache, slot, l, qb.row(i), n_ctx, &heads, &mut scores, out);
                     }
                 });
             }
@@ -503,6 +591,15 @@ impl ModelServer {
                 }
                 .into());
             }
+            let reserved = cache.reserved_positions(r.slot);
+            if cache.len(r.slot) + 1 > reserved {
+                return Err(ServeError::ReservationExceeded {
+                    slot: r.slot.index(),
+                    reserved,
+                    needed: cache.len(r.slot) + 1,
+                }
+                .into());
+            }
             if r.token >= self.vocab() {
                 return Err(ServeError::TokenOutOfRange {
                     index: i,
@@ -537,14 +634,22 @@ impl ModelServer {
         for (i, r) in requests.iter().enumerate() {
             x.row_mut(i).copy_from_slice(self.embed.row(r.token));
         }
-        let scale = 1.0 / (d as f32).sqrt();
+        let heads = self.heads;
+        // Each request's new token sits at its slot's committed position —
+        // the same absolute index a from-scratch prefill would rotate at.
+        let pos: Vec<usize> = requests.iter().map(|r| cache.len(r.slot)).collect();
         for l in 0..self.n_layers {
             rms_norm_into(&x, &self.attn_norm[l], &mut h);
             self.step_linear(l, Q, &h, &groups, requests, &mut qb);
             self.step_linear(l, K, &h, &groups, requests, &mut kb);
             self.step_linear(l, V, &h, &groups, requests, &mut vb);
+            for i in 0..b {
+                rope_rotate(qb.row_mut(i), heads.n_heads, heads.head_dim, pos[i], heads.rope_theta);
+                let k = &mut kb.row_mut(i)[..heads.kv_dim];
+                rope_rotate(k, heads.n_kv_heads, heads.head_dim, pos[i], heads.rope_theta);
+            }
             for (i, r) in requests.iter().enumerate() {
-                cache.append(r.slot, l, kb.row(i), vb.row(i));
+                cache.append(r.slot, l, &kb.row(i)[..heads.kv_dim], &vb.row(i)[..heads.kv_dim]);
             }
             {
                 let cache = &*cache;
@@ -554,7 +659,7 @@ impl ModelServer {
                         let r = &requests[i];
                         let n_ctx = cache.layer_len(r.slot, l);
                         let out = &mut chunk[(i - lo) * d..(i - lo + 1) * d];
-                        attn_into(cache, r.slot, l, qb.row(i), n_ctx, scale, &mut scores, out);
+                        attn_into(cache, r.slot, l, qb.row(i), n_ctx, &heads, &mut scores, out);
                     }
                 });
             }
@@ -605,25 +710,31 @@ impl ModelServer {
     /// A cache built for a different model shape is a hard config error.
     fn check_cache(&self, cache: &KvCache) -> Result<()> {
         anyhow::ensure!(
-            cache.n_layers() == self.n_layers && cache.d() == self.d_model,
-            "KvCache shape ({} layers x d={}) does not match the served model \
-             ({} layers x d={})",
+            cache.n_layers() == self.n_layers && cache.d() == self.heads.kv_dim,
+            "KvCache shape ({} layers x row={}) does not match the served model \
+             ({} layers x kv_dim={})",
             cache.n_layers(),
             cache.d(),
             self.n_layers,
-            self.d_model
+            self.heads.kv_dim
         );
         Ok(())
     }
 }
 
-/// Causal single-head attention for ONE query row over `n_ctx` cached
-/// positions of `(slot, layer)`: softmax(q·K^T / √d)·V with a fixed
-/// evaluation order — scores in ascending position order (each dot in
-/// ascending feature order), one max pass, one exp/sum pass, then V
-/// accumulated position-by-position and normalized at the end. Every
-/// element's arithmetic is independent of batch shape and thread count,
-/// which is what makes incremental decode ≡ full prefill bit-for-bit.
+/// Causal multi-head attention for ONE query row over `n_ctx` cached
+/// positions of `(slot, layer)`: per head `h`,
+/// softmax(q_h·K_g^T / √head_dim)·V_g written into the head's slice of
+/// `out`, where `g = h / (n_heads / n_kv_heads)` is the grouped-query
+/// K/V head shared by the head's group (cached rows are `kv_dim` wide,
+/// so head `g` lives at feature offset `g * head_dim`). Each head uses
+/// a fixed evaluation order — scores in ascending position order (each
+/// dot in ascending feature order), one max pass, one exp/sum pass,
+/// then V accumulated position-by-position and normalized at the end —
+/// and heads are processed in ascending order over disjoint output
+/// slices. Every element's arithmetic is independent of batch shape
+/// and thread count, which is what makes incremental decode ≡ full
+/// prefill bit-for-bit.
 #[allow(clippy::too_many_arguments)]
 fn attn_into(
     cache: &KvCache,
@@ -631,40 +742,77 @@ fn attn_into(
     layer: usize,
     q: &[f32],
     n_ctx: usize,
-    scale: f32,
+    heads: &HeadLayout,
     scores: &mut Vec<f32>,
     out: &mut [f32],
 ) {
     debug_assert!(n_ctx >= 1);
-    scores.clear();
-    let mut max = f32::NEG_INFINITY;
-    for j in 0..n_ctx {
-        let k = cache.k_row(slot, layer, j);
-        let mut dot = 0.0f32;
-        for (qv, kv) in q.iter().zip(k) {
-            dot += qv * kv;
+    let hd = heads.head_dim;
+    let group = heads.n_heads / heads.n_kv_heads;
+    for h in 0..heads.n_heads {
+        let kv_off = (h / group) * hd;
+        let qh = &q[h * hd..(h + 1) * hd];
+        let oh = &mut out[h * hd..(h + 1) * hd];
+        scores.clear();
+        let mut max = f32::NEG_INFINITY;
+        for j in 0..n_ctx {
+            let k = &cache.k_row(slot, layer, j)[kv_off..kv_off + hd];
+            let mut dot = 0.0f32;
+            for (qv, kv) in qh.iter().zip(k) {
+                dot += qv * kv;
+            }
+            let s = dot * heads.scale;
+            if s > max {
+                max = s;
+            }
+            scores.push(s);
         }
-        let s = dot * scale;
-        if s > max {
-            max = s;
+        let mut sum = 0.0f32;
+        for s in scores.iter_mut() {
+            *s = (*s - max).exp();
+            sum += *s;
         }
-        scores.push(s);
-    }
-    let mut sum = 0.0f32;
-    for s in scores.iter_mut() {
-        *s = (*s - max).exp();
-        sum += *s;
-    }
-    out.iter_mut().for_each(|v| *v = 0.0);
-    for (j, &w) in scores.iter().enumerate() {
-        let v = cache.v_row(slot, layer, j);
-        for (ov, vv) in out.iter_mut().zip(v) {
-            *ov += w * vv;
+        oh.iter_mut().for_each(|v| *v = 0.0);
+        for (j, &w) in scores.iter().enumerate() {
+            let v = &cache.v_row(slot, layer, j)[kv_off..kv_off + hd];
+            for (ov, vv) in oh.iter_mut().zip(v) {
+                *ov += w * vv;
+            }
+        }
+        let inv = 1.0 / sum;
+        for ov in oh.iter_mut() {
+            *ov *= inv;
         }
     }
-    let inv = 1.0 / sum;
-    for ov in out.iter_mut() {
-        *ov *= inv;
+}
+
+/// In-place rotary position embedding over a projection row laid out as
+/// `n_heads` contiguous `head_dim`-wide head slices. Within each head,
+/// feature pairs `(2i, 2i+1)` are rotated by `pos · theta^(-2i/head_dim)`.
+/// `theta == 0.0` disables rotation entirely (the legacy no-RoPE path).
+///
+/// The rotation depends only on `(pos, theta, head_dim)` — never on how
+/// many rows are processed together — so a token rotated during
+/// incremental decode at position `p` gets the bit-identical rotation a
+/// full-prefill recompute applies at the same position. Each pair is
+/// computed in a fixed scalar order (sin_cos once, then the 2×2 rotation),
+/// keeping the result thread-count independent.
+fn rope_rotate(row: &mut [f32], n_heads: usize, head_dim: usize, pos: usize, theta: f32) {
+    if theta == 0.0 {
+        return;
+    }
+    let p = pos as f32;
+    for h in 0..n_heads {
+        let s = &mut row[h * head_dim..(h + 1) * head_dim];
+        for i in 0..head_dim / 2 {
+            let freq = theta.powf(-((2 * i) as f32) / head_dim as f32);
+            let angle = p * freq;
+            let (sin, cos) = angle.sin_cos();
+            let a = s[2 * i];
+            let b = s[2 * i + 1];
+            s[2 * i] = a * cos - b * sin;
+            s[2 * i + 1] = a * sin + b * cos;
+        }
     }
 }
 
@@ -928,6 +1076,128 @@ mod tests {
         assert_eq!(s.prefills, 3);
         assert_eq!(s.prefill_tokens, 10);
         assert_eq!(s.hits["t"], 3);
+    }
+
+    #[test]
+    fn reservation_overflow_is_a_typed_error_not_a_panic() {
+        // Regression: prefilling a slot claimed for fewer positions than
+        // the prompt used to trip the KvCache append assert mid-layer
+        // (aborting the engine thread). Now both prefill and decode_step
+        // validate against the reservation up front.
+        let (eng, _) = engine(21);
+        let mut srv = ModelServer::new(&eng, ServeConfig::full_model().max_seq(8)).unwrap();
+        let mut cache = srv.new_cache().unwrap();
+        let slot = cache.try_claim(4).unwrap().unwrap();
+        let err = srv.prefill(&mut cache, slot, Some("t"), &[1, 2, 3, 4, 5]).unwrap_err();
+        match err.downcast_ref::<ServeError>() {
+            Some(ServeError::ReservationExceeded { reserved, needed, .. }) => {
+                assert_eq!((*reserved, *needed), (4, 5));
+            }
+            other => panic!("expected ReservationExceeded, got {other:?}"),
+        }
+        // The failed prefill must not have committed anything.
+        assert_eq!(cache.len(slot), 0);
+        // Fill the reservation exactly, then one decode step past it.
+        srv.prefill(&mut cache, slot, Some("t"), &[1, 2, 3, 4]).unwrap();
+        let reqs = vec![DecodeRequest { slot, token: 1, adapter: None }];
+        let err = srv.decode_step(&mut cache, &reqs).unwrap_err();
+        assert!(
+            matches!(
+                err.downcast_ref::<ServeError>(),
+                Some(ServeError::ReservationExceeded { reserved: 4, needed: 5, .. })
+            ),
+            "got {err:?}"
+        );
+        assert_eq!(cache.len(slot), 4, "failed step must not advance the sequence");
+    }
+
+    #[test]
+    fn head_layout_validation_is_typed_and_upfront() {
+        let (eng, _) = engine(22);
+        // 3 heads do not divide d_model = 16.
+        assert!(ModelServer::new(&eng, ServeConfig::full_model().heads(3, 1)).is_err());
+        // 3 KV heads do not divide 4 query heads.
+        assert!(ModelServer::new(&eng, ServeConfig::full_model().heads(4, 3)).is_err());
+        // Zero heads.
+        assert!(ModelServer::new(&eng, ServeConfig::full_model().heads(0, 1)).is_err());
+        // RoPE needs an even head_dim: 16 heads → head_dim 1.
+        let cfg = ServeConfig::full_model().heads(16, 16).rope_theta(10000.0);
+        assert!(ModelServer::new(&eng, cfg).is_err());
+        // Non-finite theta.
+        let cfg = ServeConfig::full_model().rope_theta(f64::INFINITY);
+        assert!(ModelServer::new(&eng, cfg).is_err());
+        // A well-formed GQA+RoPE layout builds, and the cache rows shrink
+        // to kv_dim = n_kv_heads × head_dim = 2 × 4.
+        let cfg = ServeConfig::full_model().heads(4, 2).rope_theta(10000.0);
+        let srv = ModelServer::new(&eng, cfg).unwrap();
+        assert_eq!(srv.kv_dim(), 8);
+        assert_eq!(srv.new_cache().unwrap().d(), 8);
+        // The legacy default keeps full-width rows.
+        let srv = ModelServer::new(&eng, ServeConfig::full_model()).unwrap();
+        assert_eq!(srv.kv_dim(), 16);
+    }
+
+    #[test]
+    fn gqa_rope_incremental_decode_matches_recompute_bitwise() {
+        // The core attention contract under the new layout: with 4 query
+        // heads sharing 2 cached KV heads and RoPE enabled, decode steps
+        // over a cached prefix must reproduce a from-scratch prefill of
+        // the whole sequence EXACTLY (same rotations, same per-head
+        // softmax order).
+        for (nh, nkv) in [(4, 1), (4, 2), (4, 4)] {
+            let (eng, _) = engine(23);
+            let cfg = ServeConfig::full_model().max_seq(8).heads(nh, nkv).rope_theta(10000.0);
+            let mut srv = ModelServer::new(&eng, cfg).unwrap();
+            let mut cache = srv.new_cache().unwrap();
+            let tokens = [3usize, 11, 7, 29, 5, 40];
+            // Incremental: prefill 3, then decode the rest step by step.
+            let inc = cache.try_claim(tokens.len()).unwrap().unwrap();
+            let first = srv.prefill(&mut cache, inc, Some("t"), &tokens[..3]).unwrap();
+            let mut inc_logits = vec![first];
+            for &t in &tokens[3..] {
+                let reqs = vec![DecodeRequest { slot: inc, token: t, adapter: Some("t".into()) }];
+                let y = srv.decode_step(&mut cache, &reqs).unwrap();
+                inc_logits.push(y.row(0).to_vec());
+            }
+            // Recompute: a fresh one-shot prefill per prefix.
+            for (k, got) in inc_logits.iter().enumerate() {
+                let n = 3 + k;
+                let slot = cache.try_claim(n).unwrap().unwrap();
+                let want = srv.prefill(&mut cache, slot, Some("t"), &tokens[..n]).unwrap();
+                cache.release(slot);
+                assert_eq!(got, &want, "heads ({nh},{nkv}): prefix {n} drifted");
+            }
+            cache.release(inc);
+        }
+    }
+
+    #[test]
+    fn rope_rotation_is_positional_and_norm_preserving() {
+        let row: Vec<f32> = (0..8).map(|i| (i as f32) * 0.3 - 1.0).collect();
+        // theta = 0 disables rotation entirely.
+        let mut r0 = row.clone();
+        rope_rotate(&mut r0, 2, 4, 5, 0.0);
+        assert_eq!(r0, row);
+        // Position 0 is the identity rotation.
+        let mut p0 = row.clone();
+        rope_rotate(&mut p0, 2, 4, 0, 10000.0);
+        for (a, b) in p0.iter().zip(&row) {
+            assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+        }
+        // A real rotation changes the vector but preserves each pair's
+        // norm (it is a 2×2 rotation per feature pair).
+        let mut p5 = row.clone();
+        rope_rotate(&mut p5, 2, 4, 5, 10000.0);
+        assert_ne!(p5, row);
+        for i in (0..8).step_by(2) {
+            let n0 = row[i] * row[i] + row[i + 1] * row[i + 1];
+            let n5 = p5[i] * p5[i] + p5[i + 1] * p5[i + 1];
+            assert!((n0 - n5).abs() < 1e-4, "pair {i}: {n0} vs {n5}");
+        }
+        // Deterministic: same inputs, same bits.
+        let mut again = row.clone();
+        rope_rotate(&mut again, 2, 4, 5, 10000.0);
+        assert_eq!(p5, again);
     }
 
     #[test]

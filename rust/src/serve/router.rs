@@ -242,6 +242,16 @@ struct RunningSeq {
     /// Last sampled token — the next decode step's input.
     next: usize,
     generated: usize,
+    /// Prompt positions committed to the KV cache so far. Equal to
+    /// `prompt_len` once prefill is complete; under chunked prefill a
+    /// sequence sits in `running` mid-prefill (holding its slot, which
+    /// was claimed for the full worst case at admission) and is excluded
+    /// from decode until it catches up.
+    prefilled: usize,
+    /// Submission timer, carried so chunked prefill can record TTFT at
+    /// the FINAL chunk (when the first token actually exists), not at
+    /// admission.
+    submitted: Timer,
 }
 
 impl RunningSeq {
@@ -277,6 +287,15 @@ impl RunningSeq {
 /// samples, and retires whatever finished — freeing slots for the very
 /// next step's admissions. The slot budget is the cache's slot count
 /// ([`crate::serve::ServeConfig::slots`]).
+///
+/// With [`crate::serve::ServeConfig::prefill_chunk`] `> 0`, admission
+/// only CLAIMS the slot; the prompt is then committed one chunk per
+/// step (between admission and decode) while already-running sequences
+/// keep decoding — a long prompt no longer stalls the whole batch, and
+/// TTFT is recorded when the final chunk produces the first token. The
+/// per-sequence token trajectory is bit-identical either way: prefill
+/// continuation is exact, so the final chunk's logits equal the
+/// one-shot prefill's.
 pub struct DecodeScheduler {
     next_id: u64,
     pending: VecDeque<PendingSeq>,
@@ -378,6 +397,7 @@ impl DecodeScheduler {
         obs: &mut dyn StepObserver,
         mode: RejectMode,
     ) -> Result<Vec<FinishedSeq>> {
+        let chunk = server.cfg().prefill_chunk;
         // Admission: strict arrival order. If the head does not fit RIGHT
         // NOW, stop — admitting anything younger would reorder.
         while let Some(head) = self.pending.front() {
@@ -417,6 +437,27 @@ impl DecodeScheduler {
                     }
                 }
             }
+            if chunk > 0 {
+                // Chunked admission: claim the slot (done above, for the
+                // FULL worst case) but defer all prefill work to the
+                // chunk-advance phase, which interleaves it with decode
+                // steps of already-running sequences.
+                let prompt_len = p.req.prompt.len();
+                self.running.push(RunningSeq {
+                    id: p.id,
+                    slot: claimed,
+                    adapter: p.req.adapter,
+                    tokens: p.req.prompt,
+                    prompt_len,
+                    max_new: p.req.max_new,
+                    stop_token: p.req.stop_token,
+                    next: 0,
+                    generated: 0,
+                    prefilled: 0,
+                    submitted: p.submitted,
+                });
+                continue;
+            }
             let logits =
                 match server.prefill(cache, claimed, p.req.adapter.as_deref(), &p.req.prompt) {
                     Ok(l) => l,
@@ -442,8 +483,11 @@ impl DecodeScheduler {
                 stop_token: p.req.stop_token,
                 next: 0,
                 generated: 0,
+                prefilled: 0,
+                submitted: p.submitted,
             };
             run.prompt_len = run.tokens.len();
+            run.prefilled = run.prompt_len;
             if run.max_new == 0 {
                 cache.release(claimed);
                 self.done.push(run.into_finished(FinishReason::MaxNew));
@@ -463,21 +507,38 @@ impl DecodeScheduler {
             }
         }
 
-        // One decode step over every running sequence.
-        if !self.running.is_empty() {
-            let reqs: Vec<DecodeRequest> = self
-                .running
-                .iter()
-                .map(|r| DecodeRequest {
-                    slot: r.slot,
-                    token: r.next,
-                    adapter: r.adapter.clone(),
-                })
-                .collect();
+        // Chunk-advance: every mid-prefill sequence commits ONE more
+        // chunk of its prompt before this step's decode, so a long
+        // prompt's prefill is spread across steps instead of stalling
+        // the whole batch at admission.
+        if chunk > 0 {
+            self.advance_prefills(server, cache, obs, mode, chunk)?;
+        }
+
+        // One decode step over every running sequence whose prefill is
+        // complete (mid-prefill sequences keep their slot but are not
+        // decodable yet — their next token comes from the final chunk).
+        let reqs: Vec<DecodeRequest> = self
+            .running
+            .iter()
+            .filter(|r| r.prefilled >= r.prompt_len)
+            .map(|r| DecodeRequest {
+                slot: r.slot,
+                token: r.next,
+                adapter: r.adapter.clone(),
+            })
+            .collect();
+        if !reqs.is_empty() {
             let logits = server.decode_step(cache, &reqs)?;
             let mut still = Vec::with_capacity(self.running.len());
-            for (i, mut run) in std::mem::take(&mut self.running).into_iter().enumerate() {
-                run.next = argmax(logits.row(i));
+            let mut row = 0;
+            for mut run in std::mem::take(&mut self.running) {
+                if run.prefilled < run.prompt_len {
+                    still.push(run);
+                    continue;
+                }
+                run.next = argmax(logits.row(row));
+                row += 1;
                 run.tokens.push(run.next);
                 run.generated += 1;
                 obs.on_token(run.id, run.next, false);
@@ -491,6 +552,82 @@ impl DecodeScheduler {
             self.running = still;
         }
         Ok(std::mem::take(&mut self.done))
+    }
+
+    /// Advance every mid-prefill sequence by one `chunk`-sized slice of
+    /// its prompt (in admission order). A sequence reaching the end of
+    /// its prompt produces its first token here — TTFT is recorded at
+    /// that moment, and the prefill's last-position logits are greedily
+    /// sampled exactly as one-shot admission would. A chunk that fails
+    /// (unknown adapter, cache mismatch) releases the slot and is
+    /// handled per `mode`, like an admission-time prefill failure.
+    fn advance_prefills(
+        &mut self,
+        server: &mut ModelServer,
+        cache: &mut KvCache,
+        obs: &mut dyn StepObserver,
+        mode: RejectMode,
+        chunk: usize,
+    ) -> Result<()> {
+        let mut i = 0;
+        while i < self.running.len() {
+            let run = &self.running[i];
+            if run.prefilled >= run.prompt_len {
+                i += 1;
+                continue;
+            }
+            let end = (run.prefilled + chunk).min(run.prompt_len);
+            let res = server.prefill(
+                cache,
+                run.slot,
+                run.adapter.as_deref(),
+                &run.tokens[run.prefilled..end],
+            );
+            let logits = match res {
+                Ok(l) => l,
+                Err(e) => {
+                    let run = self.running.remove(i);
+                    cache.release(run.slot);
+                    let err = e.context(format!(
+                        "seq {:?}: chunked prefill failed at prompt position {}",
+                        run.id, run.prefilled
+                    ));
+                    match mode {
+                        RejectMode::Halt => return Err(err),
+                        RejectMode::Notify => {
+                            obs.on_reject(run.id, &err);
+                            continue;
+                        }
+                    }
+                }
+            };
+            let run = &mut self.running[i];
+            run.prefilled = end;
+            if run.prefilled < run.prompt_len {
+                i += 1;
+                continue;
+            }
+            // Final chunk: the first generated token exists NOW.
+            server.record_ttft(run.submitted.secs());
+            if run.max_new == 0 {
+                let run = self.running.remove(i);
+                cache.release(run.slot);
+                self.done.push(run.into_finished(FinishReason::MaxNew));
+                continue;
+            }
+            run.next = argmax(&logits);
+            run.tokens.push(run.next);
+            run.generated = 1;
+            obs.on_token(run.id, run.next, true);
+            if let Some(reason) = run.finish_reason() {
+                let run = self.running.remove(i);
+                cache.release(run.slot);
+                self.done.push(run.into_finished(reason));
+                continue;
+            }
+            i += 1;
+        }
+        Ok(())
     }
 
     /// Drive [`DecodeScheduler::step`] until every submitted sequence has

@@ -267,6 +267,13 @@ pub struct ResidentBreakdown {
     /// Live KV-cache pages (0 for one-shot servers without a cache); NOT
     /// part of [`ResidentBreakdown::total`] — the base-residency ratio
     /// stays comparable across PRs — but reported alongside it.
+    ///
+    /// Each cached position costs `2 × n_layers × kv_dim × 4` bytes (K
+    /// and V rows per layer, f32), where `kv_dim = n_kv_heads ×
+    /// head_dim` — so a GQA config (`n_kv_heads < n_heads`) shrinks
+    /// this by `n_kv_heads / n_heads` versus the single-head layout at
+    /// the same `d_model`, before the page-granular rounding of
+    /// [`crate::serve::KvCache::pages_for`].
     pub kv_bytes: usize,
 }
 

@@ -382,3 +382,86 @@ fn full_decode_trajectories_bit_identical_across_thread_counts() {
         assert_eq!(p1, p8, "decode logits drifted across thread counts ({})", strategy.name());
     }
 }
+
+#[test]
+fn gqa_rope_chunked_decode_trajectories_bit_identical_across_thread_counts() {
+    // Same bar as above, with every new attention surface switched on at
+    // once: 4 query heads sharing 2 KV heads, RoPE rotations at both
+    // prefill and decode, and chunked prefill interleaving with decode
+    // steps. None of it may introduce a thread-count dependence — the
+    // per-head softmax and rotations are fixed-order scalar f32, and the
+    // chunk schedule is a pure function of the workload.
+    let _guard = ENV_LOCK.lock().unwrap();
+    let cfg = ConfigInfo {
+        name: "gqa-determinism".into(),
+        kind: "decoder".into(),
+        vocab: 32,
+        d_model: 48, // 4 heads -> head_dim 12 (even, RoPE-able)
+        n_layers: 2,
+        n_heads: 4,
+        d_ff: 64,
+        seq_len: 8,
+        batch: 4,
+        eval_batch: 2,
+        n_classes: 0,
+        ranks: vec![4],
+    };
+    let (engine, workload) = with_threads(1, || {
+        let mut rng = Rng::new(31);
+        let base = BaseModel::random(&cfg, &mut rng);
+        let mut engine = AdapterEngine::new(base);
+        for name in ["t0", "t1"] {
+            engine.attach(name, AdapterSpec::pissa(4), &mut rng).unwrap();
+            for module in LINEARS {
+                drift_factors(&mut engine, name, module, 0.05, &mut rng).unwrap();
+            }
+        }
+        let workload: Vec<SeqRequest> = (0..8)
+            .map(|i| {
+                // Prompts up to 10 tokens so chunk=3 splits most of them.
+                let prompt: Vec<usize> =
+                    (0..(3 + i % 8)).map(|j| (i * 13 + j * 3) % 32).collect();
+                if i % 4 == 3 {
+                    SeqRequest::base(prompt, 5)
+                } else {
+                    SeqRequest::new(["t0", "t1"][i % 2], prompt, 5)
+                }
+            })
+            .collect();
+        (engine, workload)
+    });
+
+    for strategy in ServeStrategy::all() {
+        for chunk in [0usize, 3] {
+            let run = || {
+                let mut server = ModelServer::new(
+                    &engine,
+                    ServeConfig::full_model()
+                        .strategy(strategy)
+                        .max_seq(16)
+                        .slots(4)
+                        .heads(4, 2)
+                        .rope_theta(10000.0)
+                        .prefill_chunk(chunk),
+                )
+                .unwrap();
+                let mut cache = server.new_cache().unwrap();
+                let mut sched = DecodeScheduler::new();
+                for r in &workload {
+                    sched.submit(r.clone());
+                }
+                let fin = sched.run_sorted(&mut server, &mut cache).unwrap();
+                fin.into_iter().map(|f| f.tokens).collect::<Vec<_>>()
+            };
+            let t1 = with_threads(1, run);
+            let t8 = with_threads(8, run);
+            assert_eq!(
+                t1,
+                t8,
+                "GQA+RoPE decode trajectories drifted across thread counts \
+                 (strategy {} chunk {chunk})",
+                strategy.name()
+            );
+        }
+    }
+}

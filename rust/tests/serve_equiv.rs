@@ -30,7 +30,7 @@ use pissa::quant::nf4_roundtrip;
 use pissa::runtime::ConfigInfo;
 use pissa::serve::{
     argmax, drift_factors, DecodeRequest, DecodeScheduler, KvCache, ModelRequest, ModelServer,
-    Request, SeqRequest, ServeConfig, ServeError, ServeStrategy, Server,
+    Request, SeqId, SeqRequest, ServeConfig, ServeError, ServeStrategy, Server, StepObserver,
 };
 use pissa::util::rng::Rng;
 
@@ -820,6 +820,171 @@ fn decode_scheduler_admits_in_strict_arrival_order() {
     assert_eq!(find(a).generated().len(), 30);
     assert_eq!(find(b).generated().len(), 14);
     assert_eq!(find(c).generated().len(), 1);
+    assert_eq!(cache.reserved_bytes(), 0);
+}
+
+#[test]
+fn gqa_rope_incremental_decode_is_bit_identical_across_kv_head_counts() {
+    // The multi-head tentpole contract: with per-head attention, grouped
+    // KV sharing, AND rotary embeddings enabled, incremental decode must
+    // still equal a from-scratch prefill of every prefix bit for bit —
+    // RoPE depends only on the absolute position, so both paths rotate
+    // identically. Swept over n_kv_heads ∈ {1, n_heads/2, n_heads} and
+    // every decode strategy.
+    let (engine, _, _) = build_model_engine(4, 1600);
+    let fixtures: [(Option<&str>, Vec<usize>); 3] = [
+        (Some("pissa-t"), vec![3, 17, 41, 8]),
+        (Some("partial"), vec![25, 1]),
+        (None, vec![9, 9, 30, 2, 44]),
+    ];
+    for &n_kv in &[1usize, 2, 4] {
+        for strategy in decode_strategies() {
+            // MODEL_D = 32, n_heads = 4 -> head_dim 8 (even, RoPE-able).
+            let cfg = ServeConfig::full_model()
+                .strategy(strategy)
+                .max_seq(32)
+                .heads(4, n_kv)
+                .rope_theta(10000.0);
+            let mut server = ModelServer::new(&engine, cfg).unwrap();
+            let mut cache = server.new_cache().unwrap();
+            assert_eq!(cache.d(), n_kv * 8, "cache rows must shrink to kv_dim");
+            for (adapter, prompt) in &fixtures {
+                let n_new = 6;
+                let (tokens, logits) =
+                    incremental_trajectory(&mut server, &mut cache, *adapter, prompt, n_new);
+                for (step, want) in logits.iter().enumerate() {
+                    let prefix = &tokens[..prompt.len() + step];
+                    let slot = cache.try_claim(prefix.len()).unwrap().unwrap();
+                    let got = server.prefill(&mut cache, slot, *adapter, prefix).unwrap();
+                    cache.release(slot);
+                    assert_eq!(
+                        &got,
+                        want,
+                        "n_kv={n_kv} strategy={} adapter={adapter:?} step={step}: \
+                         GQA+RoPE incremental decode diverged from full recompute",
+                        strategy.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn chunked_prefill_decode_trajectories_match_one_shot_at_every_chunk_size() {
+    // Chunked prefill is a SCHEDULER change, not a model change: the
+    // same request set — long prompts included — must retire with
+    // bit-identical trajectories whether prompts are prefilled in one
+    // shot (prefill_chunk = 0) or in chunks of any size, with or without
+    // GQA + RoPE in the model underneath.
+    let (engine, names, _) = build_model_engine(4, 1700);
+    let prompts: Vec<(Option<String>, Vec<usize>)> = (0..6)
+        .map(|i| {
+            let adapter =
+                if i % 3 == 2 { None } else { Some(names[i % names.len()].clone()) };
+            // Lengths 2..=22: several prompts span multiple chunks.
+            let len = 2 + i * 4;
+            let prompt: Vec<usize> = (0..len).map(|j| (i * 11 + j * 5) % 48).collect();
+            (adapter, prompt)
+        })
+        .collect();
+    let max_new = 4;
+    let head_cfgs: [(usize, usize, f64); 2] = [(1, 1, 0.0), (4, 2, 10000.0)];
+    for (n_heads, n_kv, theta) in head_cfgs {
+        let base_cfg = ServeConfig::full_model()
+            .max_seq(32)
+            .slots(3)
+            .heads(n_heads, n_kv)
+            .rope_theta(theta);
+        let run = |chunk: usize| {
+            let mut server =
+                ModelServer::new(&engine, base_cfg.clone().prefill_chunk(chunk)).unwrap();
+            let mut cache = server.new_cache().unwrap();
+            let mut sched = DecodeScheduler::new();
+            for (a, p) in &prompts {
+                sched.submit(SeqRequest {
+                    adapter: a.clone(),
+                    prompt: p.clone(),
+                    max_new,
+                    stop_token: None,
+                });
+            }
+            let fin = sched.run_sorted(&mut server, &mut cache).unwrap();
+            assert_eq!(cache.free_slots(), 3, "chunk={chunk}: slot leaked");
+            assert_eq!(cache.reserved_bytes(), 0, "chunk={chunk}: bytes leaked");
+            let s = server.stats().summary();
+            assert!(s.ttft_p95_s >= s.ttft_p50_s);
+            fin
+        };
+        let reference = run(0);
+        assert_eq!(reference.len(), prompts.len());
+        for chunk in [1usize, 2, 3, 5, 7, 16, 64] {
+            let fin = run(chunk);
+            assert_eq!(fin.len(), reference.len());
+            for (f, r) in fin.iter().zip(&reference) {
+                assert_eq!(f.id, r.id);
+                assert_eq!(
+                    f.tokens, r.tokens,
+                    "heads=({n_heads},{n_kv}) chunk={chunk} seq={:?}: chunked \
+                     prefill changed the trajectory",
+                    f.id
+                );
+                assert_eq!(f.prompt_len, r.prompt_len);
+                assert_eq!(f.reason, r.reason);
+            }
+        }
+    }
+}
+
+/// Records every sampled token in emission order, tagged with its
+/// sequence and whether it was the first (prefill-produced) token.
+struct TokenLog {
+    events: Vec<(SeqId, usize, bool)>,
+}
+
+impl StepObserver for TokenLog {
+    fn on_token(&mut self, id: SeqId, token: usize, first: bool) {
+        self.events.push((id, token, first));
+    }
+}
+
+#[test]
+fn chunked_prefill_decode_interleaves_with_running_sequences() {
+    // The latency point of chunked prefill: while a LONG prompt is being
+    // prefilled chunk by chunk, an already-running sequence must keep
+    // emitting a token every step instead of stalling behind the full
+    // prefill. Observed through the streaming token log.
+    let (engine, _, _) = build_model_engine(4, 1800);
+    let cfg = ServeConfig::full_model().max_seq(32).slots(2).prefill_chunk(2);
+    let mut server = ModelServer::new(&engine, cfg).unwrap();
+    let mut cache = server.new_cache().unwrap();
+    let mut sched = DecodeScheduler::new();
+    let mut log = TokenLog { events: Vec::new() };
+    let short = sched.submit(SeqRequest::base(vec![7], 12));
+    // Step 1: short admits, prefills (1 token fits one chunk), decodes.
+    sched.step_observed(&mut server, &mut cache, &mut log).unwrap();
+    let short_before = log.events.iter().filter(|(id, _, _)| *id == short).count();
+    assert!(short_before >= 1, "short sequence never started");
+    // A 12-token prompt now needs ceil(12 / 2) = 6 chunk steps.
+    let long = sched.submit(SeqRequest::base((0..12).map(|j| j % 48).collect(), 2));
+    for _ in 0..5 {
+        sched.step_observed(&mut server, &mut cache, &mut log).unwrap();
+        assert!(
+            !log.events.iter().any(|(id, _, _)| *id == long),
+            "long prompt produced a token before its prefill completed"
+        );
+    }
+    // The short sequence advanced one token per step throughout.
+    let short_during = log.events.iter().filter(|(id, _, _)| *id == short).count();
+    assert_eq!(short_during - short_before, 5, "running decode stalled behind prefill");
+    // Sixth chunk step completes the prefill: the long seq's FIRST token.
+    let mut fin = sched.step_observed(&mut server, &mut cache, &mut log).unwrap();
+    let first = log.events.iter().find(|(id, _, _)| *id == long).unwrap();
+    assert!(first.2, "long sequence's first token was not flagged as TTFT");
+    while !sched.idle() {
+        fin.extend(sched.step_observed(&mut server, &mut cache, &mut log).unwrap());
+    }
+    assert_eq!(fin.len(), 2);
     assert_eq!(cache.reserved_bytes(), 0);
 }
 
