@@ -316,6 +316,36 @@ impl KvCache {
         &page[within * self.d..(within + 1) * self.d]
     }
 
+    /// Iterate the key rows of `(slot, layer)` as contiguous PAGE RUNS:
+    /// each yielded span is `rows × d` floats covering up to [`KV_PAGE`]
+    /// consecutive positions, in ascending position order, clamped to
+    /// the first `n_ctx` positions (a prefill row attends at an `n_ctx`
+    /// below what the chunk has already written). The attention kernel
+    /// streams these spans instead of calling [`KvCache::k_row`] per
+    /// position — one page-table lookup per [`KV_PAGE`] rows, and the
+    /// span's rows are physically contiguous, so a whole GQA group can
+    /// consume them while they are hot. Reading a run row-by-row yields
+    /// the exact `f32` slices the per-position accessors return, so the
+    /// streamed arithmetic is the same arithmetic, not merely close.
+    #[inline]
+    pub fn k_runs(&self, slot: SlotId, layer: usize, n_ctx: usize) -> KvRuns<'_> {
+        self.runs(slot, layer, n_ctx, true)
+    }
+
+    /// Value-row twin of [`KvCache::k_runs`].
+    #[inline]
+    pub fn v_runs(&self, slot: SlotId, layer: usize, n_ctx: usize) -> KvRuns<'_> {
+        self.runs(slot, layer, n_ctx, false)
+    }
+
+    #[inline]
+    fn runs(&self, slot: SlotId, layer: usize, n_ctx: usize, key: bool) -> KvRuns<'_> {
+        let s = self.slot_ref(slot);
+        let list = if key { &s.k[layer] } else { &s.v[layer] };
+        debug_assert!(n_ctx <= list.rows, "KvCache: runs over {n_ctx} of {} written", list.rows);
+        KvRuns { pool: &self.pool, pages: &list.pages, d: self.d, n_ctx, page_idx: 0 }
+    }
+
     /// Commit `n` positions: every layer must have appended exactly `n`
     /// rows beyond the previous commit (the model's layer loop does).
     pub fn advance(&mut self, slot: SlotId, n: usize) {
@@ -325,6 +355,40 @@ impl KvCache {
             debug_assert_eq!(s.v[l].rows, s.len + n, "KvCache: layer {l} V rows out of step");
         }
         s.len += n;
+    }
+}
+
+/// Iterator over the contiguous page runs of one `(slot, layer)` K or V
+/// list (see [`KvCache::k_runs`]). Yields `&[f32]` spans of
+/// `run_rows × d` floats, where `run_rows` is [`KV_PAGE`] for every run
+/// but the last, which is clamped to the requested `n_ctx`.
+#[derive(Debug)]
+pub struct KvRuns<'a> {
+    pool: &'a [Vec<f32>],
+    pages: &'a [usize],
+    d: usize,
+    n_ctx: usize,
+    page_idx: usize,
+}
+
+impl<'a> Iterator for KvRuns<'a> {
+    type Item = &'a [f32];
+
+    #[inline]
+    fn next(&mut self) -> Option<&'a [f32]> {
+        let start = self.page_idx * KV_PAGE;
+        if start >= self.n_ctx {
+            return None;
+        }
+        let rows = KV_PAGE.min(self.n_ctx - start);
+        let page = &self.pool[self.pages[self.page_idx]];
+        self.page_idx += 1;
+        Some(&page[..rows * self.d])
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        let left = self.n_ctx.div_ceil(KV_PAGE).saturating_sub(self.page_idx);
+        (left, Some(left))
     }
 }
 
@@ -408,6 +472,51 @@ mod tests {
             err.downcast_ref::<ServeError>(),
             Some(ServeError::CacheBudgetExhausted { .. })
         ));
+    }
+
+    #[test]
+    fn runs_concatenate_to_rows_at_page_boundaries() {
+        // n_ctx straddling KV_PAGE (16): one short run, one exact page,
+        // page+1, and two pages + 1 — the shapes the streaming attention
+        // kernel must read identically to the per-position accessors.
+        let d = 3;
+        let mut c = KvCache::new(1, d, 64, 1, 1 << 20).unwrap();
+        let slot = c.try_claim(40).unwrap().unwrap();
+        for pos in 0..40 {
+            let k: Vec<f32> = (0..d).map(|j| (pos * 10 + j) as f32).collect();
+            let v: Vec<f32> = k.iter().map(|x| -x).collect();
+            c.append(slot, 0, &k, &v);
+            c.advance(slot, 1);
+        }
+        for n_ctx in [1, 15, 16, 17, 33, 40] {
+            let mut seen = 0usize;
+            for (ri, run) in c.k_runs(slot, 0, n_ctx).enumerate() {
+                assert_eq!(run.len() % d, 0);
+                let rows = run.len() / d;
+                assert!(rows <= KV_PAGE, "run {ri} spans {rows} rows");
+                for r in 0..rows {
+                    assert_eq!(
+                        &run[r * d..(r + 1) * d],
+                        c.k_row(slot, 0, seen + r),
+                        "n_ctx {n_ctx}: run {ri} row {r} diverged from k_row"
+                    );
+                }
+                seen += rows;
+            }
+            assert_eq!(seen, n_ctx, "n_ctx {n_ctx}: runs covered {seen} rows");
+            let v_total: usize = c.v_runs(slot, 0, n_ctx).map(|run| run.len() / d).sum();
+            assert_eq!(v_total, n_ctx);
+            // V runs carry the negated rows, confirming K/V lists are
+            // independent.
+            let first = c.v_runs(slot, 0, n_ctx).next().unwrap();
+            assert_eq!(&first[..d], c.v_row(slot, 0, 0));
+        }
+        // Full pages are exactly KV_PAGE rows; the clamped tail is not.
+        let runs: Vec<usize> = c.k_runs(slot, 0, 33).map(|r| r.len() / d).collect();
+        assert_eq!(runs, vec![KV_PAGE, KV_PAGE, 1]);
+        // n_ctx 0 yields nothing (an empty but claimed slot is legal).
+        assert_eq!(c.k_runs(slot, 0, 0).count(), 0);
+        assert_eq!(c.k_runs(slot, 0, 33).size_hint(), (3, Some(3)));
     }
 
     #[test]

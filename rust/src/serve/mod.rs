@@ -71,9 +71,9 @@ pub mod server;
 pub mod stats;
 
 pub use config::{ServeConfig, ServeError, ServeScope, ServeStrategy, DEFAULT_KV_BUDGET_BYTES};
-pub use kvcache::{KvCache, SlotId, KV_PAGE};
+pub use kvcache::{KvCache, KvRuns, SlotId, KV_PAGE};
 pub use linear::{LinearServer, QuantBase};
-pub use model::{ModelServer, RMS_EPS};
+pub use model::{attn_streamed_into, rope_inv_freq, ModelServer, RMS_EPS};
 pub use router::{
     argmax, bucket, DecodeRequest, DecodeScheduler, FinishReason, FinishedSeq, Group,
     ModelRequest, Request, Routable, Scheduler, SeqId, SeqRequest, StepObserver,

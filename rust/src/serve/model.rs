@@ -36,21 +36,41 @@
 //! cached context, head-aware and position-aware: the `d_model`-wide
 //! q/k/v projections are split into `n_heads` slices of `head_dim`
 //! features, rotary position embeddings rotate q and k in place at each
-//! token's absolute position (`rope_theta > 0`), only the first
+//! token's absolute position (`rope_theta > 0`, via the inverse-
+//! frequency table precomputed once in the head layout), only the first
 //! `kv_dim = n_kv_heads × head_dim` features of k/v are cached (grouped-
 //! query attention: query head `h` reads cached head `h / (n_heads /
-//! n_kv_heads)`), and [`attn_into`] computes a per-head causal softmax
+//! n_kv_heads)`), and the page-streaming kernel behind
+//! [`attn_streamed_into`] computes a per-head causal softmax
 //! `softmax(q_h·K_g^T / √head_dim)·V_g`. Every stage keeps the fixed
 //! f32 evaluation order, so incremental decode stays bit-identical to a
 //! full-prefill recompute and to any thread count. The legacy default
 //! (`n_heads = 1`, `rope_theta = 0`) degenerates to exactly the PR 5
 //! arithmetic: one head of width `d_model`, no rotation, same 1/√d scale.
 //!
+//! The attention hot path is built for memory bandwidth: the cache's
+//! [`KvCache::k_runs`]/[`KvCache::v_runs`] iterators hand the kernel
+//! whole [`crate::serve::KV_PAGE`]-position pages, and the kernel is
+//! group-major — each GQA group's K/V pages are streamed ONCE while all
+//! `group = n_heads / n_kv_heads` query heads consume the hot span.
+//! Attention work is partitioned over (sequence, kv-group) items via
+//! [`crate::util::par::par_items`], so a small batch of long sequences
+//! still spreads across the whole pool; every item writes a disjoint
+//! `ao` slice and a disjoint scratch stride, so thread count cannot
+//! change any reduction order. Per-head arithmetic stays one mul-add
+//! per element in ascending position/feature order — the exact chains
+//! of the position-at-a-time reference kernel, pinned bit-identical by
+//! `rust/tests/determinism.rs`.
+//!
 //! Activation buffers ping-pong: the hidden state `x`, the norm/attn
 //! scratch `h`, the three projection buffers, and the two MLP-width
-//! buffers are allocated once per batch and REUSED across all layers —
-//! `LinearServer::forward_into` overwrites them in place, so the layer
-//! loop performs no per-linear allocations on the shared path.
+//! buffers live in a server-owned `DecodeScratch` reused across calls
+//! (and across all layers within a call) — `LinearServer::forward_into`
+//! overwrites them in place, the flat attention score scratch is reused
+//! per layer, and [`ModelServer::decode_step_into`] writes logits into a
+//! caller-owned buffer, so a steady decode loop performs ZERO heap
+//! allocations per step on the shared path (debug-asserted by
+//! fingerprinting every scratch buffer's pointer and capacity).
 //!
 //! Stats and residency aggregate across the whole pipeline:
 //! [`ModelServer::base_resident_bytes`] sums all `L × 7` base stores
@@ -64,9 +84,9 @@ use super::linear::LinearServer;
 use super::router::{bucket, DecodeRequest, Group, ModelRequest};
 use super::stats::{ResidentBreakdown, ServeStats};
 use crate::adapter::AdapterEngine;
-use crate::linalg::{matmul, vecmat, Mat};
+use crate::linalg::{matmul, matmul_into, vecmat, Mat};
 use crate::model::LINEARS;
-use crate::util::par::par_rows_mut;
+use crate::util::par::par_items;
 use crate::util::timer::Timer;
 use anyhow::Result;
 
@@ -83,10 +103,11 @@ const UP: usize = 5;
 const DOWN: usize = 6;
 
 /// Attention head layout of the decode path, precomputed at server
-/// construction from the validated config. `Copy` so the parallel
-/// attention closures capture it by value instead of borrowing the
-/// server.
-#[derive(Debug, Clone, Copy)]
+/// construction from the validated config. The RoPE inverse-frequency
+/// table is evaluated ONCE here ([`rope_inv_freq`]) — bitwise the same
+/// `theta.powf(-2i/head_dim)` values the rotation used to recompute per
+/// pair per token, now looked up instead.
+#[derive(Debug, Clone)]
 struct HeadLayout {
     /// Query heads (d_model = n_heads × head_dim).
     n_heads: usize,
@@ -99,12 +120,95 @@ struct HeadLayout {
     /// compute full d_model rows, but only this prefix is cached under
     /// GQA — the grouped heads never read past it).
     kv_dim: usize,
-    /// Per-head score scale `1/√head_dim`. With one head this equals the
-    /// legacy `1/√d_model`, which is what keeps old configs bit-stable.
-    scale: f32,
-    /// RoPE base frequency; 0.0 disables rotation entirely.
-    rope_theta: f32,
+    /// Per-pair RoPE inverse frequencies (`head_dim / 2` entries); empty
+    /// when `rope_theta == 0` (rotation disabled, the legacy path).
+    inv_freq: Vec<f32>,
 }
+
+/// Reusable buffers for the KV-cached serving paths, owned by the server
+/// and threaded through [`ModelServer::prefill`] /
+/// [`ModelServer::decode_step_into`] via `mem::take`: the ping-ponged
+/// activation Mats, the flat attention score scratch (one disjoint
+/// stride per (sequence, kv-group) item), the per-request position
+/// list, and the final-norm row. `prepare` only reallocates when a call
+/// needs MORE capacity than any call before it, so a steady decode loop
+/// reaches a fixed point after its first step and performs zero heap
+/// allocations per step on the shared path — debug-asserted in
+/// `decode_step_into` by fingerprinting every buffer.
+#[derive(Debug, Default)]
+struct DecodeScratch {
+    x: Mat,
+    h: Mat,
+    qb: Mat,
+    kb: Mat,
+    vb: Mat,
+    ao: Mat,
+    gate: Mat,
+    up: Mat,
+    /// Flat attention scratch: one `stride`-sized span per (sequence,
+    /// kv-group) item holding that item's `group × n_ctx` scores plus
+    /// `group` inverse softmax sums.
+    attn: Vec<f32>,
+    /// Per-request absolute positions for the current step.
+    pos: Vec<usize>,
+    /// Final-norm row for the prefill last-position logits.
+    hf: Vec<f32>,
+}
+
+impl DecodeScratch {
+    fn prepare(&mut self, rows: usize, d: usize, f: usize, attn_len: usize) {
+        resize_mat(&mut self.x, rows, d);
+        resize_mat(&mut self.h, rows, d);
+        resize_mat(&mut self.qb, rows, d);
+        resize_mat(&mut self.kb, rows, d);
+        resize_mat(&mut self.vb, rows, d);
+        resize_mat(&mut self.ao, rows, d);
+        resize_mat(&mut self.gate, rows, f);
+        resize_mat(&mut self.up, rows, f);
+        self.attn.resize(attn_len, 0.0);
+        self.hf.resize(d, 0.0);
+    }
+
+    /// (pointer, capacity) of every owned buffer — unchanged across a
+    /// decode step ⇔ the step allocated nothing on the shared path.
+    #[cfg(debug_assertions)]
+    fn fingerprint(&self) -> [(usize, usize); 11] {
+        [
+            (self.x.data.as_ptr() as usize, self.x.data.capacity()),
+            (self.h.data.as_ptr() as usize, self.h.data.capacity()),
+            (self.qb.data.as_ptr() as usize, self.qb.data.capacity()),
+            (self.kb.data.as_ptr() as usize, self.kb.data.capacity()),
+            (self.vb.data.as_ptr() as usize, self.vb.data.capacity()),
+            (self.ao.data.as_ptr() as usize, self.ao.data.capacity()),
+            (self.gate.data.as_ptr() as usize, self.gate.data.capacity()),
+            (self.up.data.as_ptr() as usize, self.up.data.capacity()),
+            (self.attn.as_ptr() as usize, self.attn.capacity()),
+            (self.pos.as_ptr() as usize, self.pos.capacity()),
+            (self.hf.as_ptr() as usize, self.hf.capacity()),
+        ]
+    }
+}
+
+/// Resize a [`Mat`] in place without giving up its allocation: the shape
+/// fields are rewritten and `data` is length-adjusted (zero-filling
+/// growth, truncating shrink — so `.data`-wide iterators stay exactly
+/// `rows × cols` long and capacity only ever ratchets up).
+fn resize_mat(m: &mut Mat, rows: usize, cols: usize) {
+    m.rows = rows;
+    m.cols = cols;
+    m.data.resize(rows * cols, 0.0);
+}
+
+/// A raw `*mut f32` the parallel attention closures may carry across
+/// threads. SAFETY contract: every use hands each (sequence, kv-group)
+/// item a DISJOINT region of the pointee (enforced by the callers' index
+/// arithmetic over fixed strides), and [`par_items`] blocks until every
+/// item has run, so no write outlives the buffer the pointer was minted
+/// from.
+#[derive(Clone, Copy)]
+struct SendPtr(*mut f32);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
 
 /// Whole-model batched multi-adapter server over a snapshot of an
 /// [`AdapterEngine`]: embed → `n_layers` adapted blocks → head.
@@ -131,6 +235,8 @@ pub struct ModelServer {
     d_ff: usize,
     heads: HeadLayout,
     stats: ServeStats,
+    /// Reused activation/score buffers for the KV-cached paths.
+    scratch: DecodeScratch,
 }
 
 impl ModelServer {
@@ -189,8 +295,7 @@ impl ModelServer {
             n_kv_heads: cfg.n_kv_heads,
             head_dim,
             kv_dim: cfg.n_kv_heads * head_dim,
-            scale: 1.0 / (head_dim as f32).sqrt(),
-            rope_theta: cfg.rope_theta as f32,
+            inv_freq: rope_inv_freq(cfg.rope_theta as f32, head_dim),
         };
         Ok(ModelServer {
             cfg,
@@ -205,6 +310,7 @@ impl ModelServer {
             d_ff,
             heads,
             stats: ServeStats::new(),
+            scratch: DecodeScratch::default(),
         })
     }
 
@@ -482,24 +588,25 @@ impl ModelServer {
         let groups =
             vec![Group { adapter: adapter.map(|s| s.to_string()), rows: (0..t).collect() }];
 
-        let mut x = Mat::zeros(t, d);
-        let mut h = Mat::zeros(t, d);
-        let mut qb = Mat::zeros(t, d);
-        let mut kb = Mat::zeros(t, d);
-        let mut vb = Mat::zeros(t, d);
-        let mut ao = Mat::zeros(t, d); // attention mix output
-        let mut gate = Mat::zeros(t, f);
-        let mut up = Mat::zeros(t, f);
+        let n_kv = self.heads.n_kv_heads;
+        let group = self.heads.n_heads / n_kv;
+        let ghd = group * self.heads.head_dim;
+        // One attention item per (row, kv-group); strides are sized for
+        // the chunk's LAST row (`n_ctx = start + t`), so every item's
+        // `group × n_ctx + group` span fits its stride.
+        let n_items = t * n_kv;
+        let stride = group * (start + t) + group;
+        let mut s = std::mem::take(&mut self.scratch);
+        s.prepare(t, d, f, n_items * stride);
 
         for (i, &tok) in tokens.iter().enumerate() {
-            x.row_mut(i).copy_from_slice(self.embed.row(tok));
+            s.x.row_mut(i).copy_from_slice(self.embed.row(tok));
         }
-        let heads = self.heads;
         for l in 0..self.n_layers {
-            rms_norm_into(&x, &self.attn_norm[l], &mut h);
-            self.linear(l, Q).forward_into(&h, &groups, &mut qb);
-            self.linear(l, K).forward_into(&h, &groups, &mut kb);
-            self.linear(l, V).forward_into(&h, &groups, &mut vb);
+            rms_norm_into(&s.x, &self.attn_norm[l], &mut s.h);
+            self.linear(l, Q).forward_into(&s.h, &groups, &mut s.qb);
+            self.linear(l, K).forward_into(&s.h, &groups, &mut s.kb);
+            self.linear(l, V).forward_into(&s.h, &groups, &mut s.vb);
             // Rotate Q (every head) and the cached K prefix (the
             // n_kv_heads heads that survive into the cache) at each row's
             // ABSOLUTE position — `start + i` here, `cache.len()` on the
@@ -507,46 +614,63 @@ impl ModelServer {
             // exact same rotation a from-scratch prefill would.
             for i in 0..t {
                 let pos = start + i;
-                rope_rotate(qb.row_mut(i), heads.n_heads, heads.head_dim, pos, heads.rope_theta);
-                let k = &mut kb.row_mut(i)[..heads.kv_dim];
-                rope_rotate(k, heads.n_kv_heads, heads.head_dim, pos, heads.rope_theta);
+                let (nh, hd) = (self.heads.n_heads, self.heads.head_dim);
+                rope_rotate(s.qb.row_mut(i), nh, hd, pos, &self.heads.inv_freq);
+                let k = &mut s.kb.row_mut(i)[..self.heads.kv_dim];
+                rope_rotate(k, n_kv, hd, pos, &self.heads.inv_freq);
             }
             // Write this chunk's K/V rows (only the kv_dim prefix is ever
             // read under GQA), then attend reading from the cache — the
             // same loads the decode path performs, so the arithmetic is
             // shared, not merely equivalent.
+            let kv_dim = self.heads.kv_dim;
             for i in 0..t {
-                cache.append(slot, l, &kb.row(i)[..heads.kv_dim], &vb.row(i)[..heads.kv_dim]);
+                cache.append(slot, l, &s.kb.row(i)[..kv_dim], &s.vb.row(i)[..kv_dim]);
             }
             {
                 let cache = &*cache;
-                par_rows_mut(&mut ao.data, t, d, 1, |lo, hi, chunk| {
-                    let mut scores = Vec::new();
-                    for i in lo..hi {
-                        let out = &mut chunk[(i - lo) * d..(i - lo + 1) * d];
-                        let n_ctx = start + i + 1;
-                        attn_into(cache, slot, l, qb.row(i), n_ctx, &heads, &mut scores, out);
-                    }
+                let (nh, qb) = (self.heads.n_heads, &s.qb);
+                let ao_ptr = SendPtr(s.ao.data.as_mut_ptr());
+                let attn_ptr = SendPtr(s.attn.as_mut_ptr());
+                par_items(n_items, |item| {
+                    let i = item / n_kv;
+                    let g = item % n_kv;
+                    let n_ctx = start + i + 1;
+                    // SAFETY: item (i, g) owns `ao[i*d + g*ghd ..][..ghd]`
+                    // and `attn[item*stride ..][..group*n_ctx + group]`
+                    // (which fits the stride since `n_ctx <= start + t`);
+                    // regions are disjoint across items, and `par_items`
+                    // returns only after every item has run.
+                    let (out, sc) = unsafe {
+                        (
+                            std::slice::from_raw_parts_mut(ao_ptr.0.add(i * d + g * ghd), ghd),
+                            std::slice::from_raw_parts_mut(
+                                attn_ptr.0.add(item * stride),
+                                group * n_ctx + group,
+                            ),
+                        )
+                    };
+                    attn_group_streamed(cache, slot, l, qb.row(i), n_ctx, nh, n_kv, g, sc, out);
                 });
             }
-            self.linear(l, O).forward_into(&ao, &groups, &mut h);
-            x.add_assign(&h);
+            self.linear(l, O).forward_into(&s.ao, &groups, &mut s.h);
+            s.x.add_assign(&s.h);
 
-            rms_norm_into(&x, &self.mlp_norm[l], &mut h);
-            self.linear(l, GATE).forward_into(&h, &groups, &mut gate);
-            self.linear(l, UP).forward_into(&h, &groups, &mut up);
-            for (gv, uv) in gate.data.iter_mut().zip(&up.data) {
+            rms_norm_into(&s.x, &self.mlp_norm[l], &mut s.h);
+            self.linear(l, GATE).forward_into(&s.h, &groups, &mut s.gate);
+            self.linear(l, UP).forward_into(&s.h, &groups, &mut s.up);
+            for (gv, uv) in s.gate.data.iter_mut().zip(&s.up.data) {
                 *gv = silu(*gv) * uv;
             }
-            self.linear(l, DOWN).forward_into(&gate, &groups, &mut h);
-            x.add_assign(&h);
+            self.linear(l, DOWN).forward_into(&s.gate, &groups, &mut s.h);
+            s.x.add_assign(&s.h);
         }
         cache.advance(slot, t);
         // Only the last position's logits matter for generation: one
         // final-norm row + one vecmat instead of a T × vocab head GEMM.
-        let mut hf = vec![0.0f32; d];
-        rms_norm_row_into(x.row(t - 1), &self.final_norm, &mut hf);
-        let logits = vecmat(&hf, &self.head);
+        rms_norm_row_into(s.x.row(t - 1), &self.final_norm, &mut s.hf);
+        let logits = vecmat(&s.hf, &self.head);
+        self.scratch = s;
         self.stats.record_prefill(adapter, t, timer.secs());
         Ok(logits)
     }
@@ -565,10 +689,31 @@ impl ModelServer {
     /// prefill(p) followed by decode steps for tokens `p..n` yields, at
     /// every step, EXACTLY the logits a fresh full prefill of the same
     /// `n` tokens would — bit for bit, for every serving strategy.
+    ///
+    /// Allocates a fresh logits matrix per call; steady-state decode
+    /// loops should prefer [`ModelServer::decode_step_into`], which
+    /// writes into a caller-owned buffer (the scheduler's hot loop does).
     pub fn decode_step(&mut self, cache: &mut KvCache, requests: &[DecodeRequest]) -> Result<Mat> {
+        let mut logits = Mat::zeros(0, 0);
+        self.decode_step_into(cache, requests, &mut logits)?;
+        Ok(logits)
+    }
+
+    /// [`ModelServer::decode_step`] writing row `i`'s next-token logits
+    /// into the caller-owned `logits` matrix (resized in place to
+    /// `batch × n_out`, reallocating only when capacity must grow).
+    /// Combined with the server-owned scratch this makes the steady
+    /// decode loop allocation-free on the shared path.
+    pub fn decode_step_into(
+        &mut self,
+        cache: &mut KvCache,
+        requests: &[DecodeRequest],
+        logits: &mut Mat,
+    ) -> Result<()> {
         self.check_cache(cache)?;
         if requests.is_empty() {
-            return Ok(Mat::zeros(0, self.n_out()));
+            resize_mat(logits, 0, self.n_out());
+            return Ok(());
         }
         for (i, r) in requests.iter().enumerate() {
             if !cache.is_claimed(r.slot) {
@@ -622,66 +767,95 @@ impl ModelServer {
         let (b, d, f) = (requests.len(), self.d_model, self.d_ff);
         let groups = bucket(requests);
 
-        let mut x = Mat::zeros(b, d);
-        let mut h = Mat::zeros(b, d);
-        let mut qb = Mat::zeros(b, d);
-        let mut kb = Mat::zeros(b, d);
-        let mut vb = Mat::zeros(b, d);
-        let mut ao = Mat::zeros(b, d);
-        let mut gate = Mat::zeros(b, f);
-        let mut up = Mat::zeros(b, f);
-
-        for (i, r) in requests.iter().enumerate() {
-            x.row_mut(i).copy_from_slice(self.embed.row(r.token));
-        }
-        let heads = self.heads;
+        let n_kv = self.heads.n_kv_heads;
+        let group = self.heads.n_heads / n_kv;
+        let ghd = group * self.heads.head_dim;
+        let n_items = b * n_kv;
+        // STEP-STABLE stride: sized by `max_seq`, not the current context
+        // — a ctx-sized stride would grow (i.e. reallocate) every step of
+        // a steady decode loop, which is exactly what the zero-allocation
+        // fingerprint below forbids.
+        let stride = group * (cache.max_seq() + 1);
+        let mut s = std::mem::take(&mut self.scratch);
         // Each request's new token sits at its slot's committed position —
         // the same absolute index a from-scratch prefill would rotate at.
-        let pos: Vec<usize> = requests.iter().map(|r| cache.len(r.slot)).collect();
+        s.pos.clear();
+        s.pos.extend(requests.iter().map(|r| cache.len(r.slot)));
+        s.prepare(b, d, f, n_items * stride);
+        resize_mat(logits, b, self.n_out());
+        #[cfg(debug_assertions)]
+        let fp = s.fingerprint();
+
+        for (i, r) in requests.iter().enumerate() {
+            s.x.row_mut(i).copy_from_slice(self.embed.row(r.token));
+        }
+        let mut attn_s = 0.0f64;
         for l in 0..self.n_layers {
-            rms_norm_into(&x, &self.attn_norm[l], &mut h);
-            self.step_linear(l, Q, &h, &groups, requests, &mut qb);
-            self.step_linear(l, K, &h, &groups, requests, &mut kb);
-            self.step_linear(l, V, &h, &groups, requests, &mut vb);
+            rms_norm_into(&s.x, &self.attn_norm[l], &mut s.h);
+            self.step_linear(l, Q, &s.h, &groups, requests, &mut s.qb);
+            self.step_linear(l, K, &s.h, &groups, requests, &mut s.kb);
+            self.step_linear(l, V, &s.h, &groups, requests, &mut s.vb);
             for i in 0..b {
-                rope_rotate(qb.row_mut(i), heads.n_heads, heads.head_dim, pos[i], heads.rope_theta);
-                let k = &mut kb.row_mut(i)[..heads.kv_dim];
-                rope_rotate(k, heads.n_kv_heads, heads.head_dim, pos[i], heads.rope_theta);
+                let (nh, hd) = (self.heads.n_heads, self.heads.head_dim);
+                rope_rotate(s.qb.row_mut(i), nh, hd, s.pos[i], &self.heads.inv_freq);
+                let k = &mut s.kb.row_mut(i)[..self.heads.kv_dim];
+                rope_rotate(k, n_kv, hd, s.pos[i], &self.heads.inv_freq);
             }
+            let kv_dim = self.heads.kv_dim;
             for (i, r) in requests.iter().enumerate() {
-                cache.append(r.slot, l, &kb.row(i)[..heads.kv_dim], &vb.row(i)[..heads.kv_dim]);
+                cache.append(r.slot, l, &s.kb.row(i)[..kv_dim], &s.vb.row(i)[..kv_dim]);
             }
             {
+                let attn_timer = Timer::start();
                 let cache = &*cache;
-                par_rows_mut(&mut ao.data, b, d, 1, |lo, hi, chunk| {
-                    let mut scores = Vec::new();
-                    for i in lo..hi {
-                        let r = &requests[i];
-                        let n_ctx = cache.layer_len(r.slot, l);
-                        let out = &mut chunk[(i - lo) * d..(i - lo + 1) * d];
-                        attn_into(cache, r.slot, l, qb.row(i), n_ctx, &heads, &mut scores, out);
-                    }
+                let (nh, qb, pos) = (self.heads.n_heads, &s.qb, &s.pos);
+                let ao_ptr = SendPtr(s.ao.data.as_mut_ptr());
+                let attn_ptr = SendPtr(s.attn.as_mut_ptr());
+                par_items(n_items, |item| {
+                    let i = item / n_kv;
+                    let g = item % n_kv;
+                    let n_ctx = pos[i] + 1;
+                    // SAFETY: item (i, g) owns `ao[i*d + g*ghd ..][..ghd]`
+                    // and `attn[item*stride ..][..group*n_ctx + group]`
+                    // (which fits the stride since `n_ctx <= max_seq`);
+                    // regions are disjoint across items, and `par_items`
+                    // returns only after every item has run.
+                    let (out, sc) = unsafe {
+                        (
+                            std::slice::from_raw_parts_mut(ao_ptr.0.add(i * d + g * ghd), ghd),
+                            std::slice::from_raw_parts_mut(
+                                attn_ptr.0.add(item * stride),
+                                group * n_ctx + group,
+                            ),
+                        )
+                    };
+                    let slot = requests[i].slot;
+                    attn_group_streamed(cache, slot, l, qb.row(i), n_ctx, nh, n_kv, g, sc, out);
                 });
+                attn_s += attn_timer.secs();
             }
-            self.step_linear(l, O, &ao, &groups, requests, &mut h);
-            x.add_assign(&h);
+            self.step_linear(l, O, &s.ao, &groups, requests, &mut s.h);
+            s.x.add_assign(&s.h);
 
-            rms_norm_into(&x, &self.mlp_norm[l], &mut h);
-            self.step_linear(l, GATE, &h, &groups, requests, &mut gate);
-            self.step_linear(l, UP, &h, &groups, requests, &mut up);
-            for (gv, uv) in gate.data.iter_mut().zip(&up.data) {
+            rms_norm_into(&s.x, &self.mlp_norm[l], &mut s.h);
+            self.step_linear(l, GATE, &s.h, &groups, requests, &mut s.gate);
+            self.step_linear(l, UP, &s.h, &groups, requests, &mut s.up);
+            for (gv, uv) in s.gate.data.iter_mut().zip(&s.up.data) {
                 *gv = silu(*gv) * uv;
             }
-            self.step_linear(l, DOWN, &gate, &groups, requests, &mut h);
-            x.add_assign(&h);
+            self.step_linear(l, DOWN, &s.gate, &groups, requests, &mut s.h);
+            s.x.add_assign(&s.h);
         }
         for r in requests {
             cache.advance(r.slot, 1);
         }
-        rms_norm_into(&x, &self.final_norm, &mut h);
-        let logits = matmul(&h, &self.head);
-        self.stats.record_decode_step(b, groups.len(), self.cfg.decode_slots, timer.secs());
-        Ok(logits)
+        rms_norm_into(&s.x, &self.final_norm, &mut s.h);
+        matmul_into(&s.h, &self.head, logits);
+        #[cfg(debug_assertions)]
+        debug_assert_eq!(fp, s.fingerprint(), "decode step allocated on the shared path");
+        self.scratch = s;
+        self.stats.record_decode_step(b, groups.len(), self.cfg.decode_slots, timer.secs(), attn_s);
+        Ok(())
     }
 
     /// Dispatch one linear of a decode step: a single-request step takes
@@ -722,90 +896,178 @@ impl ModelServer {
     }
 }
 
-/// Causal multi-head attention for ONE query row over `n_ctx` cached
-/// positions of `(slot, layer)`: per head `h`,
-/// softmax(q_h·K_g^T / √head_dim)·V_g written into the head's slice of
-/// `out`, where `g = h / (n_heads / n_kv_heads)` is the grouped-query
-/// K/V head shared by the head's group (cached rows are `kv_dim` wide,
-/// so head `g` lives at feature offset `g * head_dim`). Each head uses
-/// a fixed evaluation order — scores in ascending position order (each
-/// dot in ascending feature order), one max pass, one exp/sum pass,
-/// then V accumulated position-by-position and normalized at the end —
-/// and heads are processed in ascending order over disjoint output
-/// slices. Every element's arithmetic is independent of batch shape
-/// and thread count, which is what makes incremental decode ≡ full
-/// prefill bit-for-bit.
+/// Page-streaming causal attention for ONE query row over `n_ctx`
+/// cached positions of `(slot, layer)`, all heads: the public probe
+/// around [`attn_group_streamed`] used by the bench harness and the
+/// determinism suite to exercise the serving kernel directly. `scratch`
+/// is resized to the single-group requirement (`group × n_ctx + group`
+/// floats) and reused across the `n_kv_heads` groups; `out` must be
+/// `n_heads × head_dim` (= `q.len()`) wide.
 #[allow(clippy::too_many_arguments)]
-fn attn_into(
+pub fn attn_streamed_into(
     cache: &KvCache,
     slot: SlotId,
     layer: usize,
     q: &[f32],
     n_ctx: usize,
-    heads: &HeadLayout,
-    scores: &mut Vec<f32>,
+    n_heads: usize,
+    n_kv_heads: usize,
+    scratch: &mut Vec<f32>,
+    out: &mut [f32],
+) {
+    let hd = q.len() / n_heads;
+    let group = n_heads / n_kv_heads;
+    let need = group * n_ctx + group;
+    if scratch.len() < need {
+        scratch.resize(need, 0.0);
+    }
+    for g in 0..n_kv_heads {
+        let oh = &mut out[g * group * hd..(g + 1) * group * hd];
+        let sc = &mut scratch[..need];
+        attn_group_streamed(cache, slot, layer, q, n_ctx, n_heads, n_kv_heads, g, sc, oh);
+    }
+}
+
+/// Causal attention of ONE query row's kv-group `g` — the `group =
+/// n_heads / n_kv_heads` query heads that share cached K/V head `g` —
+/// over `n_ctx` cached positions of `(slot, layer)`, streamed by page:
+/// [`KvCache::k_runs`]/[`KvCache::v_runs`] hand whole pages, and every
+/// hot K/V row is consumed by ALL heads of the group before the next
+/// position is touched (group-major — the cached bytes are read once
+/// per group instead of once per query head).
+///
+/// `scratch` must be exactly `group * n_ctx + group` floats (per-head
+/// score rows, then per-head inverse softmax sums); `out` is the
+/// group's `group * head_dim` output slice (heads `g*group..(g+1)*group`
+/// are contiguous in `q`/`out` because query head `h` maps to kv head
+/// `h / group`).
+///
+/// Per head the evaluation order is EXACTLY the position-at-a-time
+/// reference: scores in ascending position order (each dot in ascending
+/// feature order, one `1/√head_dim` scale), one running-max pass, one
+/// exp/sum pass, V accumulated one mul-add per element in ascending
+/// position order, then one normalize. Restructuring the loops over
+/// pages and heads reorders only WHICH independent chain is advanced
+/// next, never the order within a chain — so the kernel is bit-identical
+/// to the reference for every page boundary, thread count, and batch
+/// shape (pinned by `rust/tests/determinism.rs`).
+#[allow(clippy::too_many_arguments)]
+fn attn_group_streamed(
+    cache: &KvCache,
+    slot: SlotId,
+    layer: usize,
+    q: &[f32],
+    n_ctx: usize,
+    n_heads: usize,
+    n_kv_heads: usize,
+    g: usize,
+    scratch: &mut [f32],
     out: &mut [f32],
 ) {
     debug_assert!(n_ctx >= 1);
-    let hd = heads.head_dim;
-    let group = heads.n_heads / heads.n_kv_heads;
-    for h in 0..heads.n_heads {
-        let kv_off = (h / group) * hd;
-        let qh = &q[h * hd..(h + 1) * hd];
-        let oh = &mut out[h * hd..(h + 1) * hd];
-        scores.clear();
+    let hd = q.len() / n_heads;
+    let group = n_heads / n_kv_heads;
+    debug_assert_eq!(scratch.len(), group * n_ctx + group);
+    debug_assert_eq!(out.len(), group * hd);
+    // Same expression the per-head reference evaluated: with one head
+    // this equals the legacy 1/√d_model, keeping old configs bit-stable.
+    let scale = 1.0 / (hd as f32).sqrt();
+    let kv_off = g * hd;
+    let d = cache.d();
+    let qg = &q[g * group * hd..(g + 1) * group * hd];
+    let (scores, invs) = scratch.split_at_mut(group * n_ctx);
+    // Pass 1 — scores: stream K pages once; every head of the group
+    // consumes the hot row while it sits in cache.
+    let mut j = 0;
+    for run in cache.k_runs(slot, layer, n_ctx) {
+        for row in run.chunks_exact(d) {
+            let k = &row[kv_off..kv_off + hd];
+            for (hi, qh) in qg.chunks_exact(hd).enumerate() {
+                let mut dot = 0.0f32;
+                for (qv, kv) in qh.iter().zip(k) {
+                    dot += qv * kv;
+                }
+                scores[hi * n_ctx + j] = dot * scale;
+            }
+            j += 1;
+        }
+    }
+    // Pass 2 — per-head softmax pre-normalization: running max, then
+    // exp/sum, both in ascending position order (the reference's exact
+    // reduction chains; the max of a chain is order-insensitive only
+    // because the COMPARISONS happen in the same ascending order).
+    for (hi, inv) in invs.iter_mut().enumerate() {
+        let row = &mut scores[hi * n_ctx..(hi + 1) * n_ctx];
         let mut max = f32::NEG_INFINITY;
-        for j in 0..n_ctx {
-            let k = &cache.k_row(slot, layer, j)[kv_off..kv_off + hd];
-            let mut dot = 0.0f32;
-            for (qv, kv) in qh.iter().zip(k) {
-                dot += qv * kv;
+        for &sv in row.iter() {
+            if sv > max {
+                max = sv;
             }
-            let s = dot * heads.scale;
-            if s > max {
-                max = s;
-            }
-            scores.push(s);
         }
         let mut sum = 0.0f32;
-        for s in scores.iter_mut() {
-            *s = (*s - max).exp();
-            sum += *s;
+        for sv in row.iter_mut() {
+            *sv = (*sv - max).exp();
+            sum += *sv;
         }
-        oh.iter_mut().for_each(|v| *v = 0.0);
-        for (j, &w) in scores.iter().enumerate() {
-            let v = &cache.v_row(slot, layer, j)[kv_off..kv_off + hd];
-            for (ov, vv) in oh.iter_mut().zip(v) {
-                *ov += w * vv;
+        *inv = 1.0 / sum;
+    }
+    // Pass 3 — V accumulate: stream V pages once, all heads consume the
+    // hot row; one mul-add per element in ascending position order, then
+    // one normalize by the stashed inverse sum.
+    out.iter_mut().for_each(|v| *v = 0.0);
+    let mut j = 0;
+    for run in cache.v_runs(slot, layer, n_ctx) {
+        for row in run.chunks_exact(d) {
+            let v = &row[kv_off..kv_off + hd];
+            for (hi, oh) in out.chunks_exact_mut(hd).enumerate() {
+                let w = scores[hi * n_ctx + j];
+                for (ov, vv) in oh.iter_mut().zip(v) {
+                    *ov += w * vv;
+                }
             }
+            j += 1;
         }
-        let inv = 1.0 / sum;
+    }
+    for (oh, &inv) in out.chunks_exact_mut(hd).zip(invs.iter()) {
         for ov in oh.iter_mut() {
             *ov *= inv;
         }
     }
 }
 
+/// The RoPE per-pair inverse-frequency table for one head width:
+/// `theta^(-2i/head_dim)` for `i in 0..head_dim/2` — the EXACT
+/// expression [`rope_rotate`] used to recompute per pair per token,
+/// evaluated once at server construction and indexed ever after (so the
+/// cached values are bitwise the ones the old path produced). A zero
+/// `theta` yields an empty table: rotation disabled, the legacy path.
+pub fn rope_inv_freq(theta: f32, head_dim: usize) -> Vec<f32> {
+    if theta == 0.0 {
+        return Vec::new();
+    }
+    (0..head_dim / 2).map(|i| theta.powf(-((2 * i) as f32) / head_dim as f32)).collect()
+}
+
 /// In-place rotary position embedding over a projection row laid out as
 /// `n_heads` contiguous `head_dim`-wide head slices. Within each head,
-/// feature pairs `(2i, 2i+1)` are rotated by `pos · theta^(-2i/head_dim)`.
-/// `theta == 0.0` disables rotation entirely (the legacy no-RoPE path).
+/// feature pairs `(2i, 2i+1)` are rotated by `pos · inv_freq[i]`, where
+/// `inv_freq` is the precomputed [`rope_inv_freq`] table (empty table =
+/// rotation disabled, the legacy no-RoPE path).
 ///
-/// The rotation depends only on `(pos, theta, head_dim)` — never on how
-/// many rows are processed together — so a token rotated during
+/// The rotation depends only on `(pos, inv_freq, head_dim)` — never on
+/// how many rows are processed together — so a token rotated during
 /// incremental decode at position `p` gets the bit-identical rotation a
 /// full-prefill recompute applies at the same position. Each pair is
-/// computed in a fixed scalar order (sin_cos once, then the 2×2 rotation),
-/// keeping the result thread-count independent.
-fn rope_rotate(row: &mut [f32], n_heads: usize, head_dim: usize, pos: usize, theta: f32) {
-    if theta == 0.0 {
+/// computed in a fixed scalar order (sin_cos once, then the 2×2
+/// rotation), keeping the result thread-count independent.
+fn rope_rotate(row: &mut [f32], n_heads: usize, head_dim: usize, pos: usize, inv_freq: &[f32]) {
+    if inv_freq.is_empty() {
         return;
     }
     let p = pos as f32;
     for h in 0..n_heads {
         let s = &mut row[h * head_dim..(h + 1) * head_dim];
-        for i in 0..head_dim / 2 {
-            let freq = theta.powf(-((2 * i) as f32) / head_dim as f32);
+        for (i, &freq) in inv_freq.iter().enumerate() {
             let angle = p * freq;
             let (sin, cos) = angle.sin_cos();
             let a = s[2 * i];
@@ -1174,20 +1436,21 @@ mod tests {
     #[test]
     fn rope_rotation_is_positional_and_norm_preserving() {
         let row: Vec<f32> = (0..8).map(|i| (i as f32) * 0.3 - 1.0).collect();
-        // theta = 0 disables rotation entirely.
+        let table = rope_inv_freq(10000.0, 4);
+        // theta = 0 yields an empty table, which disables rotation.
         let mut r0 = row.clone();
-        rope_rotate(&mut r0, 2, 4, 5, 0.0);
+        rope_rotate(&mut r0, 2, 4, 5, &rope_inv_freq(0.0, 4));
         assert_eq!(r0, row);
         // Position 0 is the identity rotation.
         let mut p0 = row.clone();
-        rope_rotate(&mut p0, 2, 4, 0, 10000.0);
+        rope_rotate(&mut p0, 2, 4, 0, &table);
         for (a, b) in p0.iter().zip(&row) {
             assert!((a - b).abs() < 1e-6, "{a} vs {b}");
         }
         // A real rotation changes the vector but preserves each pair's
         // norm (it is a 2×2 rotation per feature pair).
         let mut p5 = row.clone();
-        rope_rotate(&mut p5, 2, 4, 5, 10000.0);
+        rope_rotate(&mut p5, 2, 4, 5, &table);
         assert_ne!(p5, row);
         for i in (0..8).step_by(2) {
             let n0 = row[i] * row[i] + row[i + 1] * row[i + 1];
@@ -1196,8 +1459,97 @@ mod tests {
         }
         // Deterministic: same inputs, same bits.
         let mut again = row.clone();
-        rope_rotate(&mut again, 2, 4, 5, 10000.0);
+        rope_rotate(&mut again, 2, 4, 5, &table);
         assert_eq!(p5, again);
+    }
+
+    #[test]
+    fn rope_table_matches_per_pair_recomputation_bitwise() {
+        // The precomputed table must hold the EXACT f32s the old path
+        // recomputed per pair — same expression, evaluated once.
+        for (theta, hd) in [(10000.0f32, 8usize), (500.0, 6), (2.5, 16)] {
+            let table = rope_inv_freq(theta, hd);
+            assert_eq!(table.len(), hd / 2);
+            for (i, &got) in table.iter().enumerate() {
+                let want = theta.powf(-((2 * i) as f32) / hd as f32);
+                assert_eq!(got.to_bits(), want.to_bits(), "theta {theta} hd {hd} pair {i}");
+            }
+        }
+        assert!(rope_inv_freq(0.0, 8).is_empty());
+    }
+
+    #[test]
+    fn streamed_attention_matches_reference_at_page_boundaries() {
+        // The group-major page-streaming kernel vs a position-at-a-time
+        // reference (one head at a time, k_row/v_row per position — the
+        // pre-streaming kernel's exact loop structure), across contexts
+        // that undershoot / hit / straddle KV_PAGE runs and every GQA
+        // grouping. Bit-equality, not tolerance.
+        use crate::serve::KV_PAGE;
+        let (nh, hd) = (4usize, 4usize);
+        let d_q = nh * hd;
+        let mut rng = Rng::new(97);
+        for &n_kv in &[1usize, 2, 4] {
+            let kv_dim = n_kv * hd;
+            let mut cache = KvCache::new(1, kv_dim, 64, 1, 1 << 20).unwrap();
+            let slot = cache.try_claim(40).unwrap().unwrap();
+            for _ in 0..40 {
+                let k: Vec<f32> = (0..kv_dim).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+                let v: Vec<f32> = (0..kv_dim).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+                cache.append(slot, 0, &k, &v);
+                cache.advance(slot, 1);
+            }
+            let q: Vec<f32> = (0..d_q).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            for &n_ctx in &[1usize, 15, 16, 17, 33, 40] {
+                let mut got = vec![0.0f32; d_q];
+                let mut scratch = Vec::new();
+                attn_streamed_into(&cache, slot, 0, &q, n_ctx, nh, n_kv, &mut scratch, &mut got);
+                // Reference: per head, positions one at a time.
+                let group = nh / n_kv;
+                let scale = 1.0 / (hd as f32).sqrt();
+                let mut want = vec![0.0f32; d_q];
+                for h in 0..nh {
+                    let kv_off = (h / group) * hd;
+                    let qh = &q[h * hd..(h + 1) * hd];
+                    let mut scores = Vec::new();
+                    let mut max = f32::NEG_INFINITY;
+                    for j in 0..n_ctx {
+                        let k = &cache.k_row(slot, 0, j)[kv_off..kv_off + hd];
+                        let mut dot = 0.0f32;
+                        for (qv, kv) in qh.iter().zip(k) {
+                            dot += qv * kv;
+                        }
+                        let sv = dot * scale;
+                        if sv > max {
+                            max = sv;
+                        }
+                        scores.push(sv);
+                    }
+                    let mut sum = 0.0f32;
+                    for sv in scores.iter_mut() {
+                        *sv = (*sv - max).exp();
+                        sum += *sv;
+                    }
+                    let oh = &mut want[h * hd..(h + 1) * hd];
+                    for (j, &w) in scores.iter().enumerate() {
+                        let v = &cache.v_row(slot, 0, j)[kv_off..kv_off + hd];
+                        for (ov, vv) in oh.iter_mut().zip(v) {
+                            *ov += w * vv;
+                        }
+                    }
+                    let inv = 1.0 / sum;
+                    for ov in oh.iter_mut() {
+                        *ov *= inv;
+                    }
+                }
+                let straddles = n_ctx % KV_PAGE != 0;
+                assert_eq!(
+                    got, want,
+                    "n_kv {n_kv} n_ctx {n_ctx} (straddles page: {straddles}) drifted"
+                );
+            }
+            cache.release(slot);
+        }
     }
 
     #[test]

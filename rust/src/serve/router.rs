@@ -33,6 +33,7 @@
 
 use super::kvcache::{KvCache, SlotId};
 use super::model::ModelServer;
+use crate::linalg::Mat;
 use crate::util::timer::Timer;
 use anyhow::Result;
 use std::collections::BTreeMap;
@@ -305,6 +306,10 @@ pub struct DecodeScheduler {
     /// error mid-step (or mid-`run`) never drops a finished result —
     /// recover them with [`DecodeScheduler::drain_finished`].
     done: Vec<FinishedSeq>,
+    /// Reused next-token logits buffer for the decode hot loop —
+    /// [`ModelServer::decode_step_into`] resizes it in place, so the
+    /// steady-state step allocates nothing for logits.
+    logits: Mat,
 }
 
 impl Default for DecodeScheduler {
@@ -320,6 +325,7 @@ impl DecodeScheduler {
             pending: VecDeque::new(),
             running: Vec::new(),
             done: Vec::new(),
+            logits: Mat::zeros(0, 0),
         }
     }
 
@@ -529,7 +535,7 @@ impl DecodeScheduler {
             })
             .collect();
         if !reqs.is_empty() {
-            let logits = server.decode_step(cache, &reqs)?;
+            server.decode_step_into(cache, &reqs, &mut self.logits)?;
             let mut still = Vec::with_capacity(self.running.len());
             let mut row = 0;
             for mut run in std::mem::take(&mut self.running) {
@@ -537,7 +543,7 @@ impl DecodeScheduler {
                     still.push(run);
                     continue;
                 }
-                run.next = argmax(logits.row(row));
+                run.next = argmax(self.logits.row(row));
                 row += 1;
                 run.tokens.push(run.next);
                 run.generated += 1;

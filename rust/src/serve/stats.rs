@@ -48,6 +48,12 @@ pub struct ServeStats {
     pub decode_tokens: usize,
     /// Exact lifetime seconds spent in decode steps.
     decode_s: f64,
+    /// Exact lifetime seconds of decode-step time spent inside the
+    /// attention kernel (timed around the parallel attention dispatch of
+    /// every layer); the remainder of `decode_s` is the linear path
+    /// (projections + MLP + head). Tells a deployment whether it is
+    /// attention-bound or GEMM-bound straight from `/metrics`.
+    decode_attn_s: f64,
     /// Submit→first-token latency per sequence, last [`SAMPLE_WINDOW`].
     ttft_s: VecDeque<f64>,
     /// Rejected sequences by reason (exact lifetime totals) — requests
@@ -85,6 +91,11 @@ pub struct ServeSummary {
     pub decode_tok_per_s: f64,
     /// End-to-end generated tokens per second (prefill + decode time).
     pub seq_tok_per_s: f64,
+    /// Lifetime decode-step seconds spent in the attention kernel.
+    pub attn_secs: f64,
+    /// Lifetime decode-step seconds spent outside attention (projections,
+    /// MLP, head — the GEMM-bound remainder): `decode_s - attn_secs`.
+    pub linear_secs: f64,
 }
 
 /// Bounded push: drop the oldest sample once the window is full.
@@ -147,11 +158,21 @@ impl ServeStats {
     }
 
     /// Record one continuous-batching decode step: `batch` sequences each
-    /// produced one token; occupancy is measured against the slot budget.
-    pub fn record_decode_step(&mut self, batch: usize, n_groups: usize, slots: usize, secs: f64) {
+    /// produced one token; occupancy is measured against the slot budget;
+    /// `attn_secs` is the step time spent inside the attention kernel
+    /// (the rest of `secs` is the linear path).
+    pub fn record_decode_step(
+        &mut self,
+        batch: usize,
+        n_groups: usize,
+        slots: usize,
+        secs: f64,
+        attn_secs: f64,
+    ) {
         self.decode_steps += 1;
         self.decode_tokens += batch;
         self.decode_s += secs;
+        self.decode_attn_s += attn_secs;
         self.total_s += secs;
         push_windowed(&mut self.group_counts, n_groups);
         push_windowed(&mut self.occupancies, batch as f64 / slots.max(1) as f64);
@@ -217,6 +238,8 @@ impl ServeStats {
             } else {
                 0.0
             },
+            attn_secs: self.decode_attn_s,
+            linear_secs: self.decode_s - self.decode_attn_s,
         }
     }
 
@@ -240,6 +263,8 @@ impl ServeStats {
         o.set("ttft_p95_ms", jnum(s.ttft_p95_s * 1e3));
         o.set("decode_tok_per_s", jnum(s.decode_tok_per_s));
         o.set("seq_tok_per_s", jnum(s.seq_tok_per_s));
+        o.set("attn_secs", jnum(s.attn_secs));
+        o.set("linear_secs", jnum(s.linear_secs));
         let mut hits = Json::obj();
         for (k, v) in &self.hits {
             hits.set(k, jnum(*v as f64));
@@ -399,8 +424,8 @@ mod tests {
         st.record_prefill(None, 3, 0.002);
         st.record_ttft(0.005);
         st.record_ttft(0.009);
-        st.record_decode_step(2, 2, 8, 0.001);
-        st.record_decode_step(1, 1, 8, 0.003);
+        st.record_decode_step(2, 2, 8, 0.001, 0.0004);
+        st.record_decode_step(1, 1, 8, 0.003, 0.0016);
         assert_eq!(st.prefills, 2);
         assert_eq!(st.prefill_tokens, 9);
         assert_eq!(st.decode_tokens, 3);
@@ -414,8 +439,12 @@ mod tests {
         assert!((s.seq_tok_per_s - 5.0 / 0.010).abs() < 1e-6);
         // occupancy measured against the slot budget
         assert!((s.mean_occupancy - (0.25 + 0.125) / 2.0).abs() < 1e-12);
+        // decode time splits into attention + linear seconds.
+        assert!((s.attn_secs - 0.002).abs() < 1e-12);
+        assert!((s.linear_secs - 0.002).abs() < 1e-12);
         let j = st.to_json().to_string();
         assert!(j.contains("\"ttft_p50_ms\"") && j.contains("\"decode_tok_per_s\""), "{j}");
+        assert!(j.contains("\"attn_secs\"") && j.contains("\"linear_secs\""), "{j}");
     }
 
     #[test]

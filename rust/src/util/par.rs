@@ -297,6 +297,33 @@ where
     });
 }
 
+/// Run `f(i)` for every `i in 0..n_items` with persistent-pool
+/// work-claiming at ITEM granularity: each pool worker (plus the caller,
+/// which always participates — nested calls from inside a worker cannot
+/// deadlock) claims one item at a time via an atomic counter, so uneven
+/// per-item cost load-balances instead of stalling on the slowest
+/// pre-cut chunk. This is the dispatch primitive for head×sequence
+/// attention partitioning: the caller enumerates an explicit
+/// `(seq, kv_group)` item list and each item writes a DISJOINT output
+/// slice, so which thread runs which item can never change any
+/// reduction order — results are bit-identical for every
+/// `PISSA_THREADS`, provided `f` itself is deterministic per item.
+///
+/// Degree ≤ 1 (or a single item) runs inline in ascending item order.
+pub fn par_items<F>(n_items: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    let workers = num_threads().min(n_items).max(1);
+    if workers <= 1 {
+        for i in 0..n_items {
+            f(i);
+        }
+        return;
+    }
+    run_parallel(n_items, workers, &|i| f(i));
+}
+
 /// Parallel `(0..n).map(f)` with a deterministic result order. Each worker
 /// fills a disjoint slice of the output, so no locking and no reordering:
 /// the result is identical for any `PISSA_THREADS`, provided `f` itself is
@@ -414,6 +441,56 @@ mod tests {
         });
         for (i, x) in v.iter().enumerate() {
             assert_eq!(*x, i as u32);
+        }
+    }
+
+    #[test]
+    fn par_items_runs_every_item_exactly_once() {
+        let _g = override_lock();
+        for degree in [1, 2, 8, 32] {
+            let hits: Vec<AtomicUsize> = (0..257).map(|_| AtomicUsize::new(0)).collect();
+            with_parallelism(degree, || {
+                par_items(hits.len(), |i| {
+                    hits[i].fetch_add(1, Ordering::Relaxed);
+                });
+            });
+            for (i, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::Relaxed), 1, "degree {degree}: item {i}");
+            }
+        }
+        // Zero items is a no-op; one item runs inline.
+        par_items(0, |_| panic!("no items to run"));
+        let one = AtomicUsize::new(0);
+        par_items(1, |i| {
+            one.fetch_add(i + 7, Ordering::Relaxed);
+        });
+        assert_eq!(one.load(Ordering::Relaxed), 7);
+    }
+
+    #[test]
+    fn par_items_disjoint_writes_match_inline_for_any_degree() {
+        // The attention-dispatch shape: each item owns a disjoint slice
+        // of one shared output; every degree must produce the identical
+        // buffer.
+        let _g = override_lock();
+        let items = 63;
+        let width = 5;
+        let want: Vec<usize> = (0..items * width).map(|i| i * 3 + 1).collect();
+        for degree in [1, 3, 8] {
+            let mut out = vec![0usize; items * width];
+            let ptr = SendPtr(out.as_mut_ptr());
+            with_parallelism(degree, || {
+                par_items(items, |item| {
+                    // Safety: items own disjoint [item*width, (item+1)*width).
+                    let s = unsafe {
+                        std::slice::from_raw_parts_mut(ptr.0.add(item * width), width)
+                    };
+                    for (j, v) in s.iter_mut().enumerate() {
+                        *v = (item * width + j) * 3 + 1;
+                    }
+                });
+            });
+            assert_eq!(out, want, "degree {degree}");
         }
     }
 

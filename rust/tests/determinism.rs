@@ -20,8 +20,8 @@ use pissa::model::{BaseModel, LINEARS};
 use pissa::quant::{dequantize, quantize};
 use pissa::runtime::ConfigInfo;
 use pissa::serve::{
-    drift_factors, DecodeRequest, DecodeScheduler, ModelRequest, ModelServer, Request,
-    SeqRequest, ServeConfig, ServeStrategy, Server,
+    attn_streamed_into, drift_factors, DecodeRequest, DecodeScheduler, KvCache, ModelRequest,
+    ModelServer, Request, SeqRequest, ServeConfig, ServeStrategy, Server, KV_PAGE,
 };
 use pissa::util::rng::Rng;
 use std::sync::Mutex;
@@ -380,6 +380,174 @@ fn full_decode_trajectories_bit_identical_across_thread_counts() {
         let p1 = with_threads(1, probe);
         let p8 = with_threads(8, probe);
         assert_eq!(p1, p8, "decode logits drifted across thread counts ({})", strategy.name());
+    }
+}
+
+#[test]
+fn streamed_attention_bit_identical_to_reference_across_pages_and_threads() {
+    // The page-streaming kernel walks K/V as contiguous page runs and
+    // computes a whole GQA group per hot span, but its arithmetic must
+    // be EXACTLY the position-at-a-time reference: one mul-add per
+    // element, ascending position order, per-head running max in the
+    // same order. Pin bit-identity at contexts around the page
+    // boundary (KV_PAGE − 1, KV_PAGE, KV_PAGE + 1, 2·KV_PAGE + 1) for
+    // every group shape, under both thread counts — the kernel itself
+    // is sequential, so the thread sweep pins that no parallelism
+    // leaked inside it.
+    let _guard = ENV_LOCK.lock().unwrap();
+    let (n_heads, hd) = (4usize, 8usize);
+    let ctxs = [KV_PAGE - 1, KV_PAGE, KV_PAGE + 1, 2 * KV_PAGE + 1];
+    let fill = 2 * KV_PAGE + 1;
+    for n_kv in [1usize, 2, 4] {
+        let kv_dim = n_kv * hd;
+        let mut rng = Rng::new(1000 + n_kv as u64);
+        let mut cache = KvCache::new(1, kv_dim, 64, 1, 1 << 20).unwrap();
+        let slot = cache.try_claim(fill).unwrap().unwrap();
+        for _ in 0..fill {
+            let k: Vec<f32> = (0..kv_dim).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let v: Vec<f32> = (0..kv_dim).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            cache.append(slot, 0, &k, &v);
+            cache.advance(slot, 1);
+        }
+        let q: Vec<f32> = (0..n_heads * hd).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        for n_ctx in ctxs {
+            // Position-at-a-time reference: the pre-streaming kernel.
+            let group = n_heads / n_kv;
+            let scale = 1.0 / (hd as f32).sqrt();
+            let mut want = vec![0.0f32; n_heads * hd];
+            for h in 0..n_heads {
+                let kv_off = (h / group) * hd;
+                let qh = &q[h * hd..(h + 1) * hd];
+                let mut scores = Vec::new();
+                let mut max = f32::NEG_INFINITY;
+                for j in 0..n_ctx {
+                    let k = &cache.k_row(slot, 0, j)[kv_off..kv_off + hd];
+                    let mut dot = 0.0f32;
+                    for (qv, kv) in qh.iter().zip(k) {
+                        dot += qv * kv;
+                    }
+                    let s = dot * scale;
+                    if s > max {
+                        max = s;
+                    }
+                    scores.push(s);
+                }
+                let mut sum = 0.0f32;
+                for s in scores.iter_mut() {
+                    *s = (*s - max).exp();
+                    sum += *s;
+                }
+                let oh = &mut want[h * hd..(h + 1) * hd];
+                for (j, &w) in scores.iter().enumerate() {
+                    let v = &cache.v_row(slot, 0, j)[kv_off..kv_off + hd];
+                    for (ov, vv) in oh.iter_mut().zip(v) {
+                        *ov += w * vv;
+                    }
+                }
+                let inv = 1.0 / sum;
+                for ov in oh.iter_mut() {
+                    *ov *= inv;
+                }
+            }
+            for threads in [1usize, 8] {
+                let got = with_threads(threads, || {
+                    let mut scratch = Vec::new();
+                    let mut out = vec![0.0f32; n_heads * hd];
+                    attn_streamed_into(
+                        &cache, slot, 0, &q, n_ctx, n_heads, n_kv, &mut scratch, &mut out,
+                    );
+                    out
+                });
+                let bits_equal =
+                    got.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits());
+                assert!(
+                    bits_equal,
+                    "streamed kernel diverged from reference (n_kv {n_kv}, n_ctx {n_ctx}, \
+                     threads {threads})"
+                );
+            }
+        }
+        cache.release(slot);
+    }
+}
+
+#[test]
+fn page_straddling_decode_trajectories_bit_identical_across_thread_counts() {
+    // Whole-path twin of the kernel test above: prompts LONGER than a
+    // KV page, decoded past the second page boundary, so the
+    // head×sequence `par_items` dispatch and the streamed kernel both
+    // cross page runs mid-trajectory. Every group shape of the serving
+    // config (MHA, GQA, MQA-like 4:1) must emit bit-identical token
+    // trajectories under 1 and 8 threads. Attention is
+    // strategy-independent, so `fused` alone covers the surface (the
+    // strategy sweep lives in the short-context tests).
+    let _guard = ENV_LOCK.lock().unwrap();
+    let cfg = ConfigInfo {
+        name: "page-straddle-determinism".into(),
+        kind: "decoder".into(),
+        vocab: 32,
+        d_model: 48, // 4 heads -> head_dim 12 (even, RoPE-able)
+        n_layers: 2,
+        n_heads: 4,
+        d_ff: 64,
+        seq_len: 8,
+        batch: 4,
+        eval_batch: 2,
+        n_classes: 0,
+        ranks: vec![4],
+    };
+    let (engine, workload) = with_threads(1, || {
+        let mut rng = Rng::new(41);
+        let base = BaseModel::random(&cfg, &mut rng);
+        let mut engine = AdapterEngine::new(base);
+        for name in ["t0", "t1"] {
+            engine.attach(name, AdapterSpec::pissa(4), &mut rng).unwrap();
+            for module in LINEARS {
+                drift_factors(&mut engine, name, module, 0.05, &mut rng).unwrap();
+            }
+        }
+        // Prompts of KV_PAGE + {2..5} tokens, 15 generated: trajectories
+        // start past one page boundary and decode across the next.
+        let workload: Vec<SeqRequest> = (0..4)
+            .map(|i| {
+                let plen = KV_PAGE + 2 + i;
+                let prompt: Vec<usize> = (0..plen).map(|j| (i * 13 + j * 5) % 32).collect();
+                if i % 2 == 0 {
+                    SeqRequest::base(prompt, 15)
+                } else {
+                    SeqRequest::new(["t0", "t1"][i % 2], prompt, 15)
+                }
+            })
+            .collect();
+        (engine, workload)
+    });
+
+    for n_kv in [1usize, 2, 4] {
+        let run = || {
+            let mut server = ModelServer::new(
+                &engine,
+                ServeConfig::full_model()
+                    .strategy(ServeStrategy::Fused)
+                    .max_seq(3 * KV_PAGE)
+                    .slots(4)
+                    .heads(4, n_kv)
+                    .rope_theta(10000.0),
+            )
+            .unwrap();
+            let mut cache = server.new_cache().unwrap();
+            let mut sched = DecodeScheduler::new();
+            for r in &workload {
+                sched.submit(r.clone());
+            }
+            let fin = sched.run_sorted(&mut server, &mut cache).unwrap();
+            fin.into_iter().map(|f| f.tokens).collect::<Vec<_>>()
+        };
+        let t1 = with_threads(1, run);
+        let t8 = with_threads(8, run);
+        assert_eq!(
+            t1, t8,
+            "page-straddling decode trajectories drifted across thread counts (n_kv {n_kv})"
+        );
     }
 }
 

@@ -711,6 +711,51 @@ fn incremental_decode_is_bit_identical_to_full_prefill_recompute() {
 }
 
 #[test]
+fn page_straddling_incremental_decode_matches_full_recompute() {
+    // Long-context twin of the tentpole contract, aimed at the
+    // page-streaming kernel: the trajectory starts just under a KV page
+    // (KV_PAGE − 2 prompt tokens) and decodes far enough to cross TWO
+    // page boundaries, so incremental steps attend over partial pages,
+    // exactly-full pages, and fresh pages — every run-clamping case of
+    // `k_runs`/`v_runs`. Each step's logits must still equal a
+    // from-scratch prefill of the same prefix bit for bit, under the
+    // GQA+RoPE layout. Attention is strategy-independent, so the exact
+    // `fused` path covers the kernel (the strategy grid is pinned by
+    // the short-context test above).
+    use pissa::serve::KV_PAGE;
+    let (engine, _, _) = build_model_engine(4, 1150);
+    let n_new = 2 * KV_PAGE + 4 - (KV_PAGE - 2); // end at 2·KV_PAGE + 4 positions
+    let fixtures: [(Option<&str>, usize); 2] = [(Some("pissa-t"), 3), (None, 7)];
+    let cfg = ServeConfig::full_model()
+        .strategy(ServeStrategy::Fused)
+        .max_seq(3 * KV_PAGE)
+        .heads(4, 2)
+        .rope_theta(10000.0);
+    let mut server = ModelServer::new(&engine, cfg).unwrap();
+    let mut cache = server.new_cache().unwrap();
+    for (adapter, tok0) in &fixtures {
+        let prompt: Vec<usize> =
+            (0..KV_PAGE - 2).map(|j| (tok0 + j * 5) % MODEL_VOCAB).collect();
+        let (tokens, logits) =
+            incremental_trajectory(&mut server, &mut cache, *adapter, &prompt, n_new);
+        assert_eq!(tokens.len(), 2 * KV_PAGE + 4);
+        for (step, want) in logits.iter().enumerate() {
+            let prefix = &tokens[..prompt.len() + step];
+            let slot = cache.try_claim(prefix.len()).unwrap().unwrap();
+            let got = server.prefill(&mut cache, slot, *adapter, prefix).unwrap();
+            cache.release(slot);
+            assert_eq!(
+                &got,
+                want,
+                "adapter={adapter:?} step={step} (ctx {}): page-straddling incremental \
+                 decode diverged from full recompute",
+                prefix.len()
+            );
+        }
+    }
+}
+
+#[test]
 fn batched_decode_steps_match_single_sequence_decode_across_slot_counts() {
     // Continuous batching must not change a single bit of any sequence's
     // trajectory: the same request set decoded at slots {1, 3, 8} (and
