@@ -1,0 +1,461 @@
+//! §Adapter tiering — serving more registered tenants than fit in RAM.
+//!
+//! The multi-tenant shape the PiSSA serving story implies at fleet
+//! scale: far more registered adapters than the host can keep resident.
+//! The residency tiers ([`TierManager`]) keep a byte-budgeted LRU hot
+//! set in f32 (+ prepared Appendix-C deltas), spill evictees losslessly
+//! to disk, and attach cold tenants on their first request at a step
+//! boundary. This bench measures what that costs:
+//!
+//!   setup        N_TENANTS cold tenants registered over N_TEMPLATES
+//!                saved adapter checkpoints; a budget admitting HOT_CAP
+//!                hot adapters (HOT_CAP << N_TENANTS)
+//!   steady       a WORKING_SET-tenant resident working set served
+//!                closed-loop, once with the per-step residency hook and
+//!                once without (the all-hot baseline). Target: the hook
+//!                costs ≤ 5% decode throughput (ratio ≥ 0.95).
+//!   churn        open-loop Zipf(ZIPF_S) traffic over ALL tenants: cold
+//!                attaches on miss, LRU eviction past the budget.
+//!                Reported: churn tokens/s vs steady-state, the
+//!                attach-on-miss p95 (absolute, and normalized by the
+//!                steady per-token time), and the max resident bytes
+//!                seen at any step-boundary sample (must stay ≤ budget —
+//!                hard-asserted at EVERY sample, not just the max).
+//!
+//! Two correctness probes guard the comparison: a demote→promote round
+//! trip must serve trajectories bitwise identical to the same checkpoint
+//! attached hot from the start (the Exact-policy eviction-invariance
+//! contract), and a churn slice must be bit-identical under
+//! PISSA_THREADS 1 vs 8. Quick mode (default) trims request counts,
+//! never the tenant registry; PISSA_BENCH_FULL=1 for the full protocol.
+
+mod common;
+
+use pissa::adapter::{AdapterEngine, AdapterSpec, Tier, TierManager};
+use pissa::metrics::write_labeled_csv;
+use pissa::model::{BaseModel, LINEARS};
+use pissa::runtime::ConfigInfo;
+use pissa::serve::{
+    argmax, drift_factors, DecodeRequest, DecodeScheduler, FinishedSeq, KvCache, ModelServer,
+    SeqRequest, ServeConfig, ServeStrategy,
+};
+use pissa::util::json::{jnum, Json};
+use pissa::util::par::with_parallelism;
+use pissa::util::rng::Rng;
+use pissa::util::timer::Timer;
+use std::path::{Path, PathBuf};
+
+const DIM: usize = 32;
+const D_FF: usize = 48;
+const VOCAB: usize = 48;
+const LAYERS: usize = 2;
+const RANK: usize = 4;
+/// Registered tenants — the whole point is N_TENANTS >> HOT_CAP.
+const N_TENANTS: usize = 1024;
+/// Distinct saved checkpoints the tenants alias (fleet tenants are
+/// near-duplicates; the tier machinery neither knows nor cares).
+const N_TEMPLATES: usize = 8;
+/// Hot adapters the byte budget admits.
+const HOT_CAP: usize = 32;
+const SLOTS: usize = 4;
+const PROMPT_LEN: usize = 6;
+const MAX_NEW: usize = 8;
+const MAX_SEQ: usize = PROMPT_LEN + MAX_NEW;
+/// Zipf exponent of the churn traffic (mild skew: a long miss tail).
+const ZIPF_S: f64 = 1.1;
+/// Steady-state resident working set (hot throughout that section).
+const WORKING_SET: usize = 8;
+
+fn serve_cfg() -> ServeConfig {
+    ServeConfig::full_model()
+        .strategy(ServeStrategy::Fused)
+        .max_seq(MAX_SEQ)
+        .slots(SLOTS)
+}
+
+/// Engine plus `N_TEMPLATES` saved (drifted) adapter checkpoints under
+/// `dir/templates/`. The templates are detached after saving — tenants
+/// reference the files, not engine state.
+fn build_engine_and_templates(
+    rng: &mut Rng,
+    dir: &Path,
+) -> anyhow::Result<(AdapterEngine, Vec<PathBuf>)> {
+    let cfg = ConfigInfo {
+        name: "adapter-tier-bench".into(),
+        kind: "decoder".into(),
+        vocab: VOCAB,
+        d_model: DIM,
+        n_layers: LAYERS,
+        n_heads: 2,
+        d_ff: D_FF,
+        seq_len: 8,
+        batch: 8,
+        eval_batch: 4,
+        n_classes: 0,
+        ranks: vec![RANK],
+    };
+    let base = BaseModel::random(&cfg, rng);
+    let mut engine = AdapterEngine::new(base);
+    let mut paths = Vec::with_capacity(N_TEMPLATES);
+    for t in 0..N_TEMPLATES {
+        let name = format!("tmpl{t}");
+        engine.attach(&name, AdapterSpec::pissa(RANK), rng)?;
+        for module in LINEARS {
+            drift_factors(&mut engine, &name, module, 0.05, rng)?;
+        }
+        let path = dir.join("templates").join(format!("{name}.ckpt"));
+        engine.save(&name, &path)?;
+        engine.detach(&name)?;
+        paths.push(path);
+    }
+    Ok((engine, paths))
+}
+
+/// Cumulative-weight Zipf sampler over ranks 0..n (rank 0 hottest).
+struct Zipf {
+    cum: Vec<f64>,
+}
+
+impl Zipf {
+    fn new(n: usize, s: f64) -> Zipf {
+        let mut cum = Vec::with_capacity(n);
+        let mut total = 0.0;
+        for k in 0..n {
+            total += 1.0 / ((k + 1) as f64).powf(s);
+            cum.push(total);
+        }
+        Zipf { cum }
+    }
+
+    fn sample(&self, u: f64) -> usize {
+        let target = u * self.cum.last().copied().unwrap_or(1.0);
+        match self.cum.binary_search_by(|c| c.partial_cmp(&target).expect("finite")) {
+            Ok(i) | Err(i) => i.min(self.cum.len() - 1),
+        }
+    }
+}
+
+fn zipf_workload(names: &[String], n: usize, seed: u64) -> Vec<SeqRequest> {
+    let zipf = Zipf::new(names.len(), ZIPF_S);
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            let tenant = zipf.sample(rng.uniform());
+            let plen = 3 + (rng.uniform() * (PROMPT_LEN - 3) as f64) as usize;
+            let prompt: Vec<usize> =
+                (0..plen).map(|_| (rng.uniform() * VOCAB as f64) as usize % VOCAB).collect();
+            SeqRequest::new(&names[tenant], prompt, MAX_NEW)
+        })
+        .collect()
+}
+
+/// Round-robin traffic over the resident working set.
+fn steady_workload(ws: &[String], n: usize) -> Vec<SeqRequest> {
+    let mut rng = Rng::new(99);
+    (0..n)
+        .map(|i| {
+            let prompt: Vec<usize> = (0..PROMPT_LEN)
+                .map(|_| (rng.uniform() * VOCAB as f64) as usize % VOCAB)
+                .collect();
+            SeqRequest::new(&ws[i % ws.len()], prompt, MAX_NEW)
+        })
+        .collect()
+}
+
+/// One probe trajectory: prefill + MAX_NEW-1 decode steps, tokens and
+/// every step's logits row (compared bitwise by the callers).
+fn traj(
+    server: &mut ModelServer,
+    cache: &mut KvCache,
+    adapter: &str,
+    prompt: &[usize],
+) -> anyhow::Result<(Vec<usize>, Vec<Vec<f32>>)> {
+    let slot = cache.try_claim(prompt.len() + MAX_NEW)?.expect("probe slot is free");
+    let mut tokens = prompt.to_vec();
+    let mut logits_all = Vec::new();
+    let l0 = server.prefill(cache, slot, Some(adapter), prompt)?;
+    let mut next = argmax(&l0);
+    tokens.push(next);
+    logits_all.push(l0);
+    for _ in 1..MAX_NEW {
+        let req = DecodeRequest { slot, token: next, adapter: Some(adapter.to_string()) };
+        let lm = server.decode_step(cache, &[req])?;
+        let row = lm.row(0).to_vec();
+        next = argmax(&row);
+        tokens.push(next);
+        logits_all.push(row);
+    }
+    cache.release(slot);
+    Ok((tokens, logits_all))
+}
+
+/// Closed-loop serving of a RESIDENT working set: everything submitted
+/// up front (the wanted set fits the budget), the per-step residency
+/// hook optional — `hook = false` is the all-hot baseline leg.
+fn run_steady(
+    engine: &mut AdapterEngine,
+    tiers: &mut TierManager,
+    server: &mut ModelServer,
+    cache: &mut KvCache,
+    reqs: &[SeqRequest],
+    hook: bool,
+) -> anyhow::Result<(Vec<FinishedSeq>, f64)> {
+    let mut sched = DecodeScheduler::new();
+    for r in reqs {
+        sched.submit(r.clone());
+    }
+    let t = Timer::start();
+    let mut fin = Vec::new();
+    while !sched.idle() {
+        if hook {
+            let wanted = sched.active_adapters();
+            let failed = tiers.ensure_resident(engine, server, &wanted);
+            anyhow::ensure!(failed.is_empty(), "steady promotion failed: {failed:?}");
+            anyhow::ensure!(
+                tiers.resident_bytes() <= tiers.budget_bytes(),
+                "resident bytes over budget in steady state"
+            );
+        }
+        fin.extend(sched.step(server, cache)?);
+    }
+    let wall = t.secs();
+    fin.sort_by_key(|f| f.id);
+    Ok((fin, wall))
+}
+
+/// Open-loop churn over the WHOLE tenant registry: arrivals throttled by
+/// scheduler backpressure (so the wanted set tracks the live working
+/// set, not the backlog), the residency hook before every step,
+/// resident ≤ budget hard-asserted at every sample.
+fn run_churn(
+    engine: &mut AdapterEngine,
+    tiers: &mut TierManager,
+    server: &mut ModelServer,
+    cache: &mut KvCache,
+    reqs: &[SeqRequest],
+) -> anyhow::Result<(Vec<FinishedSeq>, f64, usize)> {
+    let mut sched = DecodeScheduler::new();
+    let t = Timer::start();
+    let mut fin = Vec::new();
+    let mut max_resident = 0usize;
+    let mut next = 0usize;
+    while next < reqs.len() || !sched.idle() {
+        while next < reqs.len() && sched.pending() < SLOTS {
+            sched.submit(reqs[next].clone());
+            next += 1;
+        }
+        let wanted = sched.active_adapters();
+        let failed = tiers.ensure_resident(engine, server, &wanted);
+        anyhow::ensure!(failed.is_empty(), "attach-on-miss failed: {failed:?}");
+        anyhow::ensure!(
+            tiers.resident_bytes() <= tiers.budget_bytes(),
+            "resident bytes over budget mid-churn"
+        );
+        max_resident = max_resident.max(tiers.resident_bytes());
+        fin.extend(sched.step(server, cache)?);
+    }
+    let wall = t.secs();
+    fin.sort_by_key(|f| f.id);
+    Ok((fin, wall, max_resident))
+}
+
+fn main() -> anyhow::Result<()> {
+    common::banner(
+        "§Adapter tiering",
+        &format!(
+            "{N_TENANTS} tenants over {N_TEMPLATES} checkpoints, budget = {HOT_CAP} hot — \
+             d={DIM}, f={D_FF}, L={LAYERS}, rank {RANK}, {SLOTS} slots"
+        ),
+    );
+    let n_steady = if common::full_mode() { 96 } else { 32 };
+    let n_churn = if common::full_mode() { 384 } else { 96 };
+    let dir = std::env::temp_dir().join(format!("pissa_bench_adapter_tier_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+
+    let mut rng = Rng::new(41);
+    eprintln!("[setup] engine + {N_TEMPLATES} saved template adapters…");
+    let (mut engine, tmpl_paths) = build_engine_and_templates(&mut rng, &dir)?;
+
+    // Per-tenant hot bytes (engine f32 tensors + prepared serve deltas),
+    // measured on a throwaway attach — the budget unit.
+    engine.attach("meas", AdapterSpec::pissa(RANK), &mut rng)?;
+    let mut server = ModelServer::new(&engine, serve_cfg())?;
+    let per_hot = engine.adapter_bytes("meas")? + server.adapter_delta_bytes("meas");
+    server.remove_adapter("meas")?;
+    engine.detach("meas")?;
+    let mut cache = server.new_cache()?;
+
+    let budget = HOT_CAP * per_hot;
+    let mut tiers = TierManager::new(budget, dir.join("spill"));
+    let names: Vec<String> = (0..N_TENANTS).map(|i| format!("t{i:04}")).collect();
+    for (i, n) in names.iter().enumerate() {
+        tiers.register_cold(n, &tmpl_paths[i % N_TEMPLATES])?;
+    }
+    eprintln!(
+        "[setup] {N_TENANTS} cold tenants registered; budget {budget} B admits {HOT_CAP} hot \
+         ({per_hot} B each)"
+    );
+
+    // Probe: Exact-policy eviction invariance through the serving path.
+    // The same checkpoint attached hot from the start ("ref-hot") and as
+    // a tiered tenant must serve bitwise-identical trajectories — before
+    // AND after a forced demote→promote round trip.
+    let prompt = vec![3usize, 17, 41, 8];
+    engine.attach_saved("ref-hot", &tmpl_paths[0])?;
+    server.add_adapter(&engine, "ref-hot")?;
+    let want = traj(&mut server, &mut cache, "ref-hot", &prompt)?;
+    let wanted = vec![names[0].clone()];
+    let failed = tiers.ensure_resident(&mut engine, &mut server, &wanted);
+    anyhow::ensure!(failed.is_empty(), "probe attach failed: {failed:?}");
+    let before = traj(&mut server, &mut cache, &names[0], &prompt)?;
+    tiers.demote(&mut engine, &mut server, &names[0])?;
+    anyhow::ensure!(tiers.tier(&names[0]) == Some(Tier::Cold), "Exact demote spills to cold");
+    let failed = tiers.ensure_resident(&mut engine, &mut server, &wanted);
+    anyhow::ensure!(failed.is_empty(), "probe re-promotion failed: {failed:?}");
+    let after = traj(&mut server, &mut cache, &names[0], &prompt)?;
+    anyhow::ensure!(
+        before == want && after == want,
+        "demote→promote trajectory diverged from the all-hot reference"
+    );
+    server.remove_adapter("ref-hot")?;
+    engine.detach("ref-hot")?;
+    eprintln!("[probe] demote→promote trajectories bitwise == all-hot ✓");
+
+    // Probe: a churn slice must be bit-identical under 1 vs 8 threads
+    // (tier transitions happen at step boundaries; nothing about the
+    // worker count may change what gets attached or decoded).
+    let invariant = |threads: usize| -> anyhow::Result<Vec<Vec<usize>>> {
+        with_parallelism(threads, || -> anyhow::Result<Vec<Vec<usize>>> {
+            let tdir = dir.join(format!("tinv{threads}"));
+            let mut rng = Rng::new(53);
+            let (mut engine, paths) = build_engine_and_templates(&mut rng, &tdir)?;
+            let mut server = ModelServer::new(&engine, serve_cfg())?;
+            let mut cache = server.new_cache()?;
+            // 12 resident adapters: comfortably above the worst-case live
+            // wanted set (pending + running ≤ 2·SLOTS tenants — the hook
+            // never evicts the wanted set, so the budget must admit it)
+            // while still forcing evictions across the 32-tenant slice.
+            let mut tiers = TierManager::new(12 * per_hot, tdir.join("spill"));
+            let names: Vec<String> = (0..32).map(|i| format!("p{i:02}")).collect();
+            for (i, n) in names.iter().enumerate() {
+                tiers.register_cold(n, &paths[i % N_TEMPLATES])?;
+            }
+            let reqs = zipf_workload(&names, 24, 7);
+            let (fin, _, _) = run_churn(&mut engine, &mut tiers, &mut server, &mut cache, &reqs)?;
+            Ok(fin.into_iter().map(|f| f.tokens).collect())
+        })
+    };
+    let (inv1, inv8) = (invariant(1)?, invariant(8)?);
+    anyhow::ensure!(inv1 == inv8, "churn trajectories changed with thread count");
+    eprintln!("[probe] churn trajectories identical under 1 vs 8 threads ✓");
+
+    // §steady state: a resident working set, with and without the hook.
+    let ws: Vec<String> = names[..WORKING_SET].to_vec();
+    let failed = tiers.ensure_resident(&mut engine, &mut server, &ws);
+    anyhow::ensure!(failed.is_empty(), "working-set promotion failed: {failed:?}");
+    let steady = steady_workload(&ws, n_steady);
+    eprintln!("[steady] {n_steady} requests over {WORKING_SET} resident tenants x {{all-hot, tiered}}…");
+    let (fin_hot, wall_hot) =
+        run_steady(&mut engine, &mut tiers, &mut server, &mut cache, &steady, false)?;
+    let (fin_tiered, wall_tiered) =
+        run_steady(&mut engine, &mut tiers, &mut server, &mut cache, &steady, true)?;
+    for (a, b) in fin_hot.iter().zip(&fin_tiered) {
+        anyhow::ensure!(
+            a.tokens == b.tokens,
+            "the residency hook changed a steady-state trajectory (seq {:?})",
+            a.id
+        );
+    }
+    let tokens_steady: usize = fin_tiered.iter().map(|f| f.generated().len()).sum();
+    let rate_hot = tokens_steady as f64 / wall_hot.max(1e-12);
+    let rate_tiered = tokens_steady as f64 / wall_tiered.max(1e-12);
+    let resident_ratio = rate_tiered / rate_hot.max(1e-12);
+    let resident_ok = resident_ratio >= 0.95;
+    let token_s = wall_tiered / tokens_steady.max(1) as f64;
+    println!(
+        "\nsteady state: tiered {rate_tiered:.0} tok/s vs all-hot {rate_hot:.0} tok/s -> \
+         {resident_ratio:.3}x (target >= 0.95x: {}); trajectories identical ✓",
+        if resident_ok { "PASS" } else { "FAIL" },
+    );
+
+    // §churn: Zipf traffic over the whole registry under the budget.
+    let churn = zipf_workload(&names, n_churn, 11);
+    let distinct = {
+        let mut t: Vec<&str> = churn.iter().filter_map(|r| r.adapter.as_deref()).collect();
+        t.sort();
+        t.dedup();
+        t.len()
+    };
+    eprintln!("[churn] {n_churn} open-loop Zipf(s={ZIPF_S}) requests over {distinct} distinct tenants…");
+    let (fin_churn, wall_churn, max_resident) =
+        run_churn(&mut engine, &mut tiers, &mut server, &mut cache, &churn)?;
+    anyhow::ensure!(fin_churn.len() == n_churn, "churn lost sequences");
+    let tokens_churn: usize = fin_churn.iter().map(|f| f.generated().len()).sum();
+    let rate_churn = tokens_churn as f64 / wall_churn.max(1e-12);
+    let churn_ratio = rate_churn / rate_tiered.max(1e-12);
+    let attach_p95 = tiers.attach_p95_s();
+    let attach_x_token = attach_p95 / token_s.max(1e-12);
+    let resident_x_budget = max_resident as f64 / budget.max(1) as f64;
+    let c = tiers.counters();
+    anyhow::ensure!(c.cold_attaches > 0 && c.demotions > 0, "churn never churned: {c:?}");
+    anyhow::ensure!(max_resident <= budget, "max resident over budget");
+    println!(
+        "churn: {rate_churn:.0} tok/s ({churn_ratio:.2}x steady), attach-on-miss p95 \
+         {:.3} ms ({attach_x_token:.1}x a decoded token), max resident {max_resident} B \
+         ({resident_x_budget:.3}x budget), {} attaches / {} demotions",
+        attach_p95 * 1e3,
+        c.cold_attaches,
+        c.demotions,
+    );
+
+    let mut j = Json::obj();
+    j.set("bench", Json::Str("adapter_tier".into()));
+    j.set("tenants", jnum(N_TENANTS as f64));
+    j.set("templates", jnum(N_TEMPLATES as f64));
+    j.set("hot_cap", jnum(HOT_CAP as f64));
+    j.set("budget_bytes", jnum(budget as f64));
+    j.set("per_adapter_bytes", jnum(per_hot as f64));
+    j.set("steady_requests", jnum(n_steady as f64));
+    j.set("churn_requests", jnum(n_churn as f64));
+    j.set("steady_tok_per_s_allhot", jnum(rate_hot));
+    j.set("steady_tok_per_s_tiered", jnum(rate_tiered));
+    j.set("resident_tok_s_x_allhot", jnum(resident_ratio));
+    j.set("churn_tok_per_s", jnum(rate_churn));
+    j.set("attach_miss_p95_s", jnum(attach_p95));
+    j.set("attach_p95_x_token", jnum(attach_x_token));
+    j.set("max_resident_bytes", jnum(max_resident as f64));
+    j.set("max_resident_x_budget", jnum(resident_x_budget));
+    j.set("cold_attaches", jnum(c.cold_attaches as f64));
+    j.set("demotions", jnum(c.demotions as f64));
+    j.set("promotions", jnum(c.promotions as f64));
+    j.set("pass", Json::Bool(resident_ok));
+    println!("BENCH {j}");
+
+    common::write_bench_summary(
+        "adapter_tier",
+        &[
+            ("resident_tok_s_x_allhot", resident_ratio),
+            ("churn_tok_s_x_resident", churn_ratio),
+            ("attach_p95_x_token", attach_x_token),
+            ("max_resident_x_budget", resident_x_budget),
+        ],
+    )?;
+    println!("overall: {}", if resident_ok { "PASS" } else { "FAIL" });
+
+    let out = common::results_dir().join("adapter_tier.csv");
+    write_labeled_csv(
+        &out,
+        &["section", "tok_per_s", "ratio", "attach_p95_ms", "resident_x_budget"],
+        &[
+            ("allhot".to_string(), vec![rate_hot, 1.0, 0.0, 0.0]),
+            ("tiered".to_string(), vec![rate_tiered, resident_ratio, 0.0, 0.0]),
+            (
+                "churn".to_string(),
+                vec![rate_churn, churn_ratio, attach_p95 * 1e3, resident_x_budget],
+            ),
+        ],
+    )?;
+    println!("(rows -> {}; methodology in EXPERIMENTS.md §Adapter tiering)", out.display());
+    std::fs::remove_dir_all(&dir).ok();
+    Ok(())
+}

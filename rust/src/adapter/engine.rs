@@ -22,6 +22,7 @@
 
 use super::convert::{pissa_to_lora, LoraDelta};
 use super::init::{AdapterInit, Strategy};
+use super::residency::WarmAdapter;
 use super::spec::AdapterSpec;
 use super::store::Checkpoint;
 use crate::linalg::{matmul, Mat};
@@ -31,6 +32,77 @@ use crate::util::rng::Rng;
 use anyhow::{Context, Result};
 use std::collections::BTreeMap;
 use std::path::Path;
+
+/// Typed registry errors for the adapter lifecycle ops. Each variant
+/// carries the context a caller needs to act on it (the offending name,
+/// the registered set), and maps onto an HTTP status/code pair under the
+/// same convention as `ServeError::http_status`, so the wire layer can
+/// return a structured 4xx instead of an opaque 500.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum AdapterError {
+    /// Adapter names key the registry and the wire protocol; `""` is not one.
+    EmptyName,
+    /// Attach / promote over an existing registration.
+    AlreadyAttached { name: String },
+    /// `Strategy::FullFt` offered as an adapter — the base stays frozen.
+    FullFtNotAnAdapter,
+    /// Detach / demote while the adapter's dense merge cache is live.
+    Merged { name: String },
+    /// Lookup of an unregistered name; `have` is the registered set.
+    Unknown { name: String, have: Vec<String> },
+    /// v1 checkpoint (or foreign file) without an embedded `AdapterSpec`.
+    NoSpec { path: String },
+}
+
+impl std::fmt::Display for AdapterError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AdapterError::EmptyName => write!(f, "adapter name must be non-empty"),
+            AdapterError::AlreadyAttached { name } => {
+                write!(f, "adapter '{name}' is already attached")
+            }
+            AdapterError::FullFtNotAnAdapter => {
+                write!(f, "full-ft is not an adapter: the engine's base stays frozen")
+            }
+            AdapterError::Merged { name } => {
+                write!(f, "adapter '{name}' is merged; unmerge it first")
+            }
+            AdapterError::Unknown { name, have } => {
+                write!(f, "no adapter named '{name}' (have: {have:?})")
+            }
+            AdapterError::NoSpec { path } => {
+                write!(f, "checkpoint '{path}' carries no AdapterSpec (v1 file?)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for AdapterError {}
+
+impl AdapterError {
+    /// HTTP status for the wire layer (`ServeError::http_status` convention).
+    pub fn http_status(&self) -> u16 {
+        match self {
+            AdapterError::Unknown { .. } => 404,
+            AdapterError::AlreadyAttached { .. } | AdapterError::Merged { .. } => 409,
+            AdapterError::EmptyName
+            | AdapterError::FullFtNotAnAdapter
+            | AdapterError::NoSpec { .. } => 422,
+        }
+    }
+
+    /// Stable machine-readable code for the structured error body.
+    pub fn code(&self) -> &'static str {
+        match self {
+            AdapterError::EmptyName => "empty_adapter_name",
+            AdapterError::AlreadyAttached { .. } => "adapter_already_attached",
+            AdapterError::FullFtNotAnAdapter => "full_ft_not_adapter",
+            AdapterError::Merged { .. } => "adapter_merged",
+            AdapterError::Unknown { .. } => "unknown_adapter",
+            AdapterError::NoSpec { .. } => "checkpoint_missing_spec",
+        }
+    }
+}
 
 /// Relative tolerance for the `base + A·B == W` exactness invariant
 /// (full-precision strategies; quantized bases are bounded by the QLoRA
@@ -90,9 +162,15 @@ impl AdapterEngine {
     }
 
     pub fn get(&self, name: &str) -> Result<&NamedAdapter> {
-        self.adapters
-            .get(name)
-            .ok_or_else(|| anyhow::anyhow!("no adapter named '{name}' (have: {:?})", self.names()))
+        self.adapters.get(name).ok_or_else(|| self.unknown(name).into())
+    }
+
+    /// The typed not-found error, with the registered set as context.
+    fn unknown(&self, name: &str) -> AdapterError {
+        AdapterError::Unknown {
+            name: name.to_string(),
+            have: self.adapters.keys().cloned().collect(),
+        }
     }
 
     /// Original dense weight of `module` at `layer` in the frozen base.
@@ -163,15 +241,12 @@ impl AdapterEngine {
     /// adapter becomes active. Every layer's init is validated against
     /// the exactness invariant before the adapter is accepted.
     pub fn attach(&mut self, name: &str, spec: AdapterSpec, rng: &mut Rng) -> Result<()> {
-        anyhow::ensure!(!name.is_empty(), "adapter name must be non-empty");
+        anyhow::ensure!(!name.is_empty(), AdapterError::EmptyName);
         anyhow::ensure!(
             !self.adapters.contains_key(name),
-            "adapter '{name}' is already attached"
+            AdapterError::AlreadyAttached { name: name.to_string() }
         );
-        anyhow::ensure!(
-            spec.strategy != Strategy::FullFt,
-            "full-ft is not an adapter: the engine's base stays frozen"
-        );
+        anyhow::ensure!(spec.strategy != Strategy::FullFt, AdapterError::FullFtNotAnAdapter);
         spec.validate()?;
         let l = self.base.n_layers();
         let mut frozen = ParamStore::new();
@@ -210,12 +285,10 @@ impl AdapterEngine {
     /// Remove an adapter from the registry (must not be merged).
     pub fn detach(&mut self, name: &str) -> Result<NamedAdapter> {
         if let Some((m, _)) = &self.merged {
-            anyhow::ensure!(m != name, "adapter '{name}' is merged; unmerge it first");
+            anyhow::ensure!(m != name, AdapterError::Merged { name: name.to_string() });
         }
-        let ad = self
-            .adapters
-            .remove(name)
-            .ok_or_else(|| anyhow::anyhow!("no adapter named '{name}'"))?;
+        anyhow::ensure!(self.adapters.contains_key(name), self.unknown(name));
+        let ad = self.adapters.remove(name).expect("checked above");
         if self.active.as_deref() == Some(name) {
             self.active = None;
         }
@@ -225,11 +298,7 @@ impl AdapterEngine {
     /// Hot-swap the active adapter. O(1): only the registry pointer moves;
     /// the frozen base is untouched. Returns the previously active name.
     pub fn swap(&mut self, name: &str) -> Result<Option<String>> {
-        anyhow::ensure!(
-            self.adapters.contains_key(name),
-            "cannot swap to unknown adapter '{name}' (have: {:?})",
-            self.names()
-        );
+        anyhow::ensure!(self.adapters.contains_key(name), self.unknown(name));
         Ok(self.active.replace(name.to_string()))
     }
 
@@ -469,13 +538,13 @@ impl AdapterEngine {
     pub fn attach_saved(&mut self, name: &str, path: &Path) -> Result<()> {
         anyhow::ensure!(
             !self.adapters.contains_key(name),
-            "adapter '{name}' is already attached"
+            AdapterError::AlreadyAttached { name: name.to_string() }
         );
         let ckp = Checkpoint::load(path)?;
         let spec = ckp
             .spec
             .clone()
-            .ok_or_else(|| anyhow::anyhow!("checkpoint {path:?} carries no AdapterSpec (v1 file?)"))?;
+            .ok_or(AdapterError::NoSpec { path: path.display().to_string() })?;
         spec.validate()?;
         let mut frozen = ParamStore::new();
         let mut factors = ParamStore::new();
@@ -526,6 +595,74 @@ impl AdapterEngine {
             self.active = Some(name.to_string());
         }
         Ok(())
+    }
+
+    /// Cold-tier attach-on-miss: register an adapter from its on-disk
+    /// `PISSACKP` on first request. Identical to
+    /// [`AdapterEngine::attach_saved`] — the full shape + exactness
+    /// validation runs against THIS base, so a cold reload of a
+    /// full-precision adapter restores the exact tensors that were
+    /// spilled (the eviction-invariance contract) — spelled as its own
+    /// lifecycle op because the residency layer treats it as one.
+    pub fn attach_cold(&mut self, name: &str, path: &Path) -> Result<()> {
+        self.attach_saved(name, path)
+    }
+
+    /// Demote an adapter out of the hot tier: write a lossless f32
+    /// spill checkpoint (so a later promotion — or a cold reload — can
+    /// restore the exact bytes), detach it from the registry, and return
+    /// the blockwise-NF4 warm copy (~0.14× the f32 bytes). The spill is
+    /// written BEFORE the registry shrinks, so a failed demote leaves
+    /// the engine unchanged.
+    pub fn demote(&mut self, name: &str, spill: &Path) -> Result<WarmAdapter> {
+        if let Some((m, _)) = &self.merged {
+            anyhow::ensure!(m != name, AdapterError::Merged { name: name.to_string() });
+        }
+        anyhow::ensure!(self.adapters.contains_key(name), self.unknown(name));
+        self.save(name, spill)?;
+        let ad = self.detach(name)?;
+        WarmAdapter::from_named(name, &ad)
+    }
+
+    /// Promote a warm NF4 copy back into the registry. The restore is a
+    /// deterministic dequantization, so two promotions of the same warm
+    /// copy are bit-identical — but it is NOT the attach-time exactness
+    /// invariant: the NF4 round trip moved the tensors off the exact
+    /// decomposition by design (bounded by
+    /// [`super::residency::WARM_NF4_REL_TOL`], asserted when the warm
+    /// copy was made). Shapes are still validated against THIS base.
+    pub fn promote(&mut self, warm: &WarmAdapter) -> Result<()> {
+        let name = warm.name();
+        anyhow::ensure!(
+            !self.adapters.contains_key(name),
+            AdapterError::AlreadyAttached { name: name.to_string() }
+        );
+        let ad = warm.to_named();
+        for module in LINEARS {
+            if !ad.spec.targets_module(module) {
+                continue;
+            }
+            let expect = &self.base.linears[&format!("base_{module}")].shape;
+            let got = &ad.frozen[&format!("base_{module}")].shape;
+            anyhow::ensure!(
+                got == expect,
+                "warm adapter '{name}' base_{module} shape {got:?} vs base model {expect:?}"
+            );
+        }
+        self.adapters.insert(name.to_string(), ad);
+        if self.active.is_none() {
+            self.active = Some(name.to_string());
+        }
+        Ok(())
+    }
+
+    /// Resident f32 bytes of one adapter's engine-side tensors (frozen
+    /// residual + current factors + init snapshot) — the hot tier's
+    /// engine share of the `adapter_budget_bytes` accounting.
+    pub fn adapter_bytes(&self, name: &str) -> Result<usize> {
+        let ad = self.get(name)?;
+        let store = |s: &ParamStore| -> usize { s.values().map(|t| t.data.len() * 4).sum() };
+        Ok(store(&ad.frozen) + store(&ad.factors) + store(&ad.init_factors))
     }
 }
 

@@ -2,17 +2,20 @@
 //! QLoRA, QPiSSA Algorithm 1, LoftQ), the declarative [`AdapterSpec`]
 //! config surface, the multi-adapter [`AdapterEngine`] (hot-swap,
 //! merge/unmerge, Appendix-C export over one frozen base), the
-//! PiSSA→LoRA conversion of Appendix C, and adapter/optimizer
-//! checkpointing.
+//! PiSSA→LoRA conversion of Appendix C, adapter/optimizer
+//! checkpointing, and the hot/warm/cold residency tiering that serves
+//! more registered tenants than fit in RAM.
 
 pub mod convert;
 pub mod engine;
 pub mod init;
+pub mod residency;
 pub mod spec;
 pub mod store;
 
 pub use convert::{apply_delta, pissa_to_lora, LoraDelta};
-pub use engine::{AdapterEngine, NamedAdapter};
+pub use engine::{AdapterEngine, AdapterError, NamedAdapter};
+pub use residency::{DemotePolicy, Tier, TierCounters, TierManager, WarmAdapter, WARM_NF4_REL_TOL};
 pub use init::{
     lora, loftq, loftq_with, pissa, pissa_window, qlora, qpissa, qpissa_with, AdapterInit,
     Strategy, Window,

@@ -1,0 +1,692 @@
+//! Adapter residency tiering — the hot/warm/cold cache hierarchy that
+//! lets one engine serve far more registered tenants than fit in RAM.
+//!
+//! PiSSA's Appendix-C export makes every tenant a tiny `(m+n)·r` delta
+//! over ONE shared frozen base, so the per-tenant state is cheap — but
+//! the engine kept every attached adapter resident in f32 forever and
+//! the server snapshotted its adapter set immutably at construction.
+//! [`TierManager`] closes that gap with a three-tier cache:
+//!
+//! * **hot** — f32 factors in the engine plus the prepared `serve_delta`
+//!   in every `LinearServer`; served directly.
+//! * **warm** — an in-RAM blockwise-NF4 copy of the adapter's tensors
+//!   (~0.14× the f32 bytes), promoted to hot by deterministic
+//!   dequantization. Lossy once, then stable: NF4 quantization is a
+//!   fixed point, so every warm round trip after the first is
+//!   bit-identical.
+//! * **cold** — an on-disk `PISSACKP` checkpoint, attached lazily on
+//!   first request (`attach_cold`). Cold reload is LOSSLESS: demotion
+//!   spills the exact f32 tensors before anything is dropped, so a
+//!   full-precision adapter's served trajectory is bitwise invariant to
+//!   its eviction history.
+//!
+//! Eviction is LRU over a working-set clock advanced once per
+//! [`TierManager::ensure_resident`] call (one call per scheduler step
+//! boundary — promotion work NEVER runs inside the batched decode hot
+//! loop), cross-checked against the per-adapter hit counters
+//! `ServeStats` already collects via [`TierManager::sync_hits`]. The
+//! resident-byte budget (`ServeConfig::adapter_budget_bytes`) counts hot
+//! f32 bytes (engine tensors + prepared server deltas) plus warm NF4
+//! bytes; cold costs only disk.
+
+use super::engine::{AdapterEngine, NamedAdapter};
+use super::spec::AdapterSpec;
+use crate::model::{ParamStore, Tensor};
+use crate::quant::{dequantize, Nf4Stack};
+use crate::serve::ModelServer;
+use anyhow::Result;
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+/// Pinned bound on the warm copy's NF4 round-trip error, per tensor:
+/// `‖T − deq(nf4(T))‖_F / ‖T‖_F` must not exceed this when a warm copy
+/// is made (the same blockwise round trip the fused-quant serving path
+/// bounds; asserted at demote time, when the original is still in hand).
+pub const WARM_NF4_REL_TOL: f64 = 0.25;
+
+/// Window of attach-on-miss latency samples kept for the p95 estimate.
+const ATTACH_WINDOW: usize = 4096;
+
+/// Residency tier of one registered adapter.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Tier {
+    Hot,
+    Warm,
+    Cold,
+}
+
+impl Tier {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Tier::Hot => "hot",
+            Tier::Warm => "warm",
+            Tier::Cold => "cold",
+        }
+    }
+}
+
+/// Where an adapter goes when it is evicted from the hot tier.
+///
+/// `Exact` (the default) drops straight to cold: the only copies kept
+/// are lossless, so every reload is bit-identical to the pre-eviction
+/// state. `Compressed` keeps the NF4 warm copy resident as a middle
+/// tier: promotion skips the disk read and the attach-time revalidation,
+/// at the (bounded, then stable) NF4 round-trip error.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum DemotePolicy {
+    #[default]
+    Exact,
+    Compressed,
+}
+
+/// Blockwise-NF4 copy of one adapter's tensors — the warm tier's
+/// resident representation (~0.14× the f32 bytes: 4-bit codes plus one
+/// f32 scale per 64-value block).
+#[derive(Debug, Clone)]
+pub struct WarmAdapter {
+    name: String,
+    spec: AdapterSpec,
+    /// One NF4 stack per stored tensor, keyed `frozen.*` / `factors.*` /
+    /// `init.*` like the checkpoint layout.
+    stacks: BTreeMap<String, Nf4Stack>,
+}
+
+impl WarmAdapter {
+    /// Quantize an attached adapter's tensors into a warm copy,
+    /// asserting the pinned round-trip bound per tensor while the
+    /// original is still available.
+    pub(crate) fn from_named(name: &str, ad: &NamedAdapter) -> Result<WarmAdapter> {
+        let mut stacks = BTreeMap::new();
+        for (prefix, store) in
+            [("frozen", &ad.frozen), ("factors", &ad.factors), ("init", &ad.init_factors)]
+        {
+            for (k, t) in store {
+                let layers: Vec<_> = (0..t.shape[0]).map(|li| t.layer(li)).collect();
+                let stack = Nf4Stack::quantize_layers(&layers);
+                for (li, orig) in layers.iter().enumerate() {
+                    let rt = dequantize(&stack.layer(li));
+                    let rel = orig.sub(&rt).fro() / orig.fro().max(1e-30);
+                    anyhow::ensure!(
+                        rel <= WARM_NF4_REL_TOL,
+                        "warm copy of '{name}' {prefix}.{k}[{li}]: NF4 round-trip rel \
+                         err {rel:.3e} exceeds the pinned bound {WARM_NF4_REL_TOL}"
+                    );
+                }
+                stacks.insert(format!("{prefix}.{k}"), stack);
+            }
+        }
+        Ok(WarmAdapter { name: name.to_string(), spec: ad.spec.clone(), stacks })
+    }
+
+    /// Deterministic dequantization back into an attachable adapter.
+    /// Same warm copy in, bit-identical tensors out, every time.
+    pub(crate) fn to_named(&self) -> NamedAdapter {
+        let mut frozen = ParamStore::new();
+        let mut factors = ParamStore::new();
+        let mut init_factors = ParamStore::new();
+        for (key, stack) in &self.stacks {
+            let mats: Vec<_> =
+                (0..stack.n_layers()).map(|li| dequantize(&stack.layer(li))).collect();
+            let t = Tensor::stack(&mats);
+            let (prefix, k) = key.split_once('.').expect("warm keys are prefixed");
+            match prefix {
+                "frozen" => frozen.insert(k.to_string(), t),
+                "factors" => factors.insert(k.to_string(), t),
+                "init" => init_factors.insert(k.to_string(), t),
+                other => unreachable!("unknown warm store prefix {other}"),
+            };
+        }
+        NamedAdapter { spec: self.spec.clone(), frozen, factors, init_factors }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Resident bytes of the warm copy (packed codes + f32 scales).
+    pub fn bytes(&self) -> usize {
+        self.stacks.values().map(|s| s.storage_bytes()).sum()
+    }
+}
+
+/// Promotion/demotion traffic counters, surfaced through `/metrics`.
+#[derive(Debug, Clone, Default)]
+pub struct TierCounters {
+    /// Warm→hot and cold→hot promotions.
+    pub promotions: usize,
+    /// Hot→warm/cold demotions (evictions).
+    pub demotions: usize,
+    /// Promotions that went through the on-disk attach path.
+    pub cold_attaches: usize,
+    /// `ensure_resident` calls that could not fit the budget because the
+    /// current working set alone exceeds it (nothing evictable).
+    pub over_budget: usize,
+}
+
+#[derive(Debug)]
+struct Entry {
+    tier: Tier,
+    policy: DemotePolicy,
+    /// f32 bytes while hot: engine tensors + prepared server deltas.
+    hot_bytes: usize,
+    /// NF4 copy while warm.
+    warm: Option<WarmAdapter>,
+    /// Lossless checkpoint: the registered cold file, replaced by the
+    /// spill written at first demotion.
+    ckpt: Option<PathBuf>,
+    /// Working-set clock value of the last touch (LRU key).
+    last_used: u64,
+    /// Last synced `ServeStats` hit count for this adapter.
+    hits: usize,
+}
+
+/// LRU residency manager over one engine/server pair.
+///
+/// The manager owns the POLICY only: the engine owns the f32 tensors,
+/// the server owns the prepared deltas, and `ensure_resident` moves
+/// adapters between tiers through their public lifecycle ops at step
+/// boundaries. Engine and server stay view-consistent: an adapter is
+/// either in both (hot) or in neither (warm/cold).
+#[derive(Debug)]
+pub struct TierManager {
+    budget_bytes: usize,
+    spill_dir: PathBuf,
+    clock: u64,
+    entries: BTreeMap<String, Entry>,
+    counters: TierCounters,
+    /// Rolling window of promotion latencies (attach-on-miss cost).
+    attach_s: Vec<f64>,
+}
+
+impl TierManager {
+    /// A manager enforcing `budget_bytes` of resident adapter state,
+    /// spilling demoted adapters' lossless checkpoints under `spill_dir`.
+    pub fn new(budget_bytes: usize, spill_dir: impl Into<PathBuf>) -> TierManager {
+        TierManager {
+            budget_bytes,
+            spill_dir: spill_dir.into(),
+            clock: 0,
+            entries: BTreeMap::new(),
+            counters: TierCounters::default(),
+            attach_s: Vec::new(),
+        }
+    }
+
+    /// Track an adapter that is already attached in the engine AND
+    /// served by `server` (the boot-time resident set).
+    pub fn register_hot(
+        &mut self,
+        name: &str,
+        engine: &AdapterEngine,
+        server: &ModelServer,
+    ) -> Result<()> {
+        anyhow::ensure!(
+            !self.entries.contains_key(name),
+            "adapter '{name}' is already tier-registered"
+        );
+        anyhow::ensure!(server.serves_adapter(name), "server does not serve '{name}'");
+        let hot_bytes = engine.adapter_bytes(name)? + server.adapter_delta_bytes(name);
+        self.entries.insert(
+            name.to_string(),
+            Entry {
+                tier: Tier::Hot,
+                policy: DemotePolicy::default(),
+                hot_bytes,
+                warm: None,
+                ckpt: None,
+                last_used: self.clock,
+                hits: 0,
+            },
+        );
+        Ok(())
+    }
+
+    /// Register a cold tenant: a name bound to an on-disk `PISSACKP`,
+    /// attached lazily on first request. Costs one map entry now —
+    /// nothing is loaded or validated until the first miss (validation
+    /// runs in full at attach time). Many tenant names may share one
+    /// checkpoint file.
+    pub fn register_cold(&mut self, name: &str, path: impl Into<PathBuf>) -> Result<()> {
+        anyhow::ensure!(
+            !self.entries.contains_key(name),
+            "adapter '{name}' is already tier-registered"
+        );
+        self.entries.insert(
+            name.to_string(),
+            Entry {
+                tier: Tier::Cold,
+                policy: DemotePolicy::default(),
+                hot_bytes: 0,
+                warm: None,
+                ckpt: Some(path.into()),
+                last_used: self.clock,
+                hits: 0,
+            },
+        );
+        Ok(())
+    }
+
+    /// Choose where `name` goes when evicted (default [`DemotePolicy::Exact`]).
+    pub fn set_policy(&mut self, name: &str, policy: DemotePolicy) -> Result<()> {
+        let e = self
+            .entries
+            .get_mut(name)
+            .ok_or_else(|| anyhow::anyhow!("adapter '{name}' is not tier-registered"))?;
+        e.policy = policy;
+        Ok(())
+    }
+
+    /// All tier-registered names (sorted) — the full routable tenant
+    /// set, hot or not.
+    pub fn names(&self) -> Vec<&str> {
+        self.entries.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn tier(&self, name: &str) -> Option<Tier> {
+        self.entries.get(name).map(|e| e.tier)
+    }
+
+    pub fn budget_bytes(&self) -> usize {
+        self.budget_bytes
+    }
+
+    pub fn counters(&self) -> &TierCounters {
+        &self.counters
+    }
+
+    /// RAM currently held by registered adapters: hot f32 + warm NF4.
+    pub fn resident_bytes(&self) -> usize {
+        self.entries
+            .values()
+            .map(|e| match e.tier {
+                Tier::Hot => e.hot_bytes,
+                Tier::Warm => e.warm.as_ref().map_or(0, |w| w.bytes()),
+                Tier::Cold => 0,
+            })
+            .sum()
+    }
+
+    /// Per-tier `(tier, adapter count, resident bytes)` table — the
+    /// `ResidentBreakdown` rows surfaced through `/metrics`.
+    pub fn tier_table(&self) -> Vec<(&'static str, usize, usize)> {
+        let mut rows = [(Tier::Hot, 0, 0), (Tier::Warm, 0, 0), (Tier::Cold, 0, 0)];
+        for e in self.entries.values() {
+            let row = &mut rows[match e.tier {
+                Tier::Hot => 0,
+                Tier::Warm => 1,
+                Tier::Cold => 2,
+            }];
+            row.1 += 1;
+            row.2 += match e.tier {
+                Tier::Hot => e.hot_bytes,
+                Tier::Warm => e.warm.as_ref().map_or(0, |w| w.bytes()),
+                Tier::Cold => 0,
+            };
+        }
+        rows.iter().map(|(t, c, b)| (t.name(), *c, *b)).collect()
+    }
+
+    /// Fold the serving layer's per-adapter hit counters into the LRU
+    /// clock: any adapter whose count grew since the last sync was used
+    /// by the batch that just ran, so it is touched at the current clock.
+    pub fn sync_hits(&mut self, hits: &BTreeMap<String, usize>) {
+        for (name, &n) in hits {
+            if let Some(e) = self.entries.get_mut(name) {
+                if n > e.hits {
+                    e.hits = n;
+                    e.last_used = self.clock;
+                }
+            }
+        }
+    }
+
+    /// Nearest-rank p95 of the promotion (attach-on-miss) latencies.
+    pub fn attach_p95_s(&self) -> f64 {
+        if self.attach_s.is_empty() {
+            return 0.0;
+        }
+        let mut v = self.attach_s.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).expect("latencies are finite"));
+        v[((v.len() as f64 * 0.95).ceil() as usize).clamp(1, v.len()) - 1]
+    }
+
+    /// The step-boundary hook: promote every `wanted` adapter to hot
+    /// (attach-on-miss), then evict LRU non-wanted adapters until the
+    /// resident bytes fit the budget. Returns per-adapter promotion
+    /// failures (the batch's requests for those names will then draw the
+    /// typed `UnknownAdapter` rejection from the serving layer);
+    /// unregistered names are ignored entirely.
+    ///
+    /// Engine and server stay consistent on every path: a promotion
+    /// that fails server-side rolls the engine attach back, and a
+    /// demotion that fails engine-side restores the server group.
+    pub fn ensure_resident(
+        &mut self,
+        engine: &mut AdapterEngine,
+        server: &mut ModelServer,
+        wanted: &[String],
+    ) -> Vec<(String, anyhow::Error)> {
+        self.clock += 1;
+        let clock = self.clock;
+        let mut failures = Vec::new();
+        for name in wanted {
+            let Some(e) = self.entries.get_mut(name) else { continue };
+            e.last_used = clock;
+            if e.tier == Tier::Hot {
+                continue;
+            }
+            let t0 = Instant::now();
+            match Self::promote_entry(name, e, engine, server, &mut self.counters) {
+                Ok(()) => {
+                    if self.attach_s.len() >= ATTACH_WINDOW {
+                        self.attach_s.remove(0);
+                    }
+                    self.attach_s.push(t0.elapsed().as_secs_f64());
+                }
+                Err(err) => failures.push((name.clone(), err)),
+            }
+        }
+        let wanted_set: BTreeSet<&str> = wanted.iter().map(|s| s.as_str()).collect();
+        while self.resident_bytes() > self.budget_bytes {
+            let Some(victim) = self.lru_victim(&wanted_set) else {
+                self.counters.over_budget += 1;
+                break;
+            };
+            if let Err(err) = self.demote(engine, server, &victim) {
+                failures.push((victim, err));
+                break;
+            }
+        }
+        failures
+    }
+
+    /// Least-recently-used evictable adapter: hot entries first (the
+    /// expensive tier), then warm; `wanted` names — the step's working
+    /// set — are never victims. Ties break on name (BTreeMap order), so
+    /// eviction is deterministic.
+    fn lru_victim(&self, wanted: &BTreeSet<&str>) -> Option<String> {
+        for tier in [Tier::Hot, Tier::Warm] {
+            let victim = self
+                .entries
+                .iter()
+                .filter(|(n, e)| e.tier == tier && !wanted.contains(n.as_str()))
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(n, _)| n.clone());
+            if victim.is_some() {
+                return victim;
+            }
+        }
+        None
+    }
+
+    fn promote_entry(
+        name: &str,
+        e: &mut Entry,
+        engine: &mut AdapterEngine,
+        server: &mut ModelServer,
+        counters: &mut TierCounters,
+    ) -> Result<()> {
+        match e.tier {
+            Tier::Hot => return Ok(()),
+            Tier::Warm => {
+                let warm = e.warm.as_ref().expect("warm entries carry their NF4 copy");
+                engine.promote(warm)?;
+            }
+            Tier::Cold => {
+                let path = e
+                    .ckpt
+                    .clone()
+                    .ok_or_else(|| anyhow::anyhow!("cold entry '{name}' has no checkpoint"))?;
+                engine.attach_cold(name, &path)?;
+                counters.cold_attaches += 1;
+            }
+        }
+        if let Err(err) = server.add_adapter(engine, name) {
+            engine.detach(name).ok(); // roll back: keep the views consistent
+            return Err(err);
+        }
+        e.warm = None; // re-created at the next demotion (NF4 is idempotent)
+        e.tier = Tier::Hot;
+        e.hot_bytes = engine.adapter_bytes(name).unwrap_or(0) + server.adapter_delta_bytes(name);
+        counters.promotions += 1;
+        Ok(())
+    }
+
+    /// Demote one hot adapter per its policy (public so tests and the
+    /// churn bench can force evictions mid-trajectory). Warm entries can
+    /// also be demoted — that just drops the RAM copy (the lossless
+    /// spill stays on disk).
+    pub fn demote(
+        &mut self,
+        engine: &mut AdapterEngine,
+        server: &mut ModelServer,
+        name: &str,
+    ) -> Result<()> {
+        let spill = self.spill_dir.join(format!("{name}.ckpt"));
+        let e = self
+            .entries
+            .get_mut(name)
+            .ok_or_else(|| anyhow::anyhow!("adapter '{name}' is not tier-registered"))?;
+        match e.tier {
+            Tier::Cold => return Ok(()),
+            Tier::Warm => {
+                e.warm = None;
+                e.tier = Tier::Cold;
+                return Ok(());
+            }
+            Tier::Hot => {}
+        }
+        server.remove_adapter(name)?;
+        let warm = match engine.demote(name, &spill) {
+            Ok(w) => w,
+            Err(err) => {
+                server.add_adapter(engine, name).ok(); // restore the serving view
+                return Err(err);
+            }
+        };
+        e.ckpt = Some(spill);
+        e.hot_bytes = 0;
+        match e.policy {
+            DemotePolicy::Compressed => {
+                e.warm = Some(warm);
+                e.tier = Tier::Warm;
+            }
+            DemotePolicy::Exact => e.tier = Tier::Cold,
+        }
+        self.counters.demotions += 1;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adapter::AdapterSpec;
+    use crate::model::{BaseModel, LINEARS};
+    use crate::runtime::ConfigInfo;
+    use crate::serve::{drift_factors, ServeConfig};
+    use crate::util::rng::Rng;
+
+    fn tiny_cfg() -> ConfigInfo {
+        ConfigInfo {
+            name: "residency-test".into(),
+            kind: "decoder".into(),
+            vocab: 48,
+            d_model: 16,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 24,
+            seq_len: 16,
+            batch: 4,
+            eval_batch: 2,
+            n_classes: 0,
+            ranks: vec![2],
+        }
+    }
+
+    fn setup(seed: u64, names: &[&str]) -> (AdapterEngine, ModelServer, Rng) {
+        let mut rng = Rng::new(seed);
+        let base = BaseModel::random(&tiny_cfg(), &mut rng);
+        let mut eng = AdapterEngine::new(base);
+        for name in names {
+            eng.attach(name, AdapterSpec::pissa(2), &mut rng).unwrap();
+            for module in LINEARS {
+                drift_factors(&mut eng, name, module, 0.05, &mut rng).unwrap();
+            }
+        }
+        let server = ModelServer::new(&eng, ServeConfig::full_model()).unwrap();
+        (eng, server, rng)
+    }
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("pissa_residency_{tag}"));
+        std::fs::remove_dir_all(&dir).ok();
+        dir
+    }
+
+    #[test]
+    fn demote_spills_losslessly_and_cold_promote_restores_bitwise() {
+        let (mut eng, mut srv, _) = setup(31, &["a", "b"]);
+        let dir = tmp_dir("bitwise");
+        let mut tiers = TierManager::new(usize::MAX, &dir);
+        tiers.register_hot("a", &eng, &srv).unwrap();
+        tiers.register_hot("b", &eng, &srv).unwrap();
+
+        let before = eng.get("a").unwrap().clone();
+        tiers.demote(&mut eng, &mut srv, "a").unwrap();
+        assert_eq!(tiers.tier("a"), Some(Tier::Cold), "Exact policy drops to cold");
+        assert!(eng.get("a").is_err() && !srv.serves_adapter("a"));
+
+        let fails = tiers.ensure_resident(&mut eng, &mut srv, &["a".to_string()]);
+        assert!(fails.is_empty(), "{fails:?}");
+        assert_eq!(tiers.tier("a"), Some(Tier::Hot));
+        assert!(srv.serves_adapter("a"));
+        let after = eng.get("a").unwrap();
+        for (k, t) in &before.factors {
+            assert_eq!(t.data, after.factors[k].data, "factors.{k} changed across eviction");
+        }
+        for (k, t) in &before.frozen {
+            assert_eq!(t.data, after.frozen[k].data, "frozen.{k} changed across eviction");
+        }
+        assert_eq!(tiers.counters().promotions, 1);
+        assert_eq!(tiers.counters().cold_attaches, 1);
+        assert!(tiers.attach_p95_s() > 0.0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn warm_roundtrip_is_bounded_then_stable() {
+        let (mut eng, mut srv, _) = setup(32, &["w"]);
+        let dir = tmp_dir("warm");
+        let mut tiers = TierManager::new(usize::MAX, &dir);
+        tiers.register_hot("w", &eng, &srv).unwrap();
+        tiers.set_policy("w", DemotePolicy::Compressed).unwrap();
+
+        let orig = eng.get("w").unwrap().clone();
+        tiers.demote(&mut eng, &mut srv, "w").unwrap();
+        assert_eq!(tiers.tier("w"), Some(Tier::Warm));
+        // Warm NF4 bytes are a small fraction of the f32 footprint.
+        let f32_bytes: usize = orig.frozen.values().map(|t| t.data.len() * 4).sum::<usize>()
+            + orig.factors.values().map(|t| t.data.len() * 4).sum::<usize>()
+            + orig.init_factors.values().map(|t| t.data.len() * 4).sum::<usize>();
+        assert!(
+            tiers.resident_bytes() * 100 <= f32_bytes * 20,
+            "warm bytes {} vs f32 {f32_bytes}",
+            tiers.resident_bytes()
+        );
+
+        let fails = tiers.ensure_resident(&mut eng, &mut srv, &["w".to_string()]);
+        assert!(fails.is_empty(), "{fails:?}");
+        let first = eng.get("w").unwrap().clone();
+        // Bounded relative to the original (the pinned NF4 bound)…
+        for (k, t) in &orig.factors {
+            let rt = &first.factors[k];
+            let num: f64 = t
+                .data
+                .iter()
+                .zip(&rt.data)
+                .map(|(a, b)| (f64::from(*a) - f64::from(*b)).powi(2))
+                .sum::<f64>()
+                .sqrt();
+            let den: f64 =
+                t.data.iter().map(|a| f64::from(*a).powi(2)).sum::<f64>().sqrt().max(1e-30);
+            assert!(num / den <= WARM_NF4_REL_TOL, "factors.{k} rel err {}", num / den);
+        }
+        // …and a second warm round trip is bitwise stable (NF4 fixed point).
+        tiers.demote(&mut eng, &mut srv, "w").unwrap();
+        let fails = tiers.ensure_resident(&mut eng, &mut srv, &["w".to_string()]);
+        assert!(fails.is_empty(), "{fails:?}");
+        let second = eng.get("w").unwrap();
+        for (k, t) in &first.factors {
+            assert_eq!(t.data, second.factors[k].data, "warm round trip moved factors.{k}");
+        }
+        for (k, t) in &first.frozen {
+            assert_eq!(t.data, second.frozen[k].data, "warm round trip moved frozen.{k}");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn budget_evicts_lru_and_protects_the_working_set() {
+        let (mut eng, mut srv, _) = setup(33, &["a", "b", "c"]);
+        let dir = tmp_dir("budget");
+        let per = eng.adapter_bytes("a").unwrap() + srv.adapter_delta_bytes("a");
+        // Room for exactly two hot adapters.
+        let mut tiers = TierManager::new(2 * per, &dir);
+        for n in ["a", "b", "c"] {
+            tiers.register_hot(n, &eng, &srv).unwrap();
+        }
+        // "a" is oldest; asking for "c" must evict it (not the wanted set).
+        let f = tiers.ensure_resident(&mut eng, &mut srv, &["b".to_string()]);
+        assert!(f.is_empty());
+        let f = tiers.ensure_resident(&mut eng, &mut srv, &["c".to_string()]);
+        assert!(f.is_empty());
+        assert_eq!(tiers.tier("a"), Some(Tier::Cold), "LRU victim");
+        assert_eq!(tiers.tier("b"), Some(Tier::Hot));
+        assert_eq!(tiers.tier("c"), Some(Tier::Hot));
+        assert!(tiers.resident_bytes() <= tiers.budget_bytes());
+        // Miss on "a" brings it back and evicts the now-oldest "b".
+        let f = tiers.ensure_resident(&mut eng, &mut srv, &["a".to_string()]);
+        assert!(f.is_empty());
+        assert_eq!(tiers.tier("a"), Some(Tier::Hot));
+        assert_eq!(tiers.tier("b"), Some(Tier::Cold));
+        assert!(tiers.resident_bytes() <= tiers.budget_bytes());
+        let table = tiers.tier_table();
+        assert_eq!(table[0], ("hot", 2, tiers.resident_bytes()));
+        assert_eq!(table[2].1, 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn sync_hits_touches_only_grown_counters() {
+        let (mut eng, mut srv, _) = setup(34, &["a", "b"]);
+        let dir = tmp_dir("hits");
+        let per = eng.adapter_bytes("a").unwrap() + srv.adapter_delta_bytes("a");
+        let mut tiers = TierManager::new(per, &dir);
+        tiers.register_hot("a", &eng, &srv).unwrap();
+        tiers.register_hot("b", &eng, &srv).unwrap();
+        // Serving layer reports traffic on "a" only → "b" is the LRU
+        // victim when the budget (one adapter) is enforced.
+        tiers.ensure_resident(&mut eng, &mut srv, &[]); // advance the clock
+        let mut hits = BTreeMap::new();
+        hits.insert("a".to_string(), 3usize);
+        tiers.sync_hits(&hits);
+        let f = tiers.ensure_resident(&mut eng, &mut srv, &[]);
+        assert!(f.is_empty());
+        assert_eq!(tiers.tier("a"), Some(Tier::Hot));
+        assert_eq!(tiers.tier("b"), Some(Tier::Cold));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn unregistered_wanted_names_are_ignored() {
+        let (mut eng, mut srv, _) = setup(35, &["a"]);
+        let dir = tmp_dir("ignore");
+        let mut tiers = TierManager::new(usize::MAX, &dir);
+        tiers.register_hot("a", &eng, &srv).unwrap();
+        let f = tiers.ensure_resident(&mut eng, &mut srv, &["ghost".to_string()]);
+        assert!(f.is_empty(), "unregistered names are not promotion failures");
+        assert_eq!(tiers.tier("ghost"), None);
+    }
+}

@@ -92,7 +92,14 @@ COMMANDS
                                NDJSON token streaming, GET /healthz,
                                GET /metrics, graceful drain on SIGTERM;
                                [--workers 16] [--backlog 64] [--rate 64]
-                               [--burst 128] [--max-inflight 64])
+                               [--burst 128] [--max-inflight 64];
+                               adapter residency tiering:
+                               [--adapter-budget-mb N] caps resident
+                               adapter bytes (hot f32 + warm NF4), LRU
+                               evicting to disk past it, and
+                               [--cold-adapters N] registers N extra
+                               on-disk tenants attached lazily on their
+                               first request)
                [--module q] [--layer 0] [--d-model 128]
                [--base-frac 0.125] [--drift 0.05] [--iters 2]
                [--out results/serve_stats.json]
@@ -753,7 +760,52 @@ fn cmd_serve_http(args: &Args) -> Result<()> {
         handle_signals: true,
         ..NetConfig::default()
     };
-    let server = NetServer::start(&engine, serve_cfg, net_cfg)?;
+
+    // Residency tiering: a resident-byte budget and/or lazily-attached
+    // cold tenants put the front-end behind a TierManager.
+    let budget_mb = args.usize_or("adapter-budget-mb", 0)?;
+    let n_cold = args.usize_or("cold-adapters", 0)?;
+    let server = if budget_mb > 0 || n_cold > 0 {
+        use pissa::adapter::TierManager;
+        let budget = if budget_mb > 0 {
+            budget_mb << 20
+        } else {
+            pissa::serve::DEFAULT_ADAPTER_BUDGET_BYTES
+        };
+        let spill_dir =
+            std::env::temp_dir().join(format!("pissa_http_tiers_{}", std::process::id()));
+        let mut tiers = TierManager::new(budget, &spill_dir);
+        if n_cold > 0 {
+            // A few saved templates shared by all cold tenant names:
+            // registration costs one map entry, the checkpoint loads on
+            // the tenant's first request.
+            let n_tmpl = n_cold.min(4);
+            let mut paths = Vec::with_capacity(n_tmpl);
+            for t in 0..n_tmpl {
+                let tmpl = format!("cold-template{t}");
+                engine.attach(&tmpl, spec.clone(), &mut rng)?;
+                for module in pissa::model::LINEARS {
+                    drift_factors(&mut engine, &tmpl, module, drift, &mut rng)?;
+                }
+                let path = spill_dir.join("templates").join(format!("{tmpl}.ckpt"));
+                engine.save(&tmpl, &path)?;
+                engine.detach(&tmpl)?;
+                paths.push(path);
+            }
+            for i in 0..n_cold {
+                tiers.register_cold(&format!("cold{i:04}"), &paths[i % n_tmpl])?;
+            }
+            eprintln!("[serve] registered {n_cold} cold tenants over {n_tmpl} saved templates");
+        }
+        eprintln!(
+            "[serve] adapter residency budget {} bytes, spills under {}",
+            budget,
+            spill_dir.display()
+        );
+        NetServer::start_tiered(engine, tiers, serve_cfg, net_cfg)?
+    } else {
+        NetServer::start(&engine, serve_cfg, net_cfg)?
+    };
     let bound = server.addr();
     println!("listening on http://{bound} ({n_adapters} tenants: {:?})", names);
     println!("  curl -s http://{bound}/healthz");

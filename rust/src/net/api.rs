@@ -14,6 +14,7 @@
 //! alone. Errors are always `{"error":{"code":...,"message":...}}` with
 //! the status code mirroring [`ServeError::http_status`].
 
+use crate::adapter::AdapterError;
 use crate::serve::{FinishReason, FinishedSeq, ServeError};
 use crate::util::json::{jarr, jnum, jstr, Json};
 use std::collections::BTreeSet;
@@ -75,9 +76,10 @@ impl ApiError {
     }
 }
 
-/// Map an engine-side failure to the wire. [`ServeError`]s keep their
-/// typed status/code; anything else (empty prompt, admission context)
-/// is classified by message, defaulting to a 400.
+/// Map an engine-side failure to the wire. [`ServeError`]s and
+/// [`AdapterError`]s keep their typed status/code; anything else (empty
+/// prompt, admission context) is classified by message, defaulting to a
+/// 400.
 pub fn classify(err: &anyhow::Error) -> ApiError {
     if let Some(se) = err.downcast_ref::<ServeError>() {
         let mut api = ApiError::new(se.http_status(), se.code(), se.to_string());
@@ -85,6 +87,9 @@ pub fn classify(err: &anyhow::Error) -> ApiError {
             api = api.retry_after(1.0);
         }
         return api;
+    }
+    if let Some(ae) = err.downcast_ref::<AdapterError>() {
+        return ApiError::new(ae.http_status(), ae.code(), ae.to_string());
     }
     let msg = format!("{err:#}");
     if msg.contains("empty prompt") {
@@ -94,8 +99,11 @@ pub fn classify(err: &anyhow::Error) -> ApiError {
     }
 }
 
-/// What the validator needs to know about the engine: fixed at server
-/// start (attach/detach during serving is out of scope for this PR).
+/// What the validator needs to know about the engine. `adapters` is the
+/// full ROUTABLE tenant set — under residency tiering that includes
+/// warm/cold names that are not currently attached (they are promoted
+/// on miss at the next step boundary), so the wire only 404s names that
+/// were never registered at all.
 #[derive(Clone, Debug)]
 pub struct ApiContext {
     pub vocab: usize,
@@ -338,6 +346,34 @@ mod tests {
         let plain = anyhow::anyhow!("seq SeqId(0): empty prompt (a generation needs >= 1 token)");
         assert_eq!(classify(&plain).code, "empty_prompt");
         assert_eq!(classify(&anyhow::anyhow!("weird")).status, 400);
+    }
+
+    #[test]
+    fn classify_maps_adapter_errors_to_structured_4xx() {
+        // Registry lifecycle errors used to be anyhow strings → opaque
+        // 500s at the wire; now they keep their typed status/code.
+        for (err, status, code) in [
+            (
+                AdapterError::Unknown { name: "g".into(), have: vec!["t0".into()] },
+                404,
+                "unknown_adapter",
+            ),
+            (AdapterError::AlreadyAttached { name: "t0".into() }, 409, "adapter_already_attached"),
+            (AdapterError::Merged { name: "t0".into() }, 409, "adapter_merged"),
+            (AdapterError::EmptyName, 422, "empty_adapter_name"),
+            (AdapterError::NoSpec { path: "x.ckpt".into() }, 422, "checkpoint_missing_spec"),
+        ] {
+            let api = classify(&anyhow::Error::new(err.clone()));
+            assert_eq!((api.status, api.code), (status, code), "{err}");
+        }
+        // …including through an anyhow context chain, the way engine
+        // callers actually surface them.
+        let chained = anyhow::Error::new(AdapterError::Unknown {
+            name: "g".into(),
+            have: vec![],
+        })
+        .context("promoting for seq 7");
+        assert_eq!(classify(&chained).status, 404);
     }
 
     #[test]

@@ -20,6 +20,7 @@
 
 use super::api::{classify, ApiError};
 use super::drain::DrainState;
+use crate::adapter::{AdapterEngine, TierManager};
 use crate::serve::{
     DecodeScheduler, FinishedSeq, KvCache, ModelServer, SeqId, SeqRequest, StepObserver,
 };
@@ -52,6 +53,20 @@ pub enum EngineMsg {
 /// the drain flag.
 const IDLE_WAIT: Duration = Duration::from_millis(20);
 
+/// Adapter residency state owned by a tiered engine thread: the
+/// `AdapterEngine` the serving snapshot was taken from (promotion needs
+/// its factors; demotion spills them) plus the [`TierManager`] policy.
+///
+/// The tier hook runs at STEP BOUNDARIES only: before each
+/// `step_observed` call the engine promotes every adapter the batch is
+/// about to touch (attach-on-miss for cold/warm tenants) and evicts LRU
+/// residents past the byte budget. Nothing inside the batched decode
+/// loop ever sees a tier transition.
+pub struct TierRuntime {
+    pub engine: AdapterEngine,
+    pub tiers: TierManager,
+}
+
 struct EventObserver<'a> {
     streams: &'a mut HashMap<SeqId, Sender<StreamEvent>>,
     rejected: Vec<(SeqId, ApiError)>,
@@ -77,6 +92,8 @@ struct Engine {
     sched: DecodeScheduler,
     streams: HashMap<SeqId, Sender<StreamEvent>>,
     drain: Arc<DrainState>,
+    /// `Some` when serving under a residency budget (`start_tiered`).
+    tiers: Option<TierRuntime>,
 }
 
 impl Engine {
@@ -103,13 +120,44 @@ impl Engine {
         }
     }
 
-    /// Serve stats + residency + live queue depths.
+    /// Serve stats + residency + live queue depths (+ tier traffic when
+    /// serving under a residency budget).
     fn metrics_json(&self) -> Json {
         let mut o = self.server.stats().to_json();
-        o.set("resident", self.server.resident_breakdown_with_cache(&self.cache).to_json());
+        let mut resident = self.server.resident_breakdown_with_cache(&self.cache);
+        if let Some(tr) = &self.tiers {
+            resident = resident.with_adapter_tiers(tr.tiers.tier_table());
+            let c = tr.tiers.counters();
+            let mut t = Json::obj();
+            t.set("budget_bytes", jnum(tr.tiers.budget_bytes() as f64));
+            t.set("resident_bytes", jnum(tr.tiers.resident_bytes() as f64));
+            t.set("promotions", jnum(c.promotions as f64));
+            t.set("demotions", jnum(c.demotions as f64));
+            t.set("cold_attaches", jnum(c.cold_attaches as f64));
+            t.set("over_budget", jnum(c.over_budget as f64));
+            t.set("attach_p95_s", jnum(tr.tiers.attach_p95_s()));
+            o.set("adapter_tiering", t);
+        }
+        o.set("resident", resident.to_json());
         o.set("pending_seqs", jnum(self.sched.pending() as f64));
         o.set("running_seqs", jnum(self.sched.running() as f64));
         o
+    }
+
+    /// The step-boundary residency hook: fold the serving layer's hit
+    /// counters into the LRU clock, then promote everything the pending
+    /// and running sequences need (attach-on-miss) and evict past the
+    /// budget. Promotion failures are reported per adapter; the affected
+    /// requests then draw the scheduler's typed `unknown_adapter`
+    /// rejection on the very next step instead of wedging the batch.
+    fn ensure_adapters_resident(&mut self) {
+        let Some(tr) = self.tiers.as_mut() else { return };
+        tr.tiers.sync_hits(&self.server.stats().hits);
+        let wanted = self.sched.active_adapters();
+        for (name, err) in tr.tiers.ensure_resident(&mut tr.engine, &mut self.server, &wanted) {
+            self.server.record_rejection("adapter_promotion_failed");
+            eprintln!("[engine] promoting adapter '{name}' failed: {err:#}");
+        }
     }
 
     /// Readiness: engine loop alive + still admitting + KV pages free.
@@ -145,6 +193,7 @@ pub fn run_engine(
     cache: KvCache,
     rx: Receiver<EngineMsg>,
     drain: Arc<DrainState>,
+    tiers: Option<TierRuntime>,
 ) {
     let mut eng = Engine {
         server,
@@ -152,6 +201,7 @@ pub fn run_engine(
         sched: DecodeScheduler::new(),
         streams: HashMap::new(),
         drain,
+        tiers,
     };
     let mut disconnected = false;
     loop {
@@ -180,7 +230,10 @@ pub fn run_engine(
             continue;
         }
 
-        // One continuous-batching step; tokens stream out mid-step.
+        // Residency first (promote misses, evict past budget), OUTSIDE
+        // the batched step — then one continuous-batching step with
+        // tokens streaming out mid-step.
+        eng.ensure_adapters_resident();
         let mut obs = EventObserver { streams: &mut eng.streams, rejected: Vec::new() };
         let result = eng.sched.step_observed(&mut eng.server, &mut eng.cache, &mut obs);
         let rejected = std::mem::take(&mut obs.rejected);

@@ -31,11 +31,11 @@ pub mod tenant;
 
 pub use api::{ApiContext, ApiError, GenerateRequest};
 pub use drain::{DrainState, Phase};
-pub use engine::{EngineMsg, StreamEvent};
+pub use engine::{EngineMsg, StreamEvent, TierRuntime};
 pub use http::{HttpRequest, HttpResponse, StreamingClient};
 pub use tenant::{Admission, AdmissionControl, TenantPolicy};
 
-use crate::adapter::AdapterEngine;
+use crate::adapter::{AdapterEngine, TierManager};
 use crate::serve::{ModelServer, SeqRequest, ServeConfig};
 use crate::util::json::{jnum, jstr, Json};
 use crate::util::timer::Timer;
@@ -126,23 +126,55 @@ pub struct NetServer {
 
 impl NetServer {
     /// Build the model server synchronously (config errors surface here,
-    /// not on a thread), bind, and start the thread ensemble.
+    /// not on a thread), bind, and start the thread ensemble. Every
+    /// adapter attached in `engine` is served hot forever; for a
+    /// budgeted multi-tenant front-end see [`NetServer::start_tiered`].
     pub fn start(
         engine: &AdapterEngine,
         serve_cfg: ServeConfig,
         net_cfg: NetConfig,
     ) -> Result<NetServer> {
         let server = ModelServer::new(engine, serve_cfg)?;
+        Self::start_inner(server, None, net_cfg)
+    }
+
+    /// Start with adapter residency tiering: the engine thread takes
+    /// ownership of `engine` (promotion needs its factors; demotion
+    /// spills them) plus a [`TierManager`], registers every attached
+    /// adapter hot, and runs the attach-on-miss / LRU-evict hook at
+    /// each step boundary. Names registered cold on `tiers` are
+    /// routable immediately — their first request pays the attach.
+    pub fn start_tiered(
+        engine: AdapterEngine,
+        mut tiers: TierManager,
+        serve_cfg: ServeConfig,
+        net_cfg: NetConfig,
+    ) -> Result<NetServer> {
+        let server = ModelServer::new(&engine, serve_cfg)?;
+        let attached: Vec<String> = engine.names().iter().map(|s| s.to_string()).collect();
+        for name in &attached {
+            if tiers.tier(name).is_none() {
+                tiers.register_hot(name, &engine, &server)?;
+            }
+        }
+        Self::start_inner(server, Some(TierRuntime { engine, tiers }), net_cfg)
+    }
+
+    fn start_inner(
+        server: ModelServer,
+        tiers: Option<TierRuntime>,
+        net_cfg: NetConfig,
+    ) -> Result<NetServer> {
         let cache = server.new_cache()?;
-        let ctx = ApiContext {
-            vocab: server.vocab(),
-            max_seq: server.cfg().max_seq,
-            adapters: server
-                .adapter_names()
-                .iter()
-                .map(|s| s.to_string())
-                .collect::<BTreeSet<_>>(),
-        };
+        // The routable tenant set: everything the server snapshot serves
+        // plus (under tiering) every warm/cold registered name — those
+        // are attached on miss, not 404'd.
+        let mut adapters: BTreeSet<String> =
+            server.adapter_names().iter().map(|s| s.to_string()).collect();
+        if let Some(tr) = &tiers {
+            adapters.extend(tr.tiers.names().iter().map(|s| s.to_string()));
+        }
+        let ctx = ApiContext { vocab: server.vocab(), max_seq: server.cfg().max_seq, adapters };
         let listener = TcpListener::bind(&net_cfg.addr)?;
         let addr = listener.local_addr()?;
 
@@ -156,7 +188,7 @@ impl NetServer {
         let engine_drain = Arc::clone(&drain);
         let engine_handle = std::thread::Builder::new()
             .name("pissa-engine".into())
-            .spawn(move || engine::run_engine(server, cache, engine_rx, engine_drain))?;
+            .spawn(move || engine::run_engine(server, cache, engine_rx, engine_drain, tiers))?;
 
         let mut admission = AdmissionControl::new(net_cfg.default_policy);
         for (tenant, policy) in &net_cfg.tenant_policies {

@@ -350,12 +350,23 @@ pub struct ServeConfig {
     /// the legacy behavior. Chunking never changes any output bit (the
     /// chunked ≡ one-shot prefill contract); it only reorders wall-clock.
     pub prefill_chunk: usize,
+    /// Byte budget for RESIDENT adapter state (hot f32 tensors +
+    /// prepared deltas + warm NF4 copies), enforced by the
+    /// [`crate::adapter::TierManager`] LRU alongside the KV budget.
+    /// Adapters beyond it are demoted to warm/cold and re-attached on
+    /// miss at step boundaries.
+    pub adapter_budget_bytes: usize,
 }
 
 /// Default KV-cache byte budget: roomy for the synthetic workloads (the
 /// tiny models here keep a full 8-slot × 256-position cache well under
 /// it), small enough that a misconfigured giant reservation is caught.
 pub const DEFAULT_KV_BUDGET_BYTES: usize = 64 << 20;
+
+/// Default resident-adapter byte budget, in the same spirit: far more
+/// than the synthetic multi-tenant fleets need, finite so a runaway
+/// registration storm gets demoted instead of growing without bound.
+pub const DEFAULT_ADAPTER_BUDGET_BYTES: usize = 256 << 20;
 
 impl ServeConfig {
     pub fn new(module: &str) -> ServeConfig {
@@ -372,6 +383,7 @@ impl ServeConfig {
             n_kv_heads: 1,
             rope_theta: 0.0,
             prefill_chunk: 0,
+            adapter_budget_bytes: DEFAULT_ADAPTER_BUDGET_BYTES,
         }
     }
 
@@ -411,6 +423,12 @@ impl ServeConfig {
     /// KV-cache byte budget across all slots.
     pub fn kv_budget_bytes(mut self, bytes: usize) -> ServeConfig {
         self.kv_budget_bytes = bytes;
+        self
+    }
+
+    /// Resident-adapter byte budget for the residency tier manager.
+    pub fn adapter_budget_bytes(mut self, bytes: usize) -> ServeConfig {
+        self.adapter_budget_bytes = bytes;
         self
     }
 
@@ -531,33 +549,59 @@ impl ServeConfig {
     /// The per-module servability check shared by both scopes. Reads the
     /// weight dims off the stacked tensor — no matrix is copied out.
     fn validate_module(&self, engine: &AdapterEngine, module: &str) -> Result<()> {
-        let (m, n) = engine.base_dims(module);
         for name in engine.names() {
-            let ad = engine.get(name)?;
-            if !ad.spec.targets_module(module) {
-                continue; // served straight from the base weight
-            }
-            if ad.spec.quantized() && !self.strategy.quantized_base() {
-                return Err(ServeError::QuantizedAdapter {
-                    adapter: name.to_string(),
-                    strategy: ad.spec.name(),
+            self.check_adapter_on_module(engine, name, module)?;
+        }
+        Ok(())
+    }
+
+    /// Servability of ONE adapter on every linear this scope covers —
+    /// the same checks construction-time [`ServeConfig::validate`] runs
+    /// over the whole registry, scoped to a single name so the residency
+    /// layer can vet a promotion without rebuilding the server.
+    pub fn validate_adapter(&self, engine: &AdapterEngine, name: &str) -> Result<()> {
+        match self.scope {
+            ServeScope::SingleLinear => self.check_adapter_on_module(engine, name, &self.module),
+            ServeScope::FullModel => {
+                for module in LINEARS {
+                    self.check_adapter_on_module(engine, name, module)?;
                 }
-                .into());
+                Ok(())
             }
-            // Only the fused-style paths depend on the update actually
-            // being low-rank; the merged/dense strategies serve any rank
-            // correctly (the error message points there).
-            let rank = ad.spec.module_rank(module);
-            if self.strategy.fused_low_rank() && rank > m.min(n) {
-                return Err(ServeError::RankTooLarge {
-                    adapter: name.to_string(),
-                    module: module.to_string(),
-                    rank,
-                    m,
-                    n,
-                }
-                .into());
+        }
+    }
+
+    fn check_adapter_on_module(
+        &self,
+        engine: &AdapterEngine,
+        name: &str,
+        module: &str,
+    ) -> Result<()> {
+        let (m, n) = engine.base_dims(module);
+        let ad = engine.get(name)?;
+        if !ad.spec.targets_module(module) {
+            return Ok(()); // served straight from the base weight
+        }
+        if ad.spec.quantized() && !self.strategy.quantized_base() {
+            return Err(ServeError::QuantizedAdapter {
+                adapter: name.to_string(),
+                strategy: ad.spec.name(),
             }
+            .into());
+        }
+        // Only the fused-style paths depend on the update actually
+        // being low-rank; the merged/dense strategies serve any rank
+        // correctly (the error message points there).
+        let rank = ad.spec.module_rank(module);
+        if self.strategy.fused_low_rank() && rank > m.min(n) {
+            return Err(ServeError::RankTooLarge {
+                adapter: name.to_string(),
+                module: module.to_string(),
+                rank,
+                m,
+                n,
+            }
+            .into());
         }
         Ok(())
     }

@@ -200,6 +200,31 @@ impl LinearServer {
         self.prepared.contains_key(name)
     }
 
+    /// Register one adapter's prepared serving delta at runtime — the
+    /// residency layer's promotion path. The shared base store is
+    /// untouched, so promotion never rebuilds the server; `delta` is
+    /// `None` for adapters that do not target this module (exactly what
+    /// [`crate::adapter::AdapterEngine::serve_delta`] returns).
+    pub fn add_group(&mut self, name: &str, delta: Option<(Mat, Mat)>) {
+        self.prepared.insert(name.to_string(), Prepared { delta });
+    }
+
+    /// Drop one adapter's prepared delta (demotion). Returns whether it
+    /// was present.
+    pub fn remove_group(&mut self, name: &str) -> bool {
+        self.prepared.remove(name).is_some()
+    }
+
+    /// f32 bytes of one adapter's prepared delta on this linear (0 when
+    /// absent or untargeted) — the server-side share of the hot tier's
+    /// budget accounting.
+    pub fn delta_bytes(&self, name: &str) -> usize {
+        self.prepared
+            .get(name)
+            .and_then(|p| p.delta.as_ref())
+            .map_or(0, |(da, db)| (da.data.len() + db.data.len()) * 4)
+    }
+
     /// Bytes the shared base keeps resident under this strategy: m·n·4
     /// for every dense store, packed codes + scales for the NF4 store.
     pub fn resident_bytes(&self) -> usize {

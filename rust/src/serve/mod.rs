@@ -70,7 +70,10 @@ pub mod router;
 pub mod server;
 pub mod stats;
 
-pub use config::{ServeConfig, ServeError, ServeScope, ServeStrategy, DEFAULT_KV_BUDGET_BYTES};
+pub use config::{
+    ServeConfig, ServeError, ServeScope, ServeStrategy, DEFAULT_ADAPTER_BUDGET_BYTES,
+    DEFAULT_KV_BUDGET_BYTES,
+};
 pub use kvcache::{KvCache, KvRuns, SlotId, KV_PAGE};
 pub use linear::{LinearServer, QuantBase};
 pub use model::{attn_streamed_into, rope_inv_freq, ModelServer, RMS_EPS};

@@ -353,6 +353,60 @@ impl ModelServer {
         self.linears[0].adapter_names()
     }
 
+    /// Is `name` routable right now? (Runtime set: promotions add
+    /// names, demotions remove them.)
+    pub fn serves_adapter(&self, name: &str) -> bool {
+        self.linears[0].serves(name)
+    }
+
+    /// Register one engine adapter's prepared deltas across all
+    /// `n_layers × 7` linears at runtime — the promotion path of the
+    /// residency tier manager. Runs the same per-adapter servability
+    /// checks construction applies to the whole registry, and computes
+    /// every delta before touching any linear, so a failure leaves the
+    /// server unchanged. The shared base stores are untouched: promotion
+    /// never rebuilds the server.
+    pub fn add_adapter(&mut self, engine: &AdapterEngine, name: &str) -> Result<()> {
+        anyhow::ensure!(
+            !self.serves_adapter(name),
+            "adapter '{name}' is already served; remove it first"
+        );
+        self.cfg.validate_adapter(engine, name)?;
+        let mut deltas = Vec::with_capacity(self.linears.len());
+        for layer in 0..self.n_layers {
+            for module in LINEARS {
+                deltas.push(engine.serve_delta(name, module, layer)?);
+            }
+        }
+        for (lin, delta) in self.linears.iter_mut().zip(deltas) {
+            lin.add_group(name, delta);
+        }
+        Ok(())
+    }
+
+    /// Drop one adapter's prepared deltas from every linear (the
+    /// demotion path). Typed error when the name is not served — the
+    /// caller's view is stale.
+    pub fn remove_adapter(&mut self, name: &str) -> Result<()> {
+        if !self.serves_adapter(name) {
+            return Err(ServeError::UnknownAdapter {
+                name: name.to_string(),
+                have: self.adapter_names().iter().map(|s| s.to_string()).collect(),
+            }
+            .into());
+        }
+        for lin in &mut self.linears {
+            lin.remove_group(name);
+        }
+        Ok(())
+    }
+
+    /// f32 bytes of one adapter's prepared serving deltas across all
+    /// linears — the server-side share of the residency budget.
+    pub fn adapter_delta_bytes(&self, name: &str) -> usize {
+        self.linears.iter().map(|l| l.delta_bytes(name)).sum()
+    }
+
     pub fn stats(&self) -> &ServeStats {
         &self.stats
     }

@@ -355,6 +355,25 @@ impl DecodeScheduler {
         self.pending.is_empty() && self.running.is_empty()
     }
 
+    /// Adapter names the scheduler's current working set references —
+    /// every queued AND in-flight sequence's adapter, deduplicated and
+    /// sorted. This is the attach-on-miss hook: callers hand it to
+    /// `TierManager::ensure_resident` BEFORE each step, so pending
+    /// sequences for registered-but-evicted adapters are promoted at the
+    /// step boundary (never inside the decode loop) and in-flight
+    /// sequences' adapters are pinned against eviction.
+    pub fn active_adapters(&self) -> Vec<String> {
+        let mut names: Vec<String> = self
+            .pending
+            .iter()
+            .filter_map(|p| p.req.adapter.clone())
+            .chain(self.running.iter().filter_map(|r| r.adapter.clone()))
+            .collect();
+        names.sort();
+        names.dedup();
+        names
+    }
+
     /// Retired sequences not yet returned by [`DecodeScheduler::step`] /
     /// [`DecodeScheduler::run`] — non-empty only after one of them
     /// errored mid-flight (completed work is buffered, never dropped).

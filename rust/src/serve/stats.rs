@@ -300,17 +300,38 @@ pub struct ResidentBreakdown {
     /// the same `d_model`, before the page-granular rounding of
     /// [`crate::serve::KvCache::pages_for`].
     pub kv_bytes: usize,
+    /// Per-residency-tier adapter accounting `(tier, adapter count,
+    /// resident bytes)` from the [`crate::adapter::TierManager`] — empty
+    /// for untiered servers (every adapter implicitly hot, unbudgeted).
+    /// Like `kv_bytes`, NOT part of [`ResidentBreakdown::total`]: the
+    /// base-residency ratio stays comparable across PRs.
+    pub adapter_tiers: Vec<(String, usize, usize)>,
 }
 
 impl ResidentBreakdown {
     pub fn new(per_module: Vec<(String, usize)>, dense_bytes: usize) -> ResidentBreakdown {
-        ResidentBreakdown { per_module, dense_bytes, kv_bytes: 0 }
+        ResidentBreakdown { per_module, dense_bytes, kv_bytes: 0, adapter_tiers: Vec::new() }
     }
 
     /// Attach the decode path's live KV-cache bytes.
     pub fn with_kv_bytes(mut self, kv_bytes: usize) -> ResidentBreakdown {
         self.kv_bytes = kv_bytes;
         self
+    }
+
+    /// Attach the residency tier manager's per-tier adapter table.
+    pub fn with_adapter_tiers(
+        mut self,
+        tiers: Vec<(&'static str, usize, usize)>,
+    ) -> ResidentBreakdown {
+        self.adapter_tiers =
+            tiers.into_iter().map(|(t, c, b)| (t.to_string(), c, b)).collect();
+        self
+    }
+
+    /// RAM held by tier-managed adapters (hot f32 + warm NF4).
+    pub fn adapter_bytes(&self) -> usize {
+        self.adapter_tiers.iter().map(|(_, _, b)| b).sum()
     }
 
     /// Aggregate resident bytes across every module.
@@ -347,6 +368,17 @@ impl ResidentBreakdown {
         o.set("ratio", jnum(self.ratio()));
         o.set("kv_cache_bytes", jnum(self.kv_bytes as f64));
         o.set("total_with_kv_bytes", jnum(self.total_with_kv() as f64));
+        if !self.adapter_tiers.is_empty() {
+            let mut tiers = Json::obj();
+            for (tier, count, bytes) in &self.adapter_tiers {
+                let mut row = Json::obj();
+                row.set("adapters", jnum(*count as f64));
+                row.set("bytes", jnum(*bytes as f64));
+                tiers.set(tier, row);
+            }
+            o.set("adapter_tiers", tiers);
+            o.set("adapter_bytes", jnum(self.adapter_bytes() as f64));
+        }
         o
     }
 }
@@ -367,6 +399,19 @@ mod tests {
         assert!(text.contains("\"gate\"") && text.contains("\"ratio\""), "{text}");
         // Degenerate denominator does not divide by zero.
         assert_eq!(ResidentBreakdown::new(vec![], 0).ratio(), 0.0);
+    }
+
+    #[test]
+    fn resident_breakdown_tier_table_round_trips_to_json() {
+        let bd = ResidentBreakdown::new(vec![("q".into(), 100)], 400)
+            .with_adapter_tiers(vec![("hot", 2, 4096), ("warm", 1, 600), ("cold", 7, 0)]);
+        assert_eq!(bd.adapter_bytes(), 4696);
+        assert_eq!(bd.total(), 100, "tier bytes stay out of the base-residency ratio");
+        let text = bd.to_json().to_string();
+        assert!(text.contains("\"adapter_tiers\"") && text.contains("\"warm\""), "{text}");
+        // Untiered servers keep the legacy shape: no adapter_tiers key.
+        let plain = ResidentBreakdown::new(vec![], 0).to_json().to_string();
+        assert!(!plain.contains("adapter_tiers"), "{plain}");
     }
 
     #[test]

@@ -12,7 +12,8 @@
 #![allow(deprecated)] // the migration tests exercise the legacy shims on purpose
 
 use pissa::adapter::init::{self, Strategy, Window};
-use pissa::adapter::{AdapterEngine, AdapterSpec, Checkpoint};
+use pissa::adapter::{AdapterEngine, AdapterError, AdapterSpec, Checkpoint};
+use std::path::PathBuf;
 use pissa::linalg::{matmul, Mat};
 use pissa::model::{apply_spec, apply_strategy, BaseModel};
 use pissa::quant::{dequantize, nf4_roundtrip, quantize, Nf4Tensor};
@@ -316,4 +317,135 @@ fn engine_serves_multiple_adapters_over_one_base() {
     let deltas = engine.to_lora_delta("pissa-qv").unwrap();
     let keys: Vec<&str> = deltas.keys().map(|s| s.as_str()).collect();
     assert_eq!(keys, vec!["q", "v"]);
+}
+
+// ---------------------------------------------------------------------------
+// Attach atomicity: a failing attach_saved leaves the engine unchanged
+// ---------------------------------------------------------------------------
+
+fn fixture(name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("rust/tests/fixtures").join(name)
+}
+
+/// Full engine-state fingerprint: attached names, active selection, and
+/// every byte of every resident tensor.
+fn fingerprint(engine: &AdapterEngine) -> (Vec<String>, Option<String>, Vec<(String, Vec<f32>)>) {
+    let names: Vec<String> = engine.names().iter().map(|s| s.to_string()).collect();
+    let mut tensors = Vec::new();
+    for name in &names {
+        let ad = engine.get(name).unwrap();
+        for (prefix, store) in
+            [("frozen", &ad.frozen), ("factors", &ad.factors), ("init", &ad.init_factors)]
+        {
+            for (k, t) in store.iter() {
+                tensors.push((format!("{name}/{prefix}.{k}"), t.data.clone()));
+            }
+        }
+    }
+    (names, engine.active().map(|s| s.to_string()), tensors)
+}
+
+#[test]
+fn attach_saved_failure_leaves_engine_unchanged() {
+    let cfg = tiny_cfg();
+    let mut rng = Rng::new(6000);
+    let base = BaseModel::random(&cfg, &mut rng);
+    let mut engine = AdapterEngine::new(base);
+    engine.attach("keep", AdapterSpec::pissa(4), &mut rng).unwrap();
+    let before = fingerprint(&engine);
+
+    // Committed corrupt fixtures: wrong magic, a mat entry whose header
+    // claims more payload than the file holds, and a well-formed v1
+    // container (no spec entry → not attachable as an adapter).
+    for fx in ["bad_magic.ckpt", "truncated.ckpt", "v1_no_spec.ckpt"] {
+        let err = engine.attach_saved("incoming", &fixture(fx)).unwrap_err();
+        assert!(
+            engine.get("incoming").is_err(),
+            "{fx}: failed attach must not leave a partial adapter ({err:#})"
+        );
+        assert_eq!(fingerprint(&engine), before, "{fx}: engine changed by a failed attach");
+    }
+    // The v1 fixture parses fine — it fails with the TYPED missing-spec
+    // error, naming the file.
+    let err = engine.attach_saved("incoming", &fixture("v1_no_spec.ckpt")).unwrap_err();
+    let ae = err.downcast_ref::<AdapterError>().expect("typed error");
+    assert!(matches!(ae, AdapterError::NoSpec { path } if path.contains("v1_no_spec")));
+
+    // Deepest validation failure: a checkpoint whose shapes all match but
+    // which was saved against a DIFFERENT base model, so the attach-time
+    // decomposition check rejects it mid-validation.
+    let mut other_rng = Rng::new(6001);
+    let other_base = BaseModel::random(&cfg, &mut other_rng);
+    let mut other = AdapterEngine::new(other_base);
+    other.attach("alien", AdapterSpec::pissa(4), &mut other_rng).unwrap();
+    let dir = std::env::temp_dir().join("pissa_api_atomicity");
+    let path = dir.join("alien.ckpt");
+    other.save("alien", &path).unwrap();
+
+    let err = engine.attach_saved("incoming", &path).unwrap_err();
+    assert!(
+        format!("{err:#}").contains("does not decompose"),
+        "expected the decomposition check to fire, got: {err:#}"
+    );
+    assert!(engine.get("incoming").is_err());
+    assert_eq!(fingerprint(&engine), before, "mid-validation failure mutated the engine");
+
+    // And the happy path still works after all those failures.
+    engine.save("keep", &dir.join("keep.ckpt")).unwrap();
+    engine.attach_saved("copy", &dir.join("keep.ckpt")).unwrap();
+    assert!(engine.get("copy").is_ok());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------------------------------------
+// Typed adapter errors: enum variants carry context + wire mapping
+// ---------------------------------------------------------------------------
+
+#[test]
+fn adapter_errors_are_typed_with_context() {
+    let cfg = tiny_cfg();
+    let mut rng = Rng::new(6100);
+    let base = BaseModel::random(&cfg, &mut rng);
+    let mut engine = AdapterEngine::new(base);
+    engine.attach("a", AdapterSpec::pissa(2), &mut rng).unwrap();
+    engine.attach("b", AdapterSpec::lora(2), &mut rng).unwrap();
+
+    // Unknown: names both the request and the available set.
+    let err = engine.swap("ghost").unwrap_err();
+    match err.downcast_ref::<AdapterError>() {
+        Some(AdapterError::Unknown { name, have }) => {
+            assert_eq!(name, "ghost");
+            assert_eq!(have, &vec!["a".to_string(), "b".to_string()]);
+        }
+        other => panic!("expected Unknown, got {other:?}"),
+    }
+    assert_eq!(err.downcast_ref::<AdapterError>().unwrap().http_status(), 404);
+
+    // AlreadyAttached: duplicate names conflict (409).
+    let err = engine.attach("a", AdapterSpec::pissa(2), &mut rng).unwrap_err();
+    let ae = err.downcast_ref::<AdapterError>().unwrap();
+    assert!(matches!(ae, AdapterError::AlreadyAttached { name } if name == "a"));
+    assert_eq!(ae.http_status(), 409);
+
+    // EmptyName / FullFt: unprocessable requests (422).
+    let err = engine.attach("", AdapterSpec::pissa(2), &mut rng).unwrap_err();
+    assert!(matches!(err.downcast_ref::<AdapterError>(), Some(AdapterError::EmptyName)));
+    let err = engine.attach("ft", AdapterSpec::full_ft(), &mut rng).unwrap_err();
+    assert!(matches!(err.downcast_ref::<AdapterError>(), Some(AdapterError::FullFtNotAnAdapter)));
+
+    // Merged: detaching a merged adapter conflicts until unmerged.
+    engine.merge("a").unwrap();
+    let err = engine.detach("a").unwrap_err();
+    let ae = err.downcast_ref::<AdapterError>().unwrap();
+    assert!(matches!(ae, AdapterError::Merged { name } if name == "a"));
+    assert_eq!(ae.http_status(), 409);
+    engine.unmerge("a").unwrap();
+    engine.detach("a").unwrap();
+
+    // Every variant exposes a stable machine-readable code.
+    assert_eq!(AdapterError::EmptyName.code(), "empty_adapter_name");
+    assert_eq!(
+        AdapterError::Unknown { name: "x".into(), have: vec![] }.code(),
+        "unknown_adapter"
+    );
 }

@@ -22,7 +22,9 @@
 //! keeping the aggregate base ≤ 0.35× dense-resident; and quantized
 //! adapters route through the quantized-base strategies only.
 
-use pissa::adapter::{AdapterEngine, AdapterSpec};
+use pissa::adapter::{
+    AdapterEngine, AdapterSpec, DemotePolicy, Tier, TierManager, WARM_NF4_REL_TOL,
+};
 use pissa::linalg::{matmul, vecmat, Mat};
 use pissa::model::{BaseModel, LINEARS};
 use pissa::quant::error::fro_error;
@@ -32,6 +34,7 @@ use pissa::serve::{
     argmax, drift_factors, DecodeRequest, DecodeScheduler, KvCache, ModelRequest, ModelServer,
     Request, SeqId, SeqRequest, ServeConfig, ServeError, ServeStrategy, Server, StepObserver,
 };
+use pissa::util::par::with_parallelism;
 use pissa::util::rng::Rng;
 
 const MODULE: &str = "q";
@@ -1209,4 +1212,241 @@ fn over_rank_adapter_rejected_with_clear_message() {
             .sqrt();
         assert!(err < 1e-4, "{}: over-rank dense serve err {err:.3e}", strategy.name());
     }
+}
+
+// ---- adapter residency tiering (eviction invariance) ------------------
+
+fn tiering_tmp(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("pissa_equiv_tiering_{tag}"));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+#[test]
+fn tiering_eviction_history_is_bitwise_invariant_for_exact_policy() {
+    // THE tiering contract: a budget-starved tiered server — every
+    // fixture switch forces a demote of the previous tenant and a cold
+    // re-attach of the next, plus a forced demote→promote round trip in
+    // the MIDDLE of each trajectory — must serve tokens AND logits
+    // bitwise identical to an all-hot server. Eviction history is not
+    // allowed to exist, numerically.
+    let run = || -> Vec<(Vec<usize>, Vec<Vec<f32>>)> {
+        let seed = 1300;
+        let fixtures: [(&str, Vec<usize>); 3] = [
+            ("pissa-t", vec![3, 17, 41, 8]),
+            ("partial", vec![25, 1, 30]),
+            ("lora-t", vec![9, 9, 30, 2]),
+        ];
+        let n_new = 6;
+        let cfg = ServeConfig::full_model().strategy(ServeStrategy::Fused).max_seq(32);
+
+        // All-hot reference trajectories.
+        let (hot_eng, _, _) = build_model_engine(4, seed);
+        let mut hot_srv = ModelServer::new(&hot_eng, cfg.clone()).unwrap();
+        let mut hot_cache = hot_srv.new_cache().unwrap();
+        let baseline: Vec<_> = fixtures
+            .iter()
+            .map(|(a, p)| incremental_trajectory(&mut hot_srv, &mut hot_cache, Some(*a), p, n_new))
+            .collect();
+
+        // Identically-seeded tiered twin with room for exactly ONE full
+        // adapter ("partial" is smaller; the full-coverage pair is the
+        // budget unit).
+        let (mut eng, names, _) = build_model_engine(4, seed);
+        let mut srv = ModelServer::new(&eng, cfg).unwrap();
+        let mut cache = srv.new_cache().unwrap();
+        let dir = tiering_tmp("exact");
+        let budget =
+            eng.adapter_bytes("pissa-t").unwrap() + srv.adapter_delta_bytes("pissa-t");
+        let mut tiers = TierManager::new(budget, &dir);
+        for n in &names {
+            tiers.register_hot(n, &eng, &srv).unwrap();
+        }
+
+        let mut tiered = Vec::new();
+        for (adapter, prompt) in &fixtures {
+            let want = vec![adapter.to_string()];
+            let failed = tiers.ensure_resident(&mut eng, &mut srv, &want);
+            assert!(failed.is_empty(), "promotion failed: {failed:?}");
+            assert!(
+                tiers.resident_bytes() <= tiers.budget_bytes(),
+                "resident {} bytes over the {} byte budget",
+                tiers.resident_bytes(),
+                tiers.budget_bytes()
+            );
+            assert_eq!(tiers.tier(adapter), Some(Tier::Hot));
+
+            // The incremental trajectory, with a forced demote→promote
+            // round trip after step 3. The KV cache is untouched by tier
+            // transitions, so the continuation must not move.
+            let slot = cache.try_claim(prompt.len() + n_new).unwrap().unwrap();
+            let mut tokens = prompt.clone();
+            let mut logits_all = Vec::new();
+            let l0 = srv.prefill(&mut cache, slot, Some(*adapter), prompt).unwrap();
+            let mut next = argmax(&l0);
+            tokens.push(next);
+            logits_all.push(l0);
+            for step in 1..n_new {
+                if step == 3 {
+                    tiers.demote(&mut eng, &mut srv, adapter).unwrap();
+                    assert_eq!(
+                        tiers.tier(adapter),
+                        Some(Tier::Cold),
+                        "Exact demote spills to disk"
+                    );
+                    assert!(!srv.serves_adapter(adapter));
+                    let failed = tiers.ensure_resident(&mut eng, &mut srv, &want);
+                    assert!(failed.is_empty(), "re-promotion failed: {failed:?}");
+                    assert!(tiers.resident_bytes() <= tiers.budget_bytes());
+                }
+                let req =
+                    DecodeRequest { slot, token: next, adapter: Some(adapter.to_string()) };
+                let lm = srv.decode_step(&mut cache, &[req]).unwrap();
+                let row = lm.row(0).to_vec();
+                next = argmax(&row);
+                tokens.push(next);
+                logits_all.push(row);
+            }
+            cache.release(slot);
+            tiered.push((tokens, logits_all));
+        }
+        assert!(
+            tiers.counters().demotions >= fixtures.len(),
+            "churn never happened: {:?}",
+            tiers.counters()
+        );
+        for (((bt, bl), (tt, tl)), (adapter, _)) in baseline.iter().zip(&tiered).zip(&fixtures) {
+            assert_eq!(bt, tt, "{adapter}: tokens diverged across eviction history");
+            assert_eq!(bl, tl, "{adapter}: logits diverged across eviction history");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+        tiered
+    };
+    // The contract must hold — and agree bitwise — at 1 and 8 threads.
+    let t1 = with_parallelism(1, run);
+    let t8 = with_parallelism(8, run);
+    assert_eq!(t1, t8, "tiered trajectories differ across thread counts");
+}
+
+#[test]
+fn tiering_warm_nf4_promote_is_the_quantizer_round_trip_and_stable() {
+    // The Compressed policy trades the bitwise guarantee for ~7× smaller
+    // warm copies. Its contract: every promoted tensor is EXACTLY the
+    // per-layer NF4 round trip of the original (deterministic
+    // dequantization — nothing else may leak in), each layer obeys the
+    // pinned relative-Frobenius bound, and a second demote→promote cycle
+    // leaves the SERVED logits bitwise stable (NF4 is a fixed point, all
+    // the way through the serving path).
+    let seed = 1310;
+    let (mut eng, _, _) = build_model_engine(4, seed);
+    let cfg = ServeConfig::full_model().strategy(ServeStrategy::Fused).max_seq(32);
+    let mut srv = ModelServer::new(&eng, cfg).unwrap();
+    let mut cache = srv.new_cache().unwrap();
+    let dir = tiering_tmp("warm");
+    let mut tiers = TierManager::new(usize::MAX, &dir);
+    tiers.register_hot("pissa-t", &eng, &srv).unwrap();
+    tiers.set_policy("pissa-t", DemotePolicy::Compressed).unwrap();
+
+    let orig = eng.get("pissa-t").unwrap().clone();
+    let want = vec!["pissa-t".to_string()];
+    tiers.demote(&mut eng, &mut srv, "pissa-t").unwrap();
+    assert_eq!(tiers.tier("pissa-t"), Some(Tier::Warm));
+    assert!(!srv.serves_adapter("pissa-t"));
+    let failed = tiers.ensure_resident(&mut eng, &mut srv, &want);
+    assert!(failed.is_empty(), "warm promotion failed: {failed:?}");
+    assert_eq!(tiers.tier("pissa-t"), Some(Tier::Hot));
+
+    let back = eng.get("pissa-t").unwrap().clone();
+    for (store_orig, store_back, prefix) in [
+        (&orig.frozen, &back.frozen, "frozen"),
+        (&orig.factors, &back.factors, "factors"),
+        (&orig.init_factors, &back.init_factors, "init"),
+    ] {
+        for (k, t) in store_orig.iter() {
+            let rt = &store_back[k];
+            assert_eq!(t.shape, rt.shape, "{prefix}.{k}: shape changed through warm tier");
+            for li in 0..t.shape[0] {
+                let o = t.layer(li);
+                let r = rt.layer(li);
+                assert_eq!(
+                    nf4_roundtrip(&o).data,
+                    r.data,
+                    "{prefix}.{k}[{li}]: warm promote is not the NF4 round trip"
+                );
+                let rel = o.sub(&r).fro() / o.fro().max(1e-30);
+                assert!(
+                    rel <= WARM_NF4_REL_TOL,
+                    "{prefix}.{k}[{li}]: rel err {rel:.3e} over the pinned bound"
+                );
+            }
+        }
+    }
+
+    // Served logits after a SECOND round trip: bitwise stable.
+    let prompt = vec![3usize, 17, 41, 8];
+    let (t1, l1) = incremental_trajectory(&mut srv, &mut cache, Some("pissa-t"), &prompt, 6);
+    tiers.demote(&mut eng, &mut srv, "pissa-t").unwrap();
+    let failed = tiers.ensure_resident(&mut eng, &mut srv, &want);
+    assert!(failed.is_empty(), "second warm promotion failed: {failed:?}");
+    let (t2, l2) = incremental_trajectory(&mut srv, &mut cache, Some("pissa-t"), &prompt, 6);
+    assert_eq!(t1, t2, "second warm round trip moved the sampled tokens");
+    assert_eq!(l1, l2, "second warm round trip moved the served logits");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn tiering_cold_tenant_attaches_on_miss_through_the_scheduler() {
+    // The serving-path half of attach-on-miss: a tenant registered ONLY
+    // as an on-disk checkpoint is routable immediately, becomes resident
+    // on its first request via the step-boundary hook (exactly one cold
+    // attach), and generates the saved adapter's exact trajectory —
+    // through the real continuous-batching scheduler, against a server
+    // built before the tenant existed.
+    let seed = 1320;
+    let cfg = ServeConfig::full_model().strategy(ServeStrategy::Fused).max_seq(32);
+    let prompt = vec![3usize, 17, 41, 8];
+    let max_new = 6;
+
+    // All-hot reference: "pissa-t" served directly.
+    let (hot_eng, _, _) = build_model_engine(4, seed);
+    let mut hot_srv = ModelServer::new(&hot_eng, cfg.clone()).unwrap();
+    let mut hot_cache = hot_srv.new_cache().unwrap();
+    let (want_tokens, _) =
+        incremental_trajectory(&mut hot_srv, &mut hot_cache, Some("pissa-t"), &prompt, max_new);
+
+    // Tiered twin: the same adapter saved to disk and registered under a
+    // NEW tenant name the ModelServer has never seen.
+    let (mut eng, names, _) = build_model_engine(4, seed);
+    let dir = tiering_tmp("cold");
+    let path = dir.join("templates").join("pissa-t.ckpt");
+    eng.save("pissa-t", &path).unwrap();
+    let mut srv = ModelServer::new(&eng, cfg).unwrap();
+    let mut cache = srv.new_cache().unwrap();
+    let mut tiers = TierManager::new(usize::MAX, &dir.join("spill"));
+    for n in &names {
+        tiers.register_hot(n, &eng, &srv).unwrap();
+    }
+    tiers.register_cold("tenant-on-disk", &path).unwrap();
+    assert_eq!(tiers.tier("tenant-on-disk"), Some(Tier::Cold));
+    assert!(!srv.serves_adapter("tenant-on-disk"));
+
+    let mut sched = DecodeScheduler::new();
+    sched.submit(SeqRequest::new("tenant-on-disk", prompt, max_new));
+    let mut finished = Vec::new();
+    while !sched.idle() {
+        // The step-boundary hook the HTTP engine thread runs: promote
+        // everything the pending/running set needs BEFORE the step.
+        let wanted = sched.active_adapters();
+        let failed = tiers.ensure_resident(&mut eng, &mut srv, &wanted);
+        assert!(failed.is_empty(), "attach-on-miss failed: {failed:?}");
+        finished.extend(sched.step(&mut srv, &mut cache).unwrap());
+    }
+    assert_eq!(tiers.tier("tenant-on-disk"), Some(Tier::Hot), "attached on miss");
+    assert_eq!(tiers.counters().cold_attaches, 1, "exactly one cold attach");
+    assert_eq!(finished.len(), 1);
+    assert_eq!(
+        finished[0].tokens, want_tokens,
+        "cold-attached tenant must serve the saved adapter's exact trajectory"
+    );
+    std::fs::remove_dir_all(&dir).ok();
 }
